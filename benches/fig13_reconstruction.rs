@@ -1,0 +1,118 @@
+//! Figures 13 + 14 — kernel reconstruction quality: SLAY's feature
+//! estimate vs the quadrature-only target vs the exact kernel (Fig. 13),
+//! and error vs feature budget for SLAY / FAVOR+-style PRF-only /
+//! Laplace-only (Fig. 14).
+
+use slay::kernels::config::{Fusion, PolyMethod, SlayConfig};
+use slay::kernels::slay::{slay_target_kernel, SlayFeatures};
+use slay::math::linalg::Mat;
+use slay::math::quadrature::e_sph_exact;
+use slay::math::rng::Rng;
+use slay::util::benchkit::{write_csv, Table};
+
+/// Pairs of unit vectors with a prescribed alignment x (2D construction).
+fn pair_with_alignment(x: f64, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut q = vec![0.0f32; d];
+    let mut k = vec![0.0f32; d];
+    q[0] = 1.0;
+    k[0] = x as f32;
+    k[1] = (1.0 - x * x).max(0.0).sqrt() as f32;
+    (q, k)
+}
+
+fn main() {
+    let d = 16usize;
+    let eps = 1e-3;
+
+    // Fig. 13: kernel value vs x — exact, quadrature-only (R=3), SLAY est.
+    let cfg = SlayConfig { poly: PolyMethod::Exact, d_prf: 64, r_nodes: 3, ..Default::default() };
+    let mut rows = Vec::new();
+    let n_seeds = 8;
+    for i in 0..=40 {
+        let x = -1.0 + 2.0 * i as f64 / 40.0;
+        let (q, k) = pair_with_alignment(x, d);
+        let exact = e_sph_exact(x, eps);
+        let quad = slay_target_kernel(x, &cfg);
+        let mut est = 0.0;
+        for seed in 0..n_seeds {
+            let f = SlayFeatures::new(SlayConfig { seed, ..cfg.clone() }, d).unwrap();
+            est += f.kernel_estimate(&q, &k) as f64 / n_seeds as f64;
+        }
+        rows.push(vec![
+            format!("{x:.3}"),
+            format!("{exact:.5}"),
+            format!("{quad:.5}"),
+            format!("{est:.5}"),
+        ]);
+    }
+    write_csv(
+        "fig13_reconstruction.csv",
+        &["x", "exact", "quadrature_only", "slay_estimate"],
+        &rows,
+    )
+    .unwrap();
+
+    // Fig. 14: kernel-level MSE vs feature budget D
+    let budgets = [4usize, 8, 16, 32, 64, 128];
+    let mut rows14 = Vec::new();
+    let mut t = Table::new(
+        "Fig 14 — kernel estimation error vs feature budget",
+        &["D", "SLAY(exact-poly)", "SLAY(anchor)", "Laplace-only"],
+    );
+    let mut rng = Rng::new(14);
+    // evaluation pairs with spread alignments
+    let pairs: Vec<(Vec<f32>, Vec<f32>, f64)> = (0..60)
+        .map(|_| {
+            let q = Mat::randn(1, d, &mut rng).normalized_rows();
+            let k = Mat::randn(1, d, &mut rng).normalized_rows();
+            let x = slay::math::linalg::dot(q.row(0), k.row(0)) as f64;
+            (q.data, k.data, x)
+        })
+        .collect();
+
+    for &budget in &budgets {
+        let mut errs = [0.0f64; 3];
+        let configs = [
+            SlayConfig { poly: PolyMethod::Exact, d_prf: budget, r_nodes: 3, ..Default::default() },
+            SlayConfig { poly: PolyMethod::Anchor, n_poly: 16, d_prf: budget, r_nodes: 3, ..Default::default() },
+            SlayConfig {
+                fusion: Fusion::LaplaceOnly,
+                d_prf: budget * 4,
+                r_nodes: 6,
+                ..Default::default()
+            },
+        ];
+        for (ci, cfg) in configs.iter().enumerate() {
+            let mut mse = 0.0;
+            let n_seeds = 4;
+            for seed in 0..n_seeds {
+                let f = SlayFeatures::new(SlayConfig { seed, ..cfg.clone() }, d).unwrap();
+                for (q, k, x) in &pairs {
+                    let want = e_sph_exact(*x, eps);
+                    let got = f.kernel_estimate(q, k) as f64;
+                    mse += (got - want) * (got - want);
+                }
+            }
+            errs[ci] = mse / (n_seeds as f64 * pairs.len() as f64);
+        }
+        rows14.push(vec![
+            budget.to_string(),
+            format!("{:.4e}", errs[0]),
+            format!("{:.4e}", errs[1]),
+            format!("{:.4e}", errs[2]),
+        ]);
+        t.row(vec![
+            budget.to_string(),
+            format!("{:.2e}", errs[0]),
+            format!("{:.2e}", errs[1]),
+            format!("{:.2e}", errs[2]),
+        ]);
+    }
+    write_csv(
+        "fig14_error_vs_budget.csv",
+        &["D", "slay_exact_poly_mse", "slay_anchor_mse", "laplace_only_mse"],
+        &rows14,
+    )
+    .unwrap();
+    t.print();
+}

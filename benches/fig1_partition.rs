@@ -1,0 +1,123 @@
+//! Figure 1 — how each kernel partitions 2D feature space among 5 randomly
+//! placed "neurons" (anchors). For every grid point the winning neuron is
+//! the one with the highest kernel response; the CSV encodes the six
+//! panels: linear-softmax, FAVOR+, ELU+1, exact E-kernel, spherical
+//! E-kernel, SLAY (anchor).
+
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::kernels::slay::{QKFeatures, SlayFeatures};
+use slay::kernels::yat;
+use slay::math::linalg::{dot, Mat};
+use slay::math::rng::Rng;
+use slay::util::benchkit::write_csv;
+
+fn main() {
+    let mut rng = Rng::new(2024);
+    let n_neurons = 5;
+    let neurons = Mat::randn(n_neurons, 2, &mut rng); // stars of Fig. 1
+    let grid = 61;
+    let eps = 1e-3f32;
+
+    // SLAY features at d=2 (generous budget so the panel is stable)
+    let slay_cfg = SlayConfig { n_poly: 16, d_prf: 32, r_nodes: 3, ..Default::default() };
+    let slay = SlayFeatures::new(slay_cfg, 2).unwrap();
+    let phi_neurons = slay.map_k(&neurons, 0);
+
+    // FAVOR+ and ELU+1 operate via feature dot products too
+    let favor = slay::kernels::features::prf::FavorRelu::new(64, 2, 7);
+    use slay::kernels::features::FeatureMap;
+    let favor_neurons = favor.map(&neurons, 0);
+
+    let elu = slay::kernels::features::prf::EluPlusOne::new(2);
+    let elu_neurons = elu.map(&neurons, 0);
+
+    let mech_names = [
+        "softmax_linear",
+        "favor",
+        "elu_linear",
+        "yat_exact",
+        "yat_spherical",
+        "slay_anchor",
+    ];
+    let mut rows = Vec::new();
+    let mut agree_sph_slay = 0usize;
+    let mut total = 0usize;
+    for iy in 0..grid {
+        for ix in 0..grid {
+            let x = -2.0 + 4.0 * ix as f32 / (grid - 1) as f32;
+            let y = -2.0 + 4.0 * iy as f32 / (grid - 1) as f32;
+            let p = Mat::from_vec(1, 2, vec![x, y]);
+            let mut winners = Vec::with_capacity(6);
+            // panel a: plain dot product (softmax logits are monotone in it)
+            winners.push(argmax((0..n_neurons).map(|i| dot(p.row(0), neurons.row(i)))));
+            // panel b: FAVOR+ feature space
+            let fp = favor.map(&p, 0);
+            winners.push(argmax(
+                (0..n_neurons).map(|i| dot(fp.row(0), favor_neurons.row(i))),
+            ));
+            // panel c: ELU+1 feature space
+            let ep = elu.map(&p, 0);
+            winners.push(argmax(
+                (0..n_neurons).map(|i| dot(ep.row(0), elu_neurons.row(i))),
+            ));
+            // panel d: exact E-kernel on raw vectors
+            winners.push(argmax(
+                (0..n_neurons).map(|i| yat::e_product(p.row(0), neurons.row(i), eps)),
+            ));
+            // panel e: spherical E-kernel
+            let pn = p.normalized_rows();
+            let nn = neurons.normalized_rows();
+            winners.push(argmax((0..n_neurons).map(|i| {
+                yat::e_sph(dot(pn.row(0), nn.row(i)).clamp(-1.0, 1.0), eps)
+            })));
+            // panel f: SLAY (anchor) features
+            let sp = slay.map_q(&p, 0);
+            winners.push(argmax(
+                (0..n_neurons).map(|i| dot(sp.row(0), phi_neurons.row(i))),
+            ));
+            if winners[4] == winners[5] {
+                agree_sph_slay += 1;
+            }
+            total += 1;
+            let mut row = vec![format!("{x:.3}"), format!("{y:.3}")];
+            row.extend(winners.iter().map(|w| w.to_string()));
+            rows.push(row);
+        }
+    }
+    let mut header = vec!["x", "y"];
+    header.extend(mech_names);
+    write_csv("fig1_partition.csv", &header, &rows).unwrap();
+
+    // neurons for plotting
+    let neuron_rows: Vec<Vec<String>> = (0..n_neurons)
+        .map(|i| {
+            vec![
+                i.to_string(),
+                format!("{:.4}", neurons.get(i, 0)),
+                format!("{:.4}", neurons.get(i, 1)),
+            ]
+        })
+        .collect();
+    write_csv("fig1_neurons.csv", &["neuron", "x", "y"], &neuron_rows).unwrap();
+
+    println!(
+        "Fig 1: SLAY(anchor) reproduces the spherical E-kernel partition on {:.1}% of the grid",
+        100.0 * agree_sph_slay as f64 / total as f64
+    );
+    assert!(
+        agree_sph_slay as f64 / total as f64 > 0.6,
+        "SLAY partition diverged from the spherical kernel"
+    );
+}
+
+fn argmax(it: impl Iterator<Item = f32>) -> usize {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, v) in it.enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}

@@ -1,0 +1,99 @@
+//! Figures 2 + 21 — scaling behavior: latency, peak-workspace memory and
+//! throughput vs sequence length for Standard, YAT, ELU+1 linear,
+//! cosformer, FAVOR+, and SLAY (paper setup: d_model 256, 8 heads,
+//! batch 1, causal). Quadratic mechanisms stop at the OOM/time envelope;
+//! linear mechanisms sweep to 131K tokens.
+//!
+//! Set SLAY_BENCH_FULL=1 to push linear mechanisms all the way to 131072
+//! (default caps at 32K to keep `cargo bench` turnarounds short).
+
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::kernels::engine::workspace_bytes;
+use slay::kernels::{multi_head_forward, Attention};
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::util::benchkit::{fmt_mib, fmt_ms, time_budget, Table};
+use std::time::Duration;
+
+fn main() {
+    let full = std::env::var("SLAY_BENCH_FULL").is_ok();
+    let d_model = 256usize;
+    let heads = 8usize;
+    let dh = d_model / heads;
+    let lens_linear: Vec<usize> = if full {
+        vec![128, 512, 2048, 8192, 32768, 131072]
+    } else {
+        vec![128, 512, 2048, 8192, 32768]
+    };
+    // quadratic envelope: beyond 8K the L×L matrix alone is ≥ 256 MiB/head —
+    // the paper's A100 OOMs at 16K; we cap compute there as the same wall.
+    let lens_quadratic: Vec<usize> = vec![128, 512, 2048, 4096, 8192];
+
+    let mechanisms: Vec<(&str, Mechanism, bool)> = vec![
+        ("Standard", Mechanism::Standard, true),
+        ("YAT", Mechanism::Yat { eps: 1e-3 }, true),
+        ("Linear (ELU+1)", Mechanism::EluLinear, false),
+        ("Cosformer", Mechanism::Cosformer, false),
+        ("FAVOR+", Mechanism::Favor { m_features: 64, seed: 3 }, false),
+        ("SLAY", Mechanism::Slay(SlayConfig::default()), false),
+    ];
+
+    let mut table = Table::new(
+        "Fig 2/21 — scaling (d_model=256, 8 heads, batch 1, causal)",
+        &["Method", "L", "Latency(ms)", "Mem(MiB)", "Tok/s"],
+    );
+    let mut rng = Rng::new(31);
+
+    for (name, mech, quadratic) in &mechanisms {
+        let lens = if *quadratic { &lens_quadratic } else { &lens_linear };
+        let op = Attention::build(mech, dh, *lens.last().unwrap()).unwrap();
+        for &l in lens {
+            let q = Mat::randn(l, d_model, &mut rng);
+            let k = Mat::randn(l, d_model, &mut rng);
+            let v = Mat::randn(l, d_model, &mut rng);
+            let budget = Duration::from_millis(if l >= 8192 { 600 } else { 250 });
+            let t = time_budget(name, budget, || {
+                std::hint::black_box(multi_head_forward(&op, &q, &k, &v, heads, true));
+            });
+            let mem = heads * workspace_bytes(op.feature_dim(), l, dh, dh);
+            table.row(vec![
+                name.to_string(),
+                l.to_string(),
+                fmt_ms(t.mean_ms),
+                fmt_mib(mem),
+                format!("{:.0}", l as f64 / (t.mean_ms / 1e3)),
+            ]);
+        }
+        // quadratic mechanisms: extend the memory model to the OOM wall
+        if *quadratic {
+            for &l in &[16384usize, 32768, 131072] {
+                let mem = heads * workspace_bytes(None, l, dh, dh);
+                table.row(vec![
+                    name.to_string(),
+                    l.to_string(),
+                    "OOM/wall".into(),
+                    fmt_mib(mem),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    table.print();
+    table.to_csv("fig2_scaling.csv").unwrap();
+
+    // headline shape checks
+    println!("\nshape checks:");
+    let slay_op = Attention::build(&Mechanism::Slay(SlayConfig::default()), dh, 131072).unwrap();
+    let m = slay_op.feature_dim().unwrap();
+    let slay_mem_131k = heads * workspace_bytes(Some(m), 131_072, dh, dh);
+    let std_mem_16k = heads * workspace_bytes(None, 16_384, dh, dh);
+    println!(
+        "  SLAY @131K tokens uses {} MiB; Standard @16K needs {} MiB (OOM point)",
+        fmt_mib(slay_mem_131k),
+        fmt_mib(std_mem_16k)
+    );
+    assert!(
+        slay_mem_131k < std_mem_16k,
+        "SLAY at 131K should undercut quadratic at its 16K OOM point"
+    );
+}

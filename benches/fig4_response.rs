@@ -1,0 +1,81 @@
+//! Figures 4, 5, 6 — kernel response vs alignment, response vs angle, and
+//! gradient magnitudes. Regenerates the three curves (spherical E-kernel
+//! vs softmax-exp) as CSVs under `results/` and prints summary rows.
+
+use slay::kernels::yat;
+use slay::util::benchkit::{write_csv, Table};
+
+fn main() {
+    let eps = 1e-3f32;
+    let d = 32.0f32;
+
+    // Fig. 4: response vs alignment x ∈ [-1, 1]
+    let mut rows4 = Vec::new();
+    for i in 0..=200 {
+        let x = -1.0 + 2.0 * i as f32 / 200.0;
+        rows4.push(vec![
+            format!("{x:.4}"),
+            format!("{:.6}", yat::e_sph(x, eps)),
+            format!("{:.6}", (x / d.sqrt()).exp()),
+        ]);
+    }
+    write_csv("fig4_response_vs_alignment.csv", &["x", "e_sph", "softmax_exp"], &rows4).unwrap();
+
+    // Fig. 5: response vs angle θ ∈ [0, π]
+    let mut rows5 = Vec::new();
+    for i in 0..=180 {
+        let theta = std::f32::consts::PI * i as f32 / 180.0;
+        let x = theta.cos();
+        rows5.push(vec![
+            format!("{:.1}", i as f32),
+            format!("{:.6}", yat::e_sph(x, eps)),
+            format!("{:.6}", (x / d.sqrt()).exp()),
+        ]);
+    }
+    write_csv("fig5_response_vs_angle.csv", &["angle_deg", "e_sph", "softmax_exp"], &rows5)
+        .unwrap();
+
+    // Fig. 6: gradient magnitudes |f'(x)|
+    let mut rows6 = Vec::new();
+    for i in 0..=200 {
+        let x = -1.0 + 2.0 * i as f32 / 200.0;
+        rows6.push(vec![
+            format!("{x:.4}"),
+            format!("{:.6}", yat::e_sph_deriv(x, eps).abs()),
+            format!("{:.6}", ((x / d.sqrt()).exp() / d.sqrt()).abs()),
+        ]);
+    }
+    write_csv("fig6_gradient_magnitude.csv", &["x", "e_sph_grad", "softmax_grad"], &rows6)
+        .unwrap();
+
+    // paper-shaped summary: boundedness + selectivity
+    let mut t = Table::new(
+        "Fig 4-6 summary — spherical E-kernel vs softmax (eps=1e-3)",
+        &["quantity", "e_sph", "softmax_exp"],
+    );
+    t.row(vec![
+        "response at x=1 (bound 1/eps)".into(),
+        format!("{:.1}", yat::e_sph(1.0, eps)),
+        format!("{:.3}", (1.0 / d.sqrt()).exp()),
+    ]);
+    t.row(vec![
+        "response at x=0".into(),
+        format!("{:.5}", yat::e_sph(0.0, eps)),
+        format!("{:.3}", 1.0),
+    ]);
+    t.row(vec![
+        "selectivity: resp(90deg)/resp(0deg)".into(),
+        format!("{:.2e}", yat::e_sph(0.0, eps) / yat::e_sph(1.0, eps)),
+        format!("{:.3}", 1.0 / (1.0 / d.sqrt()).exp()),
+    ]);
+    let max_grad = (0..=200)
+        .map(|i| yat::e_sph_deriv(-1.0 + 2.0 * i as f32 / 200.0, eps).abs())
+        .fold(0.0f32, f32::max);
+    t.row(vec![
+        "max |gradient| (bounded, Prop. 4)".into(),
+        format!("{max_grad:.1}"),
+        "unbounded in qk".into(),
+    ]);
+    t.print();
+    t.to_csv("fig4_summary.csv").unwrap();
+}

@@ -1,0 +1,106 @@
+//! Tables 3 + 8 (+ Table 7) — the synthetic task suite: train the task
+//! model with each attention mechanism and report per-task accuracy and
+//! category averages.
+//!
+//! Default (quick) mode trains a representative subset so `cargo bench`
+//! stays tractable on CPU; set `SLAY_BENCH_FULL=1` for all 22 tasks ×
+//! 5 mechanisms × 3 seeds (the full Table 8 protocol — hours of CPU).
+//! The exhaustive run also lives in `examples/synthetic_tasks.rs`.
+//!
+//! Requires `make artifacts`.
+
+use slay::cli_app::train_eval_task;
+use slay::data::tasks::{Task, ALL_TASKS};
+use slay::runtime::Registry;
+use slay::util::benchkit::Table;
+use std::collections::BTreeMap;
+
+fn main() {
+    let Ok(reg) = Registry::open_default() else {
+        eprintln!("[skip] artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let full = std::env::var("SLAY_BENCH_FULL").is_ok();
+    let mechanisms = ["standard", "yat_spherical", "favor", "elu_linear", "slay"];
+    let (tasks, seeds, steps): (Vec<Task>, u64, usize) = if full {
+        (ALL_TASKS.to_vec(), 3, 800)
+    } else {
+        (
+            vec![Task::Copy, Task::DistantMatch, Task::Majority, Task::FirstToken],
+            1,
+            150,
+        )
+    };
+
+    let mut table8 = Table::new(
+        if full {
+            "Table 8 — per-task accuracy (mean over seeds)"
+        } else {
+            "Table 8 (quick subset) — per-task accuracy"
+        },
+        &["Task", "Category", "standard", "yat_spherical", "favor", "elu_linear", "slay"],
+    );
+    // accumulate per category: cat -> mech -> Vec<acc>
+    let mut by_cat: BTreeMap<&str, BTreeMap<&str, Vec<f64>>> = BTreeMap::new();
+
+    for task in &tasks {
+        let mut row = vec![task.name().to_string(), task.category().name().to_string()];
+        for mech in &mechanisms {
+            let mut accs = Vec::new();
+            for seed in 0..seeds {
+                match train_eval_task(&reg, *task, mech, steps, seed) {
+                    Ok((_, acc)) => accs.push(acc),
+                    Err(e) => {
+                        eprintln!("{}/{mech} failed: {e}", task.name());
+                        accs.push(f64::NAN);
+                    }
+                }
+            }
+            let mean = slay::math::stats::mean(&accs);
+            let sd = slay::math::stats::std_dev(&accs);
+            row.push(if seeds > 1 {
+                format!("{mean:.2}±{sd:.2}")
+            } else {
+                format!("{mean:.2}")
+            });
+            by_cat
+                .entry(task.category().name())
+                .or_default()
+                .entry(mech)
+                .or_default()
+                .push(mean);
+        }
+        table8.row(row);
+        eprintln!("[table3] finished task {}", task.name());
+    }
+    table8.print();
+    table8.to_csv("table8_per_task.csv").unwrap();
+
+    // Table 3: category averages
+    let mut table3 = Table::new(
+        "Table 3 — average accuracy by task category",
+        &["Category", "standard", "yat_spherical", "favor", "elu_linear", "slay"],
+    );
+    for (cat, mechs) in &by_cat {
+        let mut row = vec![cat.to_string()];
+        for mech in &mechanisms {
+            let accs = &mechs[mech];
+            row.push(format!("{:.2}", slay::math::stats::mean(accs)));
+        }
+        table3.row(row);
+    }
+    table3.print();
+    table3.to_csv("table3_categories.csv").unwrap();
+
+    // Table 7: the category → task map (documentation)
+    let mut table7 = Table::new("Table 7 — benchmark task categories", &["Category", "Tasks"]);
+    let mut cat_tasks: BTreeMap<&str, Vec<&str>> = BTreeMap::new();
+    for t in ALL_TASKS {
+        cat_tasks.entry(t.category().name()).or_default().push(t.name());
+    }
+    for (cat, names) in cat_tasks {
+        table7.row(vec![cat.to_string(), names.join(", ")]);
+    }
+    table7.print();
+    table7.to_csv("table7_categories.csv").unwrap();
+}

@@ -1,0 +1,119 @@
+//! Table 4 — extreme classification on the Eurlex-4K simulator: train the
+//! encoder + multi-label head with SLAY and with Performer (FAVOR+) under
+//! identical budgets; report P@{1,3,5} and PSP@{1,3,5}.
+//!
+//! Quick mode: 150 train steps, 256 test docs. `SLAY_BENCH_FULL=1`:
+//! 600 steps, 1024 test docs. Requires `make artifacts` (cls_* artifacts).
+
+use slay::data::eurlex::{Eurlex, EurlexConfig};
+use slay::eval::xmc::{precision_at_k, psp_at_k, PropensityModel};
+use slay::math::rng::Rng;
+use slay::runtime::executor::TensorData;
+use slay::runtime::Registry;
+use slay::train::Trainer;
+use slay::util::benchkit::Table;
+
+fn main() {
+    let Ok(reg) = Registry::open_default() else {
+        eprintln!("[skip] artifacts missing — run `make artifacts` first");
+        return;
+    };
+    if reg.manifest.get("cls_train_step_slay").is_err() {
+        eprintln!("[skip] classifier artifacts missing (quick aot build?)");
+        return;
+    }
+    let full = std::env::var("SLAY_BENCH_FULL").is_ok();
+    let steps = if full { 600 } else { 100 };
+    let n_test = if full { 1024 } else { 128 };
+
+    let gen = Eurlex::new(EurlexConfig::default(), 4);
+    let n_labels = gen.cfg.n_labels;
+    // shared synthetic train stream + fixed test split
+    let mut test_rng = Rng::new(1234);
+    let test = gen.split(n_test, &mut test_rng);
+    // propensities from a large simulated train sample
+    let mut prop_rng = Rng::new(555);
+    let prop_docs = gen.split(4000, &mut prop_rng);
+    let props = PropensityModel::default().propensities(&gen.label_counts(&prop_docs), 4000);
+
+    let mut table = Table::new(
+        "Table 4 — Eurlex-4K (simulated) extreme classification",
+        &["Metric", "SLAY (Approx)", "Performer"],
+    );
+    let mut results: Vec<[f64; 6]> = Vec::new();
+
+    for mech in ["slay", "favor"] {
+        let mut tr = Trainer::new(
+            &reg,
+            &format!("cls_train_step_{mech}"),
+            &format!("cls_init_{mech}"),
+            0,
+        )
+        .unwrap();
+        let batch = tr.shapes.batch;
+        let seq = tr.shapes.seq_len;
+        let mut rng = Rng::new(7);
+        let t0 = std::time::Instant::now();
+        for _ in 0..steps {
+            let docs = gen.split(batch, &mut rng);
+            let mut tokens = Vec::with_capacity(batch * seq);
+            let mut targets = Vec::with_capacity(batch * n_labels);
+            for d in &docs {
+                tokens.extend_from_slice(&d.tokens);
+                targets.extend_from_slice(&gen.multi_hot(d));
+            }
+            tr.step_multilabel(&tokens, &targets).unwrap();
+        }
+        eprintln!(
+            "[table4] {mech}: trained {steps} steps in {:.1}s (loss {:.4})",
+            t0.elapsed().as_secs_f64(),
+            tr.recent_loss(10)
+        );
+
+        // score the test split via the cls_fwd artifact (batched)
+        let fwd = reg.get(&format!("cls_fwd_{mech}")).unwrap();
+        let mut scores: Vec<Vec<f32>> = Vec::with_capacity(test.len());
+        for chunk in test.chunks(batch) {
+            let mut tokens = Vec::with_capacity(batch * seq);
+            for d in chunk {
+                tokens.extend_from_slice(&d.tokens);
+            }
+            // pad the final partial batch
+            while tokens.len() < batch * seq {
+                tokens.push(0);
+            }
+            let out = tr
+                .run_with_params(&fwd, &[TensorData::I32(tokens)])
+                .unwrap();
+            let flat = out[0].as_f32().unwrap();
+            for (i, _) in chunk.iter().enumerate() {
+                scores.push(flat[i * n_labels..(i + 1) * n_labels].to_vec());
+            }
+        }
+        let truths: Vec<Vec<usize>> = test.iter().map(|d| d.labels.clone()).collect();
+        results.push([
+            precision_at_k(&scores, &truths, 1),
+            precision_at_k(&scores, &truths, 3),
+            precision_at_k(&scores, &truths, 5),
+            psp_at_k(&scores, &truths, &props, 1),
+            psp_at_k(&scores, &truths, &props, 3),
+            psp_at_k(&scores, &truths, &props, 5),
+        ]);
+    }
+
+    for (i, name) in ["P@1", "P@3", "P@5", "PSP@1", "PSP@3", "PSP@5"]
+        .iter()
+        .enumerate()
+    {
+        table.row(vec![
+            name.to_string(),
+            format!("{:.4}", results[0][i]),
+            format!("{:.4}", results[1][i]),
+        ]);
+    }
+    table.print();
+    table.to_csv("table4_eurlex.csv").unwrap();
+
+    let slay_wins = (0..6).filter(|&i| results[0][i] >= results[1][i]).count();
+    println!("\nshape check: SLAY >= Performer on {slay_wins}/6 metrics (paper: 6/6)");
+}

@@ -1,0 +1,111 @@
+//! Table 5 + Figure 3 — language-model training comparison: identical
+//! architecture/optimizer/data, only the attention mechanism varies;
+//! report final validation loss + perplexity and the full training curves.
+//!
+//! Default (quick) mode: 4 mechanisms × 120 steps on the `tiny` preset.
+//! `SLAY_BENCH_FULL=1`: all 7 mechanisms × 600 steps (the shape of the
+//! paper's Chinchilla-budget protocol at CPU scale — see DESIGN.md
+//! §Substitutions). Requires `make artifacts`.
+
+use slay::data::corpus::{Corpus, CorpusConfig};
+use slay::math::rng::Rng;
+use slay::runtime::executor::TensorData;
+use slay::runtime::Registry;
+use slay::train::Trainer;
+use slay::util::benchkit::{write_csv, Table};
+
+fn main() {
+    let Ok(reg) = Registry::open_default() else {
+        eprintln!("[skip] artifacts missing — run `make artifacts` first");
+        return;
+    };
+    let full = std::env::var("SLAY_BENCH_FULL").is_ok();
+    let mechanisms: Vec<&str> = if full {
+        vec!["yat", "standard", "yat_spherical", "slay", "elu_linear", "cosformer", "favor"]
+    } else {
+        vec!["standard", "slay", "elu_linear", "favor"]
+    };
+    let steps = if full { 600 } else { 120 };
+    let eval_every = 20;
+    let preset = "tiny";
+
+    let mut table = Table::new(
+        "Table 5 — validation loss/PPL at equal token budget (tiny preset)",
+        &["Method", "Complexity", "Val Loss", "PPL"],
+    );
+    let mut curves: Vec<Vec<String>> = Vec::new();
+
+    for mech in &mechanisms {
+        let mut tr = match Trainer::new(
+            &reg,
+            &format!("train_step_{preset}_{mech}"),
+            &format!("init_{preset}"),
+            0,
+        ) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("[skip] {mech}: {e}");
+                continue;
+            }
+        };
+        let corpus = Corpus::new(
+            CorpusConfig { vocab: tr.shapes.vocab, ..Default::default() },
+            42,
+        );
+        // fixed validation batches (shared across mechanisms)
+        let mut vrng = Rng::new(999);
+        let val: Vec<(Vec<i32>, Vec<i32>)> = (0..4)
+            .map(|_| corpus.lm_batch(tr.shapes.batch, tr.shapes.seq_len, &mut vrng))
+            .collect();
+        let loss_exe = reg.get(&format!("loss_{preset}_{mech}")).unwrap();
+        let eval_loss = |tr: &Trainer| -> f32 {
+            let mut acc = 0.0;
+            for (t, y) in &val {
+                let out = tr
+                    .run_with_params(
+                        &loss_exe,
+                        &[TensorData::I32(t.clone()), TensorData::I32(y.clone())],
+                    )
+                    .unwrap();
+                acc += out[0].scalar_f32().unwrap();
+            }
+            acc / val.len() as f32
+        };
+
+        let mut rng = Rng::new(7);
+        let t0 = std::time::Instant::now();
+        for step in 1..=steps {
+            let (tokens, targets) =
+                corpus.lm_batch(tr.shapes.batch, tr.shapes.seq_len, &mut rng);
+            tr.step(&tokens, &targets).unwrap();
+            if step % eval_every == 0 || step == steps {
+                let vl = eval_loss(&tr);
+                curves.push(vec![
+                    mech.to_string(),
+                    step.to_string(),
+                    format!("{vl:.5}"),
+                    format!("{:.3}", (vl as f64).exp()),
+                ]);
+            }
+        }
+        let vl = eval_loss(&tr);
+        let complexity = match *mech {
+            "standard" | "yat" | "yat_spherical" => "O(n^2)",
+            _ => "O(n)",
+        };
+        table.row(vec![
+            mech.to_string(),
+            complexity.into(),
+            format!("{vl:.4}"),
+            format!("{:.2}", (vl as f64).exp()),
+        ]);
+        eprintln!(
+            "[table5] {mech}: val loss {vl:.4} after {steps} steps ({:.1}s)",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    table.print();
+    table.to_csv("table5_lm.csv").unwrap();
+    write_csv("fig3_training_curves.csv", &["method", "step", "val_loss", "ppl"], &curves)
+        .unwrap();
+}

@@ -1,0 +1,98 @@
+//! Table 6 — multi-scale ablation over feature budgets for the
+//! polynomial-kernel approximations. Scales: Small (T=128, M=P=8),
+//! Medium (T=256, M=P=16), Large (T=512, M=P=32); R=2 throughout, tied
+//! QKV, compared against exact kernel-normalized spherical E-attention.
+
+use slay::kernels::config::{Fusion, Mechanism, PolyMethod, SlayConfig};
+use slay::kernels::Attention;
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::math::stats::rel_l2;
+use slay::util::benchkit::{fmt_ms, time_budget, Table};
+use std::time::Duration;
+
+fn clustered(l: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+    let mut rng = Rng::new(seed);
+    let centers = Mat::randn(6, d, &mut rng).normalized_rows();
+    let q = Mat::from_fn(l, d, |r, c| centers.row(r % 6)[c] + 0.35 * rng.normal_f32());
+    let k = Mat::from_fn(l, d, |r, c| centers.row((r + 3) % 6)[c] + 0.35 * rng.normal_f32());
+    let v = Mat::randn(l, d, &mut rng);
+    (q, k, v)
+}
+
+fn main() {
+    let d = 32;
+    let scales = [("Small", 128usize, 8usize), ("Medium", 256, 16), ("Large", 512, 32)];
+    let mut table = Table::new(
+        "Table 6 — multi-scale polynomial-approximation sweep (R=2, clustered untied QK)",
+        &["Scale", "Method", "T", "R", "M", "P", "Rel_l2", "Latency(ms)"],
+    );
+
+    for (scale, l, mp) in scales {
+        let (q, k, v) = clustered(l, d, 7 + l as u64);
+        let exact_op = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
+        let exact = exact_op.forward(&q, &k, &v, false, 0);
+        let base = SlayConfig { r_nodes: 2, d_prf: mp, n_poly: mp, ..Default::default() };
+
+        let mut push = |method: &str, mech: Option<Mechanism>| {
+            let (err, ms) = match &mech {
+                None => {
+                    let t = time_budget(method, Duration::from_millis(200), || {
+                        std::hint::black_box(exact_op.forward(&q, &k, &v, false, 0));
+                    });
+                    (0.0, t.mean_ms)
+                }
+                Some(m) => {
+                    let op = Attention::build(m, d, l).unwrap();
+                    let y = op.forward(&q, &k, &v, false, 0);
+                    let t = time_budget(method, Duration::from_millis(200), || {
+                        std::hint::black_box(op.forward(&q, &k, &v, false, 0));
+                    });
+                    (rel_l2(&y.data, &exact.data), t.mean_ms)
+                }
+            };
+            table.row(vec![
+                scale.to_string(),
+                method.to_string(),
+                l.to_string(),
+                "2".into(),
+                mp.to_string(),
+                mp.to_string(),
+                format!("{err:.4}"),
+                fmt_ms(ms),
+            ]);
+        };
+
+        push("Exact (Spherical)", None);
+        push(
+            "Laplace-only",
+            Some(Mechanism::Slay(SlayConfig {
+                fusion: Fusion::LaplaceOnly,
+                d_prf: mp * mp,
+                ..base.clone()
+            })),
+        );
+        push("Anchor", Some(Mechanism::Slay(base.clone())));
+        push(
+            "Hadamard (shared w)",
+            Some(Mechanism::Slay(SlayConfig { fusion: Fusion::Hadamard, ..base.clone() })),
+        );
+        push(
+            "Nystrom",
+            Some(Mechanism::Slay(SlayConfig { poly: PolyMethod::Nystrom, ..base.clone() })),
+        );
+        push(
+            "TensorSketch",
+            Some(Mechanism::Slay(SlayConfig { poly: PolyMethod::TensorSketch, ..base.clone() })),
+        );
+        push(
+            "Random Maclaurin",
+            Some(Mechanism::Slay(SlayConfig {
+                poly: PolyMethod::RandomMaclaurin,
+                ..base
+            })),
+        );
+    }
+    table.print();
+    table.to_csv("table6_sweep.csv").unwrap();
+}

@@ -1,0 +1,98 @@
+//! Quickstart — the public API in five minutes:
+//! 1. evaluate the spherical Yat-kernel and its SLAY linearization,
+//! 2. run SLAY attention over a sequence (batch + streaming),
+//! 3. stand up the serving coordinator and push a few chunks through it.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use slay::coordinator::request::AttendChunk;
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::kernels::slay::{QKFeatures, SlayFeatures};
+use slay::kernels::{engine, yat, Attention};
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the kernel ----------------------------------------------------
+    let eps = 1e-3f32;
+    println!("spherical Yat-kernel E_sph(x) = x^2 / (2+eps - 2x):");
+    for x in [-0.5f32, 0.0, 0.5, 0.9] {
+        println!("  E_sph({x:+.1}) = {:.4}", yat::e_sph(x, eps));
+    }
+    println!("  bound 1/eps = {:.0} attained at x = 1 (Prop. 3)\n", 1.0 / eps);
+
+    // --- 2. SLAY linearized attention --------------------------------------
+    let d = 32;
+    let l = 256;
+    let mut rng = Rng::new(0);
+    let (q, k, v) = (
+        Mat::randn(l, d, &mut rng),
+        Mat::randn(l, d, &mut rng),
+        Mat::randn(l, d, &mut rng),
+    );
+
+    let slay_op = Attention::build(&Mechanism::Slay(SlayConfig::default()), d, l)?;
+    let y = slay_op.forward(&q, &k, &v, /*causal=*/ true, 0);
+    println!(
+        "SLAY causal attention over L={l}: output {}x{}, feature dim m={}",
+        y.rows,
+        y.cols,
+        slay_op.feature_dim().unwrap()
+    );
+
+    // exact quadratic counterpart for comparison
+    let exact_op = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?;
+    let y_exact = exact_op.forward(&q, &k, &v, true, 0);
+    println!(
+        "rel-l2 vs exact spherical Yat attention: {:.3} (linear time vs O(L^2))\n",
+        slay::math::stats::rel_l2(&y.data, &y_exact.data)
+    );
+
+    // --- 3. streaming decode (the KV-cache analog) --------------------------
+    let feats = SlayFeatures::new(SlayConfig::default(), d)?;
+    let mut state = engine::StreamingState::new(feats.dim(), d);
+    let phi_k = feats.map_k(&k, 0);
+    let phi_q = feats.map_q(&q, 0);
+    for i in 0..l {
+        state.append(phi_k.row(i), v.row(i));
+    }
+    let y_last = state.query(phi_q.row(l - 1), 1e-6);
+    println!(
+        "streaming state after {l} tokens: {} bytes (constant in L); last-token output[0..4] = {:?}",
+        state.bytes(),
+        &y_last[..4]
+    );
+
+    // --- 4. the serving coordinator -----------------------------------------
+    let coord = Coordinator::start(CoordinatorConfig {
+        d_head: d,
+        d_v: d,
+        workers: 2,
+        ..CoordinatorConfig::default()
+    })?;
+    let seq = coord.create_sequence()?;
+    // prefill then three decode steps
+    coord.attend(AttendChunk {
+        seq,
+        q: Mat::randn(64, d, &mut rng),
+        k: Mat::randn(64, d, &mut rng),
+        v: Mat::randn(64, d, &mut rng),
+    })?;
+    for _ in 0..3 {
+        let r = coord.attend(AttendChunk {
+            seq,
+            q: Mat::randn(1, d, &mut rng),
+            k: Mat::randn(1, d, &mut rng),
+            v: Mat::randn(1, d, &mut rng),
+        })?;
+        println!(
+            "decode step: seq_len={} latency={:?}",
+            r.seq_len, r.latency
+        );
+    }
+    println!("\ncoordinator metrics: {}", coord.metrics().to_json().to_string());
+    coord.shutdown()?;
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! End-to-end training driver (the repository's e2e validation): train a
+//! transformer LM through the full three-layer stack — synthetic corpus
+//! generated in Rust, gradients computed by the AOT-compiled JAX
+//! `train_step` (which embeds the SLAY attention), executed over PJRT —
+//! and log the loss curve + validation perplexity to results/.
+//!
+//! Run: `cargo run --release --example train_lm -- [--preset tiny]
+//!       [--mechanism slay] [--steps 300] [--seed 0]`
+//!
+//! Requires `make artifacts`. The run is recorded in EXPERIMENTS.md §E2E.
+
+use slay::data::corpus::{Corpus, CorpusConfig};
+use slay::math::rng::Rng;
+use slay::runtime::executor::TensorData;
+use slay::runtime::Registry;
+use slay::train::Trainer;
+use slay::util::benchkit::write_csv;
+
+fn main() -> anyhow::Result<()> {
+    let args = slay::util::cli::Args::parse(&std::env::args().skip(1).collect::<Vec<_>>())?;
+    let preset = args.get_or("preset", "tiny");
+    let mech = args.get_or("mechanism", "slay");
+    let steps = args.usize_or("steps", 300)?;
+    let seed = args.u64_or("seed", 0)? as u32;
+
+    let reg = Registry::open_default()?;
+    let mut tr = Trainer::new(
+        &reg,
+        &format!("train_step_{preset}_{mech}"),
+        &format!("init_{preset}"),
+        seed,
+    )?;
+    let n_params: usize = reg
+        .manifest
+        .get(&format!("init_{preset}"))?
+        .outputs
+        .iter()
+        .map(|s| s.elements())
+        .sum();
+    println!(
+        "e2e train: {mech}/{preset} — {} parameters, batch {}, seq {}, vocab {}",
+        n_params, tr.shapes.batch, tr.shapes.seq_len, tr.shapes.vocab
+    );
+
+    let corpus = Corpus::new(CorpusConfig { vocab: tr.shapes.vocab, ..Default::default() }, 42);
+    let mut rng = Rng::new(seed as u64 + 1);
+
+    // fixed validation set
+    let mut vrng = Rng::new(9999);
+    let val: Vec<(Vec<i32>, Vec<i32>)> = (0..4)
+        .map(|_| corpus.lm_batch(tr.shapes.batch, tr.shapes.seq_len, &mut vrng))
+        .collect();
+    let loss_exe = reg.get(&format!("loss_{preset}_{mech}"))?;
+    let eval = |tr: &Trainer| -> anyhow::Result<f32> {
+        let mut acc = 0.0;
+        for (t, y) in &val {
+            acc += tr
+                .run_with_params(&loss_exe, &[TensorData::I32(t.clone()), TensorData::I32(y.clone())])?[0]
+                .scalar_f32()?;
+        }
+        Ok(acc / val.len() as f32)
+    };
+
+    let mut curve: Vec<Vec<String>> = Vec::new();
+    let t0 = std::time::Instant::now();
+    let v0 = eval(&tr)?;
+    println!("step {:>5}  train -       val {v0:.4}  ppl {:.1}", 0, (v0 as f64).exp());
+    curve.push(vec!["0".into(), "".into(), format!("{v0:.5}")]);
+    for step in 1..=steps {
+        let (tokens, targets) = corpus.lm_batch(tr.shapes.batch, tr.shapes.seq_len, &mut rng);
+        let loss = tr.step(&tokens, &targets)?;
+        if step % 25 == 0 || step == steps {
+            let vl = eval(&tr)?;
+            let tok_s = (step * tr.shapes.batch * tr.shapes.seq_len) as f64
+                / t0.elapsed().as_secs_f64();
+            println!(
+                "step {step:>5}  train {loss:.4}  val {vl:.4}  ppl {:.1}  ({tok_s:.0} tok/s)",
+                (vl as f64).exp()
+            );
+            curve.push(vec![step.to_string(), format!("{loss:.5}"), format!("{vl:.5}")]);
+        }
+    }
+    let final_val = eval(&tr)?;
+    println!(
+        "\nfinal: val loss {final_val:.4}, ppl {:.2}, {:.1}s wall",
+        (final_val as f64).exp(),
+        t0.elapsed().as_secs_f64()
+    );
+    anyhow::ensure!(final_val < v0, "training failed to reduce validation loss");
+
+    write_csv(
+        &format!("e2e_train_{mech}_{preset}.csv"),
+        &["step", "train_loss", "val_loss"],
+        &curve,
+    )?;
+    let ckpt = std::path::PathBuf::from(format!("results/e2e_{mech}_{preset}.slayckpt"));
+    tr.save(&ckpt)?;
+    println!("checkpoint: {}", ckpt.display());
+    Ok(())
+}

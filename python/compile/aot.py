@@ -1,0 +1,491 @@
+"""AOT compiler: lower every jax/Pallas computation the Rust runtime needs
+to HLO **text** + a JSON manifest.
+
+Interchange is HLO text, NOT ``lowered.compile().serialize()`` — jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids that the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all shapes static, f32):
+
+* ``attn_<mech>``        — single-head attention microkernel (serving path)
+* ``attn_slay_pallas``   — same computation through the L1 Pallas kernels
+* ``init_<preset>``      — seed -> flattened parameter list
+* ``train_step_<preset>_<mech>`` — (params…, m…, v…, step, tokens, targets)
+                           -> (params'…, m'…, v'…, step', loss)
+* ``loss_<preset>_<mech>``       — (params…, tokens, targets) -> loss
+* ``lm_fwd_<preset>_<mech>``     — (params…, tokens) -> logits
+
+Run once via ``make artifacts``; Python never sits on the request path.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ref, slay_pallas
+
+MECHANISMS = list(ref.MECHANISMS)
+
+# Default artifact matrix (kept lean: every (preset, mech) pair lowers a
+# train_step, so build time matters).
+TASK_PRESET = "task"
+LM_PRESET = "tiny"
+TASK_BATCH = 16
+LM_BATCH = 8
+ATTN_L = 512
+ATTN_D = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True).
+
+    `as_hlo_text(True)` = print_large_constants: the default printer elides
+    big literals as `constant({...})`, which the target XLA's text parser
+    accepts *silently* and turns into garbage — any mechanism whose random
+    features (ω, anchors) are baked as constants then trains on noise.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    text = comp.as_hlo_text(True)
+    assert "constant({...}" not in text and "...," not in text[:200], "elided constants"
+    return text
+
+
+def spec(x) -> dict:
+    return {"shape": list(x.shape), "dtype": str(x.dtype)}
+
+
+def spec_of_tree(leaves) -> list[dict]:
+    return [spec(v) for v in leaves]
+
+
+class Bundle:
+    """Collects artifacts + manifest entries before writing."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries: dict[str, dict] = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def add(self, name: str, lowered, *, kind: str, inputs: list[dict],
+            outputs: list[dict], **extra):
+        text = to_hlo_text(lowered)
+        path = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, path), "w") as f:
+            f.write(text)
+        self.entries[name] = {
+            "path": path,
+            "kind": kind,
+            "inputs": inputs,
+            "outputs": outputs,
+            "hlo_bytes": len(text),
+            **extra,
+        }
+        print(f"[aot] {name}: {len(text)/1e6:.2f} MB hlo, "
+              f"{len(inputs)} inputs -> {len(outputs)} outputs")
+
+    def write_manifest(self, src_digest: str):
+        manifest = {
+            "version": 1,
+            "src_digest": src_digest,
+            "jax_version": jax.__version__,
+            "artifacts": self.entries,
+        }
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=2, sort_keys=True)
+        print(f"[aot] wrote manifest with {len(self.entries)} artifacts")
+
+
+def src_digest() -> str:
+    """Digest of the compile-path sources (make-level no-op support)."""
+    h = hashlib.sha256()
+    base = os.path.dirname(__file__)
+    for root, _, files in sorted(os.walk(base)):
+        for fn in sorted(files):
+            if fn.endswith(".py"):
+                with open(os.path.join(root, fn), "rb") as f:
+                    h.update(f.read())
+    return h.hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# Attention microkernels
+# ---------------------------------------------------------------------------
+
+
+def lower_attn(bundle: Bundle, mech_name: str, l: int, d: int):
+    key = jax.random.PRNGKey(7)
+    mech = ref.make_mech_params(mech_name, key, d, horizon=l)
+
+    def fn(q, k, v):
+        return (ref.attention(mech, q, k, v, causal=True),)
+
+    s = jax.ShapeDtypeStruct((l, d), jnp.float32)
+    lowered = jax.jit(fn).lower(s, s, s)
+    io = [{"name": n, **spec(s)} for n in ("q", "k", "v")]
+    bundle.add(
+        f"attn_{mech_name}",
+        lowered,
+        kind="attn_fwd",
+        mechanism=mech_name,
+        inputs=io,
+        outputs=[{"name": "y", "shape": [l, d], "dtype": "float32"}],
+        seq_len=l,
+        d_head=d,
+    )
+
+
+def lower_attn_slay_pallas(bundle: Bundle, l: int, d: int):
+    """The L1 path: SLAY attention through the Pallas kernels."""
+    key = jax.random.PRNGKey(7)
+    params = ref.make_slay_params(key, d)
+
+    def fn(q, k, v):
+        return (slay_pallas.slay_attention(q, k, v, params, causal=True),)
+
+    s = jax.ShapeDtypeStruct((l, d), jnp.float32)
+    lowered = jax.jit(fn).lower(s, s, s)
+    io = [{"name": n, **spec(s)} for n in ("q", "k", "v")]
+    bundle.add(
+        "attn_slay_pallas",
+        lowered,
+        kind="attn_fwd",
+        mechanism="slay",
+        inputs=io,
+        outputs=[{"name": "y", "shape": [l, d], "dtype": "float32"}],
+        seq_len=l,
+        d_head=d,
+        pallas=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Model artifacts
+# ---------------------------------------------------------------------------
+
+
+def lower_init(bundle: Bundle, preset: str):
+    cfg = M.config_for(preset, "standard")
+    template = M.init(cfg, jax.random.PRNGKey(0))
+    leaves, names = M.flatten_params(template)
+
+    def fn(seed):
+        params = M.init(cfg, jax.random.PRNGKey(0) + seed.astype(jnp.uint32))
+        out, _ = M.flatten_params(params)
+        return tuple(out)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((), jnp.uint32))
+    bundle.add(
+        f"init_{preset}",
+        lowered,
+        kind="init",
+        preset=preset,
+        inputs=[{"name": "seed", "shape": [], "dtype": "uint32"}],
+        outputs=[{"name": n, **spec(v)} for n, v in zip(names, leaves)],
+        param_names=names,
+        param_count=int(sum(np.prod(v.shape) for v in leaves)),
+        config=cfg.__dict__ | {"d_head": cfg.d_head},
+    )
+    return cfg, template, names
+
+
+def _mech_for(cfg: M.ModelConfig) -> ref.MechParams:
+    return M.make_mech(cfg, jax.random.PRNGKey(1234))
+
+
+def lower_train_step(bundle: Bundle, preset: str, mech_name: str, batch: int):
+    cfg = M.config_for(preset, mech_name)
+    mech = _mech_for(cfg)
+    template = M.init(cfg, jax.random.PRNGKey(0))
+    leaves, names = M.flatten_params(template)
+    n = len(leaves)
+
+    def fn(*args):
+        p_leaves = list(args[:n])
+        m_leaves = list(args[n : 2 * n])
+        v_leaves = list(args[2 * n : 3 * n])
+        step = args[3 * n]
+        tokens = args[3 * n + 1]
+        targets = args[3 * n + 2]
+        params = M.unflatten_params(template, p_leaves)
+        opt = {
+            "m": M.unflatten_params(template, m_leaves),
+            "v": M.unflatten_params(template, v_leaves),
+            "step": step,
+        }
+        new_params, new_opt, loss = M.train_step(cfg, mech, params, opt, tokens, targets)
+        po, _ = M.flatten_params(new_params)
+        mo, _ = M.flatten_params(new_opt["m"])
+        vo, _ = M.flatten_params(new_opt["v"])
+        return tuple(po) + tuple(mo) + tuple(vo) + (new_opt["step"], loss)
+
+    arg_specs = (
+        [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in leaves] * 3
+        + [
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+        ]
+    )
+    lowered = jax.jit(fn).lower(*arg_specs)
+    inputs = (
+        [{"name": f"p.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [{"name": f"m.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [{"name": f"v.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [
+            {"name": "step", "shape": [], "dtype": "float32"},
+            {"name": "tokens", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+            {"name": "targets", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+        ]
+    )
+    outputs = (
+        [{"name": f"p.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [{"name": f"m.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [{"name": f"v.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [
+            {"name": "step", "shape": [], "dtype": "float32"},
+            {"name": "loss", "shape": [], "dtype": "float32"},
+        ]
+    )
+    bundle.add(
+        f"train_step_{preset}_{mech_name}",
+        lowered,
+        kind="train_step",
+        preset=preset,
+        mechanism=mech_name,
+        batch=batch,
+        inputs=inputs,
+        outputs=outputs,
+        param_names=names,
+        config=cfg.__dict__ | {"d_head": cfg.d_head},
+    )
+
+
+def lower_loss(bundle: Bundle, preset: str, mech_name: str, batch: int):
+    cfg = M.config_for(preset, mech_name)
+    mech = _mech_for(cfg)
+    template = M.init(cfg, jax.random.PRNGKey(0))
+    leaves, names = M.flatten_params(template)
+    n = len(leaves)
+
+    def fn(*args):
+        params = M.unflatten_params(template, list(args[:n]))
+        return (M.loss_fn(cfg, mech, params, args[n], args[n + 1]),)
+
+    arg_specs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in leaves] + [
+        jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+        jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+    ]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    bundle.add(
+        f"loss_{preset}_{mech_name}",
+        lowered,
+        kind="loss",
+        preset=preset,
+        mechanism=mech_name,
+        batch=batch,
+        inputs=[{"name": f"p.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [
+            {"name": "tokens", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+            {"name": "targets", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+        ],
+        outputs=[{"name": "loss", "shape": [], "dtype": "float32"}],
+        param_names=names,
+        config=cfg.__dict__ | {"d_head": cfg.d_head},
+    )
+
+
+def lower_lm_fwd(bundle: Bundle, preset: str, mech_name: str, batch: int):
+    cfg = M.config_for(preset, mech_name)
+    mech = _mech_for(cfg)
+    template = M.init(cfg, jax.random.PRNGKey(0))
+    leaves, names = M.flatten_params(template)
+    n = len(leaves)
+
+    def fn(*args):
+        params = M.unflatten_params(template, list(args[:n]))
+        return (M.forward(cfg, mech, params, args[n]),)
+
+    arg_specs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in leaves] + [
+        jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    ]
+    lowered = jax.jit(fn).lower(*arg_specs)
+    bundle.add(
+        f"lm_fwd_{preset}_{mech_name}",
+        lowered,
+        kind="lm_fwd",
+        preset=preset,
+        mechanism=mech_name,
+        batch=batch,
+        inputs=[{"name": f"p.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [{"name": "tokens", "shape": [batch, cfg.seq_len], "dtype": "int32"}],
+        outputs=[{
+            "name": "logits",
+            "shape": [batch, cfg.seq_len, cfg.vocab],
+            "dtype": "float32",
+        }],
+        param_names=names,
+        config=cfg.__dict__ | {"d_head": cfg.d_head},
+    )
+
+
+def lower_cls(bundle: Bundle, mech_name: str, n_labels: int, batch: int):
+    """Extreme-classification artifacts (Table 4): train step + scorer."""
+    cfg = M.config_for(TASK_PRESET, mech_name)
+    mech = _mech_for(cfg)
+    template = M.cls_init(cfg, n_labels, jax.random.PRNGKey(0))
+    leaves, names = M.flatten_params(template)
+    n = len(leaves)
+
+    def step_fn(*args):
+        p_leaves = list(args[:n])
+        m_leaves = list(args[n : 2 * n])
+        v_leaves = list(args[2 * n : 3 * n])
+        step = args[3 * n]
+        tokens = args[3 * n + 1]
+        targets = args[3 * n + 2]
+        params = M.unflatten_params(template, p_leaves)
+        opt = {
+            "m": M.unflatten_params(template, m_leaves),
+            "v": M.unflatten_params(template, v_leaves),
+            "step": step,
+        }
+        new_params, new_opt, loss = M.cls_train_step(cfg, mech, params, opt, tokens, targets)
+        po, _ = M.flatten_params(new_params)
+        mo, _ = M.flatten_params(new_opt["m"])
+        vo, _ = M.flatten_params(new_opt["v"])
+        return tuple(po) + tuple(mo) + tuple(vo) + (new_opt["step"], loss)
+
+    arg_specs = (
+        [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in leaves] * 3
+        + [
+            jax.ShapeDtypeStruct((), jnp.float32),
+            jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32),
+            jax.ShapeDtypeStruct((batch, n_labels), jnp.float32),
+        ]
+    )
+    lowered = jax.jit(step_fn).lower(*arg_specs)
+    mk = lambda prefix: [
+        {"name": f"{prefix}.{x}", **spec(v)} for x, v in zip(names, leaves)
+    ]
+    bundle.add(
+        f"cls_train_step_{mech_name}",
+        lowered,
+        kind="cls_train_step",
+        preset=TASK_PRESET,
+        mechanism=mech_name,
+        batch=batch,
+        n_labels=n_labels,
+        inputs=mk("p") + mk("m") + mk("v")
+        + [
+            {"name": "step", "shape": [], "dtype": "float32"},
+            {"name": "tokens", "shape": [batch, cfg.seq_len], "dtype": "int32"},
+            {"name": "targets", "shape": [batch, n_labels], "dtype": "float32"},
+        ],
+        outputs=mk("p") + mk("m") + mk("v")
+        + [
+            {"name": "step", "shape": [], "dtype": "float32"},
+            {"name": "loss", "shape": [], "dtype": "float32"},
+        ],
+        param_names=names,
+        config=cfg.__dict__ | {"d_head": cfg.d_head, "n_labels": n_labels},
+    )
+
+    def init_fn(seed):
+        params = M.cls_init(cfg, n_labels, jax.random.PRNGKey(0) + seed.astype(jnp.uint32))
+        out, _ = M.flatten_params(params)
+        return tuple(out)
+
+    lowered = jax.jit(init_fn).lower(jax.ShapeDtypeStruct((), jnp.uint32))
+    bundle.add(
+        f"cls_init_{mech_name}",
+        lowered,
+        kind="cls_init",
+        preset=TASK_PRESET,
+        mechanism=mech_name,
+        n_labels=n_labels,
+        inputs=[{"name": "seed", "shape": [], "dtype": "uint32"}],
+        outputs=[{"name": x, **spec(v)} for x, v in zip(names, leaves)],
+        param_names=names,
+        config=cfg.__dict__ | {"d_head": cfg.d_head, "n_labels": n_labels},
+    )
+
+    def fwd_fn(*args):
+        params = M.unflatten_params(template, list(args[:n]))
+        return (M.cls_forward(cfg, mech, params, args[n]),)
+
+    arg_specs = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in leaves] + [
+        jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    ]
+    lowered = jax.jit(fwd_fn).lower(*arg_specs)
+    bundle.add(
+        f"cls_fwd_{mech_name}",
+        lowered,
+        kind="cls_fwd",
+        preset=TASK_PRESET,
+        mechanism=mech_name,
+        batch=batch,
+        n_labels=n_labels,
+        inputs=[{"name": f"p.{x}", **spec(v)} for x, v in zip(names, leaves)]
+        + [{"name": "tokens", "shape": [batch, cfg.seq_len], "dtype": "int32"}],
+        outputs=[{"name": "scores", "shape": [batch, n_labels], "dtype": "float32"}],
+        param_names=names,
+        config=cfg.__dict__ | {"d_head": cfg.d_head, "n_labels": n_labels},
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--mechanisms", default=",".join(MECHANISMS))
+    ap.add_argument("--quick", action="store_true",
+                    help="only the slay + standard artifacts (CI smoke)")
+    args = ap.parse_args()
+
+    mechs = args.mechanisms.split(",")
+    if args.quick:
+        mechs = ["slay", "standard"]
+
+    bundle = Bundle(args.out)
+
+    # L1/serving microkernels
+    for m in mechs:
+        lower_attn(bundle, m, ATTN_L, ATTN_D)
+    lower_attn_slay_pallas(bundle, ATTN_L, ATTN_D)
+
+    # model init per preset (mechanism-independent)
+    for preset in {TASK_PRESET, LM_PRESET}:
+        lower_init(bundle, preset)
+
+    # train/loss/fwd per (preset, mechanism)
+    for m in mechs:
+        lower_train_step(bundle, TASK_PRESET, m, TASK_BATCH)
+        lower_train_step(bundle, LM_PRESET, m, LM_BATCH)
+        lower_loss(bundle, LM_PRESET, m, LM_BATCH)
+        lower_lm_fwd(bundle, TASK_PRESET, m, TASK_BATCH)  # task accuracy eval
+    lower_lm_fwd(bundle, LM_PRESET, "slay", 1)
+    lower_lm_fwd(bundle, LM_PRESET, "standard", 1)
+
+    # Table 4: extreme classification (SLAY vs Performer)
+    if not args.quick:
+        for m in ("slay", "favor"):
+            lower_cls(bundle, m, n_labels=3956, batch=TASK_BATCH)
+
+    bundle.write_manifest(src_digest())
+
+
+if __name__ == "__main__":
+    sys.exit(main())

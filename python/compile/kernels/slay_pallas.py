@@ -1,0 +1,203 @@
+"""L1 — Pallas kernels for the SLAY hot path.
+
+Two kernels cover the paper's compute hot-spot:
+
+* :func:`slay_features` — the fused feature pipeline of Algorithm 1 lines
+  1-7: row normalization -> anchor polynomial features -> per-node PRF ->
+  Kronecker fusion -> sqrt(w_r) scaling -> concat, tiled over the sequence
+  with a BlockSpec grid so each grid step touches one ``L_BLK``-token block
+  resident in VMEM.
+* :func:`linear_attention_causal` — the Eq. 11 causal contraction as a
+  chunked prefix scan: the grid walks chunks in order carrying the running
+  ``(S, z)`` state in VMEM scratch; within a chunk causality is a
+  tril-masked [C, C] product (the TPU analog of the paper's CUDA
+  warp-level prefix sums — see DESIGN.md §Hardware-Adaptation).
+
+Both kernels MUST run with ``interpret=True`` in this image: real TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Correctness is pinned to ``ref.py`` in ``python/tests/test_pallas.py``;
+VMEM/MXU structure is what we optimize, not interpret-mode wallclock.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+# Tokens per grid step. 128 rows keeps the per-block VMEM footprint
+# (x-block + anchor/PRF activations + fused output) in the hundreds of KiB
+# — see DESIGN.md §Perf for the budget arithmetic.
+L_BLK = 128
+
+
+def _features_kernel(
+    x_ref,        # [L_BLK, d]
+    anchors_ref,  # [P, d]
+    omegas_ref,   # [R*D, d]
+    s_ref,        # [R, 1]
+    sqrtw_ref,    # [R, 1]
+    out_ref,      # [L_BLK, R*P*D]
+    *,
+    r_nodes: int,
+    d_prf: int,
+):
+    x = x_ref[...]
+    # Spherical constraint (Eq. 2): one rsqrt per row, fused with the loads.
+    inv_norm = jax.lax.rsqrt(jnp.maximum(jnp.sum(x * x, axis=-1, keepdims=True), 1e-24))
+    xn = x * inv_norm
+
+    # Anchor polynomial features (MXU matmul + elementwise square).
+    p = anchors_ref.shape[0]
+    proj = jnp.dot(xn, anchors_ref[...].T)  # [L_BLK, P]
+    poly = proj * proj * (1.0 / np.sqrt(p))
+
+    blk = x.shape[0]
+    for r in range(r_nodes):  # static unroll: R is small (default 3)
+        omega = omegas_ref[r * d_prf : (r + 1) * d_prf, :]  # [D, d]
+        s = s_ref[r, 0]
+        prf = jnp.exp(jnp.sqrt(2.0 * s) * jnp.dot(xn, omega.T) - s) * (
+            1.0 / np.sqrt(d_prf)
+        )  # [L_BLK, D]
+        fused = (poly[:, :, None] * prf[:, None, :]).reshape(blk, p * d_prf)
+        out_ref[:, r * p * d_prf : (r + 1) * p * d_prf] = fused * sqrtw_ref[r, 0]
+
+
+def slay_features(
+    x: jax.Array, params: ref.SlayParams, *, interpret: bool = True
+) -> jax.Array:
+    """Pallas-fused Psi(x) for a single [L, d] sequence.
+
+    Matches :func:`ref.slay_features` to float tolerance; tiled over L.
+    """
+    l, d = x.shape
+    r_nodes, d_prf, _ = params.omegas.shape
+    p = params.anchors.shape[0]
+    m = r_nodes * p * d_prf
+
+    pad = (-l) % L_BLK
+    xp = jnp.pad(x, ((0, pad), (0, 0))) if pad else x
+    grid = (xp.shape[0] // L_BLK,)
+
+    out = pl.pallas_call(
+        functools.partial(_features_kernel, r_nodes=r_nodes, d_prf=d_prf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((L_BLK, d), lambda i: (i, 0)),
+            pl.BlockSpec((p, d), lambda i: (0, 0)),
+            pl.BlockSpec((r_nodes * d_prf, d), lambda i: (0, 0)),
+            pl.BlockSpec((r_nodes, 1), lambda i: (0, 0)),
+            pl.BlockSpec((r_nodes, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((L_BLK, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], m), x.dtype),
+        interpret=interpret,
+    )(
+        xp,
+        params.anchors,
+        params.omegas.reshape(r_nodes * d_prf, d),
+        params.s.reshape(r_nodes, 1),
+        params.sqrt_w.reshape(r_nodes, 1),
+    )
+    return out[:l]
+
+
+def _causal_attn_kernel(
+    q_ref,   # [C, m]
+    k_ref,   # [C, m]
+    v_ref,   # [C, d_v]
+    out_ref, # [C, d_v]
+    s_ref,   # scratch [m, d_v]
+    z_ref,   # scratch [1, m]
+    *,
+    delta: float,
+):
+    # Zero the carried state on the first chunk.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    c = q.shape[0]
+
+    # Intra-chunk causal part: tril-masked [C, C] score block (VMEM-sized).
+    local = jnp.dot(q, k.T)
+    mask = jnp.tril(jnp.ones((c, c), dtype=q.dtype))
+    local = local * mask
+
+    s_prev = s_ref[...]
+    z_prev = z_ref[0, :]
+    num = jnp.dot(local, v) + jnp.dot(q, s_prev)
+    den = jnp.sum(local, axis=-1) + jnp.dot(q, z_prev)
+    out_ref[...] = num / (den[:, None] + delta)
+
+    # Carry the state forward: S += K^T V, z += sum K.
+    s_ref[...] = s_prev + jnp.dot(k.T, v)
+    z_ref[0, :] = z_prev + jnp.sum(k, axis=0)
+
+
+def linear_attention_causal(
+    phi_q: jax.Array,
+    phi_k: jax.Array,
+    v: jax.Array,
+    *,
+    delta: float = 1e-6,
+    chunk: int = L_BLK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Pallas chunked causal linear attention for single [L, m]/[L, d_v]."""
+    l, m = phi_q.shape
+    d_v = v.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        phi_q = jnp.pad(phi_q, ((0, pad), (0, 0)))
+        phi_k = jnp.pad(phi_k, ((0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, pad), (0, 0)))
+    grid = (phi_q.shape[0] // chunk,)
+
+    out = pl.pallas_call(
+        functools.partial(_causal_attn_kernel, delta=delta),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((chunk, m), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, m), lambda i: (i, 0)),
+            pl.BlockSpec((chunk, d_v), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((chunk, d_v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((phi_q.shape[0], d_v), phi_q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((m, d_v), jnp.float32),
+            pltpu.VMEM((1, m), jnp.float32),
+        ],
+        interpret=interpret,
+    )(phi_q, phi_k, v)
+    return out[:l]
+
+
+def slay_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    params: ref.SlayParams,
+    *,
+    causal: bool = True,
+    delta: float = 1e-6,
+    interpret: bool = True,
+) -> jax.Array:
+    """End-to-end SLAY attention through the Pallas kernels (single head)."""
+    phi_q = slay_features(q, params, interpret=interpret)
+    phi_k = slay_features(k, params, interpret=interpret)
+    if causal:
+        return linear_attention_causal(
+            phi_q, phi_k, v, delta=delta, interpret=interpret
+        )
+    return ref.linear_attention_noncausal(phi_q, phi_k, v, delta)

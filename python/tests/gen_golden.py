@@ -1,0 +1,124 @@
+"""Golden-vector generator: exports JSON the Rust tests replay so the two
+mirrors (jnp oracle vs rust/src/kernels) agree numerically.
+
+The file carries the randomness (anchors, omegas) as data, so the Rust side
+reconstructs identical feature maps via `Anchor::from_anchors` /
+`Prf::from_omega` rather than re-deriving RNG streams.
+
+Run: ``cd python && python -m tests.gen_golden --out ../artifacts/golden.json``
+(wired as ``make golden``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+
+
+def arr(x) -> list:
+    return np.asarray(x, np.float64).flatten().tolist()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/golden.json")
+    args = ap.parse_args()
+
+    golden: dict = {"version": 1}
+
+    # 1. spherical kernel grid (Eq. 5)
+    xs = np.linspace(-1.0, 1.0, 41)
+    golden["e_sph"] = {
+        "eps": 1e-3,
+        "x": xs.tolist(),
+        "y": [float(ref.e_sph(jnp.float64(x), 1e-3)) for x in xs],
+    }
+
+    # 2. quadrature rules (§2.4.1)
+    golden["quadrature"] = []
+    for r in (2, 3, 8):
+        s, w = ref.gauss_laguerre(r, 2.001)
+        golden["quadrature"].append(
+            {"r": r, "c": 2.001, "nodes": s.tolist(), "weights": w.tolist()}
+        )
+
+    # 3. full SLAY pipeline with explicit randomness
+    d, l, n_poly, d_prf, r_nodes = 8, 6, 4, 5, 3
+    key = jax.random.PRNGKey(0)
+    params = ref.make_slay_params(key, d, n_poly, d_prf, r_nodes, eps=1e-3)
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(kq, (l, d))
+    k = jax.random.normal(kk, (l, d))
+    v = jax.random.normal(kv, (l, 3))
+    phi_q = ref.slay_features(q, params)
+    phi_k = ref.slay_features(k, params)
+    golden["slay_pipeline"] = {
+        "d": d,
+        "l": l,
+        "n_poly": n_poly,
+        "d_prf": d_prf,
+        "r_nodes": r_nodes,
+        "eps": 1e-3,
+        "delta": 1e-6,
+        "anchors": arr(params.anchors),
+        "omegas": arr(params.omegas),  # [R, D, d] flattened
+        "s": arr(params.s),
+        "sqrt_w": arr(params.sqrt_w),
+        "q": arr(q),
+        "k": arr(k),
+        "v": arr(v),
+        "phi_q": arr(phi_q),
+        "phi_k": arr(phi_k),
+        "y_causal": arr(ref.linear_attention(phi_q, phi_k, v, True)),
+        "y_noncausal": arr(ref.linear_attention(phi_q, phi_k, v, False)),
+    }
+
+    # 4. quadratic mechanisms on shared inputs
+    golden["quadratic"] = {
+        "q": arr(q),
+        "k": arr(k),
+        "v": arr(v),
+        "eps": 1e-3,
+        "softmax_causal": arr(
+            ref.quadratic_attention(ref.softmax_scores(q, k), v, True)
+        ),
+        "yat_noncausal": arr(
+            ref.quadratic_attention(ref.e_product(q, k, 1e-3), v, False)
+        ),
+        "yat_spherical_causal": arr(
+            ref.quadratic_attention(ref.e_sph_scores(q, k, 1e-3), v, True)
+        ),
+    }
+
+    # 5. baseline linear mechanisms (explicit omegas where random)
+    omega_favor = jax.random.normal(jax.random.PRNGKey(2), (10, d))
+    fq = ref.favor_relu_features(q, omega_favor)
+    fk = ref.favor_relu_features(k, omega_favor)
+    golden["baselines"] = {
+        "favor_omega": arr(omega_favor),
+        "favor_m": 10,
+        "favor_causal": arr(ref.linear_attention(fq, fk, v, True)),
+        "elu_causal": arr(
+            ref.linear_attention(ref.elu_plus_one(q), ref.elu_plus_one(k), v, True)
+        ),
+        "cosformer_horizon": 64,
+        "cosformer_causal": arr(
+            ref.linear_attention(
+                ref.cosformer_features(q, 0, 64), ref.cosformer_features(k, 0, 64), v, True
+            )
+        ),
+    }
+
+    with open(args.out, "w") as f:
+        json.dump(golden, f)
+    print(f"[golden] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""AOT pipeline: HLO-text lowering shape, manifest integrity, and the
+positional input/output contract the Rust runtime binds against."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model as M
+from compile.kernels import ref
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_shape():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4,), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule"), text[:50]
+    assert "ENTRY" in text
+
+
+def test_attn_artifact_lowering_roundtrip(tmp_path):
+    bundle = aot.Bundle(str(tmp_path))
+    aot.lower_attn(bundle, "elu_linear", 64, 8)
+    entry = bundle.entries["attn_elu_linear"]
+    assert entry["inputs"][0]["shape"] == [64, 8]
+    text = open(tmp_path / entry["path"]).read()
+    assert text.startswith("HloModule")
+
+
+def test_large_constants_not_elided():
+    """Regression: the default HLO printer elides big literals as
+    `constant({...})`; the target XLA parses that *silently* into garbage,
+    so mechanisms with baked random features train on noise. aot.to_hlo_text
+    must print full constants."""
+    import numpy as np
+
+    big = jnp.asarray(np.random.default_rng(0).standard_normal(2048).astype(np.float32))
+
+    def fn(x):
+        return (x @ big.reshape(64, 32),)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 64), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "{...}" not in text
+    # the literal payload must actually be present (thousands of floats)
+    assert len(text) > 2048 * 4
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_no_artifact_has_elided_constants():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    for name, e in manifest["artifacts"].items():
+        text = open(os.path.join(ARTIFACTS, e["path"])).read()
+        assert "{...}" not in text, f"{name} has elided constants"
+
+
+def test_src_digest_stable():
+    assert aot.src_digest() == aot.src_digest()
+    assert len(aot.src_digest()) == 16
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_contract():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    arts = manifest["artifacts"]
+    # every mechanism has its microkernel + the pallas variant exists
+    for m in ref.MECHANISMS:
+        assert f"attn_{m}" in arts
+    assert "attn_slay_pallas" in arts
+    # train_step I/O arity: 3n params + step + tokens + targets inputs,
+    # 3n + step + loss outputs
+    ts = arts["train_step_task_slay"]
+    n = len(ts["param_names"])
+    assert len(ts["inputs"]) == 3 * n + 3
+    assert len(ts["outputs"]) == 3 * n + 2
+    assert ts["inputs"][-1]["dtype"] == "int32"
+    # init outputs match the param name list
+    init = arts["init_task"]
+    assert [o["name"] for o in init["outputs"]] == init["param_names"]
+    # every referenced file exists
+    for name, e in arts.items():
+        assert os.path.exists(os.path.join(ARTIFACTS, e["path"])), name
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+def test_manifest_flatten_order_matches_model():
+    """param_names in the manifest must equal model.flatten_params order."""
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+        manifest = json.load(f)
+    cfg = M.config_for("task", "slay")
+    _, names = M.flatten_params(M.init(cfg, jax.random.PRNGKey(0)))
+    assert manifest["artifacts"]["train_step_task_slay"]["param_names"] == names

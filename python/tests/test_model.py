@@ -1,0 +1,126 @@
+"""L2 model: shapes, learning signal, flatten/unflatten, and the AOT
+flattening contract the Rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+def _setup(mechanism="slay", preset="task"):
+    cfg = M.config_for(preset, mechanism)
+    params = M.init(cfg, jax.random.PRNGKey(0))
+    mech = M.make_mech(cfg, jax.random.PRNGKey(1))
+    return cfg, params, mech
+
+
+def test_forward_shapes():
+    cfg, params, mech = _setup()
+    tokens = jnp.zeros((3, cfg.seq_len), jnp.int32)
+    logits = M.forward(cfg, mech, params, tokens)
+    assert logits.shape == (3, cfg.seq_len, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_initial_loss_near_uniform():
+    # targets independent of inputs (targets==tokens is trivially easier
+    # even at init through the weight-tied head).
+    cfg, params, mech = _setup()
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (4, cfg.seq_len), 0, cfg.vocab)
+    targets = jax.random.randint(jax.random.PRNGKey(22), (4, cfg.seq_len), 0, cfg.vocab)
+    loss = M.loss_fn(cfg, mech, params, tokens, targets)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_target_masking():
+    cfg, params, mech = _setup()
+    tokens = jnp.zeros((2, cfg.seq_len), jnp.int32)
+    targets_all_masked = -jnp.ones((2, cfg.seq_len), jnp.int32)
+    loss = M.loss_fn(cfg, mech, params, tokens, targets_all_masked)
+    assert float(loss) == 0.0
+
+
+@pytest.mark.parametrize("mechanism", ["slay", "standard", "favor"])
+def test_loss_decreases(mechanism):
+    cfg, params, mech = _setup(mechanism)
+    opt = M.init_opt(params)
+    step = jax.jit(lambda p, o, t, y: M.train_step(cfg, mech, p, o, t, y))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (8, cfg.seq_len), 0, cfg.vocab)
+    targets = jnp.roll(tokens, -1, axis=1)
+    first = None
+    for _ in range(12):
+        params, opt, loss = step(params, opt, tokens, targets)
+        first = first if first is not None else float(loss)
+    assert float(loss) < first, (mechanism, first, float(loss))
+
+
+def test_flatten_roundtrip():
+    cfg, params, _ = _setup()
+    leaves, names = M.flatten_params(params)
+    assert len(leaves) == len(names) == len(set(names))
+    rebuilt = M.unflatten_params(params, leaves)
+    for (n1, a), (n2, b) in zip(
+        zip(*M.flatten_params(params)), zip(*M.flatten_params(rebuilt))
+    ):
+        pass
+    re_leaves, re_names = M.flatten_params(rebuilt)
+    assert re_names == names
+    for a, b in zip(leaves, re_leaves):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_flatten_order_is_name_sorted_and_stable():
+    """The Rust runtime binds tensors positionally via manifest names —
+    the order must be reproducible across processes."""
+    cfg, params, _ = _setup()
+    _, names1 = M.flatten_params(params)
+    _, names2 = M.flatten_params(M.init(cfg, jax.random.PRNGKey(9)))
+    assert names1 == names2
+    # layers appear in index order
+    l_names = [n for n in names1 if n.startswith("layers[")]
+    assert l_names == sorted(l_names, key=lambda s: (int(s.split("[")[1].split("]")[0]), s))
+
+
+def test_train_step_deterministic():
+    cfg, params, mech = _setup()
+    opt = M.init_opt(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(4), (4, cfg.seq_len), 0, cfg.vocab)
+    t1 = M.train_step(cfg, mech, params, opt, tokens, tokens)
+    t2 = M.train_step(cfg, mech, params, opt, tokens, tokens)
+    np.testing.assert_array_equal(t1[2], t2[2])
+    a, _ = M.flatten_params(t1[0])
+    b, _ = M.flatten_params(t2[0])
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+
+
+@pytest.mark.parametrize("mechanism", list(M.PRESETS) and ["yat", "yat_spherical", "elu_linear", "cosformer"])
+def test_all_mechanisms_take_a_grad_step(mechanism):
+    cfg, params, mech = _setup(mechanism)
+    opt = M.init_opt(params)
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (2, cfg.seq_len), 0, cfg.vocab)
+    new_params, _, loss = M.train_step(cfg, mech, params, opt, tokens, tokens)
+    assert np.isfinite(float(loss))
+    a, _ = M.flatten_params(params)
+    b, _ = M.flatten_params(new_params)
+    moved = any(not np.allclose(x, y) for x, y in zip(a, b))
+    assert moved, "no parameter moved"
+
+
+def test_param_counts_scale_with_preset():
+    c_task = M.config_for("task", "slay")
+    c_tiny = M.config_for("tiny", "slay")
+    p_task = M.init(c_task, jax.random.PRNGKey(0))
+    p_tiny = M.init(c_tiny, jax.random.PRNGKey(0))
+    assert c_tiny.param_count(p_tiny) > 3 * c_task.param_count(p_task)
+    # gpt2s preset matches the paper's 124M ± 5%
+    c_gpt = M.config_for("gpt2s", "slay")
+    n = (
+        c_gpt.vocab * c_gpt.d_model
+        + c_gpt.seq_len * c_gpt.d_model
+        + c_gpt.n_layers
+        * (c_gpt.d_model * 3 * c_gpt.d_model + c_gpt.d_model**2 + 8 * c_gpt.d_model**2)
+    )
+    assert 0.9e8 < n < 1.4e8

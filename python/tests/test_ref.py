@@ -1,0 +1,187 @@
+"""Oracle self-consistency: the jnp reference implementations must satisfy
+the paper's stated identities and bounds before anything else is trusted
+against them."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+
+def test_e_sph_matches_e_product_on_sphere():
+    key = jax.random.PRNGKey(0)
+    q = ref.normalize_rows(jax.random.normal(key, (5, 16)))
+    k = ref.normalize_rows(jax.random.normal(jax.random.PRNGKey(1), (7, 16)))
+    direct = ref.e_product(q, k, 1e-3)
+    x = q @ k.T
+    sph = ref.e_sph(x, 1e-3)
+    np.testing.assert_allclose(direct, sph, rtol=2e-3, atol=1e-5)
+
+
+def test_e_sph_bound_prop3():
+    x = jnp.linspace(-1.0, 1.0, 2001)
+    for eps in (1e-3, 1e-2, 0.1):
+        v = ref.e_sph(x, eps)
+        assert float(jnp.min(v)) >= 0.0
+        assert float(jnp.max(v)) <= 1.0 / eps * (1 + 2e-3)  # f32 slack at x→1
+        assert np.isclose(float(ref.e_sph(jnp.float32(1.0), eps)), 1.0 / eps, rtol=1e-3)
+
+
+def test_quadrature_weights_and_convergence():
+    s, w = ref.gauss_laguerre(8, 2.001)
+    # ∫ e^{-Cs} ds = 1/C
+    assert np.isclose(np.sum(w), 1 / 2.001, atol=1e-10)
+    # convergence of the kernel integral (Fig. 9)
+    eps = 1e-2
+    for x in (-0.8, 0.0, 0.5, 0.9):
+        exact = x * x / (2 + eps - 2 * x)
+        errs = []
+        for r in (2, 4, 8, 16):
+            s, w = ref.gauss_laguerre(r, 2 + eps)
+            approx = np.sum(w * x * x * np.exp(2 * s * x))
+            errs.append(abs(approx - exact))
+        assert errs[-1] <= errs[0] + 1e-12
+        assert errs[-1] < 1e-2 * max(abs(exact), 1e-3)
+
+
+def test_prf_unbiased_prop2():
+    d, s_node = 8, 0.6
+    kq, kk = jax.random.split(jax.random.PRNGKey(3))
+    q = ref.normalize_rows(jax.random.normal(kq, (1, d)))
+    k = ref.normalize_rows(jax.random.normal(kk, (1, d)))
+    want = float(jnp.exp(2 * s_node * (q @ k.T))[0, 0])
+    ests = []
+    for seed in range(300):
+        omega = jax.random.normal(jax.random.PRNGKey(100 + seed), (16, d))
+        fq = ref.prf_features(q, omega, jnp.float32(s_node))
+        fk = ref.prf_features(k, omega, jnp.float32(s_node))
+        ests.append(float((fq @ fk.T)[0, 0]))
+    mean, se = np.mean(ests), np.std(ests) / np.sqrt(len(ests))
+    assert abs(mean - want) < 4 * se + 1e-3, (mean, want, se)
+
+
+def test_linear_attention_equals_masked_quadratic():
+    key = jax.random.PRNGKey(4)
+    l, m, dv = 33, 12, 5
+    phi_q = jnp.abs(jax.random.normal(key, (l, m)))
+    phi_k = jnp.abs(jax.random.normal(jax.random.PRNGKey(5), (l, m)))
+    v = jax.random.normal(jax.random.PRNGKey(6), (l, dv))
+    scores = phi_q @ phi_k.T
+    for causal in (False, True):
+        want = ref.quadratic_attention(scores, v, causal)
+        got = ref.linear_attention(phi_q, phi_k, v, causal)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_causal_chunking_invariant_to_chunk_size():
+    key = jax.random.PRNGKey(7)
+    l, m, dv = 100, 9, 4
+    phi_q = jnp.abs(jax.random.normal(key, (l, m)))
+    phi_k = jnp.abs(jax.random.normal(jax.random.PRNGKey(8), (l, m)))
+    v = jax.random.normal(jax.random.PRNGKey(9), (l, dv))
+    base = ref.linear_attention_causal(phi_q, phi_k, v, chunk=100)
+    for chunk in (1, 7, 32, 64, 128):
+        got = ref.linear_attention_causal(phi_q, phi_k, v, chunk=chunk)
+        np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-5)
+
+
+def test_softmax_path_equals_jax_softmax():
+    key = jax.random.PRNGKey(10)
+    q = jax.random.normal(key, (6, 8))
+    k = jax.random.normal(jax.random.PRNGKey(11), (6, 8))
+    v = jax.random.normal(jax.random.PRNGKey(12), (6, 8))
+    mech = ref.make_mech_params("standard", key, 8)
+    got = ref.attention(mech, q, k, v, causal=False)
+    want = jax.nn.softmax(q @ k.T / np.sqrt(8), axis=-1) @ v
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ref.MECHANISMS)
+def test_all_mechanisms_finite_and_causal(name):
+    key = jax.random.PRNGKey(13)
+    l, d = 24, 16
+    mech = ref.make_mech_params(name, key, d, horizon=l)
+    q = jax.random.normal(jax.random.PRNGKey(14), (l, d))
+    k = jax.random.normal(jax.random.PRNGKey(15), (l, d))
+    v = jax.random.normal(jax.random.PRNGKey(16), (l, d))
+    y = ref.attention(mech, q, k, v, causal=True)
+    assert y.shape == (l, d)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # causality: changing the last value row must not affect earlier rows
+    v2 = v.at[-1].add(100.0)
+    y2 = ref.attention(mech, q, k, v2, causal=True)
+    np.testing.assert_allclose(y[:-1], y2[:-1], rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("name", ref.MECHANISMS)
+def test_batched_heads_match_loop(name):
+    """[B,H,L,d] vectorization must equal per-head loops."""
+    key = jax.random.PRNGKey(17)
+    b, h, l, d = 2, 3, 10, 8
+    mech = ref.make_mech_params(name, key, d, horizon=l)
+    qs = jax.random.normal(jax.random.PRNGKey(18), (b, h, l, d))
+    ks = jax.random.normal(jax.random.PRNGKey(19), (b, h, l, d))
+    vs = jax.random.normal(jax.random.PRNGKey(20), (b, h, l, d))
+    batched = ref.attention(mech, qs, ks, vs, causal=True)
+    for bi in range(b):
+        for hi in range(h):
+            single = ref.attention(mech, qs[bi, hi], ks[bi, hi], vs[bi, hi], causal=True)
+            np.testing.assert_allclose(batched[bi, hi], single, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l=st.integers(1, 80),
+    d=st.integers(2, 32),
+    n_poly=st.integers(1, 16),
+    d_prf=st.integers(1, 24),
+    r=st.integers(1, 5),
+)
+def test_slay_features_shapes_positive_hypothesis(l, d, n_poly, d_prf, r):
+    """Hypothesis sweep: Ψ is finite, nonnegative, right-shaped, and
+    scale-invariant for arbitrary geometry."""
+    params = ref.make_slay_params(jax.random.PRNGKey(l * 31 + d), d, n_poly, d_prf, r)
+    x = jax.random.normal(jax.random.PRNGKey(l + 7), (l, d)) * 3.0
+    f = ref.slay_features(x, params)
+    assert f.shape == (l, r * n_poly * d_prf)
+    assert bool(jnp.all(jnp.isfinite(f)))
+    assert bool(jnp.all(f >= 0.0))
+    f_scaled = ref.slay_features(4.2 * x, params)
+    np.testing.assert_allclose(f, f_scaled, rtol=2e-4, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.integers(2, 60),
+    dv=st.integers(1, 16),
+    causal=st.booleans(),
+)
+def test_slay_attention_outputs_bounded_hypothesis(l, dv, causal):
+    """Outputs are convex combinations of V rows (positive features +
+    kernel normalization), so per-column bounds of V must contain Y up to
+    the δ stabilizer slack."""
+    d = 8
+    params = ref.make_slay_params(jax.random.PRNGKey(99), d)
+    q = jax.random.normal(jax.random.PRNGKey(l), (l, d))
+    k = jax.random.normal(jax.random.PRNGKey(l + 1), (l, d))
+    v = jax.random.normal(jax.random.PRNGKey(l + 2), (l, dv))
+    phi_q = ref.slay_features(q, params)
+    phi_k = ref.slay_features(k, params)
+    y = ref.linear_attention(phi_q, phi_k, v, causal)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    lo = jnp.min(v, axis=0) - 0.35 * (jnp.max(v, axis=0) - jnp.min(v, axis=0)) - 1e-3
+    hi = jnp.max(v, axis=0) + 0.35 * (jnp.max(v, axis=0) - jnp.min(v, axis=0)) + 1e-3
+    assert bool(jnp.all(y >= lo[None, :])), "output below convex range"
+    assert bool(jnp.all(y <= hi[None, :])), "output above convex range"
+
+
+def test_cosformer_position_dependence():
+    d, l = 8, 16
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(21), (l, d)))
+    f0 = ref.cosformer_features(x, 0, 64)
+    f5 = ref.cosformer_features(x, 5, 64)
+    assert not np.allclose(f0, f5)
+    assert f0.shape == (l, 2 * d)

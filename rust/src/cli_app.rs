@@ -1,0 +1,288 @@
+//! The `slay` command-line interface — leader entrypoint of the stack.
+//!
+//! ```text
+//! slay serve     [--mechanism slay] [--workers N] [--seqs N] [--chunks N]
+//! slay train     [--preset tiny] [--mechanism slay] [--steps N] [--ckpt path]
+//! slay task      [--task copy] [--mechanism slay] [--steps N]
+//! slay artifacts                      # list the AOT manifest
+//! slay explore   [--what response|quadrature|denominator]
+//! ```
+
+use crate::config;
+use crate::coordinator::request::AttendChunk;
+use crate::coordinator::Coordinator;
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::tasks::{Task, TaskGen};
+use crate::math::linalg::Mat;
+use crate::math::rng::Rng;
+use crate::runtime::Registry;
+use crate::train::Trainer;
+use crate::util::cli::Args;
+
+pub fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(&argv)?;
+    match args.subcommand.as_str() {
+        "serve" => serve(&args),
+        "train" => train(&args),
+        "task" => task(&args),
+        "artifacts" => artifacts(&args),
+        "explore" => explore(&args),
+        "" | "help" => {
+            print_help();
+            Ok(())
+        }
+        other => {
+            print_help();
+            anyhow::bail!("unknown subcommand '{other}'")
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "slay — Spherical Linearized Attention with Yat-Kernel (paper reproduction)\n\
+         \n\
+         USAGE: slay <subcommand> [flags]\n\
+         \n\
+         subcommands:\n\
+           serve      run the serving coordinator on a synthetic workload\n\
+           train      train an LM preset via the AOT train_step artifacts\n\
+           task       train + eval one synthetic task (Table 3/8)\n\
+           artifacts  list the AOT artifact manifest\n\
+           explore    print kernel curves (Figs. 4-6) to stdout\n\
+         \n\
+         common flags: --mechanism slay|standard|yat|yat_spherical|favor|elu_linear|cosformer\n\
+         slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
+    );
+}
+
+fn serve(args: &Args) -> anyhow::Result<()> {
+    args.validate(&[
+        "mechanism", "workers", "max-batch", "max-wait-us", "queue-cap", "d-head", "d-v",
+        "seqs", "chunks", "chunk-len", "eps", "r-nodes", "n-poly", "d-prf", "poly",
+        "fusion", "seed", "listen", "duration-s",
+    ])?;
+    let cfg = config::coordinator_from_args(args)?;
+
+    // `--listen addr:port` exposes the coordinator over the JSON-lines TCP
+    // protocol instead of running the synthetic workload.
+    if let Some(addr) = args.get("listen") {
+        let duration = args.u64_or("duration-s", 0)?;
+        let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
+        let server = crate::coordinator::server::Server::start(addr, coord)?;
+        println!("listening on {} (JSON-lines; see coordinator::server docs)", server.addr);
+        if duration == 0 {
+            loop {
+                std::thread::sleep(std::time::Duration::from_secs(3600));
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_secs(duration));
+        server.shutdown();
+        return Ok(());
+    }
+    let n_seqs = args.usize_or("seqs", 16)?;
+    let n_chunks = args.usize_or("chunks", 32)?;
+    let chunk_len = args.usize_or("chunk-len", 64)?;
+    let d_head = cfg.d_head;
+    let d_v = cfg.d_v;
+
+    let coord = Coordinator::start(cfg)?;
+    let t0 = std::time::Instant::now();
+    let mut rng = Rng::new(7);
+    let seqs: Vec<_> = (0..n_seqs)
+        .map(|_| coord.create_sequence().unwrap())
+        .collect();
+    let mut done = 0usize;
+    for round in 0..n_chunks {
+        for &seq in &seqs {
+            let n = if round == 0 { chunk_len } else { 1 }; // prefill then decode
+            let chunk = AttendChunk {
+                seq,
+                q: Mat::randn(n, d_head, &mut rng),
+                k: Mat::randn(n, d_head, &mut rng),
+                v: Mat::randn(n, d_v, &mut rng),
+            };
+            coord.attend(chunk)?;
+            done += n;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let m = coord.metrics();
+    println!("served {done} tokens across {n_seqs} sequences in {dt:.3}s");
+    println!("throughput: {:.0} tok/s", done as f64 / dt);
+    println!("{}", m.to_json().to_pretty());
+    coord.shutdown()
+}
+
+fn train(args: &Args) -> anyhow::Result<()> {
+    args.validate(&["preset", "mechanism", "steps", "ckpt", "seed", "log-every"])?;
+    let preset = args.get_or("preset", "tiny");
+    let mech = args.get_or("mechanism", "slay");
+    let steps = args.usize_or("steps", 100)?;
+    let seed = args.u64_or("seed", 0)? as u32;
+    let log_every = args.usize_or("log-every", 10)?;
+
+    let reg = Registry::open_default()?;
+    let mut tr = Trainer::new(
+        &reg,
+        &format!("train_step_{preset}_{mech}"),
+        &format!("init_{preset}"),
+        seed,
+    )?;
+    let corpus = Corpus::new(
+        CorpusConfig { vocab: tr.shapes.vocab, ..Default::default() },
+        42,
+    );
+    let mut rng = Rng::new(seed as u64 + 1);
+    println!(
+        "training {mech}/{preset}: batch={} seq={} vocab={}",
+        tr.shapes.batch, tr.shapes.seq_len, tr.shapes.vocab
+    );
+    let t0 = std::time::Instant::now();
+    for step in 1..=steps {
+        let (tokens, targets) = corpus.lm_batch(tr.shapes.batch, tr.shapes.seq_len, &mut rng);
+        let loss = tr.step(&tokens, &targets)?;
+        if step % log_every == 0 || step == steps {
+            println!(
+                "step {step:>5}  loss {loss:.4}  ppl {:.2}  ({:.1} tok/s)",
+                (loss as f64).exp(),
+                (step * tr.shapes.batch * tr.shapes.seq_len) as f64
+                    / t0.elapsed().as_secs_f64()
+            );
+        }
+    }
+    if let Some(path) = args.get("ckpt") {
+        tr.save(std::path::Path::new(path))?;
+        println!("checkpoint saved to {path}");
+    }
+    Ok(())
+}
+
+fn task(args: &Args) -> anyhow::Result<()> {
+    args.validate(&["task", "mechanism", "steps", "seed"])?;
+    let task_name = args.get_or("task", "copy");
+    let mech = args.get_or("mechanism", "slay");
+    let steps = args.usize_or("steps", 200)?;
+    let seed = args.u64_or("seed", 0)?;
+    let task = Task::from_name(&task_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown task '{task_name}'"))?;
+
+    let reg = Registry::open_default()?;
+    let (loss, acc) = train_eval_task(&reg, task, &mech, steps, seed)?;
+    println!("task={task_name} mechanism={mech}: final loss {loss:.4}, answer accuracy {acc:.3}");
+    Ok(())
+}
+
+/// Train one synthetic task and return (final loss, answer accuracy) —
+/// shared by the CLI, Table 3/8 bench and the synthetic_tasks example.
+pub fn train_eval_task(
+    reg: &Registry,
+    task: Task,
+    mech: &str,
+    steps: usize,
+    seed: u64,
+) -> anyhow::Result<(f32, f64)> {
+    let mut tr = Trainer::new(
+        reg,
+        &format!("train_step_task_{mech}"),
+        "init_task",
+        seed as u32,
+    )?;
+    let gen = TaskGen::new(tr.shapes.vocab, tr.shapes.seq_len);
+    let mut rng = Rng::new(seed * 7919 + 13);
+    let mut loss = f32::NAN;
+    for _ in 0..steps {
+        let (tokens, targets) = gen.batch(task, tr.shapes.batch, &mut rng);
+        loss = tr.step(&tokens, &targets)?;
+    }
+    // eval: accuracy on fresh batches via the lm_fwd artifact
+    let fwd = reg.get(&format!("lm_fwd_task_{mech}"))?;
+    let mut accs = Vec::new();
+    for _ in 0..4 {
+        let (tokens, targets) = gen.batch(task, tr.shapes.batch, &mut rng);
+        let out = tr.run_with_params(&fwd, &[crate::runtime::executor::TensorData::I32(tokens)])?;
+        let logits = out[0].as_f32()?;
+        accs.push(crate::eval::token_accuracy(logits, tr.shapes.vocab, &targets));
+    }
+    Ok((loss, crate::math::stats::mean(&accs)))
+}
+
+fn artifacts(_args: &Args) -> anyhow::Result<()> {
+    let reg = Registry::open_default()?;
+    println!("{:<32} {:<14} {:>7} {:>8}", "name", "kind", "inputs", "outputs");
+    for (name, e) in &reg.manifest.artifacts {
+        println!(
+            "{:<32} {:<14} {:>7} {:>8}",
+            name,
+            e.kind,
+            e.inputs.len(),
+            e.outputs.len()
+        );
+    }
+    Ok(())
+}
+
+fn explore(args: &Args) -> anyhow::Result<()> {
+    args.validate(&["what", "eps", "r-nodes"])?;
+    let what = args.get_or("what", "response");
+    let eps = args.f64_or("eps", 1e-3)? as f32;
+    match what.as_str() {
+        "response" => {
+            println!("x,e_sph,softmax_exp");
+            for i in 0..=40 {
+                let x = -1.0 + 2.0 * i as f32 / 40.0;
+                println!(
+                    "{x:.3},{:.5},{:.5}",
+                    crate::kernels::yat::e_sph(x, eps),
+                    (x / (32f32).sqrt()).exp()
+                );
+            }
+        }
+        "quadrature" => {
+            let r = args.usize_or("r-nodes", 8)?;
+            let q = crate::math::quadrature::GaussLaguerre::scaled(r, 2.0 + eps as f64);
+            println!("node,s_r,w_r");
+            for i in 0..r {
+                println!("{i},{:.6},{:.6}", q.nodes[i], q.weights[i]);
+            }
+        }
+        "denominator" => {
+            let mut rng = Rng::new(1);
+            let q = Mat::randn(64, 16, &mut rng);
+            let k = Mat::randn(64, 16, &mut rng);
+            for name in ["slay", "favor", "elu_linear"] {
+                let m = crate::kernels::config::Mechanism::from_name(name)?;
+                let op = crate::kernels::Attention::build(&m, 16, 64)?;
+                let dens = op.denominators(&q, &k, false);
+                let min = dens.iter().cloned().fold(f32::INFINITY, f32::min);
+                println!("{name}: min denominator {min:.6}");
+            }
+        }
+        other => anyhow::bail!("unknown --what '{other}'"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn help_runs() {
+        run(vec![]).unwrap();
+        run(vec!["help".into()]).unwrap();
+    }
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(run(vec!["bogus".into()]).is_err());
+    }
+
+    #[test]
+    fn explore_response_runs_without_artifacts() {
+        run(vec!["explore".into(), "--what".into(), "response".into()]).unwrap();
+        run(vec!["explore".into(), "--what".into(), "quadrature".into()]).unwrap();
+        run(vec!["explore".into(), "--what".into(), "denominator".into()]).unwrap();
+        assert!(run(vec!["explore".into(), "--what".into(), "bogus".into()]).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! Run-level configuration: JSON config files / CLI flags → typed configs
+//! for the coordinator, benches and training driver. One place where
+//! defaults, file overrides and flag overrides merge (flags win).
+
+use crate::coordinator::CoordinatorConfig;
+use crate::kernels::config::{Fusion, Mechanism, PolyMethod, SlayConfig};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use std::time::Duration;
+
+/// Build a [`SlayConfig`] from flags (`--eps`, `--r-nodes`, `--n-poly`,
+/// `--d-prf`, `--poly`, `--fusion`, `--seed`).
+pub fn slay_config_from_args(args: &Args) -> anyhow::Result<SlayConfig> {
+    let mut cfg = SlayConfig::default();
+    cfg.eps = args.f64_or("eps", cfg.eps)?;
+    cfg.r_nodes = args.usize_or("r-nodes", cfg.r_nodes)?;
+    cfg.n_poly = args.usize_or("n-poly", cfg.n_poly)?;
+    cfg.d_prf = args.usize_or("d-prf", cfg.d_prf)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    if let Some(p) = args.get("poly") {
+        cfg.poly = match p {
+            "exact" => PolyMethod::Exact,
+            "anchor" => PolyMethod::Anchor,
+            "nystrom" => PolyMethod::Nystrom,
+            "tensorsketch" => PolyMethod::TensorSketch,
+            "random_maclaurin" | "rm" => PolyMethod::RandomMaclaurin,
+            other => anyhow::bail!("unknown --poly '{other}'"),
+        };
+    }
+    if let Some(f) = args.get("fusion") {
+        cfg.fusion = match f {
+            "explicit" => Fusion::Explicit,
+            "hadamard" => Fusion::Hadamard,
+            "laplace_only" => Fusion::LaplaceOnly,
+            other => {
+                if let Some(dt) = other.strip_prefix("sketch:") {
+                    Fusion::Sketch { d_t: dt.parse()? }
+                } else {
+                    anyhow::bail!("unknown --fusion '{other}'")
+                }
+            }
+        };
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Mechanism from `--mechanism` (+ SLAY flags when applicable).
+pub fn mechanism_from_args(args: &Args) -> anyhow::Result<Mechanism> {
+    let name = args.get_or("mechanism", "slay");
+    if name == "slay" {
+        Ok(Mechanism::Slay(slay_config_from_args(args)?))
+    } else {
+        Mechanism::from_name(&name)
+    }
+}
+
+/// CoordinatorConfig from flags (`--workers`, `--max-batch`,
+/// `--max-wait-us`, `--queue-cap`, `--d-head`, `--d-v`).
+pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
+    let mut cfg = CoordinatorConfig {
+        mechanism: mechanism_from_args(args)?,
+        ..CoordinatorConfig::default()
+    };
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.max_batch = args.usize_or("max-batch", cfg.max_batch)?;
+    cfg.max_wait = Duration::from_micros(args.u64_or(
+        "max-wait-us",
+        cfg.max_wait.as_micros() as u64,
+    )?);
+    cfg.queue_cap = args.usize_or("queue-cap", cfg.queue_cap)?;
+    cfg.d_head = args.usize_or("d-head", cfg.d_head)?;
+    cfg.d_v = args.usize_or("d-v", cfg.d_v)?;
+    Ok(cfg)
+}
+
+/// Serialize a coordinator config for logs/results.
+pub fn coordinator_to_json(cfg: &CoordinatorConfig) -> Json {
+    Json::obj(vec![
+        ("mechanism", Json::Str(cfg.mechanism.name().to_string())),
+        ("d_head", Json::Num(cfg.d_head as f64)),
+        ("d_v", Json::Num(cfg.d_v as f64)),
+        ("workers", Json::Num(cfg.workers as f64)),
+        ("max_batch", Json::Num(cfg.max_batch as f64)),
+        ("max_wait_us", Json::Num(cfg.max_wait.as_micros() as f64)),
+        ("queue_cap", Json::Num(cfg.queue_cap as f64)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn slay_flags_override_defaults() {
+        let a = parse(&["x", "--eps", "0.01", "--r-nodes", "5", "--poly", "exact"]);
+        let c = slay_config_from_args(&a).unwrap();
+        assert_eq!(c.eps, 0.01);
+        assert_eq!(c.r_nodes, 5);
+        assert_eq!(c.poly, PolyMethod::Exact);
+    }
+
+    #[test]
+    fn sketch_fusion_parses_dim() {
+        let a = parse(&["x", "--fusion", "sketch:64"]);
+        let c = slay_config_from_args(&a).unwrap();
+        assert_eq!(c.fusion, Fusion::Sketch { d_t: 64 });
+        assert!(slay_config_from_args(&parse(&["x", "--fusion", "sketch:63"])).is_err());
+    }
+
+    #[test]
+    fn mechanism_dispatch() {
+        assert_eq!(
+            mechanism_from_args(&parse(&["x", "--mechanism", "favor"]))
+                .unwrap()
+                .name(),
+            "favor"
+        );
+        assert!(matches!(
+            mechanism_from_args(&parse(&["x"])).unwrap(),
+            Mechanism::Slay(_)
+        ));
+        assert!(mechanism_from_args(&parse(&["x", "--mechanism", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn coordinator_flags() {
+        let a = parse(&["x", "--workers", "2", "--max-batch", "8", "--max-wait-us", "500"]);
+        let c = coordinator_from_args(&a).unwrap();
+        assert_eq!(c.workers, 2);
+        assert_eq!(c.max_batch, 8);
+        assert_eq!(c.max_wait, Duration::from_micros(500));
+        let j = coordinator_to_json(&c);
+        assert_eq!(j.get("workers").unwrap().as_usize(), Some(2));
+    }
+}

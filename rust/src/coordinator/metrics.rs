@@ -1,0 +1,145 @@
+//! Coordinator metrics: lock-free counters plus a mutex-guarded latency
+//! reservoir. Cheap enough for the per-chunk hot path; snapshots feed the
+//! CLI, the serving example and the Fig. 2-style throughput series.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub rejected: AtomicU64,
+    pub tokens_in: AtomicU64,
+    pub decode_chunks: AtomicU64,
+    pub prefill_chunks: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    /// Latency reservoir (ms) — bounded, replace-random once full.
+    latencies: Mutex<Vec<f64>>,
+}
+
+const RESERVOIR: usize = 8192;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_latency(&self, d: Duration) {
+        let ms = d.as_secs_f64() * 1e3;
+        let mut r = self.latencies.lock().unwrap();
+        if r.len() < RESERVOIR {
+            r.push(ms);
+        } else {
+            // cheap deterministic replacement
+            let idx = (self.completed.load(Ordering::Relaxed) as usize) % RESERVOIR;
+            r[idx] = ms;
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let lat = self.latencies.lock().unwrap().clone();
+        let (p50, p95, mean) = if lat.is_empty() {
+            (0.0, 0.0, 0.0)
+        } else {
+            (
+                crate::math::stats::percentile(&lat, 50.0),
+                crate::math::stats::percentile(&lat, 95.0),
+                crate::math::stats::mean(&lat),
+            )
+        };
+        Snapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            tokens_in: self.tokens_in.load(Ordering::Relaxed),
+            decode_chunks: self.decode_chunks.load(Ordering::Relaxed),
+            prefill_chunks: self.prefill_chunks.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            latency_p50_ms: p50,
+            latency_p95_ms: p95,
+            latency_mean_ms: mean,
+        }
+    }
+}
+
+/// Point-in-time metric values.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_in: u64,
+    pub decode_chunks: u64,
+    pub prefill_chunks: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub latency_p50_ms: f64,
+    pub latency_p95_ms: f64,
+    pub latency_mean_ms: f64,
+}
+
+impl Snapshot {
+    /// Mean items per formed batch (batching effectiveness).
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("tokens_in", Json::Num(self.tokens_in as f64)),
+            ("decode_chunks", Json::Num(self.decode_chunks as f64)),
+            ("prefill_chunks", Json::Num(self.prefill_chunks as f64)),
+            ("batches", Json::Num(self.batches as f64)),
+            ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
+            ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
+            ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_latency_snapshot() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(3, Ordering::Relaxed);
+        m.completed.fetch_add(2, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(10));
+        m.record_latency(Duration::from_millis(20));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 3);
+        assert_eq!(s.completed, 2);
+        assert!(s.latency_p50_ms >= 10.0 && s.latency_p50_ms <= 20.0);
+        assert!(s.latency_mean_ms > 0.0);
+    }
+
+    #[test]
+    fn batch_size_math() {
+        let m = Metrics::new();
+        m.batches.fetch_add(2, Ordering::Relaxed);
+        m.batched_items.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(m.snapshot().mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn json_serializes() {
+        let m = Metrics::new();
+        let j = m.snapshot().to_json();
+        assert!(j.get("completed").is_some());
+    }
+}

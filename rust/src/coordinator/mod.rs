@@ -1,0 +1,231 @@
+//! L3 — the serving coordinator.
+//!
+//! Architecture (vLLM-router-shaped, adapted to linear attention):
+//!
+//! ```text
+//!  clients ──submit──▶ Coordinator ──hash(seq)──▶ shard queue ──▶ worker 0
+//!                        │                            …              …
+//!                        └────────metrics◀────────────┴──────────▶ worker W-1
+//! ```
+//!
+//! * **Router**: sequences are hash-sharded across workers so each
+//!   sequence's streaming state `(S, z)` is owned by exactly one thread —
+//!   no locks on the hot path.
+//! * **Dynamic batcher**: each worker gathers up to `max_batch` chunks or
+//!   `max_wait`, computes features for the whole batch in one matmul, then
+//!   streams chunks through their per-sequence states (decode-first).
+//! * **Backpressure**: bounded `sync_channel` queues; a full queue rejects
+//!   with [`request::ServeError::Backpressure`] instead of queueing
+//!   unboundedly.
+//! * **State manager**: [`state::SequenceStore`] — constant bytes per
+//!   sequence (the linear-attention KV-cache analog), LRU idle eviction.
+
+pub mod metrics;
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod state;
+pub mod worker;
+
+use crate::coordinator::metrics::{Metrics, Snapshot};
+use crate::coordinator::request::{AttendChunk, AttendResult, SeqId, ServeError, WorkItem};
+use crate::coordinator::scheduler::BatchPolicy;
+use crate::coordinator::state::StoreConfig;
+use crate::kernels::config::Mechanism;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+/// Coordinator configuration.
+#[derive(Clone, Debug)]
+pub struct CoordinatorConfig {
+    pub mechanism: Mechanism,
+    pub d_head: usize,
+    pub d_v: usize,
+    /// cosformer positional horizon / max expected context.
+    pub horizon: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    /// Per-worker bounded queue capacity (backpressure threshold).
+    pub queue_cap: usize,
+    pub store: StoreConfig,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            mechanism: Mechanism::Slay(crate::kernels::config::SlayConfig::default()),
+            d_head: 32,
+            d_v: 32,
+            horizon: 131_072,
+            workers: 4,
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+            store: StoreConfig::default(),
+        }
+    }
+}
+
+/// The running coordinator. Dropping it shuts the workers down.
+pub struct Coordinator {
+    cfg: CoordinatorConfig,
+    senders: Vec<mpsc::SyncSender<worker::Msg>>,
+    handles: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+    metrics: Arc<Metrics>,
+    inflight: Arc<AtomicU64>,
+    next_seq: AtomicU64,
+}
+
+impl Coordinator {
+    /// Spawn the worker topology.
+    pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
+        anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+        anyhow::ensure!(
+            cfg.mechanism.is_linear(),
+            "serving requires a linear mechanism (got {})",
+            cfg.mechanism.name()
+        );
+        let metrics = Arc::new(Metrics::new());
+        let inflight = Arc::new(AtomicU64::new(0));
+        let mut senders = Vec::new();
+        let mut handles = Vec::new();
+        for w in 0..cfg.workers {
+            let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+            let wcfg = worker::WorkerConfig {
+                mechanism: cfg.mechanism.clone(),
+                d_head: cfg.d_head,
+                d_v: cfg.d_v,
+                horizon: cfg.horizon,
+                policy: BatchPolicy { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
+                store: cfg.store.clone(),
+            };
+            let m = metrics.clone();
+            let inf = inflight.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("slay-worker-{w}"))
+                    .spawn(move || worker::run(wcfg, rx, m, inf))?,
+            );
+            senders.push(tx);
+        }
+        crate::log_info!(
+            "coordinator up: {} workers, mechanism={}, d_head={}",
+            cfg.workers,
+            cfg.mechanism.name(),
+            cfg.d_head
+        );
+        Ok(Coordinator {
+            cfg,
+            senders,
+            handles,
+            metrics,
+            inflight,
+            next_seq: AtomicU64::new(1),
+        })
+    }
+
+    fn shard(&self, seq: SeqId) -> usize {
+        // splitmix-style hash for uniform sharding
+        let mut z = seq.0.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        (z >> 33) as usize % self.senders.len()
+    }
+
+    /// Admit a new sequence; returns its id.
+    pub fn create_sequence(&self) -> anyhow::Result<SeqId> {
+        let id = SeqId(self.next_seq.fetch_add(1, Ordering::Relaxed));
+        let (tx, rx) = mpsc::channel();
+        self.senders[self.shard(id)]
+            .send(worker::Msg::Create(id, tx))
+            .map_err(|_| ServeError::Shutdown)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)??;
+        Ok(id)
+    }
+
+    /// Release a finished sequence's state.
+    pub fn release_sequence(&self, id: SeqId) -> anyhow::Result<bool> {
+        let (tx, rx) = mpsc::channel();
+        self.senders[self.shard(id)]
+            .send(worker::Msg::Release(id, tx))
+            .map_err(|_| ServeError::Shutdown)?;
+        Ok(rx.recv().map_err(|_| ServeError::Shutdown)?)
+    }
+
+    /// Tokens a sequence has absorbed.
+    pub fn sequence_len(&self, id: SeqId) -> anyhow::Result<Option<usize>> {
+        let (tx, rx) = mpsc::channel();
+        self.senders[self.shard(id)]
+            .send(worker::Msg::Len(id, tx))
+            .map_err(|_| ServeError::Shutdown)?;
+        Ok(rx.recv().map_err(|_| ServeError::Shutdown)?)
+    }
+
+    /// Non-blocking submit; the returned receiver yields the result.
+    /// Fails fast with [`ServeError::Backpressure`] when the shard is full.
+    pub fn submit(
+        &self,
+        chunk: AttendChunk,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<AttendResult>>> {
+        chunk.validate(self.cfg.d_head)?;
+        let shard = self.shard(chunk.seq);
+        let (tx, rx) = mpsc::channel();
+        let item = WorkItem { chunk, enqueued: std::time::Instant::now(), reply: tx };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        match self.senders[shard].try_send(worker::Msg::Work(item)) {
+            Ok(()) => Ok(rx),
+            Err(mpsc::TrySendError::Full(_)) => {
+                self.inflight.fetch_sub(1, Ordering::Relaxed);
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Backpressure { depth: self.cfg.queue_cap }.into())
+            }
+            Err(mpsc::TrySendError::Disconnected(_)) => {
+                self.inflight.fetch_sub(1, Ordering::Relaxed);
+                Err(ServeError::Shutdown.into())
+            }
+        }
+    }
+
+    /// Blocking convenience: submit and wait for the result.
+    pub fn attend(&self, chunk: AttendChunk) -> anyhow::Result<AttendResult> {
+        let rx = self.submit(chunk)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)?
+    }
+
+    /// Current in-flight work items (queue depth proxy).
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    pub fn metrics(&self) -> Snapshot {
+        self.metrics.snapshot()
+    }
+
+    pub fn config(&self) -> &CoordinatorConfig {
+        &self.cfg
+    }
+
+    /// Graceful shutdown: drain queues, join workers.
+    pub fn shutdown(mut self) -> anyhow::Result<()> {
+        for tx in &self.senders {
+            let _ = tx.send(worker::Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for tx in &self.senders {
+            let _ = tx.send(worker::Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}

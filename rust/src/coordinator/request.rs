@@ -1,0 +1,121 @@
+//! Request/response types for the attention-serving coordinator.
+//!
+//! The service model mirrors what linear attention makes possible
+//! (§3.2/Fig. 2): each *sequence* owns a constant-size streaming state
+//! `(S, z)`; clients stream token chunks and receive attention outputs.
+//! Prefill = large chunk, decode = single-token chunk — the scheduler
+//! distinguishes them the way vLLM-style servers do.
+
+use crate::math::linalg::Mat;
+use std::sync::mpsc;
+
+/// Sequence identifier handed out at `create_sequence`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct SeqId(pub u64);
+
+/// One unit of work: attend a chunk of (Q, K, V) rows for a sequence,
+/// absorbing the keys/values into its streaming state.
+#[derive(Debug)]
+pub struct AttendChunk {
+    pub seq: SeqId,
+    /// Query rows `[n, d_head]`.
+    pub q: Mat,
+    /// Key rows `[n, d_head]`.
+    pub k: Mat,
+    /// Value rows `[n, d_v]`.
+    pub v: Mat,
+}
+
+impl AttendChunk {
+    pub fn n_tokens(&self) -> usize {
+        self.q.rows
+    }
+
+    /// Decode = single token; prefill = many (scheduler priority signal).
+    pub fn is_decode(&self) -> bool {
+        self.q.rows == 1
+    }
+
+    pub fn validate(&self, d_head: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(self.q.cols == d_head, "q dim {} != d_head {d_head}", self.q.cols);
+        anyhow::ensure!(self.k.cols == d_head, "k dim {} != d_head {d_head}", self.k.cols);
+        anyhow::ensure!(
+            self.q.rows == self.k.rows && self.k.rows == self.v.rows,
+            "row mismatch q={} k={} v={}",
+            self.q.rows,
+            self.k.rows,
+            self.v.rows
+        );
+        anyhow::ensure!(self.q.rows > 0, "empty chunk");
+        Ok(())
+    }
+}
+
+/// Completed work unit.
+#[derive(Debug)]
+pub struct AttendResult {
+    pub seq: SeqId,
+    /// Attention outputs `[n, d_v]` for the chunk's query rows.
+    pub y: Mat,
+    /// Total tokens absorbed by the sequence after this chunk.
+    pub seq_len: usize,
+    /// Queue + compute latency.
+    pub latency: std::time::Duration,
+}
+
+/// What the router moves around internally.
+pub struct WorkItem {
+    pub chunk: AttendChunk,
+    pub enqueued: std::time::Instant,
+    pub reply: mpsc::Sender<anyhow::Result<AttendResult>>,
+}
+
+/// Errors surfaced to clients.
+#[derive(Debug, thiserror::Error)]
+pub enum ServeError {
+    #[error("queue full: {depth} items (backpressure)")]
+    Backpressure { depth: usize },
+    #[error("unknown sequence {0:?}")]
+    UnknownSequence(SeqId),
+    #[error("coordinator shutting down")]
+    Shutdown,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn validation_catches_mismatches() {
+        let mut rng = Rng::new(1);
+        let ok = AttendChunk {
+            seq: SeqId(1),
+            q: Mat::randn(4, 8, &mut rng),
+            k: Mat::randn(4, 8, &mut rng),
+            v: Mat::randn(4, 16, &mut rng),
+        };
+        assert!(ok.validate(8).is_ok());
+        assert!(ok.validate(16).is_err());
+        let bad_rows = AttendChunk {
+            seq: SeqId(1),
+            q: Mat::randn(4, 8, &mut rng),
+            k: Mat::randn(3, 8, &mut rng),
+            v: Mat::randn(4, 16, &mut rng),
+        };
+        assert!(bad_rows.validate(8).is_err());
+    }
+
+    #[test]
+    fn decode_detection() {
+        let mut rng = Rng::new(2);
+        let decode = AttendChunk {
+            seq: SeqId(1),
+            q: Mat::randn(1, 8, &mut rng),
+            k: Mat::randn(1, 8, &mut rng),
+            v: Mat::randn(1, 8, &mut rng),
+        };
+        assert!(decode.is_decode());
+        assert_eq!(decode.n_tokens(), 1);
+    }
+}

@@ -1,0 +1,97 @@
+//! Batch-formation policy: when to close a dynamic batch and in which
+//! order to serve its items.
+//!
+//! Policy (vLLM-router-flavored, adapted to streaming linear attention):
+//! * close a batch when `max_batch` items are gathered **or** `max_wait`
+//!   has elapsed since the first item arrived;
+//! * inside a batch, decode chunks (single token, latency-critical) run
+//!   before prefill chunks (throughput work), FCFS within each class.
+
+use crate::coordinator::request::WorkItem;
+use std::time::{Duration, Instant};
+
+/// Dynamic batching knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+impl BatchPolicy {
+    /// Should the batch close now?
+    pub fn should_close(&self, first_arrival: Instant, count: usize, now: Instant) -> bool {
+        count >= self.max_batch || now.duration_since(first_arrival) >= self.max_wait
+    }
+
+    /// Remaining wait budget (for timed `recv`).
+    pub fn remaining(&self, first_arrival: Instant, now: Instant) -> Duration {
+        self.max_wait
+            .saturating_sub(now.duration_since(first_arrival))
+    }
+}
+
+/// Order items decode-first, FCFS within class. Stable sort keeps arrival
+/// order inside each class.
+pub fn order_batch(items: &mut [WorkItem]) {
+    items.sort_by_key(|w| (!w.chunk.is_decode(), w.enqueued));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::{AttendChunk, SeqId};
+    use crate::math::linalg::Mat;
+    use crate::math::rng::Rng;
+    use std::sync::mpsc;
+
+    fn item(seq: u64, n: usize, t_off_ms: u64) -> WorkItem {
+        let mut rng = Rng::new(seq);
+        let (tx, _rx) = mpsc::channel();
+        WorkItem {
+            chunk: AttendChunk {
+                seq: SeqId(seq),
+                q: Mat::randn(n, 4, &mut rng),
+                k: Mat::randn(n, 4, &mut rng),
+                v: Mat::randn(n, 4, &mut rng),
+            },
+            enqueued: Instant::now() + Duration::from_millis(t_off_ms),
+            reply: tx,
+        }
+    }
+
+    #[test]
+    fn closes_on_count() {
+        let p = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+        let t0 = Instant::now();
+        assert!(!p.should_close(t0, 3, t0));
+        assert!(p.should_close(t0, 4, t0));
+    }
+
+    #[test]
+    fn closes_on_deadline() {
+        let p = BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(5) };
+        let t0 = Instant::now();
+        assert!(!p.should_close(t0, 1, t0));
+        assert!(p.should_close(t0, 1, t0 + Duration::from_millis(6)));
+        assert_eq!(p.remaining(t0, t0 + Duration::from_millis(10)), Duration::ZERO);
+    }
+
+    #[test]
+    fn decode_first_fcfs_within_class() {
+        let mut items = vec![
+            item(1, 16, 0), // prefill, earliest
+            item(2, 1, 1),  // decode
+            item(3, 8, 2),  // prefill
+            item(4, 1, 3),  // decode
+        ];
+        order_batch(&mut items);
+        let ids: Vec<u64> = items.iter().map(|w| w.chunk.seq.0).collect();
+        assert_eq!(ids, vec![2, 4, 1, 3]);
+    }
+}

@@ -1,0 +1,266 @@
+//! TCP front-end: a JSON-lines protocol over `std::net` exposing the
+//! coordinator to external clients (no HTTP framework is vendored
+//! offline; the protocol is deliberately line-oriented so `nc` works).
+//!
+//! Requests (one JSON object per line):
+//! ```text
+//! {"op":"create"}                         -> {"ok":true,"seq":N}
+//! {"op":"attend","seq":N,
+//!  "q":[...],"k":[...],"v":[...],"n":R}   -> {"ok":true,"y":[...],"seq_len":L}
+//! {"op":"release","seq":N}                -> {"ok":true,"released":true}
+//! {"op":"metrics"}                        -> {"ok":true,"metrics":{...}}
+//! ```
+//! Errors: `{"ok":false,"error":"..."}`. One thread per connection; the
+//! coordinator's own backpressure bounds admitted work.
+
+use crate::coordinator::request::{AttendChunk, SeqId};
+use crate::coordinator::Coordinator;
+use crate::math::linalg::Mat;
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running TCP server bound to `addr`.
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` (e.g. "127.0.0.1:0" for an
+    /// ephemeral test port).
+    pub fn start(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("slay-server-accept".into())
+            .spawn(move || {
+                // Connection threads are detached: joining them on shutdown
+                // would deadlock against clients blocked in read_line. Each
+                // handler exits when its client closes or errors; a read
+                // timeout bounds lingering after shutdown.
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let _ = stream
+                                .set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                            let c = coord.clone();
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, c);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        crate::log_info!("tcp server listening on {local}");
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// Stop accepting; existing connections finish their current line.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> anyhow::Result<()> {
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            return Ok(()); // client closed
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match handle_line(line.trim(), &coord) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::Str(e.to_string())),
+            ]),
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+    }
+}
+
+fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
+    let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let op = req
+        .get("op")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow::anyhow!("missing 'op'"))?;
+    match op {
+        "create" => {
+            let seq = coord.create_sequence()?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("seq", Json::Num(seq.0 as f64)),
+            ]))
+        }
+        "release" => {
+            let seq = SeqId(req.req("seq")?.as_f64().unwrap_or(-1.0) as u64);
+            let released = coord.release_sequence(seq)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("released", Json::Bool(released)),
+            ]))
+        }
+        "metrics" => Ok(Json::obj(vec![
+            ("ok", Json::Bool(true)),
+            ("metrics", coord.metrics().to_json()),
+        ])),
+        "attend" => {
+            let seq = SeqId(req.req("seq")?.as_f64().unwrap_or(-1.0) as u64);
+            let n = req.req("n")?.as_usize().unwrap_or(0);
+            let d_head = coord.config().d_head;
+            let d_v = coord.config().d_v;
+            let get = |key: &str, cols: usize| -> anyhow::Result<Mat> {
+                let v = req
+                    .req(key)?
+                    .as_f32_vec()
+                    .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number array"))?;
+                anyhow::ensure!(
+                    v.len() == n * cols,
+                    "'{key}' has {} values, expected n*{cols}={}",
+                    v.len(),
+                    n * cols
+                );
+                Ok(Mat::from_vec(n, cols, v))
+            };
+            let chunk = AttendChunk {
+                seq,
+                q: get("q", d_head)?,
+                k: get("k", d_head)?,
+                v: get("v", d_v)?,
+            };
+            let res = coord.attend(chunk)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("seq_len", Json::Num(res.seq_len as f64)),
+                ("latency_ms", Json::Num(res.latency.as_secs_f64() * 1e3)),
+                ("y", Json::arr_f32(&res.y.data)),
+            ]))
+        }
+        other => anyhow::bail!("unknown op '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::CoordinatorConfig;
+    use std::io::{BufRead, BufReader, Write};
+
+    fn start() -> (Server, Arc<Coordinator>) {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                d_head: 4,
+                d_v: 4,
+                workers: 1,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+        (server, coord)
+    }
+
+    fn roundtrip(stream: &TcpStream, req: &str) -> Json {
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(req.as_bytes()).unwrap();
+        w.write_all(b"\n").unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap()
+    }
+
+    #[test]
+    fn full_protocol_roundtrip() {
+        let (server, _coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+
+        let created = roundtrip(&stream, r#"{"op":"create"}"#);
+        assert_eq!(created.get("ok").unwrap().as_bool(), Some(true));
+        let seq = created.get("seq").unwrap().as_usize().unwrap();
+
+        let ones = vec!["1.0"; 8].join(",");
+        let attend = roundtrip(
+            &stream,
+            &format!(
+                r#"{{"op":"attend","seq":{seq},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#
+            ),
+        );
+        assert_eq!(attend.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(attend.get("seq_len").unwrap().as_usize(), Some(2));
+        assert_eq!(attend.get("y").unwrap().as_f32_vec().unwrap().len(), 8);
+
+        let metrics = roundtrip(&stream, r#"{"op":"metrics"}"#);
+        assert_eq!(
+            metrics
+                .get("metrics")
+                .unwrap()
+                .get("completed")
+                .unwrap()
+                .as_usize(),
+            Some(1)
+        );
+
+        let released = roundtrip(&stream, &format!(r#"{{"op":"release","seq":{seq}}}"#));
+        assert_eq!(released.get("released").unwrap().as_bool(), Some(true));
+        server.shutdown();
+    }
+
+    #[test]
+    fn errors_are_reported_not_fatal() {
+        let (server, _coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let bad = roundtrip(&stream, "not json at all");
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        let unknown = roundtrip(&stream, r#"{"op":"warp"}"#);
+        assert_eq!(unknown.get("ok").unwrap().as_bool(), Some(false));
+        // connection still alive
+        let m = roundtrip(&stream, r#"{"op":"metrics"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        server.shutdown();
+    }
+
+    #[test]
+    fn attend_validates_shapes() {
+        let (server, _coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let created = roundtrip(&stream, r#"{"op":"create"}"#);
+        let seq = created.get("seq").unwrap().as_usize().unwrap();
+        let bad = roundtrip(
+            &stream,
+            &format!(r#"{{"op":"attend","seq":{seq},"n":2,"q":[1.0],"k":[1.0],"v":[1.0]}}"#),
+        );
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        server.shutdown();
+    }
+}

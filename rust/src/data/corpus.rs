@@ -1,0 +1,206 @@
+//! Synthetic language-modeling corpus (Table 5 / Fig. 3 substitute for the
+//! paper's web-text corpus — see DESIGN.md §Substitutions).
+//!
+//! The generator layers the statistical structure that differentiates
+//! attention mechanisms:
+//! * **Zipfian unigrams** — realistic marginal token frequencies;
+//! * **Markov bigrams** — local syntax-like predictability (what the
+//!   "Patterns" capability measures);
+//! * **induction motifs** — rare multi-token names re-occur within a
+//!   document, so copying/induction (long-range attention) pays off;
+//! * **topic drift** — each document draws a topic biasing its unigram
+//!   distribution, giving paragraph-level coherence.
+
+use crate::math::rng::{zipf_cdf, Rng};
+
+/// Corpus configuration.
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// Zipf exponent for unigram frequencies.
+    pub zipf_alpha: f64,
+    /// Number of latent topics.
+    pub topics: usize,
+    /// Probability of continuing a bigram chain instead of resampling.
+    pub bigram_p: f64,
+    /// Probability of starting an induction motif replay.
+    pub motif_p: f64,
+    /// Motif length (multi-token "name").
+    pub motif_len: usize,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 512,
+            zipf_alpha: 1.05,
+            topics: 16,
+            bigram_p: 0.45,
+            motif_p: 0.05,
+            motif_len: 3,
+        }
+    }
+}
+
+/// Streaming document generator.
+pub struct Corpus {
+    cfg: CorpusConfig,
+    /// Per-topic Zipf CDFs over a topic-permuted vocab.
+    topic_perm: Vec<Vec<i32>>,
+    base_cdf: Vec<f64>,
+    /// Deterministic bigram successor table.
+    succ: Vec<i32>,
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let base_cdf = zipf_cdf(cfg.vocab, cfg.zipf_alpha);
+        let mut topic_perm = Vec::with_capacity(cfg.topics);
+        for _ in 0..cfg.topics {
+            let mut perm: Vec<i32> = (0..cfg.vocab as i32).collect();
+            // permute only the tail so high-frequency function tokens stay
+            // shared across topics (like real text)
+            let head = cfg.vocab / 16;
+            let tail = &mut perm[head..];
+            // manual shuffle on the slice
+            for i in (1..tail.len()).rev() {
+                let j = rng.below(i + 1);
+                tail.swap(i, j);
+            }
+            topic_perm.push(perm);
+        }
+        let succ: Vec<i32> = (0..cfg.vocab)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        Corpus { cfg, topic_perm, base_cdf, succ }
+    }
+
+    /// Generate one document of `len` tokens.
+    pub fn document(&self, len: usize, rng: &mut Rng) -> Vec<i32> {
+        let topic = rng.below(self.cfg.topics);
+        let perm = &self.topic_perm[topic];
+        let mut out = Vec::with_capacity(len);
+        // the document's recurring motif ("name")
+        let motif: Vec<i32> = (0..self.cfg.motif_len)
+            .map(|_| perm[rng.zipf(&self.base_cdf)])
+            .collect();
+        let mut prev: i32 = perm[rng.zipf(&self.base_cdf)];
+        out.push(prev);
+        while out.len() < len {
+            let u = rng.uniform();
+            if u < self.cfg.motif_p && out.len() + motif.len() <= len {
+                out.extend_from_slice(&motif);
+                prev = *motif.last().unwrap();
+            } else if u < self.cfg.motif_p + self.cfg.bigram_p {
+                prev = self.succ[prev as usize % self.cfg.vocab];
+                out.push(prev);
+            } else {
+                prev = perm[rng.zipf(&self.base_cdf)];
+                out.push(prev);
+            }
+        }
+        out.truncate(len);
+        out
+    }
+
+    /// LM batch: `[batch × seq_len]` tokens plus shifted next-token targets.
+    pub fn lm_batch(
+        &self,
+        batch: usize,
+        seq_len: usize,
+        rng: &mut Rng,
+    ) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * seq_len);
+        let mut targets = Vec::with_capacity(batch * seq_len);
+        for _ in 0..batch {
+            let doc = self.document(seq_len + 1, rng);
+            tokens.extend_from_slice(&doc[..seq_len]);
+            targets.extend_from_slice(&doc[1..=seq_len]);
+        }
+        (tokens, targets)
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn documents_in_vocab_and_right_length() {
+        let c = Corpus::new(CorpusConfig::default(), 1);
+        let mut rng = Rng::new(2);
+        let doc = c.document(200, &mut rng);
+        assert_eq!(doc.len(), 200);
+        assert!(doc.iter().all(|&t| (0..512).contains(&t)));
+    }
+
+    #[test]
+    fn unigram_distribution_is_skewed() {
+        let c = Corpus::new(CorpusConfig::default(), 3);
+        let mut rng = Rng::new(4);
+        let mut counts = vec![0usize; 512];
+        for _ in 0..50 {
+            for t in c.document(256, &mut rng) {
+                counts[t as usize] += 1;
+            }
+        }
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = counts.iter().sum();
+        let top32: usize = counts[..32].iter().sum();
+        assert!(
+            top32 as f64 / total as f64 > 0.35,
+            "head mass {} too flat",
+            top32 as f64 / total as f64
+        );
+    }
+
+    #[test]
+    fn motifs_recur_within_documents() {
+        // Induction structure: trigrams should repeat inside a document far
+        // more often than across random token choices.
+        let c = Corpus::new(
+            CorpusConfig { motif_p: 0.1, ..Default::default() },
+            5,
+        );
+        let mut rng = Rng::new(6);
+        let mut repeats = 0;
+        for _ in 0..20 {
+            let doc = c.document(256, &mut rng);
+            use std::collections::HashSet;
+            let mut seen = HashSet::new();
+            for w in doc.windows(3) {
+                if !seen.insert([w[0], w[1], w[2]]) {
+                    repeats += 1;
+                }
+            }
+        }
+        assert!(repeats > 20, "only {repeats} repeated trigrams");
+    }
+
+    #[test]
+    fn lm_batch_targets_are_shifted() {
+        let c = Corpus::new(CorpusConfig::default(), 7);
+        let mut rng = Rng::new(8);
+        let (tokens, targets) = c.lm_batch(2, 64, &mut rng);
+        assert_eq!(tokens.len(), 128);
+        for b in 0..2 {
+            for t in 0..63 {
+                assert_eq!(targets[b * 64 + t], tokens[b * 64 + t + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seeds() {
+        let c1 = Corpus::new(CorpusConfig::default(), 9);
+        let c2 = Corpus::new(CorpusConfig::default(), 9);
+        let mut r1 = Rng::new(10);
+        let mut r2 = Rng::new(10);
+        assert_eq!(c1.document(64, &mut r1), c2.document(64, &mut r2));
+    }
+}

@@ -1,0 +1,214 @@
+//! Eurlex-4K simulator (Table 4 substitute — see DESIGN.md
+//! §Substitutions: the real dataset is not available offline).
+//!
+//! Reproduces the statistics PSP@k probes: ~4K labels with a power-law
+//! frequency tail, multi-label documents (~5 labels/doc), and
+//! label-dependent token distributions so a text encoder can actually
+//! learn the mapping. Token streams share a global Zipf backbone with
+//! label-specific "keyword" tokens mixed in.
+
+use crate::math::rng::{zipf_cdf, Rng};
+
+/// Dataset configuration (defaults shaped like Eurlex-4K).
+#[derive(Clone, Debug)]
+pub struct EurlexConfig {
+    pub n_labels: usize,
+    pub vocab: usize,
+    pub doc_len: usize,
+    /// Mean labels per document.
+    pub labels_per_doc: usize,
+    /// Power-law exponent of label frequencies.
+    pub label_alpha: f64,
+    /// Fraction of tokens drawn from label keyword pools.
+    pub keyword_frac: f64,
+    /// Keywords per label.
+    pub keywords: usize,
+}
+
+impl Default for EurlexConfig {
+    fn default() -> Self {
+        EurlexConfig {
+            n_labels: 3956,
+            vocab: 64, // matches the `task` model preset the encoder uses
+            doc_len: 64,
+            labels_per_doc: 5,
+            label_alpha: 1.2,
+            keyword_frac: 0.55,
+            keywords: 3,
+        }
+    }
+}
+
+/// One document with its label set.
+#[derive(Clone, Debug)]
+pub struct Doc {
+    pub tokens: Vec<i32>,
+    pub labels: Vec<usize>,
+}
+
+/// The simulated dataset generator.
+pub struct Eurlex {
+    pub cfg: EurlexConfig,
+    label_cdf: Vec<f64>,
+    token_cdf: Vec<f64>,
+    /// Keyword tokens per label.
+    keywords: Vec<Vec<i32>>,
+}
+
+impl Eurlex {
+    pub fn new(cfg: EurlexConfig, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let label_cdf = zipf_cdf(cfg.n_labels, cfg.label_alpha);
+        let token_cdf = zipf_cdf(cfg.vocab - 4, 1.05); // reserve 0..4
+        let keywords = (0..cfg.n_labels)
+            .map(|_| {
+                (0..cfg.keywords)
+                    .map(|_| 4 + rng.below(cfg.vocab - 4) as i32)
+                    .collect()
+            })
+            .collect();
+        Eurlex { cfg, label_cdf, token_cdf, keywords }
+    }
+
+    /// Sample one document.
+    pub fn doc(&self, rng: &mut Rng) -> Doc {
+        // label set: Zipf-distributed, deduplicated
+        let mut labels = Vec::new();
+        let n_labels = 1 + rng.below(2 * self.cfg.labels_per_doc - 1);
+        for _ in 0..n_labels {
+            let l = rng.zipf(&self.label_cdf);
+            if !labels.contains(&l) {
+                labels.push(l);
+            }
+        }
+        labels.sort_unstable();
+        // tokens: mixture of global Zipf and the labels' keyword pools
+        let tokens = (0..self.cfg.doc_len)
+            .map(|_| {
+                if rng.uniform() < self.cfg.keyword_frac {
+                    let l = labels[rng.below(labels.len())];
+                    let kw = &self.keywords[l];
+                    kw[rng.below(kw.len())]
+                } else {
+                    4 + rng.zipf(&self.token_cdf) as i32
+                }
+            })
+            .collect();
+        Doc { tokens, labels }
+    }
+
+    /// Sample a dataset split.
+    pub fn split(&self, n: usize, rng: &mut Rng) -> Vec<Doc> {
+        (0..n).map(|_| self.doc(rng)).collect()
+    }
+
+    /// Label frequency counts over a split (propensity input).
+    pub fn label_counts(&self, docs: &[Doc]) -> Vec<usize> {
+        let mut counts = vec![0usize; self.cfg.n_labels];
+        for d in docs {
+            for &l in &d.labels {
+                counts[l] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Multi-hot target row for a doc (f32, length n_labels).
+    pub fn multi_hot(&self, doc: &Doc) -> Vec<f32> {
+        let mut y = vec![0.0f32; self.cfg.n_labels];
+        for &l in &doc.labels {
+            y[l] = 1.0;
+        }
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Eurlex {
+        Eurlex::new(
+            EurlexConfig { n_labels: 200, ..Default::default() },
+            1,
+        )
+    }
+
+    #[test]
+    fn docs_have_valid_tokens_and_labels() {
+        let e = small();
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let d = e.doc(&mut rng);
+            assert_eq!(d.tokens.len(), 64);
+            assert!(d.tokens.iter().all(|&t| (4..64).contains(&t)));
+            assert!(!d.labels.is_empty());
+            assert!(d.labels.iter().all(|&l| l < 200));
+            // dedup + sorted
+            let mut s = d.labels.clone();
+            s.dedup();
+            assert_eq!(s, d.labels);
+        }
+    }
+
+    #[test]
+    fn label_distribution_is_long_tailed() {
+        let e = small();
+        let mut rng = Rng::new(3);
+        let docs = e.split(2000, &mut rng);
+        let mut counts = e.label_counts(&docs);
+        counts.sort_unstable_by(|a, b| b.cmp(a));
+        let total: usize = counts.iter().sum();
+        // head (top 5%) captures a large share; tail has rare labels
+        let head: usize = counts[..10].iter().sum();
+        assert!(head as f64 / total as f64 > 0.25, "head {head}/{total}");
+        assert!(counts[150..].iter().any(|&c| c <= 2), "no tail labels");
+    }
+
+    #[test]
+    fn keywords_make_labels_learnable() {
+        // Docs sharing a label should share more tokens than random pairs.
+        let e = small();
+        let mut rng = Rng::new(4);
+        let docs = e.split(400, &mut rng);
+        let overlap = |a: &Doc, b: &Doc| {
+            let sa: std::collections::HashSet<i32> = a.tokens.iter().copied().collect();
+            b.tokens.iter().filter(|t| sa.contains(t)).count()
+        };
+        let mut same = Vec::new();
+        let mut diff = Vec::new();
+        for i in 0..docs.len() {
+            for j in i + 1..docs.len().min(i + 20) {
+                let share = docs[i].labels.iter().any(|l| docs[j].labels.contains(l));
+                let o = overlap(&docs[i], &docs[j]) as f64;
+                if share {
+                    same.push(o);
+                } else {
+                    diff.push(o);
+                }
+            }
+        }
+        let m_same = crate::math::stats::mean(&same);
+        let m_diff = crate::math::stats::mean(&diff);
+        assert!(
+            m_same > m_diff,
+            "same-label overlap {m_same} <= diff-label {m_diff}"
+        );
+    }
+
+    #[test]
+    fn multi_hot_encoding() {
+        let e = small();
+        let mut rng = Rng::new(5);
+        let d = e.doc(&mut rng);
+        let y = e.multi_hot(&d);
+        assert_eq!(y.len(), 200);
+        let ones: Vec<usize> = y
+            .iter()
+            .enumerate()
+            .filter(|(_, &v)| v == 1.0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(ones, d.labels);
+    }
+}

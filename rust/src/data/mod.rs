@@ -1,0 +1,7 @@
+//! Data substrates: the §3.3 synthetic task suite, the synthetic LM corpus
+//! (Table 5 / Fig. 3), and the Eurlex-4K extreme-classification simulator
+//! (Table 4). All generators are deterministic given a seed.
+
+pub mod corpus;
+pub mod eurlex;
+pub mod tasks;

@@ -1,0 +1,687 @@
+//! The synthetic task suite of §3.3 / Tables 7-8: 22 sequence-modeling
+//! tasks grouped into Basic, Memory, Long-Range, Reasoning, Arithmetic,
+//! Pattern, Robustness and Aggregation categories.
+//!
+//! Every task emits `(tokens, targets)` pairs in the LM training format of
+//! the AOT `train_step` artifacts: `tokens[t]` is the input stream and
+//! `targets[t]` the supervised next-token label at position `t`
+//! (−1 = unsupervised position). Layout per example:
+//!
+//! ```text
+//! [input … input SEP answer … answer PAD …]
+//! ```
+//!
+//! with supervision only on the answer span (the position *before* each
+//! answer token predicts it), so accuracy measures the capability rather
+//! than input copying.
+
+use crate::math::rng::Rng;
+
+/// Reserved control tokens at the top of the vocabulary.
+pub const PAD: i32 = 0;
+pub const SEP: i32 = 1;
+/// First usable data token.
+pub const DATA0: i32 = 4;
+
+/// One supervised example.
+#[derive(Clone, Debug)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+}
+
+/// Task category (Table 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    Basic,
+    Memory,
+    LongRange,
+    Reasoning,
+    Arithmetic,
+    Pattern,
+    Robustness,
+    Aggregation,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Basic => "basic",
+            Category::Memory => "memory",
+            Category::LongRange => "long_range",
+            Category::Reasoning => "reasoning",
+            Category::Arithmetic => "arithmetic",
+            Category::Pattern => "pattern",
+            Category::Robustness => "robustness",
+            Category::Aggregation => "aggregation",
+        }
+    }
+}
+
+/// Task identifier — all 22 tasks of Table 8.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Task {
+    Copy,
+    Sort,
+    Reverse,
+    Retrieval,
+    KvRecall,
+    FirstToken,
+    SelectiveCopy,
+    LongCopy,
+    DistantMatch,
+    Multihop,
+    Stack,
+    Induction,
+    Pattern,
+    Counting,
+    Parity,
+    Addition,
+    Modular,
+    Bigram,
+    Majority,
+    NoisyCopy,
+    Compression,
+    Histogram,
+}
+
+pub const ALL_TASKS: [Task; 22] = [
+    Task::Copy,
+    Task::Sort,
+    Task::Reverse,
+    Task::Retrieval,
+    Task::KvRecall,
+    Task::FirstToken,
+    Task::SelectiveCopy,
+    Task::LongCopy,
+    Task::DistantMatch,
+    Task::Multihop,
+    Task::Stack,
+    Task::Induction,
+    Task::Pattern,
+    Task::Counting,
+    Task::Parity,
+    Task::Addition,
+    Task::Modular,
+    Task::Bigram,
+    Task::Majority,
+    Task::NoisyCopy,
+    Task::Compression,
+    Task::Histogram,
+];
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Copy => "copy",
+            Task::Sort => "sort",
+            Task::Reverse => "reverse",
+            Task::Retrieval => "retrieval",
+            Task::KvRecall => "kv_recall",
+            Task::FirstToken => "first_token",
+            Task::SelectiveCopy => "selective_copy",
+            Task::LongCopy => "long_copy",
+            Task::DistantMatch => "distant_match",
+            Task::Multihop => "multihop",
+            Task::Stack => "stack",
+            Task::Induction => "induction",
+            Task::Pattern => "pattern",
+            Task::Counting => "counting",
+            Task::Parity => "parity",
+            Task::Addition => "addition",
+            Task::Modular => "modular",
+            Task::Bigram => "bigram",
+            Task::Majority => "majority",
+            Task::NoisyCopy => "noisy_copy",
+            Task::Compression => "compression",
+            Task::Histogram => "histogram",
+        }
+    }
+
+    pub fn category(self) -> Category {
+        match self {
+            Task::Copy | Task::Sort | Task::Reverse => Category::Basic,
+            Task::Retrieval | Task::KvRecall | Task::FirstToken | Task::SelectiveCopy => {
+                Category::Memory
+            }
+            Task::LongCopy | Task::DistantMatch | Task::Multihop => Category::LongRange,
+            Task::Stack | Task::Induction | Task::Pattern => Category::Reasoning,
+            Task::Counting | Task::Parity | Task::Addition | Task::Modular => {
+                Category::Arithmetic
+            }
+            Task::Bigram | Task::Majority => Category::Pattern,
+            Task::NoisyCopy | Task::Compression => Category::Robustness,
+            Task::Histogram => Category::Aggregation,
+        }
+    }
+
+    pub fn from_name(name: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == name)
+    }
+}
+
+/// Task generator bound to a (vocab, seq_len) model shape.
+pub struct TaskGen {
+    pub vocab: usize,
+    pub seq_len: usize,
+}
+
+impl TaskGen {
+    pub fn new(vocab: usize, seq_len: usize) -> Self {
+        assert!(vocab >= 16, "need vocab ≥ 16 for the control tokens + data");
+        assert!(seq_len >= 32, "need seq_len ≥ 32");
+        TaskGen { vocab, seq_len }
+    }
+
+    /// Number of distinct data tokens available.
+    fn n_data(&self) -> i32 {
+        (self.vocab as i32 - DATA0).min(48)
+    }
+
+    fn rand_data(&self, rng: &mut Rng) -> i32 {
+        DATA0 + rng.below(self.n_data() as usize) as i32
+    }
+
+    /// Assemble `[input… SEP answer…]` into fixed-length token/target rows.
+    fn pack(&self, input: &[i32], answer: &[i32]) -> Example {
+        let mut tokens = vec![PAD; self.seq_len];
+        let mut targets = vec![-1i32; self.seq_len];
+        let n_in = input.len().min(self.seq_len - answer.len() - 2);
+        tokens[..n_in].copy_from_slice(&input[..n_in]);
+        tokens[n_in] = SEP;
+        // answer span: position (n_in + j) predicts answer[j] at
+        // target index (n_in + j), given tokens up to and incl. that pos−1.
+        for (j, &a) in answer.iter().enumerate() {
+            let pos = n_in + 1 + j;
+            if pos >= self.seq_len {
+                break;
+            }
+            tokens[pos] = a;
+            targets[pos - 1] = a;
+        }
+        Example { tokens, targets }
+    }
+
+    /// Generate one example of `task`.
+    pub fn example(&self, task: Task, rng: &mut Rng) -> Example {
+        let l = self.seq_len;
+        match task {
+            Task::Copy => {
+                let n = 4 + rng.below(l / 4);
+                let xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                self.pack(&xs, &xs.clone())
+            }
+            Task::LongCopy => {
+                let n = l / 3;
+                let xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                self.pack(&xs, &xs.clone())
+            }
+            Task::NoisyCopy => {
+                // copy only the non-noise tokens; noise = token 2
+                const NOISE: i32 = 2;
+                let n = 4 + rng.below(l / 4);
+                let mut xs = Vec::new();
+                let mut clean = Vec::new();
+                for _ in 0..n {
+                    if rng.uniform() < 0.3 {
+                        xs.push(NOISE);
+                    } else {
+                        let t = self.rand_data(rng);
+                        xs.push(t);
+                        clean.push(t);
+                    }
+                }
+                if clean.is_empty() {
+                    clean.push(self.rand_data(rng));
+                    xs.push(clean[0]);
+                }
+                self.pack(&xs, &clean)
+            }
+            Task::Reverse => {
+                let n = 4 + rng.below(l / 4);
+                let xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                let mut rev = xs.clone();
+                rev.reverse();
+                self.pack(&xs, &rev)
+            }
+            Task::Sort => {
+                let n = 4 + rng.below(l / 4);
+                let xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                let mut sorted = xs.clone();
+                sorted.sort_unstable();
+                self.pack(&xs, &sorted)
+            }
+            Task::Retrieval => {
+                // needle token appears once; answer = the token after it
+                let n = l / 2;
+                let mut xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                let needle = 3; // dedicated marker
+                let pos = rng.below(n - 2);
+                xs[pos] = needle;
+                let answer = xs[pos + 1];
+                let mut input = xs;
+                input.push(needle); // query repeats the marker
+                self.pack(&input, &[answer])
+            }
+            Task::KvRecall => {
+                // pairs (k1 v1 k2 v2 …), query a key, answer its value
+                let pairs = 4 + rng.below(l / 6);
+                let mut input = Vec::new();
+                let mut keys = Vec::new();
+                let mut vals = Vec::new();
+                for _ in 0..pairs {
+                    let k = self.rand_data(rng);
+                    let v = self.rand_data(rng);
+                    input.push(k);
+                    input.push(v);
+                    keys.push(k);
+                    vals.push(v);
+                }
+                let qi = rng.below(pairs);
+                // last occurrence wins for duplicate keys
+                let ans = keys
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &k)| k == keys[qi])
+                    .map(|(i, _)| vals[i])
+                    .next_back()
+                    .unwrap();
+                input.push(keys[qi]);
+                self.pack(&input, &[ans])
+            }
+            Task::FirstToken => {
+                let n = 4 + rng.below(l / 2);
+                let xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                let first = xs[0];
+                self.pack(&xs, &[first])
+            }
+            Task::SelectiveCopy => {
+                // copy tokens that are immediately preceded by marker 3
+                let n = 6 + rng.below(l / 3);
+                let mut xs = Vec::new();
+                let mut sel = Vec::new();
+                let mut i = 0;
+                while i < n {
+                    if rng.uniform() < 0.25 && i + 1 < n {
+                        xs.push(3);
+                        let t = self.rand_data(rng);
+                        xs.push(t);
+                        sel.push(t);
+                        i += 2;
+                    } else {
+                        xs.push(self.rand_data(rng));
+                        i += 1;
+                    }
+                }
+                if sel.is_empty() {
+                    xs.push(3);
+                    let t = self.rand_data(rng);
+                    xs.push(t);
+                    sel.push(t);
+                }
+                self.pack(&xs, &sel)
+            }
+            Task::DistantMatch => {
+                // answer = token right after SEP-distant first marker
+                let n = l * 2 / 3;
+                let mut xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                let marker = 3;
+                xs[0] = marker;
+                let answer = xs[1];
+                xs[n - 1] = marker; // query marker far away
+                self.pack(&xs, &[answer])
+            }
+            Task::Multihop => {
+                // chain a→b, b→c; query a, answer c (two hops)
+                let pairs = 5 + rng.below(6);
+                let chain: Vec<i32> = {
+                    let mut pool: Vec<i32> = (0..self.n_data()).map(|i| DATA0 + i).collect();
+                    rng.shuffle(&mut pool);
+                    pool.truncate(pairs + 2);
+                    pool
+                };
+                let mut input = Vec::new();
+                // links chain[i] -> chain[i+1], shuffled
+                let mut links: Vec<(i32, i32)> =
+                    chain.windows(2).map(|w| (w[0], w[1])).collect();
+                rng.shuffle(&mut links);
+                for (a, b) in &links {
+                    input.push(*a);
+                    input.push(*b);
+                }
+                input.push(chain[0]); // query head
+                self.pack(&input, &[chain[2]]) // answer: two hops away
+            }
+            Task::Stack => {
+                // push/pop stream; answer = final stack top.
+                // push = marker 2 followed by token; pop = marker 3.
+                let ops = 6 + rng.below(l / 4);
+                let mut input = Vec::new();
+                let mut stack: Vec<i32> = Vec::new();
+                for _ in 0..ops {
+                    if stack.is_empty() || rng.uniform() < 0.6 {
+                        let t = self.rand_data(rng);
+                        input.push(2);
+                        input.push(t);
+                        stack.push(t);
+                    } else {
+                        input.push(3);
+                        stack.pop();
+                    }
+                }
+                if stack.is_empty() {
+                    let t = self.rand_data(rng);
+                    input.push(2);
+                    input.push(t);
+                    stack.push(t);
+                }
+                self.pack(&input, &[*stack.last().unwrap()])
+            }
+            Task::Induction => {
+                // classic induction head probe: …A B … A → B
+                let n = l / 2;
+                let mut xs: Vec<i32> = (0..n).map(|_| self.rand_data(rng)).collect();
+                let a = self.rand_data(rng);
+                let b = self.rand_data(rng);
+                let pos = rng.below(n - 3);
+                xs[pos] = a;
+                xs[pos + 1] = b;
+                // ensure `a` does not re-occur later with a different next
+                for x in xs.iter_mut().skip(pos + 2) {
+                    if *x == a {
+                        *x = DATA0;
+                    }
+                }
+                xs.push(a);
+                self.pack(&xs, &[b])
+            }
+            Task::Pattern => {
+                // periodic pattern continuation: abcabcab → c
+                let period = 2 + rng.below(4);
+                let motif: Vec<i32> = (0..period).map(|_| self.rand_data(rng)).collect();
+                let reps = (l / 2) / period;
+                let mut xs = Vec::new();
+                for _ in 0..reps {
+                    xs.extend_from_slice(&motif);
+                }
+                let next = motif[xs.len() % period];
+                self.pack(&xs, &[next])
+            }
+            Task::Counting => {
+                // count occurrences of marker 3, answer = count as token
+                let n = 8 + rng.below(l / 2);
+                let mut count = 0;
+                let xs: Vec<i32> = (0..n)
+                    .map(|_| {
+                        if rng.uniform() < 0.2 && count < (self.n_data() - 1) as usize {
+                            count += 1;
+                            3
+                        } else {
+                            self.rand_data(rng)
+                        }
+                    })
+                    .collect();
+                self.pack(&xs, &[DATA0 + count as i32])
+            }
+            Task::Parity => {
+                // parity of marker-3 count: answer token DATA0 (+1 if odd)
+                let n = 8 + rng.below(l / 2);
+                let mut ones = 0;
+                let xs: Vec<i32> = (0..n)
+                    .map(|_| {
+                        if rng.uniform() < 0.5 {
+                            ones += 1;
+                            3
+                        } else {
+                            2
+                        }
+                    })
+                    .collect();
+                self.pack(&xs, &[DATA0 + (ones % 2)])
+            }
+            Task::Addition => {
+                // digit addition: a + b (< n_data), digits as tokens
+                let max = (self.n_data() / 2 - 1) as usize;
+                let a = rng.below(max);
+                let b = rng.below(max);
+                let input = [DATA0 + a as i32, 2, DATA0 + b as i32];
+                self.pack(&input, &[DATA0 + (a + b) as i32])
+            }
+            Task::Modular => {
+                // (a + b) mod m with m = 7
+                let m = 7usize;
+                let a = rng.below(self.n_data() as usize);
+                let b = rng.below(self.n_data() as usize);
+                let input = [DATA0 + a as i32, 2, DATA0 + b as i32];
+                self.pack(&input, &[DATA0 + ((a + b) % m) as i32])
+            }
+            Task::Bigram => {
+                // stochastic bigram stream from a fixed per-example table;
+                // answer = most likely successor of the query token
+                let states = 4;
+                let table: Vec<i32> =
+                    (0..states).map(|_| self.rand_data(rng)).collect();
+                let succ: Vec<i32> = (0..states).map(|_| self.rand_data(rng)).collect();
+                let n = l / 2;
+                let mut xs = Vec::new();
+                for _ in 0..n / 2 {
+                    let s = rng.below(states);
+                    xs.push(table[s]);
+                    xs.push(succ[s]);
+                }
+                let q = rng.below(states);
+                xs.push(table[q]);
+                self.pack(&xs, &[succ[q]])
+            }
+            Task::Majority => {
+                // answer = most frequent token in the stream
+                let n = 9 + rng.below(l / 2);
+                let cands: Vec<i32> = (0..3).map(|_| self.rand_data(rng)).collect();
+                let mut counts = [0usize; 3];
+                let xs: Vec<i32> = (0..n)
+                    .map(|_| {
+                        let c = rng.below(3);
+                        counts[c] += 1;
+                        cands[c]
+                    })
+                    .collect();
+                let best = (0..3).max_by_key(|&i| counts[i]).unwrap();
+                self.pack(&xs, &[cands[best]])
+            }
+            Task::Compression => {
+                // run-length: emit unique tokens of runs (dedup consecutive)
+                let n = 6 + rng.below(l / 3);
+                let mut xs = Vec::new();
+                let mut compressed: Vec<i32> = Vec::new();
+                while xs.len() < n {
+                    let t = self.rand_data(rng);
+                    let run = 1 + rng.below(3);
+                    for _ in 0..run {
+                        xs.push(t);
+                    }
+                    if compressed.last() != Some(&t) {
+                        compressed.push(t);
+                    }
+                }
+                self.pack(&xs, &compressed)
+            }
+            Task::Histogram => {
+                // answer = count of each of 2 probe tokens, in order
+                let n = 8 + rng.below(l / 2);
+                let probe: Vec<i32> = vec![DATA0, DATA0 + 1];
+                let mut c0 = 0;
+                let mut c1 = 0;
+                let xs: Vec<i32> = (0..n)
+                    .map(|_| {
+                        let u = rng.uniform();
+                        if u < 0.25 && c0 + 1 < self.n_data() as usize {
+                            c0 += 1;
+                            probe[0]
+                        } else if u < 0.5 && c1 + 1 < self.n_data() as usize {
+                            c1 += 1;
+                            probe[1]
+                        } else {
+                            DATA0 + 2 + rng.below((self.n_data() - 2) as usize) as i32
+                        }
+                    })
+                    .collect();
+                self.pack(&xs, &[DATA0 + c0 as i32, DATA0 + c1 as i32])
+            }
+        }
+    }
+
+    /// Generate a `[batch × seq_len]` training batch (flattened row-major).
+    pub fn batch(&self, task: Task, batch: usize, rng: &mut Rng) -> (Vec<i32>, Vec<i32>) {
+        let mut tokens = Vec::with_capacity(batch * self.seq_len);
+        let mut targets = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            let ex = self.example(task, rng);
+            tokens.extend_from_slice(&ex.tokens);
+            targets.extend_from_slice(&ex.targets);
+        }
+        (tokens, targets)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> TaskGen {
+        TaskGen::new(64, 64)
+    }
+
+    #[test]
+    fn all_22_tasks_generate_valid_examples() {
+        let g = gen();
+        let mut rng = Rng::new(1);
+        assert_eq!(ALL_TASKS.len(), 22);
+        for task in ALL_TASKS {
+            for _ in 0..50 {
+                let ex = g.example(task, &mut rng);
+                assert_eq!(ex.tokens.len(), 64, "{}", task.name());
+                assert_eq!(ex.targets.len(), 64, "{}", task.name());
+                assert!(
+                    ex.tokens.iter().all(|&t| (0..64).contains(&t)),
+                    "{} token out of vocab",
+                    task.name()
+                );
+                assert!(
+                    ex.targets.iter().all(|&t| t == -1 || (0..64).contains(&t)),
+                    "{} target out of vocab",
+                    task.name()
+                );
+                let supervised = ex.targets.iter().filter(|&&t| t >= 0).count();
+                assert!(supervised >= 1, "{} has no supervision", task.name());
+            }
+        }
+    }
+
+    #[test]
+    fn supervision_is_consistent_with_next_token() {
+        // For every supervised position t, tokens[t+1] must equal targets[t]
+        // (the answer is teacher-forced into the stream).
+        let g = gen();
+        let mut rng = Rng::new(2);
+        for task in ALL_TASKS {
+            let ex = g.example(task, &mut rng);
+            for t in 0..63 {
+                if ex.targets[t] >= 0 {
+                    assert_eq!(
+                        ex.tokens[t + 1],
+                        ex.targets[t],
+                        "{}: pos {t}",
+                        task.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn copy_answer_matches_input() {
+        let g = gen();
+        let mut rng = Rng::new(3);
+        let ex = g.example(Task::Copy, &mut rng);
+        let sep = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+        let answer: Vec<i32> = ex.targets.iter().filter(|&&t| t >= 0).copied().collect();
+        assert_eq!(&ex.tokens[..sep], &answer[..], "copy answer mismatch");
+    }
+
+    #[test]
+    fn sort_answer_is_sorted() {
+        let g = gen();
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let ex = g.example(Task::Sort, &mut rng);
+            let ans: Vec<i32> = ex.targets.iter().filter(|&&t| t >= 0).copied().collect();
+            let mut sorted = ans.clone();
+            sorted.sort_unstable();
+            assert_eq!(ans, sorted);
+        }
+    }
+
+    #[test]
+    fn parity_answer_correct() {
+        let g = gen();
+        let mut rng = Rng::new(5);
+        for _ in 0..30 {
+            let ex = g.example(Task::Parity, &mut rng);
+            let sep = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+            let ones = ex.tokens[..sep].iter().filter(|&&t| t == 3).count() as i32;
+            let ans = ex.targets.iter().find(|&&t| t >= 0).copied().unwrap();
+            assert_eq!(ans, DATA0 + ones % 2);
+        }
+    }
+
+    #[test]
+    fn induction_probe_shape() {
+        let g = gen();
+        let mut rng = Rng::new(6);
+        for _ in 0..30 {
+            let ex = g.example(Task::Induction, &mut rng);
+            let sep = ex.tokens.iter().position(|&t| t == SEP).unwrap();
+            let query = ex.tokens[sep - 1];
+            // the query token must have appeared earlier followed by answer
+            let ans = ex.targets.iter().find(|&&t| t >= 0).copied().unwrap();
+            let found = ex.tokens[..sep - 1]
+                .windows(2)
+                .any(|w| w[0] == query && w[1] == ans);
+            assert!(found, "induction pair not present");
+        }
+    }
+
+    #[test]
+    fn batches_flatten_correctly() {
+        let g = gen();
+        let mut rng = Rng::new(7);
+        let (tokens, targets) = g.batch(Task::Copy, 5, &mut rng);
+        assert_eq!(tokens.len(), 5 * 64);
+        assert_eq!(targets.len(), 5 * 64);
+    }
+
+    #[test]
+    fn category_partition_matches_table7() {
+        use std::collections::HashMap;
+        let mut by_cat: HashMap<&str, usize> = HashMap::new();
+        for t in ALL_TASKS {
+            *by_cat.entry(t.category().name()).or_default() += 1;
+        }
+        assert_eq!(by_cat["basic"], 3);
+        assert_eq!(by_cat["memory"], 4);
+        assert_eq!(by_cat["long_range"], 3);
+        assert_eq!(by_cat["reasoning"], 3);
+        assert_eq!(by_cat["arithmetic"], 4);
+        assert_eq!(by_cat["pattern"], 2);
+        assert_eq!(by_cat["robustness"], 2);
+        assert_eq!(by_cat["aggregation"], 1);
+    }
+
+    #[test]
+    fn name_roundtrip() {
+        for t in ALL_TASKS {
+            assert_eq!(Task::from_name(t.name()), Some(t));
+        }
+        assert_eq!(Task::from_name("bogus"), None);
+    }
+}

@@ -1,0 +1,81 @@
+//! Evaluation metrics: token accuracy and perplexity (Tables 3/5/8),
+//! extreme-classification P@k / PSP@k (Table 4), and attention-entropy
+//! analysis (Figs. 15/16).
+
+pub mod xmc;
+
+/// Masked token accuracy: fraction of positions with `target >= 0` where
+/// `argmax(logits) == target`. `logits` is `[n_positions, vocab]` row-major.
+pub fn token_accuracy(logits: &[f32], vocab: usize, targets: &[i32]) -> f64 {
+    assert_eq!(logits.len(), targets.len() * vocab);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for (i, &t) in targets.iter().enumerate() {
+        if t < 0 {
+            continue;
+        }
+        total += 1;
+        let row = &logits[i * vocab..(i + 1) * vocab];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        if best == t as usize {
+            correct += 1;
+        }
+    }
+    if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }
+}
+
+/// Perplexity from mean cross-entropy (nats).
+pub fn perplexity(mean_nll: f64) -> f64 {
+    mean_nll.exp()
+}
+
+/// Mean Shannon entropy of attention rows (Fig. 15/16): `weights` is a
+/// row-major `[rows, cols]` nonnegative matrix.
+pub fn mean_attention_entropy(weights: &[f32], cols: usize) -> f64 {
+    assert_eq!(weights.len() % cols, 0);
+    let rows = weights.len() / cols;
+    let mut total = 0.0;
+    for r in 0..rows {
+        total += crate::math::stats::entropy(&weights[r * cols..(r + 1) * cols]);
+    }
+    total / rows.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_counts_only_unmasked() {
+        // vocab 3, two positions; first predicts class 2 correctly, second
+        // is masked.
+        let logits = vec![0.0, 0.1, 0.9, 0.9, 0.1, 0.0];
+        assert_eq!(token_accuracy(&logits, 3, &[2, -1]), 1.0);
+        assert_eq!(token_accuracy(&logits, 3, &[1, -1]), 0.0);
+        assert_eq!(token_accuracy(&logits, 3, &[-1, -1]), 0.0);
+    }
+
+    #[test]
+    fn perplexity_of_uniform() {
+        let v = 64.0f64;
+        assert!((perplexity(v.ln()) - v).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_diffuse_vs_peaked() {
+        let diffuse = vec![0.25f32; 8]; // two rows of uniform over 4
+        let peaked = vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        assert!(
+            mean_attention_entropy(&diffuse, 4) > mean_attention_entropy(&peaked, 4)
+        );
+    }
+}

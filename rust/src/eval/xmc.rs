@@ -1,0 +1,131 @@
+//! Extreme multi-label classification metrics (Table 4, Eurlex-4K):
+//! precision@k and propensity-scored precision@k.
+//!
+//! PSP@k follows Jain et al. (2016): label propensity
+//! `p_l = 1 / (1 + C e^{−A log(N_l + B)})` with the standard Eurlex
+//! constants A = 0.55, B = 1.5; PSP@k divides each hit by its propensity
+//! and normalizes by the best attainable propensity-weighted score.
+
+/// Propensity model constants (Jain et al. 2016, Eurlex defaults).
+#[derive(Clone, Copy, Debug)]
+pub struct PropensityModel {
+    pub a: f64,
+    pub b: f64,
+}
+
+impl Default for PropensityModel {
+    fn default() -> Self {
+        PropensityModel { a: 0.55, b: 1.5 }
+    }
+}
+
+impl PropensityModel {
+    /// Per-label propensities from training-set label frequencies.
+    pub fn propensities(&self, label_counts: &[usize], n_train: usize) -> Vec<f64> {
+        let n = n_train as f64;
+        let c = (n.ln() - 1.0) * (1.0 + self.b).powf(self.a);
+        label_counts
+            .iter()
+            .map(|&nl| 1.0 / (1.0 + c * (-(self.a) * ((nl as f64) + self.b).ln()).exp()))
+            .collect()
+    }
+}
+
+/// Top-k indices of a score row (descending).
+pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Precision@k over a test set: `scores[i]` is the label-score row of
+/// sample i; `truths[i]` its true label set.
+pub fn precision_at_k(scores: &[Vec<f32>], truths: &[Vec<usize>], k: usize) -> f64 {
+    assert_eq!(scores.len(), truths.len());
+    let mut total = 0.0;
+    for (s, t) in scores.iter().zip(truths.iter()) {
+        let top = top_k(s, k);
+        let hits = top.iter().filter(|i| t.contains(i)).count();
+        total += hits as f64 / k as f64;
+    }
+    total / scores.len().max(1) as f64
+}
+
+/// Propensity-scored precision@k (normalized as in the XMC literature:
+/// numerator over predicted top-k, denominator over the *best possible*
+/// top-k by inverse propensity of the true labels).
+pub fn psp_at_k(
+    scores: &[Vec<f32>],
+    truths: &[Vec<usize>],
+    propensities: &[f64],
+    k: usize,
+) -> f64 {
+    assert_eq!(scores.len(), truths.len());
+    let mut total = 0.0;
+    for (s, t) in scores.iter().zip(truths.iter()) {
+        let top = top_k(s, k);
+        let num: f64 = top
+            .iter()
+            .filter(|i| t.contains(i))
+            .map(|&i| 1.0 / propensities[i].max(1e-12))
+            .sum();
+        // ideal: the k true labels with smallest propensity
+        let mut inv: Vec<f64> = t.iter().map(|&i| 1.0 / propensities[i].max(1e-12)).collect();
+        inv.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let den: f64 = inv.iter().take(k).sum();
+        if den > 0.0 {
+            total += num / den;
+        }
+    }
+    total / scores.len().max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_orders_descending() {
+        assert_eq!(top_k(&[0.1, 0.9, 0.5], 2), vec![1, 2]);
+    }
+
+    #[test]
+    fn perfect_predictions_score_one() {
+        let scores = vec![vec![0.9, 0.8, 0.1, 0.0], vec![0.1, 0.9, 0.8, 0.0]];
+        let truths = vec![vec![0, 1], vec![1, 2]];
+        assert!((precision_at_k(&scores, &truths, 2) - 1.0).abs() < 1e-12);
+        let props = vec![0.5; 4];
+        assert!((psp_at_k(&scores, &truths, &props, 2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn precision_partial_credit() {
+        let scores = vec![vec![0.9, 0.8, 0.1]];
+        let truths = vec![vec![0, 2]]; // one of top-2 correct
+        assert!((precision_at_k(&scores, &truths, 2) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn psp_rewards_tail_labels_more() {
+        // Two systems, each gets one hit; hitting the tail label (low
+        // propensity) must score higher than hitting the head label.
+        let props = vec![0.9, 0.1]; // label 0 head, label 1 tail
+        let truths = vec![vec![0, 1]];
+        let head_hit = vec![vec![1.0, 0.0]];
+        let tail_hit = vec![vec![0.0, 1.0]];
+        let s_head = psp_at_k(&head_hit, &truths, &props, 1);
+        let s_tail = psp_at_k(&tail_hit, &truths, &props, 1);
+        assert!(s_tail > s_head, "{s_tail} <= {s_head}");
+    }
+
+    #[test]
+    fn propensity_model_monotone_in_frequency() {
+        let m = PropensityModel::default();
+        let p = m.propensities(&[1, 10, 100, 1000], 10_000);
+        for w in p.windows(2) {
+            assert!(w[1] > w[0], "propensity should grow with frequency: {p:?}");
+        }
+        assert!(p.iter().all(|&x| x > 0.0 && x < 1.0));
+    }
+}

@@ -1,0 +1,299 @@
+//! Configuration types for every attention mechanism in the paper's
+//! evaluation (Table 9) and for the SLAY estimator's internal knobs
+//! (Appendix I: R, D, P/D_p, fusion, stabilizers).
+
+/// How the degree-2 polynomial factor `(q̂ᵀk̂)²` is approximated (§2.4.2,
+/// Table 1, Appendix C).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PolyMethod {
+    /// Exact `vec(uuᵀ)` map — d² features, unbiased, nonnegative.
+    Exact,
+    /// Anchor features `P^{-1/2}[(xᵀaᵢ)²]` — biased low-rank, nonnegative.
+    /// **Paper default.**
+    Anchor,
+    /// Nystrom features `K_xA (K_AA+λI)^{−1/2}` — signed.
+    Nystrom,
+    /// TensorSketch (count-sketch + FFT) — unbiased-ish, signed.
+    TensorSketch,
+    /// Random Maclaurin Rademacher products — unbiased, signed.
+    RandomMaclaurin,
+}
+
+impl PolyMethod {
+    /// Does the induced approximate inner product stay nonnegative?
+    /// (Table 1's last column; drives the denominator-positivity guarantee.)
+    pub fn positivity_preserving(self) -> bool {
+        matches!(self, PolyMethod::Exact | PolyMethod::Anchor)
+    }
+
+    /// Unbiased for `(xᵀy)²`? (Table 1.)
+    pub fn unbiased(self) -> bool {
+        matches!(self, PolyMethod::Exact | PolyMethod::RandomMaclaurin)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolyMethod::Exact => "exact",
+            PolyMethod::Anchor => "anchor",
+            PolyMethod::Nystrom => "nystrom",
+            PolyMethod::TensorSketch => "tensorsketch",
+            PolyMethod::RandomMaclaurin => "random_maclaurin",
+        }
+    }
+}
+
+/// How the per-node polynomial × exponential features are fused (Eq. 10,
+/// Appendix F "Hadamard fusion", Appendix I "explicit tensor product").
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fusion {
+    /// Explicit Kronecker product — `D_p·D` features per node; preserves
+    /// positivity when both factors do. Default.
+    Explicit,
+    /// TensorSketch of the Kronecker product to `d_t` dims — saves memory,
+    /// signed (accuracy/efficiency baseline).
+    Sketch { d_t: usize },
+    /// Elementwise product (requires `D_p == D`) — biased kernel (App. F),
+    /// fast baseline.
+    Hadamard,
+    /// Drop the polynomial factor entirely and use the exact Laplace-only
+    /// identity with affine correction (App. F): signed estimator, no
+    /// positivity guarantee. `φ = PRF only`, correction applied in the
+    /// attention engine.
+    LaplaceOnly,
+}
+
+impl Fusion {
+    pub fn name(self) -> &'static str {
+        match self {
+            Fusion::Explicit => "explicit",
+            Fusion::Sketch { .. } => "sketch",
+            Fusion::Hadamard => "hadamard",
+            Fusion::LaplaceOnly => "laplace_only",
+        }
+    }
+}
+
+/// Full SLAY estimator configuration.
+#[derive(Clone, Debug)]
+pub struct SlayConfig {
+    /// Yat-kernel stabilizer ε (paper: 1e-3 for Yat family).
+    pub eps: f64,
+    /// Attention-denominator stabilizer δ (Eq. 11).
+    pub delta: f32,
+    /// Gauss–Laguerre node count R (paper default 3, App. L.3).
+    pub r_nodes: usize,
+    /// Polynomial approximation method (default anchor).
+    pub poly: PolyMethod,
+    /// Anchor count P / polynomial feature dim D_p.
+    pub n_poly: usize,
+    /// PRF feature count D per node.
+    pub d_prf: usize,
+    /// Fusion operator.
+    pub fusion: Fusion,
+    /// RNG seed for anchors / ω draws (deterministic features).
+    pub seed: u64,
+    /// Nystrom ridge λ.
+    pub nystrom_ridge: f64,
+}
+
+impl Default for SlayConfig {
+    fn default() -> Self {
+        // Matches Table 9: ε=1e-3, M_PRF=16, M_Poly=8, with R=3 (App. L.3).
+        SlayConfig {
+            eps: 1e-3,
+            delta: 1e-6,
+            r_nodes: 3,
+            poly: PolyMethod::Anchor,
+            n_poly: 8,
+            d_prf: 16,
+            fusion: Fusion::Explicit,
+            seed: 42,
+            nystrom_ridge: 1e-3,
+        }
+    }
+}
+
+impl SlayConfig {
+    /// `C = 2 + ε` (Eq. 4).
+    pub fn c(&self) -> f64 {
+        2.0 + self.eps
+    }
+
+    /// Total feature dimension m after concatenating R nodes (App. I).
+    pub fn feature_dim(&self, d_model: usize) -> usize {
+        let d_p = match self.poly {
+            PolyMethod::Exact => d_model * d_model,
+            _ => self.n_poly,
+        };
+        let per_node = match self.fusion {
+            Fusion::Explicit => d_p * self.d_prf,
+            Fusion::Sketch { d_t } => d_t,
+            Fusion::Hadamard => d_p, // requires d_p == d_prf
+            Fusion::LaplaceOnly => self.d_prf,
+        };
+        per_node * self.r_nodes
+    }
+
+    /// Whether this configuration carries the paper's strict-positivity
+    /// guarantee (App. G): positive poly map + explicit/hadamard fusion.
+    pub fn positivity_guaranteed(&self) -> bool {
+        self.poly.positivity_preserving()
+            && matches!(self.fusion, Fusion::Explicit | Fusion::Hadamard)
+    }
+
+    pub fn with_poly(mut self, poly: PolyMethod) -> Self {
+        self.poly = poly;
+        self
+    }
+
+    pub fn with_fusion(mut self, fusion: Fusion) -> Self {
+        self.fusion = fusion;
+        self
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.eps <= 0.0 {
+            anyhow::bail!("eps must be positive (Bernstein representation needs C−2x ≥ ε > 0)");
+        }
+        if self.r_nodes == 0 || self.r_nodes > 64 {
+            anyhow::bail!("r_nodes must be in 1..=64, got {}", self.r_nodes);
+        }
+        if self.d_prf == 0 || self.n_poly == 0 {
+            anyhow::bail!("feature counts must be positive");
+        }
+        if matches!(self.fusion, Fusion::Hadamard) && self.n_poly != self.d_prf {
+            anyhow::bail!(
+                "hadamard fusion requires n_poly == d_prf (got {} vs {})",
+                self.n_poly,
+                self.d_prf
+            );
+        }
+        if let Fusion::Sketch { d_t } = self.fusion {
+            if !d_t.is_power_of_two() {
+                anyhow::bail!("sketch dim d_t must be a power of two (FFT), got {d_t}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The attention mechanisms compared throughout the paper (Fig. 2, Tables
+/// 2–8; Table 9 configs).
+#[derive(Clone, Debug)]
+pub enum Mechanism {
+    /// Standard softmax attention — quadratic.
+    Standard,
+    /// Exact Yat (E-product on raw q,k) — quadratic.
+    Yat { eps: f64 },
+    /// Exact spherical Yat — quadratic.
+    YatSpherical { eps: f64 },
+    /// SLAY — linear.
+    Slay(SlayConfig),
+    /// Performer FAVOR+ (ReLU random features, M=64; Table 9) — linear.
+    Favor { m_features: usize, seed: u64 },
+    /// Linear attention with ELU+1 feature map — linear.
+    EluLinear,
+    /// Cosformer (Qin et al. 2022): ReLU features with cos/sin positional
+    /// reweighting — linear.
+    Cosformer,
+}
+
+impl Mechanism {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Mechanism::Standard => "standard",
+            Mechanism::Yat { .. } => "yat",
+            Mechanism::YatSpherical { .. } => "yat_spherical",
+            Mechanism::Slay(_) => "slay",
+            Mechanism::Favor { .. } => "favor",
+            Mechanism::EluLinear => "elu_linear",
+            Mechanism::Cosformer => "cosformer",
+        }
+    }
+
+    pub fn is_linear(&self) -> bool {
+        matches!(
+            self,
+            Mechanism::Slay(_) | Mechanism::Favor { .. } | Mechanism::EluLinear | Mechanism::Cosformer
+        )
+    }
+
+    /// Table 9 defaults by name (used by CLI and benches).
+    pub fn from_name(name: &str) -> anyhow::Result<Mechanism> {
+        Ok(match name {
+            "standard" | "softmax" => Mechanism::Standard,
+            "yat" => Mechanism::Yat { eps: 1e-3 },
+            "yat_spherical" | "spherical" => Mechanism::YatSpherical { eps: 1e-3 },
+            "slay" => Mechanism::Slay(SlayConfig::default()),
+            "favor" | "performer" => Mechanism::Favor { m_features: 64, seed: 42 },
+            "elu_linear" | "linear" => Mechanism::EluLinear,
+            "cosformer" => Mechanism::Cosformer,
+            other => anyhow::bail!("unknown mechanism '{other}'"),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_matches_table9() {
+        let c = SlayConfig::default();
+        assert_eq!(c.eps, 1e-3);
+        assert_eq!(c.n_poly, 8);
+        assert_eq!(c.d_prf, 16);
+        assert_eq!(c.r_nodes, 3);
+        assert!(c.positivity_guaranteed());
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn feature_dims() {
+        let c = SlayConfig::default();
+        assert_eq!(c.feature_dim(64), 3 * 8 * 16);
+        let c2 = c.clone().with_fusion(Fusion::Sketch { d_t: 64 });
+        assert_eq!(c2.feature_dim(64), 3 * 64);
+        let c3 = SlayConfig { poly: PolyMethod::Exact, ..SlayConfig::default() };
+        assert_eq!(c3.feature_dim(4), 3 * 16 * 16);
+    }
+
+    #[test]
+    fn positivity_table_matches_table1() {
+        assert!(PolyMethod::Exact.positivity_preserving());
+        assert!(PolyMethod::Anchor.positivity_preserving());
+        assert!(!PolyMethod::Nystrom.positivity_preserving());
+        assert!(!PolyMethod::TensorSketch.positivity_preserving());
+        assert!(!PolyMethod::RandomMaclaurin.positivity_preserving());
+        assert!(PolyMethod::Exact.unbiased());
+        assert!(PolyMethod::RandomMaclaurin.unbiased());
+        assert!(!PolyMethod::Anchor.unbiased());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        assert!(SlayConfig { eps: 0.0, ..Default::default() }.validate().is_err());
+        assert!(SlayConfig { r_nodes: 0, ..Default::default() }.validate().is_err());
+        let bad_had = SlayConfig {
+            fusion: Fusion::Hadamard,
+            n_poly: 8,
+            d_prf: 16,
+            ..Default::default()
+        };
+        assert!(bad_had.validate().is_err());
+        let bad_sketch = SlayConfig {
+            fusion: Fusion::Sketch { d_t: 100 },
+            ..Default::default()
+        };
+        assert!(bad_sketch.validate().is_err());
+    }
+
+    #[test]
+    fn mechanism_names_roundtrip() {
+        for name in ["standard", "yat", "yat_spherical", "slay", "favor", "elu_linear", "cosformer"] {
+            let m = Mechanism::from_name(name).unwrap();
+            assert_eq!(m.name(), name);
+        }
+        assert!(Mechanism::from_name("bogus").is_err());
+    }
+}

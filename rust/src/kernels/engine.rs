@@ -1,0 +1,321 @@
+//! Attention engines.
+//!
+//! * [`quadratic_attention`] — materializes the L×L score matrix
+//!   (reference / baseline path; kernel normalization over the allowed
+//!   region).
+//! * [`linear_attention`] — the Eq. 11 reordering `Ψ(Q)(Ψ(K)ᵀV)` with
+//!   row-wise kernel normalization, non-causal (two contractions) and
+//!   causal (running prefix state) variants. The L×L matrix is never
+//!   formed.
+//! * [`StreamingState`] — the linear-attention analog of a KV-cache:
+//!   per-sequence `(S = Ψ(K)ᵀV ∈ R^{m×d_v}, z = Ψ(K)ᵀ1 ∈ R^m)`, used by the
+//!   coordinator's decode path.
+
+use crate::math::linalg::{axpy, dot, matmul, matmul_at_b, Mat};
+
+/// Kernel-normalized quadratic attention: `Y_i = Σ_j S_ij V_j / (Σ_j S_ij + δ)`
+/// with `j ≤ i` under causal masking. `scores` must be nonnegative for the
+/// normalization to be meaningful (softmax scores arrive pre-exponentiated).
+pub fn quadratic_attention(scores: &Mat, v: &Mat, causal: bool, delta: f32) -> Mat {
+    assert_eq!(scores.cols, v.rows, "scores/V mismatch");
+    let mut out = Mat::zeros(scores.rows, v.cols);
+    for i in 0..scores.rows {
+        let limit = if causal { (i + 1).min(scores.cols) } else { scores.cols };
+        let srow = &scores.row(i)[..limit];
+        let mut den = 0.0f32;
+        let orow = out.row_mut(i);
+        for (j, &s) in srow.iter().enumerate() {
+            den += s;
+            if s != 0.0 {
+                axpy(s, v.row(j), orow);
+            }
+        }
+        let inv = 1.0 / (den + delta);
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
+    }
+    out
+}
+
+/// Non-causal linear attention (Eq. 11):
+/// `Y = Ψ(Q)(Ψ(K)ᵀV) / (Ψ(Q)(Ψ(K)ᵀ1) + δ)` — O(L·m·d_v).
+pub fn linear_attention_noncausal(phi_q: &Mat, phi_k: &Mat, v: &Mat, delta: f32) -> Mat {
+    assert_eq!(phi_q.cols, phi_k.cols);
+    assert_eq!(phi_k.rows, v.rows);
+    let s = matmul_at_b(phi_k, v); // m × d_v
+    let z: Vec<f32> = {
+        // Ψ(K)ᵀ1 — column sums of Ψ(K)
+        let mut z = vec![0.0f32; phi_k.cols];
+        for r in 0..phi_k.rows {
+            for (zi, &x) in z.iter_mut().zip(phi_k.row(r)) {
+                *zi += x;
+            }
+        }
+        z
+    };
+    let mut y = matmul(phi_q, &s); // L × d_v
+    for i in 0..y.rows {
+        let den = dot(phi_q.row(i), &z) + delta;
+        let inv = 1.0 / den;
+        for o in y.row_mut(i).iter_mut() {
+            *o *= inv;
+        }
+    }
+    y
+}
+
+/// Causal linear attention via running prefix sums: after consuming token
+/// `i` the state is `(S_i, z_i)` and `Y_i = Ψ(q_i)ᵀ S_i / (Ψ(q_i)ᵀ z_i + δ)`.
+pub fn linear_attention_causal(phi_q: &Mat, phi_k: &Mat, v: &Mat, delta: f32) -> Mat {
+    assert_eq!(phi_q.cols, phi_k.cols);
+    assert_eq!(phi_k.rows, v.rows);
+    assert_eq!(phi_q.rows, phi_k.rows);
+    let mut state = StreamingState::new(phi_q.cols, v.cols);
+    let mut out = Mat::zeros(phi_q.rows, v.cols);
+    for i in 0..phi_q.rows {
+        state.append(phi_k.row(i), v.row(i));
+        state.query_into(phi_q.row(i), delta, out.row_mut(i));
+    }
+    out
+}
+
+/// Unified entry: dispatch on causality.
+pub fn linear_attention(phi_q: &Mat, phi_k: &Mat, v: &Mat, causal: bool, delta: f32) -> Mat {
+    if causal {
+        linear_attention_causal(phi_q, phi_k, v, delta)
+    } else {
+        linear_attention_noncausal(phi_q, phi_k, v, delta)
+    }
+}
+
+/// Streaming per-sequence state — the linear-attention "KV-cache".
+///
+/// Memory is `m·(d_v + 1)` floats regardless of how many tokens have been
+/// absorbed: this constant-size state is what lets the coordinator serve
+/// 131K-token contexts (Fig. 2/21) without quadratic growth.
+#[derive(Clone, Debug)]
+pub struct StreamingState {
+    pub m: usize,
+    pub d_v: usize,
+    /// `S = Ψ(K)ᵀV`, row-major `m × d_v`.
+    pub s: Vec<f32>,
+    /// `z = Ψ(K)ᵀ1`.
+    pub z: Vec<f32>,
+    /// Tokens absorbed so far.
+    pub len: usize,
+}
+
+impl StreamingState {
+    pub fn new(m: usize, d_v: usize) -> Self {
+        StreamingState { m, d_v, s: vec![0.0; m * d_v], z: vec![0.0; m], len: 0 }
+    }
+
+    /// Absorb one (key-feature, value) pair: `S += φ_k ⊗ v`, `z += φ_k`.
+    pub fn append(&mut self, phi_k: &[f32], v: &[f32]) {
+        debug_assert_eq!(phi_k.len(), self.m);
+        debug_assert_eq!(v.len(), self.d_v);
+        for (j, &f) in phi_k.iter().enumerate() {
+            if f != 0.0 {
+                axpy(f, v, &mut self.s[j * self.d_v..(j + 1) * self.d_v]);
+            }
+            self.z[j] += f;
+        }
+        self.len += 1;
+    }
+
+    /// Absorb a whole chunk (prefill): `S += Ψ(K)ᵀV` via one contraction.
+    pub fn extend(&mut self, phi_k: &Mat, v: &Mat) {
+        assert_eq!(phi_k.cols, self.m);
+        assert_eq!(v.cols, self.d_v);
+        assert_eq!(phi_k.rows, v.rows);
+        let delta_s = matmul_at_b(phi_k, v);
+        for (a, b) in self.s.iter_mut().zip(delta_s.data.iter()) {
+            *a += b;
+        }
+        for r in 0..phi_k.rows {
+            for (zi, &x) in self.z.iter_mut().zip(phi_k.row(r)) {
+                *zi += x;
+            }
+        }
+        self.len += phi_k.rows;
+    }
+
+    /// Attend with one query-feature row, writing `d_v` outputs into `out`.
+    pub fn query_into(&self, phi_q: &[f32], delta: f32, out: &mut [f32]) {
+        debug_assert_eq!(phi_q.len(), self.m);
+        debug_assert_eq!(out.len(), self.d_v);
+        out.fill(0.0);
+        for (j, &f) in phi_q.iter().enumerate() {
+            if f != 0.0 {
+                axpy(f, &self.s[j * self.d_v..(j + 1) * self.d_v], out);
+            }
+        }
+        let den = dot(phi_q, &self.z) + delta;
+        let inv = 1.0 / den;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Convenience allocating variant.
+    pub fn query(&self, phi_q: &[f32], delta: f32) -> Vec<f32> {
+        let mut out = vec![0.0; self.d_v];
+        self.query_into(phi_q, delta, &mut out);
+        out
+    }
+
+    /// Bytes held by this state (capacity accounting for the coordinator).
+    pub fn bytes(&self) -> usize {
+        (self.s.len() + self.z.len()) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Analytic peak-workspace model (bytes) for one attention head at sequence
+/// length `L` — drives the Fig. 2/21 memory series without having to OOM
+/// the host for the quadratic mechanisms at 131K tokens.
+pub fn workspace_bytes(linear_feature_dim: Option<usize>, l: usize, d: usize, d_v: usize) -> usize {
+    let f = std::mem::size_of::<f32>();
+    match linear_feature_dim {
+        // scores L×L plus Q,K,V,Y
+        None => f * (l * l + l * (2 * d + 2 * d_v)),
+        // features 2·L×m, state m×(d_v+1), Q,K,V,Y
+        Some(m) => f * (2 * l * m + m * (d_v + 1) + l * (2 * d + 2 * d_v)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> Mat {
+        Mat::randn(r, c, &mut Rng::new(seed))
+    }
+
+    /// Reference: explicit score matrix from features, then quadratic path.
+    fn linear_via_quadratic(phi_q: &Mat, phi_k: &Mat, v: &Mat, causal: bool, delta: f32) -> Mat {
+        let scores = crate::math::linalg::matmul_a_bt(phi_q, phi_k);
+        quadratic_attention(&scores, v, causal, delta)
+    }
+
+    #[test]
+    fn noncausal_linear_matches_explicit_scores() {
+        let phi_q = rand_mat(12, 7, 71).map(|x| x.abs()); // nonneg features
+        let phi_k = rand_mat(12, 7, 72).map(|x| x.abs());
+        let v = rand_mat(12, 5, 73);
+        let fast = linear_attention_noncausal(&phi_q, &phi_k, &v, 1e-6);
+        let slow = linear_via_quadratic(&phi_q, &phi_k, &v, false, 1e-6);
+        for (a, b) in fast.data.iter().zip(slow.data.iter()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn causal_linear_matches_masked_quadratic() {
+        let phi_q = rand_mat(16, 6, 74).map(|x| x.abs());
+        let phi_k = rand_mat(16, 6, 75).map(|x| x.abs());
+        let v = rand_mat(16, 4, 76);
+        let fast = linear_attention_causal(&phi_q, &phi_k, &v, 1e-6);
+        let slow = linear_via_quadratic(&phi_q, &phi_k, &v, true, 1e-6);
+        for (a, b) in fast.data.iter().zip(slow.data.iter()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn causal_first_token_attends_only_itself() {
+        let phi_q = rand_mat(4, 3, 77).map(|x| x.abs() + 0.1);
+        let phi_k = phi_q.clone();
+        let v = rand_mat(4, 2, 78);
+        let y = linear_attention_causal(&phi_q, &phi_k, &v, 0.0);
+        // Y_0 = (φq0·φk0 v0)/(φq0·φk0) = v0
+        for c in 0..2 {
+            assert!((y.get(0, c) - v.get(0, c)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn streaming_state_equals_batch_causal() {
+        let phi_q = rand_mat(20, 8, 79).map(|x| x.abs());
+        let phi_k = rand_mat(20, 8, 80).map(|x| x.abs());
+        let v = rand_mat(20, 6, 81);
+        let batch = linear_attention_causal(&phi_q, &phi_k, &v, 1e-6);
+        let mut state = StreamingState::new(8, 6);
+        for i in 0..20 {
+            state.append(phi_k.row(i), v.row(i));
+            let y = state.query(phi_q.row(i), 1e-6);
+            for c in 0..6 {
+                assert!((y[c] - batch.get(i, c)).abs() < 1e-4, "tok {i} col {c}");
+            }
+        }
+        assert_eq!(state.len, 20);
+    }
+
+    #[test]
+    fn chunked_extend_equals_append_loop() {
+        let phi_k = rand_mat(24, 5, 82).map(|x| x.abs());
+        let v = rand_mat(24, 3, 83);
+        let mut s1 = StreamingState::new(5, 3);
+        for i in 0..24 {
+            s1.append(phi_k.row(i), v.row(i));
+        }
+        let mut s2 = StreamingState::new(5, 3);
+        // two chunks
+        let top = Mat::from_vec(10, 5, phi_k.data[..50].to_vec());
+        let bot = Mat::from_vec(14, 5, phi_k.data[50..].to_vec());
+        let vt = Mat::from_vec(10, 3, v.data[..30].to_vec());
+        let vb = Mat::from_vec(14, 3, v.data[30..].to_vec());
+        s2.extend(&top, &vt);
+        s2.extend(&bot, &vb);
+        for (a, b) in s1.s.iter().zip(s2.s.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        for (a, b) in s1.z.iter().zip(s2.z.iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn quadratic_rows_are_convex_combinations() {
+        // With nonneg scores and δ→0, each output row is a convex combination
+        // of value rows ⇒ stays within [min, max] per column.
+        let scores = rand_mat(10, 10, 84).map(|x| x.abs());
+        let v = rand_mat(10, 3, 85);
+        let y = quadratic_attention(&scores, &v, false, 0.0);
+        for c in 0..3 {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for r in 0..10 {
+                lo = lo.min(v.get(r, c));
+                hi = hi.max(v.get(r, c));
+            }
+            for r in 0..10 {
+                let x = y.get(r, c);
+                assert!(x >= lo - 1e-4 && x <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn workspace_model_orders_mechanisms_correctly() {
+        // quadratic blows past linear once L·L dominates L·m.
+        let m = 384;
+        let quad_small = workspace_bytes(None, 256, 64, 64);
+        let lin_small = workspace_bytes(Some(m), 256, 64, 64);
+        assert!(quad_small < lin_small); // short L: features cost more
+        let quad_big = workspace_bytes(None, 32_768, 64, 64);
+        let lin_big = workspace_bytes(Some(m), 32_768, 64, 64);
+        assert!(quad_big > 10 * lin_big); // long L: quadratic explodes
+    }
+
+    #[test]
+    fn zero_features_yield_finite_outputs() {
+        // δ stabilizer prevents 0/0 (Higham-style guard from §2.5).
+        let phi = Mat::zeros(3, 4);
+        let v = rand_mat(3, 2, 86);
+        let y = linear_attention_noncausal(&phi, &phi, &v, 1e-6);
+        assert!(y.data.iter().all(|x| x.is_finite()));
+        let yc = linear_attention_causal(&phi, &phi, &v, 1e-6);
+        assert!(yc.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,74 @@
+//! Feature maps used to linearize attention kernels.
+//!
+//! * [`poly`] — the five approximations of the degree-2 polynomial factor
+//!   `(q̂ᵀk̂)²` (Table 1 / Appendix C): exact `vec(uuᵀ)`, anchor, Nystrom,
+//!   TensorSketch, Random Maclaurin.
+//! * [`prf`] — positive random features for `e^{2s·q̂ᵀk̂}` (Eq. 9) plus the
+//!   FAVOR+ ReLU features, the ELU+1 map and cosformer's positional
+//!   reweighting used by the baseline mechanisms.
+
+pub mod poly;
+pub mod prf;
+
+use crate::math::linalg::Mat;
+
+/// A map from token rows to feature rows. Implementations must be
+/// deterministic given their construction-time seed so that Q and K paths
+/// share identical randomness.
+pub trait FeatureMap: Send + Sync {
+    /// Input (model/head) dimension.
+    fn input_dim(&self) -> usize;
+    /// Output feature dimension.
+    fn dim(&self) -> usize;
+    /// Map each row of `x` (shape `L × input_dim`) to features
+    /// (`L × dim`). `pos0` is the absolute position of row 0 — only
+    /// position-dependent maps (cosformer) read it.
+    fn map(&self, x: &Mat, pos0: usize) -> Mat;
+}
+
+/// Dispatchable boxed feature map.
+pub type BoxedMap = Box<dyn FeatureMap>;
+
+/// Kronecker product of two feature rows — the explicit tensor-product
+/// fusion of Eq. 10 (`φ_poly ⊗ φ_PRF`), producing `|a|·|b|` features.
+pub fn kron_row(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(out.len(), a.len() * b.len());
+    let nb = b.len();
+    for (i, &ai) in a.iter().enumerate() {
+        let chunk = &mut out[i * nb..(i + 1) * nb];
+        for (o, &bj) in chunk.iter_mut().zip(b.iter()) {
+            *o = ai * bj;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kron_row_matches_definition() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0, 5.0];
+        let mut out = [0.0f32; 6];
+        kron_row(&a, &b, &mut out);
+        assert_eq!(out, [3.0, 4.0, 5.0, 6.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn kron_inner_product_factorizes() {
+        // ⟨a⊗b, c⊗d⟩ = ⟨a,c⟩·⟨b,d⟩ — the identity Eq. 10 relies on.
+        let a = [0.5f32, -1.0, 2.0];
+        let b = [1.5f32, 0.25];
+        let c = [2.0f32, 1.0, -0.5];
+        let d = [0.1f32, -0.7];
+        let mut ab = [0.0f32; 6];
+        let mut cd = [0.0f32; 6];
+        kron_row(&a, &b, &mut ab);
+        kron_row(&c, &d, &mut cd);
+        let lhs: f32 = ab.iter().zip(&cd).map(|(x, y)| x * y).sum();
+        let ac: f32 = a.iter().zip(&c).map(|(x, y)| x * y).sum();
+        let bd: f32 = b.iter().zip(&d).map(|(x, y)| x * y).sum();
+        assert!((lhs - ac * bd).abs() < 1e-5);
+    }
+}

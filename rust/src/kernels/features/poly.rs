@@ -1,0 +1,446 @@
+//! Approximations of the degree-2 polynomial kernel `k(x,y) = (xᵀy)²`
+//! (§2.4.2, Table 1, Appendix C).
+//!
+//! * [`PolyExact`] — `vec(uuᵀ)`: exact, d² features, nonnegative inner
+//!   products.
+//! * [`Anchor`] — `P^{−1/2}[(xᵀaᵢ)²]`: biased low-rank, **nonnegative**
+//!   inner products, the paper's default.
+//! * [`Nystrom`] — `K_xA (K_AA + λI)^{−1/2}`: low-rank, whitened, signed.
+//! * [`RandomMaclaurin`] — `P^{−1/2}[(rᵢᵀx)(sᵢᵀx)]` with Rademacher `r,s`:
+//!   unbiased, signed, high variance at small P.
+//! * [`TensorSketch`] — count-sketch of `x ⊗ x` via FFT: near-unbiased,
+//!   signed.
+
+use super::FeatureMap;
+use crate::math::fft::{circular_convolve, next_pow2};
+use crate::math::linalg::{dot, matmul, matmul_a_bt, Mat};
+use crate::math::rng::Rng;
+
+// ---------------------------------------------------------------------------
+
+/// Exact feature map `φ(u) = vec(uuᵀ) ∈ R^{d²}`.
+pub struct PolyExact {
+    d: usize,
+}
+
+impl PolyExact {
+    pub fn new(d: usize) -> Self {
+        PolyExact { d }
+    }
+}
+
+impl FeatureMap for PolyExact {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn dim(&self) -> usize {
+        self.d * self.d
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        assert_eq!(x.cols, self.d);
+        let mut out = Mat::zeros(x.rows, self.d * self.d);
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let orow = out.row_mut(r);
+            for i in 0..self.d {
+                for j in 0..self.d {
+                    orow[i * self.d + j] = row[i] * row[j];
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Shared anchor set: `P` unit-norm reference directions drawn N(0, I_d)
+/// then normalized (anchors live where the data lives — the unit sphere).
+pub fn draw_anchors(p: usize, d: usize, rng: &mut Rng) -> Mat {
+    Mat::randn(p, d, rng).normalized_rows()
+}
+
+/// Anchor features `φ(x) = P^{−1/2} [(xᵀaᵢ)²]_{i=1..P}` (§2.4.2) — the
+/// paper's default polynomial approximation: not unbiased, but every
+/// coordinate (hence every induced inner product) is nonnegative, which is
+/// what the denominator-positivity guarantee needs.
+pub struct Anchor {
+    anchors: Mat, // P × d
+    scale: f32,   // 1/√P
+}
+
+impl Anchor {
+    pub fn new(p: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        Anchor { anchors: draw_anchors(p, d, &mut rng), scale: 1.0 / (p as f32).sqrt() }
+    }
+
+    pub fn from_anchors(anchors: Mat) -> Self {
+        let p = anchors.rows;
+        Anchor { anchors, scale: 1.0 / (p as f32).sqrt() }
+    }
+
+    /// Data-driven anchors: sample `p` rows of `data` (normalized). Rank-P
+    /// approximations of `(xᵀy)²` are markedly tighter when anchors live
+    /// where the tokens live; the serving coordinator uses this for its
+    /// calibrated SLAY variant.
+    pub fn from_data(data: &Mat, p: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut anchors = Mat::zeros(p, data.cols);
+        for i in 0..p {
+            let r = rng.below(data.rows.max(1));
+            anchors.row_mut(i).copy_from_slice(data.row(r));
+        }
+        anchors.normalize_rows();
+        Anchor::from_anchors(anchors)
+    }
+}
+
+impl FeatureMap for Anchor {
+    fn input_dim(&self) -> usize {
+        self.anchors.cols
+    }
+
+    fn dim(&self) -> usize {
+        self.anchors.rows
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        let mut proj = matmul_a_bt(x, &self.anchors); // L × P of xᵀaᵢ
+        for v in proj.data.iter_mut() {
+            *v = *v * *v * self.scale;
+        }
+        proj
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Nystrom features `φ(x) = K_xA (K_AA + λI)^{−1/2}` over the squared-dot
+/// kernel (Appendix C). Whitening makes the Gram approximation tighter when
+/// anchors are well-conditioned but the whitened coordinates are signed.
+pub struct Nystrom {
+    anchors: Mat,   // P × d
+    whitener: Mat,  // P × P = (K_AA + λI)^{−1/2}
+}
+
+impl Nystrom {
+    pub fn new(p: usize, d: usize, ridge: f64, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let anchors = draw_anchors(p, d, &mut rng);
+        let mut kaa = matmul_a_bt(&anchors, &anchors);
+        for v in kaa.data.iter_mut() {
+            *v = *v * *v; // (aᵢᵀaⱼ)²
+        }
+        for i in 0..p {
+            let x = kaa.get(i, i) + ridge as f32;
+            kaa.set(i, i, x);
+        }
+        let whitener = crate::math::eigen::inv_sqrt_psd(&kaa, 1e-10);
+        Nystrom { anchors, whitener }
+    }
+}
+
+impl FeatureMap for Nystrom {
+    fn input_dim(&self) -> usize {
+        self.anchors.cols
+    }
+
+    fn dim(&self) -> usize {
+        self.anchors.rows
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        let mut kxa = matmul_a_bt(x, &self.anchors);
+        for v in kxa.data.iter_mut() {
+            *v = *v * *v;
+        }
+        matmul(&kxa, &self.whitener)
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Random Maclaurin features `φ(x) = P^{−1/2}[(rᵢᵀx)(sᵢᵀx)]` with
+/// iid Rademacher `rᵢ, sᵢ` (Kar & Karnick 2012): unbiased for `(xᵀy)²`,
+/// signed, variance-dominated at small P (Table 2/6 show the blow-up).
+pub struct RandomMaclaurin {
+    r: Mat, // P × d
+    s: Mat, // P × d
+    scale: f32,
+}
+
+impl RandomMaclaurin {
+    pub fn new(p: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        let mut r = Mat::zeros(p, d);
+        let mut s = Mat::zeros(p, d);
+        for i in 0..p {
+            r.row_mut(i).copy_from_slice(&rng.rademacher_vec(d));
+            s.row_mut(i).copy_from_slice(&rng.rademacher_vec(d));
+        }
+        RandomMaclaurin { r, s, scale: 1.0 / (p as f32).sqrt() }
+    }
+}
+
+impl FeatureMap for RandomMaclaurin {
+    fn input_dim(&self) -> usize {
+        self.r.cols
+    }
+
+    fn dim(&self) -> usize {
+        self.r.rows
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        let pr = matmul_a_bt(x, &self.r);
+        let ps = matmul_a_bt(x, &self.s);
+        let mut out = pr;
+        for (o, &b) in out.data.iter_mut().zip(ps.data.iter()) {
+            *o = *o * b * self.scale;
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// TensorSketch (Pham & Pagh 2013) of the degree-2 tensor `x ⊗ x`:
+/// two independent count-sketches circularly convolved via FFT. `dim` is
+/// rounded up to a power of two internally.
+pub struct TensorSketch {
+    d_in: usize,
+    d_out: usize,
+    h1: Vec<usize>,
+    h2: Vec<usize>,
+    s1: Vec<f32>,
+    s2: Vec<f32>,
+}
+
+impl TensorSketch {
+    pub fn new(d_out: usize, d_in: usize, seed: u64) -> Self {
+        let d_out = next_pow2(d_out.max(2));
+        let mut rng = Rng::new(seed);
+        let h1 = (0..d_in).map(|_| rng.below(d_out)).collect();
+        let h2 = (0..d_in).map(|_| rng.below(d_out)).collect();
+        let s1 = rng.rademacher_vec(d_in);
+        let s2 = rng.rademacher_vec(d_in);
+        TensorSketch { d_in, d_out, h1, h2, s1, s2 }
+    }
+
+    fn count_sketch(&self, row: &[f32], h: &[usize], s: &[f32]) -> Vec<f64> {
+        let mut cs = vec![0.0f64; self.d_out];
+        for (i, &v) in row.iter().enumerate() {
+            cs[h[i]] += (s[i] * v) as f64;
+        }
+        cs
+    }
+}
+
+impl FeatureMap for TensorSketch {
+    fn input_dim(&self) -> usize {
+        self.d_in
+    }
+
+    fn dim(&self) -> usize {
+        self.d_out
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows, self.d_out);
+        for r in 0..x.rows {
+            let row = x.row(r);
+            let c1 = self.count_sketch(row, &self.h1, &self.s1);
+            let c2 = self.count_sketch(row, &self.h2, &self.s2);
+            let conv = circular_convolve(&c1, &c2);
+            for (o, v) in out.row_mut(r).iter_mut().zip(conv.iter()) {
+                *o = *v as f32;
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+/// Build a polynomial feature map from a [`PolyMethod`](crate::kernels::config::PolyMethod).
+pub fn build_poly(
+    method: crate::kernels::config::PolyMethod,
+    n_poly: usize,
+    d: usize,
+    ridge: f64,
+    seed: u64,
+) -> Box<dyn FeatureMap> {
+    use crate::kernels::config::PolyMethod as P;
+    match method {
+        P::Exact => Box::new(PolyExact::new(d)),
+        P::Anchor => Box::new(Anchor::new(n_poly, d, seed)),
+        P::Nystrom => Box::new(Nystrom::new(n_poly, d, ridge, seed)),
+        P::TensorSketch => Box::new(TensorSketch::new(n_poly, d, seed)),
+        P::RandomMaclaurin => Box::new(RandomMaclaurin::new(n_poly, d, seed)),
+    }
+}
+
+/// Estimated kernel value `⟨φ(x), φ(y)⟩` for two single rows (test helper
+/// and Fig. 13 probe).
+pub fn kernel_estimate(map: &dyn FeatureMap, x: &[f32], y: &[f32]) -> f32 {
+    let mx = map.map(&Mat::from_vec(1, x.len(), x.to_vec()), 0);
+    let my = map.map(&Mat::from_vec(1, y.len(), y.to_vec()), 0);
+    dot(mx.row(0), my.row(0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::stats::Welford;
+
+    fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        Mat::randn(1, d, rng).normalized_rows().data
+    }
+
+    #[test]
+    fn exact_map_reconstructs_squared_dot() {
+        let mut rng = Rng::new(41);
+        let d = 6;
+        let m = PolyExact::new(d);
+        for _ in 0..20 {
+            let x = unit(&mut rng, d);
+            let y = unit(&mut rng, d);
+            let want = dot(&x, &y).powi(2);
+            let got = kernel_estimate(&m, &x, &y);
+            assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn anchor_inner_products_nonnegative() {
+        let mut rng = Rng::new(42);
+        let m = Anchor::new(8, 12, 7);
+        for _ in 0..100 {
+            let x = unit(&mut rng, 12);
+            let y = unit(&mut rng, 12);
+            assert!(kernel_estimate(&m, &x, &y) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn random_maclaurin_unbiased() {
+        // Average over many independent draws converges to (xᵀy)².
+        let mut rng = Rng::new(43);
+        let d = 8;
+        let x = unit(&mut rng, d);
+        let y = unit(&mut rng, d);
+        let want = dot(&x, &y).powi(2);
+        let mut w = Welford::default();
+        for seed in 0..300 {
+            let m = RandomMaclaurin::new(16, d, seed);
+            w.push(kernel_estimate(&m, &x, &y) as f64);
+        }
+        let se = w.std() / (w.n as f64).sqrt();
+        assert!(
+            (w.mean() - want as f64).abs() < 4.0 * se + 1e-3,
+            "mean={} want={} se={}",
+            w.mean(),
+            want,
+            se
+        );
+    }
+
+    #[test]
+    fn tensor_sketch_approximately_unbiased() {
+        let mut rng = Rng::new(44);
+        let d = 8;
+        let x = unit(&mut rng, d);
+        let y = unit(&mut rng, d);
+        let want = dot(&x, &y).powi(2) as f64;
+        let mut w = Welford::default();
+        for seed in 0..300 {
+            let m = TensorSketch::new(32, d, seed);
+            w.push(kernel_estimate(&m, &x, &y) as f64);
+        }
+        let se = w.std() / (w.n as f64).sqrt();
+        assert!((w.mean() - want).abs() < 4.0 * se + 1e-3, "mean={} want={want}", w.mean());
+    }
+
+    #[test]
+    fn tensor_sketch_exact_self_norm() {
+        // CS preserves ‖x⊗x‖ in expectation; check it is at least finite & sane.
+        let m = TensorSketch::new(64, 4, 5);
+        let x = vec![0.5f32, -0.5, 0.5, -0.5];
+        let est = kernel_estimate(&m, &x, &x);
+        assert!(est.is_finite());
+    }
+
+    #[test]
+    fn nystrom_matches_exact_when_anchors_span() {
+        // With P ≫ d² and small ridge, the Nystrom approximation of the
+        // rank-d(d+1)/2 kernel should be close on the anchors' span.
+        let mut rng = Rng::new(45);
+        let d = 4;
+        let m = Nystrom::new(32, d, 1e-6, 11);
+        let mut errs = 0.0;
+        let mut n = 0;
+        for _ in 0..30 {
+            let x = unit(&mut rng, d);
+            let y = unit(&mut rng, d);
+            let want = dot(&x, &y).powi(2);
+            let got = kernel_estimate(&m, &x, &y);
+            errs += (got - want).abs() as f64;
+            n += 1;
+        }
+        assert!(errs / (n as f64) < 0.05, "mean abs err {}", errs / n as f64);
+    }
+
+    #[test]
+    fn signed_maps_do_produce_negative_estimates() {
+        // Appendix L.2: TensorSketch / RM can go negative — the failure mode
+        // SLAY's positivity-preserving default avoids.
+        let mut rng = Rng::new(46);
+        let d = 8;
+        for (name, m) in [
+            ("ts", Box::new(TensorSketch::new(8, d, 3)) as Box<dyn FeatureMap>),
+            ("rm", Box::new(RandomMaclaurin::new(4, d, 3)) as Box<dyn FeatureMap>),
+        ] {
+            let mut saw_negative = false;
+            for _ in 0..500 {
+                let x = unit(&mut rng, d);
+                let y = unit(&mut rng, d);
+                if kernel_estimate(m.as_ref(), &x, &y) < 0.0 {
+                    saw_negative = true;
+                    break;
+                }
+            }
+            assert!(saw_negative, "{name} never went negative in 500 draws");
+        }
+    }
+
+    #[test]
+    fn maps_are_deterministic_given_seed() {
+        let a = Anchor::new(8, 6, 123);
+        let b = Anchor::new(8, 6, 123);
+        let x = Mat::from_vec(1, 6, vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6]);
+        assert_eq!(a.map(&x, 0).data, b.map(&x, 0).data);
+    }
+
+    #[test]
+    fn build_poly_dispatch_dims() {
+        use crate::kernels::config::PolyMethod as P;
+        let d = 6;
+        for (method, want_dim) in [
+            (P::Exact, 36),
+            (P::Anchor, 8),
+            (P::Nystrom, 8),
+            (P::TensorSketch, 8),
+            (P::RandomMaclaurin, 8),
+        ] {
+            let m = build_poly(method, 8, d, 1e-3, 1);
+            assert_eq!(m.dim(), want_dim, "{method:?}");
+            assert_eq!(m.input_dim(), d);
+            let x = Mat::randn(3, d, &mut Rng::new(9)).normalized_rows();
+            let f = m.map(&x, 0);
+            assert_eq!((f.rows, f.cols), (3, want_dim));
+        }
+    }
+}

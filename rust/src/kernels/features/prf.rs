@@ -1,0 +1,335 @@
+//! Exponential-kernel random features and the baseline mechanisms' maps.
+//!
+//! * [`Prf`] — strictly positive random features for `e^{2s·q̂ᵀk̂}` on the
+//!   unit sphere (Eq. 9, Choromanski et al. 2021):
+//!   `φ(u; s) = D^{−1/2} exp(√(2s)·ωᵀu − s)`, `ω ~ N(0, I_d)`.
+//! * [`FavorSoftmax`] — Performer's positive softmax features (general-norm
+//!   variant with the `−‖u‖²/2` correction).
+//! * [`FavorRelu`] — Performer FAVOR+ ReLU features (Table 9 baseline).
+//! * [`EluPlusOne`] — the `elu(x)+1` map of linear attention.
+//! * [`CosformerMap`] — ReLU features with cos/sin positional reweighting
+//!   (Qin et al. 2022).
+
+use super::FeatureMap;
+use crate::math::linalg::{matmul_a_bt, Mat};
+use crate::math::rng::Rng;
+
+/// Positive random features for the spherical exponential kernel at scale
+/// `s` (Eq. 9). **Unbiased only for unit-norm inputs** (Prop. 2) — the SLAY
+/// pipeline normalizes upstream.
+pub struct Prf {
+    omega: Mat, // D × d
+    s: f64,
+    scale: f32, // 1/√D
+}
+
+impl Prf {
+    pub fn new(d_features: usize, d: usize, s: f64, rng: &mut Rng) -> Self {
+        Self::from_omega(Mat::randn(d_features, d, rng), s)
+    }
+
+    /// Build from an explicit projection matrix (golden-file replay: the
+    /// Python oracle exports its ω draws so both implementations share the
+    /// same randomness).
+    pub fn from_omega(omega: Mat, s: f64) -> Self {
+        let d_features = omega.rows;
+        Prf { omega, s, scale: 1.0 / (d_features as f32).sqrt() }
+    }
+}
+
+impl FeatureMap for Prf {
+    fn input_dim(&self) -> usize {
+        self.omega.cols
+    }
+
+    fn dim(&self) -> usize {
+        self.omega.rows
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        let sqrt2s = (2.0 * self.s).sqrt() as f32;
+        let s = self.s as f32;
+        let mut proj = matmul_a_bt(x, &self.omega); // L × D of ωᵢᵀu
+        for v in proj.data.iter_mut() {
+            *v = (sqrt2s * *v - s).exp() * self.scale;
+        }
+        proj
+    }
+}
+
+/// Performer positive softmax features for general (non-unit) inputs:
+/// `φ(u) = D^{−1/2} exp(ωᵀu − ‖u‖²/2)`, unbiased for `e^{uᵀv}`.
+pub struct FavorSoftmax {
+    omega: Mat,
+    scale: f32,
+}
+
+impl FavorSoftmax {
+    pub fn new(d_features: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        FavorSoftmax {
+            omega: Mat::randn(d_features, d, &mut rng),
+            scale: 1.0 / (d_features as f32).sqrt(),
+        }
+    }
+}
+
+impl FeatureMap for FavorSoftmax {
+    fn input_dim(&self) -> usize {
+        self.omega.cols
+    }
+
+    fn dim(&self) -> usize {
+        self.omega.rows
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        // softmax attention applies exp(qᵀk/√d); fold the 1/√d into the
+        // inputs as q/d^{1/4}, k/d^{1/4} — standard Performer practice.
+        let root = (x.cols as f32).powf(0.25);
+        let scaled = x.map(|v| v / root);
+        let mut proj = matmul_a_bt(&scaled, &self.omega);
+        for r in 0..proj.rows {
+            let n2: f32 = scaled.row(r).iter().map(|v| v * v).sum();
+            for v in proj.row_mut(r).iter_mut() {
+                *v = (*v - 0.5 * n2).exp() * self.scale;
+            }
+        }
+        proj
+    }
+}
+
+/// FAVOR+ ReLU random features (the Table 9 Performer baseline):
+/// `φ(u) = D^{−1/2} relu(ωᵀu)`.
+pub struct FavorRelu {
+    omega: Mat,
+    scale: f32,
+}
+
+impl FavorRelu {
+    pub fn new(d_features: usize, d: usize, seed: u64) -> Self {
+        let mut rng = Rng::new(seed);
+        FavorRelu {
+            omega: Mat::randn(d_features, d, &mut rng),
+            scale: 1.0 / (d_features as f32).sqrt(),
+        }
+    }
+}
+
+impl FeatureMap for FavorRelu {
+    fn input_dim(&self) -> usize {
+        self.omega.cols
+    }
+
+    fn dim(&self) -> usize {
+        self.omega.rows
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        let mut proj = matmul_a_bt(x, &self.omega);
+        for v in proj.data.iter_mut() {
+            *v = v.max(0.0) * self.scale;
+        }
+        proj
+    }
+}
+
+/// `elu(x) + 1` feature map (Katharopoulos et al. linear attention;
+/// "Linear (ELU+1)" rows of Tables 3/5/8). Identity dimension.
+pub struct EluPlusOne {
+    d: usize,
+}
+
+impl EluPlusOne {
+    pub fn new(d: usize) -> Self {
+        EluPlusOne { d }
+    }
+}
+
+#[inline]
+fn elu_plus_one(x: f32) -> f32 {
+    if x > 0.0 {
+        x + 1.0
+    } else {
+        x.exp() // exp(x) − 1 + 1
+    }
+}
+
+impl FeatureMap for EluPlusOne {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+        x.map(elu_plus_one)
+    }
+}
+
+/// Cosformer features (Qin et al. 2022): nonneg `relu(x)` reweighted by
+/// `cos(π i / 2M)` and `sin(π i / 2M)` where `i` is the absolute token
+/// position and `M` a fixed horizon. The concatenated two-channel feature
+/// realizes `cos(π(i−j)/2M)`-reweighted ReLU attention as a pure dot
+/// product, keeping linearity.
+pub struct CosformerMap {
+    d: usize,
+    /// Positional horizon M (max sequence length the map supports).
+    pub horizon: usize,
+}
+
+impl CosformerMap {
+    pub fn new(d: usize, horizon: usize) -> Self {
+        assert!(horizon > 0);
+        CosformerMap { d, horizon }
+    }
+}
+
+impl FeatureMap for CosformerMap {
+    fn input_dim(&self) -> usize {
+        self.d
+    }
+
+    fn dim(&self) -> usize {
+        2 * self.d
+    }
+
+    fn map(&self, x: &Mat, pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows, 2 * self.d);
+        let m = self.horizon as f32;
+        for r in 0..x.rows {
+            let i = (pos0 + r).min(self.horizon - 1) as f32;
+            let theta = std::f32::consts::FRAC_PI_2 * i / m;
+            let (sin_t, cos_t) = theta.sin_cos();
+            let row = x.row(r);
+            let orow = out.row_mut(r);
+            for c in 0..self.d {
+                let relu = row[c].max(0.0);
+                orow[c] = relu * cos_t;
+                orow[self.d + c] = relu * sin_t;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::dot;
+    use crate::math::stats::Welford;
+
+    fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        Mat::randn(1, d, rng).normalized_rows().data
+    }
+
+    #[test]
+    fn prf_features_strictly_positive() {
+        let mut rng = Rng::new(51);
+        let mut prf_rng = Rng::new(52);
+        let prf = Prf::new(32, 8, 0.7, &mut prf_rng);
+        let x = Mat::randn(10, 8, &mut rng).normalized_rows();
+        let f = prf.map(&x, 0);
+        assert!(f.data.iter().all(|&v| v > 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn prf_unbiased_for_exponential_kernel_prop2() {
+        // E[⟨φ(q̂;s), φ(k̂;s)⟩] = e^{2s·q̂ᵀk̂} on the sphere.
+        let mut rng = Rng::new(53);
+        let d = 8;
+        let s = 0.5;
+        let q = unit(&mut rng, d);
+        let k = unit(&mut rng, d);
+        let x = dot(&q, &k) as f64;
+        let want = (2.0 * s * x).exp();
+        let mut w = Welford::default();
+        for seed in 0..400 {
+            let mut r = Rng::new(seed + 1000);
+            let prf = Prf::new(16, d, s, &mut r);
+            let fq = prf.map(&Mat::from_vec(1, d, q.clone()), 0);
+            let fk = prf.map(&Mat::from_vec(1, d, k.clone()), 0);
+            w.push(dot(fq.row(0), fk.row(0)) as f64);
+        }
+        let se = w.std() / (w.n as f64).sqrt();
+        assert!(
+            (w.mean() - want).abs() < 4.0 * se + 1e-3,
+            "mean={} want={want} se={se}",
+            w.mean()
+        );
+    }
+
+    #[test]
+    fn favor_softmax_unbiased_for_exp_dot() {
+        let mut rng = Rng::new(54);
+        let d = 4;
+        // small-norm inputs keep variance low
+        let q: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.5).collect();
+        let k: Vec<f32> = (0..d).map(|_| rng.normal_f32() * 0.5).collect();
+        let scale = 1.0 / (d as f32).sqrt();
+        let want = (dot(&q, &k) * scale).exp() as f64;
+        let mut w = Welford::default();
+        for seed in 0..600 {
+            let m = FavorSoftmax::new(32, d, seed);
+            let fq = m.map(&Mat::from_vec(1, d, q.clone()), 0);
+            let fk = m.map(&Mat::from_vec(1, d, k.clone()), 0);
+            w.push(dot(fq.row(0), fk.row(0)) as f64);
+        }
+        let se = w.std() / (w.n as f64).sqrt();
+        assert!((w.mean() - want).abs() < 5.0 * se + 2e-3, "mean={} want={want}", w.mean());
+    }
+
+    #[test]
+    fn elu_plus_one_positive_and_smooth() {
+        let m = EluPlusOne::new(3);
+        let x = Mat::from_vec(2, 3, vec![-5.0, 0.0, 5.0, -0.1, 0.1, 100.0]);
+        let f = m.map(&x, 0);
+        assert!(f.data.iter().all(|&v| v > 0.0));
+        assert!((f.get(0, 1) - 1.0).abs() < 1e-6); // elu(0)+1 = 1
+        assert!((f.get(0, 2) - 6.0).abs() < 1e-6); // x+1 for x>0
+        // continuity at 0
+        assert!((elu_plus_one(1e-6) - elu_plus_one(-1e-6)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosformer_realizes_cos_reweighting() {
+        // ⟨φ_i(q), φ_j(k)⟩ = relu(q)ᵀrelu(k) · cos(π(i−j)/2M)
+        let d = 4;
+        let m = CosformerMap::new(d, 64);
+        let q = Mat::from_vec(1, d, vec![0.5, -0.3, 0.8, 0.1]);
+        let k = Mat::from_vec(1, d, vec![0.2, 0.9, -0.4, 0.6]);
+        let i = 10;
+        let j = 3;
+        let fq = m.map(&q, i);
+        let fk = m.map(&k, j);
+        let got = dot(fq.row(0), fk.row(0));
+        let relu_dot: f32 = q
+            .row(0)
+            .iter()
+            .zip(k.row(0))
+            .map(|(a, b)| a.max(0.0) * b.max(0.0))
+            .sum();
+        let want = relu_dot
+            * (std::f32::consts::FRAC_PI_2 * (i as f32 - j as f32) / 64.0).cos();
+        assert!((got - want).abs() < 1e-5, "{got} vs {want}");
+    }
+
+    #[test]
+    fn cosformer_clamps_beyond_horizon() {
+        let m = CosformerMap::new(2, 8);
+        let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
+        let f_at = |p: usize| m.map(&x, p).data.clone();
+        assert_eq!(f_at(7), f_at(20)); // positions past M−1 clamp
+    }
+
+    #[test]
+    fn favor_relu_nonnegative() {
+        let m = FavorRelu::new(16, 8, 3);
+        let x = Mat::randn(5, 8, &mut Rng::new(55));
+        let f = m.map(&x, 0);
+        assert!(f.data.iter().all(|&v| v >= 0.0));
+        assert_eq!(f.cols, 16);
+    }
+}

@@ -1,0 +1,395 @@
+//! Attention mechanisms: the paper's SLAY estimator, its exact quadratic
+//! counterparts (Yat, spherical Yat, softmax), and the linear baselines
+//! (FAVOR+, ELU+1, cosformer). [`Attention`] is the single dispatch point
+//! used by the coordinator, examples and benches.
+
+pub mod config;
+pub mod engine;
+pub mod features;
+pub mod slay;
+pub mod yat;
+
+use crate::math::linalg::Mat;
+use config::Mechanism;
+use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
+use slay::{QKFeatures, SlayFeatures, SymMap};
+
+/// A constructed attention operator for one head dimension.
+pub enum Attention {
+    /// Quadratic mechanisms: build the L×L nonnegative score matrix.
+    Quadratic {
+        mech: Mechanism,
+        delta: f32,
+    },
+    /// Linear mechanisms: feature maps + Eq. 11 engine.
+    Linear {
+        mech: Mechanism,
+        maps: Box<dyn QKFeatures>,
+        delta: f32,
+    },
+}
+
+impl Attention {
+    /// Build an operator for head dimension `d`. `horizon` bounds the
+    /// positional reweighting of cosformer (max supported length).
+    pub fn build(mech: &Mechanism, d: usize, horizon: usize) -> anyhow::Result<Attention> {
+        Ok(match mech {
+            Mechanism::Standard | Mechanism::Yat { .. } | Mechanism::YatSpherical { .. } => {
+                Attention::Quadratic { mech: mech.clone(), delta: 1e-6 }
+            }
+            Mechanism::Slay(cfg) => {
+                let feats = SlayFeatures::new(cfg.clone(), d)?;
+                Attention::Linear { mech: mech.clone(), maps: Box::new(feats), delta: cfg.delta }
+            }
+            Mechanism::Favor { m_features, seed } => Attention::Linear {
+                mech: mech.clone(),
+                maps: Box::new(SymMap {
+                    inner: Box::new(FavorRelu::new(*m_features, d, *seed)),
+                    positive: true,
+                }),
+                delta: 1e-6,
+            },
+            Mechanism::EluLinear => Attention::Linear {
+                mech: mech.clone(),
+                maps: Box::new(SymMap { inner: Box::new(EluPlusOne::new(d)), positive: true }),
+                delta: 1e-6,
+            },
+            Mechanism::Cosformer => Attention::Linear {
+                mech: mech.clone(),
+                maps: Box::new(SymMap {
+                    inner: Box::new(CosformerMap::new(d, horizon.max(1))),
+                    positive: true,
+                }),
+                delta: 1e-6,
+            },
+        })
+    }
+
+    /// Feature dimension m for linear mechanisms, `None` for quadratic ones.
+    pub fn feature_dim(&self) -> Option<usize> {
+        match self {
+            Attention::Quadratic { .. } => None,
+            Attention::Linear { maps, .. } => Some(maps.dim()),
+        }
+    }
+
+    /// The mechanism this operator implements.
+    pub fn mechanism(&self) -> &Mechanism {
+        match self {
+            Attention::Quadratic { mech, .. } | Attention::Linear { mech, .. } => mech,
+        }
+    }
+
+    /// Nonnegative score matrix for the quadratic path (test/diagnostic
+    /// accessor; the linear path never materializes it).
+    pub fn score_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
+        match self {
+            Attention::Quadratic { mech, .. } => Some(match mech {
+                Mechanism::Standard => yat::softmax_scores(q, k),
+                Mechanism::Yat { eps } => yat::yat_scores(q, k, *eps as f32),
+                Mechanism::YatSpherical { eps } => yat::yat_spherical_scores(q, k, *eps as f32),
+                _ => unreachable!(),
+            }),
+            Attention::Linear { .. } => None,
+        }
+    }
+
+    /// Full attention forward: `Y = attend(Q, K, V)` for one head.
+    /// `pos0` is the absolute position of row 0 (matters for cosformer and
+    /// for streaming continuation).
+    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, pos0: usize) -> Mat {
+        match self {
+            Attention::Quadratic { delta, .. } => {
+                let scores = self.score_matrix(q, k).expect("quadratic scores");
+                engine::quadratic_attention(&scores, v, causal, *delta)
+            }
+            Attention::Linear { maps, delta, .. } => {
+                let phi_q = maps.map_q(q, pos0);
+                let phi_k = maps.map_k(k, pos0);
+                engine::linear_attention(&phi_q, &phi_k, v, causal, *delta)
+            }
+        }
+    }
+
+    /// Denominator vector `Ψ(Q)(Ψ(K)ᵀ1)` (linear) or row sums (quadratic) —
+    /// the quantity whose positivity Fig. 7/8 studies.
+    pub fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32> {
+        match self {
+            Attention::Quadratic { .. } => {
+                let s = self.score_matrix(q, k).unwrap();
+                (0..s.rows)
+                    .map(|i| {
+                        let lim = if causal { i + 1 } else { s.cols };
+                        s.row(i)[..lim].iter().sum()
+                    })
+                    .collect()
+            }
+            Attention::Linear { maps, .. } => {
+                let phi_q = maps.map_q(q, 0);
+                let phi_k = maps.map_k(k, 0);
+                let mut z = vec![0.0f32; phi_k.cols];
+                for r in 0..phi_k.rows {
+                    for (zi, &x) in z.iter_mut().zip(phi_k.row(r)) {
+                        *zi += x;
+                    }
+                }
+                (0..phi_q.rows)
+                    .map(|i| crate::math::linalg::dot(phi_q.row(i), &z))
+                    .collect()
+            }
+        }
+    }
+}
+
+/// Multi-head attention over packed `L × d_model` tensors: splits columns
+/// into `heads` equal slices, runs `op` per head, concatenates. Used by the
+/// isolation benches (Fig. 2 setup: d_model 256, 8 heads).
+pub fn multi_head_forward(
+    op: &Attention,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    heads: usize,
+    causal: bool,
+) -> Mat {
+    assert_eq!(q.cols % heads, 0, "d_model must divide heads");
+    let dh = q.cols / heads;
+    let mut out = Mat::zeros(q.rows, q.cols);
+    for h in 0..heads {
+        let slice = |m: &Mat| {
+            let mut s = Mat::zeros(m.rows, dh);
+            for r in 0..m.rows {
+                s.row_mut(r).copy_from_slice(&m.row(r)[h * dh..(h + 1) * dh]);
+            }
+            s
+        };
+        let (qh, kh, vh) = (slice(q), slice(k), slice(v));
+        let yh = op.forward(&qh, &kh, &vh, causal, 0);
+        for r in 0..out.rows {
+            out.row_mut(r)[h * dh..(h + 1) * dh].copy_from_slice(yh.row(r));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::config::{Mechanism, SlayConfig};
+    use crate::math::rng::Rng;
+
+    fn qkv(l: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(l, d, &mut rng),
+            Mat::randn(l, d, &mut rng),
+            Mat::randn(l, d, &mut rng),
+        )
+    }
+
+    fn all_mechanisms() -> Vec<Mechanism> {
+        vec![
+            Mechanism::Standard,
+            Mechanism::Yat { eps: 1e-3 },
+            Mechanism::YatSpherical { eps: 1e-3 },
+            Mechanism::Slay(SlayConfig::default()),
+            Mechanism::Favor { m_features: 32, seed: 1 },
+            Mechanism::EluLinear,
+            Mechanism::Cosformer,
+        ]
+    }
+
+    #[test]
+    fn all_mechanisms_produce_finite_outputs_both_masks() {
+        let (q, k, v) = qkv(24, 16, 91);
+        for mech in all_mechanisms() {
+            let op = Attention::build(&mech, 16, 64).unwrap();
+            for causal in [false, true] {
+                let y = op.forward(&q, &k, &v, causal, 0);
+                assert_eq!((y.rows, y.cols), (24, 16), "{}", mech.name());
+                assert!(
+                    y.data.iter().all(|x| x.is_finite()),
+                    "{} causal={causal}",
+                    mech.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn linear_flag_agrees_with_feature_dim() {
+        for mech in all_mechanisms() {
+            let op = Attention::build(&mech, 16, 64).unwrap();
+            assert_eq!(mech.is_linear(), op.feature_dim().is_some(), "{}", mech.name());
+        }
+    }
+
+    #[test]
+    fn softmax_forward_equals_classic_softmax_attention() {
+        // exp-scores + rowsum normalization ≡ softmax(QKᵀ/√d)V exactly.
+        let (q, k, v) = qkv(10, 8, 92);
+        let op = Attention::build(&Mechanism::Standard, 8, 0).unwrap();
+        let y = op.forward(&q, &k, &v, false, 0);
+        let mut scores = crate::math::linalg::matmul_a_bt(&q, &k);
+        scores.scale(1.0 / (8f32).sqrt());
+        crate::math::linalg::softmax_rows(&mut scores);
+        let want = crate::math::linalg::matmul(&scores, &v);
+        for (a, b) in y.data.iter().zip(want.data.iter()) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "{a} vs {b}");
+        }
+    }
+
+    /// Clustered token geometry: alignments q̂ᵀk̂ spread over [-1, 1] the way
+    /// trained embeddings do (iid Gaussians concentrate near 0 at d=16 and
+    /// make every estimator look flat).
+    fn clustered_qkv(l: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let centers = Mat::randn(4, d, &mut rng).normalized_rows();
+        let mut gen = |rng: &mut Rng| {
+            Mat::from_fn(l, d, |r, c| {
+                let ctr = centers.row(r % 4);
+                ctr[c] + 0.3 * rng.normal_f32()
+            })
+        };
+        let q = gen(&mut rng);
+        let k = gen(&mut rng);
+        let v = Mat::randn(l, d, &mut rng);
+        (q, k, v)
+    }
+
+    #[test]
+    fn slay_error_decreases_with_feature_budget() {
+        // Fig. 14's phenomenon: attention-output error vs exact spherical
+        // Yat shrinks as the PRF budget grows (seed-averaged).
+        let (q, k, v) = clustered_qkv(48, 16, 93);
+        let exact = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, 16, 0)
+            .unwrap()
+            .forward(&q, &k, &v, false, 0);
+        let mean_err = |d_prf: usize| {
+            let mut errs = Vec::new();
+            for seed in 0..4 {
+                let cfg = SlayConfig { n_poly: 16, d_prf, r_nodes: 2, seed, ..Default::default() };
+                let y = Attention::build(&Mechanism::Slay(cfg), 16, 0)
+                    .unwrap()
+                    .forward(&q, &k, &v, false, 0);
+                errs.push(crate::math::stats::rel_l2(&y.data, &exact.data));
+            }
+            crate::math::stats::mean(&errs)
+        };
+        let small = mean_err(2);
+        let large = mean_err(64);
+        assert!(
+            large < small,
+            "budget 64 should beat budget 2: {large} vs {small}"
+        );
+        assert!(large < 0.9, "large-budget rel-l2 {large} out of range");
+        // With the exact polynomial map the estimator reaches the paper's
+        // reported fidelity band (Table 6 Large: anchor 0.494).
+        let cfg = SlayConfig {
+            poly: crate::kernels::config::PolyMethod::Exact,
+            d_prf: 64,
+            r_nodes: 3,
+            ..Default::default()
+        };
+        let y = Attention::build(&Mechanism::Slay(cfg), 16, 0)
+            .unwrap()
+            .forward(&q, &k, &v, false, 0);
+        let err_exact_poly = crate::math::stats::rel_l2(&y.data, &exact.data);
+        assert!(err_exact_poly < 0.6, "exact-poly rel-l2 {err_exact_poly} (paper band ≈ 0.49)");
+    }
+
+    #[test]
+    fn positive_mechanisms_have_positive_denominators() {
+        let (q, k, _) = qkv(32, 16, 94);
+        for mech in [
+            Mechanism::Slay(SlayConfig::default()),
+            Mechanism::Favor { m_features: 32, seed: 2 },
+            Mechanism::EluLinear,
+            Mechanism::YatSpherical { eps: 1e-3 },
+        ] {
+            let op = Attention::build(&mech, 16, 64).unwrap();
+            let dens = op.denominators(&q, &k, false);
+            assert!(
+                dens.iter().all(|&d| d >= -1e-6),
+                "{}: min den {:?}",
+                mech.name(),
+                dens.iter().cloned().fold(f32::INFINITY, f32::min)
+            );
+        }
+    }
+
+    #[test]
+    fn signed_slay_variants_can_go_negative() {
+        // Fig. 7: TensorSketch / RandomMaclaurin polynomial components can
+        // produce negative denominators.
+        use crate::kernels::config::PolyMethod;
+        let (q, k, _) = qkv(64, 16, 95);
+        let mut saw_negative = false;
+        for seed in 0..20 {
+            let cfg = SlayConfig {
+                poly: PolyMethod::RandomMaclaurin,
+                n_poly: 4,
+                seed,
+                ..Default::default()
+            };
+            let op = Attention::build(&Mechanism::Slay(cfg), 16, 0).unwrap();
+            if op.denominators(&q, &k, false).iter().any(|&d| d < 0.0) {
+                saw_negative = true;
+                break;
+            }
+        }
+        assert!(saw_negative, "RM-poly SLAY never produced a negative denominator");
+    }
+
+    #[test]
+    fn multi_head_partitions_and_reassembles() {
+        let (q, k, v) = qkv(12, 32, 96);
+        let op = Attention::build(&Mechanism::EluLinear, 8, 0).unwrap();
+        let y = multi_head_forward(&op, &q, &k, &v, 4, true);
+        assert_eq!((y.rows, y.cols), (12, 32));
+        // head 0 output must equal single-head forward on the slice
+        let slice = |m: &Mat| {
+            let mut s = Mat::zeros(m.rows, 8);
+            for r in 0..m.rows {
+                s.row_mut(r).copy_from_slice(&m.row(r)[..8]);
+            }
+            s
+        };
+        let y0 = op.forward(&slice(&q), &slice(&k), &slice(&v), true, 0);
+        for r in 0..12 {
+            for c in 0..8 {
+                assert!((y.get(r, c) - y0.get(r, c)).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_outputs_ignore_future_tokens() {
+        // Perturbing token j > i must not change output row i.
+        let (q, k, mut v) = qkv(10, 8, 97);
+        for mech in all_mechanisms() {
+            let op = Attention::build(&mech, 8, 32).unwrap();
+            let y1 = op.forward(&q, &k, &v, true, 0);
+            // perturb the last value row
+            for c in 0..8 {
+                let x = v.get(9, c) + 10.0;
+                v.set(9, c, x);
+            }
+            let y2 = op.forward(&q, &k, &v, true, 0);
+            for i in 0..9 {
+                for c in 0..8 {
+                    assert!(
+                        (y1.get(i, c) - y2.get(i, c)).abs() < 1e-5,
+                        "{} row {i} leaked future info",
+                        mech.name()
+                    );
+                }
+            }
+            // restore
+            for c in 0..8 {
+                let x = v.get(9, c) - 10.0;
+                v.set(9, c, x);
+            }
+        }
+    }
+}

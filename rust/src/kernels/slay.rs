@@ -1,0 +1,464 @@
+//! The SLAY estimator: spherical constraint → Bernstein/Laplace integral →
+//! Gauss–Laguerre quadrature → polynomial × exponential random features →
+//! fusion → concatenation (§2.2–§2.4 of the paper).
+//!
+//! [`SlayFeatures`] maps token rows to the final feature matrix `Ψ(·)` used
+//! by the linear-attention engine (Eq. 11). Query and key maps coincide for
+//! every fusion except [`Fusion::LaplaceOnly`], which realizes the exact
+//! Appendix-F identity `x²/(C−2x) = (C²/4)∫e^{−Cs}e^{2sx}ds − C/4 − x/2`
+//! through asymmetric signed features.
+
+use crate::kernels::config::{Fusion, SlayConfig};
+#[cfg(test)]
+use crate::kernels::config::PolyMethod;
+use crate::kernels::features::poly::build_poly;
+use crate::kernels::features::prf::Prf;
+use crate::kernels::features::{kron_row, FeatureMap};
+use crate::math::fft::circular_convolve;
+use crate::math::linalg::{dot, Mat};
+use crate::math::quadrature::GaussLaguerre;
+use crate::math::rng::Rng;
+
+/// Feature maps that may differ between the query and key roles.
+pub trait QKFeatures: Send + Sync {
+    /// Final feature dimension m.
+    fn dim(&self) -> usize;
+    /// Query features; `pos0` is the absolute position of row 0.
+    fn map_q(&self, x: &Mat, pos0: usize) -> Mat;
+    /// Key features.
+    fn map_k(&self, x: &Mat, pos0: usize) -> Mat;
+    /// Whether the induced score estimates are guaranteed nonnegative.
+    fn positive(&self) -> bool;
+}
+
+/// Symmetric wrapper: same map for queries and keys.
+pub struct SymMap {
+    pub inner: Box<dyn FeatureMap>,
+    pub positive: bool,
+}
+
+impl QKFeatures for SymMap {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn map_q(&self, x: &Mat, pos0: usize) -> Mat {
+        self.inner.map(x, pos0)
+    }
+
+    fn map_k(&self, x: &Mat, pos0: usize) -> Mat {
+        self.inner.map(x, pos0)
+    }
+
+    fn positive(&self) -> bool {
+        self.positive
+    }
+}
+
+/// Count-sketch fusion of the per-node tensor product (the operator `S` of
+/// Eq. 10): `S(a ⊗ b) = IFFT(FFT(CS₁ a) · FFT(CS₂ b))`.
+struct SketchFuser {
+    d_t: usize,
+    h1: Vec<usize>,
+    s1: Vec<f32>,
+    h2: Vec<usize>,
+    s2: Vec<f32>,
+}
+
+impl SketchFuser {
+    fn new(d_t: usize, d_a: usize, d_b: usize, rng: &mut Rng) -> Self {
+        SketchFuser {
+            d_t,
+            h1: (0..d_a).map(|_| rng.below(d_t)).collect(),
+            s1: rng.rademacher_vec(d_a),
+            h2: (0..d_b).map(|_| rng.below(d_t)).collect(),
+            s2: rng.rademacher_vec(d_b),
+        }
+    }
+
+    fn fuse(&self, a: &[f32], b: &[f32], out: &mut [f32], scale: f32) {
+        let mut ca = vec![0.0f64; self.d_t];
+        for (i, &v) in a.iter().enumerate() {
+            ca[self.h1[i]] += (self.s1[i] * v) as f64;
+        }
+        let mut cb = vec![0.0f64; self.d_t];
+        for (i, &v) in b.iter().enumerate() {
+            cb[self.h2[i]] += (self.s2[i] * v) as f64;
+        }
+        let conv = circular_convolve(&ca, &cb);
+        for (o, v) in out.iter_mut().zip(conv.iter()) {
+            *o = *v as f32 * scale;
+        }
+    }
+}
+
+/// One quadrature node's machinery.
+struct Node {
+    /// `s_r` (scaled Gauss–Laguerre node) — kept for diagnostics even
+    /// though the Prf owns the working copy.
+    #[allow(dead_code)]
+    s: f64,
+    /// `√w_r` folded into the features (so inner products carry `w_r`).
+    sqrt_w: f32,
+    prf: Prf,
+    sketch: Option<SketchFuser>,
+}
+
+/// The full SLAY feature pipeline Ψ (Algorithm 1, lines 1–7).
+pub struct SlayFeatures {
+    pub cfg: SlayConfig,
+    d: usize,
+    poly: Box<dyn FeatureMap>,
+    nodes: Vec<Node>,
+    dim: usize,
+    per_node: usize,
+}
+
+impl SlayFeatures {
+    pub fn new(cfg: SlayConfig, d: usize) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let quad = GaussLaguerre::scaled(cfg.r_nodes, cfg.c());
+        let poly = build_poly(cfg.poly, cfg.n_poly, d, cfg.nystrom_ridge, cfg.seed);
+        let d_p = poly.dim();
+        let mut rng = Rng::new(cfg.seed ^ 0x51AE_FEA7);
+        let per_node = match cfg.fusion {
+            Fusion::Explicit => d_p * cfg.d_prf,
+            Fusion::Sketch { d_t } => d_t,
+            Fusion::Hadamard => d_p,
+            Fusion::LaplaceOnly => cfg.d_prf,
+        };
+        let mut nodes = Vec::with_capacity(cfg.r_nodes);
+        for r in 0..cfg.r_nodes {
+            let mut node_rng = rng.fork(r as u64 + 1);
+            let prf = Prf::new(cfg.d_prf, d, quad.nodes[r], &mut node_rng);
+            let sketch = match cfg.fusion {
+                Fusion::Sketch { d_t } => {
+                    Some(SketchFuser::new(d_t, d_p, cfg.d_prf, &mut node_rng))
+                }
+                _ => None,
+            };
+            nodes.push(Node {
+                s: quad.nodes[r],
+                sqrt_w: (quad.weights[r]).sqrt() as f32,
+                prf,
+                sketch,
+            });
+        }
+        let dim = match cfg.fusion {
+            // LaplaceOnly appends the affine-correction coordinates: one
+            // constant and the d normalized input coords.
+            Fusion::LaplaceOnly => per_node * cfg.r_nodes + 1 + d,
+            _ => per_node * cfg.r_nodes,
+        };
+        Ok(SlayFeatures { cfg, d, poly, nodes, dim, per_node })
+    }
+
+    /// Scalar kernel estimate `⟨Ψ(q̂), Ψ(k̂)⟩` for single rows — Fig. 13's
+    /// probe. Inputs are normalized internally.
+    pub fn kernel_estimate(&self, q: &[f32], k: &[f32]) -> f32 {
+        let qm = self.map_q(&Mat::from_vec(1, q.len(), q.to_vec()), 0);
+        let km = self.map_k(&Mat::from_vec(1, k.len(), k.to_vec()), 0);
+        dot(qm.row(0), km.row(0))
+    }
+
+    /// Shared forward for the symmetric fusions.
+    fn map_shared(&self, x: &Mat) -> Mat {
+        let xn = x.normalized_rows();
+        let poly_f = self.poly.map(&xn, 0); // L × D_p
+        let mut out = Mat::zeros(x.rows, self.dim);
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let mut prf_f = node.prf.map(&xn, 0); // L × D
+            let off = ni * self.per_node;
+            match self.cfg.fusion {
+                Fusion::Explicit => {
+                    // §Perf iteration: fold √w_r into the (L×D) PRF factor
+                    // once instead of rescaling the (L×D_p·D) fused output.
+                    for v in prf_f.data.iter_mut() {
+                        *v *= node.sqrt_w;
+                    }
+                    for r in 0..x.rows {
+                        let orow = &mut out.row_mut(r)[off..off + self.per_node];
+                        kron_row(poly_f.row(r), prf_f.row(r), orow);
+                    }
+                }
+                Fusion::Hadamard => {
+                    for r in 0..x.rows {
+                        let orow = &mut out.row_mut(r)[off..off + self.per_node];
+                        for (c, o) in orow.iter_mut().enumerate() {
+                            *o = poly_f.get(r, c) * prf_f.get(r, c) * node.sqrt_w;
+                        }
+                    }
+                }
+                Fusion::Sketch { .. } => {
+                    let fuser = node.sketch.as_ref().unwrap();
+                    for r in 0..x.rows {
+                        let orow = &mut out.row_mut(r)[off..off + self.per_node];
+                        fuser.fuse(poly_f.row(r), prf_f.row(r), orow, node.sqrt_w);
+                    }
+                }
+                Fusion::LaplaceOnly => unreachable!("handled in map_q/map_k"),
+            }
+        }
+        out
+    }
+
+    /// Laplace-only features with the Appendix-F affine correction.
+    /// Query:  `[√w_r·(C/2)·φ_r(q̂) …, 1,  q̂]`
+    /// Key:    `[√w_r·(C/2)·φ_r(k̂) …, −C/4, −k̂/2]`
+    /// so that `Ψ(q)ᵀΨ(k) = (C²/4)Σ w_r φφ − C/4 − q̂ᵀk̂/2`.
+    fn map_laplace(&self, x: &Mat, is_query: bool) -> Mat {
+        let xn = x.normalized_rows();
+        let c = self.cfg.c() as f32;
+        let mut out = Mat::zeros(x.rows, self.dim);
+        for (ni, node) in self.nodes.iter().enumerate() {
+            let prf_f = node.prf.map(&xn, 0);
+            let off = ni * self.per_node;
+            let scale = node.sqrt_w * c / 2.0;
+            for r in 0..x.rows {
+                let orow = &mut out.row_mut(r)[off..off + self.per_node];
+                for (c_i, o) in orow.iter_mut().enumerate() {
+                    *o = prf_f.get(r, c_i) * scale;
+                }
+            }
+        }
+        let base = self.per_node * self.cfg.r_nodes;
+        for r in 0..x.rows {
+            if is_query {
+                out.set(r, base, 1.0);
+                for c_i in 0..self.d {
+                    out.set(r, base + 1 + c_i, xn.get(r, c_i));
+                }
+            } else {
+                out.set(r, base, -c / 4.0);
+                for c_i in 0..self.d {
+                    out.set(r, base + 1 + c_i, -0.5 * xn.get(r, c_i));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl QKFeatures for SlayFeatures {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn map_q(&self, x: &Mat, _pos0: usize) -> Mat {
+        match self.cfg.fusion {
+            Fusion::LaplaceOnly => self.map_laplace(x, true),
+            _ => self.map_shared(x),
+        }
+    }
+
+    fn map_k(&self, x: &Mat, _pos0: usize) -> Mat {
+        match self.cfg.fusion {
+            Fusion::LaplaceOnly => self.map_laplace(x, false),
+            _ => self.map_shared(x),
+        }
+    }
+
+    fn positive(&self) -> bool {
+        self.cfg.positivity_guaranteed()
+    }
+}
+
+/// Dense (quadratic) evaluation of the discretized SLAY target kernel
+/// `Σ_r w_r x² e^{2 s_r x}` — the quadrature-only baseline of Fig. 13 and
+/// the "what the features estimate" reference of Remark 1.
+pub fn slay_target_kernel(x: f64, cfg: &SlayConfig) -> f64 {
+    let quad = GaussLaguerre::scaled(cfg.r_nodes, cfg.c());
+    quad.integrate(|s| x * x * (2.0 * s * x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::quadrature::e_sph_exact;
+    use crate::math::stats::Welford;
+
+    fn unit(rng: &mut Rng, d: usize) -> Vec<f32> {
+        Mat::randn(1, d, rng).normalized_rows().data
+    }
+
+    #[test]
+    fn dims_match_config() {
+        let d = 8;
+        for fusion in [
+            Fusion::Explicit,
+            Fusion::Sketch { d_t: 64 },
+            Fusion::LaplaceOnly,
+        ] {
+            let cfg = SlayConfig { fusion, ..Default::default() };
+            let f = SlayFeatures::new(cfg.clone(), d).unwrap();
+            let want = match fusion {
+                Fusion::LaplaceOnly => cfg.feature_dim(d) + 1 + d,
+                _ => cfg.feature_dim(d),
+            };
+            assert_eq!(f.dim(), want, "{fusion:?}");
+            let x = Mat::randn(5, d, &mut Rng::new(61));
+            assert_eq!(f.map_q(&x, 0).cols, f.dim());
+            assert_eq!(f.map_k(&x, 0).cols, f.dim());
+        }
+        // Hadamard requires matching dims
+        let cfg = SlayConfig {
+            fusion: Fusion::Hadamard,
+            n_poly: 16,
+            d_prf: 16,
+            ..Default::default()
+        };
+        let f = SlayFeatures::new(cfg, d).unwrap();
+        assert_eq!(f.dim(), 3 * 16);
+    }
+
+    #[test]
+    fn explicit_fusion_with_exact_poly_estimates_kernel() {
+        // With the exact poly map and many PRFs, ⟨Ψ(q),Ψ(k)⟩ ≈ target
+        // quadrature kernel; averaged over seeds it converges (Remark 1).
+        let mut rng = Rng::new(62);
+        let d = 6;
+        let q = unit(&mut rng, d);
+        let k = unit(&mut rng, d);
+        let x = dot(&q, &k) as f64;
+        let base_cfg = SlayConfig {
+            poly: PolyMethod::Exact,
+            d_prf: 32,
+            r_nodes: 6,
+            ..Default::default()
+        };
+        let want = slay_target_kernel(x, &base_cfg);
+        let mut w = Welford::default();
+        for seed in 0..80 {
+            let cfg = SlayConfig { seed, ..base_cfg.clone() };
+            let f = SlayFeatures::new(cfg, d).unwrap();
+            w.push(f.kernel_estimate(&q, &k) as f64);
+        }
+        let se = w.std() / (w.n as f64).sqrt();
+        assert!(
+            (w.mean() - want).abs() < 4.0 * se + 0.02 * want.abs().max(0.05),
+            "mean={} want={want} se={se}",
+            w.mean()
+        );
+    }
+
+    #[test]
+    fn positive_configs_yield_positive_estimates() {
+        // App. G: anchor/exact poly + explicit fusion ⇒ nonnegative scores.
+        let mut rng = Rng::new(63);
+        let d = 8;
+        for poly in [PolyMethod::Anchor, PolyMethod::Exact] {
+            let cfg = SlayConfig { poly, ..Default::default() };
+            let f = SlayFeatures::new(cfg, d).unwrap();
+            for _ in 0..100 {
+                let q = unit(&mut rng, d);
+                let k = unit(&mut rng, d);
+                let est = f.kernel_estimate(&q, &k);
+                assert!(est >= 0.0, "{poly:?} gave {est}");
+            }
+        }
+    }
+
+    #[test]
+    fn laplace_only_matches_exact_kernel_closely() {
+        // The App-F identity is exact up to quadrature + PRF noise; with
+        // generous feature counts the estimate lands near E_sph(x).
+        let mut rng = Rng::new(64);
+        let d = 8;
+        let eps = 0.05; // milder ε keeps quadrature convergence fast
+        let cfg = SlayConfig {
+            eps,
+            fusion: Fusion::LaplaceOnly,
+            d_prf: 256,
+            r_nodes: 24,
+            ..Default::default()
+        };
+        let mut errs = Vec::new();
+        for seed in 0..10 {
+            let f = SlayFeatures::new(SlayConfig { seed, ..cfg.clone() }, d).unwrap();
+            let q = unit(&mut rng, d);
+            let k = unit(&mut rng, d);
+            let x = dot(&q, &k) as f64;
+            let want = e_sph_exact(x, eps);
+            errs.push((f.kernel_estimate(&q, &k) as f64 - want).abs());
+        }
+        let mean_err = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean_err < 0.15, "mean err {mean_err} ({errs:?})");
+    }
+
+    #[test]
+    fn hadamard_is_biased_but_positive() {
+        let mut rng = Rng::new(65);
+        let d = 8;
+        let cfg = SlayConfig {
+            fusion: Fusion::Hadamard,
+            n_poly: 16,
+            d_prf: 16,
+            poly: PolyMethod::Anchor,
+            ..Default::default()
+        };
+        let f = SlayFeatures::new(cfg, d).unwrap();
+        for _ in 0..50 {
+            let q = unit(&mut rng, d);
+            let k = unit(&mut rng, d);
+            assert!(f.kernel_estimate(&q, &k) >= 0.0);
+        }
+    }
+
+    #[test]
+    fn sketch_fusion_unbiased_for_explicit_product() {
+        // The count-sketch fusion is unbiased for the explicit tensor
+        // product, so averaged over the *joint* randomness both estimators
+        // share one mean. Compare seed-ensemble means of the two fusions.
+        let d = 6;
+        let mut rng = Rng::new(66);
+        let q = unit(&mut rng, d);
+        let k = unit(&mut rng, d);
+        let mut w_explicit = Welford::default();
+        let mut w_sketch = Welford::default();
+        for s in 0..300 {
+            let e = SlayFeatures::new(SlayConfig { seed: s, ..Default::default() }, d).unwrap();
+            w_explicit.push(e.kernel_estimate(&q, &k) as f64);
+            let cfg = SlayConfig {
+                fusion: Fusion::Sketch { d_t: 128 },
+                seed: s,
+                ..Default::default()
+            };
+            let f = SlayFeatures::new(cfg, d).unwrap();
+            w_sketch.push(f.kernel_estimate(&q, &k) as f64);
+        }
+        let se = (w_explicit.var() / w_explicit.n as f64
+            + w_sketch.var() / w_sketch.n as f64)
+            .sqrt();
+        assert!(
+            (w_sketch.mean() - w_explicit.mean()).abs() < 4.0 * se + 1e-3,
+            "sketch mean {} vs explicit mean {} (se {se})",
+            w_sketch.mean(),
+            w_explicit.mean()
+        );
+    }
+
+    #[test]
+    fn features_deterministic_given_seed() {
+        let d = 8;
+        let cfg = SlayConfig::default();
+        let f1 = SlayFeatures::new(cfg.clone(), d).unwrap();
+        let f2 = SlayFeatures::new(cfg, d).unwrap();
+        let x = Mat::randn(3, d, &mut Rng::new(67));
+        assert_eq!(f1.map_q(&x, 0).data, f2.map_q(&x, 0).data);
+    }
+
+    #[test]
+    fn normalization_is_internal() {
+        // Scaling the inputs must not change the features (spherical
+        // constraint, Remark 3(ii)).
+        let d = 8;
+        let f = SlayFeatures::new(SlayConfig::default(), d).unwrap();
+        let x = Mat::randn(4, d, &mut Rng::new(68));
+        let x_scaled = x.map(|v| v * 7.5);
+        let a = f.map_q(&x, 0);
+        let b = f.map_q(&x_scaled, 0);
+        for (p, q) in a.data.iter().zip(b.data.iter()) {
+            assert!((p - q).abs() < 1e-4 * (1.0 + p.abs()));
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! The Yat-kernel (E-product) and its spherical form — scalar functions,
+//! score matrices, and the closed-form derivative used by Fig. 6 and the
+//! gradient-stability tests (Prop. 4).
+
+use crate::math::linalg::{dot, sq_dist, Mat};
+
+/// Exact E-product on raw (unnormalized) vectors (Eq. 1):
+/// `E(q,k) = (qᵀk)² / (‖q−k‖² + ε)`.
+#[inline]
+pub fn e_product(q: &[f32], k: &[f32], eps: f32) -> f32 {
+    let a = dot(q, k);
+    a * a / (sq_dist(q, k) + eps)
+}
+
+/// Spherical E-product as a function of the alignment `x = q̂ᵀk̂` (Eq. 5):
+/// `E_sph(x) = x² / (C − 2x)`, `C = 2 + ε`.
+#[inline]
+pub fn e_sph(x: f32, eps: f32) -> f32 {
+    let c = 2.0 + eps;
+    x * x / (c - 2.0 * x)
+}
+
+/// Derivative `f'(x) = 2x(C − x)/(C − 2x)²` (proof of Prop. 3/4).
+#[inline]
+pub fn e_sph_deriv(x: f32, eps: f32) -> f32 {
+    let c = 2.0 + eps;
+    let den = c - 2.0 * x;
+    2.0 * x * (c - x) / (den * den)
+}
+
+/// Upper bound `1/ε` on `E_sph` over the sphere (Prop. 3).
+#[inline]
+pub fn e_sph_bound(eps: f32) -> f32 {
+    1.0 / eps
+}
+
+/// Score matrix of the exact Yat attention on raw rows: `S[i][j] = E(q_i, k_j)`.
+pub fn yat_scores(q: &Mat, k: &Mat, eps: f32) -> Mat {
+    assert_eq!(q.cols, k.cols);
+    let mut s = Mat::zeros(q.rows, k.rows);
+    for i in 0..q.rows {
+        let qi = q.row(i);
+        let row = s.row_mut(i);
+        for j in 0..k.rows {
+            row[j] = e_product(qi, k.row(j), eps);
+        }
+    }
+    s
+}
+
+/// Score matrix of the spherical Yat attention. Inputs are normalized
+/// internally (Eq. 2) — pass raw Q/K.
+pub fn yat_spherical_scores(q: &Mat, k: &Mat, eps: f32) -> Mat {
+    let qn = q.normalized_rows();
+    let kn = k.normalized_rows();
+    let mut s = crate::math::linalg::matmul_a_bt(&qn, &kn); // x = q̂ᵀk̂
+    for x in s.data.iter_mut() {
+        *x = e_sph(*x, eps);
+    }
+    s
+}
+
+/// Softmax attention scores `exp(qᵀk/√d)` (row-normalization happens in the
+/// engine; exp(·)/rowsum ≡ softmax exactly).
+pub fn softmax_scores(q: &Mat, k: &Mat) -> Mat {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut s = crate::math::linalg::matmul_a_bt(q, k);
+    // stabilized per-row: subtract row max before exp (cancels in the ratio)
+    for i in 0..s.rows {
+        let row = s.row_mut(i);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) * scale;
+        for x in row.iter_mut() {
+            *x = (*x * scale - mx).exp();
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn e_product_matches_expanded_formula() {
+        let q = [0.5f32, -1.0, 2.0];
+        let k = [1.0f32, 0.25, -0.5];
+        let eps = 1e-3;
+        let qk = q.iter().zip(&k).map(|(a, b)| a * b).sum::<f32>();
+        let d2 = q.iter().zip(&k).map(|(a, b)| (a - b) * (a - b)).sum::<f32>();
+        assert!((e_product(&q, &k, eps) - qk * qk / (d2 + eps)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spherical_form_agrees_with_e_product_on_unit_vectors() {
+        // On the sphere, E(q̂,k̂) = x²/((2+ε)−2x) exactly (Eq. 3-5).
+        let mut rng = Rng::new(31);
+        let eps = 1e-3f32;
+        for _ in 0..50 {
+            let q = Mat::randn(1, 16, &mut rng).normalized_rows();
+            let k = Mat::randn(1, 16, &mut rng).normalized_rows();
+            let x = dot(q.row(0), k.row(0));
+            let direct = e_product(q.row(0), k.row(0), eps);
+            let sph = e_sph(x, eps);
+            assert!(
+                (direct - sph).abs() < 1e-4 * (1.0 + sph.abs()),
+                "direct={direct} sph={sph}"
+            );
+        }
+    }
+
+    #[test]
+    fn bound_prop3_holds_and_is_attained() {
+        let eps = 1e-2f32;
+        for i in 0..=1000 {
+            let x = -1.0 + 2.0 * i as f32 / 1000.0;
+            let v = e_sph(x, eps);
+            assert!(v >= 0.0);
+            assert!(v <= e_sph_bound(eps) * (1.0 + 1e-5));
+        }
+        assert!((e_sph(1.0, eps) - 1.0 / eps).abs() < 1e-2);
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        let eps = 1e-2f32;
+        for &x in &[-0.9f32, -0.3, 0.0, 0.4, 0.8] {
+            let h = 1e-3f32;
+            let fd = (e_sph(x + h, eps) - e_sph(x - h, eps)) / (2.0 * h);
+            let an = e_sph_deriv(x, eps);
+            assert!((fd - an).abs() < 1e-2 * (1.0 + an.abs()), "x={x}: fd={fd} an={an}");
+        }
+    }
+
+    #[test]
+    fn gradient_bound_prop4() {
+        // |f'(x)| ≤ C_ε on [-1,1]; with ε=1e-2 the max is ~2·1·3/ε² bounded.
+        let eps = 0.1f32;
+        let c = 2.0 + eps;
+        let bound = 2.0 * (c + 1.0) / (eps * eps); // crude uniform bound
+        for i in 0..=1000 {
+            let x = -1.0 + 2.0 * i as f32 / 1000.0;
+            assert!(e_sph_deriv(x, eps).abs() <= bound);
+        }
+    }
+
+    #[test]
+    fn score_matrices_shapes_and_positivity() {
+        let mut rng = Rng::new(32);
+        let q = Mat::randn(5, 8, &mut rng);
+        let k = Mat::randn(7, 8, &mut rng);
+        for s in [
+            yat_scores(&q, &k, 1e-3),
+            yat_spherical_scores(&q, &k, 1e-3),
+            softmax_scores(&q, &k),
+        ] {
+            assert_eq!((s.rows, s.cols), (5, 7));
+            assert!(s.data.iter().all(|&x| x >= 0.0 && x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn spherical_scores_rotation_invariant() {
+        // Remark 3(i): E_sph(Rq, Rk) = E_sph(q, k). Use a Givens rotation.
+        let mut rng = Rng::new(33);
+        let q = Mat::randn(4, 6, &mut rng);
+        let k = Mat::randn(4, 6, &mut rng);
+        let theta = 0.77f32;
+        let rot = |m: &Mat| {
+            let mut r = m.clone();
+            for i in 0..m.rows {
+                let a = m.get(i, 0);
+                let b = m.get(i, 3);
+                r.set(i, 0, theta.cos() * a - theta.sin() * b);
+                r.set(i, 3, theta.sin() * a + theta.cos() * b);
+            }
+            r
+        };
+        let s1 = yat_spherical_scores(&q, &k, 1e-3);
+        let s2 = yat_spherical_scores(&rot(&q), &rot(&k), 1e-3);
+        for (a, b) in s1.data.iter().zip(s2.data.iter()) {
+            assert!((a - b).abs() < 1e-3 * (1.0 + a.abs()), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn not_sign_flip_invariant() {
+        // Remark 3: the full kernel is NOT invariant under q̂ ↦ −q̂.
+        let q = Mat::from_vec(1, 2, vec![1.0, 0.0]);
+        let k = Mat::from_vec(1, 2, vec![0.8, 0.6]);
+        let nq = q.map(|x| -x);
+        let a = yat_spherical_scores(&q, &k, 1e-3).get(0, 0);
+        let b = yat_spherical_scores(&nq, &k, 1e-3).get(0, 0);
+        assert!((a - b).abs() > 1e-3);
+    }
+
+    #[test]
+    fn psd_on_sphere_theorem2() {
+        // Sampled Gram matrices of E_sph on unit vectors must be PSD.
+        let mut rng = Rng::new(34);
+        for trial in 0..5 {
+            let pts = Mat::randn(10, 4 + trial, &mut rng).normalized_rows();
+            let gram = yat_spherical_scores(&pts, &pts, 1e-2);
+            // symmetrize tiny float asymmetry before the eig
+            let mut sym = gram.clone();
+            for r in 0..10 {
+                for c in 0..10 {
+                    sym.set(r, c, 0.5 * (gram.get(r, c) + gram.get(c, r)));
+                }
+            }
+            let min = crate::math::eigen::min_eigenvalue(&sym);
+            assert!(min > -1e-3, "trial {trial}: min eig {min}");
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! # SLAY — Spherical Linearized Attention with Yat-Kernel
+//!
+//! Full-system reproduction of *SLAY: Geometry-Aware Spherical Linearized
+//! Attention with Yat-Kernel* (Luna, Bouhsine, Choromanski, 2026) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1** — Pallas feature/attention kernels (build-time Python, AOT to HLO).
+//! * **L2** — JAX transformer with pluggable attention (AOT to HLO).
+//! * **L3** — this crate: the serving coordinator, the PJRT runtime that
+//!   executes the AOT artifacts, a pure-Rust mirror of every attention
+//!   mechanism and feature map used by the paper's evaluation, plus all
+//!   data/benchmark substrates (synthetic tasks, corpus, Eurlex simulator).
+//!
+//! See `DESIGN.md` for the per-experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod math;
+pub mod util;
+pub mod kernels;
+pub mod config;
+pub mod eval;
+pub mod data;
+pub mod runtime;
+pub mod coordinator;
+pub mod train;
+
+pub mod cli_app;
+
+/// CLI entrypoint — see [`cli_app`].
+pub fn cli_main(args: Vec<String>) -> anyhow::Result<()> {
+    cli_app::run(args)
+}

@@ -1,0 +1,5 @@
+//! `slay` CLI — leader entrypoint for the SLAY serving/training stack.
+
+fn main() -> anyhow::Result<()> {
+    slay::cli_main(std::env::args().skip(1).collect())
+}

@@ -1,0 +1,198 @@
+//! Symmetric eigendecomposition via cyclic Jacobi rotations.
+//!
+//! Used by the Nystrom feature map (`(K_AA + λI)^{−1/2}`, Appendix C) and
+//! the PSD property tests (Theorem 2: sampled Gram matrices of the
+//! spherical Yat-kernel must have nonnegative spectra). Matrices are small
+//! (anchor counts P ≤ 64), so the O(n³)-per-sweep Jacobi method is ideal:
+//! simple, branch-predictable, and accurate to machine precision.
+
+use crate::math::linalg::Mat;
+
+/// Eigendecomposition `A = V diag(λ) Vᵀ` of a symmetric matrix.
+/// Returns `(eigenvalues, eigenvectors)` with eigenvectors in the *columns*
+/// of the returned matrix, sorted by descending eigenvalue.
+pub fn symmetric_eig(a: &Mat) -> (Vec<f64>, Mat) {
+    assert_eq!(a.rows, a.cols, "symmetric_eig needs a square matrix");
+    let n = a.rows;
+    // f64 working copy
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let idx = |r: usize, c: usize| r * n + c;
+
+    for _sweep in 0..100 {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for r in 0..n {
+            for c in r + 1..n {
+                off += m[idx(r, c)] * m[idx(r, c)];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + frob(&m)) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[idx(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[idx(p, p)];
+                let aqq = m[idx(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p,q of m
+                for k in 0..n {
+                    let mkp = m[idx(k, p)];
+                    let mkq = m[idx(k, q)];
+                    m[idx(k, p)] = c * mkp - s * mkq;
+                    m[idx(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[idx(p, k)];
+                    let mqk = m[idx(q, k)];
+                    m[idx(p, k)] = c * mpk - s * mqk;
+                    m[idx(q, k)] = s * mpk + c * mqk;
+                }
+                // accumulate eigenvectors
+                for k in 0..n {
+                    let vkp = v[idx(k, p)];
+                    let vkq = v[idx(k, q)];
+                    v[idx(k, p)] = c * vkp - s * vkq;
+                    v[idx(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    let mut pairs: Vec<(f64, usize)> = (0..n).map(|i| (m[idx(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let eigvals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vecs = Mat::zeros(n, n);
+    for (new_col, &(_, old_col)) in pairs.iter().enumerate() {
+        for r in 0..n {
+            vecs.set(r, new_col, v[idx(r, old_col)] as f32);
+        }
+    }
+    (eigvals, vecs)
+}
+
+fn frob(m: &[f64]) -> f64 {
+    m.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Inverse matrix square root `A^{−1/2}` of a symmetric PSD matrix, with
+/// eigenvalue floor `floor` guarding near-singular directions.
+pub fn inv_sqrt_psd(a: &Mat, floor: f64) -> Mat {
+    let (vals, vecs) = symmetric_eig(a);
+    let n = a.rows;
+    // B = V diag(λ^{-1/2}) Vᵀ
+    let mut scaled = vecs.clone(); // columns scaled by λ^{-1/2}
+    for (j, &l) in vals.iter().enumerate() {
+        let inv = 1.0 / l.max(floor).sqrt();
+        for r in 0..n {
+            let x = scaled.get(r, j) * inv as f32;
+            scaled.set(r, j, x);
+        }
+    }
+    crate::math::linalg::matmul_a_bt(&scaled, &vecs)
+}
+
+/// Smallest eigenvalue of a symmetric matrix (PSD witness for tests).
+pub fn min_eigenvalue(a: &Mat) -> f64 {
+    let (vals, _) = symmetric_eig(a);
+    vals.last().copied().unwrap_or(f64::NAN)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::{matmul, matmul_a_bt, Mat};
+    use crate::math::rng::Rng;
+
+    fn random_symmetric(n: usize, rng: &mut Rng) -> Mat {
+        let b = Mat::randn(n, n, rng);
+        let mut s = Mat::zeros(n, n);
+        for r in 0..n {
+            for c in 0..n {
+                s.set(r, c, 0.5 * (b.get(r, c) + b.get(c, r)));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn reconstructs_matrix() {
+        let mut rng = Rng::new(21);
+        let a = random_symmetric(8, &mut rng);
+        let (vals, vecs) = symmetric_eig(&a);
+        // A ?= V diag(vals) Vᵀ
+        let mut scaled = vecs.clone();
+        for j in 0..8 {
+            for r in 0..8 {
+                let x = scaled.get(r, j) * vals[j] as f32;
+                scaled.set(r, j, x);
+            }
+        }
+        let rec = matmul_a_bt(&scaled, &vecs);
+        for (x, y) in rec.data.iter().zip(a.data.iter()) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let mut rng = Rng::new(22);
+        let a = random_symmetric(10, &mut rng);
+        let (_, v) = symmetric_eig(&a);
+        let vtv = matmul(&v.transpose(), &v);
+        for r in 0..10 {
+            for c in 0..10 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((vtv.get(r, c) - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Mat::from_fn(3, 3, |r, c| if r == c { (3 - r) as f32 } else { 0.0 });
+        let (vals, _) = symmetric_eig(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-10);
+        assert!((vals[1] - 2.0).abs() < 1e-10);
+        assert!((vals[2] - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn inv_sqrt_squares_to_inverse() {
+        let mut rng = Rng::new(23);
+        // PSD matrix: BᵀB + I
+        let b = Mat::randn(6, 6, &mut rng);
+        let mut a = matmul(&b.transpose(), &b);
+        for i in 0..6 {
+            let x = a.get(i, i) + 1.0;
+            a.set(i, i, x);
+        }
+        let s = inv_sqrt_psd(&a, 1e-12);
+        // s·a·s ≈ I
+        let prod = matmul(&matmul(&s, &a), &s);
+        for r in 0..6 {
+            for c in 0..6 {
+                let want = if r == c { 1.0 } else { 0.0 };
+                assert!((prod.get(r, c) - want).abs() < 1e-3, "({r},{c})={}", prod.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn psd_gram_has_nonnegative_spectrum() {
+        let mut rng = Rng::new(24);
+        let b = Mat::randn(12, 5, &mut rng);
+        let gram = matmul_a_bt(&b, &b);
+        assert!(min_eigenvalue(&gram) > -1e-4);
+    }
+}

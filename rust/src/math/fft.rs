@@ -1,0 +1,144 @@
+//! Iterative radix-2 complex FFT — the only consumer is TensorSketch's
+//! circular convolution (`CS(a ⊗ b) = IFFT(FFT(CS₁a) · FFT(CS₂b))`), so the
+//! implementation is deliberately minimal: in-place Cooley–Tukey over
+//! power-of-two lengths, f64 precision.
+
+/// Complex number (we avoid pulling in num-complex's API surface).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Cpx {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Cpx {
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Cpx {
+        Cpx { re, im }
+    }
+
+    #[inline]
+    pub fn mul(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re * o.re - self.im * o.im, self.re * o.im + self.im * o.re)
+    }
+
+    #[inline]
+    fn add(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re + o.re, self.im + o.im)
+    }
+
+    #[inline]
+    fn sub(self, o: Cpx) -> Cpx {
+        Cpx::new(self.re - o.re, self.im - o.im)
+    }
+}
+
+/// Round `n` up to the next power of two.
+pub fn next_pow2(n: usize) -> usize {
+    n.next_power_of_two()
+}
+
+/// In-place FFT (`inverse = false`) or unnormalized IFFT (`inverse = true`).
+/// Length must be a power of two. The caller divides by `n` after an
+/// inverse transform.
+pub fn fft_in_place(a: &mut [Cpx], inverse: bool) {
+    let n = a.len();
+    assert!(n.is_power_of_two(), "fft length {n} not a power of two");
+    // bit reversal permutation
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            a.swap(i, j);
+        }
+    }
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = Cpx::new(ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = Cpx::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = a[i + k];
+                let v = a[i + k + len / 2].mul(w);
+                a[i + k] = u.add(v);
+                a[i + k + len / 2] = u.sub(v);
+                w = w.mul(wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// Circular convolution of two real vectors of equal power-of-two length.
+pub fn circular_convolve(x: &[f64], y: &[f64]) -> Vec<f64> {
+    assert_eq!(x.len(), y.len());
+    let n = x.len();
+    assert!(n.is_power_of_two());
+    let mut fx: Vec<Cpx> = x.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+    let mut fy: Vec<Cpx> = y.iter().map(|&v| Cpx::new(v, 0.0)).collect();
+    fft_in_place(&mut fx, false);
+    fft_in_place(&mut fy, false);
+    for (a, b) in fx.iter_mut().zip(fy.iter()) {
+        *a = a.mul(*b);
+    }
+    fft_in_place(&mut fx, true);
+    fx.iter().map(|c| c.re / n as f64).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fft_roundtrip() {
+        let mut a: Vec<Cpx> = (0..16).map(|i| Cpx::new(i as f64, -(i as f64) / 3.0)).collect();
+        let orig = a.clone();
+        fft_in_place(&mut a, false);
+        fft_in_place(&mut a, true);
+        for (x, y) in a.iter().zip(orig.iter()) {
+            assert!((x.re / 16.0 - y.re).abs() < 1e-10);
+            assert!((x.im / 16.0 - y.im).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn fft_of_impulse_is_flat() {
+        let mut a = vec![Cpx::default(); 8];
+        a[0] = Cpx::new(1.0, 0.0);
+        fft_in_place(&mut a, false);
+        for c in &a {
+            assert!((c.re - 1.0).abs() < 1e-12 && c.im.abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn convolution_matches_naive() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [0.5, -1.0, 0.25, 2.0];
+        let got = circular_convolve(&x, &y);
+        for k in 0..4 {
+            let mut want = 0.0;
+            for i in 0..4 {
+                want += x[i] * y[(k + 4 - i) % 4];
+            }
+            assert!((got[k] - want).abs() < 1e-10, "k={k}: {} vs {want}", got[k]);
+        }
+    }
+
+    #[test]
+    fn parseval_holds() {
+        let mut a: Vec<Cpx> = (0..32).map(|i| Cpx::new((i as f64).sin(), 0.0)).collect();
+        let time_energy: f64 = a.iter().map(|c| c.re * c.re + c.im * c.im).sum();
+        fft_in_place(&mut a, false);
+        let freq_energy: f64 = a.iter().map(|c| c.re * c.re + c.im * c.im).sum::<f64>() / 32.0;
+        assert!((time_energy - freq_energy).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,479 @@
+//! Dense linear algebra on row-major `f32` matrices.
+//!
+//! No BLAS/ndarray is available offline, so this module provides the small
+//! but heavily optimized core the attention engines need: cache-blocked,
+//! optionally multi-threaded matmul (plain / A-transposed), row ops,
+//! normalization, softmax and reductions. Everything is `f32` storage with
+//! `f32` accumulation in the blocked kernels (matching the JAX side) except
+//! where noted.
+
+/// Row-major dense matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from a flat row-major vector (length must match).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Build by evaluating `f(r, c)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        Mat::from_fn(n, n, |r, c| if r == c { 1.0 } else { 0.0 })
+    }
+
+    /// Random N(0,1) entries.
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::math::rng::Rng) -> Self {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Transpose (out-of-place).
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // simple tiling for cache behaviour
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// L2-normalize every row in place (unit-sphere projection, Eq. 2 of the
+    /// paper). Rows with norm below `1e-12` are left untouched.
+    pub fn normalize_rows(&mut self) {
+        for r in 0..self.rows {
+            let row = self.row_mut(r);
+            let n: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if n > 1e-12 {
+                let inv = 1.0 / n;
+                for x in row.iter_mut() {
+                    *x *= inv;
+                }
+            }
+        }
+    }
+
+    /// Returned normalized copy.
+    pub fn normalized_rows(&self) -> Mat {
+        let mut m = self.clone();
+        m.normalize_rows();
+        m
+    }
+
+    /// Elementwise map.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Scale in place.
+    pub fn scale(&mut self, s: f32) {
+        for x in self.data.iter_mut() {
+            *x *= s;
+        }
+    }
+
+    /// `self += other`.
+    pub fn add_assign(&mut self, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += b;
+        }
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "hcat: row mismatch");
+        let cols = self.cols + other.cols;
+        let mut out = Mat::zeros(self.rows, cols);
+        for r in 0..self.rows {
+            out.row_mut(r)[..self.cols].copy_from_slice(self.row(r));
+            out.row_mut(r)[self.cols..].copy_from_slice(other.row(r));
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+}
+
+/// Dot product of two slices (f32 accumulate, unrolled by the compiler).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc0 += a[j] * b[j];
+        acc1 += a[j + 1] * b[j + 1];
+        acc2 += a[j + 2] * b[j + 2];
+        acc3 += a[j + 3] * b[j + 3];
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for j in chunks * 4..a.len() {
+        acc += a[j] * b[j];
+    }
+    acc
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Squared L2 distance between two slices.
+#[inline]
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// Number of worker threads used by the threaded matmul. Defaults to the
+/// available parallelism minus one (leader thread keeps a share), clamped
+/// to [1, 16]; override with `SLAY_THREADS`.
+pub fn num_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("SLAY_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .clamp(1, 16)
+    })
+}
+
+/// `C = A · B` — cache-blocked (i-k-j loop order so the inner loop is an
+/// axpy over contiguous rows of B), threaded over row stripes of A when the
+/// problem is big enough.
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "matmul: inner dim mismatch {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let flops = a.rows * a.cols * b.cols;
+    let nt = num_threads();
+    if flops < 64 * 64 * 64 || nt == 1 || a.rows < 2 {
+        matmul_stripe(a, b, &mut c.data, 0, a.rows);
+        return c;
+    }
+    let stripe = a.rows.div_ceil(nt);
+    let bc = b.cols;
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = &mut c.data;
+        let mut r0 = 0;
+        let mut handles = Vec::new();
+        while r0 < a.rows {
+            let take = stripe.min(a.rows - r0);
+            let (chunk, tail) = rest.split_at_mut(take * bc);
+            rest = tail;
+            let start = r0;
+            handles.push(s.spawn(move || matmul_stripe(a, b, chunk, start, take)));
+            r0 += take;
+        }
+        for h in handles {
+            h.join().expect("matmul worker panicked");
+        }
+    });
+    c
+}
+
+/// Compute rows `[start, start+n)` of `A·B` into `out` (n × b.cols).
+fn matmul_stripe(a: &Mat, b: &Mat, out: &mut [f32], start: usize, n: usize) {
+    let k_dim = a.cols;
+    let j_dim = b.cols;
+    const KB: usize = 64; // k-blocking keeps the B panel in L1/L2
+    for kb in (0..k_dim).step_by(KB) {
+        let k_end = (kb + KB).min(k_dim);
+        for i in 0..n {
+            let a_row = a.row(start + i);
+            let c_row = &mut out[i * j_dim..(i + 1) * j_dim];
+            for k in kb..k_end {
+                let aik = a_row[k];
+                if aik != 0.0 {
+                    axpy(aik, &b.data[k * j_dim..(k + 1) * j_dim], c_row);
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` without materializing the transpose (A: k×m, B: k×n → m×n).
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows, b.rows, "matmul_at_b: row mismatch");
+    let m = a.cols;
+    let n = b.cols;
+    let mut c = Mat::zeros(m, n);
+    for k in 0..a.rows {
+        let a_row = a.row(k);
+        let b_row = b.row(k);
+        for i in 0..m {
+            let aik = a_row[i];
+            if aik != 0.0 {
+                axpy(aik, b_row, &mut c.data[i * n..(i + 1) * n]);
+            }
+        }
+    }
+    c
+}
+
+/// `C = A · Bᵀ` (A: m×k, B: n×k → m×n) — rows of both operands are
+/// contiguous, so the inner kernel is a dot product.
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "matmul_a_bt: col mismatch");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    let nt = num_threads();
+    if a.rows * b.rows * a.cols < 64 * 64 * 64 || nt == 1 || a.rows < 2 {
+        for i in 0..a.rows {
+            let ar = a.row(i);
+            for j in 0..b.rows {
+                c.data[i * b.rows + j] = dot(ar, b.row(j));
+            }
+        }
+        return c;
+    }
+    let stripe = a.rows.div_ceil(nt);
+    let bn = b.rows;
+    std::thread::scope(|s| {
+        let mut rest: &mut [f32] = &mut c.data;
+        let mut r0 = 0;
+        while r0 < a.rows {
+            let take = stripe.min(a.rows - r0);
+            let (chunk, tail) = rest.split_at_mut(take * bn);
+            rest = tail;
+            let start = r0;
+            s.spawn(move || {
+                for i in 0..take {
+                    let ar = a.row(start + i);
+                    for j in 0..bn {
+                        chunk[i * bn + j] = dot(ar, b.row(j));
+                    }
+                }
+            });
+            r0 += take;
+        }
+    });
+    c
+}
+
+/// Row-wise softmax in place (numerically stabilized).
+pub fn softmax_rows(m: &mut Mat) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - mx).exp();
+            sum += *x;
+        }
+        let inv = 1.0 / sum;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Row-wise normalization by row sums with stabilizer δ (kernel
+/// normalization of Eq. 11 — *not* a softmax).
+pub fn normalize_rows_by_sum(m: &mut Mat, delta: f32) {
+    for r in 0..m.rows {
+        let row = m.row_mut(r);
+        let sum: f32 = row.iter().sum();
+        let inv = 1.0 / (sum + delta);
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a.get(i, k) * b.get(k, j);
+                }
+                c.set(i, j, s);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(b.data.iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        let mut rng = Rng::new(11);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (17, 9, 33), (64, 64, 64), (100, 31, 57)] {
+            let a = Mat::randn(m, k, &mut rng);
+            let b = Mat::randn(k, n, &mut rng);
+            assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-5);
+        }
+    }
+
+    #[test]
+    fn threaded_matmul_matches_naive_large() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(130, 70, &mut rng);
+        let b = Mat::randn(70, 90, &mut rng);
+        assert_close(&matmul(&a, &b), &naive_matmul(&a, &b), 1e-4);
+    }
+
+    #[test]
+    fn at_b_and_a_bt_match_explicit_transpose() {
+        let mut rng = Rng::new(13);
+        let a = Mat::randn(40, 17, &mut rng);
+        let b = Mat::randn(40, 23, &mut rng);
+        assert_close(&matmul_at_b(&a, &b), &naive_matmul(&a.transpose(), &b), 1e-4);
+        let c = Mat::randn(31, 17, &mut rng);
+        assert_close(&matmul_a_bt(&a, &c), &naive_matmul(&a, &c.transpose()), 1e-4);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let mut rng = Rng::new(14);
+        let a = Mat::randn(12, 12, &mut rng);
+        assert_close(&matmul(&a, &Mat::eye(12)), &a, 1e-6);
+        assert_close(&matmul(&Mat::eye(12), &a), &a, 1e-6);
+    }
+
+    #[test]
+    fn normalize_rows_gives_unit_norm() {
+        let mut rng = Rng::new(15);
+        let mut a = Mat::randn(20, 8, &mut rng);
+        a.normalize_rows();
+        for r in 0..a.rows {
+            let n: f32 = a.row(r).iter().map(|x| x * x).sum::<f32>().sqrt();
+            assert!((n - 1.0).abs() < 1e-5, "row {r} norm {n}");
+        }
+    }
+
+    #[test]
+    fn normalize_rows_handles_zero_row() {
+        let mut a = Mat::zeros(2, 4);
+        a.set(1, 0, 3.0);
+        a.normalize_rows();
+        assert_eq!(a.row(0), &[0.0, 0.0, 0.0, 0.0]);
+        assert!((a.get(1, 0) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one_and_is_stable() {
+        let mut m = Mat::from_vec(2, 3, vec![1e4, 1e4 + 1.0, 1e4 - 1.0, -5.0, 0.0, 5.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(m.row(r).iter().all(|&x| x.is_finite() && x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(16);
+        let a = Mat::randn(37, 53, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn hcat_shapes_and_contents() {
+        let a = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Mat::from_vec(2, 1, vec![5., 6.]);
+        let c = a.hcat(&b);
+        assert_eq!((c.rows, c.cols), (2, 3));
+        assert_eq!(c.row(0), &[1., 2., 5.]);
+        assert_eq!(c.row(1), &[3., 4., 6.]);
+    }
+
+    #[test]
+    fn dot_matches_reference() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let reference: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - reference).abs() < 1e-4);
+    }
+
+    #[test]
+    fn kernel_normalization_uses_delta() {
+        let mut m = Mat::from_vec(1, 2, vec![0.0, 0.0]);
+        normalize_rows_by_sum(&mut m, 1e-6);
+        assert!(m.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,10 @@
+//! Numerical substrates: PRNG, dense linear algebra, Gauss–Laguerre
+//! quadrature, and statistics. All implemented from scratch (the offline
+//! image vendors no rand/ndarray/BLAS/scipy-equivalent for Rust).
+
+pub mod eigen;
+pub mod fft;
+pub mod linalg;
+pub mod quadrature;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,234 @@
+//! Gauss–Laguerre quadrature (§2.4.1 / Appendix J of the paper).
+//!
+//! Computes nodes `t_r` and weights `α_r` for `∫₀^∞ e^{−t} f(t) dt ≈
+//! Σ α_r f(t_r)` via Newton iteration on the Laguerre polynomial `L_R`,
+//! then applies the paper's change of variables `t = C·s` so that
+//! `∫₀^∞ e^{−Cs} h(s) ds ≈ Σ w_r h(s_r)` with `s_r = t_r/C`, `w_r = α_r/C`.
+//!
+//! No scipy equivalent exists on the Rust side, so this is implemented from
+//! scratch (f64 throughout; validated against closed-form integrals and the
+//! spherical Yat-kernel's exact value in the tests).
+
+/// One quadrature rule: `nodes[i]` ↔ `weights[i]`.
+#[derive(Clone, Debug)]
+pub struct GaussLaguerre {
+    pub nodes: Vec<f64>,
+    pub weights: Vec<f64>,
+}
+
+/// Evaluate `(L_n(x), L_n'(x))` by the three-term recurrence.
+fn laguerre_and_deriv(n: usize, x: f64) -> (f64, f64) {
+    // L_0 = 1, L_1 = 1 - x, (k+1) L_{k+1} = (2k+1-x) L_k − k L_{k−1}
+    let mut lm1 = 1.0; // L_{k-1}
+    let mut l = 1.0 - x; // L_k
+    if n == 0 {
+        return (1.0, 0.0);
+    }
+    for k in 1..n {
+        let lp1 = ((2.0 * k as f64 + 1.0 - x) * l - k as f64 * lm1) / (k as f64 + 1.0);
+        lm1 = l;
+        l = lp1;
+    }
+    // L_n'(x) = n (L_n(x) − L_{n−1}(x)) / x
+    let deriv = if x.abs() > 1e-300 {
+        n as f64 * (l - lm1) / x
+    } else {
+        -(n as f64) // L_n'(0) = −n
+    };
+    (l, deriv)
+}
+
+impl GaussLaguerre {
+    /// Standard rule for weight `e^{−t}` on `[0, ∞)` with `r` nodes.
+    pub fn new(r: usize) -> Self {
+        assert!(r >= 1 && r <= 128, "unsupported node count {r}");
+        let mut nodes = Vec::with_capacity(r);
+        let mut weights = Vec::with_capacity(r);
+        let n = r as f64;
+        let mut x = 0.0f64;
+        for i in 0..r {
+            // Stroud & Secrest initial guesses.
+            x = match i {
+                0 => 3.0 / (1.0 + 2.4 * n),
+                1 => x + 15.0 / (1.0 + 2.5 * n),
+                _ => {
+                    let ai = i as f64 - 1.0;
+                    x + (1.0 + 2.55 * ai) / (1.9 * ai) * (x - nodes[i - 2])
+                }
+            };
+            // Newton iterations on L_r(x) = 0.
+            let mut l;
+            let mut dl = 0.0;
+            for _ in 0..100 {
+                let (li, dli) = laguerre_and_deriv(r, x);
+                l = li;
+                dl = dli;
+                let dx = l / dl;
+                x -= dx;
+                if dx.abs() < 1e-14 * (1.0 + x.abs()) {
+                    break;
+                }
+            }
+            let _ = dl;
+            // α_i = x_i / ((r+1)² L_{r+1}(x_i)²)
+            let (lp1, _) = laguerre_and_deriv(r + 1, x);
+            let w = x / ((n + 1.0) * (n + 1.0) * lp1 * lp1);
+            nodes.push(x);
+            weights.push(w);
+        }
+        GaussLaguerre { nodes, weights }
+    }
+
+    /// Paper's scaled rule for `∫₀^∞ e^{−Cs} h(s) ds` (App. J): nodes
+    /// `s_r = t_r/C`, weights `w_r = α_r/C` (the `1/C` factor from `t=Cs`
+    /// is folded into the weights).
+    pub fn scaled(r: usize, c: f64) -> Self {
+        assert!(c > 0.0);
+        let base = GaussLaguerre::new(r);
+        GaussLaguerre {
+            nodes: base.nodes.iter().map(|t| t / c).collect(),
+            weights: base.weights.iter().map(|a| a / c).collect(),
+        }
+    }
+
+    /// `Σ w_r f(s_r)`.
+    pub fn integrate(&self, f: impl Fn(f64) -> f64) -> f64 {
+        self.nodes
+            .iter()
+            .zip(self.weights.iter())
+            .map(|(&s, &w)| w * f(s))
+            .sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// Exact spherical Yat-kernel `E_sph(x) = x²/(C − 2x)` with `C = 2 + ε`
+/// (Eq. 5) — the ground truth the quadrature approximates.
+#[inline]
+pub fn e_sph_exact(x: f64, eps: f64) -> f64 {
+    let c = 2.0 + eps;
+    x * x / (c - 2.0 * x)
+}
+
+/// Quadrature approximation of `E_sph(x)` with `R` nodes (Eq. 8 + §2.4.1):
+/// `Σ_r w_r · x² e^{2 s_r x}`.
+pub fn e_sph_quadrature(x: f64, eps: f64, r: usize) -> f64 {
+    let c = 2.0 + eps;
+    let q = GaussLaguerre::scaled(r, c);
+    q.integrate(|s| x * x * (2.0 * s * x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integrates_polynomials_exactly() {
+        // ∫ e^{-t} t^k dt = k!  — exact for k ≤ 2R−1.
+        let q = GaussLaguerre::new(5);
+        let fact = [1.0, 1.0, 2.0, 6.0, 24.0, 120.0, 720.0, 5040.0, 40320.0, 362880.0];
+        for k in 0..=9usize {
+            let got = q.integrate(|t| t.powi(k as i32));
+            assert!(
+                (got - fact[k]).abs() < 1e-8 * fact[k].max(1.0),
+                "k={k} got={got} want={}",
+                fact[k]
+            );
+        }
+    }
+
+    #[test]
+    fn weights_sum_to_one() {
+        // ∫ e^{-t} dt = 1
+        for r in [1, 2, 3, 4, 8, 16, 32] {
+            let q = GaussLaguerre::new(r);
+            let s: f64 = q.weights.iter().sum();
+            assert!((s - 1.0).abs() < 1e-10, "r={r} sum={s}");
+        }
+    }
+
+    #[test]
+    fn nodes_positive_and_increasing() {
+        let q = GaussLaguerre::new(16);
+        assert!(q.nodes[0] > 0.0);
+        for w in q.nodes.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+        assert!(q.weights.iter().all(|&w| w > 0.0));
+    }
+
+    #[test]
+    fn matches_known_gl2_rule() {
+        // R=2: nodes 2∓√2, weights (2±√2)/4.
+        let q = GaussLaguerre::new(2);
+        let s2 = 2f64.sqrt();
+        assert!((q.nodes[0] - (2.0 - s2)).abs() < 1e-12);
+        assert!((q.nodes[1] - (2.0 + s2)).abs() < 1e-12);
+        assert!((q.weights[0] - (2.0 + s2) / 4.0).abs() < 1e-12);
+        assert!((q.weights[1] - (2.0 - s2) / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn scaled_rule_integrates_exponential() {
+        // ∫ e^{-Cs} ds = 1/C
+        let c = 2.001;
+        let q = GaussLaguerre::scaled(8, c);
+        let got = q.integrate(|_| 1.0);
+        assert!((got - 1.0 / c).abs() < 1e-10);
+    }
+
+    #[test]
+    fn quadrature_converges_to_exact_kernel() {
+        // Fig. 9 phenomenon: exponential convergence in R.
+        let eps = 1e-3;
+        for &x in &[-1.0, -0.5, 0.0, 0.3, 0.7, 0.9] {
+            let exact = e_sph_exact(x, eps);
+            let mut prev_err = f64::INFINITY;
+            for r in [2usize, 4, 8, 16] {
+                let err = (e_sph_quadrature(x, eps, r) - exact).abs();
+                assert!(err <= prev_err + 1e-12, "x={x} r={r}: {err} > {prev_err}");
+                prev_err = err;
+            }
+            // Relative tolerance: convergence base worsens as x → 1 (the
+            // effective decay is e^{-(C-2x)s}); 1% at R=16 matches Fig. 9.
+            assert!(
+                prev_err < 1e-2 * exact.abs().max(1e-3),
+                "x={x} final rel err {}",
+                prev_err / exact.abs().max(1e-300)
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_bound_holds_exactly_at_x_one() {
+        // Prop. 3: max over [-1,1] is 1/ε at x=1.
+        let eps = 1e-3;
+        assert!((e_sph_exact(1.0, eps) - 1.0 / eps).abs() < 1e-6 / eps);
+        for i in 0..=200 {
+            let x = -1.0 + 2.0 * i as f64 / 200.0;
+            let v = e_sph_exact(x, eps);
+            assert!(v >= 0.0 && v <= 1.0 / eps + 1e-9);
+        }
+    }
+
+    #[test]
+    fn laplace_only_identity_appendix_f() {
+        // x²/(C−2x) = (C²/4)∫e^{−Cs}e^{2sx}ds − C/4 − x/2 (App. F).
+        let eps = 0.05;
+        let c = 2.0 + eps;
+        let q = GaussLaguerre::scaled(48, c);
+        for &x in &[-0.9, -0.3, 0.0, 0.4, 0.8] {
+            let lhs = e_sph_exact(x, eps);
+            let integral = q.integrate(|s| (2.0 * s * x).exp());
+            let rhs = c * c / 4.0 * integral - c / 4.0 - x / 2.0;
+            assert!((lhs - rhs).abs() < 1e-4, "x={x}: {lhs} vs {rhs}");
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Summary statistics and the error metrics used throughout the paper's
+//! evaluation: relative ℓ2 error, cosine similarity, MSE (Table 2/6),
+//! Shannon entropy of attention rows (Fig. 15/16), Pearson correlation
+//! (Fig. 18), and latency percentiles for the bench harness.
+
+/// Relative ℓ2 error `‖a − b‖₂ / ‖b‖₂` (b is the reference).
+pub fn rel_l2(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = x as f64 - y as f64;
+        num += d * d;
+        den += (y as f64) * (y as f64);
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Cosine similarity between flattened tensors.
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut ab = 0.0f64;
+    let mut aa = 0.0f64;
+    let mut bb = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        ab += x as f64 * y as f64;
+        aa += x as f64 * x as f64;
+        bb += y as f64 * y as f64;
+    }
+    ab / (aa.sqrt() * bb.sqrt()).max(1e-300)
+}
+
+/// Mean squared error.
+pub fn mse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let d = x as f64 - y as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len() as f64;
+    let ma = a.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mb = b.iter().map(|&x| x as f64).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (&x, &y) in a.iter().zip(b.iter()) {
+        let dx = x as f64 - ma;
+        let dy = y as f64 - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    cov / (va.sqrt() * vb.sqrt()).max(1e-300)
+}
+
+/// Shannon entropy (nats) of a nonnegative weight vector, normalized to a
+/// distribution first. Zero-mass rows return 0.
+pub fn entropy(weights: &[f32]) -> f64 {
+    let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &w in weights {
+        let p = (w.max(0.0) as f64) / total;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+/// Mean of a sample.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile with linear interpolation, `q ∈ [0, 100]`.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q / 100.0 * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Welford online mean/variance accumulator (used by streaming metrics).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    pub n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            f64::NAN
+        } else {
+            self.mean
+        }
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rel_l2_zero_for_identical() {
+        let a = [1.0f32, -2.0, 3.0];
+        assert!(rel_l2(&a, &a) < 1e-12);
+    }
+
+    #[test]
+    fn rel_l2_one_for_zero_estimate() {
+        let a = [0.0f32; 4];
+        let b = [1.0f32, 1.0, 1.0, 1.0];
+        assert!((rel_l2(&a, &b) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_bounds_and_signs() {
+        let a = [1.0f32, 0.0];
+        let b = [0.0f32, 1.0];
+        let c = [-1.0f32, 0.0];
+        assert!(cosine(&a, &a) > 0.999999);
+        assert!(cosine(&a, &b).abs() < 1e-9);
+        assert!((cosine(&a, &c) + 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn entropy_uniform_is_log_n() {
+        let w = [0.25f32; 4];
+        assert!((entropy(&w) - 4.0f64.ln()).abs() < 1e-9);
+        // peaked distribution has lower entropy
+        assert!(entropy(&[1.0, 0.0, 0.0, 0.0]) < 1e-12);
+        // scale invariance
+        assert!((entropy(&[2.0, 2.0]) - 2.0f64.ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let xs = [1.0, 4.0, 9.0, 16.0, 25.0];
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-12);
+        assert!((w.std() - std_dev(&xs)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pearson_perfect_linear() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-9);
+        let c = [8.0f32, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-9);
+    }
+}

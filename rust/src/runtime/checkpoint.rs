@@ -1,0 +1,156 @@
+//! Checkpoint I/O — a simple self-describing binary tensor container
+//! (`.slayckpt`) for trained parameters. Layout (little-endian):
+//!
+//! ```text
+//! magic  b"SLAYCKPT"            8 bytes
+//! version u32                   4
+//! count   u32                   4
+//! repeated count times:
+//!   name_len u32 | name utf-8 | ndim u32 | dims u64×ndim | f32 data
+//! ```
+
+use crate::runtime::executor::TensorData;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SLAYCKPT";
+
+/// A named tensor collection (parameter snapshot).
+#[derive(Clone, Debug, Default)]
+pub struct Checkpoint {
+    pub tensors: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn push(&mut self, name: &str, shape: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(shape.iter().product::<usize>().max(1), data.len().max(1));
+        self.tensors.push((name.to_string(), shape, data));
+    }
+
+    /// Build from manifest-ordered outputs of an init/train_step artifact.
+    pub fn from_tensor_data(
+        names: &[String],
+        shapes: &[Vec<usize>],
+        data: &[TensorData],
+    ) -> anyhow::Result<Checkpoint> {
+        anyhow::ensure!(names.len() == data.len() && names.len() == shapes.len());
+        let mut ck = Checkpoint::default();
+        for ((n, s), t) in names.iter().zip(shapes.iter()).zip(data.iter()) {
+            ck.push(n, s.clone(), t.as_f32()?.to_vec());
+        }
+        Ok(ck)
+    }
+
+    /// Extract as TensorData in the stored order.
+    pub fn to_tensor_data(&self) -> Vec<TensorData> {
+        self.tensors
+            .iter()
+            .map(|(_, _, d)| TensorData::F32(d.clone()))
+            .collect()
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        f.write_all(&1u32.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, shape, data) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            // safe f32 → bytes
+            let mut buf = Vec::with_capacity(data.len() * 4);
+            for &x in data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&buf)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == MAGIC, "not a slay checkpoint: {}", path.display());
+        let version = read_u32(&mut f)?;
+        anyhow::ensure!(version == 1, "unsupported checkpoint version {version}");
+        let count = read_u32(&mut f)? as usize;
+        anyhow::ensure!(count < 1_000_000, "implausible tensor count {count}");
+        let mut ck = Checkpoint::default();
+        for _ in 0..count {
+            let name_len = read_u32(&mut f)? as usize;
+            anyhow::ensure!(name_len < 4096, "implausible name length");
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let ndim = read_u32(&mut f)? as usize;
+            anyhow::ensure!(ndim <= 8, "implausible rank {ndim}");
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                shape.push(u64::from_le_bytes(b) as usize);
+            }
+            let n: usize = shape.iter().product::<usize>().max(1);
+            let mut buf = vec![0u8; n * 4];
+            f.read_exact(&mut buf)?;
+            let data: Vec<f32> = buf
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            ck.push(&String::from_utf8(name)?, shape, data);
+        }
+        Ok(ck)
+    }
+}
+
+fn read_u32(f: &mut impl Read) -> anyhow::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut ck = Checkpoint::default();
+        ck.push("wte", vec![3, 2], vec![1.0, -2.0, 3.5, 0.0, 1e-9, 7.25]);
+        ck.push("bias", vec![4], vec![0.1, 0.2, 0.3, 0.4]);
+        ck.push("scalar", vec![], vec![42.0]);
+        let path = std::env::temp_dir().join("slay_ckpt_test.slayckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tensors.len(), 3);
+        for ((n1, s1, d1), (n2, s2, d2)) in ck.tensors.iter().zip(back.tensors.iter()) {
+            assert_eq!(n1, n2);
+            assert_eq!(s1, s2);
+            assert_eq!(d1, d2);
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let path = std::env::temp_dir().join("slay_ckpt_garbage");
+        std::fs::write(&path, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+    }
+
+    #[test]
+    fn tensor_data_conversion() {
+        let names = vec!["a".to_string(), "b".to_string()];
+        let shapes = vec![vec![2], vec![1, 2]];
+        let data = vec![
+            TensorData::F32(vec![1.0, 2.0]),
+            TensorData::F32(vec![3.0, 4.0]),
+        ];
+        let ck = Checkpoint::from_tensor_data(&names, &shapes, &data).unwrap();
+        let back = ck.to_tensor_data();
+        assert_eq!(back[1].as_f32().unwrap(), &[3.0, 4.0]);
+    }
+}

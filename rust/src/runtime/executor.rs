@@ -1,0 +1,227 @@
+//! PJRT execution of AOT artifacts: load HLO text, compile once on the CPU
+//! client, execute with host tensors or device-resident buffers.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (jax ≥0.5 protos are rejected by xla_extension
+//! 0.5.1), lowering used `return_tuple=True` so every artifact returns one
+//! tuple we decompose positionally against the manifest.
+
+use super::manifest::{ArtifactEntry, DType, TensorSpec};
+use std::cell::OnceCell;
+
+/// Host tensor values crossing the PJRT boundary.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U32(_) => DType::U32,
+        }
+    }
+
+    pub fn as_f32(&self) -> anyhow::Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            other => anyhow::bail!("expected f32 tensor, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Scalar f32 accessor (loss outputs).
+    pub fn scalar_f32(&self) -> anyhow::Result<f32> {
+        let v = self.as_f32()?;
+        anyhow::ensure!(v.len() == 1, "expected scalar, got {} elements", v.len());
+        Ok(v[0])
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> anyhow::Result<xla::Literal> {
+        anyhow::ensure!(
+            self.len() == spec.elements(),
+            "tensor '{}': {} elements but spec {:?} wants {}",
+            spec.name,
+            self.len(),
+            spec.shape,
+            spec.elements()
+        );
+        anyhow::ensure!(
+            self.dtype() == spec.dtype,
+            "tensor '{}': dtype mismatch",
+            spec.name
+        );
+        let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+            TensorData::U32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> anyhow::Result<TensorData> {
+        Ok(match spec.dtype {
+            DType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            DType::I32 => TensorData::I32(lit.to_vec::<i32>()?),
+            DType::U32 => TensorData::U32(lit.to_vec::<u32>()?),
+        })
+    }
+}
+
+/// Per-thread PJRT CPU client.
+///
+/// The `xla` crate's `PjRtClient` is `Rc`-based (non-atomic refcounts), so
+/// PJRT objects are **thread-bound by construction**: `Executable` is
+/// deliberately `!Send`, and the coordinator gives the whole runtime to one
+/// dedicated model-executor thread (the vLLM engine-thread pattern) that
+/// workers talk to over channels. XLA's own intra-op thread pool still
+/// parallelizes the compute.
+pub fn with_client<T>(
+    f: impl FnOnce(&xla::PjRtClient) -> anyhow::Result<T>,
+) -> anyhow::Result<T> {
+    thread_local! {
+        static CLIENT: OnceCell<xla::PjRtClient> = const { OnceCell::new() };
+    }
+    CLIENT.with(|cell| {
+        if cell.get().is_none() {
+            let c =
+                xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu client: {e}"))?;
+            let _ = cell.set(c);
+        }
+        f(cell.get().unwrap())
+    })
+}
+
+/// A compiled artifact bound to its manifest entry. `!Send`: lives on the
+/// thread that compiled it.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Load + compile an artifact (slow: run once, cache).
+    pub fn load(entry: &ArtifactEntry) -> anyhow::Result<Executable> {
+        let path = entry
+            .path
+            .to_str()
+            .ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?;
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = with_client(|c| {
+            c.compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e}", entry.name))
+        })?;
+        crate::log_debug!("compiled artifact {}", entry.name);
+        Ok(Executable { entry: entry.clone(), exe })
+    }
+
+    /// Execute with host tensors, returning host tensors (manifest-checked).
+    pub fn run(&self, inputs: &[TensorData]) -> anyhow::Result<Vec<TensorData>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "{}: {} inputs given, manifest declares {}",
+            self.entry.name,
+            inputs.len(),
+            self.entry.inputs.len()
+        );
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(self.entry.inputs.iter())
+            .map(|(t, s)| t.to_literal(s))
+            .collect::<anyhow::Result<_>>()?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {}: {e}", self.entry.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        self.decompose(tuple)
+    }
+
+    fn decompose(&self, tuple: xla::Literal) -> anyhow::Result<Vec<TensorData>> {
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("untupling {}: {e}", self.entry.name))?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "{}: got {} outputs, manifest declares {}",
+            self.entry.name,
+            parts.len(),
+            self.entry.outputs.len()
+        );
+        parts
+            .iter()
+            .zip(self.entry.outputs.iter())
+            .map(|(lit, spec)| TensorData::from_literal(lit, spec))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::TensorSpec;
+
+    fn spec(name: &str, shape: &[usize], dtype: DType) -> TensorSpec {
+        TensorSpec { name: name.into(), shape: shape.to_vec(), dtype }
+    }
+
+    #[test]
+    fn tensor_roundtrip_via_literal() {
+        let t = TensorData::F32(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = spec("x", &[2, 3], DType::F32);
+        let lit = t.to_literal(&s).unwrap();
+        let back = TensorData::from_literal(&lit, &s).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn int_tensor_roundtrip() {
+        let t = TensorData::I32(vec![-1, 0, 7, 42]);
+        let s = spec("tok", &[4], DType::I32);
+        let lit = t.to_literal(&s).unwrap();
+        match TensorData::from_literal(&lit, &s).unwrap() {
+            TensorData::I32(v) => assert_eq!(v, vec![-1, 0, 7, 42]),
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = TensorData::F32(vec![1.0, 2.0]);
+        let s = spec("x", &[3], DType::F32);
+        assert!(t.to_literal(&s).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_rejected() {
+        let t = TensorData::I32(vec![1, 2]);
+        let s = spec("x", &[2], DType::F32);
+        assert!(t.to_literal(&s).is_err());
+    }
+
+    #[test]
+    fn scalar_accessor() {
+        assert_eq!(TensorData::F32(vec![2.5]).scalar_f32().unwrap(), 2.5);
+        assert!(TensorData::F32(vec![1.0, 2.0]).scalar_f32().is_err());
+    }
+}

@@ -1,0 +1,245 @@
+//! `artifacts/manifest.json` parsing — the contract between the build-time
+//! Python AOT pass and the Rust runtime. Every artifact's positional
+//! input/output binding is declared here; the runtime refuses shape
+//! mismatches at load time rather than at execute time.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tensor dtype — the subset the stack exchanges.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+    U32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> anyhow::Result<DType> {
+        Ok(match s {
+            "float32" | "f32" => DType::F32,
+            "int32" | "i32" => DType::I32,
+            "uint32" | "u32" => DType::U32,
+            other => anyhow::bail!("unsupported dtype '{other}'"),
+        })
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// One declared tensor binding.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(j: &Json) -> anyhow::Result<TensorSpec> {
+        Ok(TensorSpec {
+            name: j.req("name")?.as_str().unwrap_or("").to_string(),
+            shape: j
+                .req("shape")?
+                .as_usize_vec()
+                .ok_or_else(|| anyhow::anyhow!("bad shape"))?,
+            dtype: DType::parse(j.req("dtype")?.as_str().unwrap_or(""))?,
+        })
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub path: PathBuf,
+    pub kind: String,
+    pub mechanism: Option<String>,
+    pub preset: Option<String>,
+    pub batch: Option<usize>,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub param_names: Vec<String>,
+    pub config: BTreeMap<String, Json>,
+}
+
+impl ArtifactEntry {
+    /// Number of flattened parameter tensors (train_step/init/loss kinds).
+    pub fn n_params(&self) -> usize {
+        self.param_names.len()
+    }
+
+    /// Model config field accessor.
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub src_digest: String,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::from_file(&dir.join("manifest.json"))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = j
+            .req("artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("artifacts must be an object"))?;
+        for (name, e) in arts {
+            let inputs = e
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("inputs must be array"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = e
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("outputs must be array"))?
+                .iter()
+                .map(TensorSpec::parse)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let param_names = e
+                .get("param_names")
+                .and_then(|v| v.as_arr())
+                .map(|a| {
+                    a.iter()
+                        .filter_map(|x| x.as_str().map(|s| s.to_string()))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let config = e
+                .get("config")
+                .and_then(|v| v.as_obj())
+                .cloned()
+                .unwrap_or_default();
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    path: dir.join(e.req("path")?.as_str().unwrap_or("")),
+                    kind: e.req("kind")?.as_str().unwrap_or("").to_string(),
+                    mechanism: e.get("mechanism").and_then(|v| v.as_str()).map(String::from),
+                    preset: e.get("preset").and_then(|v| v.as_str()).map(String::from),
+                    batch: e.get("batch").and_then(|v| v.as_usize()),
+                    inputs,
+                    outputs,
+                    param_names,
+                    config,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            src_digest: j
+                .get("src_digest")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    /// All artifacts of a kind, sorted by name.
+    pub fn of_kind(&self, kind: &str) -> Vec<&ArtifactEntry> {
+        self.artifacts.values().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Default artifacts directory: `$SLAY_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("SLAY_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_manifest(dir: &Path) {
+        let text = r#"{
+          "version": 1,
+          "src_digest": "abc123",
+          "artifacts": {
+            "attn_slay": {
+              "path": "attn_slay.hlo.txt",
+              "kind": "attn_fwd",
+              "mechanism": "slay",
+              "inputs": [
+                {"name": "q", "shape": [512, 32], "dtype": "float32"},
+                {"name": "k", "shape": [512, 32], "dtype": "float32"},
+                {"name": "v", "shape": [512, 32], "dtype": "float32"}
+              ],
+              "outputs": [{"name": "y", "shape": [512, 32], "dtype": "float32"}]
+            },
+            "init_task": {
+              "path": "init_task.hlo.txt",
+              "kind": "init",
+              "inputs": [{"name": "seed", "shape": [], "dtype": "uint32"}],
+              "outputs": [{"name": "wte", "shape": [64, 64], "dtype": "float32"}],
+              "param_names": ["wte"],
+              "config": {"vocab": 64, "seq_len": 64}
+            }
+          }
+        }"#;
+        std::fs::write(dir.join("manifest.json"), text).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let dir = std::env::temp_dir().join("slay_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.src_digest, "abc123");
+        let a = m.get("attn_slay").unwrap();
+        assert_eq!(a.kind, "attn_fwd");
+        assert_eq!(a.inputs.len(), 3);
+        assert_eq!(a.inputs[0].shape, vec![512, 32]);
+        assert_eq!(a.inputs[0].elements(), 512 * 32);
+        let init = m.get("init_task").unwrap();
+        assert_eq!(init.param_names, vec!["wte"]);
+        assert_eq!(init.config_usize("vocab"), Some(64));
+        assert_eq!(init.inputs[0].dtype, DType::U32);
+        assert_eq!(init.inputs[0].elements(), 1); // scalar
+        assert_eq!(m.of_kind("attn_fwd").len(), 1);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors_cleanly() {
+        let dir = std::env::temp_dir().join("slay_manifest_missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        let _ = std::fs::remove_file(dir.join("manifest.json"));
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn dtype_parsing() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("float64").is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! The AOT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (build-time only) and executes them on the PJRT
+//! CPU client from the Rust hot path. Python never runs at request time.
+//!
+//! * [`manifest`] — the artifact contract (shapes, dtypes, param order).
+//! * [`executor`] — compile + execute with positional manifest checking.
+//! * [`checkpoint`] — parameter snapshots crossing train → serve.
+//! * [`Registry`] — process-wide compile cache.
+
+pub mod checkpoint;
+pub mod executor;
+pub mod manifest;
+
+use executor::Executable;
+use manifest::Manifest;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Compile-once cache over manifest artifacts.
+///
+/// `!Send` by design: PJRT objects are `Rc`-based, so the registry lives on
+/// a single model-executor thread (see [`executor::with_client`]). The
+/// coordinator communicates with it over channels.
+pub struct Registry {
+    pub manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<Executable>>>,
+}
+
+impl Registry {
+    /// Open the artifacts directory (default `./artifacts`).
+    pub fn open_default() -> anyhow::Result<Registry> {
+        Self::open(&Manifest::default_dir())
+    }
+
+    pub fn open(dir: &std::path::Path) -> anyhow::Result<Registry> {
+        Ok(Registry { manifest: Manifest::load(dir)?, cache: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// Get (compiling on first use) an executable by artifact name.
+    pub fn get(&self, name: &str) -> anyhow::Result<Rc<Executable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let exe = Rc::new(Executable::load(entry)?);
+        self.cache
+            .borrow_mut()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Artifact names currently compiled.
+    pub fn compiled(&self) -> Vec<String> {
+        self.cache.borrow().keys().cloned().collect()
+    }
+}

@@ -1,0 +1,172 @@
+//! Training driver: Rust owns the loop, the data and the checkpoints; the
+//! gradient math is the AOT `train_step` artifact executed over PJRT.
+//! Python never runs here.
+
+use crate::runtime::checkpoint::Checkpoint;
+use crate::runtime::executor::{Executable, TensorData};
+use crate::runtime::Registry;
+use std::rc::Rc;
+
+/// Shapes the driver needs from the artifact's model config.
+#[derive(Clone, Copy, Debug)]
+pub struct TrainShapes {
+    pub batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+}
+
+/// A live training session over one `train_step_*` (or `cls_train_step_*`)
+/// artifact. Holds the full optimizer state (params, m, v, step) as host
+/// tensors between steps.
+pub struct Trainer {
+    step_exe: Rc<Executable>,
+    /// params + adam m + adam v (+ step counter at the end).
+    state: Vec<TensorData>,
+    n_params: usize,
+    pub shapes: TrainShapes,
+    pub steps_done: usize,
+    /// (step, loss) history.
+    pub history: Vec<(usize, f32)>,
+    /// Shape of the targets input (LM: [B, L] i32; cls: [B, n_labels] f32).
+    targets_are_float: bool,
+}
+
+impl Trainer {
+    /// Create a session: run the matching init artifact, zero the moments.
+    pub fn new(reg: &Registry, step_artifact: &str, init_artifact: &str, seed: u32) -> anyhow::Result<Trainer> {
+        let step_exe = reg.get(step_artifact)?;
+        let init_exe = reg.get(init_artifact)?;
+        let params = init_exe.run(&[TensorData::U32(vec![seed])])?;
+        let n = step_exe.entry.param_names.len();
+        anyhow::ensure!(
+            params.len() == n,
+            "init gave {} tensors, step wants {n} params",
+            params.len()
+        );
+        let zeros: Vec<TensorData> = step_exe.entry.inputs[n..2 * n]
+            .iter()
+            .map(|s| TensorData::F32(vec![0.0; s.elements()]))
+            .collect();
+        let mut state = params;
+        state.extend(zeros.iter().cloned()); // m
+        state.extend(zeros); // v
+        state.push(TensorData::F32(vec![0.0])); // step counter
+
+        let batch = step_exe
+            .entry
+            .batch
+            .ok_or_else(|| anyhow::anyhow!("artifact missing batch"))?;
+        let seq_len = step_exe
+            .entry
+            .config_usize("seq_len")
+            .ok_or_else(|| anyhow::anyhow!("artifact missing seq_len"))?;
+        let vocab = step_exe.entry.config_usize("vocab").unwrap_or(0);
+        let targets_are_float = matches!(
+            step_exe.entry.inputs.last().map(|s| s.dtype),
+            Some(crate::runtime::manifest::DType::F32)
+        );
+        Ok(Trainer {
+            step_exe,
+            state,
+            n_params: n,
+            shapes: TrainShapes { batch, seq_len, vocab },
+            steps_done: 0,
+            history: Vec::new(),
+            targets_are_float,
+        })
+    }
+
+    /// One optimizer step on an LM batch (`targets` i32, −1 = masked).
+    pub fn step(&mut self, tokens: &[i32], targets: &[i32]) -> anyhow::Result<f32> {
+        anyhow::ensure!(!self.targets_are_float, "this artifact wants float targets");
+        self.step_impl(tokens, TensorData::I32(targets.to_vec()))
+    }
+
+    /// One optimizer step on a multi-label batch (`targets` multi-hot f32).
+    pub fn step_multilabel(&mut self, tokens: &[i32], targets: &[f32]) -> anyhow::Result<f32> {
+        anyhow::ensure!(self.targets_are_float, "this artifact wants int targets");
+        self.step_impl(tokens, TensorData::F32(targets.to_vec()))
+    }
+
+    fn step_impl(&mut self, tokens: &[i32], targets: TensorData) -> anyhow::Result<f32> {
+        let expect = self.shapes.batch * self.shapes.seq_len;
+        anyhow::ensure!(
+            tokens.len() == expect,
+            "tokens: {} given, batch×seq = {expect}",
+            tokens.len()
+        );
+        let mut inputs = self.state.clone();
+        inputs.push(TensorData::I32(tokens.to_vec()));
+        inputs.push(targets);
+        let out = self.step_exe.run(&inputs)?;
+        let loss = out.last().unwrap().scalar_f32()?;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {}", self.steps_done);
+        self.state = out[..out.len() - 1].to_vec();
+        self.steps_done += 1;
+        self.history.push((self.steps_done, loss));
+        Ok(loss)
+    }
+
+    /// Current parameters (first n tensors of the state).
+    pub fn params(&self) -> &[TensorData] {
+        &self.state[..self.n_params]
+    }
+
+    pub fn param_names(&self) -> &[String] {
+        &self.step_exe.entry.param_names
+    }
+
+    /// Run a forward/loss artifact with the current params.
+    pub fn run_with_params(
+        &self,
+        exe: &Executable,
+        extra: &[TensorData],
+    ) -> anyhow::Result<Vec<TensorData>> {
+        let mut inputs: Vec<TensorData> = self.params().to_vec();
+        inputs.extend(extra.iter().cloned());
+        exe.run(&inputs)
+    }
+
+    /// Save parameters to a checkpoint file.
+    pub fn save(&self, path: &std::path::Path) -> anyhow::Result<()> {
+        let shapes: Vec<Vec<usize>> = self.step_exe.entry.inputs[..self.n_params]
+            .iter()
+            .map(|s| s.shape.clone())
+            .collect();
+        let ck = Checkpoint::from_tensor_data(
+            self.step_exe.entry.param_names.as_slice(),
+            &shapes,
+            self.params(),
+        )?;
+        ck.save(path)
+    }
+
+    /// Restore parameters from a checkpoint (moments reset).
+    pub fn restore(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        let ck = Checkpoint::load(path)?;
+        anyhow::ensure!(
+            ck.tensors.len() == self.n_params,
+            "checkpoint has {} tensors, model wants {}",
+            ck.tensors.len(),
+            self.n_params
+        );
+        for (i, (name, _, data)) in ck.tensors.iter().enumerate() {
+            anyhow::ensure!(
+                *name == self.step_exe.entry.param_names[i],
+                "checkpoint order mismatch at {i}: {name}"
+            );
+            self.state[i] = TensorData::F32(data.clone());
+        }
+        Ok(())
+    }
+
+    /// Smoothed recent loss (mean of last `k` steps).
+    pub fn recent_loss(&self, k: usize) -> f32 {
+        let tail = &self.history[self.history.len().saturating_sub(k)..];
+        if tail.is_empty() {
+            f32::NAN
+        } else {
+            tail.iter().map(|(_, l)| l).sum::<f32>() / tail.len() as f32
+        }
+    }
+}

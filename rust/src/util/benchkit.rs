@@ -1,0 +1,210 @@
+//! Benchmark harness (criterion is not vendored offline).
+//!
+//! Provides warmed-up, repeated timing with mean/p50/p95 reporting, CSV and
+//! JSON result emission under `results/`, and a tiny table printer that
+//! formats rows the way the paper's tables do. Every file in `benches/`
+//! uses this harness (`harness = false` in Cargo.toml).
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+/// Timing summary for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub min_ms: f64,
+}
+
+/// Run `f` with `warmup` discarded iterations then `iters` timed ones.
+/// Returns per-iteration statistics. `f` should return something cheap to
+/// drop; use `std::hint::black_box` inside for anti-DCE.
+pub fn time_fn(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    summarize(name, &samples)
+}
+
+/// Adaptive variant: keeps iterating until `budget` is spent (at least 3
+/// iterations), so fast and slow cases share one call site.
+pub fn time_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> Timing {
+    f(); // warmup
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < 3 || start.elapsed() < budget {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[f64]) -> Timing {
+    use crate::math::stats::{mean, percentile};
+    Timing {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ms: mean(samples),
+        p50_ms: percentile(samples, 50.0),
+        p95_ms: percentile(samples, 95.0),
+        min_ms: samples.iter().copied().fold(f64::INFINITY, f64::min),
+    }
+}
+
+/// Resolve the results directory (`SLAY_RESULTS` or `results/`), creating it.
+pub fn results_dir() -> std::path::PathBuf {
+    let dir = std::env::var("SLAY_RESULTS").unwrap_or_else(|_| "results".to_string());
+    let p = std::path::PathBuf::from(dir);
+    let _ = std::fs::create_dir_all(&p);
+    p
+}
+
+/// Write a CSV file under `results/` with a header row.
+pub fn write_csv(file: &str, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    let path = results_dir().join(file);
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    eprintln!("[benchkit] wrote {}", path.display());
+    Ok(())
+}
+
+/// Write a JSON result file under `results/`.
+pub fn write_json(file: &str, value: &crate::util::json::Json) -> std::io::Result<()> {
+    let path = results_dir().join(file);
+    std::fs::write(&path, value.to_pretty())?;
+    eprintln!("[benchkit] wrote {}", path.display());
+    Ok(())
+}
+
+/// Paper-style table printer: fixed-width columns, header rule.
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row arity");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<width$}  ", c, width = w[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.header);
+        println!("{}", "-".repeat(w.iter().sum::<usize>() + 2 * ncol));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Also dump as CSV.
+    pub fn to_csv(&self, file: &str) -> std::io::Result<()> {
+        let header: Vec<&str> = self.header.iter().map(|s| s.as_str()).collect();
+        write_csv(file, &header, &self.rows)
+    }
+}
+
+/// Format helpers shared by benches.
+pub fn fmt_ms(x: f64) -> String {
+    if x >= 100.0 {
+        format!("{x:.1}")
+    } else if x >= 1.0 {
+        format!("{x:.2}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+pub fn fmt_sci(x: f64) -> String {
+    format!("{x:.2e}")
+}
+
+/// Peak-RSS style estimate: bytes → MiB string.
+pub fn fmt_mib(bytes: usize) -> String {
+    format!("{:.1}", bytes as f64 / (1024.0 * 1024.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_counts_iters() {
+        let t = time_fn("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(t.iters, 10);
+        assert!(t.mean_ms >= 0.0 && t.mean_ms.is_finite());
+        assert!(t.p95_ms >= t.p50_ms || (t.p95_ms - t.p50_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_budget_runs_at_least_three() {
+        let t = time_budget("noop", Duration::from_millis(1), || {
+            std::hint::black_box(0);
+        });
+        assert!(t.iters >= 3);
+    }
+
+    #[test]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            t.row(vec!["1".into()]);
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn csv_writes_to_results_dir() {
+        let dir = std::env::temp_dir().join("slay_benchkit_test");
+        std::env::set_var("SLAY_RESULTS", &dir);
+        write_csv("t.csv", &["x", "y"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(dir.join("t.csv")).unwrap();
+        assert_eq!(text, "x,y\n1,2\n");
+        std::env::remove_var("SLAY_RESULTS");
+    }
+}

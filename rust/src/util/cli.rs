@@ -1,0 +1,159 @@
+//! Hand-rolled command-line parsing (clap is not vendored offline).
+//!
+//! Grammar: `slay <subcommand> [--flag] [--key value] [positional…]`.
+//! `--key=value` is also accepted. Unknown flags are errors so typos fail
+//! loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments for one subcommand invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    pub flags: BTreeMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the binary name).
+    pub fn parse(argv: &[String]) -> anyhow::Result<Args> {
+        let mut a = Args::default();
+        let mut it = argv.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.subcommand = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    a.flags.insert(body.to_string(), it.next().unwrap().clone());
+                } else {
+                    a.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> anyhow::Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") | Some("yes") => Ok(true),
+            Some("false") | Some("0") | Some("no") => Ok(false),
+            Some(v) => Err(anyhow::anyhow!("--{key} expects a boolean, got '{v}'")),
+        }
+    }
+
+    /// Reject flags outside the allowed set (typo protection).
+    pub fn validate(&self, allowed: &[&str]) -> anyhow::Result<()> {
+        for k in self.flags.keys() {
+            if !allowed.contains(&k.as_str()) {
+                return Err(anyhow::anyhow!(
+                    "unknown flag --{k} for '{}' (allowed: {})",
+                    self.subcommand,
+                    allowed.join(", ")
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(&toks.iter().map(|s| s.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_flags_positional() {
+        // NB: a bare `--flag` greedily takes the next non-flag token as its
+        // value, so positionals go before flags (or use `--flag=true`).
+        let a = parse(&["serve", "model.hlo", "--port", "8080", "--verbose"]);
+        assert_eq!(a.subcommand, "serve");
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.positional, vec!["model.hlo"]);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["bench", "--len=4096", "--mech=slay"]);
+        assert_eq!(a.usize_or("len", 0).unwrap(), 4096);
+        assert_eq!(a.get("mech"), Some("slay"));
+    }
+
+    #[test]
+    fn typed_getters_and_defaults() {
+        let a = parse(&["x", "--alpha", "0.5"]);
+        assert_eq!(a.f64_or("alpha", 1.0).unwrap(), 0.5);
+        assert_eq!(a.f64_or("beta", 2.0).unwrap(), 2.0);
+        assert!(a.usize_or("alpha", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse(&["run", "--fast"]);
+        assert!(a.bool_or("fast", false).unwrap());
+    }
+
+    #[test]
+    fn validate_rejects_unknown() {
+        let a = parse(&["run", "--typo", "1"]);
+        assert!(a.validate(&["port"]).is_err());
+        assert!(a.validate(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn no_subcommand() {
+        let a = parse(&["--help"]);
+        assert_eq!(a.subcommand, "");
+        assert!(a.has("help"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Tiny leveled logger (the `log` facade is vendored but no emitter is, so
+//! we keep one self-contained implementation with zero setup).
+//!
+//! Level comes from `SLAY_LOG` (`error|warn|info|debug|trace`, default
+//! `info`). Output goes to stderr with a monotonic-millis timestamp so
+//! coordinator traces are orderable.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+fn max_level() -> Level {
+    static L: OnceLock<Level> = OnceLock::new();
+    *L.get_or_init(|| match std::env::var("SLAY_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    })
+}
+
+fn start() -> Instant {
+    static T: OnceLock<Instant> = OnceLock::new();
+    *T.get_or_init(Instant::now)
+}
+
+/// True if `level` would be emitted (guard for expensive formatting).
+pub fn enabled(level: Level) -> bool {
+    level <= max_level()
+}
+
+#[doc(hidden)]
+pub fn emit(level: Level, module: &str, msg: std::fmt::Arguments) {
+    if !enabled(level) {
+        return;
+    }
+    let ms = start().elapsed().as_secs_f64() * 1e3;
+    let tag = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{ms:>10.2}ms {tag} {module}] {msg}");
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Info, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Warn, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Error, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Debug, module_path!(), format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_level_is_info() {
+        // (SLAY_LOG unset in the test env)
+        if std::env::var("SLAY_LOG").is_err() {
+            assert!(enabled(Level::Info));
+            assert!(!enabled(Level::Trace));
+        }
+    }
+
+    #[test]
+    fn macros_compile_and_run() {
+        log_info!("hello {}", 42);
+        log_debug!("debug {}", "msg");
+        log_warn!("warn");
+        log_error!("err");
+    }
+}

@@ -1,0 +1,9 @@
+//! General-purpose substrates implemented in-repo because the offline image
+//! vendors none of the usual crates: JSON (serde), CLI parsing (clap),
+//! bench harness (criterion), property testing (proptest), logging.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod quickprop;

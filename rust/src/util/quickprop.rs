@@ -1,0 +1,212 @@
+//! Property-based testing mini-framework (proptest is not vendored offline).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs greedy shrinking via
+//! the input's [`Shrink`] implementation and reports the minimal
+//! counterexample. Deliberately small: generators are plain closures over
+//! [`Rng`], shrinking is structural halving.
+
+use crate::math::rng::Rng;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate shrinks, larger-step candidates first. Empty = atomic.
+    fn shrinks(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0 {
+            vec![]
+        } else {
+            let mut v = vec![0, self / 2];
+            if *self > 1 {
+                v.push(self - 1);
+            }
+            v.dedup();
+            v.retain(|x| x != self);
+            v
+        }
+    }
+}
+
+impl Shrink for f64 {
+    fn shrinks(&self) -> Vec<Self> {
+        if *self == 0.0 {
+            return vec![];
+        }
+        let mut v = vec![0.0, self / 2.0];
+        if self.abs() > 1.0 {
+            v.push(self.signum());
+        }
+        v.retain(|x| x != self);
+        v
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // drop halves
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[self.len() / 2..].to_vec());
+        // drop one element
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        // shrink one element (first shrinkable)
+        for (i, x) in self.iter().enumerate() {
+            if let Some(sx) = x.shrinks().into_iter().next() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+                break;
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrinks().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Result of a failed property: the original and shrunk counterexamples.
+#[derive(Debug)]
+pub struct Falsified<T: std::fmt::Debug> {
+    pub original: T,
+    pub minimal: T,
+    pub message: String,
+}
+
+/// Run a property over `cases` random inputs. Panics with the minimal
+/// counterexample on failure (test-friendly).
+pub fn check<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    if let Err(f) = check_quiet(seed, cases, &mut gen, &mut prop) {
+        panic!(
+            "property falsified!\n  original: {:?}\n  minimal:  {:?}\n  error:    {}",
+            f.original, f.minimal, f.message
+        );
+    }
+}
+
+/// Non-panicking variant (used by this module's own tests).
+pub fn check_quiet<T, G, P>(
+    seed: u64,
+    cases: usize,
+    gen: &mut G,
+    prop: &mut P,
+) -> Result<(), Falsified<T>>
+where
+    T: Shrink,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for _ in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            let (minimal, message) = shrink_loop(input.clone(), msg, prop);
+            return Err(Falsified { original: input, minimal, message });
+        }
+    }
+    Ok(())
+}
+
+fn shrink_loop<T: Shrink>(
+    mut current: T,
+    mut msg: String,
+    prop: &mut impl FnMut(&T) -> Result<(), String>,
+) -> (T, String) {
+    let mut budget = 200;
+    'outer: while budget > 0 {
+        for cand in current.shrinks() {
+            budget -= 1;
+            if let Err(m) = prop(&cand) {
+                current = cand;
+                msg = m;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    (current, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(1, 200, |r| r.below(100), |&x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_boundary() {
+        let mut gen = |r: &mut Rng| r.below(1000);
+        let mut prop = |&x: &usize| {
+            if x < 50 {
+                Ok(())
+            } else {
+                Err(format!("{x} >= 50"))
+            }
+        };
+        let f = check_quiet(2, 500, &mut gen, &mut prop).unwrap_err();
+        // greedy halving shrinks to a small witness ≥ 50
+        assert!(f.minimal >= 50 && f.minimal <= f.original);
+        assert!(f.minimal <= 100, "minimal={}", f.minimal);
+    }
+
+    #[test]
+    fn vec_shrinking_reduces_length() {
+        let mut gen = |r: &mut Rng| (0..r.below(50) + 10).map(|_| r.below(10)).collect::<Vec<_>>();
+        let mut prop = |v: &Vec<usize>| {
+            if v.len() < 5 {
+                Ok(())
+            } else {
+                Err("too long".into())
+            }
+        };
+        let f = check_quiet(3, 10, &mut gen, &mut prop).unwrap_err();
+        assert!(f.minimal.len() >= 5 && f.minimal.len() <= 9, "{}", f.minimal.len());
+    }
+
+    #[test]
+    fn tuple_shrinking_works() {
+        let mut gen = |r: &mut Rng| (r.below(100), r.range(-4.0, 4.0));
+        let mut prop =
+            |t: &(usize, f64)| if t.0 < 90 { Ok(()) } else { Err("big".into()) };
+        let f = check_quiet(4, 500, &mut gen, &mut prop).unwrap_err();
+        assert!(f.minimal.0 >= 90);
+        assert_eq!(f.minimal.1, 0.0); // second component shrunk away
+    }
+}

@@ -1,0 +1,225 @@
+//! Coordinator integration: correctness of the served attention against
+//! the batch engine, request conservation under concurrency, backpressure,
+//! sequence lifecycle, and decode/prefill scheduling.
+
+use slay::coordinator::request::{AttendChunk, SeqId};
+use slay::coordinator::state::StoreConfig;
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::kernels::engine;
+use slay::kernels::slay::{QKFeatures, SlayFeatures};
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use std::time::Duration;
+
+fn small_cfg(workers: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        mechanism: Mechanism::Slay(SlayConfig::default()),
+        d_head: 16,
+        d_v: 8,
+        horizon: 4096,
+        workers,
+        max_batch: 8,
+        max_wait: Duration::from_micros(500),
+        queue_cap: 64,
+        store: StoreConfig { m: 1, d_v: 1, max_sequences: 128, memory_budget: 64 << 20 },
+        ..CoordinatorConfig::default()
+    }
+}
+
+fn chunk(seq: SeqId, n: usize, rng: &mut Rng) -> AttendChunk {
+    AttendChunk {
+        seq,
+        q: Mat::randn(n, 16, rng),
+        k: Mat::randn(n, 16, rng),
+        v: Mat::randn(n, 8, rng),
+    }
+}
+
+#[test]
+fn served_outputs_match_batch_engine() {
+    // Streaming a sequence through the coordinator must equal running the
+    // causal linear engine over the concatenated chunks.
+    let coord = Coordinator::start(small_cfg(2)).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(41);
+    let chunks: Vec<AttendChunk> = vec![
+        chunk(seq, 5, &mut rng),
+        chunk(seq, 1, &mut rng),
+        chunk(seq, 3, &mut rng),
+    ];
+    // reference: concatenate and run batch causal attention
+    let total: usize = chunks.iter().map(|c| c.q.rows).sum();
+    let mut q_all = Mat::zeros(total, 16);
+    let mut k_all = Mat::zeros(total, 16);
+    let mut v_all = Mat::zeros(total, 8);
+    let mut r0 = 0;
+    for c in &chunks {
+        for r in 0..c.q.rows {
+            q_all.row_mut(r0 + r).copy_from_slice(c.q.row(r));
+            k_all.row_mut(r0 + r).copy_from_slice(c.k.row(r));
+            v_all.row_mut(r0 + r).copy_from_slice(c.v.row(r));
+        }
+        r0 += c.q.rows;
+    }
+    let feats = SlayFeatures::new(SlayConfig::default(), 16).unwrap();
+    let want = engine::linear_attention(
+        &feats.map_q(&q_all, 0),
+        &feats.map_k(&k_all, 0),
+        &v_all,
+        true,
+        1e-6,
+    );
+
+    let mut got_rows: Vec<f32> = Vec::new();
+    for c in chunks {
+        let res = coord.attend(c).unwrap();
+        got_rows.extend_from_slice(&res.y.data);
+    }
+    assert_eq!(coord.sequence_len(seq).unwrap(), Some(total));
+    let err = slay::math::stats::rel_l2(&got_rows, &want.data);
+    assert!(err < 1e-4, "served vs batch rel_l2 = {err}");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn no_request_lost_under_concurrency() {
+    // Conservation: N threads × M chunks all complete exactly once.
+    let coord = std::sync::Arc::new(Coordinator::start(small_cfg(4)).unwrap());
+    let n_threads: usize = 8;
+    let per_thread: usize = 25;
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let c = coord.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(100 + t as u64);
+            let seq = c.create_sequence().unwrap();
+            let mut ok: usize = 0;
+            for _ in 0..per_thread {
+                let ch = chunk(seq, 1 + rng.below(4), &mut rng);
+                loop {
+                    match c.attend(AttendChunk {
+                        seq: ch.seq,
+                        q: ch.q.clone(),
+                        k: ch.k.clone(),
+                        v: ch.v.clone(),
+                    }) {
+                        Ok(res) => {
+                            assert!(res.y.data.iter().all(|x| x.is_finite()));
+                            ok += 1;
+                            break;
+                        }
+                        Err(e) if e.to_string().contains("backpressure") => {
+                            std::thread::sleep(Duration::from_micros(200));
+                        }
+                        Err(e) => panic!("{e}"),
+                    }
+                }
+            }
+            ok
+        }));
+    }
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total, n_threads * per_thread);
+    let m = coord.metrics();
+    assert_eq!(m.completed, (n_threads * per_thread) as u64);
+    assert_eq!(m.submitted - m.rejected, m.completed);
+    assert_eq!(coord.inflight(), 0);
+}
+
+#[test]
+fn backpressure_rejects_when_saturated() {
+    let mut cfg = small_cfg(1);
+    cfg.queue_cap = 2;
+    cfg.max_batch = 1;
+    cfg.max_wait = Duration::from_micros(1);
+    let coord = Coordinator::start(cfg).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(55);
+    // fire-and-forget many large prefills without reading replies
+    let mut receivers = Vec::new();
+    let mut saw_backpressure = false;
+    for _ in 0..64 {
+        match coord.submit(chunk(seq, 512, &mut rng)) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => {
+                assert!(e.to_string().contains("backpressure"), "{e}");
+                saw_backpressure = true;
+                break;
+            }
+        }
+    }
+    assert!(saw_backpressure, "queue never saturated");
+    // drain what was accepted
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    assert!(coord.metrics().rejected >= 1);
+}
+
+#[test]
+fn unknown_sequence_errors_but_serves_others() {
+    let coord = Coordinator::start(small_cfg(2)).unwrap();
+    let good = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(66);
+    let bad = SeqId(9999);
+    let err = coord.attend(chunk(bad, 2, &mut rng));
+    assert!(err.is_err());
+    let ok = coord.attend(chunk(good, 2, &mut rng));
+    assert!(ok.is_ok());
+}
+
+#[test]
+fn release_frees_state_and_subsequent_attends_fail() {
+    let coord = Coordinator::start(small_cfg(1)).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(77);
+    coord.attend(chunk(seq, 4, &mut rng)).unwrap();
+    assert!(coord.release_sequence(seq).unwrap());
+    assert!(!coord.release_sequence(seq).unwrap());
+    assert!(coord.attend(chunk(seq, 1, &mut rng)).is_err());
+}
+
+#[test]
+fn metrics_classify_decode_and_prefill() {
+    let coord = Coordinator::start(small_cfg(1)).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(88);
+    coord.attend(chunk(seq, 16, &mut rng)).unwrap(); // prefill
+    coord.attend(chunk(seq, 1, &mut rng)).unwrap(); // decode
+    coord.attend(chunk(seq, 1, &mut rng)).unwrap(); // decode
+    let m = coord.metrics();
+    assert_eq!(m.prefill_chunks, 1);
+    assert_eq!(m.decode_chunks, 2);
+    assert_eq!(m.tokens_in, 18);
+    assert!(m.latency_p50_ms >= 0.0);
+}
+
+#[test]
+fn quadratic_mechanism_is_refused() {
+    let mut cfg = small_cfg(1);
+    cfg.mechanism = Mechanism::Standard;
+    assert!(Coordinator::start(cfg).is_err());
+}
+
+#[test]
+fn long_context_constant_state() {
+    // Serve a 16K-token context through 1K-token prefills: state stays
+    // constant-size and latency per chunk stays flat (linear scaling).
+    let coord = Coordinator::start(small_cfg(1)).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(99);
+    let mut latencies = Vec::new();
+    for _ in 0..16 {
+        let res = coord.attend(chunk(seq, 1024, &mut rng)).unwrap();
+        latencies.push(res.latency.as_secs_f64());
+    }
+    assert_eq!(coord.sequence_len(seq).unwrap(), Some(16 * 1024));
+    // per-chunk cost must not grow with absorbed context (allow 3x noise)
+    let early: f64 = latencies[1..4].iter().sum::<f64>() / 3.0;
+    let late: f64 = latencies[13..16].iter().sum::<f64>() / 3.0;
+    assert!(
+        late < early * 3.0 + 1e-3,
+        "late chunks slower: early={early:.6}s late={late:.6}s"
+    );
+}

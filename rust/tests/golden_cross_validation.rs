@@ -1,0 +1,249 @@
+//! Cross-validation of the pure-Rust kernel mirror against the JAX oracle:
+//! `python/tests/gen_golden.py` exports inputs, randomness (anchors, ω) and
+//! expected outputs; this test reconstructs identical feature maps and
+//! checks agreement to ~1e-4 (f32 paths on both sides).
+//!
+//! Skips gracefully when `make golden` hasn't run.
+
+use slay::kernels::engine;
+use slay::kernels::features::poly::Anchor;
+use slay::kernels::features::prf::{CosformerMap, EluPlusOne, Prf};
+use slay::kernels::features::{kron_row, FeatureMap};
+use slay::kernels::yat;
+use slay::math::linalg::Mat;
+use slay::math::quadrature::GaussLaguerre;
+use slay::util::json::Json;
+
+fn golden() -> Option<Json> {
+    let path = std::path::Path::new("artifacts/golden.json");
+    if !path.exists() {
+        eprintln!("[skip] artifacts/golden.json missing — run `make golden`");
+        return None;
+    }
+    Some(Json::from_file(path).expect("golden parses"))
+}
+
+fn mat(j: &Json, key: &str, rows: usize, cols: usize) -> Mat {
+    Mat::from_vec(rows, cols, j.get(key).unwrap().as_f32_vec().unwrap())
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want.iter()).enumerate() {
+        assert!(
+            (a - b).abs() <= tol * (1.0 + b.abs()),
+            "{what}[{i}]: {a} vs {b}"
+        );
+    }
+}
+
+#[test]
+fn e_sph_grid_matches() {
+    let Some(g) = golden() else { return };
+    let e = g.get("e_sph").unwrap();
+    let eps = e.get("eps").unwrap().as_f64().unwrap() as f32;
+    let xs = e.get("x").unwrap().as_f32_vec().unwrap();
+    let ys = e.get("y").unwrap().as_f32_vec().unwrap();
+    for (x, want) in xs.iter().zip(ys.iter()) {
+        let got = yat::e_sph(*x, eps);
+        assert!(
+            (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+            "x={x}: {got} vs {want}"
+        );
+    }
+}
+
+#[test]
+fn quadrature_rules_match_numpy() {
+    let Some(g) = golden() else { return };
+    for rule in g.get("quadrature").unwrap().as_arr().unwrap() {
+        let r = rule.get("r").unwrap().as_usize().unwrap();
+        let c = rule.get("c").unwrap().as_f64().unwrap();
+        let nodes = rule.get("nodes").unwrap().as_f32_vec().unwrap();
+        let weights = rule.get("weights").unwrap().as_f32_vec().unwrap();
+        let q = GaussLaguerre::scaled(r, c);
+        for i in 0..r {
+            assert!(
+                (q.nodes[i] as f32 - nodes[i]).abs() < 1e-5 * (1.0 + nodes[i].abs()),
+                "node {i} of R={r}"
+            );
+            assert!(
+                (q.weights[i] as f32 - weights[i]).abs() < 1e-6 * (1.0 + weights[i].abs()),
+                "weight {i} of R={r}"
+            );
+        }
+    }
+}
+
+/// Reconstruct Ψ from exported randomness (explicit fusion) exactly as the
+/// rust `SlayFeatures::map_shared` does.
+fn rebuild_features(p: &Json, x: &Mat) -> Mat {
+    let d = p.get("d").unwrap().as_usize().unwrap();
+    let n_poly = p.get("n_poly").unwrap().as_usize().unwrap();
+    let d_prf = p.get("d_prf").unwrap().as_usize().unwrap();
+    let r_nodes = p.get("r_nodes").unwrap().as_usize().unwrap();
+    let anchors = mat(p, "anchors", n_poly, d);
+    let omegas = p.get("omegas").unwrap().as_f32_vec().unwrap();
+    let s = p.get("s").unwrap().as_f32_vec().unwrap();
+    let sqrt_w = p.get("sqrt_w").unwrap().as_f32_vec().unwrap();
+
+    let anchor_map = Anchor::from_anchors(anchors);
+    let xn = x.normalized_rows();
+    let poly = anchor_map.map(&xn, 0);
+    let per_node = n_poly * d_prf;
+    let mut out = Mat::zeros(x.rows, per_node * r_nodes);
+    for r in 0..r_nodes {
+        let omega = Mat::from_vec(
+            d_prf,
+            d,
+            omegas[r * d_prf * d..(r + 1) * d_prf * d].to_vec(),
+        );
+        let prf = Prf::from_omega(omega, s[r] as f64).map(&xn, 0);
+        for row in 0..x.rows {
+            let orow = &mut out.row_mut(row)[r * per_node..(r + 1) * per_node];
+            kron_row(poly.row(row), prf.row(row), orow);
+            for v in orow.iter_mut() {
+                *v *= sqrt_w[r];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn slay_pipeline_matches_jax() {
+    let Some(g) = golden() else { return };
+    let p = g.get("slay_pipeline").unwrap();
+    let d = p.get("d").unwrap().as_usize().unwrap();
+    let l = p.get("l").unwrap().as_usize().unwrap();
+    let delta = p.get("delta").unwrap().as_f64().unwrap() as f32;
+    let q = mat(p, "q", l, d);
+    let k = mat(p, "k", l, d);
+    let v = mat(p, "v", l, 3);
+
+    let phi_q = rebuild_features(p, &q);
+    let phi_k = rebuild_features(p, &k);
+    assert_close(
+        &phi_q.data,
+        &p.get("phi_q").unwrap().as_f32_vec().unwrap(),
+        2e-4,
+        "phi_q",
+    );
+    assert_close(
+        &phi_k.data,
+        &p.get("phi_k").unwrap().as_f32_vec().unwrap(),
+        2e-4,
+        "phi_k",
+    );
+
+    let y_causal = engine::linear_attention(&phi_q, &phi_k, &v, true, delta);
+    assert_close(
+        &y_causal.data,
+        &p.get("y_causal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "y_causal",
+    );
+    let y_nc = engine::linear_attention(&phi_q, &phi_k, &v, false, delta);
+    assert_close(
+        &y_nc.data,
+        &p.get("y_noncausal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "y_noncausal",
+    );
+}
+
+#[test]
+fn quadratic_mechanisms_match_jax() {
+    let Some(g) = golden() else { return };
+    let q_blk = g.get("quadratic").unwrap();
+    let p = g.get("slay_pipeline").unwrap();
+    let d = p.get("d").unwrap().as_usize().unwrap();
+    let l = p.get("l").unwrap().as_usize().unwrap();
+    let eps = q_blk.get("eps").unwrap().as_f64().unwrap() as f32;
+    let q = mat(q_blk, "q", l, d);
+    let k = mat(q_blk, "k", l, d);
+    let v = mat(q_blk, "v", l, 3);
+
+    let softmax = engine::quadratic_attention(&yat::softmax_scores(&q, &k), &v, true, 1e-6);
+    assert_close(
+        &softmax.data,
+        &q_blk.get("softmax_causal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "softmax_causal",
+    );
+    let yat_nc = engine::quadratic_attention(&yat::yat_scores(&q, &k, eps), &v, false, 1e-6);
+    assert_close(
+        &yat_nc.data,
+        &q_blk.get("yat_noncausal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "yat_noncausal",
+    );
+    let sph = engine::quadratic_attention(
+        &yat::yat_spherical_scores(&q, &k, eps),
+        &v,
+        true,
+        1e-6,
+    );
+    assert_close(
+        &sph.data,
+        &q_blk
+            .get("yat_spherical_causal")
+            .unwrap()
+            .as_f32_vec()
+            .unwrap(),
+        5e-4,
+        "yat_spherical_causal",
+    );
+}
+
+#[test]
+fn baseline_mechanisms_match_jax() {
+    let Some(g) = golden() else { return };
+    let b = g.get("baselines").unwrap();
+    let p = g.get("slay_pipeline").unwrap();
+    let d = p.get("d").unwrap().as_usize().unwrap();
+    let l = p.get("l").unwrap().as_usize().unwrap();
+    let q = mat(g.get("quadratic").unwrap(), "q", l, d);
+    let k = mat(g.get("quadratic").unwrap(), "k", l, d);
+    let v = mat(g.get("quadratic").unwrap(), "v", l, 3);
+
+    // FAVOR+ with exported ω: relu(xωᵀ)/√m
+    let m_feat = b.get("favor_m").unwrap().as_usize().unwrap();
+    let omega = mat(b, "favor_omega", m_feat, d);
+    let favor = |x: &Mat| {
+        let mut f = slay::math::linalg::matmul_a_bt(x, &omega);
+        let scale = 1.0 / (m_feat as f32).sqrt();
+        for v in f.data.iter_mut() {
+            *v = v.max(0.0) * scale;
+        }
+        f
+    };
+    let y_favor = engine::linear_attention(&favor(&q), &favor(&k), &v, true, 1e-6);
+    assert_close(
+        &y_favor.data,
+        &b.get("favor_causal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "favor_causal",
+    );
+
+    // ELU+1
+    let elu = EluPlusOne::new(d);
+    let y_elu = engine::linear_attention(&elu.map(&q, 0), &elu.map(&k, 0), &v, true, 1e-6);
+    assert_close(
+        &y_elu.data,
+        &b.get("elu_causal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "elu_causal",
+    );
+
+    // cosformer
+    let horizon = b.get("cosformer_horizon").unwrap().as_usize().unwrap();
+    let cf = CosformerMap::new(d, horizon);
+    let y_cf = engine::linear_attention(&cf.map(&q, 0), &cf.map(&k, 0), &v, true, 1e-6);
+    assert_close(
+        &y_cf.data,
+        &b.get("cosformer_causal").unwrap().as_f32_vec().unwrap(),
+        5e-4,
+        "cosformer_causal",
+    );
+}

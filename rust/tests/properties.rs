@@ -1,0 +1,251 @@
+//! Property-based tests (quickprop) over the paper's invariants:
+//! kernel bounds, denominator positivity, PSD Gram matrices, causal/
+//! streaming equivalences, and coordinator routing determinism.
+
+use slay::kernels::config::{Mechanism, PolyMethod, SlayConfig};
+use slay::kernels::engine::{self, StreamingState};
+use slay::kernels::slay::{QKFeatures, SlayFeatures};
+use slay::kernels::{yat, Attention};
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::util::quickprop::{check, Shrink};
+
+/// Random unit vectors wrapper for shrinking (shrinks toward fewer rows).
+#[derive(Clone, Debug)]
+struct Rows(Vec<Vec<f64>>);
+
+impl Shrink for Rows {
+    fn shrinks(&self) -> Vec<Self> {
+        if self.0.len() <= 1 {
+            return vec![];
+        }
+        vec![
+            Rows(self.0[..self.0.len() / 2].to_vec()),
+            Rows(self.0[..self.0.len() - 1].to_vec()),
+        ]
+    }
+}
+
+fn to_mat(rows: &Rows) -> Mat {
+    let d = rows.0[0].len();
+    Mat::from_fn(rows.0.len(), d, |r, c| rows.0[r][c] as f32)
+}
+
+fn gen_rows(rng: &mut Rng, max_rows: usize, d: usize) -> Rows {
+    let n = 1 + rng.below(max_rows);
+    Rows(
+        (0..n)
+            .map(|_| (0..d).map(|_| rng.normal()).collect())
+            .collect(),
+    )
+}
+
+#[test]
+fn prop_kernel_bounded_by_inv_eps() {
+    // Prop. 3: 0 ≤ E_sph ≤ 1/ε for any pair of unit vectors.
+    check(
+        1,
+        300,
+        |rng| {
+            let d = 2 + rng.below(30);
+            let q: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            let k: Vec<f64> = (0..d).map(|_| rng.normal()).collect();
+            (q, k)
+        },
+        |(q, k)| {
+            let eps = 1e-2f32;
+            let qm = Mat::from_fn(1, q.len(), |_, c| q[c] as f32).normalized_rows();
+            let km = Mat::from_fn(1, k.len(), |_, c| k[c] as f32).normalized_rows();
+            let x = slay::math::linalg::dot(qm.row(0), km.row(0)).clamp(-1.0, 1.0);
+            let v = yat::e_sph(x, eps);
+            if v >= -1e-6 && v <= 1.0 / eps + 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("kernel {v} outside [0, 1/eps]"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_positive_slay_denominators() {
+    // App. G: anchor-poly + explicit fusion ⇒ nonnegative denominators for
+    // ANY inputs.
+    let feats = SlayFeatures::new(SlayConfig::default(), 8).unwrap();
+    check(
+        2,
+        60,
+        |rng| (gen_rows(rng, 20, 8), gen_rows(rng, 20, 8)),
+        |(q, k)| {
+            let phi_q = feats.map_q(&to_mat(q), 0);
+            let phi_k = feats.map_k(&to_mat(k), 0);
+            let mut z = vec![0.0f32; phi_k.cols];
+            for r in 0..phi_k.rows {
+                for (zi, &x) in z.iter_mut().zip(phi_k.row(r)) {
+                    *zi += x;
+                }
+            }
+            for i in 0..phi_q.rows {
+                let den = slay::math::linalg::dot(phi_q.row(i), &z);
+                if den < -1e-6 {
+                    return Err(format!("negative denominator {den} at row {i}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gram_psd_on_sphere() {
+    // Thm. 2: sampled Gram matrices of the spherical kernel are PSD.
+    check(
+        3,
+        25,
+        |rng| {
+            let d = 3 + rng.below(6);
+            gen_rows(rng, 10, d)
+        },
+        |rows| {
+            let pts = to_mat(rows).normalized_rows();
+            let gram = yat::yat_spherical_scores(&pts, &pts, 1e-2);
+            let n = gram.rows;
+            let mut sym = gram.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    sym.set(r, c, 0.5 * (gram.get(r, c) + gram.get(c, r)));
+                }
+            }
+            let min = slay::math::eigen::min_eigenvalue(&sym);
+            if min > -1e-3 {
+                Ok(())
+            } else {
+                Err(format!("min eigenvalue {min}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_streaming_equals_batch_for_all_mechanisms() {
+    // StreamingState token-at-a-time must equal the causal batch engine.
+    let mechs = [
+        Mechanism::Slay(SlayConfig::default()),
+        Mechanism::Favor { m_features: 16, seed: 3 },
+        Mechanism::EluLinear,
+    ];
+    for mech in mechs {
+        let op = Attention::build(&mech, 8, 512).unwrap();
+        let Attention::Linear { maps, .. } = &op else { unreachable!() };
+        check(
+            4,
+            25,
+            |rng| (gen_rows(rng, 24, 8), rng.below(1000)),
+            |(rows, seed)| {
+                let mut rng = Rng::new(*seed as u64 + 1);
+                let x = to_mat(rows);
+                let v = Mat::randn(x.rows, 4, &mut rng);
+                let phi_q = maps.map_q(&x, 0);
+                let phi_k = maps.map_k(&x, 0);
+                let batch = engine::linear_attention(&phi_q, &phi_k, &v, true, 1e-6);
+                let mut st = StreamingState::new(phi_q.cols, 4);
+                for i in 0..x.rows {
+                    st.append(phi_k.row(i), v.row(i));
+                    let y = st.query(phi_q.row(i), 1e-6);
+                    for c in 0..4 {
+                        let want = batch.get(i, c);
+                        if (y[c] - want).abs() > 1e-3 * (1.0 + want.abs()) {
+                            return Err(format!(
+                                "{}: row {i} col {c}: {} vs {want}",
+                                op.mechanism().name(),
+                                y[c]
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_signed_poly_configs_lose_positivity_guarantee() {
+    // Table 1's positivity column is semantically enforced in the config.
+    check(
+        5,
+        50,
+        |rng| rng.below(5),
+        |&idx| {
+            let poly = [
+                PolyMethod::Exact,
+                PolyMethod::Anchor,
+                PolyMethod::Nystrom,
+                PolyMethod::TensorSketch,
+                PolyMethod::RandomMaclaurin,
+            ][idx];
+            let cfg = SlayConfig { poly, ..Default::default() };
+            let guaranteed = cfg.positivity_guaranteed();
+            if guaranteed == poly.positivity_preserving() {
+                Ok(())
+            } else {
+                Err(format!("{poly:?}: guarantee mismatch"))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_quadratic_attention_convexity() {
+    // Kernel-normalized attention outputs lie in the convex hull of V rows
+    // (per column) whenever scores are nonnegative.
+    check(
+        6,
+        40,
+        |rng| (gen_rows(rng, 12, 6), rng.below(10_000)),
+        |(rows, seed)| {
+            let mut rng = Rng::new(*seed as u64);
+            let x = to_mat(rows);
+            let scores = yat::yat_spherical_scores(&x, &x, 1e-3);
+            let v = Mat::randn(x.rows, 3, &mut rng);
+            let y = engine::quadratic_attention(&scores, &v, false, 0.0);
+            for c in 0..3 {
+                let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+                for r in 0..v.rows {
+                    lo = lo.min(v.get(r, c));
+                    hi = hi.max(v.get(r, c));
+                }
+                for r in 0..y.rows {
+                    let val = y.get(r, c);
+                    if !(val >= lo - 1e-3 && val <= hi + 1e-3) {
+                        return Err(format!("row {r} col {c}: {val} outside [{lo},{hi}]"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_feature_scale_invariance() {
+    // Remark 3(ii): SLAY features invariant to positive input scaling.
+    let feats = SlayFeatures::new(SlayConfig::default(), 6).unwrap();
+    check(
+        7,
+        40,
+        |rng| (gen_rows(rng, 8, 6), rng.range(0.1, 50.0)),
+        |(rows, scale)| {
+            let x = to_mat(rows);
+            let xs = x.map(|v| v * *scale as f32);
+            let a = feats.map_q(&x, 0);
+            let b = feats.map_q(&xs, 0);
+            for (p, q) in a.data.iter().zip(b.data.iter()) {
+                if (p - q).abs() > 2e-3 * (1.0 + p.abs()) {
+                    return Err(format!("scale {scale}: {p} vs {q}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
