@@ -3,7 +3,7 @@
 //! matrices (Fig. 17), and exact-vs-SLAY output correlation (Fig. 18).
 
 use slay::kernels::config::{Mechanism, SlayConfig};
-use slay::kernels::{yat, Attention};
+use slay::kernels::{build, yat};
 use slay::math::linalg::{matmul_a_bt, normalize_rows_by_sum, softmax_rows, Mat};
 use slay::math::rng::Rng;
 use slay::math::stats::pearson;
@@ -24,7 +24,7 @@ fn tokens_with_similarity(l: usize, d: usize, sim: f32, rng: &mut Rng) -> Mat {
 
 /// Normalized attention rows for a quadratic mechanism.
 fn attention_rows(mech: &Mechanism, q: &Mat, k: &Mat) -> Mat {
-    let op = Attention::build(mech, q.cols, q.rows).unwrap();
+    let op = build(mech, q.cols, q.rows).unwrap();
     let mut scores = op.score_matrix(q, k).unwrap();
     normalize_rows_by_sum(&mut scores, 1e-9);
     scores
@@ -129,7 +129,7 @@ fn main() {
     let q = clustered(&mut rng);
     let k = clustered(&mut rng);
     let v = Mat::randn(96, d, &mut rng);
-    let exact = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, 96)
+    let exact = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, 96)
         .unwrap()
         .forward(&q, &k, &v, false, 0);
     let cfg = SlayConfig {
@@ -138,7 +138,7 @@ fn main() {
         r_nodes: 3,
         ..Default::default()
     };
-    let approx = Attention::build(&Mechanism::Slay(cfg), d, 96)
+    let approx = build(&Mechanism::Slay(cfg), d, 96)
         .unwrap()
         .forward(&q, &k, &v, false, 0);
     let r = pearson(&exact.data, &approx.data);

@@ -9,7 +9,7 @@
 
 use slay::kernels::config::{Mechanism, SlayConfig};
 use slay::kernels::engine::workspace_bytes;
-use slay::kernels::{multi_head_forward, Attention};
+use slay::kernels::{build, MultiHeadAttention};
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::util::benchkit::{fmt_mib, fmt_ms, time_budget, Table};
@@ -46,16 +46,17 @@ fn main() {
 
     for (name, mech, quadratic) in &mechanisms {
         let lens = if *quadratic { &lens_quadratic } else { &lens_linear };
-        let op = Attention::build(mech, dh, *lens.last().unwrap()).unwrap();
+        let mha =
+            MultiHeadAttention::new(mech, d_model, heads, *lens.last().unwrap()).unwrap();
         for &l in lens {
             let q = Mat::randn(l, d_model, &mut rng);
             let k = Mat::randn(l, d_model, &mut rng);
             let v = Mat::randn(l, d_model, &mut rng);
             let budget = Duration::from_millis(if l >= 8192 { 600 } else { 250 });
             let t = time_budget(name, budget, || {
-                std::hint::black_box(multi_head_forward(&op, &q, &k, &v, heads, true));
+                std::hint::black_box(mha.forward(&q, &k, &v, true).unwrap());
             });
-            let mem = heads * workspace_bytes(op.feature_dim(), l, dh, dh);
+            let mem = heads * workspace_bytes(mha.feature_dim(), l, dh, dh);
             table.row(vec![
                 name.to_string(),
                 l.to_string(),
@@ -83,7 +84,7 @@ fn main() {
 
     // headline shape checks
     println!("\nshape checks:");
-    let slay_op = Attention::build(&Mechanism::Slay(SlayConfig::default()), dh, 131072).unwrap();
+    let slay_op = build(&Mechanism::Slay(SlayConfig::default()), dh, 131072).unwrap();
     let m = slay_op.feature_dim().unwrap();
     let slay_mem_131k = heads * workspace_bytes(Some(m), 131_072, dh, dh);
     let std_mem_16k = heads * workspace_bytes(None, 16_384, dh, dh);

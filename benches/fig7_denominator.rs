@@ -5,7 +5,7 @@
 //! negative and would flip attention signs.
 
 use slay::kernels::config::{Mechanism, PolyMethod, SlayConfig};
-use slay::kernels::Attention;
+use slay::kernels::build;
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::util::benchkit::{write_csv, Table};
@@ -43,7 +43,7 @@ fn main() {
         &["Method", "min", "p1", "median", "frac_negative"],
     );
     for (name, mech) in &variants {
-        let op = Attention::build(mech, d, l).unwrap();
+        let op = build(mech, d, l).unwrap();
         let dens: Vec<f64> = op
             .denominators(&q, &k, false)
             .into_iter()
@@ -81,7 +81,7 @@ fn main() {
                 }
                 other => other.clone(),
             };
-            let op = Attention::build(&mech_seeded, d, l).unwrap();
+            let op = build(&mech_seeded, d, l).unwrap();
             let dens = op.denominators(&qs, &ks, false);
             let neg = dens.iter().filter(|&&x| x < 0.0).count();
             rows8.push(vec![

@@ -8,7 +8,7 @@
 //! Random Maclaurin.
 
 use slay::kernels::config::{Fusion, Mechanism, PolyMethod, SlayConfig};
-use slay::kernels::{yat, Attention};
+use slay::kernels::build;
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::math::stats::{cosine, mse, rel_l2};
@@ -36,7 +36,7 @@ fn main() {
     let (q, k, v) = clustered(l, d, 99);
 
     // ground truth: exact kernel-normalized spherical E-attention
-    let exact_op = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
+    let exact_op = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
     let exact = exact_op.forward(&q, &k, &v, false, 0);
 
     let base = SlayConfig { r_nodes, d_prf, n_poly, ..Default::default() };
@@ -76,7 +76,7 @@ fn main() {
         let (y, latency_ms) = match &cfg {
             None => {
                 // softmax attention as the quadratic comparison row
-                let op = Attention::build(&Mechanism::Standard, d, l).unwrap();
+                let op = build(&Mechanism::Standard, d, l).unwrap();
                 let y = op.forward(&q, &k, &v, false, 0);
                 let t = time_budget(name, Duration::from_millis(300), || {
                     std::hint::black_box(op.forward(&q, &k, &v, false, 0));
@@ -84,7 +84,7 @@ fn main() {
                 (y, t.mean_ms)
             }
             Some(c) => {
-                let op = Attention::build(&Mechanism::Slay(c.clone()), d, l).unwrap();
+                let op = build(&Mechanism::Slay(c.clone()), d, l).unwrap();
                 let y = op.forward(&q, &k, &v, false, 0);
                 let t = time_budget(name, Duration::from_millis(300), || {
                     std::hint::black_box(op.forward(&q, &k, &v, false, 0));
@@ -144,12 +144,12 @@ fn main() {
     // the paper's qualitative claim: anchor beats the signed variants and
     // the quadratic-softmax row by a wide margin
     let anchor_err = {
-        let op = Attention::build(&Mechanism::Slay(base), d, l).unwrap();
+        let op = build(&Mechanism::Slay(base), d, l).unwrap();
         rel_l2(&op.forward(&q, &k, &v, false, 0).data, &exact.data)
     };
     let rm_err = {
         let c = SlayConfig { poly: PolyMethod::RandomMaclaurin, r_nodes, d_prf, n_poly, ..Default::default() };
-        let op = Attention::build(&Mechanism::Slay(c), d, l).unwrap();
+        let op = build(&Mechanism::Slay(c), d, l).unwrap();
         rel_l2(&op.forward(&q, &k, &v, false, 0).data, &exact.data)
     };
     println!("\nshape check: anchor {anchor_err:.3} << random-maclaurin {rm_err:.3}");

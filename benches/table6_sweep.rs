@@ -4,7 +4,7 @@
 //! QKV, compared against exact kernel-normalized spherical E-attention.
 
 use slay::kernels::config::{Fusion, Mechanism, PolyMethod, SlayConfig};
-use slay::kernels::Attention;
+use slay::kernels::build;
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::math::stats::rel_l2;
@@ -30,7 +30,7 @@ fn main() {
 
     for (scale, l, mp) in scales {
         let (q, k, v) = clustered(l, d, 7 + l as u64);
-        let exact_op = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
+        let exact_op = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
         let exact = exact_op.forward(&q, &k, &v, false, 0);
         let base = SlayConfig { r_nodes: 2, d_prf: mp, n_poly: mp, ..Default::default() };
 
@@ -43,7 +43,7 @@ fn main() {
                     (0.0, t.mean_ms)
                 }
                 Some(m) => {
-                    let op = Attention::build(m, d, l).unwrap();
+                    let op = build(m, d, l).unwrap();
                     let y = op.forward(&q, &k, &v, false, 0);
                     let t = time_budget(method, Duration::from_millis(200), || {
                         std::hint::black_box(op.forward(&q, &k, &v, false, 0));

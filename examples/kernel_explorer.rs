@@ -6,7 +6,7 @@
 //! Run: `cargo run --release --example kernel_explorer -- [--l 64] [--d 16]`
 
 use slay::kernels::config::{Mechanism, PolyMethod, SlayConfig};
-use slay::kernels::Attention;
+use slay::kernels::build;
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::util::benchkit::Table;
@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let q = gen(&mut rng);
     let k = gen(&mut rng);
     let v = Mat::randn(l, d, &mut rng);
-    let exact = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?
+    let exact = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?
         .forward(&q, &k, &v, false, 0);
 
     let mut table = Table::new(
@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
                 for seed in 0..4 {
                     let cfg =
                         SlayConfig { poly, r_nodes, n_poly, d_prf, seed, ..Default::default() };
-                    let op = Attention::build(&Mechanism::Slay(cfg.clone()), d, l)?;
+                    let op = build(&Mechanism::Slay(cfg.clone()), d, l)?;
                     m = op.feature_dim().unwrap();
                     let y = op.forward(&q, &k, &v, false, 0);
                     errs.push(slay::math::stats::rel_l2(&y.data, &exact.data));

@@ -9,7 +9,7 @@ use slay::coordinator::request::AttendChunk;
 use slay::coordinator::{Coordinator, CoordinatorConfig};
 use slay::kernels::config::{Mechanism, SlayConfig};
 use slay::kernels::slay::{QKFeatures, SlayFeatures};
-use slay::kernels::{engine, yat, Attention};
+use slay::kernels::{build, engine, yat};
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         Mat::randn(l, d, &mut rng),
     );
 
-    let slay_op = Attention::build(&Mechanism::Slay(SlayConfig::default()), d, l)?;
+    let slay_op = build(&Mechanism::Slay(SlayConfig::default()), d, l)?;
     let y = slay_op.forward(&q, &k, &v, /*causal=*/ true, 0);
     println!(
         "SLAY causal attention over L={l}: output {}x{}, feature dim m={}",
@@ -42,27 +42,36 @@ fn main() -> anyhow::Result<()> {
     );
 
     // exact quadratic counterpart for comparison
-    let exact_op = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?;
+    let exact_op = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?;
     let y_exact = exact_op.forward(&q, &k, &v, true, 0);
     println!(
         "rel-l2 vs exact spherical Yat attention: {:.3} (linear time vs O(L^2))\n",
         slay::math::stats::rel_l2(&y.data, &y_exact.data)
     );
 
-    // --- 3. streaming decode (the KV-cache analog) --------------------------
-    let feats = SlayFeatures::new(SlayConfig::default(), d)?;
-    let mut state = engine::StreamingState::new(feats.dim(), d);
-    let phi_k = feats.map_k(&k, 0);
-    let phi_q = feats.map_q(&q, 0);
-    for i in 0..l {
-        state.append(phi_k.row(i), v.row(i));
-    }
-    let y_last = state.query(phi_q.row(l - 1), 1e-6);
+    // --- 3. streaming sessions (the KV-cache analog) ------------------------
+    // The AttentionBackend session API: prefill a context chunk, then decode
+    // token by token against an opaque constant-size state.
+    let mut state = slay_op.new_state(d);
+    slay_op.prefill(&mut state, &q, &k, &v)?;
+    let mut y_last = vec![0.0f32; d];
+    let (qd, kd, vd) = (
+        Mat::randn(1, d, &mut rng),
+        Mat::randn(1, d, &mut rng),
+        Mat::randn(1, d, &mut rng),
+    );
+    slay_op.decode(&mut state, qd.row(0), kd.row(0), vd.row(0), &mut y_last)?;
     println!(
-        "streaming state after {l} tokens: {} bytes (constant in L); last-token output[0..4] = {:?}",
+        "streaming state after {} tokens: {} bytes (constant in L); last-token output[0..4] = {:?}",
+        state.len(),
         state.bytes(),
         &y_last[..4]
     );
+    // the same raw machinery is still available one level down
+    let feats = SlayFeatures::new(SlayConfig::default(), d)?;
+    let mut raw = engine::StreamingState::new(feats.dim(), d);
+    raw.append(feats.map_k(&k, 0).row(0), v.row(0));
+    println!("raw StreamingState bytes: {}", raw.bytes());
 
     // --- 4. the serving coordinator -----------------------------------------
     let coord = Coordinator::start(CoordinatorConfig {

@@ -109,8 +109,8 @@ fn main() -> anyhow::Result<()> {
 
     // memory story (Fig. 2's point, serving edition)
     let mcfg = coord.config();
-    let op = slay::kernels::Attention::build(&mcfg.mechanism, d, context)?;
-    let state_bytes = (op.feature_dim().unwrap() * (d + 1)) * 4;
+    let op = slay::kernels::build(&mcfg.mechanism, d, context)?;
+    let state_bytes = op.new_state(d).capacity_bytes();
     let kv_bytes = context * 2 * d * 4; // quadratic KV-cache at same depth
     println!(
         "\nper-sequence memory: SLAY state {:.1} KiB (constant) vs KV-cache {:.1} KiB \

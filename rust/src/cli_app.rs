@@ -52,6 +52,9 @@ fn print_help() {
            explore    print kernel curves (Figs. 4-6) to stdout\n\
          \n\
          common flags: --mechanism slay|standard|yat|yat_spherical|favor|elu_linear|cosformer\n\
+                       (parameterized specs work too: --mechanism slay:n_poly=16,d_prf=64\n\
+                        or yat:eps=0.01 — serving supports every mechanism, quadratic ones\n\
+                        run on a bounded rolling KV window)\n\
          slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
     );
 }
@@ -251,8 +254,8 @@ fn explore(args: &Args) -> anyhow::Result<()> {
             let q = Mat::randn(64, 16, &mut rng);
             let k = Mat::randn(64, 16, &mut rng);
             for name in ["slay", "favor", "elu_linear"] {
-                let m = crate::kernels::config::Mechanism::from_name(name)?;
-                let op = crate::kernels::Attention::build(&m, 16, 64)?;
+                let m = crate::kernels::config::Mechanism::parse(name)?;
+                let op = crate::kernels::build(&m, 16, 64)?;
                 let dens = op.denominators(&q, &k, false);
                 let min = dens.iter().cloned().fold(f32::INFINITY, f32::min);
                 println!("{name}: min denominator {min:.6}");

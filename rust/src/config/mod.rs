@@ -18,40 +18,25 @@ pub fn slay_config_from_args(args: &Args) -> anyhow::Result<SlayConfig> {
     cfg.d_prf = args.usize_or("d-prf", cfg.d_prf)?;
     cfg.seed = args.u64_or("seed", cfg.seed)?;
     if let Some(p) = args.get("poly") {
-        cfg.poly = match p {
-            "exact" => PolyMethod::Exact,
-            "anchor" => PolyMethod::Anchor,
-            "nystrom" => PolyMethod::Nystrom,
-            "tensorsketch" => PolyMethod::TensorSketch,
-            "random_maclaurin" | "rm" => PolyMethod::RandomMaclaurin,
-            other => anyhow::bail!("unknown --poly '{other}'"),
-        };
+        cfg.poly = PolyMethod::parse(p)?;
     }
     if let Some(f) = args.get("fusion") {
-        cfg.fusion = match f {
-            "explicit" => Fusion::Explicit,
-            "hadamard" => Fusion::Hadamard,
-            "laplace_only" => Fusion::LaplaceOnly,
-            other => {
-                if let Some(dt) = other.strip_prefix("sketch:") {
-                    Fusion::Sketch { d_t: dt.parse()? }
-                } else {
-                    anyhow::bail!("unknown --fusion '{other}'")
-                }
-            }
-        };
+        cfg.fusion = Fusion::parse(f)?;
     }
     cfg.validate()?;
     Ok(cfg)
 }
 
-/// Mechanism from `--mechanism` (+ SLAY flags when applicable).
+/// Mechanism from `--mechanism` (+ SLAY flags when applicable). Accepts
+/// either a bare registry name or a full [`Mechanism::parse`] spec
+/// (`--mechanism slay:n_poly=16,d_prf=64`); dedicated SLAY flags apply on
+/// top of the bare `slay` name.
 pub fn mechanism_from_args(args: &Args) -> anyhow::Result<Mechanism> {
     let name = args.get_or("mechanism", "slay");
     if name == "slay" {
         Ok(Mechanism::Slay(slay_config_from_args(args)?))
     } else {
-        Mechanism::from_name(&name)
+        Mechanism::parse(&name)
     }
 }
 
@@ -77,7 +62,7 @@ pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
 /// Serialize a coordinator config for logs/results.
 pub fn coordinator_to_json(cfg: &CoordinatorConfig) -> Json {
     Json::obj(vec![
-        ("mechanism", Json::Str(cfg.mechanism.name().to_string())),
+        ("mechanism", Json::Str(cfg.mechanism.to_string())),
         ("d_head", Json::Num(cfg.d_head as f64)),
         ("d_v", Json::Num(cfg.d_v as f64)),
         ("workers", Json::Num(cfg.workers as f64)),
@@ -125,6 +110,14 @@ mod tests {
             Mechanism::Slay(_)
         ));
         assert!(mechanism_from_args(&parse(&["x", "--mechanism", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn mechanism_flag_accepts_registry_specs() {
+        let m = mechanism_from_args(&parse(&["x", "--mechanism", "favor:m=16,seed=5"])).unwrap();
+        assert_eq!(m, Mechanism::Favor { m_features: 16, seed: 5 });
+        let m = mechanism_from_args(&parse(&["x", "--mechanism", "yat:eps=0.02"])).unwrap();
+        assert_eq!(m, Mechanism::Yat { eps: 0.02 });
     }
 
     #[test]

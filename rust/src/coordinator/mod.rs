@@ -18,7 +18,14 @@
 //!   with [`request::ServeError::Backpressure`] instead of queueing
 //!   unboundedly.
 //! * **State manager**: [`state::SequenceStore`] — constant bytes per
-//!   sequence (the linear-attention KV-cache analog), LRU idle eviction.
+//!   sequence for linear mechanisms (the linear-attention KV-cache analog)
+//!   and a bounded rolling KV window for the exact quadratic baselines,
+//!   LRU idle eviction.
+//!
+//! Every [`Mechanism`] serves through the same
+//! [`crate::kernels::AttentionBackend`] session interface — the quadratic
+//! baselines (softmax, Yat) run behind identical routing/batching, which
+//! is what makes the SLAY-vs-exact serving comparisons apples-to-apples.
 
 pub mod metrics;
 pub mod request;
@@ -42,7 +49,11 @@ pub struct CoordinatorConfig {
     pub mechanism: Mechanism,
     pub d_head: usize,
     pub d_v: usize,
-    /// cosformer positional horizon / max expected context.
+    /// cosformer positional horizon / max expected context. For quadratic
+    /// mechanisms this also sizes the per-sequence rolling KV window, and
+    /// each sequence is *budgeted* at the fully-populated window — set it
+    /// to the real expected context or admission control will reserve far
+    /// more memory than the workload needs.
     pub horizon: usize,
     pub workers: usize,
     pub max_batch: usize,
@@ -82,11 +93,6 @@ impl Coordinator {
     /// Spawn the worker topology.
     pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
         anyhow::ensure!(cfg.workers > 0, "need at least one worker");
-        anyhow::ensure!(
-            cfg.mechanism.is_linear(),
-            "serving requires a linear mechanism (got {})",
-            cfg.mechanism.name()
-        );
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicU64::new(0));
         let mut senders = Vec::new();

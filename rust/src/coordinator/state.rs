@@ -1,29 +1,29 @@
-//! Sequence state store — the linear-attention analog of a KV-cache
-//! manager.
+//! Sequence state store — the serving analog of a KV-cache manager.
 //!
-//! Each live sequence owns one [`StreamingState`] `(S ∈ R^{m×d_v}, z ∈ R^m)`
-//! per attention instance: **constant memory per sequence** regardless of
-//! how many tokens it has absorbed. This is exactly the property that lets
-//! SLAY serve 131K-token contexts where quadratic KV-caches OOM (Fig. 2/21)
-//! — the store tracks bytes and enforces a budget with idle-eviction.
+//! Each live sequence owns one opaque [`AttnState`] produced by the
+//! worker's [`crate::kernels::AttentionBackend`]: for linear mechanisms
+//! that is the constant-size `(S ∈ R^{m×d_v}, z ∈ R^m)` streaming pair —
+//! exactly the property that lets SLAY serve 131K-token contexts where
+//! quadratic KV-caches OOM (Fig. 2/21) — and for quadratic mechanisms a
+//! bounded rolling KV window. The store budgets each state at its
+//! *capacity* (the window fully populated), tracks bytes, and enforces the
+//! budget with idle-eviction.
 
-use crate::kernels::engine::StreamingState;
 use crate::coordinator::request::SeqId;
+use crate::kernels::AttnState;
 use std::collections::HashMap;
 use std::time::Instant;
 
 struct Entry {
-    state: StreamingState,
+    state: AttnState,
+    /// Admission-time capacity charge (constant for the entry's lifetime).
+    cap_bytes: usize,
     last_touch: Instant,
 }
 
 /// Store configuration.
 #[derive(Clone, Debug)]
 pub struct StoreConfig {
-    /// Feature dimension m of the serving mechanism.
-    pub m: usize,
-    /// Value dimension d_v.
-    pub d_v: usize,
     /// Hard cap on live sequences (admission control).
     pub max_sequences: usize,
     /// Soft memory budget in bytes; exceeding it evicts idle sequences.
@@ -32,7 +32,7 @@ pub struct StoreConfig {
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        StoreConfig { m: 384, d_v: 32, max_sequences: 4096, memory_budget: 256 << 20 }
+        StoreConfig { max_sequences: 4096, memory_budget: 256 << 20 }
     }
 }
 
@@ -48,11 +48,6 @@ impl SequenceStore {
         SequenceStore { cfg, seqs: HashMap::new(), bytes: 0 }
     }
 
-    /// Bytes one sequence state costs (constant — the linear-attention win).
-    pub fn bytes_per_sequence(&self) -> usize {
-        (self.cfg.m * self.cfg.d_v + self.cfg.m) * std::mem::size_of::<f32>()
-    }
-
     pub fn len(&self) -> usize {
         self.seqs.len()
     }
@@ -61,15 +56,21 @@ impl SequenceStore {
         self.seqs.is_empty()
     }
 
+    /// Budgeted bytes across live sequences (capacity accounting).
     pub fn bytes(&self) -> usize {
         self.bytes
     }
 
-    /// Admit a new sequence. Fails when the cap is reached and nothing is
-    /// evictable (backpressure surfaces to the client).
-    pub fn create(&mut self, id: SeqId) -> anyhow::Result<()> {
+    /// Admit a new sequence with its backend-created state. Fails when the
+    /// cap is reached and nothing is evictable (backpressure surfaces to
+    /// the client).
+    pub fn create(&mut self, id: SeqId, state: AttnState) -> anyhow::Result<()> {
+        // Reject duplicates before touching the map: a blind insert would
+        // destroy the live sequence's absorbed state even while erroring.
+        anyhow::ensure!(!self.seqs.contains_key(&id), "sequence {id:?} already exists");
+        let cap_bytes = state.capacity_bytes();
         if self.seqs.len() >= self.cfg.max_sequences
-            || self.bytes + self.bytes_per_sequence() > self.cfg.memory_budget
+            || self.bytes + cap_bytes > self.cfg.memory_budget
         {
             self.evict_idle(1);
         }
@@ -79,24 +80,17 @@ impl SequenceStore {
             self.cfg.max_sequences
         );
         anyhow::ensure!(
-            self.bytes + self.bytes_per_sequence() <= self.cfg.memory_budget,
+            self.bytes + cap_bytes <= self.cfg.memory_budget,
             "state memory budget exhausted ({} bytes)",
             self.bytes
         );
-        let prev = self.seqs.insert(
-            id,
-            Entry {
-                state: StreamingState::new(self.cfg.m, self.cfg.d_v),
-                last_touch: Instant::now(),
-            },
-        );
-        anyhow::ensure!(prev.is_none(), "sequence {id:?} already exists");
-        self.bytes += self.bytes_per_sequence();
+        self.seqs.insert(id, Entry { state, cap_bytes, last_touch: Instant::now() });
+        self.bytes += cap_bytes;
         Ok(())
     }
 
     /// Mutable access, bumping the LRU clock.
-    pub fn get_mut(&mut self, id: SeqId) -> Option<&mut StreamingState> {
+    pub fn get_mut(&mut self, id: SeqId) -> Option<&mut AttnState> {
         match self.seqs.get_mut(&id) {
             Some(e) => {
                 e.last_touch = Instant::now();
@@ -112,13 +106,13 @@ impl SequenceStore {
 
     /// Tokens absorbed by a sequence.
     pub fn seq_len(&self, id: SeqId) -> Option<usize> {
-        self.seqs.get(&id).map(|e| e.state.len)
+        self.seqs.get(&id).map(|e| e.state.len())
     }
 
     /// Drop a finished sequence, reclaiming its bytes.
     pub fn release(&mut self, id: SeqId) -> bool {
-        if self.seqs.remove(&id).is_some() {
-            self.bytes -= self.bytes_per_sequence();
+        if let Some(e) = self.seqs.remove(&id) {
+            self.bytes -= e.cap_bytes;
             true
         } else {
             false
@@ -142,45 +136,59 @@ impl SequenceStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::{build, AttentionBackend};
+    use crate::kernels::config::Mechanism;
+    use crate::math::linalg::Mat;
+    use crate::math::rng::Rng;
+
+    fn backend() -> Box<dyn AttentionBackend> {
+        build(&Mechanism::EluLinear, 16, 0).unwrap()
+    }
 
     fn store(max: usize) -> SequenceStore {
-        SequenceStore::new(StoreConfig {
-            m: 16,
-            d_v: 4,
-            max_sequences: max,
-            memory_budget: 1 << 20,
-        })
+        SequenceStore::new(StoreConfig { max_sequences: max, memory_budget: 1 << 20 })
     }
 
     #[test]
     fn create_touch_release_accounting() {
+        let b = backend();
+        let per_seq = b.new_state(4).capacity_bytes();
         let mut s = store(8);
-        s.create(SeqId(1)).unwrap();
-        s.create(SeqId(2)).unwrap();
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        s.create(SeqId(2), b.new_state(4)).unwrap();
         assert_eq!(s.len(), 2);
-        assert_eq!(s.bytes(), 2 * s.bytes_per_sequence());
+        assert_eq!(s.bytes(), 2 * per_seq);
         assert!(s.get_mut(SeqId(1)).is_some());
         assert!(s.get_mut(SeqId(99)).is_none());
         assert!(s.release(SeqId(1)));
         assert!(!s.release(SeqId(1)));
-        assert_eq!(s.bytes(), s.bytes_per_sequence());
+        assert_eq!(s.bytes(), per_seq);
     }
 
     #[test]
-    fn duplicate_create_rejected() {
+    fn duplicate_create_rejected_and_preserves_live_state() {
+        let b = backend();
         let mut s = store(8);
-        s.create(SeqId(1)).unwrap();
-        assert!(s.create(SeqId(1)).is_err());
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        let mut out = vec![0.0f32; 4];
+        let st = s.get_mut(SeqId(1)).unwrap();
+        b.decode(st, &[0.5; 16], &[0.5; 16], &[1.0; 4], &mut out).unwrap();
+        assert!(s.create(SeqId(1), b.new_state(4)).is_err());
+        // the rejected create must not have wiped the absorbed tokens
+        assert_eq!(s.seq_len(SeqId(1)), Some(1));
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.bytes(), s.get_mut(SeqId(1)).unwrap().capacity_bytes());
     }
 
     #[test]
     fn cap_evicts_idle_then_enforces() {
+        let b = backend();
         let mut s = store(2);
-        s.create(SeqId(1)).unwrap();
+        s.create(SeqId(1), b.new_state(4)).unwrap();
         std::thread::sleep(std::time::Duration::from_millis(2));
-        s.create(SeqId(2)).unwrap();
+        s.create(SeqId(2), b.new_state(4)).unwrap();
         // third admission evicts the idlest (seq 1)
-        s.create(SeqId(3)).unwrap();
+        s.create(SeqId(3), b.new_state(4)).unwrap();
         assert_eq!(s.len(), 2);
         assert!(!s.contains(SeqId(1)));
         assert!(s.contains(SeqId(2)) && s.contains(SeqId(3)));
@@ -188,26 +196,52 @@ mod tests {
 
     #[test]
     fn state_absorbs_tokens() {
+        let b = backend();
         let mut s = store(4);
-        s.create(SeqId(7)).unwrap();
+        s.create(SeqId(7), b.new_state(4)).unwrap();
+        let mut rng = Rng::new(5);
+        let (q, k, v) = (
+            Mat::randn(2, 16, &mut rng),
+            Mat::randn(2, 16, &mut rng),
+            Mat::randn(2, 4, &mut rng),
+        );
         let st = s.get_mut(SeqId(7)).unwrap();
-        st.append(&[1.0; 16], &[0.5; 4]);
-        st.append(&[0.5; 16], &[1.0; 4]);
+        b.prefill(st, &q, &k, &v).unwrap();
         assert_eq!(s.seq_len(SeqId(7)), Some(2));
     }
 
     #[test]
     fn constant_memory_per_sequence() {
         // The central serving property: absorbing 10k tokens does not grow
-        // the state.
+        // a linear state.
+        let b = backend();
         let mut s = store(4);
-        s.create(SeqId(1)).unwrap();
+        s.create(SeqId(1), b.new_state(4)).unwrap();
         let before = s.bytes();
+        let mut rng = Rng::new(6);
         let st = s.get_mut(SeqId(1)).unwrap();
+        let mut out = vec![0.0f32; 4];
+        let q = Mat::randn(1, 16, &mut rng);
+        let k = Mat::randn(1, 16, &mut rng);
+        let v = Mat::randn(1, 4, &mut rng);
         for _ in 0..10_000 {
-            st.append(&[0.1; 16], &[0.2; 4]);
+            b.decode(st, q.row(0), k.row(0), v.row(0), &mut out).unwrap();
         }
+        assert_eq!(st.bytes(), st.capacity_bytes());
         assert_eq!(s.bytes(), before);
         assert_eq!(s.seq_len(SeqId(1)), Some(10_000));
+    }
+
+    #[test]
+    fn windowed_state_budgeted_at_capacity() {
+        // Quadratic sessions are admitted at their fully-populated window
+        // size, so the budget can never be overrun by growth.
+        let b = build(&Mechanism::Standard, 16, 32).unwrap();
+        let mut s = store(4);
+        let st = b.new_state(4);
+        assert!(st.bytes() < st.capacity_bytes());
+        let cap = st.capacity_bytes();
+        s.create(SeqId(1), st).unwrap();
+        assert_eq!(s.bytes(), cap);
     }
 }

@@ -1,15 +1,17 @@
-//! Shard worker: owns one [`SequenceStore`] shard and an [`Attention`]
-//! operator, forms dynamic batches from its queue, computes features for
-//! the whole batch in one pass (the batching win — one big matmul instead
-//! of many small ones), then streams each chunk through its sequence state.
+//! Shard worker: owns one [`SequenceStore`] shard and an
+//! [`AttentionBackend`], forms dynamic batches from its queue, computes
+//! features for the whole batch in one pass when the mechanism supports it
+//! (the batching win — one big matmul instead of many small ones), then
+//! streams each chunk through its sequence state. Mechanisms without a
+//! feature decomposition (the exact quadratic baselines) are served through
+//! the same interface via per-chunk prefill over their rolling KV windows.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{AttendResult, SeqId, WorkItem};
 use crate::coordinator::scheduler::{order_batch, BatchPolicy};
 use crate::coordinator::state::{SequenceStore, StoreConfig};
 use crate::kernels::config::Mechanism;
-use crate::kernels::slay::QKFeatures;
-use crate::kernels::Attention;
+use crate::kernels::AttentionBackend;
 use crate::math::linalg::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
@@ -35,26 +37,17 @@ pub struct WorkerConfig {
 }
 
 /// Run the worker loop until `Shutdown`. Owns its shard exclusively —
-/// no locks on the hot path.
+/// no locks on the hot path. The denominator stabilizer δ lives inside the
+/// backend (it flows from the mechanism config), so every mechanism serves
+/// with its own normalization floor.
 pub fn run(
     cfg: WorkerConfig,
     rx: mpsc::Receiver<Msg>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
 ) -> anyhow::Result<()> {
-    let op = Attention::build(&cfg.mechanism, cfg.d_head, cfg.horizon)?;
-    let maps = match &op {
-        Attention::Linear { maps, .. } => maps,
-        Attention::Quadratic { .. } => {
-            anyhow::bail!("the serving coordinator requires a linear mechanism")
-        }
-    };
-    let delta = 1e-6f32;
-    let mut store = SequenceStore::new(StoreConfig {
-        m: maps.dim(),
-        d_v: cfg.d_v,
-        ..cfg.store.clone()
-    });
+    let backend = crate::kernels::build(&cfg.mechanism, cfg.d_head, cfg.horizon)?;
+    let mut store = SequenceStore::new(cfg.store.clone());
 
     loop {
         let msg = match rx.recv() {
@@ -64,7 +57,7 @@ pub fn run(
         match msg {
             Msg::Shutdown => return Ok(()),
             Msg::Create(id, ack) => {
-                let _ = ack.send(store.create(id));
+                let _ = ack.send(store.create(id, backend.new_state(cfg.d_v)));
             }
             Msg::Release(id, ack) => {
                 let _ = ack.send(store.release(id));
@@ -95,7 +88,7 @@ pub fn run(
                             continue;
                         }
                         Ok(Msg::Create(id, ack)) => {
-                            let _ = ack.send(store.create(id));
+                            let _ = ack.send(store.create(id, backend.new_state(cfg.d_v)));
                             continue;
                         }
                         Ok(Msg::Release(id, ack)) => {
@@ -125,7 +118,7 @@ pub fn run(
                     }
                     std::thread::yield_now();
                 }
-                process_batch(&mut store, maps.as_ref(), delta, batch, &metrics, &inflight);
+                process_batch(&mut store, backend.as_ref(), batch, &metrics, &inflight);
                 if shutdown {
                     return Ok(());
                 }
@@ -136,8 +129,7 @@ pub fn run(
 
 fn process_batch(
     store: &mut SequenceStore,
-    maps: &dyn QKFeatures,
-    delta: f32,
+    backend: &dyn AttentionBackend,
     mut batch: Vec<WorkItem>,
     metrics: &Metrics,
     inflight: &AtomicU64,
@@ -149,22 +141,27 @@ fn process_batch(
         .fetch_add(batch.len() as u64, Ordering::Relaxed);
 
     // ---- batched feature computation: one matmul over all chunks --------
-    let total_rows: usize = batch.iter().map(|w| w.chunk.n_tokens()).sum();
-    let d = batch[0].chunk.q.cols;
-    let mut all_q = Mat::zeros(total_rows, d);
-    let mut all_k = Mat::zeros(total_rows, d);
-    let mut row = 0;
-    for w in &batch {
-        for r in 0..w.chunk.n_tokens() {
-            all_q.row_mut(row + r).copy_from_slice(w.chunk.q.row(r));
-            all_k.row_mut(row + r).copy_from_slice(w.chunk.k.row(r));
+    // Mechanisms without a feature decomposition (feature_dim = None) skip
+    // the concatenation entirely and run per-chunk prefill below.
+    let mapped = if backend.feature_dim().is_some() {
+        let total_rows: usize = batch.iter().map(|w| w.chunk.n_tokens()).sum();
+        let d = batch[0].chunk.q.cols;
+        let mut all_q = Mat::zeros(total_rows, d);
+        let mut all_k = Mat::zeros(total_rows, d);
+        let mut row = 0;
+        for w in &batch {
+            for r in 0..w.chunk.n_tokens() {
+                all_q.row_mut(row + r).copy_from_slice(w.chunk.q.row(r));
+                all_k.row_mut(row + r).copy_from_slice(w.chunk.k.row(r));
+            }
+            row += w.chunk.n_tokens();
         }
-        row += w.chunk.n_tokens();
-    }
-    // NOTE: per-sequence pos0 is approximated by 0 here; only cosformer
-    // reads it and the serving default is SLAY (position-free).
-    let phi_q = maps.map_q(&all_q, 0);
-    let phi_k = maps.map_k(&all_k, 0);
+        // NOTE: per-sequence pos0 is approximated by 0 here; only cosformer
+        // reads it and the serving default is SLAY (position-free).
+        backend.map_qk(&all_q, &all_k, 0)
+    } else {
+        None
+    };
 
     // ---- per-chunk streaming through sequence state ---------------------
     let mut offset = 0;
@@ -178,15 +175,16 @@ fn process_batch(
         let result = match store.get_mut(w.chunk.seq) {
             None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
             Some(state) => {
-                let mut y = Mat::zeros(n, w.chunk.v.cols);
-                for r in 0..n {
-                    state.append(phi_k.row(offset + r), w.chunk.v.row(r));
-                    state.query_into(phi_q.row(offset + r), delta, y.row_mut(r));
-                }
-                Ok(AttendResult {
+                let y = match &mapped {
+                    Some((phi_q, phi_k)) => {
+                        backend.prefill_mapped(state, phi_q, phi_k, &w.chunk.v, offset)
+                    }
+                    None => backend.prefill(state, &w.chunk.q, &w.chunk.k, &w.chunk.v),
+                };
+                y.map(|y| AttendResult {
                     seq: w.chunk.seq,
                     y,
-                    seq_len: state.len,
+                    seq_len: state.len(),
                     latency: w.enqueued.elapsed(),
                 })
             }

@@ -40,6 +40,19 @@ impl PolyMethod {
             PolyMethod::RandomMaclaurin => "random_maclaurin",
         }
     }
+
+    /// Inverse of [`PolyMethod::name`] (registry keys; `rm` is accepted as
+    /// shorthand for `random_maclaurin`).
+    pub fn parse(s: &str) -> anyhow::Result<PolyMethod> {
+        Ok(match s {
+            "exact" => PolyMethod::Exact,
+            "anchor" => PolyMethod::Anchor,
+            "nystrom" => PolyMethod::Nystrom,
+            "tensorsketch" => PolyMethod::TensorSketch,
+            "random_maclaurin" | "rm" => PolyMethod::RandomMaclaurin,
+            other => anyhow::bail!("unknown poly method '{other}'"),
+        })
+    }
 }
 
 /// How the per-node polynomial × exponential features are fused (Eq. 10,
@@ -71,10 +84,35 @@ impl Fusion {
             Fusion::LaplaceOnly => "laplace_only",
         }
     }
+
+    /// Full registry spelling, including the sketch dimension
+    /// (`sketch:64`). Round-trips through [`Fusion::parse`].
+    pub fn spec(self) -> String {
+        match self {
+            Fusion::Sketch { d_t } => format!("sketch:{d_t}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    /// Inverse of [`Fusion::spec`].
+    pub fn parse(s: &str) -> anyhow::Result<Fusion> {
+        Ok(match s {
+            "explicit" => Fusion::Explicit,
+            "hadamard" => Fusion::Hadamard,
+            "laplace_only" => Fusion::LaplaceOnly,
+            other => {
+                if let Some(dt) = other.strip_prefix("sketch:") {
+                    Fusion::Sketch { d_t: dt.parse()? }
+                } else {
+                    anyhow::bail!("unknown fusion '{other}'")
+                }
+            }
+        })
+    }
 }
 
 /// Full SLAY estimator configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SlayConfig {
     /// Yat-kernel stabilizer ε (paper: 1e-3 for Yat family).
     pub eps: f64,
@@ -179,7 +217,13 @@ impl SlayConfig {
 
 /// The attention mechanisms compared throughout the paper (Fig. 2, Tables
 /// 2–8; Table 9 configs).
-#[derive(Clone, Debug)]
+///
+/// The string-keyed registry is the single construction path shared by the
+/// CLI, run configs and bench harnesses: [`Mechanism::parse`] accepts
+/// either a bare name (`"slay"`, Table 9 defaults) or a parameterized spec
+/// (`"slay:n_poly=16,d_prf=64"`, `"yat:eps=0.01"`, `"favor:m=128,seed=7"`)
+/// and round-trips with the [`std::fmt::Display`] implementation.
+#[derive(Clone, Debug, PartialEq)]
 pub enum Mechanism {
     /// Standard softmax attention — quadratic.
     Standard,
@@ -218,7 +262,7 @@ impl Mechanism {
         )
     }
 
-    /// Table 9 defaults by name (used by CLI and benches).
+    /// Table 9 defaults by bare name (the registry's base entries).
     pub fn from_name(name: &str) -> anyhow::Result<Mechanism> {
         Ok(match name {
             "standard" | "softmax" => Mechanism::Standard,
@@ -230,6 +274,88 @@ impl Mechanism {
             "cosformer" => Mechanism::Cosformer,
             other => anyhow::bail!("unknown mechanism '{other}'"),
         })
+    }
+
+    /// Parse a registry spec: `name[:key=value,...]`. The bare name selects
+    /// Table 9 defaults; keys override individual knobs. Examples:
+    ///
+    /// * `slay:n_poly=16,d_prf=64,poly=exact`
+    /// * `slay:fusion=sketch:128`
+    /// * `yat_spherical:eps=0.01`
+    /// * `favor:m=128,seed=7`
+    pub fn parse(spec: &str) -> anyhow::Result<Mechanism> {
+        let (name, params) = match spec.split_once(':') {
+            Some((n, p)) => (n, p),
+            None => (spec, ""),
+        };
+        let mut mech = Mechanism::from_name(name)?;
+        for kv in params.split(',').filter(|s| !s.is_empty()) {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("expected key=value, got '{kv}' in '{spec}'"))?;
+            match &mut mech {
+                Mechanism::Standard | Mechanism::EluLinear | Mechanism::Cosformer => {
+                    anyhow::bail!("mechanism '{name}' takes no parameters (got '{key}')")
+                }
+                Mechanism::Yat { eps } | Mechanism::YatSpherical { eps } => match key {
+                    "eps" => *eps = val.parse()?,
+                    other => anyhow::bail!("unknown key '{other}' for '{name}'"),
+                },
+                Mechanism::Favor { m_features, seed } => match key {
+                    "m" | "m_features" => *m_features = val.parse()?,
+                    "seed" => *seed = val.parse()?,
+                    other => anyhow::bail!("unknown key '{other}' for '{name}'"),
+                },
+                Mechanism::Slay(cfg) => match key {
+                    "eps" => cfg.eps = val.parse()?,
+                    "delta" => cfg.delta = val.parse()?,
+                    "r_nodes" | "r" => cfg.r_nodes = val.parse()?,
+                    "n_poly" | "p" => cfg.n_poly = val.parse()?,
+                    "d_prf" | "d" => cfg.d_prf = val.parse()?,
+                    "poly" => cfg.poly = PolyMethod::parse(val)?,
+                    "fusion" => cfg.fusion = Fusion::parse(val)?,
+                    "seed" => cfg.seed = val.parse()?,
+                    "nystrom_ridge" => cfg.nystrom_ridge = val.parse()?,
+                    other => anyhow::bail!("unknown key '{other}' for '{name}'"),
+                },
+            }
+        }
+        if let Mechanism::Slay(cfg) = &mech {
+            cfg.validate()?;
+        }
+        Ok(mech)
+    }
+}
+
+impl std::fmt::Display for Mechanism {
+    /// Canonical registry spec — round-trips through [`Mechanism::parse`].
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Mechanism::Standard => write!(f, "standard"),
+            Mechanism::EluLinear => write!(f, "elu_linear"),
+            Mechanism::Cosformer => write!(f, "cosformer"),
+            Mechanism::Yat { eps } => write!(f, "yat:eps={eps}"),
+            Mechanism::YatSpherical { eps } => write!(f, "yat_spherical:eps={eps}"),
+            Mechanism::Favor { m_features, seed } => write!(f, "favor:m={m_features},seed={seed}"),
+            Mechanism::Slay(c) => {
+                write!(
+                    f,
+                    "slay:poly={},fusion={},r_nodes={},n_poly={},d_prf={},eps={},delta={},seed={}",
+                    c.poly.name(),
+                    c.fusion.spec(),
+                    c.r_nodes,
+                    c.n_poly,
+                    c.d_prf,
+                    c.eps,
+                    c.delta,
+                    c.seed
+                )?;
+                if c.poly == PolyMethod::Nystrom {
+                    write!(f, ",nystrom_ridge={}", c.nystrom_ridge)?;
+                }
+                Ok(())
+            }
+        }
     }
 }
 
@@ -295,5 +421,70 @@ mod tests {
             assert_eq!(m.name(), name);
         }
         assert!(Mechanism::from_name("bogus").is_err());
+    }
+
+    #[test]
+    fn parse_specs_override_defaults() {
+        let m = Mechanism::parse("slay:n_poly=16,d_prf=64,poly=exact").unwrap();
+        let Mechanism::Slay(c) = m else { panic!("expected slay") };
+        assert_eq!(c.n_poly, 16);
+        assert_eq!(c.d_prf, 64);
+        assert_eq!(c.poly, PolyMethod::Exact);
+        assert_eq!(c.r_nodes, SlayConfig::default().r_nodes);
+
+        assert_eq!(
+            Mechanism::parse("yat:eps=0.01").unwrap(),
+            Mechanism::Yat { eps: 0.01 }
+        );
+        assert_eq!(
+            Mechanism::parse("favor:m=128,seed=7").unwrap(),
+            Mechanism::Favor { m_features: 128, seed: 7 }
+        );
+        // bare names still select Table 9 defaults
+        assert_eq!(Mechanism::parse("standard").unwrap(), Mechanism::Standard);
+        // the sketch fusion dim nests a ':' inside the value
+        let m = Mechanism::parse("slay:fusion=sketch:128").unwrap();
+        let Mechanism::Slay(c) = m else { panic!("expected slay") };
+        assert_eq!(c.fusion, Fusion::Sketch { d_t: 128 });
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(Mechanism::parse("standard:eps=1").is_err());
+        assert!(Mechanism::parse("slay:bogus=1").is_err());
+        assert!(Mechanism::parse("slay:n_poly").is_err());
+        assert!(Mechanism::parse("yat:eps=abc").is_err());
+        // parameterized configs still go through validation
+        assert!(Mechanism::parse("slay:r_nodes=0").is_err());
+        assert!(Mechanism::parse("slay:fusion=sketch:100").is_err());
+    }
+
+    #[test]
+    fn display_roundtrips_through_parse() {
+        let mechs = [
+            Mechanism::Standard,
+            Mechanism::EluLinear,
+            Mechanism::Cosformer,
+            Mechanism::Yat { eps: 0.05 },
+            Mechanism::YatSpherical { eps: 1e-3 },
+            Mechanism::Favor { m_features: 48, seed: 9 },
+            Mechanism::Slay(SlayConfig::default()),
+            Mechanism::Slay(SlayConfig {
+                poly: PolyMethod::Nystrom,
+                n_poly: 12,
+                d_prf: 24,
+                nystrom_ridge: 0.01,
+                ..Default::default()
+            }),
+            Mechanism::Slay(SlayConfig {
+                fusion: Fusion::Sketch { d_t: 64 },
+                ..Default::default()
+            }),
+        ];
+        for m in mechs {
+            let spec = m.to_string();
+            let back = Mechanism::parse(&spec).unwrap();
+            assert_eq!(back, m, "spec '{spec}' did not round-trip");
+        }
     }
 }

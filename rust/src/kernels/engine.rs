@@ -13,6 +13,26 @@
 
 use crate::math::linalg::{axpy, dot, matmul, matmul_at_b, Mat};
 
+/// Column sums of rows `r0..r1` of `m`, accumulated into `z` (`z += Σ_r m[r]`).
+/// This is the `Ψ(K)ᵀ1` contraction of Eq. 11 — the single definition used
+/// by the non-causal engine, [`StreamingState::extend`] and the backend
+/// denominator diagnostics.
+pub fn colsum_into(m: &Mat, r0: usize, r1: usize, z: &mut [f32]) {
+    debug_assert!(r1 <= m.rows && z.len() == m.cols);
+    for r in r0..r1 {
+        for (zi, &x) in z.iter_mut().zip(m.row(r)) {
+            *zi += x;
+        }
+    }
+}
+
+/// `Ψ(K)ᵀ1` — column sums of `m` over all rows.
+pub fn colsum(m: &Mat) -> Vec<f32> {
+    let mut z = vec![0.0f32; m.cols];
+    colsum_into(m, 0, m.rows, &mut z);
+    z
+}
+
 /// Kernel-normalized quadratic attention: `Y_i = Σ_j S_ij V_j / (Σ_j S_ij + δ)`
 /// with `j ≤ i` under causal masking. `scores` must be nonnegative for the
 /// normalization to be meaningful (softmax scores arrive pre-exponentiated).
@@ -44,16 +64,7 @@ pub fn linear_attention_noncausal(phi_q: &Mat, phi_k: &Mat, v: &Mat, delta: f32)
     assert_eq!(phi_q.cols, phi_k.cols);
     assert_eq!(phi_k.rows, v.rows);
     let s = matmul_at_b(phi_k, v); // m × d_v
-    let z: Vec<f32> = {
-        // Ψ(K)ᵀ1 — column sums of Ψ(K)
-        let mut z = vec![0.0f32; phi_k.cols];
-        for r in 0..phi_k.rows {
-            for (zi, &x) in z.iter_mut().zip(phi_k.row(r)) {
-                *zi += x;
-            }
-        }
-        z
-    };
+    let z = colsum(phi_k);
     let mut y = matmul(phi_q, &s); // L × d_v
     for i in 0..y.rows {
         let den = dot(phi_q.row(i), &z) + delta;
@@ -133,11 +144,7 @@ impl StreamingState {
         for (a, b) in self.s.iter_mut().zip(delta_s.data.iter()) {
             *a += b;
         }
-        for r in 0..phi_k.rows {
-            for (zi, &x) in self.z.iter_mut().zip(phi_k.row(r)) {
-                *zi += x;
-            }
-        }
+        colsum_into(phi_k, 0, phi_k.rows, &mut self.z);
         self.len += phi_k.rows;
     }
 
@@ -273,6 +280,23 @@ mod tests {
         }
         for (a, b) in s1.z.iter().zip(s2.z.iter()) {
             assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn colsum_matches_transpose_times_ones() {
+        let m = rand_mat(9, 5, 70);
+        let z = colsum(&m);
+        for c in 0..5 {
+            let want: f32 = (0..9).map(|r| m.get(r, c)).sum();
+            assert!((z[c] - want).abs() < 1e-5, "col {c}: {} vs {want}", z[c]);
+        }
+        // range accumulation composes
+        let mut z2 = vec![0.0f32; 5];
+        colsum_into(&m, 0, 4, &mut z2);
+        colsum_into(&m, 4, 9, &mut z2);
+        for (a, b) in z.iter().zip(z2.iter()) {
+            assert!((a - b).abs() < 1e-5);
         }
     }
 

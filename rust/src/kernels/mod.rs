@@ -1,7 +1,28 @@
 //! Attention mechanisms: the paper's SLAY estimator, its exact quadratic
 //! counterparts (Yat, spherical Yat, softmax), and the linear baselines
-//! (FAVOR+, ELU+1, cosformer). [`Attention`] is the single dispatch point
-//! used by the coordinator, examples and benches.
+//! (FAVOR+, ELU+1, cosformer).
+//!
+//! # The `AttentionBackend` API
+//!
+//! Every mechanism is served through one session-oriented interface:
+//!
+//! * [`build`] — factory: a [`Mechanism`] spec plus a head dimension yields
+//!   a boxed [`AttentionBackend`].
+//! * [`AttentionBackend::forward`] — one-shot attention over a full
+//!   sequence (benches, offline eval).
+//! * [`AttentionBackend::new_state`] / [`AttentionBackend::prefill`] /
+//!   [`AttentionBackend::decode`] — the serving session: an opaque
+//!   [`AttnState`] absorbs key/value chunks and answers queries
+//!   incrementally. For linear mechanisms the state is the paper's
+//!   constant-size `(S = Ψ(K)ᵀV, z = Ψ(K)ᵀ1)` streaming pair (Eq. 11);
+//!   for quadratic mechanisms it is a bounded rolling KV window, so the
+//!   coordinator can serve the exact softmax/Yat baselines for
+//!   apples-to-apples comparisons with SLAY.
+//! * [`MultiHeadAttention`] — per-head backends over packed `L × d_model`
+//!   tensors with std-thread fan-out across heads.
+//!
+//! The concrete backends are sealed (private to this module): consumers
+//! program against the trait and never match on mechanism internals.
 
 pub mod config;
 pub mod engine;
@@ -9,167 +30,639 @@ pub mod features;
 pub mod slay;
 pub mod yat;
 
-use crate::math::linalg::Mat;
+use crate::math::linalg::{dot, Mat};
 use config::Mechanism;
+use engine::StreamingState;
 use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
 use slay::{QKFeatures, SlayFeatures, SymMap};
 
+/// Default rolling-window bound for quadratic sessions when the caller did
+/// not provide a horizon (see [`build`]).
+pub const DEFAULT_QUADRATIC_WINDOW: usize = 4096;
+
 /// A constructed attention operator for one head dimension.
-pub enum Attention {
-    /// Quadratic mechanisms: build the L×L nonnegative score matrix.
-    Quadratic {
-        mech: Mechanism,
-        delta: f32,
-    },
-    /// Linear mechanisms: feature maps + Eq. 11 engine.
-    Linear {
-        mech: Mechanism,
-        maps: Box<dyn QKFeatures>,
-        delta: f32,
-    },
-}
-
-impl Attention {
-    /// Build an operator for head dimension `d`. `horizon` bounds the
-    /// positional reweighting of cosformer (max supported length).
-    pub fn build(mech: &Mechanism, d: usize, horizon: usize) -> anyhow::Result<Attention> {
-        Ok(match mech {
-            Mechanism::Standard | Mechanism::Yat { .. } | Mechanism::YatSpherical { .. } => {
-                Attention::Quadratic { mech: mech.clone(), delta: 1e-6 }
-            }
-            Mechanism::Slay(cfg) => {
-                let feats = SlayFeatures::new(cfg.clone(), d)?;
-                Attention::Linear { mech: mech.clone(), maps: Box::new(feats), delta: cfg.delta }
-            }
-            Mechanism::Favor { m_features, seed } => Attention::Linear {
-                mech: mech.clone(),
-                maps: Box::new(SymMap {
-                    inner: Box::new(FavorRelu::new(*m_features, d, *seed)),
-                    positive: true,
-                }),
-                delta: 1e-6,
-            },
-            Mechanism::EluLinear => Attention::Linear {
-                mech: mech.clone(),
-                maps: Box::new(SymMap { inner: Box::new(EluPlusOne::new(d)), positive: true }),
-                delta: 1e-6,
-            },
-            Mechanism::Cosformer => Attention::Linear {
-                mech: mech.clone(),
-                maps: Box::new(SymMap {
-                    inner: Box::new(CosformerMap::new(d, horizon.max(1))),
-                    positive: true,
-                }),
-                delta: 1e-6,
-            },
-        })
-    }
-
-    /// Feature dimension m for linear mechanisms, `None` for quadratic ones.
-    pub fn feature_dim(&self) -> Option<usize> {
-        match self {
-            Attention::Quadratic { .. } => None,
-            Attention::Linear { maps, .. } => Some(maps.dim()),
-        }
-    }
-
+///
+/// Implementations are sealed inside this module; consumers hold a
+/// `Box<dyn AttentionBackend>` from [`build`] and use the trait surface
+/// only. All methods take `&self` — a backend is shared freely across
+/// worker threads (`Send + Sync`), with per-sequence mutability confined
+/// to the [`AttnState`] handle.
+pub trait AttentionBackend: Send + Sync {
     /// The mechanism this operator implements.
-    pub fn mechanism(&self) -> &Mechanism {
-        match self {
-            Attention::Quadratic { mech, .. } | Attention::Linear { mech, .. } => mech,
-        }
-    }
+    fn mechanism(&self) -> &Mechanism;
 
-    /// Nonnegative score matrix for the quadratic path (test/diagnostic
-    /// accessor; the linear path never materializes it).
-    pub fn score_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
-        match self {
-            Attention::Quadratic { mech, .. } => Some(match mech {
-                Mechanism::Standard => yat::softmax_scores(q, k),
-                Mechanism::Yat { eps } => yat::yat_scores(q, k, *eps as f32),
-                Mechanism::YatSpherical { eps } => yat::yat_spherical_scores(q, k, *eps as f32),
-                _ => unreachable!(),
-            }),
-            Attention::Linear { .. } => None,
-        }
-    }
+    /// Denominator stabilizer δ (Eq. 11) in effect — flows from the
+    /// mechanism config (e.g. [`config::SlayConfig::delta`]), not from the
+    /// caller.
+    fn delta(&self) -> f32;
+
+    /// Feature dimension m for linear mechanisms, `None` for quadratic
+    /// ones.
+    fn feature_dim(&self) -> Option<usize>;
+
+    /// Fresh per-sequence session state for value dimension `d_v`.
+    fn new_state(&self, d_v: usize) -> AttnState;
+
+    /// Absorb a chunk of (Q, K, V) rows into `state`, returning the causal
+    /// attention outputs for the chunk's query rows. Positions continue
+    /// from the tokens the state has already absorbed.
+    fn prefill(&self, state: &mut AttnState, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat>;
+
+    /// Single-token decode step: absorb one (k, v) row and write the
+    /// attention output for `q` into `out` (`d_v` floats).
+    fn decode(
+        &self,
+        state: &mut AttnState,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()>;
 
     /// Full attention forward: `Y = attend(Q, K, V)` for one head.
     /// `pos0` is the absolute position of row 0 (matters for cosformer and
     /// for streaming continuation).
-    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, pos0: usize) -> Mat {
-        match self {
-            Attention::Quadratic { delta, .. } => {
-                let scores = self.score_matrix(q, k).expect("quadratic scores");
-                engine::quadratic_attention(&scores, v, causal, *delta)
-            }
-            Attention::Linear { maps, delta, .. } => {
-                let phi_q = maps.map_q(q, pos0);
-                let phi_k = maps.map_k(k, pos0);
-                engine::linear_attention(&phi_q, &phi_k, v, causal, *delta)
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, pos0: usize) -> Mat;
+
+    /// Nonnegative score matrix for the quadratic path (test/diagnostic
+    /// accessor; the linear path never materializes it).
+    fn score_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat>;
+
+    /// Denominator vector `Ψ(Q)(Ψ(K)ᵀ1)` (linear) or row sums (quadratic)
+    /// — the quantity whose positivity Fig. 7/8 studies.
+    fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32>;
+
+    /// Serving batching hook: map concatenated Q/K rows of a whole batch
+    /// to feature rows in one pass (one matmul for many chunks). Returns
+    /// `None` for mechanisms without a feature decomposition; callers then
+    /// fall back to per-chunk [`AttentionBackend::prefill`].
+    fn map_qk(&self, q: &Mat, k: &Mat, pos0: usize) -> Option<(Mat, Mat)>;
+
+    /// Companion to [`AttentionBackend::map_qk`]: stream pre-mapped
+    /// feature rows `offset..offset + v.rows` of `phi_q`/`phi_k` through
+    /// `state`, returning outputs for the chunk.
+    fn prefill_mapped(
+        &self,
+        state: &mut AttnState,
+        phi_q: &Mat,
+        phi_k: &Mat,
+        v: &Mat,
+        offset: usize,
+    ) -> anyhow::Result<Mat>;
+}
+
+/// Build an operator for head dimension `d`. `horizon` bounds the
+/// positional reweighting of cosformer and the rolling KV window of
+/// quadratic sessions (max supported context; `0` selects
+/// [`DEFAULT_QUADRATIC_WINDOW`] for the window).
+pub fn build(
+    mech: &Mechanism,
+    d: usize,
+    horizon: usize,
+) -> anyhow::Result<Box<dyn AttentionBackend>> {
+    Ok(match mech {
+        Mechanism::Standard | Mechanism::Yat { .. } | Mechanism::YatSpherical { .. } => {
+            let window = if horizon == 0 { DEFAULT_QUADRATIC_WINDOW } else { horizon };
+            Box::new(QuadraticBackend { mech: mech.clone(), delta: 1e-6, d, window })
+        }
+        Mechanism::Slay(cfg) => {
+            let delta = cfg.delta;
+            let feats = SlayFeatures::new(cfg.clone(), d)?;
+            Box::new(LinearBackend { mech: mech.clone(), maps: Box::new(feats), delta })
+        }
+        Mechanism::Favor { m_features, seed } => Box::new(LinearBackend {
+            mech: mech.clone(),
+            maps: Box::new(SymMap {
+                inner: Box::new(FavorRelu::new(*m_features, d, *seed)),
+                positive: true,
+            }),
+            delta: 1e-6,
+        }),
+        Mechanism::EluLinear => Box::new(LinearBackend {
+            mech: mech.clone(),
+            maps: Box::new(SymMap { inner: Box::new(EluPlusOne::new(d)), positive: true }),
+            delta: 1e-6,
+        }),
+        Mechanism::Cosformer => Box::new(LinearBackend {
+            mech: mech.clone(),
+            maps: Box::new(SymMap {
+                inner: Box::new(CosformerMap::new(d, horizon.max(1))),
+                positive: true,
+            }),
+            delta: 1e-6,
+        }),
+    })
+}
+
+/// Opaque per-sequence session state handle.
+///
+/// For linear mechanisms this wraps the constant-size
+/// [`StreamingState`] `(S, z)`; for quadratic mechanisms it wraps a
+/// bounded rolling KV window. Callers observe only token counts and
+/// memory accounting — the contents are owned by the backend that
+/// created the state.
+pub struct AttnState {
+    inner: StateInner,
+}
+
+enum StateInner {
+    Linear(StreamingState),
+    Window(KvWindow),
+}
+
+impl AttnState {
+    /// Tokens absorbed so far.
+    pub fn len(&self) -> usize {
+        match &self.inner {
+            StateInner::Linear(s) => s.len,
+            StateInner::Window(w) => w.len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently held by the state.
+    pub fn bytes(&self) -> usize {
+        match &self.inner {
+            StateInner::Linear(s) => s.bytes(),
+            StateInner::Window(w) => w.bytes(),
+        }
+    }
+
+    /// Upper bound on [`AttnState::bytes`] over the state's lifetime —
+    /// what admission control must budget for. Constant-size linear
+    /// states report their (already-final) size; rolling windows report
+    /// the fully-populated window.
+    pub fn capacity_bytes(&self) -> usize {
+        match &self.inner {
+            StateInner::Linear(s) => s.bytes(),
+            StateInner::Window(w) => w.capacity_bytes(),
+        }
+    }
+
+    fn linear_mut(&mut self) -> anyhow::Result<&mut StreamingState> {
+        match &mut self.inner {
+            StateInner::Linear(s) => Ok(s),
+            StateInner::Window(_) => {
+                anyhow::bail!("state mismatch: windowed state passed to a linear backend")
             }
         }
     }
 
-    /// Denominator vector `Ψ(Q)(Ψ(K)ᵀ1)` (linear) or row sums (quadratic) —
-    /// the quantity whose positivity Fig. 7/8 studies.
-    pub fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32> {
-        match self {
-            Attention::Quadratic { .. } => {
-                let s = self.score_matrix(q, k).unwrap();
-                (0..s.rows)
-                    .map(|i| {
-                        let lim = if causal { i + 1 } else { s.cols };
-                        s.row(i)[..lim].iter().sum()
-                    })
-                    .collect()
-            }
-            Attention::Linear { maps, .. } => {
-                let phi_q = maps.map_q(q, 0);
-                let phi_k = maps.map_k(k, 0);
-                let mut z = vec![0.0f32; phi_k.cols];
-                for r in 0..phi_k.rows {
-                    for (zi, &x) in z.iter_mut().zip(phi_k.row(r)) {
-                        *zi += x;
-                    }
-                }
-                (0..phi_q.rows)
-                    .map(|i| crate::math::linalg::dot(phi_q.row(i), &z))
-                    .collect()
+    fn window_mut(&mut self) -> anyhow::Result<&mut KvWindow> {
+        match &mut self.inner {
+            StateInner::Window(w) => Ok(w),
+            StateInner::Linear(_) => {
+                anyhow::bail!("state mismatch: linear state passed to a quadratic backend")
             }
         }
     }
 }
 
-/// Multi-head attention over packed `L × d_model` tensors: splits columns
-/// into `heads` equal slices, runs `op` per head, concatenates. Used by the
-/// isolation benches (Fig. 2 setup: d_model 256, 8 heads).
-pub fn multi_head_forward(
-    op: &Attention,
-    q: &Mat,
-    k: &Mat,
-    v: &Mat,
-    heads: usize,
-    causal: bool,
-) -> Mat {
-    assert_eq!(q.cols % heads, 0, "d_model must divide heads");
-    let dh = q.cols / heads;
-    let mut out = Mat::zeros(q.rows, q.cols);
-    for h in 0..heads {
-        let slice = |m: &Mat| {
-            let mut s = Mat::zeros(m.rows, dh);
-            for r in 0..m.rows {
-                s.row_mut(r).copy_from_slice(&m.row(r)[h * dh..(h + 1) * dh]);
-            }
-            s
-        };
-        let (qh, kh, vh) = (slice(q), slice(k), slice(v));
-        let yh = op.forward(&qh, &kh, &vh, causal, 0);
-        for r in 0..out.rows {
-            out.row_mut(r)[h * dh..(h + 1) * dh].copy_from_slice(yh.row(r));
+/// Bounded rolling KV window — the quadratic-session analog of the
+/// streaming `(S, z)` pair. Keeps the most recent `cap` (key, value) rows;
+/// older tokens fall out of the attention span (sliding-window semantics),
+/// which is exactly the memory/fidelity trade the linear state avoids.
+struct KvWindow {
+    d_k: usize,
+    d_v: usize,
+    /// Maximum retained rows.
+    cap: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Rows currently stored (≤ cap).
+    rows: usize,
+    /// Tokens absorbed over the session lifetime.
+    len: usize,
+}
+
+impl KvWindow {
+    fn new(d_k: usize, d_v: usize, cap: usize) -> Self {
+        KvWindow { d_k, d_v, cap: cap.max(1), k: Vec::new(), v: Vec::new(), rows: 0, len: 0 }
+    }
+
+    /// Append a token; once full, cyclically overwrite the oldest slot
+    /// (O(d) per token — attention sums over the window, so slot order is
+    /// irrelevant and no front-shift is needed).
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.d_k);
+        debug_assert_eq!(v_row.len(), self.d_v);
+        if self.rows < self.cap {
+            self.k.extend_from_slice(k_row);
+            self.v.extend_from_slice(v_row);
+            self.rows += 1;
+        } else {
+            let slot = self.len % self.cap;
+            self.k[slot * self.d_k..(slot + 1) * self.d_k].copy_from_slice(k_row);
+            self.v[slot * self.d_v..(slot + 1) * self.d_v].copy_from_slice(v_row);
+        }
+        self.len += 1;
+    }
+
+    fn key(&self, j: usize) -> &[f32] {
+        &self.k[j * self.d_k..(j + 1) * self.d_k]
+    }
+
+    fn val(&self, j: usize) -> &[f32] {
+        &self.v[j * self.d_v..(j + 1) * self.d_v]
+    }
+
+    fn bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
+    fn capacity_bytes(&self) -> usize {
+        self.cap * (self.d_k + self.d_v) * std::mem::size_of::<f32>()
+    }
+}
+
+/// Linear mechanisms: feature maps + Eq. 11 engine.
+struct LinearBackend {
+    mech: Mechanism,
+    maps: Box<dyn QKFeatures>,
+    delta: f32,
+}
+
+impl AttentionBackend for LinearBackend {
+    fn mechanism(&self) -> &Mechanism {
+        &self.mech
+    }
+
+    fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    fn feature_dim(&self) -> Option<usize> {
+        Some(self.maps.dim())
+    }
+
+    fn new_state(&self, d_v: usize) -> AttnState {
+        AttnState { inner: StateInner::Linear(StreamingState::new(self.maps.dim(), d_v)) }
+    }
+
+    fn prefill(&self, state: &mut AttnState, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat> {
+        let pos0 = state.len();
+        let phi_q = self.maps.map_q(q, pos0);
+        let phi_k = self.maps.map_k(k, pos0);
+        self.prefill_mapped(state, &phi_q, &phi_k, v, 0)
+    }
+
+    fn decode(
+        &self,
+        state: &mut AttnState,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let pos0 = state.len();
+        let phi_q = self.maps.map_q(&Mat::from_vec(1, q.len(), q.to_vec()), pos0);
+        let phi_k = self.maps.map_k(&Mat::from_vec(1, k.len(), k.to_vec()), pos0);
+        let st = state.linear_mut()?;
+        anyhow::ensure!(
+            v.len() == st.d_v && out.len() == st.d_v,
+            "decode: d_v mismatch (state {}, v {}, out {})",
+            st.d_v,
+            v.len(),
+            out.len()
+        );
+        st.append(phi_k.row(0), v);
+        st.query_into(phi_q.row(0), self.delta, out);
+        Ok(())
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, pos0: usize) -> Mat {
+        let phi_q = self.maps.map_q(q, pos0);
+        let phi_k = self.maps.map_k(k, pos0);
+        engine::linear_attention(&phi_q, &phi_k, v, causal, self.delta)
+    }
+
+    fn score_matrix(&self, _q: &Mat, _k: &Mat) -> Option<Mat> {
+        None
+    }
+
+    fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32> {
+        let phi_q = self.maps.map_q(q, 0);
+        let phi_k = self.maps.map_k(k, 0);
+        if causal {
+            let mut z = vec![0.0f32; phi_k.cols];
+            (0..phi_q.rows)
+                .map(|i| {
+                    engine::colsum_into(&phi_k, i, i + 1, &mut z);
+                    dot(phi_q.row(i), &z)
+                })
+                .collect()
+        } else {
+            let z = engine::colsum(&phi_k);
+            (0..phi_q.rows).map(|i| dot(phi_q.row(i), &z)).collect()
         }
     }
-    out
+
+    fn map_qk(&self, q: &Mat, k: &Mat, pos0: usize) -> Option<(Mat, Mat)> {
+        Some((self.maps.map_q(q, pos0), self.maps.map_k(k, pos0)))
+    }
+
+    fn prefill_mapped(
+        &self,
+        state: &mut AttnState,
+        phi_q: &Mat,
+        phi_k: &Mat,
+        v: &Mat,
+        offset: usize,
+    ) -> anyhow::Result<Mat> {
+        anyhow::ensure!(
+            offset + v.rows <= phi_q.rows && phi_q.rows == phi_k.rows,
+            "prefill_mapped: feature rows {}..{} out of range (have {})",
+            offset,
+            offset + v.rows,
+            phi_q.rows
+        );
+        let st = state.linear_mut()?;
+        anyhow::ensure!(
+            phi_q.cols == st.m && v.cols == st.d_v,
+            "prefill_mapped: state shape (m={}, d_v={}) vs features m={}, values d_v={}",
+            st.m,
+            st.d_v,
+            phi_q.cols,
+            v.cols
+        );
+        let mut y = Mat::zeros(v.rows, v.cols);
+        for r in 0..v.rows {
+            st.append(phi_k.row(offset + r), v.row(r));
+            st.query_into(phi_q.row(offset + r), self.delta, y.row_mut(r));
+        }
+        Ok(y)
+    }
+}
+
+/// Quadratic mechanisms: exact L×L scores one-shot, rolling KV window in
+/// sessions.
+struct QuadraticBackend {
+    mech: Mechanism,
+    delta: f32,
+    d: usize,
+    window: usize,
+}
+
+impl QuadraticBackend {
+    /// Scores of one raw query row against every key currently in the
+    /// window — the streaming counterpart of [`AttentionBackend::score_matrix`]'s
+    /// rows. Softmax scores are stabilized by the window-max, which cancels
+    /// in the normalization up to the δ floor.
+    fn window_scores(&self, q: &[f32], win: &KvWindow) -> Vec<f32> {
+        match &self.mech {
+            Mechanism::Standard => {
+                let scale = 1.0 / (self.d as f32).sqrt();
+                let logits: Vec<f32> =
+                    (0..win.rows).map(|j| dot(q, win.key(j)) * scale).collect();
+                let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                logits.into_iter().map(|x| (x - mx).exp()).collect()
+            }
+            Mechanism::Yat { eps } => (0..win.rows)
+                .map(|j| yat::e_product(q, win.key(j), *eps as f32))
+                .collect(),
+            Mechanism::YatSpherical { eps } => {
+                let nq = dot(q, q).sqrt().max(1e-12);
+                (0..win.rows)
+                    .map(|j| {
+                        let kj = win.key(j);
+                        let nk = dot(kj, kj).sqrt().max(1e-12);
+                        yat::e_sph(dot(q, kj) / (nq * nk), *eps as f32)
+                    })
+                    .collect()
+            }
+            _ => unreachable!("linear mechanism in quadratic backend"),
+        }
+    }
+
+    /// One streamed token: push (k, v), then attend q over the window.
+    fn step(&self, win: &mut KvWindow, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+        win.push(k, v);
+        let scores = self.window_scores(q, win);
+        out.fill(0.0);
+        let mut den = 0.0f32;
+        for (j, &s) in scores.iter().enumerate() {
+            den += s;
+            if s != 0.0 {
+                crate::math::linalg::axpy(s, win.val(j), out);
+            }
+        }
+        let inv = 1.0 / (den + self.delta);
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+}
+
+impl AttentionBackend for QuadraticBackend {
+    fn mechanism(&self) -> &Mechanism {
+        &self.mech
+    }
+
+    fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    fn feature_dim(&self) -> Option<usize> {
+        None
+    }
+
+    fn new_state(&self, d_v: usize) -> AttnState {
+        AttnState { inner: StateInner::Window(KvWindow::new(self.d, d_v, self.window)) }
+    }
+
+    fn prefill(&self, state: &mut AttnState, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat> {
+        anyhow::ensure!(
+            q.rows == k.rows && k.rows == v.rows,
+            "prefill: row mismatch q={} k={} v={}",
+            q.rows,
+            k.rows,
+            v.rows
+        );
+        let win = state.window_mut()?;
+        anyhow::ensure!(
+            q.cols == win.d_k && v.cols == win.d_v,
+            "prefill: state shape (d_k={}, d_v={}) vs q={}, v={}",
+            win.d_k,
+            win.d_v,
+            q.cols,
+            v.cols
+        );
+        let mut y = Mat::zeros(v.rows, v.cols);
+        for r in 0..v.rows {
+            self.step(win, q.row(r), k.row(r), v.row(r), y.row_mut(r));
+        }
+        Ok(y)
+    }
+
+    fn decode(
+        &self,
+        state: &mut AttnState,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()> {
+        let win = state.window_mut()?;
+        anyhow::ensure!(
+            q.len() == win.d_k && v.len() == win.d_v && out.len() == win.d_v,
+            "decode: state shape (d_k={}, d_v={}) vs q={}, v={}",
+            win.d_k,
+            win.d_v,
+            q.len(),
+            v.len()
+        );
+        self.step(win, q, k, v, out);
+        Ok(())
+    }
+
+    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, _pos0: usize) -> Mat {
+        // Causal softmax stabilizes each row by its visible-prefix max —
+        // the same quantity the streaming session computes — so one-shot
+        // and prefill/decode outputs coincide even when a future logit
+        // dominates the full row.
+        let scores = match (&self.mech, causal) {
+            (Mechanism::Standard, true) => yat::softmax_scores_causal(q, k),
+            _ => self.score_matrix(q, k).expect("quadratic scores"),
+        };
+        engine::quadratic_attention(&scores, v, causal, self.delta)
+    }
+
+    fn score_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
+        Some(match &self.mech {
+            Mechanism::Standard => yat::softmax_scores(q, k),
+            Mechanism::Yat { eps } => yat::yat_scores(q, k, *eps as f32),
+            Mechanism::YatSpherical { eps } => yat::yat_spherical_scores(q, k, *eps as f32),
+            _ => unreachable!("linear mechanism in quadratic backend"),
+        })
+    }
+
+    fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32> {
+        // Same stabilizer the causal forward/streaming paths divide by.
+        let s = match (&self.mech, causal) {
+            (Mechanism::Standard, true) => yat::softmax_scores_causal(q, k),
+            _ => self.score_matrix(q, k).expect("quadratic scores"),
+        };
+        (0..s.rows)
+            .map(|i| {
+                let lim = if causal { (i + 1).min(s.cols) } else { s.cols };
+                s.row(i)[..lim].iter().sum()
+            })
+            .collect()
+    }
+
+    fn map_qk(&self, _q: &Mat, _k: &Mat, _pos0: usize) -> Option<(Mat, Mat)> {
+        None
+    }
+
+    fn prefill_mapped(
+        &self,
+        _state: &mut AttnState,
+        _phi_q: &Mat,
+        _phi_k: &Mat,
+        _v: &Mat,
+        _offset: usize,
+    ) -> anyhow::Result<Mat> {
+        anyhow::bail!("quadratic mechanisms have no feature decomposition (map_qk is None)")
+    }
+}
+
+/// Multi-head attention over packed `L × d_model` tensors: owns one
+/// backend per head, splits columns into `heads` equal blocks, fans the
+/// head computations out across std threads, and reassembles the packed
+/// output. Used by the isolation benches (Fig. 2 setup: d_model 256,
+/// 8 heads).
+pub struct MultiHeadAttention {
+    heads: Vec<Box<dyn AttentionBackend>>,
+    d_model: usize,
+    d_head: usize,
+}
+
+impl MultiHeadAttention {
+    /// Build `n_heads` backends of head dimension `d_model / n_heads`.
+    /// Heads share the mechanism config (and therefore its feature
+    /// randomness — matching the single-operator setup of Fig. 2).
+    pub fn new(
+        mech: &Mechanism,
+        d_model: usize,
+        n_heads: usize,
+        horizon: usize,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(n_heads > 0, "need at least one head");
+        anyhow::ensure!(
+            d_model % n_heads == 0,
+            "heads ({n_heads}) must divide d_model ({d_model})"
+        );
+        let d_head = d_model / n_heads;
+        let mut heads = Vec::with_capacity(n_heads);
+        for _ in 0..n_heads {
+            heads.push(build(mech, d_head, horizon)?);
+        }
+        Ok(MultiHeadAttention { heads, d_model, d_head })
+    }
+
+    pub fn n_heads(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    /// Per-head feature dimension (`None` for quadratic mechanisms).
+    pub fn feature_dim(&self) -> Option<usize> {
+        self.heads[0].feature_dim()
+    }
+
+    /// Forward over packed `L × d_model` Q/K/V: each head attends over its
+    /// column block on its own thread, outputs are packed back in column
+    /// order.
+    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> anyhow::Result<Mat> {
+        anyhow::ensure!(
+            q.cols == self.d_model && k.cols == self.d_model && v.cols == self.d_model,
+            "packed width must be d_model={} (got q={}, k={}, v={})",
+            self.d_model,
+            q.cols,
+            k.cols,
+            v.cols
+        );
+        anyhow::ensure!(
+            q.rows == k.rows && k.rows == v.rows,
+            "row mismatch q={} k={} v={}",
+            q.rows,
+            k.rows,
+            v.rows
+        );
+        let dh = self.d_head;
+        let outputs: Vec<Mat> = std::thread::scope(|s| {
+            let handles: Vec<_> = self
+                .heads
+                .iter()
+                .enumerate()
+                .map(|(h, backend)| {
+                    s.spawn(move || {
+                        let block = |m: &Mat| {
+                            Mat::from_fn(m.rows, dh, |r, c| m.get(r, h * dh + c))
+                        };
+                        backend.forward(&block(q), &block(k), &block(v), causal, 0)
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|hd| hd.join().expect("head thread panicked"))
+                .collect()
+        });
+        let mut out = Mat::zeros(q.rows, self.d_model);
+        for (h, yh) in outputs.iter().enumerate() {
+            for r in 0..out.rows {
+                out.row_mut(r)[h * dh..(h + 1) * dh].copy_from_slice(yh.row(r));
+            }
+        }
+        Ok(out)
+    }
 }
 
 #[cfg(test)]
@@ -203,7 +696,7 @@ mod tests {
     fn all_mechanisms_produce_finite_outputs_both_masks() {
         let (q, k, v) = qkv(24, 16, 91);
         for mech in all_mechanisms() {
-            let op = Attention::build(&mech, 16, 64).unwrap();
+            let op = build(&mech, 16, 64).unwrap();
             for causal in [false, true] {
                 let y = op.forward(&q, &k, &v, causal, 0);
                 assert_eq!((y.rows, y.cols), (24, 16), "{}", mech.name());
@@ -219,7 +712,7 @@ mod tests {
     #[test]
     fn linear_flag_agrees_with_feature_dim() {
         for mech in all_mechanisms() {
-            let op = Attention::build(&mech, 16, 64).unwrap();
+            let op = build(&mech, 16, 64).unwrap();
             assert_eq!(mech.is_linear(), op.feature_dim().is_some(), "{}", mech.name());
         }
     }
@@ -228,7 +721,7 @@ mod tests {
     fn softmax_forward_equals_classic_softmax_attention() {
         // exp-scores + rowsum normalization ≡ softmax(QKᵀ/√d)V exactly.
         let (q, k, v) = qkv(10, 8, 92);
-        let op = Attention::build(&Mechanism::Standard, 8, 0).unwrap();
+        let op = build(&Mechanism::Standard, 8, 0).unwrap();
         let y = op.forward(&q, &k, &v, false, 0);
         let mut scores = crate::math::linalg::matmul_a_bt(&q, &k);
         scores.scale(1.0 / (8f32).sqrt());
@@ -262,14 +755,14 @@ mod tests {
         // Fig. 14's phenomenon: attention-output error vs exact spherical
         // Yat shrinks as the PRF budget grows (seed-averaged).
         let (q, k, v) = clustered_qkv(48, 16, 93);
-        let exact = Attention::build(&Mechanism::YatSpherical { eps: 1e-3 }, 16, 0)
+        let exact = build(&Mechanism::YatSpherical { eps: 1e-3 }, 16, 0)
             .unwrap()
             .forward(&q, &k, &v, false, 0);
         let mean_err = |d_prf: usize| {
             let mut errs = Vec::new();
             for seed in 0..4 {
                 let cfg = SlayConfig { n_poly: 16, d_prf, r_nodes: 2, seed, ..Default::default() };
-                let y = Attention::build(&Mechanism::Slay(cfg), 16, 0)
+                let y = build(&Mechanism::Slay(cfg), 16, 0)
                     .unwrap()
                     .forward(&q, &k, &v, false, 0);
                 errs.push(crate::math::stats::rel_l2(&y.data, &exact.data));
@@ -291,7 +784,7 @@ mod tests {
             r_nodes: 3,
             ..Default::default()
         };
-        let y = Attention::build(&Mechanism::Slay(cfg), 16, 0)
+        let y = build(&Mechanism::Slay(cfg), 16, 0)
             .unwrap()
             .forward(&q, &k, &v, false, 0);
         let err_exact_poly = crate::math::stats::rel_l2(&y.data, &exact.data);
@@ -307,7 +800,7 @@ mod tests {
             Mechanism::EluLinear,
             Mechanism::YatSpherical { eps: 1e-3 },
         ] {
-            let op = Attention::build(&mech, 16, 64).unwrap();
+            let op = build(&mech, 16, 64).unwrap();
             let dens = op.denominators(&q, &k, false);
             assert!(
                 dens.iter().all(|&d| d >= -1e-6),
@@ -332,7 +825,7 @@ mod tests {
                 seed,
                 ..Default::default()
             };
-            let op = Attention::build(&Mechanism::Slay(cfg), 16, 0).unwrap();
+            let op = build(&Mechanism::Slay(cfg), 16, 0).unwrap();
             if op.denominators(&q, &k, false).iter().any(|&d| d < 0.0) {
                 saw_negative = true;
                 break;
@@ -342,12 +835,26 @@ mod tests {
     }
 
     #[test]
+    fn causal_denominators_match_noncausal_on_last_row() {
+        let (q, k, _) = qkv(12, 8, 98);
+        for mech in [Mechanism::Slay(SlayConfig::default()), Mechanism::Standard] {
+            let op = build(&mech, 8, 32).unwrap();
+            let causal = op.denominators(&q, &k, true);
+            let full = op.denominators(&q, &k, false);
+            assert_eq!(causal.len(), 12);
+            let (a, b) = (causal[11], full[11]);
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", mech.name());
+        }
+    }
+
+    #[test]
     fn multi_head_partitions_and_reassembles() {
         let (q, k, v) = qkv(12, 32, 96);
-        let op = Attention::build(&Mechanism::EluLinear, 8, 0).unwrap();
-        let y = multi_head_forward(&op, &q, &k, &v, 4, true);
+        let mha = MultiHeadAttention::new(&Mechanism::EluLinear, 32, 4, 0).unwrap();
+        let y = mha.forward(&q, &k, &v, true).unwrap();
         assert_eq!((y.rows, y.cols), (12, 32));
         // head 0 output must equal single-head forward on the slice
+        let op = build(&Mechanism::EluLinear, 8, 0).unwrap();
         let slice = |m: &Mat| {
             let mut s = Mat::zeros(m.rows, 8);
             for r in 0..m.rows {
@@ -364,11 +871,20 @@ mod tests {
     }
 
     #[test]
+    fn multi_head_rejects_bad_shapes() {
+        assert!(MultiHeadAttention::new(&Mechanism::EluLinear, 30, 4, 0).is_err());
+        assert!(MultiHeadAttention::new(&Mechanism::EluLinear, 32, 0, 0).is_err());
+        let mha = MultiHeadAttention::new(&Mechanism::EluLinear, 32, 4, 0).unwrap();
+        let (q, k, v) = qkv(6, 16, 1);
+        assert!(mha.forward(&q, &k, &v, true).is_err());
+    }
+
+    #[test]
     fn causal_outputs_ignore_future_tokens() {
         // Perturbing token j > i must not change output row i.
         let (q, k, mut v) = qkv(10, 8, 97);
         for mech in all_mechanisms() {
-            let op = Attention::build(&mech, 8, 32).unwrap();
+            let op = build(&mech, 8, 32).unwrap();
             let y1 = op.forward(&q, &k, &v, true, 0);
             // perturb the last value row
             for c in 0..8 {
@@ -391,5 +907,77 @@ mod tests {
                 v.set(9, c, x);
             }
         }
+    }
+
+    #[test]
+    fn session_prefill_then_decode_matches_one_shot_forward() {
+        // The core serving contract: streaming a sequence through an
+        // AttnState (prefill chunk + per-token decode) reproduces the
+        // one-shot causal forward for EVERY mechanism — linear streaming
+        // states and windowed-quadratic sessions alike.
+        let l = 14;
+        let (q, k, v) = qkv(l, 8, 90);
+        for mech in all_mechanisms() {
+            let op = build(&mech, 8, 64).unwrap();
+            let want = op.forward(&q, &k, &v, true, 0);
+            let mut state = op.new_state(8);
+            let split = 9;
+            let take = |m: &Mat, a: usize, b: usize| {
+                Mat::from_fn(b - a, m.cols, |r, c| m.get(a + r, c))
+            };
+            let head = op
+                .prefill(&mut state, &take(&q, 0, split), &take(&k, 0, split), &take(&v, 0, split))
+                .unwrap();
+            let mut got = head.data.clone();
+            let mut out = vec![0.0f32; 8];
+            for i in split..l {
+                op.decode(&mut state, q.row(i), k.row(i), v.row(i), &mut out).unwrap();
+                got.extend_from_slice(&out);
+            }
+            assert_eq!(state.len(), l);
+            for (i, (a, b)) in got.iter().zip(want.data.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                    "{} elem {i}: {a} vs {b}",
+                    mech.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quadratic_window_slides_and_stays_bounded() {
+        let op = build(&Mechanism::YatSpherical { eps: 1e-3 }, 8, 4).unwrap();
+        let mut state = op.new_state(8);
+        let cap_bytes = state.capacity_bytes();
+        let (q, k, v) = qkv(32, 8, 89);
+        let mut out = vec![0.0f32; 8];
+        for i in 0..32 {
+            op.decode(&mut state, q.row(i), k.row(i), v.row(i), &mut out).unwrap();
+            assert!(out.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(state.len(), 32);
+        assert!(state.bytes() <= cap_bytes, "window grew past its bound");
+        // sliding semantics: with cap 4, the output at token 31 attends the
+        // last 4 tokens only — recomputing on that suffix matches.
+        let take = |m: &Mat, a: usize, b: usize| {
+            Mat::from_fn(b - a, m.cols, |r, c| m.get(a + r, c))
+        };
+        let suffix = op.forward(&take(&q, 28, 32), &take(&k, 28, 32), &take(&v, 28, 32), true, 0);
+        for c in 0..8 {
+            let want = suffix.get(3, c);
+            assert!((out[c] - want).abs() < 1e-4 * (1.0 + want.abs()), "{} vs {want}", out[c]);
+        }
+    }
+
+    #[test]
+    fn state_kind_mismatch_is_an_error_not_a_panic() {
+        let lin = build(&Mechanism::EluLinear, 8, 0).unwrap();
+        let quad = build(&Mechanism::Standard, 8, 0).unwrap();
+        let (q, k, v) = qkv(4, 8, 88);
+        let mut wrong = quad.new_state(8);
+        assert!(lin.prefill(&mut wrong, &q, &k, &v).is_err());
+        let mut wrong2 = lin.new_state(8);
+        assert!(quad.prefill(&mut wrong2, &q, &k, &v).is_err());
     }
 }

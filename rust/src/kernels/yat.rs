@@ -76,6 +76,27 @@ pub fn softmax_scores(q: &Mat, k: &Mat) -> Mat {
     s
 }
 
+/// Causal variant of [`softmax_scores`]: row `i` is stabilized by the max
+/// over its *visible* prefix `j ≤ i` only. With the full-row max, a
+/// dominant future logit can underflow every visible score and let the
+/// engine's δ floor zero the row; the prefix max is also exactly what a
+/// streaming session computes, so one-shot and prefill/decode paths agree.
+/// Entries `j > i` are still exponentiated (against the prefix max) but the
+/// causal engine never reads them.
+pub fn softmax_scores_causal(q: &Mat, k: &Mat) -> Mat {
+    let scale = 1.0 / (q.cols as f32).sqrt();
+    let mut s = crate::math::linalg::matmul_a_bt(q, k);
+    for i in 0..s.rows {
+        let row = s.row_mut(i);
+        let lim = (i + 1).min(row.len());
+        let mx = row[..lim].iter().copied().fold(f32::NEG_INFINITY, f32::max) * scale;
+        for x in row.iter_mut() {
+            *x = (*x * scale - mx).exp();
+        }
+    }
+    s
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +178,26 @@ mod tests {
             assert_eq!((s.rows, s.cols), (5, 7));
             assert!(s.data.iter().all(|&x| x >= 0.0 && x.is_finite()));
         }
+    }
+
+    #[test]
+    fn causal_scores_survive_dominant_future_logit() {
+        // A future key with a huge logit must not underflow the visible
+        // prefix of earlier rows (the full-row max would).
+        let d = 4;
+        let mut q = Mat::zeros(3, d);
+        let mut k = Mat::zeros(3, d);
+        for c in 0..d {
+            q.set(0, c, 1.0);
+            k.set(0, c, 1.0);
+            k.set(2, c, 40.0); // future key dominates row 0's logits
+        }
+        let s = softmax_scores_causal(&q, &k);
+        // row 0's visible score (j=0) stabilizes to exp(0) = 1
+        assert!((s.get(0, 0) - 1.0).abs() < 1e-6);
+        let full = softmax_scores(&q, &k);
+        // the full-row max underflows the same entry
+        assert!(full.get(0, 0) < 1e-20);
     }
 
     #[test]

@@ -85,6 +85,30 @@ impl<A: Shrink, B: Shrink> Shrink for (A, B) {
     }
 }
 
+impl<A: Shrink, B: Shrink, C: Shrink> Shrink for (A, B, C) {
+    fn shrinks(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrinks()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1
+                .shrinks()
+                .into_iter()
+                .map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2
+                .shrinks()
+                .into_iter()
+                .map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
 /// Result of a failed property: the original and shrunk counterexamples.
 #[derive(Debug)]
 pub struct Falsified<T: std::fmt::Debug> {

@@ -1,10 +1,12 @@
 //! Coordinator integration: correctness of the served attention against
-//! the batch engine, request conservation under concurrency, backpressure,
+//! the batch engine (linear *and* quadratic mechanisms through the same
+//! session API), request conservation under concurrency, backpressure,
 //! sequence lifecycle, and decode/prefill scheduling.
 
 use slay::coordinator::request::{AttendChunk, SeqId};
 use slay::coordinator::state::StoreConfig;
 use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::build;
 use slay::kernels::config::{Mechanism, SlayConfig};
 use slay::kernels::engine;
 use slay::kernels::slay::{QKFeatures, SlayFeatures};
@@ -22,7 +24,7 @@ fn small_cfg(workers: usize) -> CoordinatorConfig {
         max_batch: 8,
         max_wait: Duration::from_micros(500),
         queue_cap: 64,
-        store: StoreConfig { m: 1, d_v: 1, max_sequences: 128, memory_budget: 64 << 20 },
+        store: StoreConfig { max_sequences: 128, memory_budget: 64 << 20 },
         ..CoordinatorConfig::default()
     }
 }
@@ -196,10 +198,64 @@ fn metrics_classify_decode_and_prefill() {
 }
 
 #[test]
-fn quadratic_mechanism_is_refused() {
-    let mut cfg = small_cfg(1);
+fn quadratic_mechanism_served_end_to_end() {
+    // The session API serves the exact softmax baseline through the same
+    // coordinator path as SLAY: streaming prefill + decode chunks must
+    // match the one-shot causal forward of the same backend.
+    let mut cfg = small_cfg(2);
     cfg.mechanism = Mechanism::Standard;
-    assert!(Coordinator::start(cfg).is_err());
+    cfg.horizon = 256; // rolling-window bound ≥ the streamed context
+    let coord = Coordinator::start(cfg).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(123);
+    let chunks: Vec<AttendChunk> = vec![
+        chunk(seq, 6, &mut rng),  // prefill
+        chunk(seq, 1, &mut rng),  // decode
+        chunk(seq, 1, &mut rng),  // decode
+        chunk(seq, 4, &mut rng),  // follow-up prefill
+    ];
+    let total: usize = chunks.iter().map(|c| c.q.rows).sum();
+    let mut q_all = Mat::zeros(total, 16);
+    let mut k_all = Mat::zeros(total, 16);
+    let mut v_all = Mat::zeros(total, 8);
+    let mut r0 = 0;
+    for c in &chunks {
+        for r in 0..c.q.rows {
+            q_all.row_mut(r0 + r).copy_from_slice(c.q.row(r));
+            k_all.row_mut(r0 + r).copy_from_slice(c.k.row(r));
+            v_all.row_mut(r0 + r).copy_from_slice(c.v.row(r));
+        }
+        r0 += c.q.rows;
+    }
+    let backend = build(&Mechanism::Standard, 16, 256).unwrap();
+    let want = backend.forward(&q_all, &k_all, &v_all, true, 0);
+
+    let mut got_rows: Vec<f32> = Vec::new();
+    for c in chunks {
+        let res = coord.attend(c).unwrap();
+        got_rows.extend_from_slice(&res.y.data);
+    }
+    assert_eq!(coord.sequence_len(seq).unwrap(), Some(total));
+    let err = slay::math::stats::rel_l2(&got_rows, &want.data);
+    assert!(err < 1e-3, "served vs one-shot rel_l2 = {err}");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn every_mechanism_starts_and_serves() {
+    // No mechanism is refused by the coordinator anymore.
+    for name in ["standard", "yat", "yat_spherical", "slay", "favor", "elu_linear", "cosformer"] {
+        let mut cfg = small_cfg(1);
+        cfg.mechanism = Mechanism::parse(name).unwrap();
+        cfg.horizon = 64;
+        let coord = Coordinator::start(cfg).unwrap();
+        let seq = coord.create_sequence().unwrap();
+        let mut rng = Rng::new(7);
+        let res = coord.attend(chunk(seq, 3, &mut rng)).unwrap();
+        assert_eq!((res.y.rows, res.y.cols), (3, 8), "{name}");
+        assert!(res.y.data.iter().all(|x| x.is_finite()), "{name}");
+        coord.shutdown().unwrap();
+    }
 }
 
 #[test]

@@ -5,7 +5,7 @@
 use slay::kernels::config::{Mechanism, PolyMethod, SlayConfig};
 use slay::kernels::engine::{self, StreamingState};
 use slay::kernels::slay::{QKFeatures, SlayFeatures};
-use slay::kernels::{yat, Attention};
+use slay::kernels::{build, yat};
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::util::quickprop::{check, Shrink};
@@ -79,12 +79,7 @@ fn prop_positive_slay_denominators() {
         |(q, k)| {
             let phi_q = feats.map_q(&to_mat(q), 0);
             let phi_k = feats.map_k(&to_mat(k), 0);
-            let mut z = vec![0.0f32; phi_k.cols];
-            for r in 0..phi_k.rows {
-                for (zi, &x) in z.iter_mut().zip(phi_k.row(r)) {
-                    *zi += x;
-                }
-            }
+            let z = engine::colsum(&phi_k);
             for i in 0..phi_q.rows {
                 let den = slay::math::linalg::dot(phi_q.row(i), &z);
                 if den < -1e-6 {
@@ -135,8 +130,7 @@ fn prop_streaming_equals_batch_for_all_mechanisms() {
         Mechanism::EluLinear,
     ];
     for mech in mechs {
-        let op = Attention::build(&mech, 8, 512).unwrap();
-        let Attention::Linear { maps, .. } = &op else { unreachable!() };
+        let op = build(&mech, 8, 512).unwrap();
         check(
             4,
             25,
@@ -145,8 +139,9 @@ fn prop_streaming_equals_batch_for_all_mechanisms() {
                 let mut rng = Rng::new(*seed as u64 + 1);
                 let x = to_mat(rows);
                 let v = Mat::randn(x.rows, 4, &mut rng);
-                let phi_q = maps.map_q(&x, 0);
-                let phi_k = maps.map_k(&x, 0);
+                let (phi_q, phi_k) = op
+                    .map_qk(&x, &x, 0)
+                    .expect("linear mechanisms expose their feature maps");
                 let batch = engine::linear_attention(&phi_q, &phi_k, &v, true, 1e-6);
                 let mut st = StreamingState::new(phi_q.cols, 4);
                 for i in 0..x.rows {
@@ -161,6 +156,73 @@ fn prop_streaming_equals_batch_for_all_mechanisms() {
                                 y[c]
                             ));
                         }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_session_prefill_decode_equals_one_shot_forward() {
+    // The serving contract behind the AttentionBackend API: chunked
+    // prefill + token-at-a-time decode through an opaque AttnState must
+    // reproduce the one-shot causal forward for EVERY mechanism — the
+    // linear streaming states and the windowed-quadratic sessions alike.
+    let mechs = [
+        Mechanism::Standard,
+        Mechanism::Yat { eps: 1e-3 },
+        Mechanism::YatSpherical { eps: 1e-3 },
+        Mechanism::Slay(SlayConfig::default()),
+        Mechanism::Favor { m_features: 16, seed: 3 },
+        Mechanism::EluLinear,
+        Mechanism::Cosformer,
+    ];
+    for mech in mechs {
+        let op = build(&mech, 8, 512).unwrap();
+        check(
+            8,
+            12,
+            |rng| (gen_rows(rng, 12, 8), gen_rows(rng, 12, 8), rng.below(1000)),
+            |(qr, kr, seed)| {
+                let mut rng = Rng::new(*seed as u64 + 7);
+                // q and k need matching row counts; truncate to the shorter
+                let n = qr.0.len().min(kr.0.len());
+                let q = Mat::from_fn(n, 8, |r, c| qr.0[r][c] as f32);
+                let k = Mat::from_fn(n, 8, |r, c| kr.0[r][c] as f32);
+                let v = Mat::randn(n, 4, &mut rng);
+                let want = op.forward(&q, &k, &v, true, 0);
+
+                let mut state = op.new_state(4);
+                let split = n / 2;
+                let take = |m: &Mat, a: usize, b: usize| {
+                    Mat::from_fn(b - a, m.cols, |r, c| m.get(a + r, c))
+                };
+                let head = op
+                    .prefill(
+                        &mut state,
+                        &take(&q, 0, split),
+                        &take(&k, 0, split),
+                        &take(&v, 0, split),
+                    )
+                    .map_err(|e| e.to_string())?;
+                let mut got = head.data;
+                let mut out = vec![0.0f32; 4];
+                for i in split..n {
+                    op.decode(&mut state, q.row(i), k.row(i), v.row(i), &mut out)
+                        .map_err(|e| e.to_string())?;
+                    got.extend_from_slice(&out);
+                }
+                if state.len() != n {
+                    return Err(format!("state absorbed {} of {n} tokens", state.len()));
+                }
+                for (i, (a, b)) in got.iter().zip(want.data.iter()).enumerate() {
+                    if (a - b).abs() > 2e-3 * (1.0 + b.abs()) {
+                        return Err(format!(
+                            "{}: elem {i}: streamed {a} vs one-shot {b}",
+                            op.mechanism().name()
+                        ));
                     }
                 }
                 Ok(())

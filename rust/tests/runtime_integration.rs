@@ -5,7 +5,7 @@
 //! python). Run via `cargo test --release` after `make artifacts`.
 
 use slay::kernels::config::Mechanism;
-use slay::kernels::Attention;
+use slay::kernels::build;
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
 use slay::runtime::executor::TensorData;
@@ -62,7 +62,7 @@ fn elu_artifact_matches_rust_mirror() {
             TensorData::F32(v.data.clone()),
         ])
         .unwrap();
-    let op = Attention::build(&Mechanism::EluLinear, d, l).unwrap();
+    let op = build(&Mechanism::EluLinear, d, l).unwrap();
     let mirror = op.forward(&q, &k, &v, true, 0);
     let pjrt = out[0].as_f32().unwrap();
     let err = slay::math::stats::rel_l2(pjrt, &mirror.data);
@@ -87,7 +87,7 @@ fn cosformer_artifact_matches_rust_mirror() {
         ])
         .unwrap();
     // aot.py lowers cosformer with horizon = L
-    let op = Attention::build(&Mechanism::Cosformer, d, l).unwrap();
+    let op = build(&Mechanism::Cosformer, d, l).unwrap();
     let mirror = op.forward(&q, &k, &v, true, 0);
     let err = slay::math::stats::rel_l2(out[0].as_f32().unwrap(), &mirror.data);
     assert!(err < 1e-4, "pjrt vs rust mirror rel_l2 = {err}");
@@ -110,7 +110,7 @@ fn standard_attention_artifact_matches_mirror() {
             TensorData::F32(v.data.clone()),
         ])
         .unwrap();
-    let op = Attention::build(&Mechanism::Standard, d, l).unwrap();
+    let op = build(&Mechanism::Standard, d, l).unwrap();
     let mirror = op.forward(&q, &k, &v, true, 0);
     let err = slay::math::stats::rel_l2(out[0].as_f32().unwrap(), &mirror.data);
     assert!(err < 1e-3, "pjrt vs rust mirror rel_l2 = {err}");
