@@ -4,7 +4,7 @@
 
 use slay::kernels::config::{Mechanism, SlayConfig};
 use slay::kernels::{build, yat};
-use slay::math::linalg::{matmul_a_bt, normalize_rows_by_sum, softmax_rows, Mat};
+use slay::math::linalg::{matmul_a_bt, normalize_rows_by_sum, Mat};
 use slay::math::rng::Rng;
 use slay::math::stats::pearson;
 use slay::util::benchkit::{write_csv, Table};
@@ -25,7 +25,7 @@ fn tokens_with_similarity(l: usize, d: usize, sim: f32, rng: &mut Rng) -> Mat {
 /// Normalized attention rows for a quadratic mechanism.
 fn attention_rows(mech: &Mechanism, q: &Mat, k: &Mat) -> Mat {
     let op = build(mech, q.cols, q.rows).unwrap();
-    let mut scores = op.score_matrix(q, k).unwrap();
+    let mut scores = op.score_matrix(q.view(), k.view()).unwrap();
     normalize_rows_by_sum(&mut scores, 1e-9);
     scores
 }
@@ -57,7 +57,7 @@ fn main() {
         let slay_feats =
             slay::kernels::slay::SlayFeatures::new(SlayConfig::default(), d).unwrap();
         use slay::kernels::slay::QKFeatures;
-        let mut implied = matmul_a_bt(&slay_feats.map_q(&q, 0), &slay_feats.map_k(&k, 0));
+        let mut implied = matmul_a_bt(&slay_feats.map_q(q.view(), 0), &slay_feats.map_k(k.view(), 0));
         for v in implied.data.iter_mut() {
             *v = v.max(0.0);
         }
@@ -131,7 +131,7 @@ fn main() {
     let v = Mat::randn(96, d, &mut rng);
     let exact = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, 96)
         .unwrap()
-        .forward(&q, &k, &v, false, 0);
+        .forward(q.view(), k.view(), v.view(), false, 0);
     let cfg = SlayConfig {
         poly: slay::kernels::config::PolyMethod::Exact,
         d_prf: 64,
@@ -140,7 +140,7 @@ fn main() {
     };
     let approx = build(&Mechanism::Slay(cfg), d, 96)
         .unwrap()
-        .forward(&q, &k, &v, false, 0);
+        .forward(q.view(), k.view(), v.view(), false, 0);
     let r = pearson(&exact.data, &approx.data);
     let pair_rows: Vec<Vec<String>> = exact
         .data

@@ -17,7 +17,7 @@ fn main() {
         d,
     )
     .unwrap();
-    let phi_q = slay.map_q(&query, 0);
+    let phi_q = slay.map_q(query.view(), 0);
 
     // Fig. 19: lat-long grid over the sphere
     let mut rows = Vec::new();
@@ -36,7 +36,7 @@ fn main() {
             let w_yat = yat::e_sph(x, 1e-3);
             let w_soft = (x / (d as f32).sqrt()).exp();
             let km = Mat::from_vec(1, d, key.clone());
-            let w_slay = dot(phi_q.row(0), slay.map_k(&km, 0).row(0));
+            let w_slay = dot(phi_q.row(0), slay.map_k(km.view(), 0).row(0));
             rows.push(vec![
                 format!("{theta:.4}"),
                 format!("{phi:.4}"),
@@ -62,7 +62,7 @@ fn main() {
         let ang = std::f32::consts::PI * i as f32 / 180.0;
         let x = ang.cos();
         let km = Mat::from_vec(1, d, vec![ang.sin(), 0.0, ang.cos()]);
-        let w_slay = dot(phi_q.row(0), slay.map_k(&km, 0).row(0));
+        let w_slay = dot(phi_q.row(0), slay.map_k(km.view(), 0).row(0));
         rows20.push(vec![
             i.to_string(),
             format!("{:.6}", yat::e_sph(x, 1e-3)),

@@ -21,15 +21,15 @@ fn main() {
     // SLAY features at d=2 (generous budget so the panel is stable)
     let slay_cfg = SlayConfig { n_poly: 16, d_prf: 32, r_nodes: 3, ..Default::default() };
     let slay = SlayFeatures::new(slay_cfg, 2).unwrap();
-    let phi_neurons = slay.map_k(&neurons, 0);
+    let phi_neurons = slay.map_k(neurons.view(), 0);
 
     // FAVOR+ and ELU+1 operate via feature dot products too
     let favor = slay::kernels::features::prf::FavorRelu::new(64, 2, 7);
     use slay::kernels::features::FeatureMap;
-    let favor_neurons = favor.map(&neurons, 0);
+    let favor_neurons = favor.map(neurons.view(), 0);
 
     let elu = slay::kernels::features::prf::EluPlusOne::new(2);
-    let elu_neurons = elu.map(&neurons, 0);
+    let elu_neurons = elu.map(neurons.view(), 0);
 
     let mech_names = [
         "softmax_linear",
@@ -51,12 +51,12 @@ fn main() {
             // panel a: plain dot product (softmax logits are monotone in it)
             winners.push(argmax((0..n_neurons).map(|i| dot(p.row(0), neurons.row(i)))));
             // panel b: FAVOR+ feature space
-            let fp = favor.map(&p, 0);
+            let fp = favor.map(p.view(), 0);
             winners.push(argmax(
                 (0..n_neurons).map(|i| dot(fp.row(0), favor_neurons.row(i))),
             ));
             // panel c: ELU+1 feature space
-            let ep = elu.map(&p, 0);
+            let ep = elu.map(p.view(), 0);
             winners.push(argmax(
                 (0..n_neurons).map(|i| dot(ep.row(0), elu_neurons.row(i))),
             ));
@@ -71,7 +71,7 @@ fn main() {
                 yat::e_sph(dot(pn.row(0), nn.row(i)).clamp(-1.0, 1.0), eps)
             })));
             // panel f: SLAY (anchor) features
-            let sp = slay.map_q(&p, 0);
+            let sp = slay.map_q(p.view(), 0);
             winners.push(argmax(
                 (0..n_neurons).map(|i| dot(sp.row(0), phi_neurons.row(i))),
             ));

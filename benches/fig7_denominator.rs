@@ -45,7 +45,7 @@ fn main() {
     for (name, mech) in &variants {
         let op = build(mech, d, l).unwrap();
         let dens: Vec<f64> = op
-            .denominators(&q, &k, false)
+            .denominators(q.view(), k.view(), false)
             .into_iter()
             .map(|x| x as f64)
             .collect();
@@ -82,7 +82,7 @@ fn main() {
                 other => other.clone(),
             };
             let op = build(&mech_seeded, d, l).unwrap();
-            let dens = op.denominators(&qs, &ks, false);
+            let dens = op.denominators(qs.view(), ks.view(), false);
             let neg = dens.iter().filter(|&&x| x < 0.0).count();
             rows8.push(vec![
                 seed.to_string(),

@@ -37,7 +37,7 @@ fn main() {
 
     // ground truth: exact kernel-normalized spherical E-attention
     let exact_op = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
-    let exact = exact_op.forward(&q, &k, &v, false, 0);
+    let exact = exact_op.forward(q.view(), k.view(), v.view(), false, 0);
 
     let base = SlayConfig { r_nodes, d_prf, n_poly, ..Default::default() };
     let variants: Vec<(&str, Option<SlayConfig>)> = vec![
@@ -77,17 +77,17 @@ fn main() {
             None => {
                 // softmax attention as the quadratic comparison row
                 let op = build(&Mechanism::Standard, d, l).unwrap();
-                let y = op.forward(&q, &k, &v, false, 0);
+                let y = op.forward(q.view(), k.view(), v.view(), false, 0);
                 let t = time_budget(name, Duration::from_millis(300), || {
-                    std::hint::black_box(op.forward(&q, &k, &v, false, 0));
+                    std::hint::black_box(op.forward(q.view(), k.view(), v.view(), false, 0));
                 });
                 (y, t.mean_ms)
             }
             Some(c) => {
                 let op = build(&Mechanism::Slay(c.clone()), d, l).unwrap();
-                let y = op.forward(&q, &k, &v, false, 0);
+                let y = op.forward(q.view(), k.view(), v.view(), false, 0);
                 let t = time_budget(name, Duration::from_millis(300), || {
-                    std::hint::black_box(op.forward(&q, &k, &v, false, 0));
+                    std::hint::black_box(op.forward(q.view(), k.view(), v.view(), false, 0));
                 });
                 (y, t.mean_ms)
             }
@@ -145,12 +145,12 @@ fn main() {
     // the quadratic-softmax row by a wide margin
     let anchor_err = {
         let op = build(&Mechanism::Slay(base), d, l).unwrap();
-        rel_l2(&op.forward(&q, &k, &v, false, 0).data, &exact.data)
+        rel_l2(&op.forward(q.view(), k.view(), v.view(), false, 0).data, &exact.data)
     };
     let rm_err = {
         let c = SlayConfig { poly: PolyMethod::RandomMaclaurin, r_nodes, d_prf, n_poly, ..Default::default() };
         let op = build(&Mechanism::Slay(c), d, l).unwrap();
-        rel_l2(&op.forward(&q, &k, &v, false, 0).data, &exact.data)
+        rel_l2(&op.forward(q.view(), k.view(), v.view(), false, 0).data, &exact.data)
     };
     println!("\nshape check: anchor {anchor_err:.3} << random-maclaurin {rm_err:.3}");
     assert!(anchor_err < rm_err, "anchor should dominate signed RM features");

@@ -31,22 +31,22 @@ fn main() {
     for (scale, l, mp) in scales {
         let (q, k, v) = clustered(l, d, 7 + l as u64);
         let exact_op = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l).unwrap();
-        let exact = exact_op.forward(&q, &k, &v, false, 0);
+        let exact = exact_op.forward(q.view(), k.view(), v.view(), false, 0);
         let base = SlayConfig { r_nodes: 2, d_prf: mp, n_poly: mp, ..Default::default() };
 
         let mut push = |method: &str, mech: Option<Mechanism>| {
             let (err, ms) = match &mech {
                 None => {
                     let t = time_budget(method, Duration::from_millis(200), || {
-                        std::hint::black_box(exact_op.forward(&q, &k, &v, false, 0));
+                        std::hint::black_box(exact_op.forward(q.view(), k.view(), v.view(), false, 0));
                     });
                     (0.0, t.mean_ms)
                 }
                 Some(m) => {
                     let op = build(m, d, l).unwrap();
-                    let y = op.forward(&q, &k, &v, false, 0);
+                    let y = op.forward(q.view(), k.view(), v.view(), false, 0);
                     let t = time_budget(method, Duration::from_millis(200), || {
-                        std::hint::black_box(op.forward(&q, &k, &v, false, 0));
+                        std::hint::black_box(op.forward(q.view(), k.view(), v.view(), false, 0));
                     });
                     (rel_l2(&y.data, &exact.data), t.mean_ms)
                 }

@@ -25,7 +25,7 @@ fn main() -> anyhow::Result<()> {
     let k = gen(&mut rng);
     let v = Mat::randn(l, d, &mut rng);
     let exact = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?
-        .forward(&q, &k, &v, false, 0);
+        .forward(q.view(), k.view(), v.view(), false, 0);
 
     let mut table = Table::new(
         "SLAY estimator design space — rel-l2 vs exact spherical Yat (seed-avg of 4)",
@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
                         SlayConfig { poly, r_nodes, n_poly, d_prf, seed, ..Default::default() };
                     let op = build(&Mechanism::Slay(cfg.clone()), d, l)?;
                     m = op.feature_dim().unwrap();
-                    let y = op.forward(&q, &k, &v, false, 0);
+                    let y = op.forward(q.view(), k.view(), v.view(), false, 0);
                     errs.push(slay::math::stats::rel_l2(&y.data, &exact.data));
                 }
                 table.row(vec![

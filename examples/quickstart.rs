@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     let slay_op = build(&Mechanism::Slay(SlayConfig::default()), d, l)?;
-    let y = slay_op.forward(&q, &k, &v, /*causal=*/ true, 0);
+    let y = slay_op.forward(q.view(), k.view(), v.view(), /*causal=*/ true, 0);
     println!(
         "SLAY causal attention over L={l}: output {}x{}, feature dim m={}",
         y.rows,
@@ -43,7 +43,7 @@ fn main() -> anyhow::Result<()> {
 
     // exact quadratic counterpart for comparison
     let exact_op = build(&Mechanism::YatSpherical { eps: 1e-3 }, d, l)?;
-    let y_exact = exact_op.forward(&q, &k, &v, true, 0);
+    let y_exact = exact_op.forward(q.view(), k.view(), v.view(), true, 0);
     println!(
         "rel-l2 vs exact spherical Yat attention: {:.3} (linear time vs O(L^2))\n",
         slay::math::stats::rel_l2(&y.data, &y_exact.data)
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
     // The AttentionBackend session API: prefill a context chunk, then decode
     // token by token against an opaque constant-size state.
     let mut state = slay_op.new_state(d);
-    slay_op.prefill(&mut state, &q, &k, &v)?;
+    slay_op.prefill(&mut state, q.view(), k.view(), v.view())?;
     let mut y_last = vec![0.0f32; d];
     let (qd, kd, vd) = (
         Mat::randn(1, d, &mut rng),
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     // the same raw machinery is still available one level down
     let feats = SlayFeatures::new(SlayConfig::default(), d)?;
     let mut raw = engine::StreamingState::new(feats.dim(), d);
-    raw.append(feats.map_k(&k, 0).row(0), v.row(0));
+    raw.append(feats.map_k(k.view(), 0).row(0), v.row(0));
     println!("raw StreamingState bytes: {}", raw.bytes());
 
     // --- 4. the serving coordinator -----------------------------------------

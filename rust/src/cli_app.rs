@@ -63,7 +63,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     args.validate(&[
         "mechanism", "workers", "max-batch", "max-wait-us", "queue-cap", "d-head", "d-v",
         "seqs", "chunks", "chunk-len", "eps", "r-nodes", "n-poly", "d-prf", "poly",
-        "fusion", "seed", "listen", "duration-s",
+        "fusion", "seed", "listen", "duration-s", "horizon", "window",
     ])?;
     let cfg = config::coordinator_from_args(args)?;
 
@@ -256,7 +256,7 @@ fn explore(args: &Args) -> anyhow::Result<()> {
             for name in ["slay", "favor", "elu_linear"] {
                 let m = crate::kernels::config::Mechanism::parse(name)?;
                 let op = crate::kernels::build(&m, 16, 64)?;
-                let dens = op.denominators(&q, &k, false);
+                let dens = op.denominators(q.view(), k.view(), false);
                 let min = dens.iter().cloned().fold(f32::INFINITY, f32::min);
                 println!("{name}: min denominator {min:.6}");
             }

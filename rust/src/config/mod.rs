@@ -41,7 +41,8 @@ pub fn mechanism_from_args(args: &Args) -> anyhow::Result<Mechanism> {
 }
 
 /// CoordinatorConfig from flags (`--workers`, `--max-batch`,
-/// `--max-wait-us`, `--queue-cap`, `--d-head`, `--d-v`).
+/// `--max-wait-us`, `--queue-cap`, `--d-head`, `--d-v`, `--horizon`,
+/// `--window`).
 pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     let mut cfg = CoordinatorConfig {
         mechanism: mechanism_from_args(args)?,
@@ -56,6 +57,8 @@ pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     cfg.queue_cap = args.usize_or("queue-cap", cfg.queue_cap)?;
     cfg.d_head = args.usize_or("d-head", cfg.d_head)?;
     cfg.d_v = args.usize_or("d-v", cfg.d_v)?;
+    cfg.horizon = args.usize_or("horizon", cfg.horizon)?;
+    cfg.window = args.usize_or("window", cfg.window)?;
     Ok(cfg)
 }
 
@@ -69,6 +72,8 @@ pub fn coordinator_to_json(cfg: &CoordinatorConfig) -> Json {
         ("max_batch", Json::Num(cfg.max_batch as f64)),
         ("max_wait_us", Json::Num(cfg.max_wait.as_micros() as f64)),
         ("queue_cap", Json::Num(cfg.queue_cap as f64)),
+        ("horizon", Json::Num(cfg.horizon as f64)),
+        ("window", Json::Num(cfg.window as f64)),
     ])
 }
 
@@ -129,5 +134,20 @@ mod tests {
         assert_eq!(c.max_wait, Duration::from_micros(500));
         let j = coordinator_to_json(&c);
         assert_eq!(j.get("workers").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn window_flag_decouples_from_horizon() {
+        let c = coordinator_from_args(&parse(&[
+            "x", "--horizon", "131072", "--window", "512",
+        ]))
+        .unwrap();
+        assert_eq!(c.horizon, 131_072);
+        assert_eq!(c.window, 512);
+        let j = coordinator_to_json(&c);
+        assert_eq!(j.get("window").unwrap().as_usize(), Some(512));
+        // default: window falls back to the bounded default, not horizon
+        let d = coordinator_from_args(&parse(&["x"])).unwrap();
+        assert_eq!(d.window, crate::kernels::DEFAULT_QUADRATIC_WINDOW);
     }
 }

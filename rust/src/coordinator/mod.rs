@@ -12,8 +12,9 @@
 //!   sequence's streaming state `(S, z)` is owned by exactly one thread —
 //!   no locks on the hot path.
 //! * **Dynamic batcher**: each worker gathers up to `max_batch` chunks or
-//!   `max_wait`, computes features for the whole batch in one matmul, then
-//!   streams chunks through their per-sequence states (decode-first).
+//!   `max_wait`, maps features over zero-copy views of each chunk's arrival
+//!   buffers at its sequence's true position, then streams chunks through
+//!   their per-sequence states (decode-first).
 //! * **Backpressure**: bounded `sync_channel` queues; a full queue rejects
 //!   with [`request::ServeError::Backpressure`] instead of queueing
 //!   unboundedly.
@@ -49,12 +50,14 @@ pub struct CoordinatorConfig {
     pub mechanism: Mechanism,
     pub d_head: usize,
     pub d_v: usize,
-    /// cosformer positional horizon / max expected context. For quadratic
-    /// mechanisms this also sizes the per-sequence rolling KV window, and
-    /// each sequence is *budgeted* at the fully-populated window — set it
-    /// to the real expected context or admission control will reserve far
-    /// more memory than the workload needs.
+    /// cosformer positional horizon / max expected context.
     pub horizon: usize,
+    /// Rolling KV-window bound for quadratic sessions, decoupled from
+    /// `horizon` (each quadratic sequence is *budgeted* at the fully
+    /// populated window, so this knob — not the positional horizon —
+    /// decides how many exact-baseline sequences the memory budget
+    /// admits). `0` falls back to `horizon`.
+    pub window: usize,
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
@@ -70,6 +73,7 @@ impl Default for CoordinatorConfig {
             d_head: 32,
             d_v: 32,
             horizon: 131_072,
+            window: crate::kernels::DEFAULT_QUADRATIC_WINDOW,
             workers: 4,
             max_batch: 32,
             max_wait: Duration::from_millis(2),
@@ -104,6 +108,7 @@ impl Coordinator {
                 d_head: cfg.d_head,
                 d_v: cfg.d_v,
                 horizon: cfg.horizon,
+                window: cfg.window,
                 policy: BatchPolicy { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
                 store: cfg.store.clone(),
             };

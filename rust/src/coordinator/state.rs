@@ -206,7 +206,7 @@ mod tests {
             Mat::randn(2, 4, &mut rng),
         );
         let st = s.get_mut(SeqId(7)).unwrap();
-        b.prefill(st, &q, &k, &v).unwrap();
+        b.prefill(st, q.view(), k.view(), v.view()).unwrap();
         assert_eq!(s.seq_len(SeqId(7)), Some(2));
     }
 

@@ -1,10 +1,13 @@
 //! Shard worker: owns one [`SequenceStore`] shard and an
-//! [`AttentionBackend`], forms dynamic batches from its queue, computes
-//! features for the whole batch in one pass when the mechanism supports it
-//! (the batching win — one big matmul instead of many small ones), then
-//! streams each chunk through its sequence state. Mechanisms without a
-//! feature decomposition (the exact quadratic baselines) are served through
-//! the same interface via per-chunk prefill over their rolling KV windows.
+//! [`AttentionBackend`], forms dynamic batches from its queue, then maps
+//! features over zero-copy views of each chunk's arrival buffers at the
+//! sequence's true position before streaming the chunk through its state
+//! (ADR-002; the earlier design concatenated every batched chunk into one
+//! `all_q`/`all_k` matrix for a single `map_qk` call, which paid an
+//! O(L·d) gather copy per batch and silently approximated every chunk's
+//! position as 0 — wrong for cosformer). Mechanisms without a feature
+//! decomposition (the exact quadratic baselines) are served through the
+//! same interface via per-chunk prefill over their rolling KV windows.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{AttendResult, SeqId, WorkItem};
@@ -12,7 +15,6 @@ use crate::coordinator::scheduler::{order_batch, BatchPolicy};
 use crate::coordinator::state::{SequenceStore, StoreConfig};
 use crate::kernels::config::Mechanism;
 use crate::kernels::AttentionBackend;
-use crate::math::linalg::Mat;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -32,6 +34,9 @@ pub struct WorkerConfig {
     pub d_head: usize,
     pub d_v: usize,
     pub horizon: usize,
+    /// Rolling KV-window bound for quadratic sessions (0 = fall back to
+    /// `horizon`); see [`crate::kernels::build_with_window`].
+    pub window: usize,
     pub policy: BatchPolicy,
     pub store: StoreConfig,
 }
@@ -46,7 +51,8 @@ pub fn run(
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
 ) -> anyhow::Result<()> {
-    let backend = crate::kernels::build(&cfg.mechanism, cfg.d_head, cfg.horizon)?;
+    let backend =
+        crate::kernels::build_with_window(&cfg.mechanism, cfg.d_head, cfg.horizon, cfg.window)?;
     let mut store = SequenceStore::new(cfg.store.clone());
 
     loop {
@@ -140,31 +146,12 @@ fn process_batch(
         .batched_items
         .fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-    // ---- batched feature computation: one matmul over all chunks --------
-    // Mechanisms without a feature decomposition (feature_dim = None) skip
-    // the concatenation entirely and run per-chunk prefill below.
-    let mapped = if backend.feature_dim().is_some() {
-        let total_rows: usize = batch.iter().map(|w| w.chunk.n_tokens()).sum();
-        let d = batch[0].chunk.q.cols;
-        let mut all_q = Mat::zeros(total_rows, d);
-        let mut all_k = Mat::zeros(total_rows, d);
-        let mut row = 0;
-        for w in &batch {
-            for r in 0..w.chunk.n_tokens() {
-                all_q.row_mut(row + r).copy_from_slice(w.chunk.q.row(r));
-                all_k.row_mut(row + r).copy_from_slice(w.chunk.k.row(r));
-            }
-            row += w.chunk.n_tokens();
-        }
-        // NOTE: per-sequence pos0 is approximated by 0 here; only cosformer
-        // reads it and the serving default is SLAY (position-free).
-        backend.map_qk(&all_q, &all_k, 0)
-    } else {
-        None
-    };
-
     // ---- per-chunk streaming through sequence state ---------------------
-    let mut offset = 0;
+    // Features are mapped over zero-copy views of each chunk's arrival
+    // buffers at the session's true position (`state.len()`), so cosformer
+    // serving matches its one-shot forward; there is no concatenated
+    // `all_q`/`all_k` materialization. Mechanisms without a feature
+    // decomposition (map_qk = None) stream through per-chunk prefill.
     for w in batch {
         let n = w.chunk.n_tokens();
         if w.chunk.is_decode() {
@@ -175,11 +162,12 @@ fn process_batch(
         let result = match store.get_mut(w.chunk.seq) {
             None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
             Some(state) => {
-                let y = match &mapped {
+                let (q, k, v) = (w.chunk.q.view(), w.chunk.k.view(), w.chunk.v.view());
+                let y = match backend.map_qk(q, k, state.len()) {
                     Some((phi_q, phi_k)) => {
-                        backend.prefill_mapped(state, phi_q, phi_k, &w.chunk.v, offset)
+                        backend.prefill_mapped(state, phi_q.view(), phi_k.view(), v)
                     }
-                    None => backend.prefill(state, &w.chunk.q, &w.chunk.k, &w.chunk.v),
+                    None => backend.prefill(state, q, k, v),
                 };
                 y.map(|y| AttendResult {
                     seq: w.chunk.seq,
@@ -198,6 +186,5 @@ fn process_batch(
         }
         inflight.fetch_sub(1, Ordering::Relaxed);
         let _ = w.reply.send(result);
-        offset += n;
     }
 }

@@ -10,15 +10,21 @@
 //! * [`StreamingState`] — the linear-attention analog of a KV-cache:
 //!   per-sequence `(S = Ψ(K)ᵀV ∈ R^{m×d_v}, z = Ψ(K)ᵀ1 ∈ R^m)`, used by the
 //!   coordinator's decode path.
+//!
+//! Every engine takes strided [`MatView`]s (ADR-002) and has an `_into`
+//! variant writing through a [`MatViewMut`], so callers can stream head
+//! column-blocks or chunk row-ranges in and pack outputs in place without
+//! intermediate copies.
 
-use crate::math::linalg::{axpy, dot, matmul, matmul_at_b, Mat};
+use crate::math::linalg::{axpy, dot, matmul_at_b, matmul_into, Mat, MatView, MatViewMut};
 
 /// Column sums of rows `r0..r1` of `m`, accumulated into `z` (`z += Σ_r m[r]`).
 /// This is the `Ψ(K)ᵀ1` contraction of Eq. 11 — the single definition used
 /// by the non-causal engine, [`StreamingState::extend`] and the backend
 /// denominator diagnostics.
-pub fn colsum_into(m: &Mat, r0: usize, r1: usize, z: &mut [f32]) {
-    debug_assert!(r1 <= m.rows && z.len() == m.cols);
+pub fn colsum_into<'a>(m: impl Into<MatView<'a>>, r0: usize, r1: usize, z: &mut [f32]) {
+    let m = m.into();
+    debug_assert!(r1 <= m.rows() && z.len() == m.cols());
     for r in r0..r1 {
         for (zi, &x) in z.iter_mut().zip(m.row(r)) {
             *zi += x;
@@ -27,23 +33,48 @@ pub fn colsum_into(m: &Mat, r0: usize, r1: usize, z: &mut [f32]) {
 }
 
 /// `Ψ(K)ᵀ1` — column sums of `m` over all rows.
-pub fn colsum(m: &Mat) -> Vec<f32> {
-    let mut z = vec![0.0f32; m.cols];
-    colsum_into(m, 0, m.rows, &mut z);
+pub fn colsum<'a>(m: impl Into<MatView<'a>>) -> Vec<f32> {
+    let m = m.into();
+    let mut z = vec![0.0f32; m.cols()];
+    colsum_into(m, 0, m.rows(), &mut z);
     z
 }
 
 /// Kernel-normalized quadratic attention: `Y_i = Σ_j S_ij V_j / (Σ_j S_ij + δ)`
 /// with `j ≤ i` under causal masking. `scores` must be nonnegative for the
 /// normalization to be meaningful (softmax scores arrive pre-exponentiated).
-pub fn quadratic_attention(scores: &Mat, v: &Mat, causal: bool, delta: f32) -> Mat {
-    assert_eq!(scores.cols, v.rows, "scores/V mismatch");
-    let mut out = Mat::zeros(scores.rows, v.cols);
-    for i in 0..scores.rows {
-        let limit = if causal { (i + 1).min(scores.cols) } else { scores.cols };
+pub fn quadratic_attention<'a, 'b>(
+    scores: impl Into<MatView<'a>>,
+    v: impl Into<MatView<'b>>,
+    causal: bool,
+    delta: f32,
+) -> Mat {
+    let (scores, v) = (scores.into(), v.into());
+    let mut out = Mat::zeros(scores.rows(), v.cols());
+    quadratic_attention_into(scores, v, causal, delta, out.view_mut());
+    out
+}
+
+/// [`quadratic_attention`] writing through a (possibly strided) output view.
+pub fn quadratic_attention_into(
+    scores: MatView,
+    v: MatView,
+    causal: bool,
+    delta: f32,
+    mut out: MatViewMut,
+) {
+    assert_eq!(scores.cols(), v.rows(), "scores/V mismatch");
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (scores.rows(), v.cols()),
+        "quadratic_attention_into: bad output shape"
+    );
+    for i in 0..scores.rows() {
+        let limit = if causal { (i + 1).min(scores.cols()) } else { scores.cols() };
         let srow = &scores.row(i)[..limit];
-        let mut den = 0.0f32;
         let orow = out.row_mut(i);
+        orow.fill(0.0);
+        let mut den = 0.0f32;
         for (j, &s) in srow.iter().enumerate() {
             den += s;
             if s != 0.0 {
@@ -55,48 +86,109 @@ pub fn quadratic_attention(scores: &Mat, v: &Mat, causal: bool, delta: f32) -> M
             *o *= inv;
         }
     }
-    out
 }
 
 /// Non-causal linear attention (Eq. 11):
 /// `Y = Ψ(Q)(Ψ(K)ᵀV) / (Ψ(Q)(Ψ(K)ᵀ1) + δ)` — O(L·m·d_v).
-pub fn linear_attention_noncausal(phi_q: &Mat, phi_k: &Mat, v: &Mat, delta: f32) -> Mat {
-    assert_eq!(phi_q.cols, phi_k.cols);
-    assert_eq!(phi_k.rows, v.rows);
+pub fn linear_attention_noncausal<'a, 'b, 'c>(
+    phi_q: impl Into<MatView<'a>>,
+    phi_k: impl Into<MatView<'b>>,
+    v: impl Into<MatView<'c>>,
+    delta: f32,
+) -> Mat {
+    let (phi_q, phi_k, v) = (phi_q.into(), phi_k.into(), v.into());
+    let mut y = Mat::zeros(phi_q.rows(), v.cols());
+    linear_attention_noncausal_into(phi_q, phi_k, v, delta, y.view_mut());
+    y
+}
+
+/// [`linear_attention_noncausal`] writing through an output view.
+pub fn linear_attention_noncausal_into(
+    phi_q: MatView,
+    phi_k: MatView,
+    v: MatView,
+    delta: f32,
+    mut out: MatViewMut,
+) {
+    assert_eq!(phi_q.cols(), phi_k.cols());
+    assert_eq!(phi_k.rows(), v.rows());
     let s = matmul_at_b(phi_k, v); // m × d_v
     let z = colsum(phi_k);
-    let mut y = matmul(phi_q, &s); // L × d_v
-    for i in 0..y.rows {
+    matmul_into(phi_q, s.view(), out.reborrow()); // L × d_v
+    for i in 0..out.rows() {
         let den = dot(phi_q.row(i), &z) + delta;
         let inv = 1.0 / den;
-        for o in y.row_mut(i).iter_mut() {
+        for o in out.row_mut(i).iter_mut() {
             *o *= inv;
         }
     }
-    y
 }
 
 /// Causal linear attention via running prefix sums: after consuming token
 /// `i` the state is `(S_i, z_i)` and `Y_i = Ψ(q_i)ᵀ S_i / (Ψ(q_i)ᵀ z_i + δ)`.
-pub fn linear_attention_causal(phi_q: &Mat, phi_k: &Mat, v: &Mat, delta: f32) -> Mat {
-    assert_eq!(phi_q.cols, phi_k.cols);
-    assert_eq!(phi_k.rows, v.rows);
-    assert_eq!(phi_q.rows, phi_k.rows);
-    let mut state = StreamingState::new(phi_q.cols, v.cols);
-    let mut out = Mat::zeros(phi_q.rows, v.cols);
-    for i in 0..phi_q.rows {
+pub fn linear_attention_causal<'a, 'b, 'c>(
+    phi_q: impl Into<MatView<'a>>,
+    phi_k: impl Into<MatView<'b>>,
+    v: impl Into<MatView<'c>>,
+    delta: f32,
+) -> Mat {
+    let (phi_q, phi_k, v) = (phi_q.into(), phi_k.into(), v.into());
+    let mut y = Mat::zeros(phi_q.rows(), v.cols());
+    linear_attention_causal_into(phi_q, phi_k, v, delta, y.view_mut());
+    y
+}
+
+/// [`linear_attention_causal`] writing through an output view.
+pub fn linear_attention_causal_into(
+    phi_q: MatView,
+    phi_k: MatView,
+    v: MatView,
+    delta: f32,
+    mut out: MatViewMut,
+) {
+    assert_eq!(phi_q.cols(), phi_k.cols());
+    assert_eq!(phi_k.rows(), v.rows());
+    assert_eq!(phi_q.rows(), phi_k.rows());
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (phi_q.rows(), v.cols()),
+        "linear_attention_causal_into: bad output shape"
+    );
+    let mut state = StreamingState::new(phi_q.cols(), v.cols());
+    for i in 0..phi_q.rows() {
         state.append(phi_k.row(i), v.row(i));
         state.query_into(phi_q.row(i), delta, out.row_mut(i));
     }
-    out
 }
 
 /// Unified entry: dispatch on causality.
-pub fn linear_attention(phi_q: &Mat, phi_k: &Mat, v: &Mat, causal: bool, delta: f32) -> Mat {
+pub fn linear_attention<'a, 'b, 'c>(
+    phi_q: impl Into<MatView<'a>>,
+    phi_k: impl Into<MatView<'b>>,
+    v: impl Into<MatView<'c>>,
+    causal: bool,
+    delta: f32,
+) -> Mat {
     if causal {
         linear_attention_causal(phi_q, phi_k, v, delta)
     } else {
         linear_attention_noncausal(phi_q, phi_k, v, delta)
+    }
+}
+
+/// Unified `_into` entry: dispatch on causality.
+pub fn linear_attention_into(
+    phi_q: MatView,
+    phi_k: MatView,
+    v: MatView,
+    causal: bool,
+    delta: f32,
+    out: MatViewMut,
+) {
+    if causal {
+        linear_attention_causal_into(phi_q, phi_k, v, delta, out)
+    } else {
+        linear_attention_noncausal_into(phi_q, phi_k, v, delta, out)
     }
 }
 
@@ -136,16 +228,17 @@ impl StreamingState {
     }
 
     /// Absorb a whole chunk (prefill): `S += Ψ(K)ᵀV` via one contraction.
-    pub fn extend(&mut self, phi_k: &Mat, v: &Mat) {
-        assert_eq!(phi_k.cols, self.m);
-        assert_eq!(v.cols, self.d_v);
-        assert_eq!(phi_k.rows, v.rows);
+    pub fn extend<'a, 'b>(&mut self, phi_k: impl Into<MatView<'a>>, v: impl Into<MatView<'b>>) {
+        let (phi_k, v) = (phi_k.into(), v.into());
+        assert_eq!(phi_k.cols(), self.m);
+        assert_eq!(v.cols(), self.d_v);
+        assert_eq!(phi_k.rows(), v.rows());
         let delta_s = matmul_at_b(phi_k, v);
         for (a, b) in self.s.iter_mut().zip(delta_s.data.iter()) {
             *a += b;
         }
-        colsum_into(phi_k, 0, phi_k.rows, &mut self.z);
-        self.len += phi_k.rows;
+        colsum_into(phi_k, 0, phi_k.rows(), &mut self.z);
+        self.len += phi_k.rows();
     }
 
     /// Attend with one query-feature row, writing `d_v` outputs into `out`.
@@ -268,13 +361,11 @@ mod tests {
             s1.append(phi_k.row(i), v.row(i));
         }
         let mut s2 = StreamingState::new(5, 3);
-        // two chunks
-        let top = Mat::from_vec(10, 5, phi_k.data[..50].to_vec());
-        let bot = Mat::from_vec(14, 5, phi_k.data[50..].to_vec());
-        let vt = Mat::from_vec(10, 3, v.data[..30].to_vec());
-        let vb = Mat::from_vec(14, 3, v.data[30..].to_vec());
-        s2.extend(&top, &vt);
-        s2.extend(&bot, &vb);
+        // two chunks, taken as zero-copy row-range views
+        let (top, bot) = phi_k.view().split_rows(10);
+        let (vt, vb) = v.view().split_rows(10);
+        s2.extend(top, vt);
+        s2.extend(bot, vb);
         for (a, b) in s1.s.iter().zip(s2.s.iter()) {
             assert!((a - b).abs() < 1e-4);
         }
@@ -317,6 +408,33 @@ mod tests {
                 let x = y.get(r, c);
                 assert!(x >= lo - 1e-4 && x <= hi + 1e-4);
             }
+        }
+    }
+
+    #[test]
+    fn engines_into_strided_output_match_allocating_path() {
+        // Writing through a column block of a packed output must be
+        // bit-identical to the allocating entry points.
+        let phi_q = rand_mat(14, 6, 87).map(|x| x.abs());
+        let phi_k = rand_mat(14, 6, 88).map(|x| x.abs());
+        let v = rand_mat(14, 4, 89);
+        for causal in [false, true] {
+            let want = linear_attention(&phi_q, &phi_k, &v, causal, 1e-6);
+            let mut packed = Mat::zeros(14, 10);
+            let (_, rest) = packed.view_mut().split_cols_at(3);
+            let (block, _) = rest.split_cols_at(4);
+            linear_attention_into(phi_q.view(), phi_k.view(), v.view(), causal, 1e-6, block);
+            for r in 0..14 {
+                assert_eq!(&packed.row(r)[3..7], want.row(r), "causal={causal} row {r}");
+            }
+        }
+        let scores = rand_mat(14, 14, 90).map(|x| x.abs());
+        let want = quadratic_attention(&scores, &v, true, 1e-6);
+        let mut packed = Mat::zeros(14, 6);
+        let (block, _) = packed.view_mut().split_cols_at(4);
+        quadratic_attention_into(scores.view(), v.view(), true, 1e-6, block);
+        for r in 0..14 {
+            assert_eq!(&packed.row(r)[..4], want.row(r), "row {r}");
         }
     }
 

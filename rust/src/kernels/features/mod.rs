@@ -10,11 +10,16 @@
 pub mod poly;
 pub mod prf;
 
-use crate::math::linalg::Mat;
+use crate::math::linalg::{Mat, MatView};
 
 /// A map from token rows to feature rows. Implementations must be
 /// deterministic given their construction-time seed so that Q and K paths
 /// share identical randomness.
+///
+/// Inputs arrive as strided [`MatView`]s (ADR-002): a head's column block,
+/// a chunk's row range, or a single decode row wrapped via
+/// [`MatView::from_row`] all map without being copied into an owned `Mat`
+/// first. Feature *outputs* are owned (they are freshly computed data).
 pub trait FeatureMap: Send + Sync {
     /// Input (model/head) dimension.
     fn input_dim(&self) -> usize;
@@ -23,7 +28,7 @@ pub trait FeatureMap: Send + Sync {
     /// Map each row of `x` (shape `L × input_dim`) to features
     /// (`L × dim`). `pos0` is the absolute position of row 0 — only
     /// position-dependent maps (cosformer) read it.
-    fn map(&self, x: &Mat, pos0: usize) -> Mat;
+    fn map(&self, x: MatView, pos0: usize) -> Mat;
 }
 
 /// Dispatchable boxed feature map.

@@ -13,7 +13,7 @@
 
 use super::FeatureMap;
 use crate::math::fft::{circular_convolve, next_pow2};
-use crate::math::linalg::{dot, matmul, matmul_a_bt, Mat};
+use crate::math::linalg::{dot, matmul, matmul_a_bt, Mat, MatView};
 use crate::math::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -38,10 +38,10 @@ impl FeatureMap for PolyExact {
         self.d * self.d
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
-        assert_eq!(x.cols, self.d);
-        let mut out = Mat::zeros(x.rows, self.d * self.d);
-        for r in 0..x.rows {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
+        assert_eq!(x.cols(), self.d);
+        let mut out = Mat::zeros(x.rows(), self.d * self.d);
+        for r in 0..x.rows() {
             let row = x.row(r);
             let orow = out.row_mut(r);
             for i in 0..self.d {
@@ -107,7 +107,7 @@ impl FeatureMap for Anchor {
         self.anchors.rows
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         let mut proj = matmul_a_bt(x, &self.anchors); // L × P of xᵀaᵢ
         for v in proj.data.iter_mut() {
             *v = *v * *v * self.scale;
@@ -152,7 +152,7 @@ impl FeatureMap for Nystrom {
         self.anchors.rows
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         let mut kxa = matmul_a_bt(x, &self.anchors);
         for v in kxa.data.iter_mut() {
             *v = *v * *v;
@@ -194,7 +194,7 @@ impl FeatureMap for RandomMaclaurin {
         self.r.rows
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         let pr = matmul_a_bt(x, &self.r);
         let ps = matmul_a_bt(x, &self.s);
         let mut out = pr;
@@ -248,9 +248,9 @@ impl FeatureMap for TensorSketch {
         self.d_out
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
-        let mut out = Mat::zeros(x.rows, self.d_out);
-        for r in 0..x.rows {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.d_out);
+        for r in 0..x.rows() {
             let row = x.row(r);
             let c1 = self.count_sketch(row, &self.h1, &self.s1);
             let c2 = self.count_sketch(row, &self.h2, &self.s2);
@@ -286,8 +286,8 @@ pub fn build_poly(
 /// Estimated kernel value `⟨φ(x), φ(y)⟩` for two single rows (test helper
 /// and Fig. 13 probe).
 pub fn kernel_estimate(map: &dyn FeatureMap, x: &[f32], y: &[f32]) -> f32 {
-    let mx = map.map(&Mat::from_vec(1, x.len(), x.to_vec()), 0);
-    let my = map.map(&Mat::from_vec(1, y.len(), y.to_vec()), 0);
+    let mx = map.map(MatView::from_row(x), 0);
+    let my = map.map(MatView::from_row(y), 0);
     dot(mx.row(0), my.row(0))
 }
 
@@ -421,7 +421,7 @@ mod tests {
         let a = Anchor::new(8, 6, 123);
         let b = Anchor::new(8, 6, 123);
         let x = Mat::from_vec(1, 6, vec![0.1, -0.2, 0.3, 0.4, -0.5, 0.6]);
-        assert_eq!(a.map(&x, 0).data, b.map(&x, 0).data);
+        assert_eq!(a.map(x.view(), 0).data, b.map(x.view(), 0).data);
     }
 
     #[test]
@@ -439,7 +439,7 @@ mod tests {
             assert_eq!(m.dim(), want_dim, "{method:?}");
             assert_eq!(m.input_dim(), d);
             let x = Mat::randn(3, d, &mut Rng::new(9)).normalized_rows();
-            let f = m.map(&x, 0);
+            let f = m.map(x.view(), 0);
             assert_eq!((f.rows, f.cols), (3, want_dim));
         }
     }

@@ -11,7 +11,7 @@
 //!   (Qin et al. 2022).
 
 use super::FeatureMap;
-use crate::math::linalg::{matmul_a_bt, Mat};
+use crate::math::linalg::{matmul_a_bt, Mat, MatView};
 use crate::math::rng::Rng;
 
 /// Positive random features for the spherical exponential kernel at scale
@@ -46,7 +46,7 @@ impl FeatureMap for Prf {
         self.omega.rows
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         let sqrt2s = (2.0 * self.s).sqrt() as f32;
         let s = self.s as f32;
         let mut proj = matmul_a_bt(x, &self.omega); // L × D of ωᵢᵀu
@@ -83,10 +83,10 @@ impl FeatureMap for FavorSoftmax {
         self.omega.rows
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         // softmax attention applies exp(qᵀk/√d); fold the 1/√d into the
         // inputs as q/d^{1/4}, k/d^{1/4} — standard Performer practice.
-        let root = (x.cols as f32).powf(0.25);
+        let root = (x.cols() as f32).powf(0.25);
         let scaled = x.map(|v| v / root);
         let mut proj = matmul_a_bt(&scaled, &self.omega);
         for r in 0..proj.rows {
@@ -125,7 +125,7 @@ impl FeatureMap for FavorRelu {
         self.omega.rows
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         let mut proj = matmul_a_bt(x, &self.omega);
         for v in proj.data.iter_mut() {
             *v = v.max(0.0) * self.scale;
@@ -164,7 +164,7 @@ impl FeatureMap for EluPlusOne {
         self.d
     }
 
-    fn map(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map(&self, x: MatView, _pos0: usize) -> Mat {
         x.map(elu_plus_one)
     }
 }
@@ -196,10 +196,10 @@ impl FeatureMap for CosformerMap {
         2 * self.d
     }
 
-    fn map(&self, x: &Mat, pos0: usize) -> Mat {
-        let mut out = Mat::zeros(x.rows, 2 * self.d);
+    fn map(&self, x: MatView, pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows(), 2 * self.d);
         let m = self.horizon as f32;
-        for r in 0..x.rows {
+        for r in 0..x.rows() {
             let i = (pos0 + r).min(self.horizon - 1) as f32;
             let theta = std::f32::consts::FRAC_PI_2 * i / m;
             let (sin_t, cos_t) = theta.sin_cos();
@@ -231,7 +231,7 @@ mod tests {
         let mut prf_rng = Rng::new(52);
         let prf = Prf::new(32, 8, 0.7, &mut prf_rng);
         let x = Mat::randn(10, 8, &mut rng).normalized_rows();
-        let f = prf.map(&x, 0);
+        let f = prf.map(x.view(), 0);
         assert!(f.data.iter().all(|&v| v > 0.0 && v.is_finite()));
     }
 
@@ -249,8 +249,8 @@ mod tests {
         for seed in 0..400 {
             let mut r = Rng::new(seed + 1000);
             let prf = Prf::new(16, d, s, &mut r);
-            let fq = prf.map(&Mat::from_vec(1, d, q.clone()), 0);
-            let fk = prf.map(&Mat::from_vec(1, d, k.clone()), 0);
+            let fq = prf.map(MatView::from_row(&q), 0);
+            let fk = prf.map(MatView::from_row(&k), 0);
             w.push(dot(fq.row(0), fk.row(0)) as f64);
         }
         let se = w.std() / (w.n as f64).sqrt();
@@ -273,8 +273,8 @@ mod tests {
         let mut w = Welford::default();
         for seed in 0..600 {
             let m = FavorSoftmax::new(32, d, seed);
-            let fq = m.map(&Mat::from_vec(1, d, q.clone()), 0);
-            let fk = m.map(&Mat::from_vec(1, d, k.clone()), 0);
+            let fq = m.map(MatView::from_row(&q), 0);
+            let fk = m.map(MatView::from_row(&k), 0);
             w.push(dot(fq.row(0), fk.row(0)) as f64);
         }
         let se = w.std() / (w.n as f64).sqrt();
@@ -285,7 +285,7 @@ mod tests {
     fn elu_plus_one_positive_and_smooth() {
         let m = EluPlusOne::new(3);
         let x = Mat::from_vec(2, 3, vec![-5.0, 0.0, 5.0, -0.1, 0.1, 100.0]);
-        let f = m.map(&x, 0);
+        let f = m.map(x.view(), 0);
         assert!(f.data.iter().all(|&v| v > 0.0));
         assert!((f.get(0, 1) - 1.0).abs() < 1e-6); // elu(0)+1 = 1
         assert!((f.get(0, 2) - 6.0).abs() < 1e-6); // x+1 for x>0
@@ -302,8 +302,8 @@ mod tests {
         let k = Mat::from_vec(1, d, vec![0.2, 0.9, -0.4, 0.6]);
         let i = 10;
         let j = 3;
-        let fq = m.map(&q, i);
-        let fk = m.map(&k, j);
+        let fq = m.map(q.view(), i);
+        let fk = m.map(k.view(), j);
         let got = dot(fq.row(0), fk.row(0));
         let relu_dot: f32 = q
             .row(0)
@@ -320,7 +320,7 @@ mod tests {
     fn cosformer_clamps_beyond_horizon() {
         let m = CosformerMap::new(2, 8);
         let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
-        let f_at = |p: usize| m.map(&x, p).data.clone();
+        let f_at = |p: usize| m.map(x.view(), p).data.clone();
         assert_eq!(f_at(7), f_at(20)); // positions past M−1 clamp
     }
 
@@ -328,7 +328,7 @@ mod tests {
     fn favor_relu_nonnegative() {
         let m = FavorRelu::new(16, 8, 3);
         let x = Mat::randn(5, 8, &mut Rng::new(55));
-        let f = m.map(&x, 0);
+        let f = m.map(x.view(), 0);
         assert!(f.data.iter().all(|&v| v >= 0.0));
         assert_eq!(f.cols, 16);
     }

@@ -6,10 +6,10 @@
 //!
 //! Every mechanism is served through one session-oriented interface:
 //!
-//! * [`build`] — factory: a [`Mechanism`] spec plus a head dimension yields
-//!   a boxed [`AttentionBackend`].
-//! * [`AttentionBackend::forward`] — one-shot attention over a full
-//!   sequence (benches, offline eval).
+//! * [`build`] / [`build_with_window`] — factory: a [`Mechanism`] spec plus
+//!   a head dimension yields a boxed [`AttentionBackend`].
+//! * [`AttentionBackend::forward`] / [`AttentionBackend::forward_into`] —
+//!   one-shot attention over a full sequence (benches, offline eval).
 //! * [`AttentionBackend::new_state`] / [`AttentionBackend::prefill`] /
 //!   [`AttentionBackend::decode`] — the serving session: an opaque
 //!   [`AttnState`] absorbs key/value chunks and answers queries
@@ -21,6 +21,22 @@
 //! * [`MultiHeadAttention`] — per-head backends over packed `L × d_model`
 //!   tensors with std-thread fan-out across heads.
 //!
+//! # Views (ADR-002)
+//!
+//! The whole surface is strided-view based: matrix inputs are
+//! [`MatView`]s, single-token decode rows are plain `&[f32]`, and
+//! [`AttentionBackend::forward_into`] writes through a [`MatViewMut`].
+//! Consequences the callers rely on:
+//!
+//! * [`MultiHeadAttention::forward`] slices head column-blocks as views and
+//!   each head writes its packed output block in place — no per-head
+//!   gather/scatter copies;
+//! * the decode path wraps caller buffers via
+//!   [`MatView::from_row`](crate::math::linalg::MatView::from_row) — no
+//!   per-token `to_vec`;
+//! * the serving worker maps features over per-chunk sub-views of the
+//!   arrival buffers at their true sequence positions.
+//!
 //! The concrete backends are sealed (private to this module): consumers
 //! program against the trait and never match on mechanism internals.
 
@@ -30,7 +46,7 @@ pub mod features;
 pub mod slay;
 pub mod yat;
 
-use crate::math::linalg::{dot, Mat};
+use crate::math::linalg::{dot, Mat, MatView, MatViewMut};
 use config::Mechanism;
 use engine::StreamingState;
 use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
@@ -66,10 +82,17 @@ pub trait AttentionBackend: Send + Sync {
     /// Absorb a chunk of (Q, K, V) rows into `state`, returning the causal
     /// attention outputs for the chunk's query rows. Positions continue
     /// from the tokens the state has already absorbed.
-    fn prefill(&self, state: &mut AttnState, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat>;
+    fn prefill(
+        &self,
+        state: &mut AttnState,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+    ) -> anyhow::Result<Mat>;
 
     /// Single-token decode step: absorb one (k, v) row and write the
-    /// attention output for `q` into `out` (`d_v` floats).
+    /// attention output for `q` into `out` (`d_v` floats). The row slices
+    /// are borrowed as-is — no copies on the per-token path.
     fn decode(
         &self,
         state: &mut AttnState,
@@ -79,50 +102,87 @@ pub trait AttentionBackend: Send + Sync {
         out: &mut [f32],
     ) -> anyhow::Result<()>;
 
-    /// Full attention forward: `Y = attend(Q, K, V)` for one head.
-    /// `pos0` is the absolute position of row 0 (matters for cosformer and
-    /// for streaming continuation).
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, pos0: usize) -> Mat;
+    /// Full attention forward writing into `out` (`q.rows() × v.cols()`,
+    /// possibly a strided block of a packed tensor): `out = attend(Q, K, V)`
+    /// for one head. `pos0` is the absolute position of row 0 (matters for
+    /// cosformer and for streaming continuation).
+    fn forward_into(
+        &self,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        causal: bool,
+        pos0: usize,
+        out: MatViewMut,
+    );
+
+    /// Allocating convenience over [`AttentionBackend::forward_into`].
+    fn forward(&self, q: MatView, k: MatView, v: MatView, causal: bool, pos0: usize) -> Mat {
+        let mut y = Mat::zeros(q.rows(), v.cols());
+        self.forward_into(q, k, v, causal, pos0, y.view_mut());
+        y
+    }
 
     /// Nonnegative score matrix for the quadratic path (test/diagnostic
     /// accessor; the linear path never materializes it).
-    fn score_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat>;
+    fn score_matrix(&self, q: MatView, k: MatView) -> Option<Mat>;
 
     /// Denominator vector `Ψ(Q)(Ψ(K)ᵀ1)` (linear) or row sums (quadratic)
     /// — the quantity whose positivity Fig. 7/8 studies.
-    fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32>;
+    fn denominators(&self, q: MatView, k: MatView, causal: bool) -> Vec<f32>;
 
-    /// Serving batching hook: map concatenated Q/K rows of a whole batch
-    /// to feature rows in one pass (one matmul for many chunks). Returns
+    /// Serving batching hook: map Q/K rows (a chunk view straight off the
+    /// arrival buffer) to feature rows. `pos0` is the sequence position of
+    /// row 0 — the worker passes the session's true `state.len()`. Returns
     /// `None` for mechanisms without a feature decomposition; callers then
-    /// fall back to per-chunk [`AttentionBackend::prefill`].
-    fn map_qk(&self, q: &Mat, k: &Mat, pos0: usize) -> Option<(Mat, Mat)>;
+    /// fall back to [`AttentionBackend::prefill`].
+    fn map_qk(&self, q: MatView, k: MatView, pos0: usize) -> Option<(Mat, Mat)>;
 
-    /// Companion to [`AttentionBackend::map_qk`]: stream pre-mapped
-    /// feature rows `offset..offset + v.rows` of `phi_q`/`phi_k` through
-    /// `state`, returning outputs for the chunk.
+    /// Companion to [`AttentionBackend::map_qk`]: stream pre-mapped feature
+    /// rows through `state`, returning outputs for the chunk. Callers
+    /// select sub-ranges with row-block views instead of an offset
+    /// parameter.
     fn prefill_mapped(
         &self,
         state: &mut AttnState,
-        phi_q: &Mat,
-        phi_k: &Mat,
-        v: &Mat,
-        offset: usize,
+        phi_q: MatView,
+        phi_k: MatView,
+        v: MatView,
     ) -> anyhow::Result<Mat>;
 }
 
 /// Build an operator for head dimension `d`. `horizon` bounds the
-/// positional reweighting of cosformer and the rolling KV window of
-/// quadratic sessions (max supported context; `0` selects
+/// positional reweighting of cosformer and (absent a dedicated window) the
+/// rolling KV window of quadratic sessions (`0` selects
 /// [`DEFAULT_QUADRATIC_WINDOW`] for the window).
 pub fn build(
     mech: &Mechanism,
     d: usize,
     horizon: usize,
 ) -> anyhow::Result<Box<dyn AttentionBackend>> {
+    build_with_window(mech, d, horizon, 0)
+}
+
+/// [`build`] with the quadratic KV-window bound decoupled from `horizon`:
+/// `window` caps the rolling KV window (and therefore the bytes admission
+/// control must budget per quadratic sequence), while `horizon` keeps its
+/// positional meaning for cosformer. `window = 0` falls back to `horizon`,
+/// then to [`DEFAULT_QUADRATIC_WINDOW`].
+pub fn build_with_window(
+    mech: &Mechanism,
+    d: usize,
+    horizon: usize,
+    window: usize,
+) -> anyhow::Result<Box<dyn AttentionBackend>> {
     Ok(match mech {
         Mechanism::Standard | Mechanism::Yat { .. } | Mechanism::YatSpherical { .. } => {
-            let window = if horizon == 0 { DEFAULT_QUADRATIC_WINDOW } else { horizon };
+            let window = if window != 0 {
+                window
+            } else if horizon != 0 {
+                horizon
+            } else {
+                DEFAULT_QUADRATIC_WINDOW
+            };
             Box::new(QuadraticBackend { mech: mech.clone(), delta: 1e-6, d, window })
         }
         Mechanism::Slay(cfg) => {
@@ -302,11 +362,17 @@ impl AttentionBackend for LinearBackend {
         AttnState { inner: StateInner::Linear(StreamingState::new(self.maps.dim(), d_v)) }
     }
 
-    fn prefill(&self, state: &mut AttnState, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat> {
+    fn prefill(
+        &self,
+        state: &mut AttnState,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+    ) -> anyhow::Result<Mat> {
         let pos0 = state.len();
         let phi_q = self.maps.map_q(q, pos0);
         let phi_k = self.maps.map_k(k, pos0);
-        self.prefill_mapped(state, &phi_q, &phi_k, v, 0)
+        self.prefill_mapped(state, phi_q.view(), phi_k.view(), v)
     }
 
     fn decode(
@@ -318,8 +384,8 @@ impl AttentionBackend for LinearBackend {
         out: &mut [f32],
     ) -> anyhow::Result<()> {
         let pos0 = state.len();
-        let phi_q = self.maps.map_q(&Mat::from_vec(1, q.len(), q.to_vec()), pos0);
-        let phi_k = self.maps.map_k(&Mat::from_vec(1, k.len(), k.to_vec()), pos0);
+        let phi_q = self.maps.map_q(MatView::from_row(q), pos0);
+        let phi_k = self.maps.map_k(MatView::from_row(k), pos0);
         let st = state.linear_mut()?;
         anyhow::ensure!(
             v.len() == st.d_v && out.len() == st.d_v,
@@ -333,17 +399,25 @@ impl AttentionBackend for LinearBackend {
         Ok(())
     }
 
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, pos0: usize) -> Mat {
+    fn forward_into(
+        &self,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        causal: bool,
+        pos0: usize,
+        out: MatViewMut,
+    ) {
         let phi_q = self.maps.map_q(q, pos0);
         let phi_k = self.maps.map_k(k, pos0);
-        engine::linear_attention(&phi_q, &phi_k, v, causal, self.delta)
+        engine::linear_attention_into(phi_q.view(), phi_k.view(), v, causal, self.delta, out);
     }
 
-    fn score_matrix(&self, _q: &Mat, _k: &Mat) -> Option<Mat> {
+    fn score_matrix(&self, _q: MatView, _k: MatView) -> Option<Mat> {
         None
     }
 
-    fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32> {
+    fn denominators(&self, q: MatView, k: MatView, causal: bool) -> Vec<f32> {
         let phi_q = self.maps.map_q(q, 0);
         let phi_k = self.maps.map_k(k, 0);
         if causal {
@@ -360,38 +434,37 @@ impl AttentionBackend for LinearBackend {
         }
     }
 
-    fn map_qk(&self, q: &Mat, k: &Mat, pos0: usize) -> Option<(Mat, Mat)> {
+    fn map_qk(&self, q: MatView, k: MatView, pos0: usize) -> Option<(Mat, Mat)> {
         Some((self.maps.map_q(q, pos0), self.maps.map_k(k, pos0)))
     }
 
     fn prefill_mapped(
         &self,
         state: &mut AttnState,
-        phi_q: &Mat,
-        phi_k: &Mat,
-        v: &Mat,
-        offset: usize,
+        phi_q: MatView,
+        phi_k: MatView,
+        v: MatView,
     ) -> anyhow::Result<Mat> {
         anyhow::ensure!(
-            offset + v.rows <= phi_q.rows && phi_q.rows == phi_k.rows,
-            "prefill_mapped: feature rows {}..{} out of range (have {})",
-            offset,
-            offset + v.rows,
-            phi_q.rows
+            phi_q.rows() == v.rows() && phi_q.rows() == phi_k.rows(),
+            "prefill_mapped: row mismatch phi_q={} phi_k={} v={}",
+            phi_q.rows(),
+            phi_k.rows(),
+            v.rows()
         );
         let st = state.linear_mut()?;
         anyhow::ensure!(
-            phi_q.cols == st.m && v.cols == st.d_v,
+            phi_q.cols() == st.m && v.cols() == st.d_v,
             "prefill_mapped: state shape (m={}, d_v={}) vs features m={}, values d_v={}",
             st.m,
             st.d_v,
-            phi_q.cols,
-            v.cols
+            phi_q.cols(),
+            v.cols()
         );
-        let mut y = Mat::zeros(v.rows, v.cols);
-        for r in 0..v.rows {
-            st.append(phi_k.row(offset + r), v.row(r));
-            st.query_into(phi_q.row(offset + r), self.delta, y.row_mut(r));
+        let mut y = Mat::zeros(v.rows(), v.cols());
+        for r in 0..v.rows() {
+            st.append(phi_k.row(r), v.row(r));
+            st.query_into(phi_q.row(r), self.delta, y.row_mut(r));
         }
         Ok(y)
     }
@@ -473,25 +546,31 @@ impl AttentionBackend for QuadraticBackend {
         AttnState { inner: StateInner::Window(KvWindow::new(self.d, d_v, self.window)) }
     }
 
-    fn prefill(&self, state: &mut AttnState, q: &Mat, k: &Mat, v: &Mat) -> anyhow::Result<Mat> {
+    fn prefill(
+        &self,
+        state: &mut AttnState,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+    ) -> anyhow::Result<Mat> {
         anyhow::ensure!(
-            q.rows == k.rows && k.rows == v.rows,
+            q.rows() == k.rows() && k.rows() == v.rows(),
             "prefill: row mismatch q={} k={} v={}",
-            q.rows,
-            k.rows,
-            v.rows
+            q.rows(),
+            k.rows(),
+            v.rows()
         );
         let win = state.window_mut()?;
         anyhow::ensure!(
-            q.cols == win.d_k && v.cols == win.d_v,
+            q.cols() == win.d_k && v.cols() == win.d_v,
             "prefill: state shape (d_k={}, d_v={}) vs q={}, v={}",
             win.d_k,
             win.d_v,
-            q.cols,
-            v.cols
+            q.cols(),
+            v.cols()
         );
-        let mut y = Mat::zeros(v.rows, v.cols);
-        for r in 0..v.rows {
+        let mut y = Mat::zeros(v.rows(), v.cols());
+        for r in 0..v.rows() {
             self.step(win, q.row(r), k.row(r), v.row(r), y.row_mut(r));
         }
         Ok(y)
@@ -518,7 +597,15 @@ impl AttentionBackend for QuadraticBackend {
         Ok(())
     }
 
-    fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool, _pos0: usize) -> Mat {
+    fn forward_into(
+        &self,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        causal: bool,
+        _pos0: usize,
+        out: MatViewMut,
+    ) {
         // Causal softmax stabilizes each row by its visible-prefix max —
         // the same quantity the streaming session computes — so one-shot
         // and prefill/decode outputs coincide even when a future logit
@@ -527,10 +614,10 @@ impl AttentionBackend for QuadraticBackend {
             (Mechanism::Standard, true) => yat::softmax_scores_causal(q, k),
             _ => self.score_matrix(q, k).expect("quadratic scores"),
         };
-        engine::quadratic_attention(&scores, v, causal, self.delta)
+        engine::quadratic_attention_into(scores.view(), v, causal, self.delta, out);
     }
 
-    fn score_matrix(&self, q: &Mat, k: &Mat) -> Option<Mat> {
+    fn score_matrix(&self, q: MatView, k: MatView) -> Option<Mat> {
         Some(match &self.mech {
             Mechanism::Standard => yat::softmax_scores(q, k),
             Mechanism::Yat { eps } => yat::yat_scores(q, k, *eps as f32),
@@ -539,7 +626,7 @@ impl AttentionBackend for QuadraticBackend {
         })
     }
 
-    fn denominators(&self, q: &Mat, k: &Mat, causal: bool) -> Vec<f32> {
+    fn denominators(&self, q: MatView, k: MatView, causal: bool) -> Vec<f32> {
         // Same stabilizer the causal forward/streaming paths divide by.
         let s = match (&self.mech, causal) {
             (Mechanism::Standard, true) => yat::softmax_scores_causal(q, k),
@@ -553,17 +640,16 @@ impl AttentionBackend for QuadraticBackend {
             .collect()
     }
 
-    fn map_qk(&self, _q: &Mat, _k: &Mat, _pos0: usize) -> Option<(Mat, Mat)> {
+    fn map_qk(&self, _q: MatView, _k: MatView, _pos0: usize) -> Option<(Mat, Mat)> {
         None
     }
 
     fn prefill_mapped(
         &self,
         _state: &mut AttnState,
-        _phi_q: &Mat,
-        _phi_k: &Mat,
-        _v: &Mat,
-        _offset: usize,
+        _phi_q: MatView,
+        _phi_k: MatView,
+        _v: MatView,
     ) -> anyhow::Result<Mat> {
         anyhow::bail!("quadratic mechanisms have no feature decomposition (map_qk is None)")
     }
@@ -574,6 +660,12 @@ impl AttentionBackend for QuadraticBackend {
 /// head computations out across std threads, and reassembles the packed
 /// output. Used by the isolation benches (Fig. 2 setup: d_model 256,
 /// 8 heads).
+///
+/// Head slicing is zero-copy in both directions (ADR-002): each head reads
+/// its Q/K/V column blocks as strided [`MatView`]s of the packed inputs and
+/// writes its output block in place through
+/// [`AttentionBackend::forward_into`] — no gather before fan-out, no
+/// reassembly pass after join.
 pub struct MultiHeadAttention {
     heads: Vec<Box<dyn AttentionBackend>>,
     d_model: usize,
@@ -617,50 +709,43 @@ impl MultiHeadAttention {
     }
 
     /// Forward over packed `L × d_model` Q/K/V: each head attends over its
-    /// column block on its own thread, outputs are packed back in column
-    /// order.
-    pub fn forward(&self, q: &Mat, k: &Mat, v: &Mat, causal: bool) -> anyhow::Result<Mat> {
+    /// column-block views on its own thread and writes its column block of
+    /// the packed output in place.
+    pub fn forward<'a>(
+        &self,
+        q: impl Into<MatView<'a>>,
+        k: impl Into<MatView<'a>>,
+        v: impl Into<MatView<'a>>,
+        causal: bool,
+    ) -> anyhow::Result<Mat> {
+        let (q, k, v) = (q.into(), k.into(), v.into());
         anyhow::ensure!(
-            q.cols == self.d_model && k.cols == self.d_model && v.cols == self.d_model,
+            q.cols() == self.d_model && k.cols() == self.d_model && v.cols() == self.d_model,
             "packed width must be d_model={} (got q={}, k={}, v={})",
             self.d_model,
-            q.cols,
-            k.cols,
-            v.cols
+            q.cols(),
+            k.cols(),
+            v.cols()
         );
         anyhow::ensure!(
-            q.rows == k.rows && k.rows == v.rows,
+            q.rows() == k.rows() && k.rows() == v.rows(),
             "row mismatch q={} k={} v={}",
-            q.rows,
-            k.rows,
-            v.rows
+            q.rows(),
+            k.rows(),
+            v.rows()
         );
         let dh = self.d_head;
-        let outputs: Vec<Mat> = std::thread::scope(|s| {
-            let handles: Vec<_> = self
-                .heads
-                .iter()
-                .enumerate()
-                .map(|(h, backend)| {
-                    s.spawn(move || {
-                        let block = |m: &Mat| {
-                            Mat::from_fn(m.rows, dh, |r, c| m.get(r, h * dh + c))
-                        };
-                        backend.forward(&block(q), &block(k), &block(v), causal, 0)
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|hd| hd.join().expect("head thread panicked"))
-                .collect()
-        });
-        let mut out = Mat::zeros(q.rows, self.d_model);
-        for (h, yh) in outputs.iter().enumerate() {
-            for r in 0..out.rows {
-                out.row_mut(r)[h * dh..(h + 1) * dh].copy_from_slice(yh.row(r));
+        let mut out = Mat::zeros(q.rows(), self.d_model);
+        std::thread::scope(|s| {
+            let mut rest = out.view_mut();
+            for (h, backend) in self.heads.iter().enumerate() {
+                let (block, tail) = rest.split_cols_at(dh);
+                rest = tail;
+                let (lo, hi) = (h * dh, (h + 1) * dh);
+                let (qh, kh, vh) = (q.col_block(lo, hi), k.col_block(lo, hi), v.col_block(lo, hi));
+                s.spawn(move || backend.forward_into(qh, kh, vh, causal, 0, block));
             }
-        }
+        });
         Ok(out)
     }
 }
@@ -698,7 +783,7 @@ mod tests {
         for mech in all_mechanisms() {
             let op = build(&mech, 16, 64).unwrap();
             for causal in [false, true] {
-                let y = op.forward(&q, &k, &v, causal, 0);
+                let y = op.forward(q.view(), k.view(), v.view(), causal, 0);
                 assert_eq!((y.rows, y.cols), (24, 16), "{}", mech.name());
                 assert!(
                     y.data.iter().all(|x| x.is_finite()),
@@ -718,11 +803,28 @@ mod tests {
     }
 
     #[test]
+    fn windowed_build_decouples_window_from_horizon() {
+        // The dedicated window knob sizes the rolling KV window (and its
+        // admission budget) independently of the cosformer horizon.
+        let narrow = build_with_window(&Mechanism::Standard, 16, 131_072, 128).unwrap();
+        let st = narrow.new_state(8);
+        assert_eq!(st.capacity_bytes(), 128 * (16 + 8) * 4);
+        // window = 0 falls back to horizon, then to the default
+        let fallback = build_with_window(&Mechanism::Standard, 16, 256, 0).unwrap();
+        assert_eq!(fallback.new_state(8).capacity_bytes(), 256 * (16 + 8) * 4);
+        let default = build_with_window(&Mechanism::Standard, 16, 0, 0).unwrap();
+        assert_eq!(
+            default.new_state(8).capacity_bytes(),
+            DEFAULT_QUADRATIC_WINDOW * (16 + 8) * 4
+        );
+    }
+
+    #[test]
     fn softmax_forward_equals_classic_softmax_attention() {
         // exp-scores + rowsum normalization ≡ softmax(QKᵀ/√d)V exactly.
         let (q, k, v) = qkv(10, 8, 92);
         let op = build(&Mechanism::Standard, 8, 0).unwrap();
-        let y = op.forward(&q, &k, &v, false, 0);
+        let y = op.forward(q.view(), k.view(), v.view(), false, 0);
         let mut scores = crate::math::linalg::matmul_a_bt(&q, &k);
         scores.scale(1.0 / (8f32).sqrt());
         crate::math::linalg::softmax_rows(&mut scores);
@@ -757,14 +859,14 @@ mod tests {
         let (q, k, v) = clustered_qkv(48, 16, 93);
         let exact = build(&Mechanism::YatSpherical { eps: 1e-3 }, 16, 0)
             .unwrap()
-            .forward(&q, &k, &v, false, 0);
+            .forward(q.view(), k.view(), v.view(), false, 0);
         let mean_err = |d_prf: usize| {
             let mut errs = Vec::new();
             for seed in 0..4 {
                 let cfg = SlayConfig { n_poly: 16, d_prf, r_nodes: 2, seed, ..Default::default() };
                 let y = build(&Mechanism::Slay(cfg), 16, 0)
                     .unwrap()
-                    .forward(&q, &k, &v, false, 0);
+                    .forward(q.view(), k.view(), v.view(), false, 0);
                 errs.push(crate::math::stats::rel_l2(&y.data, &exact.data));
             }
             crate::math::stats::mean(&errs)
@@ -786,7 +888,7 @@ mod tests {
         };
         let y = build(&Mechanism::Slay(cfg), 16, 0)
             .unwrap()
-            .forward(&q, &k, &v, false, 0);
+            .forward(q.view(), k.view(), v.view(), false, 0);
         let err_exact_poly = crate::math::stats::rel_l2(&y.data, &exact.data);
         assert!(err_exact_poly < 0.6, "exact-poly rel-l2 {err_exact_poly} (paper band ≈ 0.49)");
     }
@@ -801,7 +903,7 @@ mod tests {
             Mechanism::YatSpherical { eps: 1e-3 },
         ] {
             let op = build(&mech, 16, 64).unwrap();
-            let dens = op.denominators(&q, &k, false);
+            let dens = op.denominators(q.view(), k.view(), false);
             assert!(
                 dens.iter().all(|&d| d >= -1e-6),
                 "{}: min den {:?}",
@@ -826,7 +928,7 @@ mod tests {
                 ..Default::default()
             };
             let op = build(&Mechanism::Slay(cfg), 16, 0).unwrap();
-            if op.denominators(&q, &k, false).iter().any(|&d| d < 0.0) {
+            if op.denominators(q.view(), k.view(), false).iter().any(|&d| d < 0.0) {
                 saw_negative = true;
                 break;
             }
@@ -839,8 +941,8 @@ mod tests {
         let (q, k, _) = qkv(12, 8, 98);
         for mech in [Mechanism::Slay(SlayConfig::default()), Mechanism::Standard] {
             let op = build(&mech, 8, 32).unwrap();
-            let causal = op.denominators(&q, &k, true);
-            let full = op.denominators(&q, &k, false);
+            let causal = op.denominators(q.view(), k.view(), true);
+            let full = op.denominators(q.view(), k.view(), false);
             assert_eq!(causal.len(), 12);
             let (a, b) = (causal[11], full[11]);
             assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "{}: {a} vs {b}", mech.name());
@@ -853,16 +955,21 @@ mod tests {
         let mha = MultiHeadAttention::new(&Mechanism::EluLinear, 32, 4, 0).unwrap();
         let y = mha.forward(&q, &k, &v, true).unwrap();
         assert_eq!((y.rows, y.cols), (12, 32));
-        // head 0 output must equal single-head forward on the slice
+        // head 0 output must equal single-head forward on the column-block
+        // view — and be bit-identical to the same data sliced into an owned
+        // contiguous Mat (the ADR-002 contract).
         let op = build(&Mechanism::EluLinear, 8, 0).unwrap();
-        let slice = |m: &Mat| {
-            let mut s = Mat::zeros(m.rows, 8);
-            for r in 0..m.rows {
-                s.row_mut(r).copy_from_slice(&m.row(r)[..8]);
-            }
-            s
-        };
-        let y0 = op.forward(&slice(&q), &slice(&k), &slice(&v), true, 0);
+        let y0 = op.forward(
+            q.view().col_block(0, 8),
+            k.view().col_block(0, 8),
+            v.view().col_block(0, 8),
+            true,
+            0,
+        );
+        let slice = |m: &Mat| m.view().col_block(0, 8).to_mat();
+        let y0_owned =
+            op.forward(slice(&q).view(), slice(&k).view(), slice(&v).view(), true, 0);
+        assert_eq!(y0.data, y0_owned.data, "view vs owned forward must be bit-identical");
         for r in 0..12 {
             for c in 0..8 {
                 assert!((y.get(r, c) - y0.get(r, c)).abs() < 1e-6);
@@ -885,13 +992,13 @@ mod tests {
         let (q, k, mut v) = qkv(10, 8, 97);
         for mech in all_mechanisms() {
             let op = build(&mech, 8, 32).unwrap();
-            let y1 = op.forward(&q, &k, &v, true, 0);
+            let y1 = op.forward(q.view(), k.view(), v.view(), true, 0);
             // perturb the last value row
             for c in 0..8 {
                 let x = v.get(9, c) + 10.0;
                 v.set(9, c, x);
             }
-            let y2 = op.forward(&q, &k, &v, true, 0);
+            let y2 = op.forward(q.view(), k.view(), v.view(), true, 0);
             for i in 0..9 {
                 for c in 0..8 {
                     assert!(
@@ -914,19 +1021,22 @@ mod tests {
         // The core serving contract: streaming a sequence through an
         // AttnState (prefill chunk + per-token decode) reproduces the
         // one-shot causal forward for EVERY mechanism — linear streaming
-        // states and windowed-quadratic sessions alike.
+        // states and windowed-quadratic sessions alike. Prefill chunks are
+        // zero-copy row-block views of the full buffers.
         let l = 14;
         let (q, k, v) = qkv(l, 8, 90);
         for mech in all_mechanisms() {
             let op = build(&mech, 8, 64).unwrap();
-            let want = op.forward(&q, &k, &v, true, 0);
+            let want = op.forward(q.view(), k.view(), v.view(), true, 0);
             let mut state = op.new_state(8);
             let split = 9;
-            let take = |m: &Mat, a: usize, b: usize| {
-                Mat::from_fn(b - a, m.cols, |r, c| m.get(a + r, c))
-            };
             let head = op
-                .prefill(&mut state, &take(&q, 0, split), &take(&k, 0, split), &take(&v, 0, split))
+                .prefill(
+                    &mut state,
+                    q.view().row_block(0, split),
+                    k.view().row_block(0, split),
+                    v.view().row_block(0, split),
+                )
                 .unwrap();
             let mut got = head.data.clone();
             let mut out = vec![0.0f32; 8];
@@ -960,10 +1070,13 @@ mod tests {
         assert!(state.bytes() <= cap_bytes, "window grew past its bound");
         // sliding semantics: with cap 4, the output at token 31 attends the
         // last 4 tokens only — recomputing on that suffix matches.
-        let take = |m: &Mat, a: usize, b: usize| {
-            Mat::from_fn(b - a, m.cols, |r, c| m.get(a + r, c))
-        };
-        let suffix = op.forward(&take(&q, 28, 32), &take(&k, 28, 32), &take(&v, 28, 32), true, 0);
+        let suffix = op.forward(
+            q.view().row_block(28, 32),
+            k.view().row_block(28, 32),
+            v.view().row_block(28, 32),
+            true,
+            0,
+        );
         for c in 0..8 {
             let want = suffix.get(3, c);
             assert!((out[c] - want).abs() < 1e-4 * (1.0 + want.abs()), "{} vs {want}", out[c]);
@@ -976,8 +1089,8 @@ mod tests {
         let quad = build(&Mechanism::Standard, 8, 0).unwrap();
         let (q, k, v) = qkv(4, 8, 88);
         let mut wrong = quad.new_state(8);
-        assert!(lin.prefill(&mut wrong, &q, &k, &v).is_err());
+        assert!(lin.prefill(&mut wrong, q.view(), k.view(), v.view()).is_err());
         let mut wrong2 = lin.new_state(8);
-        assert!(quad.prefill(&mut wrong2, &q, &k, &v).is_err());
+        assert!(quad.prefill(&mut wrong2, q.view(), k.view(), v.view()).is_err());
     }
 }

@@ -15,18 +15,21 @@ use crate::kernels::features::poly::build_poly;
 use crate::kernels::features::prf::Prf;
 use crate::kernels::features::{kron_row, FeatureMap};
 use crate::math::fft::circular_convolve;
-use crate::math::linalg::{dot, Mat};
+use crate::math::linalg::{dot, Mat, MatView};
 use crate::math::quadrature::GaussLaguerre;
 use crate::math::rng::Rng;
 
 /// Feature maps that may differ between the query and key roles.
+///
+/// Inputs are strided [`MatView`]s (ADR-002): head column-blocks, chunk
+/// row-ranges and single decode rows flow through without a gather copy.
 pub trait QKFeatures: Send + Sync {
     /// Final feature dimension m.
     fn dim(&self) -> usize;
     /// Query features; `pos0` is the absolute position of row 0.
-    fn map_q(&self, x: &Mat, pos0: usize) -> Mat;
+    fn map_q(&self, x: MatView, pos0: usize) -> Mat;
     /// Key features.
-    fn map_k(&self, x: &Mat, pos0: usize) -> Mat;
+    fn map_k(&self, x: MatView, pos0: usize) -> Mat;
     /// Whether the induced score estimates are guaranteed nonnegative.
     fn positive(&self) -> bool;
 }
@@ -42,11 +45,11 @@ impl QKFeatures for SymMap {
         self.inner.dim()
     }
 
-    fn map_q(&self, x: &Mat, pos0: usize) -> Mat {
+    fn map_q(&self, x: MatView, pos0: usize) -> Mat {
         self.inner.map(x, pos0)
     }
 
-    fn map_k(&self, x: &Mat, pos0: usize) -> Mat {
+    fn map_k(&self, x: MatView, pos0: usize) -> Mat {
         self.inner.map(x, pos0)
     }
 
@@ -156,18 +159,18 @@ impl SlayFeatures {
     /// Scalar kernel estimate `⟨Ψ(q̂), Ψ(k̂)⟩` for single rows — Fig. 13's
     /// probe. Inputs are normalized internally.
     pub fn kernel_estimate(&self, q: &[f32], k: &[f32]) -> f32 {
-        let qm = self.map_q(&Mat::from_vec(1, q.len(), q.to_vec()), 0);
-        let km = self.map_k(&Mat::from_vec(1, k.len(), k.to_vec()), 0);
+        let qm = self.map_q(MatView::from_row(q), 0);
+        let km = self.map_k(MatView::from_row(k), 0);
         dot(qm.row(0), km.row(0))
     }
 
     /// Shared forward for the symmetric fusions.
-    fn map_shared(&self, x: &Mat) -> Mat {
+    fn map_shared(&self, x: MatView) -> Mat {
         let xn = x.normalized_rows();
-        let poly_f = self.poly.map(&xn, 0); // L × D_p
-        let mut out = Mat::zeros(x.rows, self.dim);
+        let poly_f = self.poly.map(xn.view(), 0); // L × D_p
+        let mut out = Mat::zeros(x.rows(), self.dim);
         for (ni, node) in self.nodes.iter().enumerate() {
-            let mut prf_f = node.prf.map(&xn, 0); // L × D
+            let mut prf_f = node.prf.map(xn.view(), 0); // L × D
             let off = ni * self.per_node;
             match self.cfg.fusion {
                 Fusion::Explicit => {
@@ -176,13 +179,13 @@ impl SlayFeatures {
                     for v in prf_f.data.iter_mut() {
                         *v *= node.sqrt_w;
                     }
-                    for r in 0..x.rows {
+                    for r in 0..x.rows() {
                         let orow = &mut out.row_mut(r)[off..off + self.per_node];
                         kron_row(poly_f.row(r), prf_f.row(r), orow);
                     }
                 }
                 Fusion::Hadamard => {
-                    for r in 0..x.rows {
+                    for r in 0..x.rows() {
                         let orow = &mut out.row_mut(r)[off..off + self.per_node];
                         for (c, o) in orow.iter_mut().enumerate() {
                             *o = poly_f.get(r, c) * prf_f.get(r, c) * node.sqrt_w;
@@ -191,7 +194,7 @@ impl SlayFeatures {
                 }
                 Fusion::Sketch { .. } => {
                     let fuser = node.sketch.as_ref().unwrap();
-                    for r in 0..x.rows {
+                    for r in 0..x.rows() {
                         let orow = &mut out.row_mut(r)[off..off + self.per_node];
                         fuser.fuse(poly_f.row(r), prf_f.row(r), orow, node.sqrt_w);
                     }
@@ -206,15 +209,15 @@ impl SlayFeatures {
     /// Query:  `[√w_r·(C/2)·φ_r(q̂) …, 1,  q̂]`
     /// Key:    `[√w_r·(C/2)·φ_r(k̂) …, −C/4, −k̂/2]`
     /// so that `Ψ(q)ᵀΨ(k) = (C²/4)Σ w_r φφ − C/4 − q̂ᵀk̂/2`.
-    fn map_laplace(&self, x: &Mat, is_query: bool) -> Mat {
+    fn map_laplace(&self, x: MatView, is_query: bool) -> Mat {
         let xn = x.normalized_rows();
         let c = self.cfg.c() as f32;
-        let mut out = Mat::zeros(x.rows, self.dim);
+        let mut out = Mat::zeros(x.rows(), self.dim);
         for (ni, node) in self.nodes.iter().enumerate() {
-            let prf_f = node.prf.map(&xn, 0);
+            let prf_f = node.prf.map(xn.view(), 0);
             let off = ni * self.per_node;
             let scale = node.sqrt_w * c / 2.0;
-            for r in 0..x.rows {
+            for r in 0..x.rows() {
                 let orow = &mut out.row_mut(r)[off..off + self.per_node];
                 for (c_i, o) in orow.iter_mut().enumerate() {
                     *o = prf_f.get(r, c_i) * scale;
@@ -222,7 +225,7 @@ impl SlayFeatures {
             }
         }
         let base = self.per_node * self.cfg.r_nodes;
-        for r in 0..x.rows {
+        for r in 0..x.rows() {
             if is_query {
                 out.set(r, base, 1.0);
                 for c_i in 0..self.d {
@@ -244,14 +247,14 @@ impl QKFeatures for SlayFeatures {
         self.dim
     }
 
-    fn map_q(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map_q(&self, x: MatView, _pos0: usize) -> Mat {
         match self.cfg.fusion {
             Fusion::LaplaceOnly => self.map_laplace(x, true),
             _ => self.map_shared(x),
         }
     }
 
-    fn map_k(&self, x: &Mat, _pos0: usize) -> Mat {
+    fn map_k(&self, x: MatView, _pos0: usize) -> Mat {
         match self.cfg.fusion {
             Fusion::LaplaceOnly => self.map_laplace(x, false),
             _ => self.map_shared(x),
@@ -297,8 +300,8 @@ mod tests {
             };
             assert_eq!(f.dim(), want, "{fusion:?}");
             let x = Mat::randn(5, d, &mut Rng::new(61));
-            assert_eq!(f.map_q(&x, 0).cols, f.dim());
-            assert_eq!(f.map_k(&x, 0).cols, f.dim());
+            assert_eq!(f.map_q(x.view(), 0).cols, f.dim());
+            assert_eq!(f.map_k(x.view(), 0).cols, f.dim());
         }
         // Hadamard requires matching dims
         let cfg = SlayConfig {
@@ -444,7 +447,7 @@ mod tests {
         let f1 = SlayFeatures::new(cfg.clone(), d).unwrap();
         let f2 = SlayFeatures::new(cfg, d).unwrap();
         let x = Mat::randn(3, d, &mut Rng::new(67));
-        assert_eq!(f1.map_q(&x, 0).data, f2.map_q(&x, 0).data);
+        assert_eq!(f1.map_q(x.view(), 0).data, f2.map_q(x.view(), 0).data);
     }
 
     #[test]
@@ -455,8 +458,8 @@ mod tests {
         let f = SlayFeatures::new(SlayConfig::default(), d).unwrap();
         let x = Mat::randn(4, d, &mut Rng::new(68));
         let x_scaled = x.map(|v| v * 7.5);
-        let a = f.map_q(&x, 0);
-        let b = f.map_q(&x_scaled, 0);
+        let a = f.map_q(x.view(), 0);
+        let b = f.map_q(x_scaled.view(), 0);
         for (p, q) in a.data.iter().zip(b.data.iter()) {
             assert!((p - q).abs() < 1e-4 * (1.0 + p.abs()));
         }

@@ -2,7 +2,7 @@
 //! score matrices, and the closed-form derivative used by Fig. 6 and the
 //! gradient-stability tests (Prop. 4).
 
-use crate::math::linalg::{dot, sq_dist, Mat};
+use crate::math::linalg::{dot, sq_dist, Mat, MatView};
 
 /// Exact E-product on raw (unnormalized) vectors (Eq. 1):
 /// `E(q,k) = (qᵀk)² / (‖q−k‖² + ε)`.
@@ -35,14 +35,16 @@ pub fn e_sph_bound(eps: f32) -> f32 {
 }
 
 /// Score matrix of the exact Yat attention on raw rows: `S[i][j] = E(q_i, k_j)`.
-pub fn yat_scores(q: &Mat, k: &Mat, eps: f32) -> Mat {
-    assert_eq!(q.cols, k.cols);
-    let mut s = Mat::zeros(q.rows, k.rows);
-    for i in 0..q.rows {
+/// Accepts owned matrices (`&Mat`) or strided views.
+pub fn yat_scores<'a, 'b>(q: impl Into<MatView<'a>>, k: impl Into<MatView<'b>>, eps: f32) -> Mat {
+    let (q, k) = (q.into(), k.into());
+    assert_eq!(q.cols(), k.cols());
+    let mut s = Mat::zeros(q.rows(), k.rows());
+    for i in 0..q.rows() {
         let qi = q.row(i);
         let row = s.row_mut(i);
-        for j in 0..k.rows {
-            row[j] = e_product(qi, k.row(j), eps);
+        for (j, rj) in row.iter_mut().enumerate() {
+            *rj = e_product(qi, k.row(j), eps);
         }
     }
     s
@@ -50,9 +52,13 @@ pub fn yat_scores(q: &Mat, k: &Mat, eps: f32) -> Mat {
 
 /// Score matrix of the spherical Yat attention. Inputs are normalized
 /// internally (Eq. 2) — pass raw Q/K.
-pub fn yat_spherical_scores(q: &Mat, k: &Mat, eps: f32) -> Mat {
-    let qn = q.normalized_rows();
-    let kn = k.normalized_rows();
+pub fn yat_spherical_scores<'a, 'b>(
+    q: impl Into<MatView<'a>>,
+    k: impl Into<MatView<'b>>,
+    eps: f32,
+) -> Mat {
+    let qn = q.into().normalized_rows();
+    let kn = k.into().normalized_rows();
     let mut s = crate::math::linalg::matmul_a_bt(&qn, &kn); // x = q̂ᵀk̂
     for x in s.data.iter_mut() {
         *x = e_sph(*x, eps);
@@ -62,8 +68,9 @@ pub fn yat_spherical_scores(q: &Mat, k: &Mat, eps: f32) -> Mat {
 
 /// Softmax attention scores `exp(qᵀk/√d)` (row-normalization happens in the
 /// engine; exp(·)/rowsum ≡ softmax exactly).
-pub fn softmax_scores(q: &Mat, k: &Mat) -> Mat {
-    let scale = 1.0 / (q.cols as f32).sqrt();
+pub fn softmax_scores<'a, 'b>(q: impl Into<MatView<'a>>, k: impl Into<MatView<'b>>) -> Mat {
+    let q = q.into();
+    let scale = 1.0 / (q.cols() as f32).sqrt();
     let mut s = crate::math::linalg::matmul_a_bt(q, k);
     // stabilized per-row: subtract row max before exp (cancels in the ratio)
     for i in 0..s.rows {
@@ -83,8 +90,12 @@ pub fn softmax_scores(q: &Mat, k: &Mat) -> Mat {
 /// streaming session computes, so one-shot and prefill/decode paths agree.
 /// Entries `j > i` are still exponentiated (against the prefix max) but the
 /// causal engine never reads them.
-pub fn softmax_scores_causal(q: &Mat, k: &Mat) -> Mat {
-    let scale = 1.0 / (q.cols as f32).sqrt();
+pub fn softmax_scores_causal<'a, 'b>(
+    q: impl Into<MatView<'a>>,
+    k: impl Into<MatView<'b>>,
+) -> Mat {
+    let q = q.into();
+    let scale = 1.0 / (q.cols() as f32).sqrt();
     let mut s = crate::math::linalg::matmul_a_bt(q, k);
     for i in 0..s.rows {
         let row = s.row_mut(i);

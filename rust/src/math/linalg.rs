@@ -6,6 +6,32 @@
 //! normalization, softmax and reductions. Everything is `f32` storage with
 //! `f32` accumulation in the blocked kernels (matching the JAX side) except
 //! where noted.
+//!
+//! # Views (ADR-002)
+//!
+//! [`Mat`] owns its buffer; [`MatView`]/[`MatViewMut`] are borrowed,
+//! strided `(ptr, rows, cols, row_stride)` windows over any row-major
+//! buffer. They are the argument type of every matrix-consuming kernel in
+//! this crate, so head column-blocks, chunk row-ranges and single decode
+//! rows flow through the math layer without being gathered into fresh
+//! `Mat`s first. The layout contract:
+//!
+//! * row `r` occupies `ptr[r·row_stride .. r·row_stride + cols]`;
+//!   `row_stride ≥ cols` (checked at construction, the gap bytes are never
+//!   read or written);
+//! * a view never outlives the buffer it borrows (enforced by lifetimes);
+//! * [`MatViewMut`]s are exclusive over their *elements* — disjoint
+//!   column/row blocks of one buffer may be written concurrently (that is
+//!   how the multi-head fan-out packs head outputs in place), but two
+//!   mutable views of overlapping elements must never coexist. Safe code
+//!   can only obtain disjoint views ([`MatViewMut::split_rows_at`] /
+//!   [`MatViewMut::split_cols_at`]), which is what keeps the raw-pointer
+//!   plumbing sound;
+//! * kernels touch views only through `row()`/`row_mut()`, so a strided
+//!   view and an owned contiguous copy of the same data take bit-identical
+//!   code paths (property-tested in `tests/properties.rs`).
+
+use std::marker::PhantomData;
 
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
@@ -46,6 +72,18 @@ impl Mat {
     /// Random N(0,1) entries.
     pub fn randn(rows: usize, cols: usize, rng: &mut crate::math::rng::Rng) -> Self {
         Mat { rows, cols, data: rng.normal_vec(rows * cols) }
+    }
+
+    /// Borrowed view of the whole matrix (contiguous, `row_stride == cols`).
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView::new(&self.data, self.rows, self.cols)
+    }
+
+    /// Mutable view of the whole matrix.
+    #[inline]
+    pub fn view_mut(&mut self) -> MatViewMut<'_> {
+        MatViewMut::new(&mut self.data, self.rows, self.cols)
     }
 
     #[inline]
@@ -149,6 +187,315 @@ impl Mat {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Borrowed strided views
+// ---------------------------------------------------------------------------
+
+/// Immutable strided view: `rows × cols` window with `row_stride` floats
+/// between row starts. `Copy`, pointer-sized cheap, `Send + Sync` — the
+/// universal read-only matrix argument (see the module docs for the layout
+/// contract).
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    ptr: *const f32,
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+    _marker: PhantomData<&'a [f32]>,
+}
+
+// SAFETY: a MatView is semantically a shared `&[f32]` borrow; f32 data can
+// be read from any thread.
+unsafe impl Send for MatView<'_> {}
+unsafe impl Sync for MatView<'_> {}
+
+impl<'a> MatView<'a> {
+    /// Contiguous view over `data` (`row_stride == cols`); the slice length
+    /// must equal `rows * cols`.
+    pub fn new(data: &'a [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatView::new: shape/data mismatch");
+        MatView { ptr: data.as_ptr(), rows, cols, row_stride: cols, _marker: PhantomData }
+    }
+
+    /// Strided view over `data`. Panics when `row_stride < cols` or when
+    /// `data` is too short to cover the last row.
+    pub fn strided(data: &'a [f32], rows: usize, cols: usize, row_stride: usize) -> Self {
+        assert!(
+            row_stride >= cols,
+            "MatView::strided: row_stride {row_stride} < cols {cols}"
+        );
+        let need = if rows == 0 { 0 } else { (rows - 1) * row_stride + cols };
+        assert!(
+            data.len() >= need,
+            "MatView::strided: buffer of {} floats cannot hold {rows}x{cols} (stride {row_stride}, needs {need})",
+            data.len()
+        );
+        MatView { ptr: data.as_ptr(), rows, cols, row_stride, _marker: PhantomData }
+    }
+
+    /// 1-row view of a token slice — the zero-copy decode-path wrapper.
+    #[inline]
+    pub fn from_row(row: &'a [f32]) -> Self {
+        MatView::new(row, 1, row.len())
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    #[inline]
+    pub fn is_contiguous(&self) -> bool {
+        self.row_stride == self.cols
+    }
+
+    /// Row `r` as a slice. The returned borrow lives as long as the
+    /// underlying buffer, not just this view value.
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        assert!(r < self.rows, "row {r} out of {}", self.rows);
+        // SAFETY: construction guaranteed `ptr[r*stride .. r*stride+cols]`
+        // is in-bounds of the borrowed buffer for all r < rows.
+        unsafe { std::slice::from_raw_parts(self.ptr.add(r * self.row_stride), self.cols) }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        assert!(c < self.cols, "col {c} out of {}", self.cols);
+        self.row(r)[c]
+    }
+
+    /// Columns `[lo, hi)` of every row — the per-head block of a packed
+    /// `L × d_model` tensor. Zero-copy: same buffer, same `row_stride`.
+    pub fn col_block(&self, lo: usize, hi: usize) -> MatView<'a> {
+        assert!(
+            lo <= hi && hi <= self.cols,
+            "col_block: {lo}..{hi} out of 0..{}",
+            self.cols
+        );
+        MatView {
+            ptr: self.ptr.wrapping_add(lo),
+            rows: self.rows,
+            cols: hi - lo,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Rows `[lo, hi)` — a chunk of a longer sequence.
+    pub fn row_block(&self, lo: usize, hi: usize) -> MatView<'a> {
+        assert!(
+            lo <= hi && hi <= self.rows,
+            "row_block: {lo}..{hi} out of 0..{}",
+            self.rows
+        );
+        MatView {
+            ptr: self.ptr.wrapping_add(lo * self.row_stride),
+            rows: hi - lo,
+            cols: self.cols,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Split into `[0, at)` and `[at, rows)` row ranges.
+    pub fn split_rows(&self, at: usize) -> (MatView<'a>, MatView<'a>) {
+        (self.row_block(0, at), self.row_block(at, self.rows))
+    }
+
+    /// Materialize an owned contiguous copy.
+    pub fn to_mat(&self) -> Mat {
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            data.extend_from_slice(self.row(r));
+        }
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise map into an owned matrix.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Mat {
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        for r in 0..self.rows {
+            data.extend(self.row(r).iter().map(|&x| f(x)));
+        }
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Owned row-normalized copy (unit-sphere projection).
+    pub fn normalized_rows(&self) -> Mat {
+        let mut m = self.to_mat();
+        m.normalize_rows();
+        m
+    }
+}
+
+impl<'a> From<&'a Mat> for MatView<'a> {
+    #[inline]
+    fn from(m: &'a Mat) -> Self {
+        m.view()
+    }
+}
+
+/// Mutable strided view — the write-side counterpart of [`MatView`].
+/// Not `Copy`; obtained from [`Mat::view_mut`] and narrowed by the
+/// consuming `split_*` methods, so safe code always holds element-disjoint
+/// mutable views (the property the thread fan-outs rely on).
+#[derive(Debug)]
+pub struct MatViewMut<'a> {
+    ptr: *mut f32,
+    rows: usize,
+    cols: usize,
+    row_stride: usize,
+    _marker: PhantomData<&'a mut [f32]>,
+}
+
+// SAFETY: a MatViewMut is an exclusive borrow of its element set; moving it
+// to another thread moves that exclusivity with it (f32: Send).
+unsafe impl Send for MatViewMut<'_> {}
+
+impl<'a> MatViewMut<'a> {
+    /// Contiguous mutable view over `data` (`row_stride == cols`).
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "MatViewMut::new: shape/data mismatch");
+        MatViewMut { ptr: data.as_mut_ptr(), rows, cols, row_stride: cols, _marker: PhantomData }
+    }
+
+    /// Strided mutable view over `data`; same bounds rules as
+    /// [`MatView::strided`].
+    pub fn strided(data: &'a mut [f32], rows: usize, cols: usize, row_stride: usize) -> Self {
+        assert!(
+            row_stride >= cols,
+            "MatViewMut::strided: row_stride {row_stride} < cols {cols}"
+        );
+        let need = if rows == 0 { 0 } else { (rows - 1) * row_stride + cols };
+        assert!(
+            data.len() >= need,
+            "MatViewMut::strided: buffer of {} floats cannot hold {rows}x{cols} (stride {row_stride}, needs {need})",
+            data.len()
+        );
+        MatViewMut { ptr: data.as_mut_ptr(), rows, cols, row_stride, _marker: PhantomData }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn row_stride(&self) -> usize {
+        self.row_stride
+    }
+
+    /// Mutable row `r`. Borrows `self` exclusively, so only one row slice
+    /// is live at a time through this method.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        assert!(r < self.rows, "row {r} out of {}", self.rows);
+        // SAFETY: in-bounds by construction; exclusivity via &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(r * self.row_stride), self.cols) }
+    }
+
+    /// Read-only alias of this view (no narrowing, same region).
+    #[inline]
+    pub fn as_view(&self) -> MatView<'_> {
+        MatView {
+            ptr: self.ptr,
+            rows: self.rows,
+            cols: self.cols,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Fresh mutable view of the same region with a shorter lifetime —
+    /// lets a caller pass `self` to an `_into` kernel and keep using it.
+    #[inline]
+    pub fn reborrow(&mut self) -> MatViewMut<'_> {
+        MatViewMut {
+            ptr: self.ptr,
+            rows: self.rows,
+            cols: self.cols,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        }
+    }
+
+    /// Split into the first `at` rows and the rest (element-disjoint, both
+    /// usable concurrently).
+    pub fn split_rows_at(self, at: usize) -> (MatViewMut<'a>, MatViewMut<'a>) {
+        assert!(at <= self.rows, "split_rows_at: {at} out of 0..={}", self.rows);
+        let top = MatViewMut {
+            ptr: self.ptr,
+            rows: at,
+            cols: self.cols,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        };
+        let bottom = MatViewMut {
+            ptr: self.ptr.wrapping_add(at * self.row_stride),
+            rows: self.rows - at,
+            cols: self.cols,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        };
+        (top, bottom)
+    }
+
+    /// Split into the first `at` columns and the rest (element-disjoint —
+    /// the multi-head output packer hands one block per head thread).
+    pub fn split_cols_at(self, at: usize) -> (MatViewMut<'a>, MatViewMut<'a>) {
+        assert!(at <= self.cols, "split_cols_at: {at} out of 0..={}", self.cols);
+        let left = MatViewMut {
+            ptr: self.ptr,
+            rows: self.rows,
+            cols: at,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        };
+        let right = MatViewMut {
+            ptr: self.ptr.wrapping_add(at),
+            rows: self.rows,
+            cols: self.cols - at,
+            row_stride: self.row_stride,
+            _marker: PhantomData,
+        };
+        (left, right)
+    }
+
+    /// Zero every element.
+    pub fn fill_zero(&mut self) {
+        for r in 0..self.rows {
+            self.row_mut(r).fill(0.0);
+        }
+    }
+}
+
+impl<'a> From<&'a mut Mat> for MatViewMut<'a> {
+    #[inline]
+    fn from(m: &'a mut Mat) -> Self {
+        m.view_mut()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Kernels
+// ---------------------------------------------------------------------------
+
 /// Dot product of two slices (f32 accumulate, unrolled by the compiler).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
@@ -213,51 +560,69 @@ pub fn num_threads() -> usize {
 
 /// `C = A · B` — cache-blocked (i-k-j loop order so the inner loop is an
 /// axpy over contiguous rows of B), threaded over row stripes of A when the
-/// problem is big enough.
-pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.rows, "matmul: inner dim mismatch {}x{} · {}x{}", a.rows, a.cols, b.rows, b.cols);
-    let mut c = Mat::zeros(a.rows, b.cols);
-    let flops = a.rows * a.cols * b.cols;
-    let nt = num_threads();
-    if flops < 64 * 64 * 64 || nt == 1 || a.rows < 2 {
-        matmul_stripe(a, b, &mut c.data, 0, a.rows);
-        return c;
-    }
-    let stripe = a.rows.div_ceil(nt);
-    let bc = b.cols;
-    std::thread::scope(|s| {
-        let mut rest: &mut [f32] = &mut c.data;
-        let mut r0 = 0;
-        let mut handles = Vec::new();
-        while r0 < a.rows {
-            let take = stripe.min(a.rows - r0);
-            let (chunk, tail) = rest.split_at_mut(take * bc);
-            rest = tail;
-            let start = r0;
-            handles.push(s.spawn(move || matmul_stripe(a, b, chunk, start, take)));
-            r0 += take;
-        }
-        for h in handles {
-            h.join().expect("matmul worker panicked");
-        }
-    });
+/// problem is big enough. Accepts owned matrices (`&Mat`) or strided views.
+pub fn matmul<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    let mut c = Mat::zeros(a.rows(), b.cols());
+    matmul_into(a, b, c.view_mut());
     c
 }
 
-/// Compute rows `[start, start+n)` of `A·B` into `out` (n × b.cols).
-fn matmul_stripe(a: &Mat, b: &Mat, out: &mut [f32], start: usize, n: usize) {
-    let k_dim = a.cols;
-    let j_dim = b.cols;
+/// `out = A · B` writing through a (possibly strided) mutable view — the
+/// zero-copy output path (e.g. one head's column block of a packed tensor).
+pub fn matmul_into(a: MatView, b: MatView, out: MatViewMut) {
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul: inner dim mismatch {}x{} · {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.rows(), b.cols()),
+        "matmul_into: out is {}x{}, need {}x{}",
+        out.rows(),
+        out.cols(),
+        a.rows(),
+        b.cols()
+    );
+    let flops = a.rows() * a.cols() * b.cols();
+    let nt = num_threads();
+    if flops < 64 * 64 * 64 || nt == 1 || a.rows() < 2 {
+        matmul_stripe(a, b, out);
+        return;
+    }
+    let stripe = a.rows().div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut r0 = 0;
+        while r0 < a.rows() {
+            let take = stripe.min(a.rows() - r0);
+            let (chunk, tail) = rest.split_rows_at(take);
+            rest = tail;
+            let a_block = a.row_block(r0, r0 + take);
+            s.spawn(move || matmul_stripe(a_block, b, chunk));
+            r0 += take;
+        }
+    });
+}
+
+/// One row stripe of `A·B` into `out` (same row count as `a`).
+fn matmul_stripe(a: MatView, b: MatView, mut out: MatViewMut) {
+    let k_dim = a.cols();
     const KB: usize = 64; // k-blocking keeps the B panel in L1/L2
+    out.fill_zero();
     for kb in (0..k_dim).step_by(KB) {
         let k_end = (kb + KB).min(k_dim);
-        for i in 0..n {
-            let a_row = a.row(start + i);
-            let c_row = &mut out[i * j_dim..(i + 1) * j_dim];
-            for k in kb..k_end {
-                let aik = a_row[k];
+        for i in 0..a.rows() {
+            let a_row = a.row(i);
+            let c_row = out.row_mut(i);
+            for (k, &aik) in a_row.iter().enumerate().take(k_end).skip(kb) {
                 if aik != 0.0 {
-                    axpy(aik, &b.data[k * j_dim..(k + 1) * j_dim], c_row);
+                    axpy(aik, b.row(k), c_row);
                 }
             }
         }
@@ -265,16 +630,16 @@ fn matmul_stripe(a: &Mat, b: &Mat, out: &mut [f32], start: usize, n: usize) {
 }
 
 /// `C = Aᵀ · B` without materializing the transpose (A: k×m, B: k×n → m×n).
-pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.rows, b.rows, "matmul_at_b: row mismatch");
-    let m = a.cols;
-    let n = b.cols;
+pub fn matmul_at_b<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b: row mismatch");
+    let m = a.cols();
+    let n = b.cols();
     let mut c = Mat::zeros(m, n);
-    for k in 0..a.rows {
+    for k in 0..a.rows() {
         let a_row = a.row(k);
         let b_row = b.row(k);
-        for i in 0..m {
-            let aik = a_row[i];
+        for (i, &aik) in a_row.iter().enumerate() {
             if aik != 0.0 {
                 axpy(aik, b_row, &mut c.data[i * n..(i + 1) * n]);
             }
@@ -284,27 +649,29 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
 }
 
 /// `C = A · Bᵀ` (A: m×k, B: n×k → m×n) — rows of both operands are
-/// contiguous, so the inner kernel is a dot product.
-pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols, b.cols, "matmul_a_bt: col mismatch");
-    let mut c = Mat::zeros(a.rows, b.rows);
+/// contiguous-per-row even under striding, so the inner kernel is a dot
+/// product.
+pub fn matmul_a_bt<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
+    let (a, b) = (a.into(), b.into());
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: col mismatch");
+    let mut c = Mat::zeros(a.rows(), b.rows());
     let nt = num_threads();
-    if a.rows * b.rows * a.cols < 64 * 64 * 64 || nt == 1 || a.rows < 2 {
-        for i in 0..a.rows {
+    let bn = b.rows();
+    if a.rows() * b.rows() * a.cols() < 64 * 64 * 64 || nt == 1 || a.rows() < 2 {
+        for i in 0..a.rows() {
             let ar = a.row(i);
-            for j in 0..b.rows {
-                c.data[i * b.rows + j] = dot(ar, b.row(j));
+            for j in 0..bn {
+                c.data[i * bn + j] = dot(ar, b.row(j));
             }
         }
         return c;
     }
-    let stripe = a.rows.div_ceil(nt);
-    let bn = b.rows;
+    let stripe = a.rows().div_ceil(nt);
     std::thread::scope(|s| {
         let mut rest: &mut [f32] = &mut c.data;
         let mut r0 = 0;
-        while r0 < a.rows {
-            let take = stripe.min(a.rows - r0);
+        while r0 < a.rows() {
+            let take = stripe.min(a.rows() - r0);
             let (chunk, tail) = rest.split_at_mut(take * bn);
             rest = tail;
             let start = r0;
@@ -322,9 +689,11 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
-/// Row-wise softmax in place (numerically stabilized).
-pub fn softmax_rows(m: &mut Mat) {
-    for r in 0..m.rows {
+/// Row-wise softmax in place (numerically stabilized). Accepts `&mut Mat`
+/// or any strided mutable view.
+pub fn softmax_rows<'a>(m: impl Into<MatViewMut<'a>>) {
+    let mut m = m.into();
+    for r in 0..m.rows() {
         let row = m.row_mut(r);
         let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
         let mut sum = 0.0f32;
@@ -341,8 +710,9 @@ pub fn softmax_rows(m: &mut Mat) {
 
 /// Row-wise normalization by row sums with stabilizer δ (kernel
 /// normalization of Eq. 11 — *not* a softmax).
-pub fn normalize_rows_by_sum(m: &mut Mat, delta: f32) {
-    for r in 0..m.rows {
+pub fn normalize_rows_by_sum<'a>(m: impl Into<MatViewMut<'a>>, delta: f32) {
+    let mut m = m.into();
+    for r in 0..m.rows() {
         let row = m.row_mut(r);
         let sum: f32 = row.iter().sum();
         let inv = 1.0 / (sum + delta);
@@ -475,5 +845,158 @@ mod tests {
         let mut m = Mat::from_vec(1, 2, vec![0.0, 0.0]);
         normalize_rows_by_sum(&mut m, 1e-6);
         assert!(m.data.iter().all(|x| x.is_finite()));
+    }
+
+    // ---- view semantics ---------------------------------------------------
+
+    #[test]
+    fn view_blocks_read_the_right_elements() {
+        let m = Mat::from_fn(4, 6, |r, c| (r * 10 + c) as f32);
+        let v = m.view();
+        assert!(v.is_contiguous());
+        let block = v.col_block(2, 5);
+        assert_eq!((block.rows(), block.cols(), block.row_stride()), (4, 3, 6));
+        assert!(!block.is_contiguous());
+        for r in 0..4 {
+            assert_eq!(block.row(r), &m.row(r)[2..5]);
+        }
+        let rows = v.row_block(1, 3);
+        assert_eq!(rows.row(0), m.row(1));
+        assert_eq!(rows.row(1), m.row(2));
+        let (top, bottom) = v.split_rows(2);
+        assert_eq!((top.rows(), bottom.rows()), (2, 2));
+        assert_eq!(bottom.row(0), m.row(2));
+        // composition: col block of a row block
+        let inner = rows.col_block(1, 4);
+        assert_eq!(inner.row(1), &m.row(2)[1..4]);
+        assert_eq!(inner.to_mat().row(1), &m.row(2)[1..4]);
+    }
+
+    #[test]
+    fn strided_matmul_bit_identical_to_owned() {
+        let mut rng = Rng::new(17);
+        // big packed buffers; operands are interior column blocks
+        let packed_a = Mat::randn(70, 48, &mut rng);
+        let packed_b = Mat::randn(70, 48, &mut rng);
+        let packed_c = Mat::randn(31, 48, &mut rng);
+        let a = packed_a.view().col_block(8, 25); // 70 x 17, strided
+        let b = packed_b.view().col_block(5, 28); // 70 x 23, strided
+        let c = packed_c.view().col_block(8, 25); // 31 x 17, strided
+        let (ao, bo, co) = (a.to_mat(), b.to_mat(), c.to_mat());
+        // A·Bᵀ (shared col dim): 70x17 · (31x17)ᵀ
+        assert_eq!(matmul_a_bt(a, c).data, matmul_a_bt(&ao, &co).data);
+        // Aᵀ·B (shared row dim): (70x17)ᵀ · 70x23
+        assert_eq!(matmul_at_b(a, b).data, matmul_at_b(&ao, &bo).data);
+        // plain A·B: 70x17 · 17x31
+        let ct = co.transpose();
+        assert_eq!(matmul(a, &ct).data, matmul(&ao, &ct).data);
+    }
+
+    #[test]
+    fn matmul_into_strided_out_matches_owned() {
+        let mut rng = Rng::new(18);
+        let a = Mat::randn(9, 5, &mut rng);
+        let b = Mat::randn(5, 4, &mut rng);
+        let want = matmul(&a, &b);
+        // write into a column block of a wider packed output
+        let mut packed = Mat::from_fn(9, 10, |_, _| 7.0);
+        let (left, rest) = packed.view_mut().split_cols_at(3);
+        let (mid, right) = rest.split_cols_at(4);
+        drop((left, right));
+        matmul_into(a.view(), b.view(), mid);
+        for r in 0..9 {
+            assert_eq!(&packed.row(r)[3..7], want.row(r));
+            // untouched columns keep their sentinel
+            assert!(packed.row(r)[..3].iter().all(|&x| x == 7.0));
+            assert!(packed.row(r)[7..].iter().all(|&x| x == 7.0));
+        }
+    }
+
+    #[test]
+    fn split_cols_write_disjointly_across_threads() {
+        let mut out = Mat::zeros(8, 6);
+        let (mut left, mut right) = out.view_mut().split_cols_at(2);
+        std::thread::scope(|s| {
+            s.spawn(move || {
+                for r in 0..left.rows() {
+                    left.row_mut(r).fill(1.0);
+                }
+            });
+            s.spawn(move || {
+                for r in 0..right.rows() {
+                    right.row_mut(r).fill(2.0);
+                }
+            });
+        });
+        for r in 0..8 {
+            assert_eq!(out.row(r)[..2], [1.0, 1.0]);
+            assert!(out.row(r)[2..].iter().all(|&x| x == 2.0));
+        }
+    }
+
+    #[test]
+    fn softmax_and_normalize_on_strided_views() {
+        let mut rng = Rng::new(19);
+        let base = Mat::randn(6, 9, &mut rng);
+        let mut packed = base.clone();
+        let mut owned = packed.view().col_block(2, 7).to_mat();
+        softmax_rows(MatViewMut::strided(&mut packed.data[2..], 6, 5, 9));
+        softmax_rows(&mut owned);
+        for r in 0..6 {
+            assert_eq!(&packed.row(r)[2..7], owned.row(r), "softmax row {r}");
+            // columns outside the view untouched
+            assert_eq!(packed.row(r)[..2], base.row(r)[..2]);
+            assert_eq!(packed.row(r)[7..], base.row(r)[7..]);
+        }
+        let mut packed2 = base.clone();
+        let mut owned2 = packed2.view().col_block(2, 7).to_mat();
+        normalize_rows_by_sum(MatViewMut::strided(&mut packed2.data[2..], 6, 5, 9), 1e-6);
+        normalize_rows_by_sum(&mut owned2, 1e-6);
+        for r in 0..6 {
+            assert_eq!(&packed2.row(r)[2..7], owned2.row(r), "normalize row {r}");
+        }
+    }
+
+    #[test]
+    fn from_row_is_a_one_row_view() {
+        let data = [1.0f32, 2.0, 3.0];
+        let v = MatView::from_row(&data);
+        assert_eq!((v.rows(), v.cols()), (1, 3));
+        assert_eq!(v.row(0), &data);
+    }
+
+    #[test]
+    #[should_panic(expected = "col_block")]
+    fn col_block_out_of_bounds_panics() {
+        let m = Mat::zeros(2, 4);
+        let _ = m.view().col_block(2, 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "row_block")]
+    fn row_block_out_of_bounds_panics() {
+        let m = Mat::zeros(2, 4);
+        let _ = m.view().row_block(1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row_stride")]
+    fn strided_with_stride_below_cols_panics() {
+        let data = vec![0.0f32; 12];
+        let _ = MatView::strided(&data, 3, 4, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot hold")]
+    fn strided_with_short_buffer_panics() {
+        let data = vec![0.0f32; 10];
+        let _ = MatView::strided(&data, 3, 4, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of")]
+    fn view_row_out_of_bounds_panics() {
+        let m = Mat::zeros(2, 4);
+        let _ = m.view().row(2);
     }
 }

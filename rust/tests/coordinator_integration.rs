@@ -66,8 +66,8 @@ fn served_outputs_match_batch_engine() {
     }
     let feats = SlayFeatures::new(SlayConfig::default(), 16).unwrap();
     let want = engine::linear_attention(
-        &feats.map_q(&q_all, 0),
-        &feats.map_k(&k_all, 0),
+        &feats.map_q(q_all.view(), 0),
+        &feats.map_k(k_all.view(), 0),
         &v_all,
         true,
         1e-6,
@@ -228,7 +228,7 @@ fn quadratic_mechanism_served_end_to_end() {
         r0 += c.q.rows;
     }
     let backend = build(&Mechanism::Standard, 16, 256).unwrap();
-    let want = backend.forward(&q_all, &k_all, &v_all, true, 0);
+    let want = backend.forward(q_all.view(), k_all.view(), v_all.view(), true, 0);
 
     let mut got_rows: Vec<f32> = Vec::new();
     for c in chunks {
@@ -278,4 +278,73 @@ fn long_context_constant_state() {
         late < early * 3.0 + 1e-3,
         "late chunks slower: early={early:.6}s late={late:.6}s"
     );
+}
+
+#[test]
+fn cosformer_served_chunks_match_one_shot_forward() {
+    // Regression for the worker batched-feature `pos0 = 0` approximation:
+    // features used to be mapped at position 0 for every chunk, so any
+    // cosformer chunk after the first (its map reads absolute positions)
+    // came back wrong. The worker now maps per-chunk views at the
+    // session's true `state.len()` position.
+    let mut cfg = small_cfg(1);
+    cfg.mechanism = Mechanism::Cosformer;
+    cfg.horizon = 64;
+    let coord = Coordinator::start(cfg).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(321);
+    let chunks: Vec<AttendChunk> = vec![
+        chunk(seq, 8, &mut rng),  // prefill at pos 0 (was already correct)
+        chunk(seq, 6, &mut rng),  // follow-up prefill at pos 8 (was mapped at 0)
+        chunk(seq, 1, &mut rng),  // decode at pos 14 (was mapped at 0)
+        chunk(seq, 1, &mut rng),  // decode at pos 15
+    ];
+    let total: usize = chunks.iter().map(|c| c.q.rows).sum();
+    let mut q_all = Mat::zeros(total, 16);
+    let mut k_all = Mat::zeros(total, 16);
+    let mut v_all = Mat::zeros(total, 8);
+    let mut r0 = 0;
+    for c in &chunks {
+        for r in 0..c.q.rows {
+            q_all.row_mut(r0 + r).copy_from_slice(c.q.row(r));
+            k_all.row_mut(r0 + r).copy_from_slice(c.k.row(r));
+            v_all.row_mut(r0 + r).copy_from_slice(c.v.row(r));
+        }
+        r0 += c.q.rows;
+    }
+    let backend = build(&Mechanism::Cosformer, 16, 64).unwrap();
+    let want = backend.forward(q_all.view(), k_all.view(), v_all.view(), true, 0);
+
+    let mut got_rows: Vec<f32> = Vec::new();
+    for c in chunks {
+        let res = coord.attend(c).unwrap();
+        got_rows.extend_from_slice(&res.y.data);
+    }
+    assert_eq!(coord.sequence_len(seq).unwrap(), Some(total));
+    let err = slay::math::stats::rel_l2(&got_rows, &want.data);
+    assert!(err < 1e-4, "cosformer served vs one-shot rel_l2 = {err}");
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn window_knob_admits_many_quadratic_sequences() {
+    // The `window` knob decouples the quadratic KV-window (and its
+    // admission-control byte budget) from the cosformer `horizon`:
+    // horizon-sized budgeting at 131072 tokens would charge
+    // 131072 * (16 + 8) * 4 = 12 MiB per sequence and reject the very
+    // first one against this 1 MiB budget; window-sized budgeting charges
+    // 64 * (16 + 8) * 4 = 6 KiB, so dozens fit.
+    let mut cfg = small_cfg(1);
+    cfg.mechanism = Mechanism::Standard;
+    cfg.horizon = 131_072;
+    cfg.window = 64;
+    cfg.store = StoreConfig { max_sequences: 128, memory_budget: 1 << 20 };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rng = Rng::new(9);
+    for _ in 0..32 {
+        let seq = coord.create_sequence().unwrap();
+        let res = coord.attend(chunk(seq, 2, &mut rng)).unwrap();
+        assert!(res.y.data.iter().all(|x| x.is_finite()));
+    }
+    coord.shutdown().unwrap();
 }

@@ -89,7 +89,7 @@ fn rebuild_features(p: &Json, x: &Mat) -> Mat {
 
     let anchor_map = Anchor::from_anchors(anchors);
     let xn = x.normalized_rows();
-    let poly = anchor_map.map(&xn, 0);
+    let poly = anchor_map.map(xn.view(), 0);
     let per_node = n_poly * d_prf;
     let mut out = Mat::zeros(x.rows, per_node * r_nodes);
     for r in 0..r_nodes {
@@ -98,7 +98,7 @@ fn rebuild_features(p: &Json, x: &Mat) -> Mat {
             d,
             omegas[r * d_prf * d..(r + 1) * d_prf * d].to_vec(),
         );
-        let prf = Prf::from_omega(omega, s[r] as f64).map(&xn, 0);
+        let prf = Prf::from_omega(omega, s[r] as f64).map(xn.view(), 0);
         for row in 0..x.rows {
             let orow = &mut out.row_mut(row)[r * per_node..(r + 1) * per_node];
             kron_row(poly.row(row), prf.row(row), orow);
@@ -228,7 +228,8 @@ fn baseline_mechanisms_match_jax() {
 
     // ELU+1
     let elu = EluPlusOne::new(d);
-    let y_elu = engine::linear_attention(&elu.map(&q, 0), &elu.map(&k, 0), &v, true, 1e-6);
+    let y_elu =
+        engine::linear_attention(&elu.map(q.view(), 0), &elu.map(k.view(), 0), &v, true, 1e-6);
     assert_close(
         &y_elu.data,
         &b.get("elu_causal").unwrap().as_f32_vec().unwrap(),
@@ -239,7 +240,8 @@ fn baseline_mechanisms_match_jax() {
     // cosformer
     let horizon = b.get("cosformer_horizon").unwrap().as_usize().unwrap();
     let cf = CosformerMap::new(d, horizon);
-    let y_cf = engine::linear_attention(&cf.map(&q, 0), &cf.map(&k, 0), &v, true, 1e-6);
+    let y_cf =
+        engine::linear_attention(&cf.map(q.view(), 0), &cf.map(k.view(), 0), &v, true, 1e-6);
     assert_close(
         &y_cf.data,
         &b.get("cosformer_causal").unwrap().as_f32_vec().unwrap(),

@@ -5,8 +5,8 @@
 use slay::kernels::config::{Mechanism, PolyMethod, SlayConfig};
 use slay::kernels::engine::{self, StreamingState};
 use slay::kernels::slay::{QKFeatures, SlayFeatures};
-use slay::kernels::{build, yat};
-use slay::math::linalg::Mat;
+use slay::kernels::{build, yat, MultiHeadAttention};
+use slay::math::linalg::{Mat, MatView};
 use slay::math::rng::Rng;
 use slay::util::quickprop::{check, Shrink};
 
@@ -77,8 +77,8 @@ fn prop_positive_slay_denominators() {
         60,
         |rng| (gen_rows(rng, 20, 8), gen_rows(rng, 20, 8)),
         |(q, k)| {
-            let phi_q = feats.map_q(&to_mat(q), 0);
-            let phi_k = feats.map_k(&to_mat(k), 0);
+            let phi_q = feats.map_q(to_mat(q).view(), 0);
+            let phi_k = feats.map_k(to_mat(k).view(), 0);
             let z = engine::colsum(&phi_k);
             for i in 0..phi_q.rows {
                 let den = slay::math::linalg::dot(phi_q.row(i), &z);
@@ -140,7 +140,7 @@ fn prop_streaming_equals_batch_for_all_mechanisms() {
                 let x = to_mat(rows);
                 let v = Mat::randn(x.rows, 4, &mut rng);
                 let (phi_q, phi_k) = op
-                    .map_qk(&x, &x, 0)
+                    .map_qk(x.view(), x.view(), 0)
                     .expect("linear mechanisms expose their feature maps");
                 let batch = engine::linear_attention(&phi_q, &phi_k, &v, true, 1e-6);
                 let mut st = StreamingState::new(phi_q.cols, 4);
@@ -192,19 +192,16 @@ fn prop_session_prefill_decode_equals_one_shot_forward() {
                 let q = Mat::from_fn(n, 8, |r, c| qr.0[r][c] as f32);
                 let k = Mat::from_fn(n, 8, |r, c| kr.0[r][c] as f32);
                 let v = Mat::randn(n, 4, &mut rng);
-                let want = op.forward(&q, &k, &v, true, 0);
+                let want = op.forward(q.view(), k.view(), v.view(), true, 0);
 
                 let mut state = op.new_state(4);
                 let split = n / 2;
-                let take = |m: &Mat, a: usize, b: usize| {
-                    Mat::from_fn(b - a, m.cols, |r, c| m.get(a + r, c))
-                };
                 let head = op
                     .prefill(
                         &mut state,
-                        &take(&q, 0, split),
-                        &take(&k, 0, split),
-                        &take(&v, 0, split),
+                        q.view().row_block(0, split),
+                        k.view().row_block(0, split),
+                        v.view().row_block(0, split),
                     )
                     .map_err(|e| e.to_string())?;
                 let mut got = head.data;
@@ -300,8 +297,8 @@ fn prop_feature_scale_invariance() {
         |(rows, scale)| {
             let x = to_mat(rows);
             let xs = x.map(|v| v * *scale as f32);
-            let a = feats.map_q(&x, 0);
-            let b = feats.map_q(&xs, 0);
+            let a = feats.map_q(x.view(), 0);
+            let b = feats.map_q(xs.view(), 0);
             for (p, q) in a.data.iter().zip(b.data.iter()) {
                 if (p - q).abs() > 2e-3 * (1.0 + p.abs()) {
                     return Err(format!("scale {scale}: {p} vs {q}"));
@@ -310,4 +307,167 @@ fn prop_feature_scale_invariance() {
             Ok(())
         },
     );
+}
+
+// ---------------------------------------------------------------------------
+// ADR-002 view semantics: strided sub-views of a larger packed buffer must
+// be bit-identical to the same data copied into owned contiguous Mats, for
+// every mechanism and every entry point (forward / prefill / decode), and
+// bad view geometry must panic at construction.
+// ---------------------------------------------------------------------------
+
+/// One packed `L × (3d + pad)` buffer holding Q|K|V side by side with a
+/// few padding columns, so every extracted view is genuinely strided.
+fn packed_qkv(l: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::randn(l, 3 * d + 5, &mut rng)
+}
+
+fn qkv_views(packed: &Mat, d: usize) -> (MatView<'_>, MatView<'_>, MatView<'_>) {
+    let v = packed.view();
+    // skip the pad columns between k and v to keep all three misaligned
+    (v.col_block(0, d), v.col_block(d, 2 * d), v.col_block(2 * d + 5, 3 * d + 5))
+}
+
+#[test]
+fn prop_forward_over_strided_views_bit_identical_to_owned() {
+    let d = 8;
+    let mechs = [
+        Mechanism::Standard,
+        Mechanism::Yat { eps: 1e-3 },
+        Mechanism::YatSpherical { eps: 1e-3 },
+        Mechanism::Slay(SlayConfig::default()),
+        Mechanism::Favor { m_features: 16, seed: 3 },
+        Mechanism::EluLinear,
+        Mechanism::Cosformer,
+    ];
+    for mech in mechs {
+        let op = build(&mech, d, 512).unwrap();
+        check(
+            9,
+            10,
+            |rng| (1 + rng.below(20), rng.below(10_000)),
+            |&(l, seed)| {
+                let packed = packed_qkv(l, d, seed as u64 + 11);
+                let (q, k, v) = qkv_views(&packed, d);
+                let (qo, ko, vo) = (q.to_mat(), k.to_mat(), v.to_mat());
+                for causal in [false, true] {
+                    let yv = op.forward(q, k, v, causal, 0);
+                    let yo = op.forward(qo.view(), ko.view(), vo.view(), causal, 0);
+                    if yv.data != yo.data {
+                        return Err(format!(
+                            "{}: causal={causal} view/owned forward outputs differ",
+                            op.mechanism().name()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_session_over_strided_views_bit_identical_to_owned() {
+    // prefill over row-block sub-views + decode over borrowed rows of the
+    // strided buffer must reproduce the owned-contiguous session bitwise.
+    let d = 8;
+    let mechs = [
+        Mechanism::Standard,
+        Mechanism::YatSpherical { eps: 1e-3 },
+        Mechanism::Slay(SlayConfig::default()),
+        Mechanism::EluLinear,
+        Mechanism::Cosformer,
+    ];
+    for mech in mechs {
+        let op = build(&mech, d, 512).unwrap();
+        check(
+            10,
+            8,
+            |rng| (2 + rng.below(16), rng.below(10_000)),
+            |&(l, seed)| {
+                let packed = packed_qkv(l, d, seed as u64 + 29);
+                let (q, k, v) = qkv_views(&packed, d);
+                let (qo, ko, vo) = (q.to_mat(), k.to_mat(), v.to_mat());
+                let split = l / 2;
+                let mut sv = op.new_state(d);
+                let mut so = op.new_state(d);
+                let head_v = op
+                    .prefill(
+                        &mut sv,
+                        q.row_block(0, split),
+                        k.row_block(0, split),
+                        v.row_block(0, split),
+                    )
+                    .map_err(|e| e.to_string())?;
+                let head_o = op
+                    .prefill(
+                        &mut so,
+                        qo.view().row_block(0, split),
+                        ko.view().row_block(0, split),
+                        vo.view().row_block(0, split),
+                    )
+                    .map_err(|e| e.to_string())?;
+                if head_v.data != head_o.data {
+                    return Err(format!("{}: prefill differs", op.mechanism().name()));
+                }
+                let mut ov = vec![0.0f32; d];
+                let mut oo = vec![0.0f32; d];
+                for i in split..l {
+                    op.decode(&mut sv, q.row(i), k.row(i), v.row(i), &mut ov)
+                        .map_err(|e| e.to_string())?;
+                    op.decode(&mut so, qo.row(i), ko.row(i), vo.row(i), &mut oo)
+                        .map_err(|e| e.to_string())?;
+                    if ov != oo {
+                        return Err(format!(
+                            "{}: decode token {i} differs",
+                            op.mechanism().name()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn multi_head_over_packed_views_bit_identical_to_owned() {
+    // The head fan-out reads column-block views and writes packed output
+    // blocks in place; both must match the owned-slice path exactly.
+    let (d_model, heads) = (32, 4);
+    let mha = MultiHeadAttention::new(&Mechanism::EluLinear, d_model, heads, 0).unwrap();
+    let mut rng = Rng::new(77);
+    let packed = Mat::randn(12, 3 * d_model, &mut rng);
+    let pv = packed.view();
+    let (q, k, v) = (
+        pv.col_block(0, d_model),
+        pv.col_block(d_model, 2 * d_model),
+        pv.col_block(2 * d_model, 3 * d_model),
+    );
+    let (qo, ko, vo) = (q.to_mat(), k.to_mat(), v.to_mat());
+    let yv = mha.forward(q, k, v, true).unwrap();
+    let yo = mha.forward(&qo, &ko, &vo, true).unwrap();
+    assert_eq!(yv.data, yo.data, "packed-view MHA must equal owned MHA bitwise");
+}
+
+#[test]
+#[should_panic(expected = "col_block")]
+fn view_col_block_past_width_panics() {
+    let m = Mat::zeros(4, 16);
+    let _ = m.view().col_block(8, 17);
+}
+
+#[test]
+#[should_panic(expected = "row_stride")]
+fn strided_view_with_stride_below_cols_panics() {
+    let buf = vec![0.0f32; 64];
+    let _ = MatView::strided(&buf, 4, 16, 8);
+}
+
+#[test]
+#[should_panic(expected = "cannot hold")]
+fn strided_view_overrunning_buffer_panics() {
+    let buf = vec![0.0f32; 30];
+    let _ = MatView::strided(&buf, 4, 8, 8);
 }

@@ -63,7 +63,7 @@ fn elu_artifact_matches_rust_mirror() {
         ])
         .unwrap();
     let op = build(&Mechanism::EluLinear, d, l).unwrap();
-    let mirror = op.forward(&q, &k, &v, true, 0);
+    let mirror = op.forward(q.view(), k.view(), v.view(), true, 0);
     let pjrt = out[0].as_f32().unwrap();
     let err = slay::math::stats::rel_l2(pjrt, &mirror.data);
     assert!(err < 1e-4, "pjrt vs rust mirror rel_l2 = {err}");
@@ -88,7 +88,7 @@ fn cosformer_artifact_matches_rust_mirror() {
         .unwrap();
     // aot.py lowers cosformer with horizon = L
     let op = build(&Mechanism::Cosformer, d, l).unwrap();
-    let mirror = op.forward(&q, &k, &v, true, 0);
+    let mirror = op.forward(q.view(), k.view(), v.view(), true, 0);
     let err = slay::math::stats::rel_l2(out[0].as_f32().unwrap(), &mirror.data);
     assert!(err < 1e-4, "pjrt vs rust mirror rel_l2 = {err}");
 }
@@ -111,7 +111,7 @@ fn standard_attention_artifact_matches_mirror() {
         ])
         .unwrap();
     let op = build(&Mechanism::Standard, d, l).unwrap();
-    let mirror = op.forward(&q, &k, &v, true, 0);
+    let mirror = op.forward(q.view(), k.view(), v.view(), true, 0);
     let err = slay::math::stats::rel_l2(out[0].as_f32().unwrap(), &mirror.data);
     assert!(err < 1e-3, "pjrt vs rust mirror rel_l2 = {err}");
 }
