@@ -4,30 +4,47 @@
 //! batch 1, causal). Quadratic mechanisms stop at the OOM/time envelope;
 //! linear mechanisms sweep to 131K tokens.
 //!
-//! Set SLAY_BENCH_FULL=1 to push linear mechanisms all the way to 131072
-//! (default caps at 32K to keep `cargo bench` turnarounds short).
+//! Since ADR-003 this is also the causal-engine before/after harness: it
+//! times the chunkwise-parallel engine against the per-token prefix-sum
+//! reference on identical SLAY features and records everything in a
+//! machine-readable `results/BENCH_scaling.json`, so the perf trajectory
+//! is tracked from PR 3 onward.
+//!
+//! Env knobs:
+//! * `SLAY_BENCH_FULL=1`  — push linear mechanisms to 131072 tokens
+//!   (default caps at 32K to keep turnarounds short).
+//! * `SLAY_BENCH_SMOKE=1` — tiny lengths only; ci.sh uses this to keep
+//!   the JSON emission path exercised on every run.
+//! * `SLAY_CAUSAL_BLOCK`  — chunk width B of the chunked engine.
 
 use slay::kernels::config::{Mechanism, SlayConfig};
-use slay::kernels::engine::workspace_bytes;
+use slay::kernels::engine::{self, workspace_bytes};
 use slay::kernels::{build, MultiHeadAttention};
 use slay::math::linalg::Mat;
 use slay::math::rng::Rng;
-use slay::util::benchkit::{fmt_mib, fmt_ms, time_budget, Table};
+use slay::util::benchkit::{
+    fmt_mib, fmt_ms, scaling_entry, time_budget, write_json, Table,
+};
+use slay::util::json::Json;
+use std::collections::BTreeMap;
 use std::time::Duration;
 
 fn main() {
     let full = std::env::var("SLAY_BENCH_FULL").is_ok();
+    let smoke = std::env::var("SLAY_BENCH_SMOKE").is_ok();
     let d_model = 256usize;
     let heads = 8usize;
     let dh = d_model / heads;
-    let lens_linear: Vec<usize> = if full {
+    let lens_linear: Vec<usize> = if smoke {
+        vec![128, 512]
+    } else if full {
         vec![128, 512, 2048, 8192, 32768, 131072]
     } else {
         vec![128, 512, 2048, 8192, 32768]
     };
     // quadratic envelope: beyond 8K the L×L matrix alone is ≥ 256 MiB/head —
     // the paper's A100 OOMs at 16K; we cap compute there as the same wall.
-    let lens_quadratic: Vec<usize> = vec![128, 512, 2048, 4096, 8192];
+    let lens_quadratic: Vec<usize> = if smoke { vec![128, 256] } else { vec![128, 512, 2048, 4096, 8192] };
 
     let mechanisms: Vec<(&str, Mechanism, bool)> = vec![
         ("Standard", Mechanism::Standard, true),
@@ -42,6 +59,7 @@ fn main() {
         "Fig 2/21 — scaling (d_model=256, 8 heads, batch 1, causal)",
         &["Method", "L", "Latency(ms)", "Mem(MiB)", "Tok/s"],
     );
+    let mut entries: Vec<Json> = Vec::new();
     let mut rng = Rng::new(31);
 
     for (name, mech, quadratic) in &mechanisms {
@@ -57,16 +75,18 @@ fn main() {
                 std::hint::black_box(mha.forward(&q, &k, &v, true).unwrap());
             });
             let mem = heads * workspace_bytes(mha.feature_dim(), l, dh, dh);
+            let toks = l as f64 / (t.mean_ms / 1e3);
             table.row(vec![
                 name.to_string(),
                 l.to_string(),
                 fmt_ms(t.mean_ms),
                 fmt_mib(mem),
-                format!("{:.0}", l as f64 / (t.mean_ms / 1e3)),
+                format!("{toks:.0}"),
             ]);
+            entries.push(scaling_entry(name, "backend", l, &t, toks));
         }
         // quadratic mechanisms: extend the memory model to the OOM wall
-        if *quadratic {
+        if *quadratic && !smoke {
             for &l in &[16384usize, 32768, 131072] {
                 let mem = heads * workspace_bytes(None, l, dh, dh);
                 table.row(vec![
@@ -81,6 +101,81 @@ fn main() {
     }
     table.print();
     table.to_csv("fig2_scaling.csv").unwrap();
+
+    // ---- causal engine A/B: chunkwise-parallel vs per-token (ADR-003) ----
+    // Same pre-mapped SLAY features, one head (d=32, m=384): the per-token
+    // prefix-sum reference against the chunked engine at the default block.
+    let engine_lens: Vec<usize> = if smoke {
+        vec![512]
+    } else if full {
+        vec![2048, 8192, 32768]
+    } else {
+        vec![2048, 8192]
+    };
+    let block = engine::causal_block();
+    let mut engine_table = Table::new(
+        "Causal engine — chunked vs per-token (SLAY features, d=32)",
+        &["L", "per-token(ms)", "chunked(ms)", "speedup", "chunked Tok/s"],
+    );
+    let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    let op = build(&Mechanism::Slay(SlayConfig::default()), dh, 0).unwrap();
+    let delta = op.delta();
+    for &l in &engine_lens {
+        let q = Mat::randn(l, dh, &mut rng);
+        let k = Mat::randn(l, dh, &mut rng);
+        let v = Mat::randn(l, dh, &mut rng);
+        let (phi_q, phi_k) = op.map_qk(q.view(), k.view(), 0).unwrap();
+        let mut y = Mat::zeros(l, dh);
+        let budget = Duration::from_millis(if l >= 8192 { 800 } else { 300 });
+        let t_pt = time_budget("per-token", budget, || {
+            engine::linear_attention_causal_into(
+                phi_q.view(),
+                phi_k.view(),
+                v.view(),
+                delta,
+                y.view_mut(),
+            );
+            std::hint::black_box(y.data.as_ptr());
+        });
+        let t_ch = time_budget("chunked", budget, || {
+            engine::linear_attention_causal_chunked_into(
+                phi_q.view(),
+                phi_k.view(),
+                v.view(),
+                delta,
+                block,
+                y.view_mut(),
+            );
+            std::hint::black_box(y.data.as_ptr());
+        });
+        let speedup = t_pt.mean_ms / t_ch.mean_ms;
+        let toks_ch = l as f64 / (t_ch.mean_ms / 1e3);
+        engine_table.row(vec![
+            l.to_string(),
+            fmt_ms(t_pt.mean_ms),
+            fmt_ms(t_ch.mean_ms),
+            format!("{speedup:.2}x"),
+            format!("{toks_ch:.0}"),
+        ]);
+        entries.push(scaling_entry("SLAY", "per-token", l, &t_pt, l as f64 / (t_pt.mean_ms / 1e3)));
+        entries.push(scaling_entry("SLAY", "chunked", l, &t_ch, toks_ch));
+        speedups.insert(l.to_string(), Json::Num(speedup));
+    }
+    engine_table.print();
+
+    write_json(
+        "BENCH_scaling.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("fig2_scaling".into())),
+            ("d_model", Json::Num(d_model as f64)),
+            ("heads", Json::Num(heads as f64)),
+            ("causal_block", Json::Num(block as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("entries", Json::Arr(entries)),
+            ("speedup_chunked_vs_per_token", Json::Obj(speedups)),
+        ]),
+    )
+    .unwrap();
 
     // headline shape checks
     println!("\nshape checks:");

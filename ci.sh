@@ -7,8 +7,14 @@
 #                                       keeps the paper-figure programs
 #                                       from bit-rotting outside `cargo
 #                                       test`'s reach)
-#   * cargo test -q                    (tier-1 bar)
+#   * cargo test -q                    (tier-1 bar; includes the
+#                                       counting-allocator guard in
+#                                       rust/tests/alloc_discipline.rs)
 #   * cargo clippy --all-targets -- -D warnings
+#   * SLAY_BENCH_SMOKE=1 fig2_scaling  (smoke-runs the scaling bench at
+#                                       small L and checks that the
+#                                       machine-readable
+#                                       results/BENCH_scaling.json lands)
 #
 # Formatting still runs in report mode by default — the codebase predates
 # rustfmt adoption — and becomes a hard gate with STRICT=1:
@@ -29,6 +35,12 @@ cargo test -q
 
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
+
+echo "== fig2_scaling smoke (emits BENCH_scaling.json) =="
+RESULTS_DIR="${SLAY_RESULTS:-results}"
+rm -f "$RESULTS_DIR/BENCH_scaling.json"
+SLAY_BENCH_SMOKE=1 cargo bench --bench fig2_scaling
+test -f "$RESULTS_DIR/BENCH_scaling.json" || { echo "BENCH_scaling.json missing"; exit 1; }
 
 soft() {
     local label="$1"

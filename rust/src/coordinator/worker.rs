@@ -1,13 +1,14 @@
-//! Shard worker: owns one [`SequenceStore`] shard and an
-//! [`AttentionBackend`], forms dynamic batches from its queue, then maps
-//! features over zero-copy views of each chunk's arrival buffers at the
-//! sequence's true position before streaming the chunk through its state
-//! (ADR-002; the earlier design concatenated every batched chunk into one
-//! `all_q`/`all_k` matrix for a single `map_qk` call, which paid an
-//! O(L·d) gather copy per batch and silently approximated every chunk's
-//! position as 0 — wrong for cosformer). Mechanisms without a feature
-//! decomposition (the exact quadratic baselines) are served through the
-//! same interface via per-chunk prefill over their rolling KV windows.
+//! Shard worker: owns one [`SequenceStore`] shard, an
+//! [`AttentionBackend`] and a [`Scratch`] arena, forms dynamic batches
+//! from its queue, then streams each chunk through its sequence state via
+//! the zero-allocation `prefill_into` path: the backend maps features
+//! over zero-copy views of the chunk's arrival buffers at the sequence's
+//! true position (ADR-002) with every intermediate — feature rows, block
+//! scores, projections — recycled from the worker's arena (ADR-003). In
+//! steady state the only per-chunk allocation on this path is the result
+//! tensor handed back over the reply channel. Mechanisms without a
+//! feature decomposition (the exact quadratic baselines) are served
+//! through the same interface over their rolling KV windows.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{AttendResult, SeqId, WorkItem};
@@ -15,6 +16,7 @@ use crate::coordinator::scheduler::{order_batch, BatchPolicy};
 use crate::coordinator::state::{SequenceStore, StoreConfig};
 use crate::kernels::config::Mechanism;
 use crate::kernels::AttentionBackend;
+use crate::math::linalg::{Mat, Scratch};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -54,6 +56,9 @@ pub fn run(
     let backend =
         crate::kernels::build_with_window(&cfg.mechanism, cfg.d_head, cfg.horizon, cfg.window)?;
     let mut store = SequenceStore::new(cfg.store.clone());
+    // Per-worker scratch arena (ADR-003): reused feature/projection/score
+    // buffers make steady-state prefill and decode allocation-free.
+    let mut scratch = Scratch::new();
 
     loop {
         let msg = match rx.recv() {
@@ -124,7 +129,7 @@ pub fn run(
                     }
                     std::thread::yield_now();
                 }
-                process_batch(&mut store, backend.as_ref(), batch, &metrics, &inflight);
+                process_batch(&mut store, backend.as_ref(), &mut scratch, batch, &metrics, &inflight);
                 if shutdown {
                     return Ok(());
                 }
@@ -136,6 +141,7 @@ pub fn run(
 fn process_batch(
     store: &mut SequenceStore,
     backend: &dyn AttentionBackend,
+    scratch: &mut Scratch,
     mut batch: Vec<WorkItem>,
     metrics: &Metrics,
     inflight: &AtomicU64,
@@ -147,11 +153,12 @@ fn process_batch(
         .fetch_add(batch.len() as u64, Ordering::Relaxed);
 
     // ---- per-chunk streaming through sequence state ---------------------
-    // Features are mapped over zero-copy views of each chunk's arrival
-    // buffers at the session's true position (`state.len()`), so cosformer
-    // serving matches its one-shot forward; there is no concatenated
-    // `all_q`/`all_k` materialization. Mechanisms without a feature
-    // decomposition (map_qk = None) stream through per-chunk prefill.
+    // Each chunk streams through `prefill_into`: the backend maps features
+    // over zero-copy views of the arrival buffers at the session's true
+    // position (`state.len()`, so cosformer serving matches its one-shot
+    // forward) and draws every intermediate from the worker's scratch
+    // arena. The result tensor is the only allocation on this path — it
+    // crosses the reply channel, so the caller owns it.
     for w in batch {
         let n = w.chunk.n_tokens();
         if w.chunk.is_decode() {
@@ -163,13 +170,9 @@ fn process_batch(
             None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
             Some(state) => {
                 let (q, k, v) = (w.chunk.q.view(), w.chunk.k.view(), w.chunk.v.view());
-                let y = match backend.map_qk(q, k, state.len()) {
-                    Some((phi_q, phi_k)) => {
-                        backend.prefill_mapped(state, phi_q.view(), phi_k.view(), v)
-                    }
-                    None => backend.prefill(state, q, k, v),
-                };
-                y.map(|y| AttendResult {
+                let mut y = Mat::zeros(v.rows(), v.cols());
+                let res = backend.prefill_into(scratch, state, q, k, v, y.view_mut());
+                res.map(|()| AttendResult {
                     seq: w.chunk.seq,
                     y,
                     seq_len: state.len(),

@@ -5,18 +5,34 @@
 //!   region).
 //! * [`linear_attention`] — the Eq. 11 reordering `Ψ(Q)(Ψ(K)ᵀV)` with
 //!   row-wise kernel normalization, non-causal (two contractions) and
-//!   causal (running prefix state) variants. The L×L matrix is never
-//!   formed.
+//!   causal variants. The L×L matrix is never formed.
+//! * [`linear_attention_causal_chunked_into`] — the chunkwise-parallel
+//!   causal decomposition (ADR-003): per block of `B` tokens the
+//!   intra-block contribution is one small causally-masked quadratic
+//!   block, the inter-block contribution one dense matmul against the
+//!   running `(S, z)` prefix state, and the state update one `Ψ(K_b)ᵀV_b`
+//!   contraction — O(L/B) matmuls that flow through the threaded kernels
+//!   instead of O(L) rank-1 scalar updates. This is the engine behind the
+//!   causal dispatch paths; [`linear_attention_causal`] keeps the
+//!   per-token prefix-sum form as the reference implementation
+//!   (property-tested equal across block sizes).
 //! * [`StreamingState`] — the linear-attention analog of a KV-cache:
 //!   per-sequence `(S = Ψ(K)ᵀV ∈ R^{m×d_v}, z = Ψ(K)ᵀ1 ∈ R^m)`, used by the
-//!   coordinator's decode path.
+//!   coordinator's decode path; [`StreamingState::prefill_chunked_into`]
+//!   is the serving-side entry of the chunkwise engine.
 //!
 //! Every engine takes strided [`MatView`]s (ADR-002) and has an `_into`
 //! variant writing through a [`MatViewMut`], so callers can stream head
 //! column-blocks or chunk row-ranges in and pack outputs in place without
-//! intermediate copies.
+//! intermediate copies. The chunked engine additionally draws every
+//! intermediate (block scores, per-block states) from a caller-supplied
+//! [`Scratch`] arena, so a warmed-up serving loop allocates nothing.
 
-use crate::math::linalg::{axpy, dot, matmul_at_b, matmul_into, Mat, MatView, MatViewMut};
+use crate::math::linalg::{
+    axpy, dot, matmul_a_bt_serial_into, matmul_at_b, matmul_at_b_acc_into,
+    matmul_at_b_acc_serial, matmul_into, matmul_serial_into, num_threads, Mat, MatView,
+    MatViewMut, Scratch, PAR_FLOPS,
+};
 
 /// Column sums of rows `r0..r1` of `m`, accumulated into `z` (`z += Σ_r m[r]`).
 /// This is the `Ψ(K)ᵀ1` contraction of Eq. 11 — the single definition used
@@ -124,8 +140,64 @@ pub fn linear_attention_noncausal_into(
     }
 }
 
+/// Default block width `B` for the chunkwise-parallel causal engine
+/// (ADR-003). See [`causal_block`] for the tuning knob.
+pub const DEFAULT_CAUSAL_BLOCK: usize = 128;
+
+/// Block width used by the causal dispatch paths: the `SLAY_CAUSAL_BLOCK`
+/// env var when set (and positive), else [`DEFAULT_CAUSAL_BLOCK`]. Larger
+/// blocks amortize matmul/thread overheads but pay O(B·m) extra score
+/// flops per token; see ADR-003 in ROADMAP.md for the tuning guidance.
+pub fn causal_block() -> usize {
+    static B: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *B.get_or_init(|| {
+        std::env::var("SLAY_CAUSAL_BLOCK")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&b| b > 0)
+            .unwrap_or(DEFAULT_CAUSAL_BLOCK)
+    })
+}
+
+/// Chunkwise-parallel causal linear attention (ADR-003): block-decomposed
+/// Eq. 11 with a per-block masked quadratic term. Equivalent to
+/// [`linear_attention_causal`] up to f32 summation order, for every block
+/// size ≥ 1.
+pub fn linear_attention_causal_chunked<'a, 'b, 'c>(
+    phi_q: impl Into<MatView<'a>>,
+    phi_k: impl Into<MatView<'b>>,
+    v: impl Into<MatView<'c>>,
+    delta: f32,
+    block: usize,
+) -> Mat {
+    let (phi_q, phi_k, v) = (phi_q.into(), phi_k.into(), v.into());
+    let mut y = Mat::zeros(phi_q.rows(), v.cols());
+    linear_attention_causal_chunked_into(phi_q, phi_k, v, delta, block, y.view_mut());
+    y
+}
+
+/// [`linear_attention_causal_chunked`] writing through an output view.
+pub fn linear_attention_causal_chunked_into(
+    phi_q: MatView,
+    phi_k: MatView,
+    v: MatView,
+    delta: f32,
+    block: usize,
+    out: MatViewMut,
+) {
+    let mut state = StreamingState::new(phi_q.cols(), v.cols());
+    let mut scratch = Scratch::new();
+    state.prefill_chunked_into(phi_q, phi_k, v, delta, block, &mut scratch, out);
+}
+
 /// Causal linear attention via running prefix sums: after consuming token
 /// `i` the state is `(S_i, z_i)` and `Y_i = Ψ(q_i)ᵀ S_i / (Ψ(q_i)ᵀ z_i + δ)`.
+///
+/// This is the per-token **reference engine** — O(L) rank-1 updates. The
+/// dispatch paths ([`linear_attention`], [`linear_attention_into`]) use the
+/// chunkwise-parallel engine instead; this form remains the ground truth
+/// the property tests compare against and the `fig2_scaling` before/after
+/// baseline.
 pub fn linear_attention_causal<'a, 'b, 'c>(
     phi_q: impl Into<MatView<'a>>,
     phi_k: impl Into<MatView<'b>>,
@@ -161,7 +233,8 @@ pub fn linear_attention_causal_into(
     }
 }
 
-/// Unified entry: dispatch on causality.
+/// Unified entry: dispatch on causality. The causal branch runs the
+/// chunkwise-parallel engine at the [`causal_block`] width (ADR-003).
 pub fn linear_attention<'a, 'b, 'c>(
     phi_q: impl Into<MatView<'a>>,
     phi_k: impl Into<MatView<'b>>,
@@ -169,14 +242,14 @@ pub fn linear_attention<'a, 'b, 'c>(
     causal: bool,
     delta: f32,
 ) -> Mat {
-    if causal {
-        linear_attention_causal(phi_q, phi_k, v, delta)
-    } else {
-        linear_attention_noncausal(phi_q, phi_k, v, delta)
-    }
+    let (phi_q, phi_k, v) = (phi_q.into(), phi_k.into(), v.into());
+    let mut y = Mat::zeros(phi_q.rows(), v.cols());
+    linear_attention_into(phi_q, phi_k, v, causal, delta, y.view_mut());
+    y
 }
 
-/// Unified `_into` entry: dispatch on causality.
+/// Unified `_into` entry: dispatch on causality. The causal branch runs
+/// the chunkwise-parallel engine at the [`causal_block`] width (ADR-003).
 pub fn linear_attention_into(
     phi_q: MatView,
     phi_k: MatView,
@@ -186,9 +259,72 @@ pub fn linear_attention_into(
     out: MatViewMut,
 ) {
     if causal {
-        linear_attention_causal_into(phi_q, phi_k, v, delta, out)
+        linear_attention_causal_chunked_into(phi_q, phi_k, v, delta, causal_block(), out)
     } else {
         linear_attention_noncausal_into(phi_q, phi_k, v, delta, out)
+    }
+}
+
+/// Engine fan-outs currently in flight across all threads. Concurrent
+/// callers — e.g. the per-head threads of
+/// [`MultiHeadAttention::forward`](crate::kernels::MultiHeadAttention) —
+/// split the [`num_threads`] budget between them instead of each spawning
+/// a full complement and oversubscribing the machine.
+static ACTIVE_ENGINE_FANOUTS: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+/// One block's causal outputs (shared by the sequential loop and the
+/// parallel phase 3): inter-chunk contribution against the block's entry
+/// state `(s, z)`, then the causally-masked intra-chunk `B×B` scores,
+/// then the Eq. 11 normalization. `scores_buf`/`den_buf` are reusable
+/// workspaces of at least `B²`/`B` floats.
+#[allow(clippy::too_many_arguments)] // one fused engine step: tensors + state + workspaces
+fn block_output(
+    q_b: MatView,
+    k_b: MatView,
+    v_b: MatView,
+    s: MatView,
+    z: &[f32],
+    delta: f32,
+    scores_buf: &mut [f32],
+    den_buf: &mut [f32],
+    mut o_b: MatViewMut,
+) {
+    let nb = q_b.rows();
+    // inter-chunk: dense matmul against the entry state
+    matmul_serial_into(q_b, s, o_b.reborrow());
+    for (i, d) in den_buf[..nb].iter_mut().enumerate() {
+        *d = dot(q_b.row(i), z);
+    }
+    // intra-chunk: causally-masked B×B quadratic block
+    let scores = &mut scores_buf[..nb * nb];
+    matmul_a_bt_serial_into(q_b, k_b, MatViewMut::new(scores, nb, nb));
+    apply_block(&mut o_b, scores, &den_buf[..nb], v_b, delta);
+}
+
+/// One block of the chunkwise causal engine, applied on top of the
+/// inter-chunk partials already sitting in `out`: add the causally-masked
+/// (`j ≤ i`) intra-chunk contributions from the `nb×nb` `scores` block,
+/// then normalize each row by its full denominator
+/// `den_i + Σ_{j≤i} s_ij + δ` (Eq. 11's kernel normalization).
+fn apply_block(out: &mut MatViewMut, scores: &[f32], den: &[f32], v_b: MatView, delta: f32) {
+    let nb = den.len();
+    debug_assert_eq!(scores.len(), nb * nb);
+    debug_assert_eq!(v_b.rows(), nb);
+    for i in 0..nb {
+        let orow = out.row_mut(i);
+        let srow = &scores[i * nb..i * nb + i + 1]; // causal mask: j ≤ i
+        let mut d = den[i];
+        for (j, &sc) in srow.iter().enumerate() {
+            d += sc;
+            if sc != 0.0 {
+                axpy(sc, v_b.row(j), orow);
+            }
+        }
+        let inv = 1.0 / (d + delta);
+        for o in orow.iter_mut() {
+            *o *= inv;
+        }
     }
 }
 
@@ -227,18 +363,261 @@ impl StreamingState {
         self.len += 1;
     }
 
-    /// Absorb a whole chunk (prefill): `S += Ψ(K)ᵀV` via one contraction.
+    /// Absorb a whole chunk (prefill): `S += Ψ(K)ᵀV` via one accumulating
+    /// contraction straight into the state buffer — no `ΔS` temporary.
     pub fn extend<'a, 'b>(&mut self, phi_k: impl Into<MatView<'a>>, v: impl Into<MatView<'b>>) {
         let (phi_k, v) = (phi_k.into(), v.into());
         assert_eq!(phi_k.cols(), self.m);
         assert_eq!(v.cols(), self.d_v);
         assert_eq!(phi_k.rows(), v.rows());
-        let delta_s = matmul_at_b(phi_k, v);
-        for (a, b) in self.s.iter_mut().zip(delta_s.data.iter()) {
-            *a += b;
-        }
+        matmul_at_b_acc_into(phi_k, v, MatViewMut::new(&mut self.s, self.m, self.d_v));
         colsum_into(phi_k, 0, phi_k.rows(), &mut self.z);
         self.len += phi_k.rows();
+    }
+
+    /// Chunkwise-parallel causal prefill (ADR-003): stream `L` tokens of
+    /// pre-mapped features through this state in blocks of `block` tokens,
+    /// writing the causal attention outputs for every token into `out`.
+    ///
+    /// Decomposition per block `b` (queries `i`, keys `j`, `B = block`):
+    ///
+    /// * **inter-chunk** — `Ψ(Q_b)·S` against the prefix state (one dense
+    ///   matmul) plus denominators `Ψ(Q_b)·z`;
+    /// * **intra-chunk** — the `B×B` score block `Ψ(Q_b)Ψ(K_b)ᵀ`,
+    ///   causally masked (`j ≤ i`) and accumulated quadratic-style;
+    /// * **state update** — `S += Ψ(K_b)ᵀV_b`, `z += Ψ(K_b)ᵀ1`.
+    ///
+    /// When the problem is large enough the engine runs in three phases:
+    /// all per-block `Ψ(K_b)ᵀV_b` contractions fan out across threads,
+    /// a serial (cheap) pass turns them into exclusive prefix states, and
+    /// the per-block outputs fan out again — two thread fan-outs total for
+    /// the whole prefill, with every intermediate drawn from `scratch`.
+    /// Small inputs take a sequential block loop over the same math.
+    #[allow(clippy::too_many_arguments)] // engine entry: tensors + tuning knobs
+    pub fn prefill_chunked_into(
+        &mut self,
+        phi_q: MatView,
+        phi_k: MatView,
+        v: MatView,
+        delta: f32,
+        block: usize,
+        scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        let l = phi_q.rows();
+        assert!(block >= 1, "prefill_chunked_into: block must be >= 1");
+        assert_eq!(phi_q.cols(), self.m, "prefill_chunked_into: phi_q feature dim");
+        assert_eq!(phi_k.cols(), self.m, "prefill_chunked_into: phi_k feature dim");
+        assert_eq!(v.cols(), self.d_v, "prefill_chunked_into: value dim");
+        assert_eq!(phi_k.rows(), l, "prefill_chunked_into: phi_k rows");
+        assert_eq!(v.rows(), l, "prefill_chunked_into: v rows");
+        assert_eq!(
+            (out.rows(), out.cols()),
+            (l, self.d_v),
+            "prefill_chunked_into: out is {}x{}, need {}x{}",
+            out.rows(),
+            out.cols(),
+            l,
+            self.d_v
+        );
+        if l == 0 {
+            return;
+        }
+        let block = block.min(l);
+        let n_blocks = l.div_ceil(block);
+        // Total MAC count across the three phases; below the parallel
+        // threshold the sequential loop avoids two thread fan-outs.
+        let flops = l * self.m * (block + 2 * self.d_v);
+        if n_blocks < 2 || num_threads() == 1 || flops < 2 * PAR_FLOPS {
+            self.prefill_blocks_sequential(phi_q, phi_k, v, delta, block, scratch, out);
+        } else {
+            self.prefill_blocks_parallel(phi_q, phi_k, v, delta, block, n_blocks, scratch, out);
+        }
+    }
+
+    /// Sequential block loop: inter + intra + state update per block, in
+    /// order. Used for small prefills (including every decode-sized chunk)
+    /// and when threading is disabled.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_blocks_sequential(
+        &mut self,
+        phi_q: MatView,
+        phi_k: MatView,
+        v: MatView,
+        delta: f32,
+        block: usize,
+        scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        let l = phi_q.rows();
+        let mut scores_buf = scratch.take(block * block);
+        let mut den_buf = scratch.take(block);
+        let mut rest = out;
+        let mut r0 = 0;
+        while r0 < l {
+            let r1 = (r0 + block).min(l);
+            let nb = r1 - r0;
+            let (o_b, tail) = rest.split_rows_at(nb);
+            rest = tail;
+            let q_b = phi_q.row_block(r0, r1);
+            let k_b = phi_k.row_block(r0, r1);
+            let v_b = v.row_block(r0, r1);
+            let s_view = MatView::new(&self.s, self.m, self.d_v);
+            block_output(q_b, k_b, v_b, s_view, &self.z, delta, &mut scores_buf, &mut den_buf, o_b);
+            // absorb the block into the running state
+            self.extend(k_b, v_b);
+            r0 = r1;
+        }
+        scratch.put(den_buf);
+        scratch.put(scores_buf);
+    }
+
+    /// Three-phase parallel form: (1) all `Ψ(K_b)ᵀV_b` contractions fan
+    /// out across threads, (2) a serial exclusive prefix-sum turns them
+    /// into per-block prefix states (folding in this state's existing
+    /// `(S, z)` and leaving the final totals behind), (3) per-block
+    /// outputs fan out again.
+    #[allow(clippy::too_many_arguments)]
+    fn prefill_blocks_parallel(
+        &mut self,
+        phi_q: MatView,
+        phi_k: MatView,
+        v: MatView,
+        delta: f32,
+        block: usize,
+        n_blocks: usize,
+        scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        let l = phi_q.rows();
+        let (m, d_v) = (self.m, self.d_v);
+        let su = m * d_v; // floats per block state
+        let mut u_buf = scratch.take(n_blocks * su);
+        let mut zeta_buf = scratch.take(n_blocks * m);
+
+        // Phase 1: independent per-block contractions U_b = Ψ(K_b)ᵀV_b,
+        // ζ_b = Ψ(K_b)ᵀ1 — contiguous ranges of blocks per thread. Thread
+        // count is flops-proportional (PAR_FLOPS per spawn), like every
+        // other threaded kernel, and divided across concurrently active
+        // fan-outs so nested callers (per-head threads) share one budget.
+        use std::sync::atomic::Ordering;
+        let active = ACTIVE_ENGINE_FANOUTS.fetch_add(1, Ordering::Relaxed) + 1;
+        struct FanoutGuard;
+        impl Drop for FanoutGuard {
+            fn drop(&mut self) {
+                ACTIVE_ENGINE_FANOUTS.fetch_sub(1, Ordering::Relaxed);
+            }
+        }
+        let _guard = FanoutGuard;
+        let flops = l * m * (block + 2 * d_v);
+        let nt = (num_threads() / active)
+            .max(1)
+            .min(n_blocks)
+            .min((flops / PAR_FLOPS).max(1));
+        let per = n_blocks.div_ceil(nt);
+        std::thread::scope(|s| {
+            let mut u_rest: &mut [f32] = &mut u_buf;
+            let mut z_rest: &mut [f32] = &mut zeta_buf;
+            let mut b0 = 0;
+            while b0 < n_blocks {
+                let take = per.min(n_blocks - b0);
+                let (u_chunk, u_tail) = u_rest.split_at_mut(take * su);
+                u_rest = u_tail;
+                let (z_chunk, z_tail) = z_rest.split_at_mut(take * m);
+                z_rest = z_tail;
+                let start = b0;
+                s.spawn(move || {
+                    for bi in 0..take {
+                        let b = start + bi;
+                        let r0 = b * block;
+                        let r1 = (r0 + block).min(l);
+                        let k_b = phi_k.row_block(r0, r1);
+                        let v_b = v.row_block(r0, r1);
+                        let u = &mut u_chunk[bi * su..(bi + 1) * su];
+                        // u is zeroed by the arena, so acc == assign here
+                        matmul_at_b_acc_serial(k_b, v_b, MatViewMut::new(u, m, d_v));
+                        colsum_into(k_b, 0, k_b.rows(), &mut z_chunk[bi * m..(bi + 1) * m]);
+                    }
+                });
+                b0 += take;
+            }
+        });
+
+        // Phase 2: serial exclusive prefix-sum — u_buf[b]/zeta_buf[b]
+        // become the state *before* block b (seeded with this state's
+        // current totals), and the carry becomes the post-prefill state.
+        let mut carry_s = scratch.take(su);
+        carry_s.copy_from_slice(&self.s);
+        let mut carry_z = scratch.take(m);
+        carry_z.copy_from_slice(&self.z);
+        for b in 0..n_blocks {
+            for (x, c) in u_buf[b * su..(b + 1) * su].iter_mut().zip(carry_s.iter_mut()) {
+                let own = *x;
+                *x = *c;
+                *c += own;
+            }
+            for (x, c) in zeta_buf[b * m..(b + 1) * m].iter_mut().zip(carry_z.iter_mut()) {
+                let own = *x;
+                *x = *c;
+                *c += own;
+            }
+        }
+        self.s.copy_from_slice(&carry_s);
+        self.z.copy_from_slice(&carry_z);
+        self.len += l;
+        scratch.put(carry_z);
+        scratch.put(carry_s);
+
+        // Phase 3: independent per-block outputs — inter via the prefix
+        // state, intra via the masked B×B block; same block ranges per
+        // thread as phase 1, each thread with its own score/den workspace.
+        let mut work_buf = scratch.take(nt * (block * block + block));
+        std::thread::scope(|s| {
+            let u_all: &[f32] = &u_buf;
+            let zeta_all: &[f32] = &zeta_buf;
+            let mut out_rest = out;
+            let mut work_rest: &mut [f32] = &mut work_buf;
+            let mut b0 = 0;
+            while b0 < n_blocks {
+                let take = per.min(n_blocks - b0);
+                let r0 = b0 * block;
+                let r1 = (r0 + take * block).min(l);
+                let (out_chunk, out_tail) = out_rest.split_rows_at(r1 - r0);
+                out_rest = out_tail;
+                let (wk, wk_tail) = work_rest.split_at_mut(block * block + block);
+                work_rest = wk_tail;
+                let start = b0;
+                s.spawn(move || {
+                    let (scores_buf, den_buf) = wk.split_at_mut(block * block);
+                    let mut out_chunk = out_chunk;
+                    for bi in 0..take {
+                        let b = start + bi;
+                        let rb0 = b * block;
+                        let rb1 = (rb0 + block).min(l);
+                        let nb = rb1 - rb0;
+                        let (o_b, rest) = out_chunk.split_rows_at(nb);
+                        out_chunk = rest;
+                        let s_b = MatView::new(&u_all[b * su..(b + 1) * su], m, d_v);
+                        let z_b = &zeta_all[b * m..(b + 1) * m];
+                        block_output(
+                            phi_q.row_block(rb0, rb1),
+                            phi_k.row_block(rb0, rb1),
+                            v.row_block(rb0, rb1),
+                            s_b,
+                            z_b,
+                            delta,
+                            scores_buf,
+                            den_buf,
+                            o_b,
+                        );
+                    }
+                });
+                b0 += take;
+            }
+        });
+        scratch.put(work_buf);
+        scratch.put(zeta_buf);
+        scratch.put(u_buf);
     }
 
     /// Attend with one query-feature row, writing `d_v` outputs into `out`.
@@ -435,6 +814,78 @@ mod tests {
         quadratic_attention_into(scores.view(), v.view(), true, 1e-6, block);
         for r in 0..14 {
             assert_eq!(&packed.row(r)[..4], want.row(r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn chunked_causal_matches_per_token_across_blocks() {
+        // ADR-003 invariant: every block size (B=1, tiny, L-divisor,
+        // non-divisor, B=L, B>L) reproduces the per-token reference.
+        let phi_q = rand_mat(33, 7, 101).map(|x| x.abs());
+        let phi_k = rand_mat(33, 7, 102).map(|x| x.abs());
+        let v = rand_mat(33, 5, 103);
+        let want = linear_attention_causal(&phi_q, &phi_k, &v, 1e-6);
+        for block in [1usize, 3, 8, 11, 33, 40] {
+            let got = linear_attention_causal_chunked(&phi_q, &phi_k, &v, 1e-6, block);
+            for (i, (a, b)) in got.data.iter().zip(want.data.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                    "block {block} elem {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_continues_existing_state() {
+        // Two prefill_chunked_into calls over a split sequence must equal
+        // the one-shot per-token causal pass — the serving-continuation
+        // contract.
+        let phi_q = rand_mat(20, 6, 104).map(|x| x.abs());
+        let phi_k = rand_mat(20, 6, 105).map(|x| x.abs());
+        let v = rand_mat(20, 4, 106);
+        let want = linear_attention_causal(&phi_q, &phi_k, &v, 1e-6);
+        let mut st = StreamingState::new(6, 4);
+        let mut scratch = Scratch::new();
+        let mut got = Mat::zeros(20, 4);
+        let split = 13;
+        let (top, bot) = got.view_mut().split_rows_at(split);
+        st.prefill_chunked_into(
+            phi_q.view().row_block(0, split),
+            phi_k.view().row_block(0, split),
+            v.view().row_block(0, split),
+            1e-6,
+            5,
+            &mut scratch,
+            top,
+        );
+        st.prefill_chunked_into(
+            phi_q.view().row_block(split, 20),
+            phi_k.view().row_block(split, 20),
+            v.view().row_block(split, 20),
+            1e-6,
+            5,
+            &mut scratch,
+            bot,
+        );
+        assert_eq!(st.len, 20);
+        for (i, (a, b)) in got.data.iter().zip(want.data.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "elem {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn chunked_parallel_path_matches_sequential() {
+        // Force a size that crosses the parallel threshold (l·m·(B+2d_v)
+        // ≥ 2·PAR_FLOPS at B=16) and check it against the per-token
+        // reference — exercises the 3-phase fan-out when threads exist.
+        let phi_q = rand_mat(300, 48, 107).map(|x| x.abs());
+        let phi_k = rand_mat(300, 48, 108).map(|x| x.abs());
+        let v = rand_mat(300, 24, 109);
+        let want = linear_attention_causal(&phi_q, &phi_k, &v, 1e-6);
+        let got = linear_attention_causal_chunked(&phi_q, &phi_k, &v, 1e-6, 16);
+        for (i, (a, b)) in got.data.iter().zip(want.data.iter()).enumerate() {
+            assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()), "elem {i}: {a} vs {b}");
         }
     }
 

@@ -10,7 +10,7 @@
 pub mod poly;
 pub mod prf;
 
-use crate::math::linalg::{Mat, MatView};
+use crate::math::linalg::{Mat, MatView, MatViewMut};
 
 /// A map from token rows to feature rows. Implementations must be
 /// deterministic given their construction-time seed so that Q and K paths
@@ -19,16 +19,26 @@ use crate::math::linalg::{Mat, MatView};
 /// Inputs arrive as strided [`MatView`]s (ADR-002): a head's column block,
 /// a chunk's row range, or a single decode row wrapped via
 /// [`MatView::from_row`] all map without being copied into an owned `Mat`
-/// first. Feature *outputs* are owned (they are freshly computed data).
+/// first. Outputs are written through a strided [`MatViewMut`]
+/// (ADR-003) — typically a buffer recycled from a per-worker
+/// [`Scratch`](crate::math::linalg::Scratch) arena — with [`FeatureMap::map`]
+/// as the allocating convenience wrapper.
 pub trait FeatureMap: Send + Sync {
     /// Input (model/head) dimension.
     fn input_dim(&self) -> usize;
     /// Output feature dimension.
     fn dim(&self) -> usize;
-    /// Map each row of `x` (shape `L × input_dim`) to features
-    /// (`L × dim`). `pos0` is the absolute position of row 0 — only
-    /// position-dependent maps (cosformer) read it.
-    fn map(&self, x: MatView, pos0: usize) -> Mat;
+    /// Map each row of `x` (shape `L × input_dim`) into `out`
+    /// (`L × dim`, possibly strided), overwriting every element. `pos0` is
+    /// the absolute position of row 0 — only position-dependent maps
+    /// (cosformer) read it.
+    fn map_into(&self, x: MatView, pos0: usize, out: MatViewMut);
+    /// Allocating wrapper over [`FeatureMap::map_into`].
+    fn map(&self, x: MatView, pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.map_into(x, pos0, out.view_mut());
+        out
+    }
 }
 
 /// Dispatchable boxed feature map.

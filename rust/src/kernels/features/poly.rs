@@ -13,7 +13,9 @@
 
 use super::FeatureMap;
 use crate::math::fft::{circular_convolve, next_pow2};
-use crate::math::linalg::{dot, matmul, matmul_a_bt, Mat, MatView};
+use crate::math::linalg::{
+    dot, matmul_a_bt, matmul_a_bt_into, matmul_into, Mat, MatView, MatViewMut,
+};
 use crate::math::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -38,9 +40,8 @@ impl FeatureMap for PolyExact {
         self.d * self.d
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
         assert_eq!(x.cols(), self.d);
-        let mut out = Mat::zeros(x.rows(), self.d * self.d);
         for r in 0..x.rows() {
             let row = x.row(r);
             let orow = out.row_mut(r);
@@ -50,7 +51,6 @@ impl FeatureMap for PolyExact {
                 }
             }
         }
-        out
     }
 }
 
@@ -107,12 +107,13 @@ impl FeatureMap for Anchor {
         self.anchors.rows
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
-        let mut proj = matmul_a_bt(x, &self.anchors); // L × P of xᵀaᵢ
-        for v in proj.data.iter_mut() {
-            *v = *v * *v * self.scale;
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
+        matmul_a_bt_into(x, self.anchors.view(), out.reborrow()); // L × P of xᵀaᵢ
+        for r in 0..out.rows() {
+            for v in out.row_mut(r).iter_mut() {
+                *v = *v * *v * self.scale;
+            }
         }
-        proj
     }
 }
 
@@ -152,12 +153,14 @@ impl FeatureMap for Nystrom {
         self.anchors.rows
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
+    fn map_into(&self, x: MatView, _pos0: usize, out: MatViewMut) {
+        // whitening needs the full K_xA panel as a second operand, so this
+        // map keeps one internal temporary (not on the zero-alloc path).
         let mut kxa = matmul_a_bt(x, &self.anchors);
         for v in kxa.data.iter_mut() {
             *v = *v * *v;
         }
-        matmul(&kxa, &self.whitener)
+        matmul_into(kxa.view(), self.whitener.view(), out);
     }
 }
 
@@ -194,14 +197,14 @@ impl FeatureMap for RandomMaclaurin {
         self.r.rows
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
-        let pr = matmul_a_bt(x, &self.r);
-        let ps = matmul_a_bt(x, &self.s);
-        let mut out = pr;
-        for (o, &b) in out.data.iter_mut().zip(ps.data.iter()) {
-            *o = *o * b * self.scale;
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
+        matmul_a_bt_into(x, self.r.view(), out.reborrow());
+        let ps = matmul_a_bt(x, &self.s); // second Rademacher panel
+        for r in 0..out.rows() {
+            for (o, &b) in out.row_mut(r).iter_mut().zip(ps.row(r)) {
+                *o = *o * b * self.scale;
+            }
         }
-        out
     }
 }
 
@@ -248,8 +251,7 @@ impl FeatureMap for TensorSketch {
         self.d_out
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
-        let mut out = Mat::zeros(x.rows(), self.d_out);
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
         for r in 0..x.rows() {
             let row = x.row(r);
             let c1 = self.count_sketch(row, &self.h1, &self.s1);
@@ -259,7 +261,6 @@ impl FeatureMap for TensorSketch {
                 *o = *v as f32;
             }
         }
-        out
     }
 }
 

@@ -11,7 +11,7 @@
 //!   (Qin et al. 2022).
 
 use super::FeatureMap;
-use crate::math::linalg::{matmul_a_bt, Mat, MatView};
+use crate::math::linalg::{matmul_a_bt_into, Mat, MatView, MatViewMut};
 use crate::math::rng::Rng;
 
 /// Positive random features for the spherical exponential kernel at scale
@@ -46,20 +46,25 @@ impl FeatureMap for Prf {
         self.omega.rows
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
         let sqrt2s = (2.0 * self.s).sqrt() as f32;
         let s = self.s as f32;
-        let mut proj = matmul_a_bt(x, &self.omega); // L × D of ωᵢᵀu
-        for v in proj.data.iter_mut() {
-            *v = (sqrt2s * *v - s).exp() * self.scale;
+        matmul_a_bt_into(x, self.omega.view(), out.reborrow()); // L × D of ωᵢᵀu
+        for r in 0..out.rows() {
+            for v in out.row_mut(r).iter_mut() {
+                *v = (sqrt2s * *v - s).exp() * self.scale;
+            }
         }
-        proj
     }
 }
 
 /// Performer positive softmax features for general (non-unit) inputs:
 /// `φ(u) = D^{−1/2} exp(ωᵀu − ‖u‖²/2)`, unbiased for `e^{uᵀv}`.
 pub struct FavorSoftmax {
+    /// `ω / d^{1/4}` — softmax attention applies `exp(qᵀk/√d)`, and the
+    /// standard Performer split of that `1/√d` as `q/d^{1/4}`, `k/d^{1/4}`
+    /// is folded into the projection at construction, so `map` never
+    /// materializes a scaled copy of its input.
     omega: Mat,
     scale: f32,
 }
@@ -67,10 +72,9 @@ pub struct FavorSoftmax {
 impl FavorSoftmax {
     pub fn new(d_features: usize, d: usize, seed: u64) -> Self {
         let mut rng = Rng::new(seed);
-        FavorSoftmax {
-            omega: Mat::randn(d_features, d, &mut rng),
-            scale: 1.0 / (d_features as f32).sqrt(),
-        }
+        let mut omega = Mat::randn(d_features, d, &mut rng);
+        omega.scale(1.0 / (d as f32).powf(0.25));
+        FavorSoftmax { omega, scale: 1.0 / (d_features as f32).sqrt() }
     }
 }
 
@@ -83,19 +87,17 @@ impl FeatureMap for FavorSoftmax {
         self.omega.rows
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
-        // softmax attention applies exp(qᵀk/√d); fold the 1/√d into the
-        // inputs as q/d^{1/4}, k/d^{1/4} — standard Performer practice.
-        let root = (x.cols() as f32).powf(0.25);
-        let scaled = x.map(|v| v / root);
-        let mut proj = matmul_a_bt(&scaled, &self.omega);
-        for r in 0..proj.rows {
-            let n2: f32 = scaled.row(r).iter().map(|v| v * v).sum();
-            for v in proj.row_mut(r).iter_mut() {
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
+        // ωᵀ(u/d^{1/4}) via the pre-scaled projection; the Gaussian-norm
+        // correction uses ‖u/d^{1/4}‖² = ‖u‖²/√d straight off the raw row.
+        let inv_sqrt_d = 1.0 / (x.cols() as f32).sqrt();
+        matmul_a_bt_into(x, self.omega.view(), out.reborrow());
+        for r in 0..out.rows() {
+            let n2: f32 = x.row(r).iter().map(|v| v * v).sum::<f32>() * inv_sqrt_d;
+            for v in out.row_mut(r).iter_mut() {
                 *v = (*v - 0.5 * n2).exp() * self.scale;
             }
         }
-        proj
     }
 }
 
@@ -125,12 +127,13 @@ impl FeatureMap for FavorRelu {
         self.omega.rows
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
-        let mut proj = matmul_a_bt(x, &self.omega);
-        for v in proj.data.iter_mut() {
-            *v = v.max(0.0) * self.scale;
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
+        matmul_a_bt_into(x, self.omega.view(), out.reborrow());
+        for r in 0..out.rows() {
+            for v in out.row_mut(r).iter_mut() {
+                *v = v.max(0.0) * self.scale;
+            }
         }
-        proj
     }
 }
 
@@ -164,8 +167,12 @@ impl FeatureMap for EluPlusOne {
         self.d
     }
 
-    fn map(&self, x: MatView, _pos0: usize) -> Mat {
-        x.map(elu_plus_one)
+    fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
+        for r in 0..x.rows() {
+            for (o, &v) in out.row_mut(r).iter_mut().zip(x.row(r)) {
+                *o = elu_plus_one(v);
+            }
+        }
     }
 }
 
@@ -196,8 +203,7 @@ impl FeatureMap for CosformerMap {
         2 * self.d
     }
 
-    fn map(&self, x: MatView, pos0: usize) -> Mat {
-        let mut out = Mat::zeros(x.rows(), 2 * self.d);
+    fn map_into(&self, x: MatView, pos0: usize, mut out: MatViewMut) {
         let m = self.horizon as f32;
         for r in 0..x.rows() {
             let i = (pos0 + r).min(self.horizon - 1) as f32;
@@ -211,7 +217,6 @@ impl FeatureMap for CosformerMap {
                 orow[self.d + c] = relu * sin_t;
             }
         }
-        out
     }
 }
 

@@ -10,14 +10,19 @@
 //!   a head dimension yields a boxed [`AttentionBackend`].
 //! * [`AttentionBackend::forward`] / [`AttentionBackend::forward_into`] —
 //!   one-shot attention over a full sequence (benches, offline eval).
-//! * [`AttentionBackend::new_state`] / [`AttentionBackend::prefill`] /
-//!   [`AttentionBackend::decode`] — the serving session: an opaque
+//! * [`AttentionBackend::new_state`] / [`AttentionBackend::prefill_into`] /
+//!   [`AttentionBackend::decode_with`] — the serving session: an opaque
 //!   [`AttnState`] absorbs key/value chunks and answers queries
 //!   incrementally. For linear mechanisms the state is the paper's
-//!   constant-size `(S = Ψ(K)ᵀV, z = Ψ(K)ᵀ1)` streaming pair (Eq. 11);
+//!   constant-size `(S = Ψ(K)ᵀV, z = Ψ(K)ᵀ1)` streaming pair (Eq. 11),
+//!   streamed through the chunkwise-parallel causal engine (ADR-003);
 //!   for quadratic mechanisms it is a bounded rolling KV window, so the
 //!   coordinator can serve the exact softmax/Yat baselines for
-//!   apples-to-apples comparisons with SLAY.
+//!   apples-to-apples comparisons with SLAY. The `_into`/`_with` forms
+//!   take a per-worker [`Scratch`] arena and a caller-owned output, so a
+//!   warmed-up serving loop performs zero heap allocations
+//!   (`tests/alloc_discipline.rs`); [`AttentionBackend::prefill`] /
+//!   [`AttentionBackend::decode`] are the allocating wrappers.
 //! * [`MultiHeadAttention`] — per-head backends over packed `L × d_model`
 //!   tensors with std-thread fan-out across heads.
 //!
@@ -46,7 +51,7 @@ pub mod features;
 pub mod slay;
 pub mod yat;
 
-use crate::math::linalg::{dot, Mat, MatView, MatViewMut};
+use crate::math::linalg::{dot, Mat, MatView, MatViewMut, Scratch};
 use config::Mechanism;
 use engine::StreamingState;
 use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
@@ -79,20 +84,57 @@ pub trait AttentionBackend: Send + Sync {
     /// Fresh per-sequence session state for value dimension `d_v`.
     fn new_state(&self, d_v: usize) -> AttnState;
 
-    /// Absorb a chunk of (Q, K, V) rows into `state`, returning the causal
-    /// attention outputs for the chunk's query rows. Positions continue
-    /// from the tokens the state has already absorbed.
+    /// Absorb a chunk of (Q, K, V) rows into `state`, writing the causal
+    /// attention outputs for the chunk's query rows through `out`
+    /// (`q.rows() × d_v`, possibly strided). Positions continue from the
+    /// tokens the state has already absorbed.
+    ///
+    /// This is the zero-allocation serving entry (ADR-003): feature rows,
+    /// block scores and projections all come from `scratch`, so once the
+    /// arena is warm a steady-state prefill chunk touches the heap only
+    /// for whatever the *caller* allocates (guarded by
+    /// `tests/alloc_discipline.rs`). Linear mechanisms stream through the
+    /// chunkwise-parallel causal engine.
+    fn prefill_into(
+        &self,
+        scratch: &mut Scratch,
+        state: &mut AttnState,
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        out: MatViewMut,
+    ) -> anyhow::Result<()>;
+
+    /// Allocating convenience over [`AttentionBackend::prefill_into`]
+    /// (fresh scratch, owned result).
     fn prefill(
         &self,
         state: &mut AttnState,
         q: MatView,
         k: MatView,
         v: MatView,
-    ) -> anyhow::Result<Mat>;
+    ) -> anyhow::Result<Mat> {
+        let mut y = Mat::zeros(q.rows(), v.cols());
+        self.prefill_into(&mut Scratch::new(), state, q, k, v, y.view_mut())?;
+        Ok(y)
+    }
 
     /// Single-token decode step: absorb one (k, v) row and write the
     /// attention output for `q` into `out` (`d_v` floats). The row slices
-    /// are borrowed as-is — no copies on the per-token path.
+    /// are borrowed as-is, and all internals come from `scratch` — the
+    /// zero-allocation decode path (ADR-003).
+    fn decode_with(
+        &self,
+        scratch: &mut Scratch,
+        state: &mut AttnState,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) -> anyhow::Result<()>;
+
+    /// Allocating convenience over [`AttentionBackend::decode_with`]
+    /// (fresh scratch per call).
     fn decode(
         &self,
         state: &mut AttnState,
@@ -100,7 +142,9 @@ pub trait AttentionBackend: Send + Sync {
         k: &[f32],
         v: &[f32],
         out: &mut [f32],
-    ) -> anyhow::Result<()>;
+    ) -> anyhow::Result<()> {
+        self.decode_with(&mut Scratch::new(), state, q, k, v, out)
+    }
 
     /// Full attention forward writing into `out` (`q.rows() × v.cols()`,
     /// possibly a strided block of a packed tensor): `out = attend(Q, K, V)`
@@ -131,24 +175,13 @@ pub trait AttentionBackend: Send + Sync {
     /// — the quantity whose positivity Fig. 7/8 studies.
     fn denominators(&self, q: MatView, k: MatView, causal: bool) -> Vec<f32>;
 
-    /// Serving batching hook: map Q/K rows (a chunk view straight off the
-    /// arrival buffer) to feature rows. `pos0` is the sequence position of
-    /// row 0 — the worker passes the session's true `state.len()`. Returns
-    /// `None` for mechanisms without a feature decomposition; callers then
-    /// fall back to [`AttentionBackend::prefill`].
+    /// Map Q/K rows (a chunk view straight off the arrival buffer) to
+    /// feature rows — the diagnostic/bench accessor to the linear
+    /// mechanisms' feature decomposition. `pos0` is the sequence position
+    /// of row 0. Returns `None` for quadratic mechanisms. (Serving no
+    /// longer needs this hook: [`AttentionBackend::prefill_into`] maps
+    /// internally through the worker's scratch arena.)
     fn map_qk(&self, q: MatView, k: MatView, pos0: usize) -> Option<(Mat, Mat)>;
-
-    /// Companion to [`AttentionBackend::map_qk`]: stream pre-mapped feature
-    /// rows through `state`, returning outputs for the chunk. Callers
-    /// select sub-ranges with row-block views instead of an offset
-    /// parameter.
-    fn prefill_mapped(
-        &self,
-        state: &mut AttnState,
-        phi_q: MatView,
-        phi_k: MatView,
-        v: MatView,
-    ) -> anyhow::Result<Mat>;
 }
 
 /// Build an operator for head dimension `d`. `horizon` bounds the
@@ -345,6 +378,69 @@ struct LinearBackend {
     delta: f32,
 }
 
+impl LinearBackend {
+    /// Stream pre-mapped feature rows through the state with the
+    /// chunkwise-parallel causal engine (ADR-003), writing outputs
+    /// through `out`.
+    fn stream_mapped(
+        &self,
+        scratch: &mut Scratch,
+        state: &mut AttnState,
+        phi_q: MatView,
+        phi_k: MatView,
+        v: MatView,
+        out: MatViewMut,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            phi_q.rows() == v.rows() && phi_q.rows() == phi_k.rows(),
+            "prefill: row mismatch phi_q={} phi_k={} v={}",
+            phi_q.rows(),
+            phi_k.rows(),
+            v.rows()
+        );
+        let st = state.linear_mut()?;
+        anyhow::ensure!(
+            phi_q.cols() == st.m && v.cols() == st.d_v,
+            "prefill: state shape (m={}, d_v={}) vs features m={}, values d_v={}",
+            st.m,
+            st.d_v,
+            phi_q.cols(),
+            v.cols()
+        );
+        anyhow::ensure!(
+            out.rows() == v.rows() && out.cols() == v.cols(),
+            "prefill: out is {}x{}, need {}x{}",
+            out.rows(),
+            out.cols(),
+            v.rows(),
+            v.cols()
+        );
+        if self.maps.positive() {
+            st.prefill_chunked_into(
+                phi_q,
+                phi_k,
+                v,
+                self.delta,
+                engine::causal_block(),
+                scratch,
+                out,
+            );
+        } else {
+            // Signed-feature estimators (LaplaceOnly, RM/TS polys) can
+            // cancel denominators to ~0, where the chunked engine's
+            // summation reorder is amplified arbitrarily through
+            // 1/(den+δ) — keep the per-token reference order for them
+            // (ADR-003; matches the decode path token-for-token).
+            let mut out = out;
+            for r in 0..v.rows() {
+                st.append(phi_k.row(r), v.row(r));
+                st.query_into(phi_q.row(r), self.delta, out.row_mut(r));
+            }
+        }
+        Ok(())
+    }
+}
+
 impl AttentionBackend for LinearBackend {
     fn mechanism(&self) -> &Mechanism {
         &self.mech
@@ -362,21 +458,38 @@ impl AttentionBackend for LinearBackend {
         AttnState { inner: StateInner::Linear(StreamingState::new(self.maps.dim(), d_v)) }
     }
 
-    fn prefill(
+    fn prefill_into(
         &self,
+        scratch: &mut Scratch,
         state: &mut AttnState,
         q: MatView,
         k: MatView,
         v: MatView,
-    ) -> anyhow::Result<Mat> {
+        out: MatViewMut,
+    ) -> anyhow::Result<()> {
         let pos0 = state.len();
-        let phi_q = self.maps.map_q(q, pos0);
-        let phi_k = self.maps.map_k(k, pos0);
-        self.prefill_mapped(state, phi_q.view(), phi_k.view(), v)
+        let l = q.rows();
+        let m = self.maps.dim();
+        let mut q_buf = scratch.take(l * m);
+        let mut k_buf = scratch.take(k.rows() * m);
+        self.maps.map_q_into(q, pos0, scratch, MatViewMut::new(&mut q_buf, l, m));
+        self.maps.map_k_into(k, pos0, scratch, MatViewMut::new(&mut k_buf, k.rows(), m));
+        let res = self.stream_mapped(
+            scratch,
+            state,
+            MatView::new(&q_buf, l, m),
+            MatView::new(&k_buf, k.rows(), m),
+            v,
+            out,
+        );
+        scratch.put(k_buf);
+        scratch.put(q_buf);
+        res
     }
 
-    fn decode(
+    fn decode_with(
         &self,
+        scratch: &mut Scratch,
         state: &mut AttnState,
         q: &[f32],
         k: &[f32],
@@ -384,8 +497,13 @@ impl AttentionBackend for LinearBackend {
         out: &mut [f32],
     ) -> anyhow::Result<()> {
         let pos0 = state.len();
-        let phi_q = self.maps.map_q(MatView::from_row(q), pos0);
-        let phi_k = self.maps.map_k(MatView::from_row(k), pos0);
+        let m = self.maps.dim();
+        let mut q_buf = scratch.take(m);
+        let mut k_buf = scratch.take(m);
+        self.maps
+            .map_q_into(MatView::from_row(q), pos0, scratch, MatViewMut::new(&mut q_buf, 1, m));
+        self.maps
+            .map_k_into(MatView::from_row(k), pos0, scratch, MatViewMut::new(&mut k_buf, 1, m));
         let st = state.linear_mut()?;
         anyhow::ensure!(
             v.len() == st.d_v && out.len() == st.d_v,
@@ -394,8 +512,10 @@ impl AttentionBackend for LinearBackend {
             v.len(),
             out.len()
         );
-        st.append(phi_k.row(0), v);
-        st.query_into(phi_q.row(0), self.delta, out);
+        st.append(&k_buf, v);
+        st.query_into(&q_buf, self.delta, out);
+        scratch.put(k_buf);
+        scratch.put(q_buf);
         Ok(())
     }
 
@@ -410,7 +530,13 @@ impl AttentionBackend for LinearBackend {
     ) {
         let phi_q = self.maps.map_q(q, pos0);
         let phi_k = self.maps.map_k(k, pos0);
-        engine::linear_attention_into(phi_q.view(), phi_k.view(), v, causal, self.delta, out);
+        if causal && !self.maps.positive() {
+            // Same signed-feature caveat as the prefill path: keep the
+            // per-token summation order (ADR-003).
+            engine::linear_attention_causal_into(phi_q.view(), phi_k.view(), v, self.delta, out);
+        } else {
+            engine::linear_attention_into(phi_q.view(), phi_k.view(), v, causal, self.delta, out);
+        }
     }
 
     fn score_matrix(&self, _q: MatView, _k: MatView) -> Option<Mat> {
@@ -437,37 +563,6 @@ impl AttentionBackend for LinearBackend {
     fn map_qk(&self, q: MatView, k: MatView, pos0: usize) -> Option<(Mat, Mat)> {
         Some((self.maps.map_q(q, pos0), self.maps.map_k(k, pos0)))
     }
-
-    fn prefill_mapped(
-        &self,
-        state: &mut AttnState,
-        phi_q: MatView,
-        phi_k: MatView,
-        v: MatView,
-    ) -> anyhow::Result<Mat> {
-        anyhow::ensure!(
-            phi_q.rows() == v.rows() && phi_q.rows() == phi_k.rows(),
-            "prefill_mapped: row mismatch phi_q={} phi_k={} v={}",
-            phi_q.rows(),
-            phi_k.rows(),
-            v.rows()
-        );
-        let st = state.linear_mut()?;
-        anyhow::ensure!(
-            phi_q.cols() == st.m && v.cols() == st.d_v,
-            "prefill_mapped: state shape (m={}, d_v={}) vs features m={}, values d_v={}",
-            st.m,
-            st.d_v,
-            phi_q.cols(),
-            v.cols()
-        );
-        let mut y = Mat::zeros(v.rows(), v.cols());
-        for r in 0..v.rows() {
-            st.append(phi_k.row(r), v.row(r));
-            st.query_into(phi_q.row(r), self.delta, y.row_mut(r));
-        }
-        Ok(y)
-    }
 }
 
 /// Quadratic mechanisms: exact L×L scores one-shot, rolling KV window in
@@ -481,39 +576,49 @@ struct QuadraticBackend {
 
 impl QuadraticBackend {
     /// Scores of one raw query row against every key currently in the
-    /// window — the streaming counterpart of [`AttentionBackend::score_matrix`]'s
-    /// rows. Softmax scores are stabilized by the window-max, which cancels
-    /// in the normalization up to the δ floor.
-    fn window_scores(&self, q: &[f32], win: &KvWindow) -> Vec<f32> {
+    /// window, written into a reusable buffer — the streaming counterpart
+    /// of [`AttentionBackend::score_matrix`]'s rows. Softmax scores are
+    /// stabilized by the window-max, which cancels in the normalization up
+    /// to the δ floor.
+    fn window_scores_into(&self, q: &[f32], win: &KvWindow, scores: &mut Vec<f32>) {
+        scores.clear();
         match &self.mech {
             Mechanism::Standard => {
                 let scale = 1.0 / (self.d as f32).sqrt();
-                let logits: Vec<f32> =
-                    (0..win.rows).map(|j| dot(q, win.key(j)) * scale).collect();
-                let mx = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                logits.into_iter().map(|x| (x - mx).exp()).collect()
+                scores.extend((0..win.rows).map(|j| dot(q, win.key(j)) * scale));
+                let mx = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                for x in scores.iter_mut() {
+                    *x = (*x - mx).exp();
+                }
             }
-            Mechanism::Yat { eps } => (0..win.rows)
-                .map(|j| yat::e_product(q, win.key(j), *eps as f32))
-                .collect(),
+            Mechanism::Yat { eps } => {
+                scores.extend((0..win.rows).map(|j| yat::e_product(q, win.key(j), *eps as f32)));
+            }
             Mechanism::YatSpherical { eps } => {
                 let nq = dot(q, q).sqrt().max(1e-12);
-                (0..win.rows)
-                    .map(|j| {
-                        let kj = win.key(j);
-                        let nk = dot(kj, kj).sqrt().max(1e-12);
-                        yat::e_sph(dot(q, kj) / (nq * nk), *eps as f32)
-                    })
-                    .collect()
+                scores.extend((0..win.rows).map(|j| {
+                    let kj = win.key(j);
+                    let nk = dot(kj, kj).sqrt().max(1e-12);
+                    yat::e_sph(dot(q, kj) / (nq * nk), *eps as f32)
+                }));
             }
             _ => unreachable!("linear mechanism in quadratic backend"),
         }
     }
 
     /// One streamed token: push (k, v), then attend q over the window.
-    fn step(&self, win: &mut KvWindow, q: &[f32], k: &[f32], v: &[f32], out: &mut [f32]) {
+    /// `scores` is the caller's reusable buffer (scratch-recycled).
+    fn step(
+        &self,
+        win: &mut KvWindow,
+        scores: &mut Vec<f32>,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        out: &mut [f32],
+    ) {
         win.push(k, v);
-        let scores = self.window_scores(q, win);
+        self.window_scores_into(q, win, scores);
         out.fill(0.0);
         let mut den = 0.0f32;
         for (j, &s) in scores.iter().enumerate() {
@@ -546,13 +651,15 @@ impl AttentionBackend for QuadraticBackend {
         AttnState { inner: StateInner::Window(KvWindow::new(self.d, d_v, self.window)) }
     }
 
-    fn prefill(
+    fn prefill_into(
         &self,
+        scratch: &mut Scratch,
         state: &mut AttnState,
         q: MatView,
         k: MatView,
         v: MatView,
-    ) -> anyhow::Result<Mat> {
+        mut out: MatViewMut,
+    ) -> anyhow::Result<()> {
         anyhow::ensure!(
             q.rows() == k.rows() && k.rows() == v.rows(),
             "prefill: row mismatch q={} k={} v={}",
@@ -569,15 +676,28 @@ impl AttentionBackend for QuadraticBackend {
             q.cols(),
             v.cols()
         );
-        let mut y = Mat::zeros(v.rows(), v.cols());
+        anyhow::ensure!(
+            out.rows() == v.rows() && out.cols() == v.cols(),
+            "prefill: out is {}x{}, need {}x{}",
+            out.rows(),
+            out.cols(),
+            v.rows(),
+            v.cols()
+        );
+        // Length is managed by step(); taking at the post-chunk row count
+        // guarantees the capacity up front so the in-loop extends never
+        // reallocate.
+        let mut scores = scratch.take((win.rows + v.rows()).min(win.cap));
         for r in 0..v.rows() {
-            self.step(win, q.row(r), k.row(r), v.row(r), y.row_mut(r));
+            self.step(win, &mut scores, q.row(r), k.row(r), v.row(r), out.row_mut(r));
         }
-        Ok(y)
+        scratch.put(scores);
+        Ok(())
     }
 
-    fn decode(
+    fn decode_with(
         &self,
+        scratch: &mut Scratch,
         state: &mut AttnState,
         q: &[f32],
         k: &[f32],
@@ -593,7 +713,9 @@ impl AttentionBackend for QuadraticBackend {
             q.len(),
             v.len()
         );
-        self.step(win, q, k, v, out);
+        let mut scores = scratch.take((win.rows + 1).min(win.cap));
+        self.step(win, &mut scores, q, k, v, out);
+        scratch.put(scores);
         Ok(())
     }
 
@@ -642,16 +764,6 @@ impl AttentionBackend for QuadraticBackend {
 
     fn map_qk(&self, _q: MatView, _k: MatView, _pos0: usize) -> Option<(Mat, Mat)> {
         None
-    }
-
-    fn prefill_mapped(
-        &self,
-        _state: &mut AttnState,
-        _phi_q: MatView,
-        _phi_k: MatView,
-        _v: MatView,
-    ) -> anyhow::Result<Mat> {
-        anyhow::bail!("quadratic mechanisms have no feature decomposition (map_qk is None)")
     }
 }
 
@@ -1080,6 +1192,71 @@ mod tests {
         for c in 0..8 {
             let want = suffix.get(3, c);
             assert!((out[c] - want).abs() < 1e-4 * (1.0 + want.abs()), "{} vs {want}", out[c]);
+        }
+    }
+
+    #[test]
+    fn signed_feature_configs_keep_per_token_causal_order() {
+        // Signed estimators (here: RM-poly SLAY) route causal attention
+        // through the per-token reference order — block reordering near a
+        // cancelling denominator is amplified arbitrarily through
+        // 1/(den+δ), so their outputs must stay bit-identical to the
+        // per-token engine (ADR-003).
+        use crate::kernels::config::PolyMethod;
+        let cfg = SlayConfig { poly: PolyMethod::RandomMaclaurin, n_poly: 4, ..Default::default() };
+        let op = build(&Mechanism::Slay(cfg), 8, 0).unwrap();
+        let (q, k, v) = qkv(10, 8, 77);
+        let (phi_q, phi_k) = op.map_qk(q.view(), k.view(), 0).unwrap();
+        let want = engine::linear_attention_causal(&phi_q, &phi_k, &v, op.delta());
+        let got = op.forward(q.view(), k.view(), v.view(), true, 0);
+        assert_eq!(got.data, want.data, "signed-feature causal path must be per-token ordered");
+        // and the session prefill takes the same order
+        let mut state = op.new_state(8);
+        let streamed = op.prefill(&mut state, q.view(), k.view(), v.view()).unwrap();
+        assert_eq!(streamed.data, want.data);
+    }
+
+    #[test]
+    fn scratch_session_bit_identical_to_allocating_session() {
+        // The zero-alloc entries (prefill_into / decode_with) with a
+        // long-lived reused arena must reproduce the allocating wrappers
+        // exactly, for linear and quadratic backends alike.
+        let l = 13;
+        let (q, k, v) = qkv(l, 8, 99);
+        for mech in all_mechanisms() {
+            let op = build(&mech, 8, 64).unwrap();
+            let mut scratch = Scratch::new();
+            let mut s_a = op.new_state(8);
+            let mut s_b = op.new_state(8);
+            let split = 9;
+            let head_a = op
+                .prefill(
+                    &mut s_a,
+                    q.view().row_block(0, split),
+                    k.view().row_block(0, split),
+                    v.view().row_block(0, split),
+                )
+                .unwrap();
+            let mut head_b = Mat::zeros(split, 8);
+            op.prefill_into(
+                &mut scratch,
+                &mut s_b,
+                q.view().row_block(0, split),
+                k.view().row_block(0, split),
+                v.view().row_block(0, split),
+                head_b.view_mut(),
+            )
+            .unwrap();
+            assert_eq!(head_a.data, head_b.data, "{}: prefill differs", mech.name());
+            let mut out_a = vec![0.0f32; 8];
+            let mut out_b = vec![0.0f32; 8];
+            for i in split..l {
+                op.decode(&mut s_a, q.row(i), k.row(i), v.row(i), &mut out_a).unwrap();
+                op.decode_with(&mut scratch, &mut s_b, q.row(i), k.row(i), v.row(i), &mut out_b)
+                    .unwrap();
+                assert_eq!(out_a, out_b, "{}: decode token {i} differs", mech.name());
+            }
+            assert_eq!(s_b.len(), l);
         }
     }
 

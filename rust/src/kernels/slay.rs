@@ -15,7 +15,7 @@ use crate::kernels::features::poly::build_poly;
 use crate::kernels::features::prf::Prf;
 use crate::kernels::features::{kron_row, FeatureMap};
 use crate::math::fft::circular_convolve;
-use crate::math::linalg::{dot, Mat, MatView};
+use crate::math::linalg::{dot, normalize_rows_into, Mat, MatView, MatViewMut, Scratch};
 use crate::math::quadrature::GaussLaguerre;
 use crate::math::rng::Rng;
 
@@ -23,13 +23,31 @@ use crate::math::rng::Rng;
 ///
 /// Inputs are strided [`MatView`]s (ADR-002): head column-blocks, chunk
 /// row-ranges and single decode rows flow through without a gather copy.
+/// Outputs are written through strided [`MatViewMut`]s with every
+/// intermediate (normalized inputs, polynomial/PRF panels) drawn from the
+/// caller's [`Scratch`] arena (ADR-003), so a warmed-up serving loop maps
+/// features without touching the heap; `map_q`/`map_k` are the allocating
+/// wrappers.
 pub trait QKFeatures: Send + Sync {
     /// Final feature dimension m.
     fn dim(&self) -> usize;
-    /// Query features; `pos0` is the absolute position of row 0.
-    fn map_q(&self, x: MatView, pos0: usize) -> Mat;
-    /// Key features.
-    fn map_k(&self, x: MatView, pos0: usize) -> Mat;
+    /// Query features into `out` (`x.rows() × dim`); `pos0` is the
+    /// absolute position of row 0.
+    fn map_q_into(&self, x: MatView, pos0: usize, scratch: &mut Scratch, out: MatViewMut);
+    /// Key features into `out`.
+    fn map_k_into(&self, x: MatView, pos0: usize, scratch: &mut Scratch, out: MatViewMut);
+    /// Allocating wrapper over [`QKFeatures::map_q_into`].
+    fn map_q(&self, x: MatView, pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.map_q_into(x, pos0, &mut Scratch::new(), out.view_mut());
+        out
+    }
+    /// Allocating wrapper over [`QKFeatures::map_k_into`].
+    fn map_k(&self, x: MatView, pos0: usize) -> Mat {
+        let mut out = Mat::zeros(x.rows(), self.dim());
+        self.map_k_into(x, pos0, &mut Scratch::new(), out.view_mut());
+        out
+    }
     /// Whether the induced score estimates are guaranteed nonnegative.
     fn positive(&self) -> bool;
 }
@@ -45,12 +63,12 @@ impl QKFeatures for SymMap {
         self.inner.dim()
     }
 
-    fn map_q(&self, x: MatView, pos0: usize) -> Mat {
-        self.inner.map(x, pos0)
+    fn map_q_into(&self, x: MatView, pos0: usize, _scratch: &mut Scratch, out: MatViewMut) {
+        self.inner.map_into(x, pos0, out);
     }
 
-    fn map_k(&self, x: MatView, pos0: usize) -> Mat {
-        self.inner.map(x, pos0)
+    fn map_k_into(&self, x: MatView, pos0: usize, _scratch: &mut Scratch, out: MatViewMut) {
+        self.inner.map_into(x, pos0, out);
     }
 
     fn positive(&self) -> bool {
@@ -164,81 +182,117 @@ impl SlayFeatures {
         dot(qm.row(0), km.row(0))
     }
 
-    /// Shared forward for the symmetric fusions.
-    fn map_shared(&self, x: MatView) -> Mat {
-        let xn = x.normalized_rows();
-        let poly_f = self.poly.map(xn.view(), 0); // L × D_p
-        let mut out = Mat::zeros(x.rows(), self.dim);
+    /// Shared forward for the symmetric fusions, writing into `out` with
+    /// every intermediate (normalized inputs, polynomial panel, per-node
+    /// PRF panel) recycled from `scratch`.
+    fn map_shared_into(&self, x: MatView, scratch: &mut Scratch, mut out: MatViewMut) {
+        let l = x.rows();
+        let d = self.d;
+        assert_eq!(x.cols(), d, "SlayFeatures: input dim");
+        let mut xn_buf = scratch.take(l * d);
+        normalize_rows_into(x, &mut xn_buf);
+        let xn = MatView::new(&xn_buf, l, d);
+        let d_p = self.poly.dim();
+        let mut poly_buf = scratch.take(l * d_p); // L × D_p
+        self.poly.map_into(xn, 0, MatViewMut::new(&mut poly_buf, l, d_p));
+        let d_prf = self.cfg.d_prf;
+        let mut prf_buf = scratch.take(l * d_prf); // L × D, reused per node
         for (ni, node) in self.nodes.iter().enumerate() {
-            let mut prf_f = node.prf.map(xn.view(), 0); // L × D
+            node.prf.map_into(xn, 0, MatViewMut::new(&mut prf_buf, l, d_prf));
             let off = ni * self.per_node;
             match self.cfg.fusion {
                 Fusion::Explicit => {
                     // §Perf iteration: fold √w_r into the (L×D) PRF factor
                     // once instead of rescaling the (L×D_p·D) fused output.
-                    for v in prf_f.data.iter_mut() {
+                    for v in prf_buf.iter_mut() {
                         *v *= node.sqrt_w;
                     }
-                    for r in 0..x.rows() {
+                    for r in 0..l {
                         let orow = &mut out.row_mut(r)[off..off + self.per_node];
-                        kron_row(poly_f.row(r), prf_f.row(r), orow);
+                        kron_row(
+                            &poly_buf[r * d_p..(r + 1) * d_p],
+                            &prf_buf[r * d_prf..(r + 1) * d_prf],
+                            orow,
+                        );
                     }
                 }
                 Fusion::Hadamard => {
-                    for r in 0..x.rows() {
+                    for r in 0..l {
                         let orow = &mut out.row_mut(r)[off..off + self.per_node];
+                        let prow = &poly_buf[r * d_p..(r + 1) * d_p];
+                        let frow = &prf_buf[r * d_prf..(r + 1) * d_prf];
                         for (c, o) in orow.iter_mut().enumerate() {
-                            *o = poly_f.get(r, c) * prf_f.get(r, c) * node.sqrt_w;
+                            *o = prow[c] * frow[c] * node.sqrt_w;
                         }
                     }
                 }
                 Fusion::Sketch { .. } => {
                     let fuser = node.sketch.as_ref().unwrap();
-                    for r in 0..x.rows() {
+                    for r in 0..l {
                         let orow = &mut out.row_mut(r)[off..off + self.per_node];
-                        fuser.fuse(poly_f.row(r), prf_f.row(r), orow, node.sqrt_w);
+                        fuser.fuse(
+                            &poly_buf[r * d_p..(r + 1) * d_p],
+                            &prf_buf[r * d_prf..(r + 1) * d_prf],
+                            orow,
+                            node.sqrt_w,
+                        );
                     }
                 }
-                Fusion::LaplaceOnly => unreachable!("handled in map_q/map_k"),
+                Fusion::LaplaceOnly => unreachable!("handled in map_laplace_into"),
             }
         }
-        out
+        scratch.put(prf_buf);
+        scratch.put(poly_buf);
+        scratch.put(xn_buf);
     }
 
     /// Laplace-only features with the Appendix-F affine correction.
     /// Query:  `[√w_r·(C/2)·φ_r(q̂) …, 1,  q̂]`
     /// Key:    `[√w_r·(C/2)·φ_r(k̂) …, −C/4, −k̂/2]`
     /// so that `Ψ(q)ᵀΨ(k) = (C²/4)Σ w_r φφ − C/4 − q̂ᵀk̂/2`.
-    fn map_laplace(&self, x: MatView, is_query: bool) -> Mat {
-        let xn = x.normalized_rows();
+    fn map_laplace_into(
+        &self,
+        x: MatView,
+        is_query: bool,
+        scratch: &mut Scratch,
+        mut out: MatViewMut,
+    ) {
+        let l = x.rows();
+        let d = self.d;
+        assert_eq!(x.cols(), d, "SlayFeatures: input dim");
         let c = self.cfg.c() as f32;
-        let mut out = Mat::zeros(x.rows(), self.dim);
+        let mut xn_buf = scratch.take(l * d);
+        normalize_rows_into(x, &mut xn_buf);
+        let xn = MatView::new(&xn_buf, l, d);
+        let d_prf = self.cfg.d_prf;
+        let mut prf_buf = scratch.take(l * d_prf);
         for (ni, node) in self.nodes.iter().enumerate() {
-            let prf_f = node.prf.map(xn.view(), 0);
+            node.prf.map_into(xn, 0, MatViewMut::new(&mut prf_buf, l, d_prf));
             let off = ni * self.per_node;
             let scale = node.sqrt_w * c / 2.0;
-            for r in 0..x.rows() {
+            for r in 0..l {
                 let orow = &mut out.row_mut(r)[off..off + self.per_node];
-                for (c_i, o) in orow.iter_mut().enumerate() {
-                    *o = prf_f.get(r, c_i) * scale;
+                for (o, &f) in orow.iter_mut().zip(&prf_buf[r * d_prf..(r + 1) * d_prf]) {
+                    *o = f * scale;
                 }
             }
         }
         let base = self.per_node * self.cfg.r_nodes;
-        for r in 0..x.rows() {
+        for r in 0..l {
+            let xr = &xn_buf[r * d..(r + 1) * d];
+            let orow = out.row_mut(r);
             if is_query {
-                out.set(r, base, 1.0);
-                for c_i in 0..self.d {
-                    out.set(r, base + 1 + c_i, xn.get(r, c_i));
-                }
+                orow[base] = 1.0;
+                orow[base + 1..base + 1 + d].copy_from_slice(xr);
             } else {
-                out.set(r, base, -c / 4.0);
-                for c_i in 0..self.d {
-                    out.set(r, base + 1 + c_i, -0.5 * xn.get(r, c_i));
+                orow[base] = -c / 4.0;
+                for (o, &v) in orow[base + 1..base + 1 + d].iter_mut().zip(xr) {
+                    *o = -0.5 * v;
                 }
             }
         }
-        out
+        scratch.put(prf_buf);
+        scratch.put(xn_buf);
     }
 }
 
@@ -247,17 +301,17 @@ impl QKFeatures for SlayFeatures {
         self.dim
     }
 
-    fn map_q(&self, x: MatView, _pos0: usize) -> Mat {
+    fn map_q_into(&self, x: MatView, _pos0: usize, scratch: &mut Scratch, out: MatViewMut) {
         match self.cfg.fusion {
-            Fusion::LaplaceOnly => self.map_laplace(x, true),
-            _ => self.map_shared(x),
+            Fusion::LaplaceOnly => self.map_laplace_into(x, true, scratch, out),
+            _ => self.map_shared_into(x, scratch, out),
         }
     }
 
-    fn map_k(&self, x: MatView, _pos0: usize) -> Mat {
+    fn map_k_into(&self, x: MatView, _pos0: usize, scratch: &mut Scratch, out: MatViewMut) {
         match self.cfg.fusion {
-            Fusion::LaplaceOnly => self.map_laplace(x, false),
-            _ => self.map_shared(x),
+            Fusion::LaplaceOnly => self.map_laplace_into(x, false, scratch, out),
+            _ => self.map_shared_into(x, scratch, out),
         }
     }
 

@@ -127,14 +127,7 @@ impl Mat {
     /// paper). Rows with norm below `1e-12` are left untouched.
     pub fn normalize_rows(&mut self) {
         for r in 0..self.rows {
-            let row = self.row_mut(r);
-            let n: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
-            if n > 1e-12 {
-                let inv = 1.0 / n;
-                for x in row.iter_mut() {
-                    *x *= inv;
-                }
-            }
+            normalize_row(self.row_mut(r));
         }
     }
 
@@ -339,6 +332,34 @@ impl<'a> MatView<'a> {
     }
 }
 
+/// Normalize one row to unit L2 norm in place; rows with norm below
+/// `1e-12` are left untouched. The single definition behind
+/// [`Mat::normalize_rows`] and [`normalize_rows_into`].
+#[inline]
+fn normalize_row(row: &mut [f32]) {
+    let n: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if n > 1e-12 {
+        let inv = 1.0 / n;
+        for x in row.iter_mut() {
+            *x *= inv;
+        }
+    }
+}
+
+/// Row-wise unit-sphere projection of `x` into a flat row-major buffer —
+/// the scratch-backed counterpart of [`MatView::normalized_rows`] (same
+/// zero-row guard), used by the zero-allocation feature pipeline
+/// (ADR-003).
+pub fn normalize_rows_into(x: MatView, buf: &mut [f32]) {
+    let (l, d) = (x.rows(), x.cols());
+    debug_assert_eq!(buf.len(), l * d);
+    for r in 0..l {
+        let dst = &mut buf[r * d..(r + 1) * d];
+        dst.copy_from_slice(x.row(r));
+        normalize_row(dst);
+    }
+}
+
 impl<'a> From<&'a Mat> for MatView<'a> {
     #[inline]
     fn from(m: &'a Mat) -> Self {
@@ -493,6 +514,75 @@ impl<'a> From<&'a mut Mat> for MatViewMut<'a> {
 }
 
 // ---------------------------------------------------------------------------
+// Scratch arena
+// ---------------------------------------------------------------------------
+
+/// Reusable buffer arena for steady-state zero-allocation pipelines
+/// (ADR-003).
+///
+/// [`Scratch::take`] hands out an owned, zero-filled `Vec<f32>` of exactly
+/// `len` elements, recycling the smallest pooled buffer whose capacity
+/// already fits (best-fit — so interleaving call patterns with different
+/// buffer sizes, e.g. prefill chunks between decode steps, cannot keep
+/// regrowing small buffers into big slots). Once every size a call path
+/// needs has been seen, the arena stops allocating — the property
+/// `tests/alloc_discipline.rs` locks in for the serving hot path.
+///
+/// Ownership rules:
+/// * pair every `take` with a `put` once the buffer is dead — dropping the
+///   buffer instead is safe but forfeits its capacity;
+/// * buffers come back zeroed, so callers may treat them exactly like a
+///   fresh `vec![0.0; len]`;
+/// * a `Scratch` belongs to one thread at a time (`&mut` access only) —
+///   give each worker/thread its own arena rather than sharing one.
+#[derive(Default)]
+pub struct Scratch {
+    pool: Vec<Vec<f32>>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Scratch::default()
+    }
+
+    /// A zeroed buffer of `len` floats (allocation-free once a buffer of
+    /// sufficient capacity has been `put` back). The pool is a handful of
+    /// buffers at most, so the best-fit scan is noise next to the work
+    /// the buffer is taken for. Zero-filling is the safety contract the
+    /// accumulating consumers (`u += Ψ(K_b)ᵀV_b`, `z += colsum`) rely on;
+    /// it costs one write pass per take, which overwrite-only consumers
+    /// could skip — but that needs `set_len` on uninitialized memory, not
+    /// worth the unsafety at current buffer sizes.
+    pub fn take(&mut self, len: usize) -> Vec<f32> {
+        let mut pick: Option<usize> = None;
+        for (i, b) in self.pool.iter().enumerate() {
+            if b.capacity() < len {
+                continue;
+            }
+            let better = match pick {
+                None => true,
+                Some(j) => b.capacity() < self.pool[j].capacity(),
+            };
+            if better {
+                pick = Some(i);
+            }
+        }
+        let mut buf = match pick {
+            Some(i) => self.pool.swap_remove(i),
+            None => self.pool.pop().unwrap_or_default(),
+        };
+        buf.clear();
+        buf.resize(len, 0.0);
+        buf
+    }
+
+    /// Return a buffer to the pool for reuse.
+    pub fn put(&mut self, buf: Vec<f32>) {
+        self.pool.push(buf);
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Kernels
 // ---------------------------------------------------------------------------
 
@@ -540,6 +630,13 @@ pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// Problem-size floor (in multiply-accumulate flops) below which the
+/// threaded kernels stay single-threaded, and the per-thread work target
+/// when they do fan out (thread count scales as `flops / PAR_FLOPS` up to
+/// [`num_threads`]): a scoped-thread spawn costs ~tens of µs, so each
+/// spawn must buy at least this much arithmetic.
+pub const PAR_FLOPS: usize = 64 * 64 * 64;
+
 /// Number of worker threads used by the threaded matmul. Defaults to the
 /// available parallelism minus one (leader thread keeps a share), clamped
 /// to [1, 16]; override with `SLAY_THREADS`.
@@ -568,9 +665,7 @@ pub fn matmul<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> M
     c
 }
 
-/// `out = A · B` writing through a (possibly strided) mutable view — the
-/// zero-copy output path (e.g. one head's column block of a packed tensor).
-pub fn matmul_into(a: MatView, b: MatView, out: MatViewMut) {
+fn check_matmul_shapes(a: &MatView, b: &MatView, out: &MatViewMut) {
     assert_eq!(
         a.cols(),
         b.rows(),
@@ -589,9 +684,15 @@ pub fn matmul_into(a: MatView, b: MatView, out: MatViewMut) {
         a.rows(),
         b.cols()
     );
+}
+
+/// `out = A · B` writing through a (possibly strided) mutable view — the
+/// zero-copy output path (e.g. one head's column block of a packed tensor).
+pub fn matmul_into(a: MatView, b: MatView, out: MatViewMut) {
+    check_matmul_shapes(&a, &b, &out);
     let flops = a.rows() * a.cols() * b.cols();
-    let nt = num_threads();
-    if flops < 64 * 64 * 64 || nt == 1 || a.rows() < 2 {
+    let nt = num_threads().min((flops / PAR_FLOPS).max(1));
+    if nt == 1 || a.rows() < 2 {
         matmul_stripe(a, b, out);
         return;
     }
@@ -608,6 +709,13 @@ pub fn matmul_into(a: MatView, b: MatView, out: MatViewMut) {
             r0 += take;
         }
     });
+}
+
+/// Single-threaded [`matmul_into`] — a building block for callers (the
+/// chunkwise causal engine) that own the thread fan-out themselves.
+pub fn matmul_serial_into(a: MatView, b: MatView, out: MatViewMut) {
+    check_matmul_shapes(&a, &b, &out);
+    matmul_stripe(a, b, out);
 }
 
 /// One row stripe of `A·B` into `out` (same row count as `a`).
@@ -629,23 +737,74 @@ fn matmul_stripe(a: MatView, b: MatView, mut out: MatViewMut) {
     }
 }
 
-/// `C = Aᵀ · B` without materializing the transpose (A: k×m, B: k×n → m×n).
+/// `C = Aᵀ · B` without materializing the transpose (A: k×m, B: k×n → m×n),
+/// threaded over row stripes of the output — this is the `Ψ(K)ᵀV`
+/// workhorse of the linear-attention engines.
 pub fn matmul_at_b<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
     let (a, b) = (a.into(), b.into());
+    let mut c = Mat::zeros(a.cols(), b.cols());
+    matmul_at_b_acc_into(a, b, c.view_mut());
+    c
+}
+
+fn check_at_b_shapes(a: &MatView, b: &MatView, out: &MatViewMut) {
     assert_eq!(a.rows(), b.rows(), "matmul_at_b: row mismatch");
-    let m = a.cols();
-    let n = b.cols();
-    let mut c = Mat::zeros(m, n);
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.cols(), b.cols()),
+        "matmul_at_b_acc_into: out is {}x{}, need {}x{}",
+        out.rows(),
+        out.cols(),
+        a.cols(),
+        b.cols()
+    );
+}
+
+/// `out += Aᵀ · B` — accumulating and allocation-free, so the streaming
+/// state update `S += Ψ(K_b)ᵀV_b` writes straight into the state buffer.
+/// Threaded over row stripes of `out` (column ranges of A); per-element
+/// accumulation order is independent of the striping, so threaded and
+/// serial runs are bit-identical.
+pub fn matmul_at_b_acc_into(a: MatView, b: MatView, out: MatViewMut) {
+    check_at_b_shapes(&a, &b, &out);
+    let flops = a.rows() * a.cols() * b.cols();
+    let nt = num_threads().min((flops / PAR_FLOPS).max(1));
+    if nt == 1 || a.cols() < 2 {
+        at_b_acc_stripe(a, b, 0, out);
+        return;
+    }
+    let stripe = a.cols().div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut c0 = 0;
+        while c0 < a.cols() {
+            let take = stripe.min(a.cols() - c0);
+            let (chunk, tail) = rest.split_rows_at(take);
+            rest = tail;
+            let start = c0;
+            s.spawn(move || at_b_acc_stripe(a, b, start, chunk));
+            c0 += take;
+        }
+    });
+}
+
+/// Single-threaded [`matmul_at_b_acc_into`] (callers own the parallelism).
+pub fn matmul_at_b_acc_serial(a: MatView, b: MatView, out: MatViewMut) {
+    check_at_b_shapes(&a, &b, &out);
+    at_b_acc_stripe(a, b, 0, out);
+}
+
+/// Accumulate output rows `[c0, c0 + out.rows())` of `AᵀB` into `out`.
+fn at_b_acc_stripe(a: MatView, b: MatView, c0: usize, mut out: MatViewMut) {
     for k in 0..a.rows() {
-        let a_row = a.row(k);
+        let a_row = &a.row(k)[c0..c0 + out.rows()];
         let b_row = b.row(k);
         for (i, &aik) in a_row.iter().enumerate() {
             if aik != 0.0 {
-                axpy(aik, b_row, &mut c.data[i * n..(i + 1) * n]);
+                axpy(aik, b_row, out.row_mut(i));
             }
         }
     }
-    c
 }
 
 /// `C = A · Bᵀ` (A: m×k, B: n×k → m×n) — rows of both operands are
@@ -653,40 +812,63 @@ pub fn matmul_at_b<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>)
 /// product.
 pub fn matmul_a_bt<'a, 'b>(a: impl Into<MatView<'a>>, b: impl Into<MatView<'b>>) -> Mat {
     let (a, b) = (a.into(), b.into());
-    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: col mismatch");
     let mut c = Mat::zeros(a.rows(), b.rows());
-    let nt = num_threads();
-    let bn = b.rows();
-    if a.rows() * b.rows() * a.cols() < 64 * 64 * 64 || nt == 1 || a.rows() < 2 {
-        for i in 0..a.rows() {
-            let ar = a.row(i);
-            for j in 0..bn {
-                c.data[i * bn + j] = dot(ar, b.row(j));
-            }
-        }
-        return c;
+    matmul_a_bt_into(a, b, c.view_mut());
+    c
+}
+
+fn check_a_bt_shapes(a: &MatView, b: &MatView, out: &MatViewMut) {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt: col mismatch");
+    assert_eq!(
+        (out.rows(), out.cols()),
+        (a.rows(), b.rows()),
+        "matmul_a_bt_into: out is {}x{}, need {}x{}",
+        out.rows(),
+        out.cols(),
+        a.rows(),
+        b.rows()
+    );
+}
+
+/// `out = A · Bᵀ` through a (possibly strided) view, threaded over row
+/// stripes of the output when the problem is big enough.
+pub fn matmul_a_bt_into(a: MatView, b: MatView, out: MatViewMut) {
+    check_a_bt_shapes(&a, &b, &out);
+    let flops = a.rows() * b.rows() * a.cols();
+    let nt = num_threads().min((flops / PAR_FLOPS).max(1));
+    if nt == 1 || a.rows() < 2 {
+        a_bt_stripe(a, b, out);
+        return;
     }
     let stripe = a.rows().div_ceil(nt);
     std::thread::scope(|s| {
-        let mut rest: &mut [f32] = &mut c.data;
+        let mut rest = out;
         let mut r0 = 0;
         while r0 < a.rows() {
             let take = stripe.min(a.rows() - r0);
-            let (chunk, tail) = rest.split_at_mut(take * bn);
+            let (chunk, tail) = rest.split_rows_at(take);
             rest = tail;
-            let start = r0;
-            s.spawn(move || {
-                for i in 0..take {
-                    let ar = a.row(start + i);
-                    for j in 0..bn {
-                        chunk[i * bn + j] = dot(ar, b.row(j));
-                    }
-                }
-            });
+            let a_block = a.row_block(r0, r0 + take);
+            s.spawn(move || a_bt_stripe(a_block, b, chunk));
             r0 += take;
         }
     });
-    c
+}
+
+/// Single-threaded [`matmul_a_bt_into`] (callers own the parallelism).
+pub fn matmul_a_bt_serial_into(a: MatView, b: MatView, out: MatViewMut) {
+    check_a_bt_shapes(&a, &b, &out);
+    a_bt_stripe(a, b, out);
+}
+
+fn a_bt_stripe(a: MatView, b: MatView, mut out: MatViewMut) {
+    for i in 0..a.rows() {
+        let ar = a.row(i);
+        let orow = out.row_mut(i);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(ar, b.row(j));
+        }
+    }
 }
 
 /// Row-wise softmax in place (numerically stabilized). Accepts `&mut Mat`
@@ -998,5 +1180,73 @@ mod tests {
     fn view_row_out_of_bounds_panics() {
         let m = Mat::zeros(2, 4);
         let _ = m.view().row(2);
+    }
+
+    // ---- accumulating / serial kernels (ADR-003) --------------------------
+
+    #[test]
+    fn at_b_acc_accumulates_onto_existing_values() {
+        let mut rng = Rng::new(21);
+        // big enough that the threaded path actually fans out
+        let a = Mat::randn(128, 80, &mut rng);
+        let b = Mat::randn(128, 70, &mut rng);
+        let base = Mat::randn(80, 70, &mut rng);
+        let mut acc = base.clone();
+        matmul_at_b_acc_into(a.view(), b.view(), acc.view_mut());
+        let want = matmul_at_b(&a, &b);
+        for r in 0..80 {
+            for c in 0..70 {
+                let expect = base.get(r, c) + want.get(r, c);
+                assert!(
+                    (acc.get(r, c) - expect).abs() < 1e-4 * (1.0 + expect.abs()),
+                    "({r},{c}): {} vs {expect}",
+                    acc.get(r, c)
+                );
+            }
+        }
+        // the serial building block is bit-identical to the threaded entry
+        let mut acc2 = base.clone();
+        matmul_at_b_acc_serial(a.view(), b.view(), acc2.view_mut());
+        assert_eq!(acc.data, acc2.data);
+    }
+
+    #[test]
+    fn threaded_at_b_matches_naive_transpose() {
+        let mut rng = Rng::new(23);
+        let a = Mat::randn(130, 90, &mut rng);
+        let b = Mat::randn(130, 60, &mut rng);
+        assert_close(&matmul_at_b(&a, &b), &naive_matmul(&a.transpose(), &b), 1e-4);
+    }
+
+    #[test]
+    fn serial_kernels_bit_identical_to_threaded() {
+        let mut rng = Rng::new(22);
+        let a = Mat::randn(128, 70, &mut rng);
+        let b = Mat::randn(70, 90, &mut rng);
+        let mut out = Mat::zeros(128, 90);
+        matmul_serial_into(a.view(), b.view(), out.view_mut());
+        assert_eq!(out.data, matmul(&a, &b).data);
+        let bt = Mat::randn(96, 70, &mut rng);
+        let mut out2 = Mat::zeros(128, 96);
+        matmul_a_bt_serial_into(a.view(), bt.view(), out2.view_mut());
+        assert_eq!(out2.data, matmul_a_bt(&a, &bt).data);
+    }
+
+    #[test]
+    fn scratch_recycles_capacity_and_zeroes() {
+        let mut s = Scratch::new();
+        let mut a = s.take(16);
+        assert_eq!(a.len(), 16);
+        a.iter_mut().for_each(|x| *x = 7.0);
+        let p = a.as_ptr();
+        s.put(a);
+        let b = s.take(8);
+        assert_eq!(b.as_ptr(), p, "LIFO reuse of the same allocation");
+        assert_eq!(b.len(), 8);
+        assert!(b.iter().all(|&x| x == 0.0), "buffers come back zeroed");
+        s.put(b);
+        let c = s.take(16);
+        assert_eq!(c.as_ptr(), p, "capacity survives a smaller take");
+        assert!(c.iter().all(|&x| x == 0.0));
     }
 }

@@ -92,6 +92,31 @@ pub fn write_json(file: &str, value: &crate::util::json::Json) -> std::io::Resul
     Ok(())
 }
 
+/// One row of a machine-readable scaling record (`BENCH_*.json`): the
+/// timing summary plus derived throughput for one (mechanism, engine, L)
+/// cell. `fig2_scaling` emits these so the perf trajectory of the causal
+/// engines is recorded per PR (ADR-003's before/after harness).
+pub fn scaling_entry(
+    mechanism: &str,
+    engine: &str,
+    l: usize,
+    t: &Timing,
+    toks_per_s: f64,
+) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj(vec![
+        ("mechanism", Json::Str(mechanism.to_string())),
+        ("engine", Json::Str(engine.to_string())),
+        ("l", Json::Num(l as f64)),
+        ("iters", Json::Num(t.iters as f64)),
+        ("mean_ms", Json::Num(t.mean_ms)),
+        ("p50_ms", Json::Num(t.p50_ms)),
+        ("p95_ms", Json::Num(t.p95_ms)),
+        ("min_ms", Json::Num(t.min_ms)),
+        ("toks_per_s", Json::Num(toks_per_s)),
+    ])
+}
+
 /// Paper-style table printer: fixed-width columns, header rule.
 pub struct Table {
     pub title: String,
@@ -196,6 +221,21 @@ mod tests {
             t.row(vec!["1".into()]);
         }));
         assert!(r.is_err());
+    }
+
+    #[test]
+    fn scaling_entry_is_machine_readable() {
+        let t = time_fn("noop", 0, 3, || {
+            std::hint::black_box(0);
+        });
+        let e = scaling_entry("slay", "chunked", 128, &t, 1234.5);
+        assert_eq!(e.get("mechanism").unwrap().as_str().unwrap(), "slay");
+        assert_eq!(e.get("engine").unwrap().as_str().unwrap(), "chunked");
+        assert_eq!(e.get("l").unwrap().as_usize().unwrap(), 128);
+        assert!((e.get("toks_per_s").unwrap().as_f64().unwrap() - 1234.5).abs() < 1e-9);
+        // round-trips through the JSON writer/parser
+        let back = crate::util::json::Json::parse(&e.to_pretty()).unwrap();
+        assert_eq!(back.get("l").unwrap().as_usize().unwrap(), 128);
     }
 
     #[test]

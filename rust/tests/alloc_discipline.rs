@@ -1,0 +1,127 @@
+//! Counting-allocator guard for the zero-allocation serving contract
+//! (ADR-003): once the per-worker `Scratch` arena and the session state
+//! are warm, a steady-state prefill chunk and a decode step must perform
+//! **zero** heap allocations — for the SLAY linear backend and for the
+//! windowed quadratic baselines alike.
+//!
+//! This is a `harness = false` test binary: the libtest harness spawns
+//! helper threads that allocate concurrently and would poison the global
+//! counter, so `main` runs the checks directly on the main thread.
+//!
+//! Threading note: the threaded matmul paths spawn scoped threads, and a
+//! thread spawn allocates by definition. The zero-alloc guarantee is
+//! therefore stated for the single-threaded kernels (`SLAY_THREADS=1`,
+//! which the shapes here stay below anyway); with threading enabled the
+//! steady state allocates only the O(num_threads) spawn bookkeeping per
+//! fan-out, never per-token or per-feature buffers.
+
+use slay::kernels::build;
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::math::linalg::{Mat, Scratch};
+use slay::math::rng::Rng;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOC_CALLS.load(Ordering::Relaxed)
+}
+
+fn main() {
+    // Must happen before the first kernel call: pins the matmul thread
+    // count (OnceLock) so no scoped-thread spawns enter the measured
+    // region.
+    std::env::set_var("SLAY_THREADS", "1");
+
+    let d = 16;
+    let d_v = 16;
+    let chunk = 24;
+    let mut rng = Rng::new(123);
+    let q = Mat::randn(chunk, d, &mut rng);
+    let k = Mat::randn(chunk, d, &mut rng);
+    let v = Mat::randn(chunk, d_v, &mut rng);
+    let mut scratch = Scratch::new();
+    let mut out = vec![0.0f32; d_v];
+
+    // ---- SLAY linear backend: prefill chunks + decode steps -------------
+    let op = build(&Mechanism::Slay(SlayConfig::default()), d, 0).unwrap();
+    let mut state = op.new_state(d_v);
+    let mut y = Mat::zeros(chunk, d_v);
+    // warmup: grows the scratch arena and state buffers to steady state
+    for _ in 0..3 {
+        op.prefill_into(&mut scratch, &mut state, q.view(), k.view(), v.view(), y.view_mut())
+            .unwrap();
+    }
+    op.decode_with(&mut scratch, &mut state, q.row(0), k.row(0), v.row(0), &mut out)
+        .unwrap();
+
+    let before = allocs();
+    op.prefill_into(&mut scratch, &mut state, q.view(), k.view(), v.view(), y.view_mut())
+        .unwrap();
+    let after_prefill = allocs();
+    assert_eq!(
+        after_prefill - before,
+        0,
+        "steady-state SLAY prefill chunk allocated {} times",
+        after_prefill - before
+    );
+    op.decode_with(&mut scratch, &mut state, q.row(1), k.row(1), v.row(1), &mut out)
+        .unwrap();
+    let after_decode = allocs();
+    assert_eq!(
+        after_decode - after_prefill,
+        0,
+        "steady-state SLAY decode step allocated {} times",
+        after_decode - after_prefill
+    );
+    assert!(out.iter().all(|x| x.is_finite()));
+
+    // ---- quadratic backend: decode over a saturated rolling window ------
+    let opq = build(&Mechanism::Standard, d, 8).unwrap();
+    let mut stq = opq.new_state(d_v);
+    // warmup: saturate the window (cap 8) and the score buffer
+    for i in 0..chunk {
+        opq.decode_with(&mut scratch, &mut stq, q.row(i), k.row(i), v.row(i), &mut out)
+            .unwrap();
+    }
+    let before_q = allocs();
+    opq.decode_with(&mut scratch, &mut stq, q.row(0), k.row(0), v.row(0), &mut out)
+        .unwrap();
+    let after_q = allocs();
+    assert_eq!(
+        after_q - before_q,
+        0,
+        "steady-state quadratic decode step allocated {} times",
+        after_q - before_q
+    );
+    assert!(out.iter().all(|x| x.is_finite()));
+
+    println!("alloc_discipline: steady-state prefill + decode are allocation-free");
+}

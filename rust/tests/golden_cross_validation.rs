@@ -76,7 +76,7 @@ fn quadrature_rules_match_numpy() {
 }
 
 /// Reconstruct Ψ from exported randomness (explicit fusion) exactly as the
-/// rust `SlayFeatures::map_shared` does.
+/// rust `SlayFeatures::map_shared_into` pipeline does.
 fn rebuild_features(p: &Json, x: &Mat) -> Mat {
     let d = p.get("d").unwrap().as_usize().unwrap();
     let n_poly = p.get("n_poly").unwrap().as_usize().unwrap();

@@ -2,11 +2,11 @@
 //! kernel bounds, denominator positivity, PSD Gram matrices, causal/
 //! streaming equivalences, and coordinator routing determinism.
 
-use slay::kernels::config::{Mechanism, PolyMethod, SlayConfig};
+use slay::kernels::config::{Fusion, Mechanism, PolyMethod, SlayConfig};
 use slay::kernels::engine::{self, StreamingState};
 use slay::kernels::slay::{QKFeatures, SlayFeatures};
 use slay::kernels::{build, yat, MultiHeadAttention};
-use slay::math::linalg::{Mat, MatView};
+use slay::math::linalg::{Mat, MatView, Scratch};
 use slay::math::rng::Rng;
 use slay::util::quickprop::{check, Shrink};
 
@@ -449,6 +449,149 @@ fn multi_head_over_packed_views_bit_identical_to_owned() {
     let yv = mha.forward(q, k, v, true).unwrap();
     let yo = mha.forward(&qo, &ko, &vo, true).unwrap();
     assert_eq!(yv.data, yo.data, "packed-view MHA must equal owned MHA bitwise");
+}
+
+// ---------------------------------------------------------------------------
+// ADR-003: the chunkwise-parallel causal engine must reproduce the
+// per-token reference for every registered linear mechanism across block
+// sizes (B=1, small, non-divisor, B=L, B>L), and map_into must be
+// bit-identical to map on strided inputs *and* outputs.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_chunked_causal_matches_per_token_engine_all_mechanisms() {
+    // Every registered linear mechanism (all positive-feature, so the
+    // denominators are cancellation-free sums and the two engines differ
+    // only by benign f32 reordering). Signed-feature configs (LaplaceOnly,
+    // RM/TS polys) can cancel denominators to ~0, where *any* summation
+    // reorder is amplified arbitrarily — that instability is a property of
+    // the estimator (Fig. 7), not of the engine decomposition.
+    let mechs = [
+        Mechanism::Slay(SlayConfig::default()),
+        Mechanism::Favor { m_features: 16, seed: 3 },
+        Mechanism::EluLinear,
+        Mechanism::Cosformer,
+    ];
+    for mech in mechs {
+        let op = build(&mech, 8, 512).unwrap();
+        check(
+            11,
+            10,
+            |rng| (gen_rows(rng, 21, 8), rng.below(1000)),
+            |(rows, seed)| {
+                let mut rng = Rng::new(*seed as u64 + 3);
+                let x = to_mat(rows);
+                let l = x.rows;
+                let v = Mat::randn(l, 4, &mut rng);
+                let (phi_q, phi_k) = op
+                    .map_qk(x.view(), x.view(), 0)
+                    .expect("linear mechanisms expose their feature maps");
+                let want = engine::linear_attention_causal(&phi_q, &phi_k, &v, 1e-6);
+                for block in [1usize, 3, 7, l, l + 5] {
+                    let got =
+                        engine::linear_attention_causal_chunked(&phi_q, &phi_k, &v, 1e-6, block);
+                    for (i, (a, b)) in got.data.iter().zip(want.data.iter()).enumerate() {
+                        if (a - b).abs() > 2e-3 * (1.0 + b.abs()) {
+                            return Err(format!(
+                                "{}: block {block} elem {i}: {a} vs {b}",
+                                op.mechanism().name()
+                            ));
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_map_into_strided_bit_identical_to_map() {
+    use slay::kernels::features::poly::{Anchor, PolyExact};
+    use slay::kernels::features::prf::{CosformerMap, EluPlusOne, FavorRelu, FavorSoftmax, Prf};
+    use slay::kernels::features::FeatureMap;
+    let d = 8;
+    let mut prf_rng = Rng::new(5);
+    let maps: Vec<(&str, Box<dyn FeatureMap>)> = vec![
+        ("prf", Box::new(Prf::new(16, d, 0.7, &mut prf_rng))),
+        ("favor_softmax", Box::new(FavorSoftmax::new(16, d, 6))),
+        ("favor_relu", Box::new(FavorRelu::new(16, d, 7))),
+        ("elu", Box::new(EluPlusOne::new(d))),
+        ("cosformer", Box::new(CosformerMap::new(d, 64))),
+        ("anchor", Box::new(Anchor::new(8, d, 8))),
+        ("poly_exact", Box::new(PolyExact::new(d))),
+    ];
+    for (name, m) in &maps {
+        check(
+            12,
+            8,
+            |rng| (1 + rng.below(10), rng.below(10_000)),
+            |&(l, seed)| {
+                // strided input: an interior column block of a packed buffer
+                let packed = Mat::randn(l, d + 6, &mut Rng::new(seed as u64 + 31));
+                let x = packed.view().col_block(3, 3 + d);
+                let pos0 = 5; // exercises the positional (cosformer) path
+                let want = m.map(x.to_mat().view(), pos0);
+                // strided output: an interior column block of a wider buffer
+                let dim = m.dim();
+                let mut wide = Mat::zeros(l, dim + 4);
+                let (_, rest) = wide.view_mut().split_cols_at(2);
+                let (block, _) = rest.split_cols_at(dim);
+                m.map_into(x, pos0, block);
+                for r in 0..l {
+                    if &wide.row(r)[2..2 + dim] != want.row(r) {
+                        return Err(format!("{name}: row {r} differs on strided views"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn slay_map_into_strided_bit_identical_to_map_per_fusion() {
+    // The full Ψ pipeline (normalize → poly → PRF → fuse → concat) through
+    // scratch-backed map_q_into/map_k_into on strided views must equal the
+    // allocating wrappers bitwise, for every fusion and both roles.
+    let d = 8;
+    let cfgs = [
+        SlayConfig { fusion: Fusion::Explicit, ..Default::default() },
+        // Hadamard requires matching factor dims
+        SlayConfig { fusion: Fusion::Hadamard, n_poly: 16, d_prf: 16, ..Default::default() },
+        SlayConfig { fusion: Fusion::Sketch { d_t: 64 }, ..Default::default() },
+        SlayConfig { fusion: Fusion::LaplaceOnly, ..Default::default() },
+    ];
+    for cfg in cfgs {
+        let fusion = cfg.fusion;
+        let feats = SlayFeatures::new(cfg, d).unwrap();
+        let packed = Mat::randn(9, d + 5, &mut Rng::new(91));
+        let x = packed.view().col_block(2, 2 + d);
+        let dim = feats.dim();
+        let mut scratch = Scratch::new();
+        for is_query in [true, false] {
+            let want = if is_query {
+                feats.map_q(x.to_mat().view(), 0)
+            } else {
+                feats.map_k(x.to_mat().view(), 0)
+            };
+            let mut wide = Mat::zeros(9, dim + 3);
+            let (_, rest) = wide.view_mut().split_cols_at(1);
+            let (block, _) = rest.split_cols_at(dim);
+            if is_query {
+                feats.map_q_into(x, 0, &mut scratch, block);
+            } else {
+                feats.map_k_into(x, 0, &mut scratch, block);
+            }
+            for r in 0..9 {
+                assert_eq!(
+                    &wide.row(r)[1..1 + dim],
+                    want.row(r),
+                    "{fusion:?} is_query={is_query} row {r}"
+                );
+            }
+        }
+    }
 }
 
 #[test]
