@@ -74,7 +74,13 @@ fn main() {
         let mut errs = [0.0f64; 3];
         let configs = [
             SlayConfig { poly: PolyMethod::Exact, d_prf: budget, r_nodes: 3, ..Default::default() },
-            SlayConfig { poly: PolyMethod::Anchor, n_poly: 16, d_prf: budget, r_nodes: 3, ..Default::default() },
+            SlayConfig {
+                poly: PolyMethod::Anchor,
+                n_poly: 16,
+                d_prf: budget,
+                r_nodes: 3,
+                ..Default::default()
+            },
             SlayConfig {
                 fusion: Fusion::LaplaceOnly,
                 d_prf: budget * 4,

@@ -57,7 +57,8 @@ fn main() {
         let slay_feats =
             slay::kernels::slay::SlayFeatures::new(SlayConfig::default(), d).unwrap();
         use slay::kernels::slay::QKFeatures;
-        let mut implied = matmul_a_bt(&slay_feats.map_q(q.view(), 0), &slay_feats.map_k(k.view(), 0));
+        let mut implied =
+            matmul_a_bt(&slay_feats.map_q(q.view(), 0), &slay_feats.map_k(k.view(), 0));
         for v in implied.data.iter_mut() {
             *v = v.max(0.0);
         }

@@ -44,7 +44,8 @@ fn main() {
     };
     // quadratic envelope: beyond 8K the L×L matrix alone is ≥ 256 MiB/head —
     // the paper's A100 OOMs at 16K; we cap compute there as the same wall.
-    let lens_quadratic: Vec<usize> = if smoke { vec![128, 256] } else { vec![128, 512, 2048, 4096, 8192] };
+    let lens_quadratic: Vec<usize> =
+        if smoke { vec![128, 256] } else { vec![128, 512, 2048, 4096, 8192] };
 
     let mechanisms: Vec<(&str, Mechanism, bool)> = vec![
         ("Standard", Mechanism::Standard, true),

@@ -16,8 +16,10 @@ fn main() {
     // regime concerns the bulk of the sphere, which this grid covers.
     let xs: Vec<f64> = (0..=38).map(|i| -1.0 + 1.9 * i as f64 / 38.0).collect();
     let mut rows9 = Vec::new();
-    let mut t9 =
-        Table::new("Fig 9 — quadrature relative error vs R (x ≤ 0.9)", &["R", "max_rel_err", "mean_rel_err"]);
+    let mut t9 = Table::new(
+        "Fig 9 — quadrature relative error vs R (x ≤ 0.9)",
+        &["R", "max_rel_err", "mean_rel_err"],
+    );
     for r in 1..=16usize {
         let errs: Vec<f64> = xs
             .iter()

@@ -1,0 +1,191 @@
+//! Session persistence benchmark (ADR-004) — snapshot/restore throughput
+//! (sequences/s and MB/s) and spill fault-in latency, emitted
+//! machine-readably as `results/BENCH_persist.json`.
+//!
+//! This doubles as the snapshot → restore → serve smoke the CI gate runs:
+//! a coordinator restored from a snapshot **onto a different worker
+//! count** must resume every sequence with its exact `seq_len` and serve
+//! fresh decode chunks.
+//!
+//! Env knobs:
+//! * `SLAY_BENCH_SMOKE=1` — tiny sizes; ci.sh uses this to exercise the
+//!   whole persistence path and the JSON emission on every run.
+
+use slay::coordinator::request::{AttendChunk, SeqId};
+use slay::coordinator::state::{SequenceStore, StoreConfig};
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::build;
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::util::benchkit::{fmt_ms, time_budget, write_json, Table};
+use slay::util::json::Json;
+use std::time::Duration;
+
+fn persist_entry(mechanism: &str, op: &str, seqs: usize, mean_ms: f64, bytes: u64) -> Json {
+    Json::obj(vec![
+        ("mechanism", Json::Str(mechanism.to_string())),
+        ("op", Json::Str(op.to_string())),
+        ("sequences", Json::Num(seqs as f64)),
+        ("mean_ms", Json::Num(mean_ms)),
+        ("seqs_per_s", Json::Num(seqs as f64 / (mean_ms / 1e3))),
+        ("state_bytes", Json::Num(bytes as f64)),
+        ("mb_per_s", Json::Num((bytes as f64 / (1024.0 * 1024.0)) / (mean_ms / 1e3))),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("SLAY_BENCH_SMOKE").is_ok();
+    let (n_seqs, ctx) = if smoke { (6usize, 48usize) } else { (64, 1024) };
+    let d = 32usize;
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut table = Table::new(
+        "Session persistence (ADR-004) — snapshot / restore / spill",
+        &["Mechanism", "Op", "Seqs", "ms", "Seqs/s", "MB/s"],
+    );
+
+    // ---- snapshot + restore-with-resharding, linear and quadratic ------
+    for (name, mech) in [
+        ("slay", Mechanism::Slay(SlayConfig::default())),
+        ("standard", Mechanism::Standard),
+    ] {
+        let cfg = CoordinatorConfig {
+            mechanism: mech,
+            d_head: d,
+            d_v: d,
+            horizon: 4096,
+            window: if smoke { 64 } else { 1024 },
+            workers: 2,
+            ..CoordinatorConfig::default()
+        };
+        let coord = Coordinator::start(cfg.clone()).unwrap();
+        let mut rng = Rng::new(17);
+        let seqs: Vec<SeqId> =
+            (0..n_seqs).map(|_| coord.create_sequence().unwrap()).collect();
+        for &seq in &seqs {
+            coord
+                .attend(AttendChunk {
+                    seq,
+                    q: Mat::randn(ctx, d, &mut rng),
+                    k: Mat::randn(ctx, d, &mut rng),
+                    v: Mat::randn(ctx, d, &mut rng),
+                })
+                .unwrap();
+        }
+
+        let dir = std::env::temp_dir().join(format!("slay_bench_persist_{name}"));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // snapshot throughput (idempotent: every iteration overwrites)
+        let mut report = None;
+        let t_snap = time_budget("snapshot", Duration::from_millis(300), || {
+            report = Some(coord.snapshot(&dir).unwrap());
+        });
+        let report = report.unwrap();
+        assert_eq!(report.sequences, n_seqs, "{name}: snapshot missed sequences");
+        let mb = report.bytes as f64 / (1024.0 * 1024.0);
+        table.row(vec![
+            name.into(),
+            "snapshot".into(),
+            n_seqs.to_string(),
+            fmt_ms(t_snap.mean_ms),
+            format!("{:.0}", n_seqs as f64 / (t_snap.mean_ms / 1e3)),
+            format!("{:.1}", mb / (t_snap.mean_ms / 1e3)),
+        ]);
+        entries.push(persist_entry(name, "snapshot", n_seqs, t_snap.mean_ms, report.bytes));
+
+        // restore throughput — onto a DIFFERENT worker count (the
+        // hash-reshard/migration path)
+        let restore_cfg = CoordinatorConfig { workers: 3, ..cfg.clone() };
+        let t_rest = time_budget("restore", Duration::from_millis(300), || {
+            let c = Coordinator::restore(restore_cfg.clone(), &dir).unwrap();
+            std::hint::black_box(&c);
+        });
+        table.row(vec![
+            name.into(),
+            "restore (2→3 workers)".into(),
+            n_seqs.to_string(),
+            fmt_ms(t_rest.mean_ms),
+            format!("{:.0}", n_seqs as f64 / (t_rest.mean_ms / 1e3)),
+            format!("{:.1}", mb / (t_rest.mean_ms / 1e3)),
+        ]);
+        entries.push(persist_entry(name, "restore", n_seqs, t_rest.mean_ms, report.bytes));
+
+        // smoke: the restored coordinator serves every restored sequence
+        let restored = Coordinator::restore(restore_cfg, &dir).unwrap();
+        for &seq in &seqs {
+            assert_eq!(
+                restored.sequence_len(seq).unwrap(),
+                Some(ctx),
+                "{name}: seq_len lost across restore"
+            );
+            let r = restored
+                .attend(AttendChunk {
+                    seq,
+                    q: Mat::randn(1, d, &mut rng),
+                    k: Mat::randn(1, d, &mut rng),
+                    v: Mat::randn(1, d, &mut rng),
+                })
+                .unwrap();
+            assert!(
+                r.y.data.iter().all(|x| x.is_finite()),
+                "{name}: non-finite decode after restore"
+            );
+        }
+        restored.shutdown().unwrap();
+        coord.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    // ---- spill fault-in latency: two sequences ping-pong through a ----
+    // ---- budget that fits exactly one resident state              ----
+    let spill_dir = std::env::temp_dir().join("slay_bench_persist_spill");
+    let _ = std::fs::remove_dir_all(&spill_dir);
+    let b = build(&Mechanism::Slay(SlayConfig::default()), d, 0).unwrap();
+    let per_seq = b.new_state(d).capacity_bytes();
+    let mut store = SequenceStore::new(StoreConfig {
+        max_sequences: 8,
+        memory_budget: per_seq,
+        spill_dir: Some(spill_dir.clone()),
+    });
+    let mut rng = Rng::new(23);
+    let q = Mat::randn(ctx, d, &mut rng);
+    let k = Mat::randn(ctx, d, &mut rng);
+    let v = Mat::randn(ctx, d, &mut rng);
+    store.create(SeqId(1), b.new_state(d)).unwrap();
+    b.prefill(store.get_mut(SeqId(1)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+    store.create(SeqId(2), b.new_state(d)).unwrap(); // pages seq 1 out
+    b.prefill(store.get_mut(SeqId(2)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+    let t_fault = time_budget("spill fault-in", Duration::from_millis(200), || {
+        // each call faults one sequence in and pages the other out
+        std::hint::black_box(store.get_mut(SeqId(1)).is_some());
+        std::hint::black_box(store.get_mut(SeqId(2)).is_some());
+    });
+    let per_fault_ms = t_fault.mean_ms / 2.0;
+    table.row(vec![
+        "slay".into(),
+        "spill fault-in".into(),
+        "1".into(),
+        fmt_ms(per_fault_ms),
+        format!("{:.0}", 1e3 / per_fault_ms),
+        format!("{:.1}", (per_seq as f64 / (1024.0 * 1024.0)) / (per_fault_ms / 1e3)),
+    ]);
+    entries.push(persist_entry("slay", "spill_fault_in", 1, per_fault_ms, per_seq as u64));
+    let _ = std::fs::remove_dir_all(&spill_dir);
+
+    table.print();
+    write_json(
+        "BENCH_persist.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("persist".into())),
+            ("smoke", Json::Bool(smoke)),
+            ("n_seqs", Json::Num(n_seqs as f64)),
+            ("ctx", Json::Num(ctx as f64)),
+            ("d_head", Json::Num(d as f64)),
+            ("entries", Json::Arr(entries)),
+        ]),
+    )
+    .unwrap();
+    println!("\nsnapshot → restore → serve smoke passed");
+}

@@ -148,7 +148,13 @@ fn main() {
         rel_l2(&op.forward(q.view(), k.view(), v.view(), false, 0).data, &exact.data)
     };
     let rm_err = {
-        let c = SlayConfig { poly: PolyMethod::RandomMaclaurin, r_nodes, d_prf, n_poly, ..Default::default() };
+        let c = SlayConfig {
+            poly: PolyMethod::RandomMaclaurin,
+            r_nodes,
+            d_prf,
+            n_poly,
+            ..Default::default()
+        };
         let op = build(&Mechanism::Slay(c), d, l).unwrap();
         rel_l2(&op.forward(q.view(), k.view(), v.view(), false, 0).data, &exact.data)
     };

@@ -38,7 +38,9 @@ fn main() {
             let (err, ms) = match &mech {
                 None => {
                     let t = time_budget(method, Duration::from_millis(200), || {
-                        std::hint::black_box(exact_op.forward(q.view(), k.view(), v.view(), false, 0));
+                        std::hint::black_box(
+                            exact_op.forward(q.view(), k.view(), v.view(), false, 0),
+                        );
                     });
                     (0.0, t.mean_ms)
                 }

@@ -11,16 +11,15 @@
 #                                       counting-allocator guard in
 #                                       rust/tests/alloc_discipline.rs)
 #   * cargo clippy --all-targets -- -D warnings
+#   * cargo fmt --check                (hard gate since ADR-004)
 #   * SLAY_BENCH_SMOKE=1 fig2_scaling  (smoke-runs the scaling bench at
 #                                       small L and checks that the
 #                                       machine-readable
 #                                       results/BENCH_scaling.json lands)
-#
-# Formatting still runs in report mode by default — the codebase predates
-# rustfmt adoption — and becomes a hard gate with STRICT=1:
-#
-#   ./ci.sh            # build + bench-build + test + clippy gate, fmt report
-#   STRICT=1 ./ci.sh   # everything gates
+#   * SLAY_BENCH_SMOKE=1 persist       (snapshot → restore → serve smoke
+#                                       of the ADR-004 persistence
+#                                       subsystem; asserts
+#                                       results/BENCH_persist.json lands)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -36,26 +35,19 @@ cargo test -q
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
-echo "== fig2_scaling smoke (emits BENCH_scaling.json) =="
+echo "== cargo fmt --check =="
+cargo fmt --check
+
 RESULTS_DIR="${SLAY_RESULTS:-results}"
+
+echo "== fig2_scaling smoke (emits BENCH_scaling.json) =="
 rm -f "$RESULTS_DIR/BENCH_scaling.json"
 SLAY_BENCH_SMOKE=1 cargo bench --bench fig2_scaling
 test -f "$RESULTS_DIR/BENCH_scaling.json" || { echo "BENCH_scaling.json missing"; exit 1; }
 
-soft() {
-    local label="$1"
-    shift
-    echo "== $* =="
-    if "$@"; then
-        echo "[ok] $label"
-    elif [ "${STRICT:-0}" = "1" ]; then
-        echo "[fail] $label (STRICT=1)"
-        exit 1
-    else
-        echo "[warn] $label reported findings (non-gating; run STRICT=1 to enforce)"
-    fi
-}
-
-soft "rustfmt" cargo fmt --check
+echo "== persist smoke (snapshot -> restore -> serve; emits BENCH_persist.json) =="
+rm -f "$RESULTS_DIR/BENCH_persist.json"
+SLAY_BENCH_SMOKE=1 cargo bench --bench persist
+test -f "$RESULTS_DIR/BENCH_persist.json" || { echo "BENCH_persist.json missing"; exit 1; }
 
 echo "ci.sh done"

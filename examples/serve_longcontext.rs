@@ -6,8 +6,15 @@
 //! effectiveness and state-memory footprint; compares against what a
 //! quadratic KV-cache would need at the same depth.
 //!
+//! With `--spill-dir` the store pages idle session states to disk instead
+//! of destroying them (ADR-004), and `--snapshot` writes a durable
+//! snapshot of every live session at the end of the run — the directory
+//! can be resumed with `slay serve --restore <dir>`, including on a
+//! different worker count.
+//!
 //! Run: `cargo run --release --example serve_longcontext -- [--seqs 32]
-//!       [--context 4096] [--decodes 64] [--workers 4]`
+//!       [--context 4096] [--decodes 64] [--workers 4]
+//!       [--spill-dir /tmp/slay-spill] [--snapshot /tmp/slay-snap]`
 
 use slay::coordinator::request::AttendChunk;
 use slay::coordinator::{Coordinator, CoordinatorConfig};
@@ -26,19 +33,26 @@ fn main() -> anyhow::Result<()> {
     let d = 32usize;
     let prefill_chunk = 512usize;
 
-    let coord = Arc::new(Coordinator::start(CoordinatorConfig {
+    let mut cfg = CoordinatorConfig {
         d_head: d,
         d_v: d,
         workers,
         max_batch: 16,
         ..CoordinatorConfig::default()
-    })?);
+    };
+    if let Some(dir) = args.get("spill-dir") {
+        cfg.store.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
+    let coord = Arc::new(Coordinator::start(cfg)?);
 
     println!(
         "serving {n_seqs} sequences to context {context} (+{decodes} decode steps each), \
          {workers} workers"
     );
 
+    // with --snapshot, sessions stay live so the final snapshot has
+    // something to persist
+    let keep_sessions = args.get("snapshot").is_some();
     let t0 = std::time::Instant::now();
     let mut handles = Vec::new();
     for s in 0..n_seqs {
@@ -83,7 +97,9 @@ fn main() -> anyhow::Result<()> {
                 })?;
                 lat.push(r.latency.as_secs_f64() * 1e3);
             }
-            c.release_sequence(seq)?;
+            if !keep_sessions {
+                c.release_sequence(seq)?;
+            }
             Ok(lat)
         }));
     }
@@ -106,6 +122,23 @@ fn main() -> anyhow::Result<()> {
     );
     println!("mean batch size      {:.1}", m.mean_batch_size());
     println!("rejected (backpressure) {}", m.rejected);
+    println!(
+        "spill tier           {} spilled ({:.1} MiB), {} faulted back",
+        m.spilled,
+        m.bytes_spilled as f64 / (1024.0 * 1024.0),
+        m.restored_from_spill
+    );
+
+    // durable snapshot of whatever is still live (ADR-004)
+    if let Some(dir) = args.get("snapshot") {
+        let report = coord.snapshot(std::path::Path::new(dir))?;
+        println!(
+            "snapshot             {} sequences, {:.1} MiB -> {dir}",
+            report.sequences,
+            report.bytes as f64 / (1024.0 * 1024.0)
+        );
+        println!("                     (resume: slay serve --restore {dir})");
+    }
 
     // memory story (Fig. 2's point, serving edition)
     let mcfg = coord.config();

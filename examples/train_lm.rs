@@ -55,7 +55,10 @@ fn main() -> anyhow::Result<()> {
         let mut acc = 0.0;
         for (t, y) in &val {
             acc += tr
-                .run_with_params(&loss_exe, &[TensorData::I32(t.clone()), TensorData::I32(y.clone())])?[0]
+                .run_with_params(
+                    &loss_exe,
+                    &[TensorData::I32(t.clone()), TensorData::I32(y.clone())],
+                )?[0]
                 .scalar_f32()?;
         }
         Ok(acc / val.len() as f32)

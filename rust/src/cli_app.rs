@@ -55,6 +55,12 @@ fn print_help() {
                        (parameterized specs work too: --mechanism slay:n_poly=16,d_prf=64\n\
                         or yat:eps=0.01 — serving supports every mechanism, quadratic ones\n\
                         run on a bounded rolling KV window)\n\
+         serve flags:  --spill-dir dir   page idle session states to disk instead of\n\
+                                         destroying them (faulted back on demand)\n\
+                       --snapshot-root dir  allow the TCP op {{\"op\":\"snapshot\",\"dir\":name}}\n\
+                                         to write named snapshots under this root\n\
+                       --restore dir     resume a coordinator snapshot, with a possibly\n\
+                                         different --workers count (resharding)\n\
          slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
     );
 }
@@ -63,15 +69,39 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     args.validate(&[
         "mechanism", "workers", "max-batch", "max-wait-us", "queue-cap", "d-head", "d-v",
         "seqs", "chunks", "chunk-len", "eps", "r-nodes", "n-poly", "d-prf", "poly",
-        "fusion", "seed", "listen", "duration-s", "horizon", "window",
+        "fusion", "seed", "listen", "duration-s", "horizon", "window", "spill-dir",
+        "restore", "snapshot-root",
     ])?;
-    let cfg = config::coordinator_from_args(args)?;
+    let mut cfg = config::coordinator_from_args(args)?;
+
+    // `--restore dir` resumes a coordinator snapshot (ADR-004): the
+    // manifest pins the mechanism spec and geometry — they are snapshot
+    // state, not flags — while topology flags (--workers, --max-batch, …)
+    // still apply, which is exactly the reshard/migration path.
+    // (Coordinator::restore re-reads and re-validates the manifest itself
+    // so it stays safe for non-CLI callers; the duplicate startup read is
+    // deliberate.)
+    let restore_dir = args.get("restore").map(std::path::PathBuf::from);
+    if let Some(dir) = &restore_dir {
+        let manifest = crate::coordinator::persist::Manifest::load(dir)?;
+        manifest.apply_to(&mut cfg)?;
+        println!(
+            "restoring {} sequences from {} (mechanism {})",
+            manifest.seqs.len(),
+            dir.display(),
+            manifest.mechanism
+        );
+    }
+    let start_coord = |cfg: crate::coordinator::CoordinatorConfig| match &restore_dir {
+        Some(dir) => Coordinator::restore(cfg, dir),
+        None => Coordinator::start(cfg),
+    };
 
     // `--listen addr:port` exposes the coordinator over the JSON-lines TCP
     // protocol instead of running the synthetic workload.
     if let Some(addr) = args.get("listen") {
         let duration = args.u64_or("duration-s", 0)?;
-        let coord = std::sync::Arc::new(Coordinator::start(cfg)?);
+        let coord = std::sync::Arc::new(start_coord(cfg)?);
         let server = crate::coordinator::server::Server::start(addr, coord)?;
         println!("listening on {} (JSON-lines; see coordinator::server docs)", server.addr);
         if duration == 0 {
@@ -89,7 +119,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     let d_head = cfg.d_head;
     let d_v = cfg.d_v;
 
-    let coord = Coordinator::start(cfg)?;
+    let coord = start_coord(cfg)?;
     let t0 = std::time::Instant::now();
     let mut rng = Rng::new(7);
     let seqs: Vec<_> = (0..n_seqs)

@@ -42,7 +42,7 @@ pub fn mechanism_from_args(args: &Args) -> anyhow::Result<Mechanism> {
 
 /// CoordinatorConfig from flags (`--workers`, `--max-batch`,
 /// `--max-wait-us`, `--queue-cap`, `--d-head`, `--d-v`, `--horizon`,
-/// `--window`).
+/// `--window`, `--spill-dir`).
 pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     let mut cfg = CoordinatorConfig {
         mechanism: mechanism_from_args(args)?,
@@ -59,6 +59,12 @@ pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     cfg.d_v = args.usize_or("d-v", cfg.d_v)?;
     cfg.horizon = args.usize_or("horizon", cfg.horizon)?;
     cfg.window = args.usize_or("window", cfg.window)?;
+    if let Some(dir) = args.get("spill-dir") {
+        cfg.store.spill_dir = Some(std::path::PathBuf::from(dir));
+    }
+    if let Some(dir) = args.get("snapshot-root") {
+        cfg.snapshot_root = Some(std::path::PathBuf::from(dir));
+    }
     Ok(cfg)
 }
 
@@ -74,6 +80,13 @@ pub fn coordinator_to_json(cfg: &CoordinatorConfig) -> Json {
         ("queue_cap", Json::Num(cfg.queue_cap as f64)),
         ("horizon", Json::Num(cfg.horizon as f64)),
         ("window", Json::Num(cfg.window as f64)),
+        (
+            "spill_dir",
+            match &cfg.store.spill_dir {
+                Some(d) => Json::Str(d.display().to_string()),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -134,6 +147,21 @@ mod tests {
         assert_eq!(c.max_wait, Duration::from_micros(500));
         let j = coordinator_to_json(&c);
         assert_eq!(j.get("workers").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn spill_dir_flag_enables_the_spill_tier() {
+        let c = coordinator_from_args(&parse(&["x", "--spill-dir", "/tmp/slay-spill"])).unwrap();
+        assert_eq!(
+            c.store.spill_dir.as_deref(),
+            Some(std::path::Path::new("/tmp/slay-spill"))
+        );
+        let j = coordinator_to_json(&c);
+        assert_eq!(j.get("spill_dir").unwrap().as_str(), Some("/tmp/slay-spill"));
+        // default stays off (destructive eviction, seed behavior)
+        let d = coordinator_from_args(&parse(&["x"])).unwrap();
+        assert!(d.store.spill_dir.is_none());
+        assert_eq!(coordinator_to_json(&d).get("spill_dir"), Some(&Json::Null));
     }
 
     #[test]

@@ -16,6 +16,15 @@ pub struct Metrics {
     pub prefill_chunks: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
+    /// Spill tier (ADR-004): states paged out to disk under budget
+    /// pressure instead of destroyed…
+    pub spilled: AtomicU64,
+    /// …and transparently faulted back in on their next chunk.
+    pub restored_from_spill: AtomicU64,
+    /// Serialized bytes written by the spill tier (cumulative).
+    pub bytes_spilled: AtomicU64,
+    /// Coordinator-level snapshots taken.
+    pub snapshots: AtomicU64,
     /// Latency reservoir (ms) — bounded, replace-random once full.
     latencies: Mutex<Vec<f64>>,
 }
@@ -59,6 +68,10 @@ impl Metrics {
             prefill_chunks: self.prefill_chunks.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             batched_items: self.batched_items.load(Ordering::Relaxed),
+            spilled: self.spilled.load(Ordering::Relaxed),
+            restored_from_spill: self.restored_from_spill.load(Ordering::Relaxed),
+            bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
             latency_p50_ms: p50,
             latency_p95_ms: p95,
             latency_mean_ms: mean,
@@ -77,6 +90,10 @@ pub struct Snapshot {
     pub prefill_chunks: u64,
     pub batches: u64,
     pub batched_items: u64,
+    pub spilled: u64,
+    pub restored_from_spill: u64,
+    pub bytes_spilled: u64,
+    pub snapshots: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_mean_ms: f64,
@@ -103,6 +120,10 @@ impl Snapshot {
             ("prefill_chunks", Json::Num(self.prefill_chunks as f64)),
             ("batches", Json::Num(self.batches as f64)),
             ("mean_batch_size", Json::Num(self.mean_batch_size())),
+            ("spilled", Json::Num(self.spilled as f64)),
+            ("restored_from_spill", Json::Num(self.restored_from_spill as f64)),
+            ("bytes_spilled", Json::Num(self.bytes_spilled as f64)),
+            ("snapshots", Json::Num(self.snapshots as f64)),
             ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
             ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
             ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
@@ -141,5 +162,24 @@ mod tests {
         let m = Metrics::new();
         let j = m.snapshot().to_json();
         assert!(j.get("completed").is_some());
+    }
+
+    #[test]
+    fn spill_tier_counters_snapshot_and_serialize() {
+        let m = Metrics::new();
+        m.spilled.fetch_add(3, Ordering::Relaxed);
+        m.restored_from_spill.fetch_add(2, Ordering::Relaxed);
+        m.bytes_spilled.fetch_add(1024, Ordering::Relaxed);
+        m.snapshots.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.spilled, 3);
+        assert_eq!(s.restored_from_spill, 2);
+        assert_eq!(s.bytes_spilled, 1024);
+        assert_eq!(s.snapshots, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("spilled").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("restored_from_spill").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("bytes_spilled").unwrap().as_usize(), Some(1024));
+        assert_eq!(j.get("snapshots").unwrap().as_usize(), Some(1));
     }
 }

@@ -4,8 +4,12 @@
 //!
 //! ```text
 //!  clients ──submit──▶ Coordinator ──hash(seq)──▶ shard queue ──▶ worker 0
-//!                        │                            …              …
-//!                        └────────metrics◀────────────┴──────────▶ worker W-1
+//!                        │   │                        …              …
+//!                        │   └──────metrics◀──────────┴──────────▶ worker W-1
+//!                        │                                            │
+//!                        │ snapshot(dir) / restore(cfg, dir)          │ evict / fault-in
+//!                        ▼                                            ▼
+//!                 manifest.json + seq_*.state   ◀── copy ──   spill dir (per shard)
 //! ```
 //!
 //! * **Router**: sequences are hash-sharded across workers so each
@@ -22,6 +26,15 @@
 //!   sequence for linear mechanisms (the linear-attention KV-cache analog)
 //!   and a bounded rolling KV window for the exact quadratic baselines,
 //!   LRU idle eviction.
+//! * **Persistence** (ADR-004, [`persist`]): with a spill directory
+//!   configured, idle eviction *pages states out* through the versioned
+//!   session codec instead of destroying them and the worker faults them
+//!   back in on the sequence's next chunk — the memory budget then bounds
+//!   the resident set, not the session count. [`Coordinator::snapshot`]
+//!   serializes every live session plus a manifest;
+//!   [`Coordinator::restore`] rebuilds a coordinator from it **with a
+//!   possibly different worker count**, re-dealing each state to its new
+//!   owning shard (hash-resharding = the live-migration primitive).
 //!
 //! Every [`Mechanism`] serves through the same
 //! [`crate::kernels::AttentionBackend`] session interface — the quadratic
@@ -29,6 +42,7 @@
 //! is what makes the SLAY-vs-exact serving comparisons apples-to-apples.
 
 pub mod metrics;
+pub mod persist;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -64,6 +78,11 @@ pub struct CoordinatorConfig {
     /// Per-worker bounded queue capacity (backpressure threshold).
     pub queue_cap: usize,
     pub store: StoreConfig,
+    /// Root directory the TCP `{"op":"snapshot"}` endpoint may write
+    /// under. `None` disables snapshots over the wire (the in-process
+    /// [`Coordinator::snapshot`] API is unaffected): a network peer must
+    /// never choose arbitrary server-side paths.
+    pub snapshot_root: Option<std::path::PathBuf>,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,8 +98,18 @@ impl Default for CoordinatorConfig {
             max_wait: Duration::from_millis(2),
             queue_cap: 1024,
             store: StoreConfig::default(),
+            snapshot_root: None,
         }
     }
+}
+
+/// Summary of one completed [`Coordinator::snapshot`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SnapshotReport {
+    /// Live sessions serialized (resident + spilled, across all shards).
+    pub sequences: usize,
+    /// Total serialized state bytes written (excluding the manifest).
+    pub bytes: u64,
 }
 
 /// The running coordinator. Dropping it shuts the workers down.
@@ -103,6 +132,13 @@ impl Coordinator {
         let mut handles = Vec::new();
         for w in 0..cfg.workers {
             let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+            // Each shard spills into its own subdirectory: shards never
+            // contend on files, and a restore with a different worker
+            // count can't collide with stale spills from the old layout.
+            let mut store_cfg = cfg.store.clone();
+            if let Some(base) = &store_cfg.spill_dir {
+                store_cfg.spill_dir = Some(base.join(format!("shard_{w}")));
+            }
             let wcfg = worker::WorkerConfig {
                 mechanism: cfg.mechanism.clone(),
                 d_head: cfg.d_head,
@@ -110,7 +146,7 @@ impl Coordinator {
                 horizon: cfg.horizon,
                 window: cfg.window,
                 policy: BatchPolicy { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
-                store: cfg.store.clone(),
+                store: store_cfg,
             };
             let m = metrics.clone();
             let inf = inflight.clone();
@@ -216,6 +252,103 @@ impl Coordinator {
 
     pub fn config(&self) -> &CoordinatorConfig {
         &self.cfg
+    }
+
+    /// Snapshot every live session into `dir` (ADR-004). Per shard, the
+    /// snapshot message queues behind all work the shard has already
+    /// accepted — so the snapshot includes exactly the chunks whose
+    /// replies preceded the call (chunks submitted concurrently race it).
+    /// Each worker serializes its resident *and* spilled states (fsynced);
+    /// the coordinator then commits the snapshot by writing the manifest
+    /// (mechanism spec, geometry, `next_seq`, sequence roster) last.
+    pub fn snapshot(&self, dir: &std::path::Path) -> anyhow::Result<SnapshotReport> {
+        std::fs::create_dir_all(dir)?;
+        let mut pending = Vec::with_capacity(self.senders.len());
+        for tx in &self.senders {
+            let (ack, rx) = mpsc::channel();
+            tx.send(worker::Msg::Snapshot(dir.to_path_buf(), ack))
+                .map_err(|_| ServeError::Shutdown)?;
+            pending.push(rx);
+        }
+        let mut seqs = Vec::new();
+        let mut bytes = 0u64;
+        for rx in pending {
+            for (id, len, b) in rx.recv().map_err(|_| ServeError::Shutdown)?? {
+                seqs.push((id.0, len));
+                bytes += b;
+            }
+        }
+        seqs.sort_unstable();
+        let manifest = persist::Manifest::from_config(
+            &self.cfg,
+            self.next_seq.load(Ordering::Relaxed),
+            seqs,
+        );
+        manifest.save(dir)?;
+        self.metrics.snapshots.fetch_add(1, Ordering::Relaxed);
+        crate::log_info!(
+            "snapshot: {} sequences, {bytes} state bytes -> {}",
+            manifest.seqs.len(),
+            dir.display()
+        );
+        Ok(SnapshotReport { sequences: manifest.seqs.len(), bytes })
+    }
+
+    /// Rebuild a coordinator from a [`Coordinator::snapshot`] directory —
+    /// **including with a different `workers` count**: sequences are
+    /// hash-sharded by id, so every serialized state is re-dealt to its
+    /// new owning shard on install. That re-deal is the live-migration /
+    /// rebalance primitive: snapshot on W workers, restore on W′.
+    ///
+    /// `cfg` must be state-compatible with the snapshot (mechanism spec,
+    /// `d_head`/`d_v`, `horizon`/`window` — use
+    /// [`persist::Manifest::apply_to`] to derive one); topology knobs
+    /// (workers, batching, queue caps, store budget) are free to change.
+    /// Every state file is decoded through the backend's validating
+    /// loader, so a wrong-mechanism restore fails fast instead of serving
+    /// garbage.
+    pub fn restore(cfg: CoordinatorConfig, dir: &std::path::Path) -> anyhow::Result<Coordinator> {
+        let manifest = persist::Manifest::load(dir)?;
+        manifest.check_compatible(&cfg)?;
+        let coord = Coordinator::start(cfg)?;
+        coord.next_seq.store(manifest.next_seq.max(1), Ordering::Relaxed);
+        // Dispatch every install first, then collect the acks: shards
+        // decode their state files in parallel instead of one blocking
+        // round-trip per sequence (restore throughput is the migration
+        // path's headline number).
+        let mut pending = Vec::with_capacity(manifest.seqs.len());
+        for &(id, _len) in &manifest.seqs {
+            let id = SeqId(id);
+            let (ack, rx) = mpsc::channel();
+            coord.senders[coord.shard(id)]
+                .send(worker::Msg::Install(id, persist::state_file(dir, id), ack))
+                .map_err(|_| ServeError::Shutdown)?;
+            pending.push(rx);
+        }
+        for rx in pending {
+            rx.recv().map_err(|_| ServeError::Shutdown)??;
+        }
+        // Roster audit: installs go through the normal admission path, so
+        // a store too small for the snapshot (and without a spill tier to
+        // absorb the overflow) would silently *evict* earlier installs.
+        // Every manifest sequence must still be present at its recorded
+        // length, or the restore is a failure — not a partial success.
+        for &(id, len) in &manifest.seqs {
+            let got = coord.sequence_len(SeqId(id))?;
+            anyhow::ensure!(
+                got == Some(len),
+                "restore lost sequence {id} (store now holds {got:?}, snapshot recorded {len} \
+                 tokens): the target store is too small for the snapshot roster — raise \
+                 store.memory_budget/max_sequences or configure a spill_dir"
+            );
+        }
+        crate::log_info!(
+            "restored {} sequences from {} across {} workers",
+            manifest.seqs.len(),
+            dir.display(),
+            coord.senders.len()
+        );
+        Ok(coord)
     }
 
     /// Graceful shutdown: drain queues, join workers.

@@ -1,0 +1,257 @@
+//! Session persistence (ADR-004): the on-disk layout shared by the
+//! store's spill tier and coordinator snapshot/restore.
+//!
+//! A spill or snapshot directory holds one codec file per sequence
+//! (`seq_<id>.state`, written by [`crate::kernels::AttnState::encode`]);
+//! a snapshot additionally holds `manifest.json` — the mechanism spec,
+//! geometry and sequence roster — written (fsynced) *after* every state
+//! file, so the manifest's existence commits the snapshot. Restore reads
+//! the manifest, verifies the target config is state-compatible, and
+//! re-deals every state to its owning shard under the *new* worker count
+//! (sequences are hash-sharded by id) — which makes snapshot/restore the
+//! shard-migration and rebalance primitive, not just crash recovery.
+//!
+//! Durability rules: snapshot state files and the manifest are fsynced;
+//! spill files are not (the spill tier is a cache — losing one is an
+//! eviction, not data loss for the serving contract).
+
+use crate::coordinator::request::SeqId;
+use crate::coordinator::CoordinatorConfig;
+use crate::kernels::config::Mechanism;
+use crate::util::json::Json;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+/// File name of the snapshot manifest inside its directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+
+/// Path of one serialized sequence state inside a spill or snapshot
+/// directory.
+pub fn state_file(dir: &Path, id: SeqId) -> PathBuf {
+    dir.join(format!("seq_{}.state", id.0))
+}
+
+/// Write `bytes` to `path` durably: temp file in the same directory,
+/// fsync, atomic rename, then fsync of the parent directory (the rename
+/// itself is only crash-durable once the directory entry is flushed). A
+/// crashed writer can never leave a torn or half-new file under the final
+/// name — which is what lets repeated snapshots into the same directory
+/// stay restorable at every instant.
+pub fn write_durable(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    let tmp = path.with_extension("tmp");
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    std::fs::rename(&tmp, path)?;
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::File::open(parent)?.sync_all()?;
+        }
+    }
+    Ok(())
+}
+
+/// Snapshot manifest: everything needed to rebuild a coordinator around
+/// the serialized states — the mechanism registry spec and geometry the
+/// states were produced under, the id allocator position, and the roster.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Full mechanism registry spec ([`Mechanism`]'s `Display`).
+    pub mechanism: String,
+    pub d_head: usize,
+    pub d_v: usize,
+    pub horizon: usize,
+    pub window: usize,
+    /// Next sequence id the coordinator would hand out.
+    pub next_seq: u64,
+    /// `(sequence id, absorbed tokens)` roster.
+    pub seqs: Vec<(u64, usize)>,
+}
+
+impl Manifest {
+    pub fn from_config(
+        cfg: &CoordinatorConfig,
+        next_seq: u64,
+        seqs: Vec<(u64, usize)>,
+    ) -> Manifest {
+        Manifest {
+            mechanism: cfg.mechanism.to_string(),
+            d_head: cfg.d_head,
+            d_v: cfg.d_v,
+            horizon: cfg.horizon,
+            window: cfg.window,
+            next_seq,
+            seqs,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("mechanism", Json::Str(self.mechanism.clone())),
+            ("d_head", Json::Num(self.d_head as f64)),
+            ("d_v", Json::Num(self.d_v as f64)),
+            ("horizon", Json::Num(self.horizon as f64)),
+            ("window", Json::Num(self.window as f64)),
+            ("next_seq", Json::Num(self.next_seq as f64)),
+            (
+                "seqs",
+                Json::Arr(
+                    self.seqs
+                        .iter()
+                        .map(|&(id, len)| {
+                            Json::obj(vec![
+                                ("id", Json::Num(id as f64)),
+                                ("len", Json::Num(len as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Manifest> {
+        fn num(j: &Json, k: &str) -> anyhow::Result<usize> {
+            j.req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest field '{k}' must be a number"))
+        }
+        let mechanism = j
+            .req("mechanism")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("manifest field 'mechanism' must be a string"))?
+            .to_string();
+        let arr = j
+            .req("seqs")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest field 'seqs' must be an array"))?;
+        let mut seqs = Vec::with_capacity(arr.len());
+        for e in arr {
+            seqs.push((num(e, "id")? as u64, num(e, "len")?));
+        }
+        Ok(Manifest {
+            mechanism,
+            d_head: num(j, "d_head")?,
+            d_v: num(j, "d_v")?,
+            horizon: num(j, "horizon")?,
+            window: num(j, "window")?,
+            next_seq: num(j, "next_seq")? as u64,
+            seqs,
+        })
+    }
+
+    /// Write `manifest.json` into `dir` via [`write_durable`] — the commit
+    /// point of a snapshot (state files without a manifest are ignored by
+    /// restore, and the atomic rename means a crash mid-save leaves the
+    /// *previous* manifest intact rather than a truncated one).
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        write_durable(&dir.join(MANIFEST_FILE), self.to_json().to_pretty().as_bytes())
+    }
+
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        Manifest::from_json(&Json::from_file(&dir.join(MANIFEST_FILE))?)
+    }
+
+    /// Overwrite the state-compatibility fields of `cfg` with the
+    /// manifest's (the CLI restore path): mechanism spec and geometry come
+    /// from the snapshot, topology knobs — workers, batching, queues,
+    /// store budget — stay caller-chosen.
+    pub fn apply_to(&self, cfg: &mut CoordinatorConfig) -> anyhow::Result<()> {
+        cfg.mechanism = Mechanism::parse(&self.mechanism)?;
+        cfg.d_head = self.d_head;
+        cfg.d_v = self.d_v;
+        cfg.horizon = self.horizon;
+        cfg.window = self.window;
+        Ok(())
+    }
+
+    /// Check that `cfg` can resume this snapshot's states byte-for-byte.
+    pub fn check_compatible(&self, cfg: &CoordinatorConfig) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            cfg.mechanism.to_string() == self.mechanism,
+            "mechanism mismatch: snapshot has '{}', config has '{}'",
+            self.mechanism,
+            cfg.mechanism
+        );
+        anyhow::ensure!(
+            cfg.d_head == self.d_head && cfg.d_v == self.d_v,
+            "geometry mismatch: snapshot (d_head={}, d_v={}) vs config (d_head={}, d_v={})",
+            self.d_head,
+            self.d_v,
+            cfg.d_head,
+            cfg.d_v
+        );
+        anyhow::ensure!(
+            cfg.horizon == self.horizon && cfg.window == self.window,
+            "window mismatch: snapshot (horizon={}, window={}) vs config (horizon={}, window={})",
+            self.horizon,
+            self.window,
+            cfg.horizon,
+            cfg.window
+        );
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::from_config(
+            &CoordinatorConfig::default(),
+            42,
+            vec![(1, 128), (7, 1), (9, 4096)],
+        )
+    }
+
+    #[test]
+    fn manifest_round_trips_through_json_and_disk() {
+        let m = manifest();
+        let back = Manifest::from_json(&Json::parse(&m.to_json().to_pretty()).unwrap()).unwrap();
+        assert_eq!(m, back);
+        let dir = std::env::temp_dir().join("slay_persist_manifest_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        m.save(&dir).unwrap();
+        assert_eq!(Manifest::load(&dir).unwrap(), m);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn apply_to_restores_a_compatible_config() {
+        let m = manifest();
+        let mut cfg = CoordinatorConfig { d_head: 99, workers: 2, ..Default::default() };
+        m.apply_to(&mut cfg).unwrap();
+        m.check_compatible(&cfg).unwrap();
+        assert_eq!(cfg.workers, 2, "topology knobs stay caller-chosen");
+        assert_eq!(cfg.d_head, CoordinatorConfig::default().d_head);
+    }
+
+    #[test]
+    fn incompatible_configs_are_rejected() {
+        let m = manifest();
+        let bad_head = CoordinatorConfig { d_head: 1, ..Default::default() };
+        assert!(m.check_compatible(&bad_head).is_err());
+        let bad_window = CoordinatorConfig { window: 7, ..Default::default() };
+        assert!(m.check_compatible(&bad_window).is_err());
+        let bad_mech = CoordinatorConfig { mechanism: Mechanism::EluLinear, ..Default::default() };
+        assert!(m.check_compatible(&bad_mech).is_err());
+    }
+
+    #[test]
+    fn state_file_naming_is_stable() {
+        let p = state_file(Path::new("/tmp/snap"), SeqId(17));
+        assert_eq!(p, PathBuf::from("/tmp/snap/seq_17.state"));
+    }
+
+    #[test]
+    fn manifest_load_fails_cleanly_without_a_manifest() {
+        let dir = std::env::temp_dir().join("slay_persist_no_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -9,7 +9,12 @@
 //!  "q":[...],"k":[...],"v":[...],"n":R}   -> {"ok":true,"y":[...],"seq_len":L}
 //! {"op":"release","seq":N}                -> {"ok":true,"released":true}
 //! {"op":"metrics"}                        -> {"ok":true,"metrics":{...}}
+//! {"op":"snapshot","dir":"name"}          -> {"ok":true,"sequences":N,
+//!                                             "state_bytes":B,"dir":"..."}
 //! ```
+//! `snapshot` writes under the coordinator's configured `snapshot_root`
+//! (`--snapshot-root`); `dir` is a plain directory *name* below it, never
+//! a path — without a root the op is disabled.
 //! Errors: `{"ok":false,"error":"..."}`. One thread per connection; the
 //! coordinator's own backpressure bounds admitted work.
 
@@ -108,6 +113,22 @@ fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> anyhow::Result<()>
     }
 }
 
+/// Parse the required `seq` field as a nonnegative integer sequence id.
+/// Missing, non-numeric, negative or fractional values are protocol
+/// errors — they must never alias onto a real id (the seed's
+/// `unwrap_or(-1.0) as u64` silently turned them into id 0).
+fn seq_id(req: &Json) -> anyhow::Result<SeqId> {
+    let v = req
+        .req("seq")?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("'seq' must be a number"))?;
+    anyhow::ensure!(
+        v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64,
+        "'seq' must be a nonnegative integer (got {v})"
+    );
+    Ok(SeqId(v as u64))
+}
+
 fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let op = req
@@ -123,7 +144,7 @@ fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
             ]))
         }
         "release" => {
-            let seq = SeqId(req.req("seq")?.as_f64().unwrap_or(-1.0) as u64);
+            let seq = seq_id(&req)?;
             let released = coord.release_sequence(seq)?;
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
@@ -134,8 +155,36 @@ fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
             ("ok", Json::Bool(true)),
             ("metrics", coord.metrics().to_json()),
         ])),
+        "snapshot" => {
+            let name = req
+                .req("dir")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("'dir' must be a string"))?;
+            // A network peer names a snapshot under the configured root —
+            // it never chooses server-side paths (no snapshot_root, no
+            // wire snapshots).
+            let root = coord.config().snapshot_root.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("snapshot over TCP is disabled (serve with --snapshot-root)")
+            })?;
+            anyhow::ensure!(
+                !name.is_empty()
+                    && !name.starts_with('.')
+                    && name
+                        .chars()
+                        .all(|c| c.is_ascii_alphanumeric() || matches!(c, '_' | '-' | '.')),
+                "'dir' must be a plain snapshot name under the snapshot root, not a path"
+            );
+            let dir = root.join(name);
+            let report = coord.snapshot(&dir)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("sequences", Json::Num(report.sequences as f64)),
+                ("state_bytes", Json::Num(report.bytes as f64)),
+                ("dir", Json::Str(dir.display().to_string())),
+            ]))
+        }
         "attend" => {
-            let seq = SeqId(req.req("seq")?.as_f64().unwrap_or(-1.0) as u64);
+            let seq = seq_id(&req)?;
             let n = req.req("n")?.as_usize().unwrap_or(0);
             let d_head = coord.config().d_head;
             let d_v = coord.config().d_v;
@@ -182,6 +231,7 @@ mod tests {
                 d_head: 4,
                 d_v: 4,
                 workers: 1,
+                snapshot_root: Some(std::env::temp_dir().join("slay_server_snap_root")),
                 ..CoordinatorConfig::default()
             })
             .unwrap(),
@@ -261,6 +311,105 @@ mod tests {
             &format!(r#"{{"op":"attend","seq":{seq},"n":2,"q":[1.0],"k":[1.0],"v":[1.0]}}"#),
         );
         assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_seq_is_rejected_not_aliased_to_zero() {
+        // Seed bug: a missing/non-numeric/negative `seq` silently became
+        // id 0. Every such request must now fail as a protocol error.
+        let (server, _coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let ones = vec!["1.0"; 4].join(",");
+        for req in [
+            // missing seq
+            format!(r#"{{"op":"attend","n":1,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#),
+            // non-numeric seq
+            format!(r#"{{"op":"attend","seq":"x","n":1,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#),
+            // negative seq
+            format!(r#"{{"op":"attend","seq":-3,"n":1,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#),
+            // fractional seq
+            format!(r#"{{"op":"attend","seq":1.5,"n":1,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#),
+            // and the same for release
+            r#"{"op":"release"}"#.to_string(),
+            r#"{"op":"release","seq":-1}"#.to_string(),
+        ] {
+            let reply = roundtrip(&stream, &req);
+            assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false), "{req}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn attend_on_unknown_sequence_reports_an_error() {
+        let (server, _coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let ones = vec!["1.0"; 4].join(",");
+        let req =
+            format!(r#"{{"op":"attend","seq":4242,"n":1,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#);
+        let reply = roundtrip(&stream, &req);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            reply.get("error").unwrap().as_str().unwrap().contains("unknown sequence"),
+            "error should name the unknown sequence: {reply:?}"
+        );
+        // the connection and coordinator survive
+        let m = roundtrip(&stream, r#"{"op":"metrics"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_op_writes_a_restorable_manifest_under_the_root() {
+        let (server, coord) = start();
+        let root = coord.config().snapshot_root.clone().unwrap();
+        let dir = root.join("snap_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let created = roundtrip(&stream, r#"{"op":"create"}"#);
+        let seq = created.get("seq").unwrap().as_usize().unwrap();
+        let ones = vec!["1.0"; 8].join(",");
+        roundtrip(
+            &stream,
+            &format!(
+                r#"{{"op":"attend","seq":{seq},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#
+            ),
+        );
+        let snap = roundtrip(&stream, r#"{"op":"snapshot","dir":"snap_test"}"#);
+        assert_eq!(snap.get("ok").unwrap().as_bool(), Some(true), "{snap:?}");
+        assert_eq!(snap.get("sequences").unwrap().as_usize(), Some(1));
+        let manifest = crate::coordinator::persist::Manifest::load(&dir).unwrap();
+        assert_eq!(manifest.seqs, vec![(seq as u64, 2)]);
+        // path-shaped names never reach the filesystem
+        for bad in [
+            r#"{"op":"snapshot","dir":"../evil"}"#,
+            r#"{"op":"snapshot","dir":"/abs/path"}"#,
+            r#"{"op":"snapshot","dir":".."}"#,
+            r#"{"op":"snapshot","dir":""}"#,
+        ] {
+            let reply = roundtrip(&stream, bad);
+            assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false), "{bad}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        server.shutdown();
+    }
+
+    #[test]
+    fn snapshot_op_is_disabled_without_a_root() {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                d_head: 4,
+                d_v: 4,
+                workers: 1,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let server = Server::start("127.0.0.1:0", coord).unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let reply = roundtrip(&stream, r#"{"op":"snapshot","dir":"snap"}"#);
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        assert!(reply.get("error").unwrap().as_str().unwrap().contains("disabled"));
         server.shutdown();
     }
 }

@@ -8,10 +8,25 @@
 //! bounded rolling KV window. The store budgets each state at its
 //! *capacity* (the window fully populated), tracks bytes, and enforces the
 //! budget with idle-eviction.
+//!
+//! # Spill tier (ADR-004)
+//!
+//! With [`StoreConfig::spill_dir`] set, idle eviction *pages states out*
+//! through the versioned session codec ([`AttnState::encode`]) instead of
+//! destroying them, and [`SequenceStore::get_mut`] transparently faults a
+//! spilled state back in on the sequence's next chunk — so the memory
+//! budget bounds the *resident* set while the number of live sessions is
+//! bounded only by disk. Spill files are not fsynced (losing one equals an
+//! eviction); durable snapshots go through
+//! [`SequenceStore::export_all`], which does fsync.
 
+use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::SeqId;
 use crate::kernels::AttnState;
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 use std::time::Instant;
 
 struct Entry {
@@ -21,18 +36,37 @@ struct Entry {
     last_touch: Instant,
 }
 
+/// Per-sequence snapshot record: `(id, seq_len, serialized bytes)` — what
+/// [`SequenceStore::export_all`] reports per exported state.
+pub type SnapshotRecord = (SeqId, usize, u64);
+
+/// A paged-out sequence: its serialized state on disk plus the metadata
+/// needed to answer queries and re-admit it without touching the file.
+struct SpillEntry {
+    path: PathBuf,
+    cap_bytes: usize,
+    len: usize,
+}
+
 /// Store configuration.
 #[derive(Clone, Debug)]
 pub struct StoreConfig {
-    /// Hard cap on live sequences (admission control).
+    /// Hard cap on resident sequences (admission control).
     pub max_sequences: usize,
     /// Soft memory budget in bytes; exceeding it evicts idle sequences.
     pub memory_budget: usize,
+    /// Spill directory for this shard: when set, idle eviction serializes
+    /// states here instead of destroying them and the store faults them
+    /// back in on demand. `None` keeps destructive eviction. The store
+    /// *owns* this directory: stale `seq_*.state` files from a previous
+    /// process are swept at startup (they are cache, and nothing tracks
+    /// them anymore) — do not point it at a snapshot directory.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        StoreConfig { max_sequences: 4096, memory_budget: 256 << 20 }
+        StoreConfig { max_sequences: 4096, memory_budget: 256 << 20, spill_dir: None }
     }
 }
 
@@ -40,23 +74,67 @@ impl Default for StoreConfig {
 pub struct SequenceStore {
     cfg: StoreConfig,
     seqs: HashMap<SeqId, Entry>,
+    spilled: HashMap<SeqId, SpillEntry>,
     bytes: usize,
+    metrics: Option<Arc<Metrics>>,
 }
 
 impl SequenceStore {
     pub fn new(cfg: StoreConfig) -> Self {
-        SequenceStore { cfg, seqs: HashMap::new(), bytes: 0 }
+        if let Some(dir) = &cfg.spill_dir {
+            match std::fs::create_dir_all(dir) {
+                Ok(()) => {
+                    // A fresh store tracks no spilled sequences, so any
+                    // surviving seq_* files are orphans of a previous
+                    // process — unswept they accumulate until the disk
+                    // fills and the spill tier degrades to destructive
+                    // eviction.
+                    if let Ok(entries) = std::fs::read_dir(dir) {
+                        for entry in entries.flatten() {
+                            let name = entry.file_name();
+                            let name = name.to_string_lossy();
+                            if name.starts_with("seq_")
+                                && (name.ends_with(".state") || name.ends_with(".tmp"))
+                            {
+                                let _ = std::fs::remove_file(entry.path());
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    crate::log_warn!("cannot create spill dir {}: {e}", dir.display());
+                }
+            }
+        }
+        SequenceStore {
+            cfg,
+            seqs: HashMap::new(),
+            spilled: HashMap::new(),
+            bytes: 0,
+            metrics: None,
+        }
     }
 
+    /// Wire the shared metrics sink (spill counters flow through it).
+    pub fn attach_metrics(&mut self, metrics: Arc<Metrics>) {
+        self.metrics = Some(metrics);
+    }
+
+    /// Resident sequences (excludes spilled ones).
     pub fn len(&self) -> usize {
         self.seqs.len()
     }
 
-    pub fn is_empty(&self) -> bool {
-        self.seqs.is_empty()
+    /// Sequences currently paged out to disk.
+    pub fn spilled_len(&self) -> usize {
+        self.spilled.len()
     }
 
-    /// Budgeted bytes across live sequences (capacity accounting).
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty() && self.spilled.is_empty()
+    }
+
+    /// Budgeted bytes across resident sequences (capacity accounting).
     pub fn bytes(&self) -> usize {
         self.bytes
     }
@@ -67,7 +145,10 @@ impl SequenceStore {
     pub fn create(&mut self, id: SeqId, state: AttnState) -> anyhow::Result<()> {
         // Reject duplicates before touching the map: a blind insert would
         // destroy the live sequence's absorbed state even while erroring.
-        anyhow::ensure!(!self.seqs.contains_key(&id), "sequence {id:?} already exists");
+        anyhow::ensure!(
+            !self.seqs.contains_key(&id) && !self.spilled.contains_key(&id),
+            "sequence {id:?} already exists"
+        );
         let cap_bytes = state.capacity_bytes();
         if self.seqs.len() >= self.cfg.max_sequences
             || self.bytes + cap_bytes > self.cfg.memory_budget
@@ -89,8 +170,13 @@ impl SequenceStore {
         Ok(())
     }
 
-    /// Mutable access, bumping the LRU clock.
+    /// Mutable access, bumping the LRU clock. A spilled sequence is
+    /// transparently faulted back in (evicting other idle residents to
+    /// make room) before the reference is handed out.
     pub fn get_mut(&mut self, id: SeqId) -> Option<&mut AttnState> {
+        if !self.seqs.contains_key(&id) && !self.fault_in(id) {
+            return None;
+        }
         match self.seqs.get_mut(&id) {
             Some(e) => {
                 e.last_touch = Instant::now();
@@ -101,25 +187,35 @@ impl SequenceStore {
     }
 
     pub fn contains(&self, id: SeqId) -> bool {
-        self.seqs.contains_key(&id)
+        self.seqs.contains_key(&id) || self.spilled.contains_key(&id)
     }
 
-    /// Tokens absorbed by a sequence.
+    /// Tokens absorbed by a sequence (answered from metadata for spilled
+    /// ones — no fault-in).
     pub fn seq_len(&self, id: SeqId) -> Option<usize> {
-        self.seqs.get(&id).map(|e| e.state.len())
+        self.seqs
+            .get(&id)
+            .map(|e| e.state.len())
+            .or_else(|| self.spilled.get(&id).map(|s| s.len))
     }
 
-    /// Drop a finished sequence, reclaiming its bytes.
+    /// Drop a finished sequence (resident or spilled), reclaiming its
+    /// bytes / spill file.
     pub fn release(&mut self, id: SeqId) -> bool {
         if let Some(e) = self.seqs.remove(&id) {
             self.bytes -= e.cap_bytes;
+            true
+        } else if let Some(s) = self.spilled.remove(&id) {
+            let _ = std::fs::remove_file(&s.path);
             true
         } else {
             false
         }
     }
 
-    /// Evict the `n` least-recently-touched sequences.
+    /// Evict the `n` least-recently-touched resident sequences — spilling
+    /// them to disk when a spill dir is configured, destroying them
+    /// otherwise (seed behavior).
     pub fn evict_idle(&mut self, n: usize) -> usize {
         let mut order: Vec<(Instant, SeqId)> =
             self.seqs.iter().map(|(id, e)| (e.last_touch, *id)).collect();
@@ -127,9 +223,120 @@ impl SequenceStore {
         let victims: Vec<SeqId> = order.into_iter().take(n).map(|(_, id)| id).collect();
         let count = victims.len();
         for id in victims {
-            self.release(id);
+            if !self.spill(id) {
+                self.release(id);
+            }
         }
         count
+    }
+
+    /// Page one resident sequence out to the spill directory. Returns
+    /// false (the caller falls back to destructive eviction) when no spill
+    /// dir is configured or the write fails. Spill files are *not* fsynced:
+    /// the tier is a cache whose loss equals an eviction, not a durability
+    /// promise (ADR-004) — durable writes go through
+    /// [`SequenceStore::export_all`].
+    fn spill(&mut self, id: SeqId) -> bool {
+        let dir = match &self.cfg.spill_dir {
+            Some(d) => d.clone(),
+            None => return false,
+        };
+        let entry = match self.seqs.get(&id) {
+            Some(e) => e,
+            None => return false,
+        };
+        let buf = entry.state.encode_to_vec();
+        let path = crate::coordinator::persist::state_file(&dir, id);
+        if let Err(e) = std::fs::create_dir_all(&dir).and_then(|()| std::fs::write(&path, &buf)) {
+            crate::log_warn!("spill of sequence {:?} failed ({e}); evicting destructively", id);
+            return false;
+        }
+        let e = self.seqs.remove(&id).expect("victim is resident");
+        self.bytes -= e.cap_bytes;
+        self.spilled.insert(id, SpillEntry { path, cap_bytes: e.cap_bytes, len: e.state.len() });
+        if let Some(m) = &self.metrics {
+            m.spilled.fetch_add(1, Ordering::Relaxed);
+            m.bytes_spilled.fetch_add(buf.len() as u64, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Fault a spilled sequence back into the resident set, evicting other
+    /// idle sequences until its admission charge fits the budget again.
+    /// The spill files were written by this store from validated states,
+    /// so only the codec's checksum is re-verified here.
+    fn fault_in(&mut self, id: SeqId) -> bool {
+        let entry = match self.spilled.remove(&id) {
+            Some(e) => e,
+            None => return false,
+        };
+        let decoded = std::fs::File::open(&entry.path)
+            .map_err(anyhow::Error::from)
+            .and_then(|f| AttnState::decode(&mut std::io::BufReader::new(f)));
+        let _ = std::fs::remove_file(&entry.path);
+        let state = match decoded {
+            Ok(s) => s,
+            Err(e) => {
+                crate::log_warn!("dropping spilled sequence {:?}: {e}", id);
+                return false;
+            }
+        };
+        while !self.seqs.is_empty()
+            && (self.seqs.len() >= self.cfg.max_sequences
+                || self.bytes + entry.cap_bytes > self.cfg.memory_budget)
+        {
+            if self.evict_idle(1) == 0 {
+                break;
+            }
+        }
+        if self.seqs.len() >= self.cfg.max_sequences
+            || self.bytes + entry.cap_bytes > self.cfg.memory_budget
+        {
+            crate::log_warn!("no room to fault sequence {:?} back in; dropping it", id);
+            return false;
+        }
+        self.bytes += entry.cap_bytes;
+        self.seqs
+            .insert(id, Entry { state, cap_bytes: entry.cap_bytes, last_touch: Instant::now() });
+        if let Some(m) = &self.metrics {
+            m.restored_from_spill.fetch_add(1, Ordering::Relaxed);
+        }
+        true
+    }
+
+    /// Write every sequence this shard owns — resident *and* spilled —
+    /// into `dir` as one codec file per sequence, each fsynced and
+    /// atomically renamed into place (snapshots are a durability promise,
+    /// unlike the spill tier). Spilled entries' bytes come from unsynced
+    /// cache files, so their codec checksum is verified before promotion —
+    /// a rotten spill file is skipped (= an eviction) instead of poisoning
+    /// the snapshot. Returns one [`SnapshotRecord`] per exported sequence.
+    pub fn export_all(&self, dir: &Path) -> anyhow::Result<Vec<SnapshotRecord>> {
+        std::fs::create_dir_all(dir)?;
+        let mut out = Vec::with_capacity(self.seqs.len() + self.spilled.len());
+        for (id, e) in &self.seqs {
+            let buf = e.state.encode_to_vec();
+            let path = crate::coordinator::persist::state_file(dir, *id);
+            crate::coordinator::persist::write_durable(&path, &buf)?;
+            out.push((*id, e.state.len(), buf.len() as u64));
+        }
+        for (id, s) in &self.spilled {
+            let buf = match std::fs::read(&s.path) {
+                Ok(b) => b,
+                Err(e) => {
+                    crate::log_warn!("snapshot skips spilled sequence {:?} (unreadable: {e})", id);
+                    continue;
+                }
+            };
+            if let Err(e) = AttnState::verify_encoded(&buf) {
+                crate::log_warn!("snapshot skips spilled sequence {:?} (corrupt: {e})", id);
+                continue;
+            }
+            let path = crate::coordinator::persist::state_file(dir, *id);
+            crate::coordinator::persist::write_durable(&path, &buf)?;
+            out.push((*id, s.len, buf.len() as u64));
+        }
+        Ok(out)
     }
 }
 
@@ -146,7 +353,20 @@ mod tests {
     }
 
     fn store(max: usize) -> SequenceStore {
-        SequenceStore::new(StoreConfig { max_sequences: max, memory_budget: 1 << 20 })
+        SequenceStore::new(StoreConfig {
+            max_sequences: max,
+            memory_budget: 1 << 20,
+            spill_dir: None,
+        })
+    }
+
+    fn spill_store(max: usize, budget: usize, dir: &std::path::Path) -> SequenceStore {
+        let _ = std::fs::remove_dir_all(dir);
+        SequenceStore::new(StoreConfig {
+            max_sequences: max,
+            memory_budget: budget,
+            spill_dir: Some(dir.to_path_buf()),
+        })
     }
 
     #[test]
@@ -243,5 +463,78 @@ mod tests {
         let cap = st.capacity_bytes();
         s.create(SeqId(1), st).unwrap();
         assert_eq!(s.bytes(), cap);
+    }
+
+    #[test]
+    fn eviction_spills_and_fault_in_restores_bit_identically() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_spill_roundtrip");
+        let mut s = spill_store(1, 1 << 20, &dir);
+        let mut rng = Rng::new(11);
+        let q = Mat::randn(3, 16, &mut rng);
+        let k = Mat::randn(3, 16, &mut rng);
+        let v = Mat::randn(3, 4, &mut rng);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        b.prefill(s.get_mut(SeqId(1)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+        // reference: the same prefill on a never-evicted state
+        let mut reference = b.new_state(4);
+        b.prefill(&mut reference, q.view(), k.view(), v.view()).unwrap();
+        // admitting a second sequence under max_sequences = 1 spills seq 1
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.spilled_len(), 1);
+        assert!(s.contains(SeqId(1)), "spilled sequence still belongs to the store");
+        assert_eq!(s.seq_len(SeqId(1)), Some(3), "seq_len answered from spill metadata");
+        // fault back in (which spills seq 2 in turn) and decode on both
+        let mut out_spilled = vec![0.0f32; 4];
+        let mut out_ref = vec![0.0f32; 4];
+        let st = s.get_mut(SeqId(1)).expect("fault-in");
+        b.decode(st, q.row(0), k.row(0), v.row(0), &mut out_spilled).unwrap();
+        b.decode(&mut reference, q.row(0), k.row(0), v.row(0), &mut out_ref).unwrap();
+        assert_eq!(out_spilled, out_ref, "fault-in must resume bit-identically");
+        assert_eq!(s.seq_len(SeqId(1)), Some(4));
+        assert_eq!(s.spilled_len(), 1, "seq 2 was paged out to make room");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn release_reclaims_spilled_sequences_and_their_files() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_spill_release");
+        let mut s = spill_store(1, 1 << 20, &dir);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        let file = crate::coordinator::persist::state_file(&dir, SeqId(1));
+        assert!(file.exists(), "spill file must exist while paged out");
+        // duplicate admission is rejected against the spilled tier too
+        assert!(s.create(SeqId(1), b.new_state(4)).is_err());
+        assert!(s.release(SeqId(1)));
+        assert!(!s.contains(SeqId(1)));
+        assert!(!file.exists(), "release must reclaim the spill file");
+        assert!(!s.release(SeqId(1)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_counters_flow_through_metrics() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_spill_metrics");
+        let per_seq = b.new_state(4).capacity_bytes();
+        let mut s = spill_store(8, per_seq, &dir);
+        let m = Arc::new(Metrics::new());
+        s.attach_metrics(m.clone());
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // the budget fits exactly one state: admitting #2 pages #1 out
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        assert_eq!(m.spilled.load(Ordering::Relaxed), 1);
+        assert!(m.bytes_spilled.load(Ordering::Relaxed) > 0);
+        // touching #1 faults it back (paging #2 out)
+        assert!(s.get_mut(SeqId(1)).is_some());
+        assert_eq!(m.restored_from_spill.load(Ordering::Relaxed), 1);
+        assert_eq!(m.spilled.load(Ordering::Relaxed), 2);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

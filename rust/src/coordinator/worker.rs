@@ -13,7 +13,7 @@
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::{AttendResult, SeqId, WorkItem};
 use crate::coordinator::scheduler::{order_batch, BatchPolicy};
-use crate::coordinator::state::{SequenceStore, StoreConfig};
+use crate::coordinator::state::{SequenceStore, SnapshotRecord, StoreConfig};
 use crate::kernels::config::Mechanism;
 use crate::kernels::AttentionBackend;
 use crate::math::linalg::{Mat, Scratch};
@@ -28,6 +28,17 @@ pub enum Msg {
     Release(SeqId, mpsc::Sender<bool>),
     /// Query a sequence's length (diagnostics).
     Len(SeqId, mpsc::Sender<Option<usize>>),
+    /// Serialize every sequence this shard owns (resident and spilled)
+    /// into the directory (coordinator snapshot, ADR-004); replies with
+    /// one [`SnapshotRecord`] per sequence. Queued behind all work the
+    /// shard has already accepted, so the snapshot includes exactly the
+    /// chunks whose replies preceded it.
+    Snapshot(std::path::PathBuf, mpsc::Sender<anyhow::Result<Vec<SnapshotRecord>>>),
+    /// Re-admit one serialized sequence under the given id (coordinator
+    /// restore / shard migration): the state file is loaded through the
+    /// backend's validating decoder, so a snapshot can never be resumed
+    /// under the wrong mechanism or geometry.
+    Install(SeqId, std::path::PathBuf, mpsc::Sender<anyhow::Result<()>>),
     Shutdown,
 }
 
@@ -56,6 +67,7 @@ pub fn run(
     let backend =
         crate::kernels::build_with_window(&cfg.mechanism, cfg.d_head, cfg.horizon, cfg.window)?;
     let mut store = SequenceStore::new(cfg.store.clone());
+    store.attach_metrics(metrics.clone());
     // Per-worker scratch arena (ADR-003): reused feature/projection/score
     // buffers make steady-state prefill and decode allocation-free.
     let mut scratch = Scratch::new();
@@ -76,6 +88,12 @@ pub fn run(
             Msg::Len(id, ack) => {
                 let _ = ack.send(store.seq_len(id));
             }
+            Msg::Snapshot(dir, ack) => {
+                let _ = ack.send(store.export_all(&dir));
+            }
+            Msg::Install(id, path, ack) => {
+                let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
+            }
             Msg::Work(first) => {
                 // Continuous batching (§Perf iteration 1): drain whatever is
                 // already queued — up to max_batch — WITHOUT an artificial
@@ -88,6 +106,12 @@ pub fn run(
                 let mut batch = vec![first];
                 let first_arrival = Instant::now();
                 let mut shutdown = false;
+                // A snapshot that arrives during batch formation is
+                // deferred until after the batch is processed: the work
+                // items being gathered were accepted before it, and the
+                // snapshot contract is "includes every chunk whose reply
+                // preceded it" — so the gather closes early instead.
+                let mut deferred_snapshot = None;
                 loop {
                     // non-blocking drain first
                     match rx.try_recv() {
@@ -110,6 +134,14 @@ pub fn run(
                             let _ = ack.send(store.seq_len(id));
                             continue;
                         }
+                        Ok(Msg::Snapshot(dir, ack)) => {
+                            deferred_snapshot = Some((dir, ack));
+                            break;
+                        }
+                        Ok(Msg::Install(id, path, ack)) => {
+                            let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
+                            continue;
+                        }
                         Ok(Msg::Shutdown) => {
                             shutdown = true;
                             break;
@@ -129,13 +161,37 @@ pub fn run(
                     }
                     std::thread::yield_now();
                 }
-                process_batch(&mut store, backend.as_ref(), &mut scratch, batch, &metrics, &inflight);
+                process_batch(
+                    &mut store,
+                    backend.as_ref(),
+                    &mut scratch,
+                    batch,
+                    &metrics,
+                    &inflight,
+                );
+                if let Some((dir, ack)) = deferred_snapshot {
+                    let _ = ack.send(store.export_all(&dir));
+                }
                 if shutdown {
                     return Ok(());
                 }
             }
         }
     }
+}
+
+/// Load one serialized state through the backend's validating decoder and
+/// admit it under `id` — the restore / shard-migration entry (ADR-004).
+fn install(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    id: SeqId,
+    path: &std::path::Path,
+) -> anyhow::Result<()> {
+    let f = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("cannot open state file {}: {e}", path.display()))?;
+    let state = backend.load_state(&mut std::io::BufReader::new(f))?;
+    store.create(id, state)
 }
 
 fn process_batch(

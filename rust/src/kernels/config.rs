@@ -258,7 +258,10 @@ impl Mechanism {
     pub fn is_linear(&self) -> bool {
         matches!(
             self,
-            Mechanism::Slay(_) | Mechanism::Favor { .. } | Mechanism::EluLinear | Mechanism::Cosformer
+            Mechanism::Slay(_)
+                | Mechanism::Favor { .. }
+                | Mechanism::EluLinear
+                | Mechanism::Cosformer
         )
     }
 
@@ -416,7 +419,9 @@ mod tests {
 
     #[test]
     fn mechanism_names_roundtrip() {
-        for name in ["standard", "yat", "yat_spherical", "slay", "favor", "elu_linear", "cosformer"] {
+        for name in
+            ["standard", "yat", "yat_spherical", "slay", "favor", "elu_linear", "cosformer"]
+        {
             let m = Mechanism::from_name(name).unwrap();
             assert_eq!(m.name(), name);
         }

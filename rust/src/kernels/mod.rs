@@ -25,6 +25,12 @@
 //!   [`AttentionBackend::decode`] are the allocating wrappers.
 //! * [`MultiHeadAttention`] — per-head backends over packed `L × d_model`
 //!   tensors with std-thread fan-out across heads.
+//! * [`AttentionBackend::save_state`] / [`AttentionBackend::load_state`] —
+//!   durable session persistence (ADR-004): a versioned, checksummed
+//!   little-endian container for [`AttnState`] — the linear `(S, z, len)`
+//!   triple or the quadratic rolling window `(K, V, aux, len, window)` —
+//!   that round-trips bit-identically, powering the coordinator's
+//!   spill tier and snapshot/restore.
 //!
 //! # Views (ADR-002)
 //!
@@ -51,11 +57,12 @@ pub mod features;
 pub mod slay;
 pub mod yat;
 
-use crate::math::linalg::{dot, Mat, MatView, MatViewMut, Scratch};
+use crate::math::linalg::{dot, sq_dist, Mat, MatView, MatViewMut, Scratch};
 use config::Mechanism;
 use engine::StreamingState;
 use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
 use slay::{QKFeatures, SlayFeatures, SymMap};
+use std::io::{Read, Write};
 
 /// Default rolling-window bound for quadratic sessions when the caller did
 /// not provide a horizon (see [`build`]).
@@ -182,6 +189,35 @@ pub trait AttentionBackend: Send + Sync {
     /// longer needs this hook: [`AttentionBackend::prefill_into`] maps
     /// internally through the worker's scratch arena.)
     fn map_qk(&self, q: MatView, k: MatView, pos0: usize) -> Option<(Mat, Mat)>;
+
+    /// Check that `state` belongs to *this* backend: the mechanism
+    /// identity tag stamped at `new_state` (FNV of the canonical registry
+    /// spec, so even same-shape mechanisms are separated) plus the shape
+    /// invariants (feature dim for linear mechanisms; key dim, window
+    /// capacity and aux-cache layout for quadratic ones). A serialized
+    /// state can never be resumed under the wrong operator —
+    /// [`AttentionBackend::save_state`] / [`AttentionBackend::load_state`]
+    /// call this on every boundary crossing.
+    fn validate_state(&self, state: &AttnState) -> anyhow::Result<()>;
+
+    /// Serialize `state` into the versioned session-state container
+    /// (ADR-004; see [`AttnState::encode`] for the byte layout). The
+    /// serving tiers built on this — the store's disk spill and the
+    /// coordinator snapshot — rely on the container round-tripping
+    /// bit-identically through [`AttentionBackend::load_state`].
+    fn save_state(&self, state: &AttnState, w: &mut dyn Write) -> anyhow::Result<()> {
+        self.validate_state(state)?;
+        state.encode(w)
+    }
+
+    /// Inverse of [`AttentionBackend::save_state`]: decode one state from
+    /// `r` (verifying magic/version/checksum) and validate it against this
+    /// backend before handing it back.
+    fn load_state(&self, r: &mut dyn Read) -> anyhow::Result<AttnState> {
+        let state = AttnState::decode(r)?;
+        self.validate_state(&state)?;
+        Ok(state)
+    }
 }
 
 /// Build an operator for head dimension `d`. `horizon` bounds the
@@ -207,6 +243,7 @@ pub fn build_with_window(
     horizon: usize,
     window: usize,
 ) -> anyhow::Result<Box<dyn AttentionBackend>> {
+    let tag = state_mech_tag(mech);
     Ok(match mech {
         Mechanism::Standard | Mechanism::Yat { .. } | Mechanism::YatSpherical { .. } => {
             let window = if window != 0 {
@@ -216,12 +253,12 @@ pub fn build_with_window(
             } else {
                 DEFAULT_QUADRATIC_WINDOW
             };
-            Box::new(QuadraticBackend { mech: mech.clone(), delta: 1e-6, d, window })
+            Box::new(QuadraticBackend { mech: mech.clone(), delta: 1e-6, d, window, tag })
         }
         Mechanism::Slay(cfg) => {
             let delta = cfg.delta;
             let feats = SlayFeatures::new(cfg.clone(), d)?;
-            Box::new(LinearBackend { mech: mech.clone(), maps: Box::new(feats), delta })
+            Box::new(LinearBackend { mech: mech.clone(), maps: Box::new(feats), delta, tag })
         }
         Mechanism::Favor { m_features, seed } => Box::new(LinearBackend {
             mech: mech.clone(),
@@ -230,11 +267,13 @@ pub fn build_with_window(
                 positive: true,
             }),
             delta: 1e-6,
+            tag,
         }),
         Mechanism::EluLinear => Box::new(LinearBackend {
             mech: mech.clone(),
             maps: Box::new(SymMap { inner: Box::new(EluPlusOne::new(d)), positive: true }),
             delta: 1e-6,
+            tag,
         }),
         Mechanism::Cosformer => Box::new(LinearBackend {
             mech: mech.clone(),
@@ -243,6 +282,7 @@ pub fn build_with_window(
                 positive: true,
             }),
             delta: 1e-6,
+            tag,
         }),
     })
 }
@@ -256,6 +296,11 @@ pub fn build_with_window(
 /// created the state.
 pub struct AttnState {
     inner: StateInner,
+    /// FNV-1a of the creating mechanism's canonical registry spec —
+    /// serialized with the state and re-checked at load, so a state can
+    /// never resume under a different operator even when the shapes
+    /// coincide (e.g. two windowed mechanisms with equal d_k/window).
+    mech_tag: u64,
 }
 
 enum StateInner {
@@ -312,6 +357,268 @@ impl AttnState {
             }
         }
     }
+
+    /// Append the codec payload (everything the checksum covers) to `p`,
+    /// little-endian.
+    fn put_payload(&self, p: &mut Vec<u8>) {
+        put_u64(p, self.mech_tag);
+        match &self.inner {
+            StateInner::Linear(s) => {
+                put_u32(p, STATE_KIND_LINEAR);
+                put_u32(p, s.m as u32);
+                put_u32(p, s.d_v as u32);
+                put_u64(p, s.len as u64);
+                put_f32s(p, &s.s);
+                put_f32s(p, &s.z);
+            }
+            StateInner::Window(w) => {
+                put_u32(p, STATE_KIND_WINDOW);
+                put_u32(p, w.d_k as u32);
+                put_u32(p, w.d_v as u32);
+                put_u32(p, w.cap as u32);
+                put_u32(p, w.aux_dim as u32);
+                put_u32(p, w.rows as u32);
+                put_u64(p, w.len as u64);
+                put_f32s(p, &w.k);
+                put_f32s(p, &w.v);
+                put_f32s(p, &w.aux);
+            }
+        }
+    }
+
+    /// Serialize into one exactly-sized buffer — the versioned
+    /// little-endian session-state container (ADR-004), in the spirit of
+    /// the `.slayckpt` parameter container:
+    ///
+    /// ```text
+    /// magic   b"SLAYSTAT"                              8 bytes
+    /// version u32                                      4
+    /// payload_len u64                                  8
+    /// payload: mech_tag u64 | kind u32 (0 linear | 1 window), then
+    ///   linear: m u32 | d_v u32 | len u64 | S f32×m·d_v | z f32×m
+    ///   window: d_k u32 | d_v u32 | cap u32 | aux_dim u32 | rows u32 |
+    ///           len u64 | K f32×rows·d_k | V f32×rows·d_v |
+    ///           aux f32×rows·aux_dim
+    /// checksum u64 (FNV-1a over payload)               8
+    /// ```
+    ///
+    /// The window payload stores keys in their *serving* form (pre-scaled
+    /// softmax keys, unit-normalized spherical-Yat keys) plus the per-slot
+    /// aux scalars cached at push time, so a decoded state resumes
+    /// bit-identically with no mechanism-specific rehydration. Mechanism
+    /// and shape validation live in [`AttentionBackend::save_state`] /
+    /// [`AttentionBackend::load_state`] — prefer those entries; the store's
+    /// spill tier uses the raw codec only on states it already owns.
+    pub fn encode_to_vec(&self) -> Vec<u8> {
+        let mut v = Vec::with_capacity(self.encoded_bytes());
+        v.extend_from_slice(STATE_MAGIC);
+        v.extend_from_slice(&STATE_VERSION.to_le_bytes());
+        let plen = (self.encoded_bytes() - 28) as u64;
+        v.extend_from_slice(&plen.to_le_bytes());
+        self.put_payload(&mut v);
+        let hash = fnv1a64(&v[20..]);
+        v.extend_from_slice(&hash.to_le_bytes());
+        debug_assert_eq!(v.len(), self.encoded_bytes());
+        v
+    }
+
+    /// [`AttnState::encode_to_vec`] written through an arbitrary writer.
+    pub fn encode(&self, w: &mut dyn Write) -> anyhow::Result<()> {
+        w.write_all(&self.encode_to_vec())?;
+        Ok(())
+    }
+
+    /// Bytes [`AttnState::encode`] writes for this state right now
+    /// (framing + payload) — what the spill/snapshot tiers account.
+    /// Computed arithmetically from the shape (no trial serialization);
+    /// pinned against the actual encoding by the codec round-trip tests.
+    pub fn encoded_bytes(&self) -> usize {
+        let payload = match &self.inner {
+            // mech_tag 8 + kind 4 + m 4 + d_v 4 + len 8, then S and z
+            StateInner::Linear(s) => 28 + 4 * (s.s.len() + s.z.len()),
+            // mech_tag 8 + kind 4 + d_k/d_v/cap/aux_dim/rows 4 each +
+            // len 8, then K/V/aux
+            StateInner::Window(w) => 40 + 4 * (w.k.len() + w.v.len() + w.aux.len()),
+        };
+        // magic 8 + version 4 + payload_len 8 + checksum 8
+        28 + payload
+    }
+
+    /// Verify that `bytes` is one complete, checksum-valid serialized
+    /// state *without* materializing it — the cheap integrity probe the
+    /// spill→snapshot promotion uses (self-written files can only be
+    /// corrupt, not adversarial; full shape validation happens at
+    /// [`AttentionBackend::load_state`]).
+    pub fn verify_encoded(bytes: &[u8]) -> anyhow::Result<()> {
+        anyhow::ensure!(bytes.len() >= 28, "truncated state container");
+        anyhow::ensure!(
+            &bytes[..8] == STATE_MAGIC,
+            "not a serialized attention state (bad magic)"
+        );
+        let version = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]);
+        anyhow::ensure!(version == STATE_VERSION, "unsupported state version {version}");
+        let plen = u64::from_le_bytes(bytes[12..20].try_into().unwrap()) as usize;
+        anyhow::ensure!(plen < (1 << 34), "implausible state payload ({plen} bytes)");
+        anyhow::ensure!(
+            bytes.len() == 28 + plen,
+            "state container length mismatch ({} bytes, framed for {})",
+            bytes.len(),
+            28 + plen
+        );
+        let payload = &bytes[20..20 + plen];
+        let want = u64::from_le_bytes(bytes[20 + plen..28 + plen].try_into().unwrap());
+        anyhow::ensure!(fnv1a64(payload) == want, "state checksum mismatch");
+        Ok(())
+    }
+
+    /// Decode one state written by [`AttnState::encode`], verifying magic,
+    /// version, payload checksum and internal shape invariants.
+    pub fn decode(r: &mut dyn Read) -> anyhow::Result<AttnState> {
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic)?;
+        anyhow::ensure!(&magic == STATE_MAGIC, "not a serialized attention state (bad magic)");
+        let mut b4 = [0u8; 4];
+        r.read_exact(&mut b4)?;
+        let version = u32::from_le_bytes(b4);
+        anyhow::ensure!(version == STATE_VERSION, "unsupported state version {version}");
+        let mut b8 = [0u8; 8];
+        r.read_exact(&mut b8)?;
+        let plen = u64::from_le_bytes(b8) as usize;
+        anyhow::ensure!(plen >= 4 && plen < (1 << 34), "implausible state payload ({plen} bytes)");
+        let mut payload = vec![0u8; plen];
+        r.read_exact(&mut payload)?;
+        r.read_exact(&mut b8)?;
+        let want = u64::from_le_bytes(b8);
+        let got = fnv1a64(&payload);
+        anyhow::ensure!(
+            got == want,
+            "state checksum mismatch (corrupt spill/snapshot file): {got:#018x} != {want:#018x}"
+        );
+        let mut p = PayloadReader { buf: &payload, pos: 0 };
+        let mech_tag = p.u64()?;
+        let kind = p.u32()?;
+        let inner = match kind {
+            STATE_KIND_LINEAR => {
+                let m = p.u32()? as usize;
+                let d_v = p.u32()? as usize;
+                let len = p.u64()? as usize;
+                anyhow::ensure!(
+                    (1..(1 << 24)).contains(&m) && (1..(1 << 24)).contains(&d_v),
+                    "implausible linear state shape m={m} d_v={d_v}"
+                );
+                let s = p.f32s(m * d_v)?;
+                let z = p.f32s(m)?;
+                StateInner::Linear(StreamingState { m, d_v, s, z, len })
+            }
+            STATE_KIND_WINDOW => {
+                let d_k = p.u32()? as usize;
+                let d_v = p.u32()? as usize;
+                let cap = p.u32()? as usize;
+                let aux_dim = p.u32()? as usize;
+                let rows = p.u32()? as usize;
+                let len = p.u64()? as usize;
+                anyhow::ensure!(
+                    (1..(1 << 24)).contains(&d_k) && (1..(1 << 24)).contains(&d_v),
+                    "implausible window shape d_k={d_k} d_v={d_v}"
+                );
+                anyhow::ensure!(aux_dim <= 8, "implausible aux dim {aux_dim}");
+                anyhow::ensure!(
+                    cap >= 1 && rows == len.min(cap),
+                    "implausible window occupancy (rows={rows}, cap={cap}, len={len})"
+                );
+                let k = p.f32s(rows * d_k)?;
+                let v = p.f32s(rows * d_v)?;
+                let aux = p.f32s(rows * aux_dim)?;
+                StateInner::Window(KvWindow { d_k, d_v, cap, aux_dim, k, v, aux, rows, len })
+            }
+            other => anyhow::bail!("unknown state kind {other}"),
+        };
+        anyhow::ensure!(p.done(), "trailing bytes in state payload");
+        Ok(AttnState { inner, mech_tag })
+    }
+}
+
+// ---- session-state codec plumbing (ADR-004) -------------------------------
+
+/// Magic prefix of a serialized [`AttnState`].
+pub const STATE_MAGIC: &[u8; 8] = b"SLAYSTAT";
+/// Container version of the session-state codec.
+pub const STATE_VERSION: u32 = 1;
+
+const STATE_KIND_LINEAR: u32 = 0;
+const STATE_KIND_WINDOW: u32 = 1;
+
+/// Mechanism identity tag carried by serialized states: FNV-1a of the
+/// canonical registry spec ([`Mechanism`]'s `Display`), so any parameter
+/// difference — feature seeds included — yields a distinct tag.
+fn state_mech_tag(mech: &Mechanism) -> u64 {
+    fnv1a64(mech.to_string().as_bytes())
+}
+
+/// FNV-1a 64-bit over `bytes` — the codec's dependency-free payload
+/// checksum (guards spill/snapshot files against truncation and bit rot).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn put_u32(buf: &mut Vec<u8>, x: u32) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, x: u64) {
+    buf.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.reserve(xs.len() * 4);
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sequential little-endian reader over a checksum-verified payload slice.
+struct PayloadReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> PayloadReader<'a> {
+    fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            n <= self.buf.len() - self.pos,
+            "truncated state payload ({} bytes, need {} more at {})",
+            self.buf.len(),
+            n,
+            self.pos
+        );
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn f32s(&mut self, n: usize) -> anyhow::Result<Vec<f32>> {
+        let b = self.take(n.checked_mul(4).ok_or_else(|| anyhow::anyhow!("overflow"))?)?;
+        Ok(b.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect())
+    }
+
+    fn done(&self) -> bool {
+        self.pos == self.buf.len()
+    }
 }
 
 /// Bounded rolling KV window — the quadratic-session analog of the
@@ -323,8 +630,13 @@ struct KvWindow {
     d_v: usize,
     /// Maximum retained rows.
     cap: usize,
+    /// Per-slot derived scalars cached at push time (mechanism-defined:
+    /// ‖k‖² for the raw Yat baseline; 0 for mechanisms that fold their
+    /// per-key work into the stored key row itself).
+    aux_dim: usize,
     k: Vec<f32>,
     v: Vec<f32>,
+    aux: Vec<f32>,
     /// Rows currently stored (≤ cap).
     rows: usize,
     /// Tokens absorbed over the session lifetime.
@@ -332,42 +644,69 @@ struct KvWindow {
 }
 
 impl KvWindow {
-    fn new(d_k: usize, d_v: usize, cap: usize) -> Self {
-        KvWindow { d_k, d_v, cap: cap.max(1), k: Vec::new(), v: Vec::new(), rows: 0, len: 0 }
+    fn new(d_k: usize, d_v: usize, cap: usize, aux_dim: usize) -> Self {
+        KvWindow {
+            d_k,
+            d_v,
+            cap: cap.max(1),
+            aux_dim,
+            k: Vec::new(),
+            v: Vec::new(),
+            aux: Vec::new(),
+            rows: 0,
+            len: 0,
+        }
     }
 
     /// Append a token; once full, cyclically overwrite the oldest slot
     /// (O(d) per token — attention sums over the window, so slot order is
-    /// irrelevant and no front-shift is needed).
-    fn push(&mut self, k_row: &[f32], v_row: &[f32]) {
+    /// irrelevant and no front-shift is needed). Returns the slot written
+    /// so the caller can finalize the stored key and aux scalars in place.
+    fn push(&mut self, k_row: &[f32], v_row: &[f32]) -> usize {
         debug_assert_eq!(k_row.len(), self.d_k);
         debug_assert_eq!(v_row.len(), self.d_v);
-        if self.rows < self.cap {
+        let slot = if self.rows < self.cap {
             self.k.extend_from_slice(k_row);
             self.v.extend_from_slice(v_row);
+            self.aux.resize(self.aux.len() + self.aux_dim, 0.0);
             self.rows += 1;
+            self.rows - 1
         } else {
             let slot = self.len % self.cap;
             self.k[slot * self.d_k..(slot + 1) * self.d_k].copy_from_slice(k_row);
             self.v[slot * self.d_v..(slot + 1) * self.d_v].copy_from_slice(v_row);
-        }
+            slot
+        };
         self.len += 1;
+        slot
     }
 
     fn key(&self, j: usize) -> &[f32] {
         &self.k[j * self.d_k..(j + 1) * self.d_k]
     }
 
+    fn key_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.k[j * self.d_k..(j + 1) * self.d_k]
+    }
+
     fn val(&self, j: usize) -> &[f32] {
         &self.v[j * self.d_v..(j + 1) * self.d_v]
     }
 
+    fn aux(&self, j: usize) -> &[f32] {
+        &self.aux[j * self.aux_dim..(j + 1) * self.aux_dim]
+    }
+
+    fn aux_mut(&mut self, j: usize) -> &mut [f32] {
+        &mut self.aux[j * self.aux_dim..(j + 1) * self.aux_dim]
+    }
+
     fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+        (self.k.len() + self.v.len() + self.aux.len()) * std::mem::size_of::<f32>()
     }
 
     fn capacity_bytes(&self) -> usize {
-        self.cap * (self.d_k + self.d_v) * std::mem::size_of::<f32>()
+        self.cap * (self.d_k + self.d_v + self.aux_dim) * std::mem::size_of::<f32>()
     }
 }
 
@@ -376,6 +715,9 @@ struct LinearBackend {
     mech: Mechanism,
     maps: Box<dyn QKFeatures>,
     delta: f32,
+    /// Mechanism identity tag stamped into every state this backend
+    /// creates (see [`state_mech_tag`]).
+    tag: u64,
 }
 
 impl LinearBackend {
@@ -455,7 +797,10 @@ impl AttentionBackend for LinearBackend {
     }
 
     fn new_state(&self, d_v: usize) -> AttnState {
-        AttnState { inner: StateInner::Linear(StreamingState::new(self.maps.dim(), d_v)) }
+        AttnState {
+            inner: StateInner::Linear(StreamingState::new(self.maps.dim(), d_v)),
+            mech_tag: self.tag,
+        }
     }
 
     fn prefill_into(
@@ -563,6 +908,34 @@ impl AttentionBackend for LinearBackend {
     fn map_qk(&self, q: MatView, k: MatView, pos0: usize) -> Option<(Mat, Mat)> {
         Some((self.maps.map_q(q, pos0), self.maps.map_k(k, pos0)))
     }
+
+    fn validate_state(&self, state: &AttnState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.mech_tag == self.tag,
+            "state was produced by a different mechanism than '{}' (identity tag mismatch)",
+            self.mech
+        );
+        match &state.inner {
+            StateInner::Linear(s) => {
+                anyhow::ensure!(
+                    s.m == self.maps.dim(),
+                    "state feature dim {} != backend feature dim {}",
+                    s.m,
+                    self.maps.dim()
+                );
+                anyhow::ensure!(
+                    s.s.len() == s.m * s.d_v && s.z.len() == s.m,
+                    "linear state buffers inconsistent with shape (m={}, d_v={})",
+                    s.m,
+                    s.d_v
+                );
+                Ok(())
+            }
+            StateInner::Window(_) => {
+                anyhow::bail!("state mismatch: windowed state offered to a linear backend")
+            }
+        }
+    }
 }
 
 /// Quadratic mechanisms: exact L×L scores one-shot, rolling KV window in
@@ -572,35 +945,93 @@ struct QuadraticBackend {
     delta: f32,
     d: usize,
     window: usize,
+    /// Mechanism identity tag stamped into every state this backend
+    /// creates (see [`state_mech_tag`]).
+    tag: u64,
 }
 
 impl QuadraticBackend {
+    /// Width of the per-slot aux cache ([`KvWindow`]): the raw Yat
+    /// baseline keeps ‖k‖² so decode can expand
+    /// `‖q−k‖² = ‖q‖² + ‖k‖² − 2qᵀk` without re-touching the key row;
+    /// the other mechanisms fold their per-key work into the stored key.
+    fn aux_dim(&self) -> usize {
+        match &self.mech {
+            Mechanism::Yat { .. } => 1,
+            _ => 0,
+        }
+    }
+
+    /// Finalize a just-pushed slot: do the key's reusable per-row work
+    /// once at absorption — softmax pre-scales by 1/√d, spherical Yat
+    /// normalizes onto the unit sphere, raw Yat caches ‖k‖² — so per-token
+    /// scoring costs exactly one dot product per window row (the resolved
+    /// ROADMAP decode-recompute item; ADR-004).
+    fn prep_slot(&self, win: &mut KvWindow, slot: usize) {
+        match &self.mech {
+            Mechanism::Standard => {
+                let scale = 1.0 / (self.d as f32).sqrt();
+                for x in win.key_mut(slot) {
+                    *x *= scale;
+                }
+            }
+            Mechanism::Yat { .. } => {
+                let kj = win.key(slot);
+                let kk = dot(kj, kj);
+                win.aux_mut(slot)[0] = kk;
+            }
+            Mechanism::YatSpherical { .. } => {
+                let kj = win.key(slot);
+                let inv = 1.0 / dot(kj, kj).sqrt().max(1e-12);
+                for x in win.key_mut(slot) {
+                    *x *= inv;
+                }
+            }
+            _ => unreachable!("linear mechanism in quadratic backend"),
+        }
+    }
+
     /// Scores of one raw query row against every key currently in the
     /// window, written into a reusable buffer — the streaming counterpart
-    /// of [`AttentionBackend::score_matrix`]'s rows. Softmax scores are
+    /// of [`AttentionBackend::score_matrix`]'s rows, reading the per-slot
+    /// work cached by [`QuadraticBackend::prep_slot`]. Softmax scores are
     /// stabilized by the window-max, which cancels in the normalization up
     /// to the δ floor.
     fn window_scores_into(&self, q: &[f32], win: &KvWindow, scores: &mut Vec<f32>) {
         scores.clear();
         match &self.mech {
             Mechanism::Standard => {
-                let scale = 1.0 / (self.d as f32).sqrt();
-                scores.extend((0..win.rows).map(|j| dot(q, win.key(j)) * scale));
+                // stored keys are pre-scaled by 1/√d, so the dot IS the logit
+                scores.extend((0..win.rows).map(|j| dot(q, win.key(j))));
                 let mx = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
                 for x in scores.iter_mut() {
                     *x = (*x - mx).exp();
                 }
             }
             Mechanism::Yat { eps } => {
-                scores.extend((0..win.rows).map(|j| yat::e_product(q, win.key(j), *eps as f32)));
-            }
-            Mechanism::YatSpherical { eps } => {
-                let nq = dot(q, q).sqrt().max(1e-12);
+                let eps = *eps as f32;
+                let qq = dot(q, q);
                 scores.extend((0..win.rows).map(|j| {
                     let kj = win.key(j);
-                    let nk = dot(kj, kj).sqrt().max(1e-12);
-                    yat::e_sph(dot(q, kj) / (nq * nk), *eps as f32)
+                    let kk = win.aux(j)[0];
+                    let a = dot(q, kj);
+                    let mut d2 = qq + kk - 2.0 * a;
+                    if d2 < 1e-3 * (qq + kk) {
+                        // Cancellation regime (q ≈ k): the norm expansion
+                        // loses the distance to rounding right where a
+                        // small ε amplifies it — recompute directly (the
+                        // key row is already hot from the dot).
+                        d2 = sq_dist(q, kj);
+                    }
+                    a * a / (d2 + eps)
                 }));
+            }
+            Mechanism::YatSpherical { eps } => {
+                // stored keys are unit-normalized; normalize q's side once
+                let inv_nq = 1.0 / dot(q, q).sqrt().max(1e-12);
+                scores.extend(
+                    (0..win.rows).map(|j| yat::e_sph(dot(q, win.key(j)) * inv_nq, *eps as f32)),
+                );
             }
             _ => unreachable!("linear mechanism in quadratic backend"),
         }
@@ -617,7 +1048,8 @@ impl QuadraticBackend {
         v: &[f32],
         out: &mut [f32],
     ) {
-        win.push(k, v);
+        let slot = win.push(k, v);
+        self.prep_slot(win, slot);
         self.window_scores_into(q, win, scores);
         out.fill(0.0);
         let mut den = 0.0f32;
@@ -648,7 +1080,10 @@ impl AttentionBackend for QuadraticBackend {
     }
 
     fn new_state(&self, d_v: usize) -> AttnState {
-        AttnState { inner: StateInner::Window(KvWindow::new(self.d, d_v, self.window)) }
+        AttnState {
+            inner: StateInner::Window(KvWindow::new(self.d, d_v, self.window, self.aux_dim())),
+            mech_tag: self.tag,
+        }
     }
 
     fn prefill_into(
@@ -764,6 +1199,46 @@ impl AttentionBackend for QuadraticBackend {
 
     fn map_qk(&self, _q: MatView, _k: MatView, _pos0: usize) -> Option<(Mat, Mat)> {
         None
+    }
+
+    fn validate_state(&self, state: &AttnState) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            state.mech_tag == self.tag,
+            "state was produced by a different mechanism than '{}' (identity tag mismatch)",
+            self.mech
+        );
+        match &state.inner {
+            StateInner::Window(w) => {
+                anyhow::ensure!(
+                    w.d_k == self.d,
+                    "state key dim {} != backend head dim {}",
+                    w.d_k,
+                    self.d
+                );
+                anyhow::ensure!(
+                    w.cap == self.window.max(1),
+                    "state window capacity {} != backend window {}",
+                    w.cap,
+                    self.window
+                );
+                anyhow::ensure!(
+                    w.aux_dim == self.aux_dim(),
+                    "state aux layout {} != mechanism's {} (different quadratic family?)",
+                    w.aux_dim,
+                    self.aux_dim()
+                );
+                anyhow::ensure!(
+                    w.k.len() == w.rows * w.d_k
+                        && w.v.len() == w.rows * w.d_v
+                        && w.aux.len() == w.rows * w.aux_dim,
+                    "window state buffers inconsistent with shape"
+                );
+                Ok(())
+            }
+            StateInner::Linear(_) => {
+                anyhow::bail!("state mismatch: linear state offered to a quadratic backend")
+            }
+        }
     }
 }
 
@@ -1269,5 +1744,132 @@ mod tests {
         assert!(lin.prefill(&mut wrong, q.view(), k.view(), v.view()).is_err());
         let mut wrong2 = lin.new_state(8);
         assert!(quad.prefill(&mut wrong2, q.view(), k.view(), v.view()).is_err());
+    }
+
+    /// Prefill `split` of `l` tokens into two states, serialize one,
+    /// reload it, then decode the remaining tokens on both — every output
+    /// must be bit-identical (the ADR-004 round-trip contract).
+    fn assert_state_roundtrip(op: &dyn AttentionBackend, l: usize, split: usize, seed: u64) {
+        let name = op.mechanism().name();
+        let (q, k, v) = qkv(l, 8, seed);
+        let mut live = op.new_state(8);
+        let mut source = op.new_state(8);
+        let y_live = op
+            .prefill(
+                &mut live,
+                q.view().row_block(0, split),
+                k.view().row_block(0, split),
+                v.view().row_block(0, split),
+            )
+            .unwrap();
+        let y_source = op
+            .prefill(
+                &mut source,
+                q.view().row_block(0, split),
+                k.view().row_block(0, split),
+                v.view().row_block(0, split),
+            )
+            .unwrap();
+        assert_eq!(y_live.data, y_source.data, "{name}: prefill nondeterministic");
+        let mut bytes = Vec::new();
+        op.save_state(&source, &mut bytes).unwrap();
+        assert_eq!(bytes.len(), source.encoded_bytes(), "{name}: encoded_bytes mismatch");
+        let mut r: &[u8] = &bytes;
+        let mut restored = op.load_state(&mut r).unwrap();
+        assert_eq!(restored.len(), live.len(), "{name}: len lost in round-trip");
+        assert_eq!(restored.bytes(), live.bytes(), "{name}: bytes lost in round-trip");
+        let mut out_a = vec![0.0f32; 8];
+        let mut out_b = vec![0.0f32; 8];
+        for i in split..l {
+            op.decode(&mut live, q.row(i), k.row(i), v.row(i), &mut out_a).unwrap();
+            op.decode(&mut restored, q.row(i), k.row(i), v.row(i), &mut out_b).unwrap();
+            assert_eq!(out_a, out_b, "{name}: decode token {i} diverged after reload");
+        }
+    }
+
+    #[test]
+    fn state_codec_round_trips_bit_identically() {
+        for mech in all_mechanisms() {
+            let op = build(&mech, 8, 64).unwrap();
+            assert_state_roundtrip(op.as_ref(), 12, 7, 101);
+        }
+        // quadratic windows that wrapped (rows == cap < len) round-trip too
+        for mech in [
+            Mechanism::Standard,
+            Mechanism::Yat { eps: 1e-3 },
+            Mechanism::YatSpherical { eps: 1e-3 },
+        ] {
+            let op = build_with_window(&mech, 8, 64, 5).unwrap();
+            assert_state_roundtrip(op.as_ref(), 14, 9, 102);
+        }
+        // empty states round-trip as well
+        let op = build(&Mechanism::EluLinear, 8, 0).unwrap();
+        let fresh = op.new_state(8);
+        let mut bytes = Vec::new();
+        op.save_state(&fresh, &mut bytes).unwrap();
+        let mut r: &[u8] = &bytes;
+        assert_eq!(op.load_state(&mut r).unwrap().len(), 0);
+    }
+
+    #[test]
+    fn state_codec_rejects_corruption_and_wrong_backend() {
+        let lin = build(&Mechanism::EluLinear, 8, 0).unwrap();
+        let quad = build(&Mechanism::Standard, 8, 16).unwrap();
+        let (q, k, v) = qkv(4, 8, 103);
+        let mut st = lin.new_state(8);
+        lin.prefill(&mut st, q.view(), k.view(), v.view()).unwrap();
+        let mut bytes = Vec::new();
+        lin.save_state(&st, &mut bytes).unwrap();
+        // a flipped payload byte trips the checksum
+        let mut bad = bytes.clone();
+        let mid = 20 + (bad.len() - 28) / 2;
+        bad[mid] ^= 0x40;
+        let mut r: &[u8] = &bad;
+        assert!(AttnState::decode(&mut r).is_err());
+        // truncation is an error, not a partial state
+        let mut r: &[u8] = &bytes[..bytes.len() - 3];
+        assert!(AttnState::decode(&mut r).is_err());
+        // wrong mechanism family is refused at load
+        let mut r: &[u8] = &bytes;
+        assert!(quad.load_state(&mut r).is_err());
+        // a different linear mechanism is refused too (identity tag)
+        let other = build(&Mechanism::Favor { m_features: 32, seed: 1 }, 8, 0).unwrap();
+        let mut r: &[u8] = &bytes;
+        assert!(other.load_state(&mut r).is_err());
+        // even a SAME-SHAPE different mechanism is separated by the tag:
+        // Standard and YatSpherical windows share (d_k, cap, aux_dim) but
+        // store keys in different serving forms
+        let sph = build(&Mechanism::YatSpherical { eps: 1e-3 }, 8, 16).unwrap();
+        let mut wq = quad.new_state(8);
+        quad.prefill(&mut wq, q.view(), k.view(), v.view()).unwrap();
+        let mut qbytes = Vec::new();
+        quad.save_state(&wq, &mut qbytes).unwrap();
+        let mut r: &[u8] = &qbytes;
+        assert!(sph.load_state(&mut r).is_err(), "tag must separate same-shape mechanisms");
+        // garbage magic
+        let mut r: &[u8] = b"NOTASTATE-------";
+        assert!(AttnState::decode(&mut r).is_err());
+        // saving a foreign state is refused before any bytes are written
+        let mut sink = Vec::new();
+        assert!(quad.save_state(&st, &mut sink).is_err());
+        assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn yat_window_cached_scores_match_direct_e_product() {
+        // The rolling window caches ‖k‖² per slot and expands the distance
+        // per token (‖q−k‖² = ‖q‖² + ‖k‖² − 2qᵀk); it must agree with the
+        // direct sq_dist form the one-shot path uses.
+        let op = build(&Mechanism::Yat { eps: 1e-3 }, 8, 16).unwrap();
+        let (q, k, v) = qkv(10, 8, 104);
+        let want = op.forward(q.view(), k.view(), v.view(), true, 0);
+        let mut st = op.new_state(8);
+        let mut out = vec![0.0f32; 8];
+        for i in 0..10 {
+            op.decode(&mut st, q.row(i), k.row(i), v.row(i), &mut out).unwrap();
+        }
+        for (c, (a, b)) in out.iter().zip(want.row(9)).enumerate() {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "col {c}: {a} vs {b}");
+        }
     }
 }

@@ -33,7 +33,12 @@ pub struct Trainer {
 
 impl Trainer {
     /// Create a session: run the matching init artifact, zero the moments.
-    pub fn new(reg: &Registry, step_artifact: &str, init_artifact: &str, seed: u32) -> anyhow::Result<Trainer> {
+    pub fn new(
+        reg: &Registry,
+        step_artifact: &str,
+        init_artifact: &str,
+        seed: u32,
+    ) -> anyhow::Result<Trainer> {
         let step_exe = reg.get(step_artifact)?;
         let init_exe = reg.get(init_artifact)?;
         let params = init_exe.run(&[TensorData::U32(vec![seed])])?;

@@ -24,7 +24,7 @@ fn small_cfg(workers: usize) -> CoordinatorConfig {
         max_batch: 8,
         max_wait: Duration::from_micros(500),
         queue_cap: 64,
-        store: StoreConfig { max_sequences: 128, memory_budget: 64 << 20 },
+        store: StoreConfig { max_sequences: 128, memory_budget: 64 << 20, spill_dir: None },
         ..CoordinatorConfig::default()
     }
 }
@@ -326,6 +326,193 @@ fn cosformer_served_chunks_match_one_shot_forward() {
     coord.shutdown().unwrap();
 }
 
+/// Two workers=1 coordinators over the same mechanism and chunk stream:
+/// one with a spill tier under `max_sequences = 1` (so every other attend
+/// pages a state out and faults the other back in), one with ample room.
+/// Every served output must match bit-for-bit — the ADR-004 contract that
+/// spill → fault-in is invisible to the serving semantics.
+fn spill_roundtrip_case(mechanism: Mechanism) {
+    let dir = std::env::temp_dir().join(format!("slay_it_spill_{}", mechanism.name()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let mk_cfg = |spill: bool| {
+        let mut cfg = small_cfg(1);
+        cfg.mechanism = mechanism.clone();
+        cfg.horizon = 64;
+        cfg.window = 32;
+        if spill {
+            cfg.store = StoreConfig {
+                max_sequences: 1,
+                memory_budget: 64 << 20,
+                spill_dir: Some(dir.clone()),
+            };
+        }
+        cfg
+    };
+    let spilling = Coordinator::start(mk_cfg(true)).unwrap();
+    let roomy = Coordinator::start(mk_cfg(false)).unwrap();
+    let s_a = spilling.create_sequence().unwrap();
+    let s_b = spilling.create_sequence().unwrap();
+    assert_eq!(s_a, roomy.create_sequence().unwrap());
+    assert_eq!(s_b, roomy.create_sequence().unwrap());
+    let mut rng = Rng::new(2024);
+    for round in 0..4 {
+        for &seq in &[s_a, s_b] {
+            let n = if round == 0 { 6 } else { 1 };
+            let c = chunk(seq, n, &mut rng);
+            let got = spilling
+                .attend(AttendChunk { seq, q: c.q.clone(), k: c.k.clone(), v: c.v.clone() })
+                .unwrap();
+            let want = roomy.attend(c).unwrap();
+            assert_eq!(
+                got.y.data, want.y.data,
+                "{}: round {round} seq {seq:?} diverged after spill/fault-in",
+                mechanism.name()
+            );
+            assert_eq!(got.seq_len, want.seq_len);
+        }
+    }
+    let m = spilling.metrics();
+    assert!(m.spilled >= 1, "the one-resident cap should have forced spills");
+    assert!(m.restored_from_spill >= 1, "alternating sequences should have faulted back in");
+    assert!(m.bytes_spilled > 0);
+    spilling.shutdown().unwrap();
+    roomy.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spilled_linear_sessions_resume_bit_identically() {
+    spill_roundtrip_case(Mechanism::Slay(SlayConfig::default()));
+}
+
+#[test]
+fn spilled_quadratic_sessions_resume_bit_identically() {
+    spill_roundtrip_case(Mechanism::Standard);
+}
+
+#[test]
+fn snapshot_restores_across_worker_counts_bit_identically() {
+    // Snapshot on 3 workers, restore on 1 and on 5: every sequence comes
+    // back with its exact seq_len and produces bit-identical next-chunk
+    // outputs (hash-resharding is the live-migration primitive, ADR-004).
+    let dir = std::env::temp_dir().join("slay_it_snapshot_reshard");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = small_cfg(3);
+    let coord = Coordinator::start(cfg.clone()).unwrap();
+    let mut rng = Rng::new(4096);
+    let seqs: Vec<SeqId> = (0..6).map(|_| coord.create_sequence().unwrap()).collect();
+    let mut lens = Vec::new();
+    for (i, &seq) in seqs.iter().enumerate() {
+        let n = 2 + i; // distinct lengths so a shuffled restore would show
+        coord.attend(chunk(seq, n, &mut rng)).unwrap();
+        lens.push(n);
+    }
+    let report = coord.snapshot(&dir).unwrap();
+    assert_eq!(report.sequences, seqs.len());
+    assert!(report.bytes > 0);
+    // the post-snapshot chunk, prepared once, applied to the original and
+    // to every restore — all three must agree exactly
+    let next: Vec<AttendChunk> = seqs.iter().map(|&s| chunk(s, 1, &mut rng)).collect();
+    let mut want = Vec::new();
+    for c in &next {
+        want.push(
+            coord
+                .attend(AttendChunk { seq: c.seq, q: c.q.clone(), k: c.k.clone(), v: c.v.clone() })
+                .unwrap(),
+        );
+    }
+    coord.shutdown().unwrap();
+    for workers in [1usize, 5] {
+        let restored =
+            Coordinator::restore(CoordinatorConfig { workers, ..cfg.clone() }, &dir).unwrap();
+        for i in 0..seqs.len() {
+            let seq = seqs[i];
+            assert_eq!(
+                restored.sequence_len(seq).unwrap(),
+                Some(lens[i]),
+                "workers={workers}: seq_len lost"
+            );
+            let c = &next[i];
+            let got = restored
+                .attend(AttendChunk { seq, q: c.q.clone(), k: c.k.clone(), v: c.v.clone() })
+                .unwrap();
+            assert_eq!(
+                got.y.data, want[i].y.data,
+                "workers={workers}: next-chunk output diverged after restore"
+            );
+            assert_eq!(got.seq_len, want[i].seq_len);
+        }
+        // fresh ids continue past the snapshot's allocator position
+        let fresh = restored.create_sequence().unwrap();
+        assert!(fresh.0 > seqs.iter().map(|s| s.0).max().unwrap());
+        restored.shutdown().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn restore_rejects_incompatible_configs() {
+    let dir = std::env::temp_dir().join("slay_it_restore_mismatch");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = small_cfg(1);
+    let coord = Coordinator::start(cfg.clone()).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let mut rng = Rng::new(8);
+    coord.attend(chunk(seq, 2, &mut rng)).unwrap();
+    coord.snapshot(&dir).unwrap();
+    coord.shutdown().unwrap();
+    // wrong geometry and wrong mechanism both fail fast
+    assert!(Coordinator::restore(CoordinatorConfig { d_head: 8, ..cfg.clone() }, &dir).is_err());
+    assert!(Coordinator::restore(
+        CoordinatorConfig { mechanism: Mechanism::EluLinear, ..cfg.clone() },
+        &dir
+    )
+    .is_err());
+    // a matching config restores
+    let ok = Coordinator::restore(cfg, &dir).unwrap();
+    assert_eq!(ok.sequence_len(seq).unwrap(), Some(2));
+    ok.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spill_tier_serves_more_quadratic_sequences_than_the_budget_admits() {
+    // A budget that fits 4 fully-charged KV windows used to hard-cap the
+    // shard at 4 quadratic sessions (admission failure past that). With
+    // the spill tier, 16 sessions keep *serving*: admissions past the
+    // budget page idle states out and round-robin traffic faults them
+    // back in.
+    let dir = std::env::temp_dir().join("slay_it_spill_capacity");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = small_cfg(1);
+    cfg.mechanism = Mechanism::Standard;
+    cfg.horizon = 64;
+    cfg.window = 64;
+    let per_seq = 64 * (16 + 8) * 4; // window * (d_head + d_v) * sizeof(f32)
+    cfg.store = StoreConfig {
+        max_sequences: 256,
+        memory_budget: 4 * per_seq,
+        spill_dir: Some(dir.clone()),
+    };
+    let coord = Coordinator::start(cfg).unwrap();
+    let mut rng = Rng::new(2);
+    let seqs: Vec<SeqId> = (0..16).map(|_| coord.create_sequence().unwrap()).collect();
+    for round in 0..3 {
+        for &seq in &seqs {
+            let res = coord.attend(chunk(seq, if round == 0 { 4 } else { 1 }, &mut rng)).unwrap();
+            assert!(res.y.data.iter().all(|x| x.is_finite()));
+        }
+    }
+    for (i, &seq) in seqs.iter().enumerate() {
+        assert_eq!(coord.sequence_len(seq).unwrap(), Some(6), "seq {i} lost tokens");
+    }
+    let m = coord.metrics();
+    assert!(m.spilled > 0, "budget pressure should have spilled");
+    assert!(m.restored_from_spill > 0, "round-robin traffic should have faulted states back");
+    coord.shutdown().unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn window_knob_admits_many_quadratic_sequences() {
     // The `window` knob decouples the quadratic KV-window (and its
@@ -338,7 +525,7 @@ fn window_knob_admits_many_quadratic_sequences() {
     cfg.mechanism = Mechanism::Standard;
     cfg.horizon = 131_072;
     cfg.window = 64;
-    cfg.store = StoreConfig { max_sequences: 128, memory_budget: 1 << 20 };
+    cfg.store = StoreConfig { max_sequences: 128, memory_budget: 1 << 20, spill_dir: None };
     let coord = Coordinator::start(cfg).unwrap();
     let mut rng = Rng::new(9);
     for _ in 0..32 {
