@@ -1,0 +1,157 @@
+//! Fused vs per-item cross-session decode throughput (ADR-005) — emitted
+//! machine-readably as `results/BENCH_decode.json`.
+//!
+//! The serving question Eq. 11 poses: B concurrent sessions each have one
+//! queued decode token — does the worker run B separate 1×d matvec
+//! pipelines (the pre-ADR-005 path, here the `decode_with` loop) or ONE
+//! fused `decode_batch_with` block (one B×d·d×m feature GEMM + B cheap
+//! state ops for linear mechanisms, thread-fanned window dots for the
+//! quadratic baselines)? Measured at B ∈ {1, 8, 32, 128} for SLAY
+//! (linear) and Standard softmax (quadratic), sessions staggered across
+//! positions the way real traffic sits.
+//!
+//! Env knobs:
+//! * `SLAY_BENCH_SMOKE=1` — small time budget; ci.sh uses this to
+//!   exercise the path and assert the JSON lands on every run.
+
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::kernels::{build_with_window, AttentionBackend, AttnState};
+use slay::math::linalg::{Mat, MatViewMut, Scratch};
+use slay::math::rng::Rng;
+use slay::util::benchkit::{fmt_ms, time_budget, write_json, Table};
+use slay::util::json::Json;
+use std::collections::BTreeMap;
+use std::time::Duration;
+
+const D: usize = 32;
+const WINDOW: usize = 256;
+
+/// Fresh per-session states, staggered across positions (session i has
+/// absorbed `64 + (i % 7)` tokens) the way real multi-tenant traffic
+/// sits — per-row positions for the feature maps, partially filled
+/// windows for the quadratic baselines.
+fn make_states(op: &dyn AttentionBackend, b: usize, rng: &mut Rng) -> Vec<AttnState> {
+    (0..b)
+        .map(|i| {
+            let mut st = op.new_state(D);
+            let len = 64 + (i % 7);
+            let q = Mat::randn(len, D, rng);
+            let k = Mat::randn(len, D, rng);
+            let v = Mat::randn(len, D, rng);
+            op.prefill(&mut st, q.view(), k.view(), v.view()).unwrap();
+            st
+        })
+        .collect()
+}
+
+fn decode_entry(mechanism: &str, b: usize, mode: &str, mean_ms: f64, toks_per_s: f64) -> Json {
+    Json::obj(vec![
+        ("mechanism", Json::Str(mechanism.to_string())),
+        ("batch", Json::Num(b as f64)),
+        ("mode", Json::Str(mode.to_string())),
+        ("mean_ms", Json::Num(mean_ms)),
+        ("tokens_per_s", Json::Num(toks_per_s)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::var("SLAY_BENCH_SMOKE").is_ok();
+    let budget = if smoke {
+        Duration::from_millis(80)
+    } else {
+        Duration::from_millis(800)
+    };
+    let batches: &[usize] = &[1, 8, 32, 128];
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut speedups: BTreeMap<String, Json> = BTreeMap::new();
+    let mut table = Table::new(
+        "Cross-session decode: fused decode_batch_with vs per-item decode_with (ADR-005)",
+        &["Mechanism", "B", "per-item ms", "fused ms", "speedup", "fused tok/s"],
+    );
+
+    for (name, mech) in [
+        ("slay", Mechanism::Slay(SlayConfig::default())),
+        ("standard", Mechanism::Standard),
+    ] {
+        let op = build_with_window(&mech, D, 4096, WINDOW).unwrap();
+        for &b in batches {
+            let mut rng = Rng::new(2026 + b as u64);
+            let q = Mat::randn(b, D, &mut rng);
+            let k = Mat::randn(b, D, &mut rng);
+            let v = Mat::randn(b, D, &mut rng);
+            let mut scratch = Scratch::new();
+
+            // per-item: the pre-fusion worker loop — one decode_with per
+            // session, B separate feature matvecs / window passes
+            let mut states_seq = make_states(op.as_ref(), b, &mut rng);
+            let mut out_row = vec![0.0f32; D];
+            let t_item = time_budget(&format!("{name} b={b} per-item"), budget, || {
+                for i in 0..b {
+                    op.decode_with(
+                        &mut scratch,
+                        &mut states_seq[i],
+                        q.row(i),
+                        k.row(i),
+                        v.row(i),
+                        &mut out_row,
+                    )
+                    .unwrap();
+                }
+                std::hint::black_box(&out_row);
+            });
+
+            // fused: one decode_batch_with block over all B sessions
+            let mut states_fused = make_states(op.as_ref(), b, &mut rng);
+            let mut refs: Vec<&mut AttnState> = states_fused.iter_mut().collect();
+            let mut y = vec![0.0f32; b * D];
+            let t_fused = time_budget(&format!("{name} b={b} fused"), budget, || {
+                op.decode_batch_with(
+                    &mut scratch,
+                    &mut refs,
+                    q.view(),
+                    k.view(),
+                    v.view(),
+                    MatViewMut::new(&mut y, b, D),
+                )
+                .unwrap();
+                std::hint::black_box(&y);
+            });
+
+            let speedup = t_item.mean_ms / t_fused.mean_ms;
+            let toks = b as f64 / (t_fused.mean_ms / 1e3);
+            table.row(vec![
+                name.to_string(),
+                b.to_string(),
+                fmt_ms(t_item.mean_ms),
+                fmt_ms(t_fused.mean_ms),
+                format!("{speedup:.2}x"),
+                format!("{toks:.0}"),
+            ]);
+            entries.push(decode_entry(
+                name,
+                b,
+                "per-item",
+                t_item.mean_ms,
+                b as f64 / (t_item.mean_ms / 1e3),
+            ));
+            entries.push(decode_entry(name, b, "fused", t_fused.mean_ms, toks));
+            speedups.insert(format!("{name}_b{b}"), Json::Num(speedup));
+        }
+    }
+    table.print();
+
+    write_json(
+        "BENCH_decode.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("serve_decode".into())),
+            ("d_head", Json::Num(D as f64)),
+            ("d_v", Json::Num(D as f64)),
+            ("window", Json::Num(WINDOW as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("entries", Json::Arr(entries)),
+            ("speedup_fused_vs_per_item", Json::Obj(speedups)),
+        ]),
+    )
+    .unwrap();
+}

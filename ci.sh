@@ -20,6 +20,9 @@
 #                                       of the ADR-004 persistence
 #                                       subsystem; asserts
 #                                       results/BENCH_persist.json lands)
+#   * SLAY_BENCH_SMOKE=1 serve_decode  (fused vs per-item cross-session
+#                                       decode smoke of ADR-005; asserts
+#                                       results/BENCH_decode.json lands)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -49,5 +52,10 @@ echo "== persist smoke (snapshot -> restore -> serve; emits BENCH_persist.json) 
 rm -f "$RESULTS_DIR/BENCH_persist.json"
 SLAY_BENCH_SMOKE=1 cargo bench --bench persist
 test -f "$RESULTS_DIR/BENCH_persist.json" || { echo "BENCH_persist.json missing"; exit 1; }
+
+echo "== serve_decode smoke (fused vs per-item decode; emits BENCH_decode.json) =="
+rm -f "$RESULTS_DIR/BENCH_decode.json"
+SLAY_BENCH_SMOKE=1 cargo bench --bench serve_decode
+test -f "$RESULTS_DIR/BENCH_decode.json" || { echo "BENCH_decode.json missing"; exit 1; }
 
 echo "ci.sh done"

@@ -25,6 +25,15 @@ pub struct Metrics {
     pub bytes_spilled: AtomicU64,
     /// Coordinator-level snapshots taken.
     pub snapshots: AtomicU64,
+    /// Fused cross-session decode blocks executed (ADR-005): one
+    /// `decode_batch_with` call per counted block…
+    pub fused_decode_batches: AtomicU64,
+    /// …and the decode rows those blocks advanced (so
+    /// `fused_decode_rows / fused_decode_batches` is the mean fused batch
+    /// size — the number that says whether traffic actually fuses).
+    pub fused_decode_rows: AtomicU64,
+    /// Largest fused decode block seen (high-water mark, `fetch_max`).
+    pub max_fused_batch: AtomicU64,
     /// Latency reservoir (ms) — bounded, replace-random once full.
     latencies: Mutex<Vec<f64>>,
 }
@@ -72,6 +81,9 @@ impl Metrics {
             restored_from_spill: self.restored_from_spill.load(Ordering::Relaxed),
             bytes_spilled: self.bytes_spilled.load(Ordering::Relaxed),
             snapshots: self.snapshots.load(Ordering::Relaxed),
+            fused_decode_batches: self.fused_decode_batches.load(Ordering::Relaxed),
+            fused_decode_rows: self.fused_decode_rows.load(Ordering::Relaxed),
+            max_fused_batch: self.max_fused_batch.load(Ordering::Relaxed),
             latency_p50_ms: p50,
             latency_p95_ms: p95,
             latency_mean_ms: mean,
@@ -94,6 +106,9 @@ pub struct Snapshot {
     pub restored_from_spill: u64,
     pub bytes_spilled: u64,
     pub snapshots: u64,
+    pub fused_decode_batches: u64,
+    pub fused_decode_rows: u64,
+    pub max_fused_batch: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_mean_ms: f64,
@@ -106,6 +121,17 @@ impl Snapshot {
             0.0
         } else {
             self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Mean decode rows per fused block (fusion effectiveness, ADR-005):
+    /// near 1.0 means batches form but decode traffic never actually
+    /// fuses; the coordinator's whole cross-session win lives above that.
+    pub fn mean_fused_batch_size(&self) -> f64 {
+        if self.fused_decode_batches == 0 {
+            0.0
+        } else {
+            self.fused_decode_rows as f64 / self.fused_decode_batches as f64
         }
     }
 
@@ -124,6 +150,10 @@ impl Snapshot {
             ("restored_from_spill", Json::Num(self.restored_from_spill as f64)),
             ("bytes_spilled", Json::Num(self.bytes_spilled as f64)),
             ("snapshots", Json::Num(self.snapshots as f64)),
+            ("fused_decode_batches", Json::Num(self.fused_decode_batches as f64)),
+            ("fused_decode_rows", Json::Num(self.fused_decode_rows as f64)),
+            ("mean_fused_batch_size", Json::Num(self.mean_fused_batch_size())),
+            ("max_fused_batch", Json::Num(self.max_fused_batch as f64)),
             ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
             ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
             ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
@@ -162,6 +192,25 @@ mod tests {
         let m = Metrics::new();
         let j = m.snapshot().to_json();
         assert!(j.get("completed").is_some());
+    }
+
+    #[test]
+    fn fused_decode_counters_snapshot_and_serialize() {
+        let m = Metrics::new();
+        m.fused_decode_batches.fetch_add(4, Ordering::Relaxed);
+        m.fused_decode_rows.fetch_add(48, Ordering::Relaxed);
+        m.max_fused_batch.fetch_max(16, Ordering::Relaxed);
+        m.max_fused_batch.fetch_max(9, Ordering::Relaxed); // high-water holds
+        let s = m.snapshot();
+        assert_eq!(s.fused_decode_batches, 4);
+        assert_eq!(s.fused_decode_rows, 48);
+        assert_eq!(s.max_fused_batch, 16);
+        assert_eq!(s.mean_fused_batch_size(), 12.0);
+        let j = s.to_json();
+        assert_eq!(j.get("fused_decode_batches").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("fused_decode_rows").unwrap().as_usize(), Some(48));
+        assert_eq!(j.get("max_fused_batch").unwrap().as_usize(), Some(16));
+        assert_eq!(j.get("mean_fused_batch_size").unwrap().as_usize(), Some(12));
     }
 
     #[test]

@@ -16,9 +16,10 @@
 //!   sequence's streaming state `(S, z)` is owned by exactly one thread —
 //!   no locks on the hot path.
 //! * **Dynamic batcher**: each worker gathers up to `max_batch` chunks or
-//!   `max_wait`, maps features over zero-copy views of each chunk's arrival
-//!   buffers at its sequence's true position, then streams chunks through
-//!   their per-sequence states (decode-first).
+//!   `max_wait` (parked in a timed recv, not spinning), runs the batch's
+//!   decode group as fused cross-session blocks — one feature GEMM + B
+//!   per-sequence state ops per wave (ADR-005) — and streams prefill
+//!   chunks through their per-sequence states, decode-first.
 //! * **Backpressure**: bounded `sync_channel` queues; a full queue rejects
 //!   with [`request::ServeError::Backpressure`] instead of queueing
 //!   unboundedly.

@@ -19,6 +19,16 @@
 //! bounded only by disk. Spill files are not fsynced (losing one equals an
 //! eviction); durable snapshots go through
 //! [`SequenceStore::export_all`], which does fsync.
+//!
+//! # Batched borrows (ADR-005)
+//!
+//! [`SequenceStore::get_many_mut`] hands out disjoint `&mut` borrows of
+//! several sequences' states at once — what the fused cross-session decode
+//! path feeds to
+//! [`AttentionBackend::decode_batch_with`](crate::kernels::AttentionBackend::decode_batch_with).
+//! Duplicate ids are rejected, every requested state is faulted in before
+//! any borrow is handed out, and room-making evictions never touch the
+//! request's own members.
 
 use crate::coordinator::metrics::Metrics;
 use crate::coordinator::request::SeqId;
@@ -186,6 +196,64 @@ impl SequenceStore {
         }
     }
 
+    /// Disjoint mutable borrows of several sequences' states at once — the
+    /// fused batched-decode entry (ADR-005). Borrow-splitting rules:
+    ///
+    /// * `ids` must be mutually distinct — a duplicate would alias a
+    ///   `&mut`, so it is rejected up front, before any state is touched;
+    /// * every requested sequence is faulted in *before* any borrow is
+    ///   handed out, and the room-making eviction only ever considers
+    ///   residents **outside** the request — a batch can never evict its
+    ///   own members;
+    /// * an unknown id errors without handing out any borrows; a fault-in
+    ///   that finds no room (every evictable resident is itself a wave
+    ///   member) fails the call with the sequence left *spilled and
+    ///   intact* — the caller retries per-item, no session is lost.
+    ///
+    /// Returns the states in `ids` order, each LRU-touched. Disjointness
+    /// holds by construction: the ids are distinct map keys, and the
+    /// borrows are produced by one `iter_mut` pass over the map — that
+    /// pass is the O(residents + B log B) price of staying in safe code
+    /// (no aliasing-based splitting), paid once per fused wave.
+    pub fn get_many_mut(&mut self, ids: &[SeqId]) -> anyhow::Result<Vec<&mut AttnState>> {
+        // sorted (id, request-position) index: duplicate detection here,
+        // binary search in the resident pass below
+        let mut order: Vec<(SeqId, usize)> =
+            ids.iter().enumerate().map(|(i, &id)| (id, i)).collect();
+        order.sort_unstable();
+        for w in order.windows(2) {
+            anyhow::ensure!(
+                w[0].0 != w[1].0,
+                "duplicate sequence {:?} in batched borrow",
+                w[0].0
+            );
+        }
+        for &id in ids {
+            if self.seqs.contains_key(&id) {
+                continue;
+            }
+            anyhow::ensure!(self.spilled.contains_key(&id), "unknown sequence {id:?}");
+            anyhow::ensure!(
+                self.fault_in_skipping(id, ids),
+                "cannot fault sequence {id:?} back in (resident set full; raise the store \
+                 budget or shrink the batch)"
+            );
+        }
+        let now = Instant::now();
+        let mut slots: Vec<Option<&mut AttnState>> = ids.iter().map(|_| None).collect();
+        for (id, e) in self.seqs.iter_mut() {
+            if let Ok(j) = order.binary_search_by_key(id, |&(sid, _)| sid) {
+                e.last_touch = now;
+                slots[order[j].1] = Some(&mut e.state);
+            }
+        }
+        let mut out = Vec::with_capacity(ids.len());
+        for (slot, id) in slots.into_iter().zip(ids) {
+            out.push(slot.ok_or_else(|| anyhow::anyhow!("unknown sequence {id:?}"))?);
+        }
+        Ok(out)
+    }
+
     pub fn contains(&self, id: SeqId) -> bool {
         self.seqs.contains_key(&id) || self.spilled.contains_key(&id)
     }
@@ -217,8 +285,19 @@ impl SequenceStore {
     /// them to disk when a spill dir is configured, destroying them
     /// otherwise (seed behavior).
     pub fn evict_idle(&mut self, n: usize) -> usize {
-        let mut order: Vec<(Instant, SeqId)> =
-            self.seqs.iter().map(|(id, e)| (e.last_touch, *id)).collect();
+        self.evict_idle_skipping(n, &[])
+    }
+
+    /// [`SequenceStore::evict_idle`] restricted to victims outside `keep` —
+    /// the batched-borrow path ([`SequenceStore::get_many_mut`]) protects
+    /// every requested sequence while making room to fault spilled ones in.
+    fn evict_idle_skipping(&mut self, n: usize, keep: &[SeqId]) -> usize {
+        let mut order: Vec<(Instant, SeqId)> = self
+            .seqs
+            .iter()
+            .filter(|(id, _)| !keep.contains(id))
+            .map(|(id, e)| (e.last_touch, *id))
+            .collect();
         order.sort();
         let victims: Vec<SeqId> = order.into_iter().take(n).map(|(_, id)| id).collect();
         let count = victims.len();
@@ -266,10 +345,37 @@ impl SequenceStore {
     /// The spill files were written by this store from validated states,
     /// so only the codec's checksum is re-verified here.
     fn fault_in(&mut self, id: SeqId) -> bool {
-        let entry = match self.spilled.remove(&id) {
-            Some(e) => e,
+        self.fault_in_skipping(id, &[])
+    }
+
+    /// [`SequenceStore::fault_in`] with the room-making eviction
+    /// restricted to residents outside `keep` (the batched-borrow path).
+    ///
+    /// Room is made *before* the spill entry is touched: when the resident
+    /// set cannot take the state — e.g. every resident is a protected wave
+    /// member — the sequence stays spilled (entry and file intact) instead
+    /// of being destroyed, so an oversized batched borrow degrades to an
+    /// error the caller can retry per-item, never to session loss.
+    fn fault_in_skipping(&mut self, id: SeqId, keep: &[SeqId]) -> bool {
+        let cap_bytes = match self.spilled.get(&id) {
+            Some(e) => e.cap_bytes,
             None => return false,
         };
+        while !self.seqs.is_empty()
+            && (self.seqs.len() >= self.cfg.max_sequences
+                || self.bytes + cap_bytes > self.cfg.memory_budget)
+        {
+            if self.evict_idle_skipping(1, keep) == 0 {
+                break;
+            }
+        }
+        if self.seqs.len() >= self.cfg.max_sequences
+            || self.bytes + cap_bytes > self.cfg.memory_budget
+        {
+            crate::log_warn!("no room to fault sequence {:?} back in; leaving it spilled", id);
+            return false;
+        }
+        let entry = self.spilled.remove(&id).expect("presence checked above");
         let decoded = std::fs::File::open(&entry.path)
             .map_err(anyhow::Error::from)
             .and_then(|f| AttnState::decode(&mut std::io::BufReader::new(f)));
@@ -277,24 +383,11 @@ impl SequenceStore {
         let state = match decoded {
             Ok(s) => s,
             Err(e) => {
+                // the file itself is unusable — dropping IS the eviction
                 crate::log_warn!("dropping spilled sequence {:?}: {e}", id);
                 return false;
             }
         };
-        while !self.seqs.is_empty()
-            && (self.seqs.len() >= self.cfg.max_sequences
-                || self.bytes + entry.cap_bytes > self.cfg.memory_budget)
-        {
-            if self.evict_idle(1) == 0 {
-                break;
-            }
-        }
-        if self.seqs.len() >= self.cfg.max_sequences
-            || self.bytes + entry.cap_bytes > self.cfg.memory_budget
-        {
-            crate::log_warn!("no room to fault sequence {:?} back in; dropping it", id);
-            return false;
-        }
         self.bytes += entry.cap_bytes;
         self.seqs
             .insert(id, Entry { state, cap_bytes: entry.cap_bytes, last_touch: Instant::now() });
@@ -514,6 +607,90 @@ mod tests {
         assert!(!s.contains(SeqId(1)));
         assert!(!file.exists(), "release must reclaim the spill file");
         assert!(!s.release(SeqId(1)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn get_many_mut_disjoint_borrows_and_duplicate_rejection() {
+        let b = backend();
+        let mut s = store(8);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        s.create(SeqId(3), b.new_state(4)).unwrap();
+        // duplicates would alias a &mut — rejected before any state is touched
+        assert!(s.get_many_mut(&[SeqId(1), SeqId(2), SeqId(1)]).is_err());
+        // unknown ids error without handing out borrows
+        assert!(s.get_many_mut(&[SeqId(1), SeqId(99)]).is_err());
+        // happy path: borrows come back in request order and are disjoint
+        let mut out = vec![0.0f32; 4];
+        {
+            let states = s.get_many_mut(&[SeqId(3), SeqId(1)]).unwrap();
+            assert_eq!(states.len(), 2);
+            for st in states {
+                b.decode(st, &[0.5; 16], &[0.5; 16], &[1.0; 4], &mut out).unwrap();
+            }
+        }
+        assert_eq!(s.seq_len(SeqId(3)), Some(1));
+        assert_eq!(s.seq_len(SeqId(1)), Some(1));
+        assert_eq!(s.seq_len(SeqId(2)), Some(0), "unrequested sequence untouched");
+    }
+
+    #[test]
+    fn get_many_mut_faults_spilled_in_and_protects_requested_residents() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_many_mut_spill");
+        let per_seq = b.new_state(4).capacity_bytes();
+        // budget fits exactly two resident states
+        let mut s = spill_store(8, 2 * per_seq, &dir);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // admitting #3 pages #1 (the LRU resident) out
+        s.create(SeqId(3), b.new_state(4)).unwrap();
+        let f1 = crate::coordinator::persist::state_file(&dir, SeqId(1));
+        assert!(f1.exists(), "seq 1 paged out");
+        // Request {1, 2}: faulting 1 back in must evict 3 — the only
+        // resident OUTSIDE the request — even though 2 is the older touch
+        // (an unprotected LRU pass would have victimized 2).
+        {
+            let states = s.get_many_mut(&[SeqId(1), SeqId(2)]).unwrap();
+            assert_eq!(states.len(), 2);
+            assert_eq!(states[0].len(), 0, "faulted state decodes from its true length");
+        }
+        assert!(!f1.exists(), "fault-in reclaims the spill file");
+        let f3 = crate::coordinator::persist::state_file(&dir, SeqId(3));
+        assert!(f3.exists(), "the non-requested resident was paged out to make room");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.spilled_len(), 1);
+        assert!(s.contains(SeqId(1)) && s.contains(SeqId(2)) && s.contains(SeqId(3)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn get_many_mut_no_room_leaves_sequence_spilled_not_destroyed() {
+        // A wave larger than the resident budget must fail the batched
+        // borrow with the spilled member INTACT (entry + file) — the
+        // worker then retries per-item; the session is never lost.
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_many_mut_no_room");
+        let per_seq = b.new_state(4).capacity_bytes();
+        // budget fits exactly one resident state
+        let mut s = spill_store(8, per_seq, &dir);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // admitting #2 pages #1 out
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        let f1 = crate::coordinator::persist::state_file(&dir, SeqId(1));
+        assert!(f1.exists());
+        // both requested: faulting #1 cannot evict #2 (protected) → error,
+        // and #1 must still be spilled afterwards
+        assert!(s.get_many_mut(&[SeqId(1), SeqId(2)]).is_err());
+        assert!(s.contains(SeqId(1)), "failed batched borrow must not destroy the session");
+        assert_eq!(s.spilled_len(), 1);
+        assert!(f1.exists(), "spill file must survive the failed fault-in");
+        // the per-item path still serves it (unprotected eviction)
+        assert!(s.get_mut(SeqId(1)).is_some());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,12 +1,25 @@
 //! Shard worker: owns one [`SequenceStore`] shard, an
 //! [`AttentionBackend`] and a [`Scratch`] arena, forms dynamic batches
-//! from its queue, then streams each chunk through its sequence state via
-//! the zero-allocation `prefill_into` path: the backend maps features
-//! over zero-copy views of the chunk's arrival buffers at the sequence's
-//! true position (ADR-002) with every intermediate — feature rows, block
-//! scores, projections — recycled from the worker's arena (ADR-003). In
-//! steady state the only per-chunk allocation on this path is the result
-//! tensor handed back over the reply channel. Mechanisms without a
+//! from its queue (parking in `recv_timeout` for the window's remainder
+//! while under-filled — no busy spin), then executes them in two lanes:
+//!
+//! * **fused decode** (ADR-005): the batch's decode chunks — different
+//!   sequences, n = 1 each, each at its own position — are stacked into
+//!   one q/k/v block and advanced by ONE
+//!   [`AttentionBackend::decode_batch_with`] call per wave (same-sequence
+//!   repeats split into ordered waves), with the states borrowed
+//!   disjointly via [`SequenceStore::get_many_mut`]. B matvecs become one
+//!   feature GEMM + B cheap state ops, bit-identical per sequence to the
+//!   per-item path.
+//! * **per-item prefill**: each prefill chunk streams through the
+//!   zero-allocation `prefill_into` path: the backend maps features over
+//!   zero-copy views of the chunk's arrival buffers at the sequence's
+//!   true position (ADR-002) with every intermediate — feature rows,
+//!   block scores, projections — recycled from the worker's arena
+//!   (ADR-003).
+//!
+//! In steady state the only per-chunk allocation on these paths is the
+//! result tensor handed back over the reply channel. Mechanisms without a
 //! feature decomposition (the exact quadratic baselines) are served
 //! through the same interface over their rolling KV windows.
 
@@ -16,7 +29,7 @@ use crate::coordinator::scheduler::{order_batch, BatchPolicy};
 use crate::coordinator::state::{SequenceStore, SnapshotRecord, StoreConfig};
 use crate::kernels::config::Mechanism;
 use crate::kernels::AttentionBackend;
-use crate::math::linalg::{Mat, Scratch};
+use crate::math::linalg::{Mat, MatView, MatViewMut, Scratch};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
 use std::time::Instant;
@@ -101,8 +114,10 @@ pub fn run(
                 // previous batch computes, so large batches form naturally;
                 // a lone decode request proceeds immediately instead of
                 // eating the max_wait window (was the p50 decode latency
-                // floor). `max_wait` still bounds a short gather when the
-                // batch is under-filled and traffic is in flight.
+                // floor). While the batch is under-filled and traffic is in
+                // flight the worker parks in `recv_timeout` for the
+                // window's remaining budget — the old yield-spin burned a
+                // core per shard while batches formed (ADR-005).
                 let mut batch = vec![first];
                 let first_arrival = Instant::now();
                 let mut shutdown = false;
@@ -114,52 +129,63 @@ pub fn run(
                 let mut deferred_snapshot = None;
                 loop {
                     // non-blocking drain first
-                    match rx.try_recv() {
-                        Ok(Msg::Work(w)) => {
-                            batch.push(w);
-                            if batch.len() >= cfg.policy.max_batch {
-                                break;
-                            }
-                            continue;
-                        }
-                        Ok(Msg::Create(id, ack)) => {
-                            let _ = ack.send(store.create(id, backend.new_state(cfg.d_v)));
-                            continue;
-                        }
-                        Ok(Msg::Release(id, ack)) => {
-                            let _ = ack.send(store.release(id));
-                            continue;
-                        }
-                        Ok(Msg::Len(id, ack)) => {
-                            let _ = ack.send(store.seq_len(id));
-                            continue;
-                        }
-                        Ok(Msg::Snapshot(dir, ack)) => {
-                            deferred_snapshot = Some((dir, ack));
-                            break;
-                        }
-                        Ok(Msg::Install(id, path, ack)) => {
-                            let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
-                            continue;
-                        }
-                        Ok(Msg::Shutdown) => {
-                            shutdown = true;
-                            break;
-                        }
-                        Err(mpsc::TryRecvError::Empty) => {}
+                    let msg = match rx.try_recv() {
+                        Ok(m) => m,
                         Err(mpsc::TryRecvError::Disconnected) => {
                             shutdown = true;
                             break;
                         }
+                        Err(mpsc::TryRecvError::Empty) => {
+                            // queue empty: only linger while other requests
+                            // are in flight and the batch is still small —
+                            // and linger *blocked on the channel*, bounded
+                            // by what is left of the batch window.
+                            let now = Instant::now();
+                            let in_flight =
+                                inflight.load(Ordering::Relaxed) as usize > batch.len();
+                            if !in_flight
+                                || cfg.policy.should_close(first_arrival, batch.len(), now)
+                            {
+                                break;
+                            }
+                            match rx.recv_timeout(cfg.policy.remaining(first_arrival, now)) {
+                                Ok(m) => m,
+                                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                    shutdown = true;
+                                    break;
+                                }
+                            }
+                        }
+                    };
+                    match msg {
+                        Msg::Work(w) => {
+                            batch.push(w);
+                            if batch.len() >= cfg.policy.max_batch {
+                                break;
+                            }
+                        }
+                        Msg::Create(id, ack) => {
+                            let _ = ack.send(store.create(id, backend.new_state(cfg.d_v)));
+                        }
+                        Msg::Release(id, ack) => {
+                            let _ = ack.send(store.release(id));
+                        }
+                        Msg::Len(id, ack) => {
+                            let _ = ack.send(store.seq_len(id));
+                        }
+                        Msg::Snapshot(dir, ack) => {
+                            deferred_snapshot = Some((dir, ack));
+                            break;
+                        }
+                        Msg::Install(id, path, ack) => {
+                            let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
+                        }
+                        Msg::Shutdown => {
+                            shutdown = true;
+                            break;
+                        }
                     }
-                    // queue empty: only linger while other requests are in
-                    // flight and the batch is still small
-                    let now = Instant::now();
-                    let in_flight = inflight.load(Ordering::Relaxed) as usize > batch.len();
-                    if !in_flight || cfg.policy.should_close(first_arrival, batch.len(), now) {
-                        break;
-                    }
-                    std::thread::yield_now();
                 }
                 process_batch(
                     &mut store,
@@ -208,42 +234,190 @@ fn process_batch(
         .batched_items
         .fetch_add(batch.len() as u64, Ordering::Relaxed);
 
-    // ---- per-chunk streaming through sequence state ---------------------
-    // Each chunk streams through `prefill_into`: the backend maps features
-    // over zero-copy views of the arrival buffers at the session's true
-    // position (`state.len()`, so cosformer serving matches its one-shot
-    // forward) and draws every intermediate from the worker's scratch
-    // arena. The result tensor is the only allocation on this path — it
-    // crosses the reply channel, so the caller owns it.
-    for w in batch {
-        let n = w.chunk.n_tokens();
-        if w.chunk.is_decode() {
-            metrics.decode_chunks.fetch_add(1, Ordering::Relaxed);
-        } else {
-            metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+    // ---- fused cross-session decode (ADR-005) ---------------------------
+    // `order_batch` puts decode chunks (single token, latency-critical)
+    // first, so the decode group is the batch's prefix. Same-sequence
+    // decodes must apply in arrival order, so the group executes as a
+    // series of WAVES: each wave takes the first pending decode of every
+    // distinct sequence and runs them as ONE fused `decode_batch_with`
+    // block — cross-sequence order inside a wave is immaterial, the states
+    // are disjoint. Under steady multi-session traffic a batch is one wave.
+    let n_decode = batch.iter().take_while(|w| w.chunk.is_decode()).count();
+    let mut decode_items: Vec<WorkItem> = batch.drain(..n_decode).collect();
+    while !decode_items.is_empty() {
+        let mut wave: Vec<WorkItem> = Vec::with_capacity(decode_items.len());
+        let mut later: Vec<WorkItem> = Vec::new();
+        for w in decode_items {
+            // a wave holds at most one chunk per sequence (ordering) and is
+            // homogeneous in value width (it becomes one stacked block)
+            if wave.iter().any(|p| p.chunk.seq == w.chunk.seq)
+                || wave.first().is_some_and(|p| p.chunk.v.cols != w.chunk.v.cols)
+            {
+                later.push(w);
+            } else {
+                wave.push(w);
+            }
         }
-        let result = match store.get_mut(w.chunk.seq) {
-            None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
-            Some(state) => {
-                let (q, k, v) = (w.chunk.q.view(), w.chunk.k.view(), w.chunk.v.view());
-                let mut y = Mat::zeros(v.rows(), v.cols());
-                let res = backend.prefill_into(scratch, state, q, k, v, y.view_mut());
-                res.map(|()| AttendResult {
+        decode_items = later;
+        process_decode_wave(store, backend, scratch, wave, metrics, inflight);
+    }
+
+    // ---- per-chunk prefill streaming through sequence state -------------
+    // Each prefill chunk streams through `prefill_into`: the backend maps
+    // features over zero-copy views of the arrival buffers at the
+    // session's true position (`state.len()`, so cosformer serving matches
+    // its one-shot forward) and draws every intermediate from the worker's
+    // scratch arena. The result tensor is the only allocation on this
+    // path — it crosses the reply channel, so the caller owns it.
+    for w in batch {
+        metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
+        process_item(store, backend, scratch, w, metrics, inflight);
+    }
+}
+
+/// Stream one work item's chunk through its sequence state — the per-item
+/// path: every prefill chunk, plus any decode wave that fell back out of
+/// the fused path.
+fn process_item(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    scratch: &mut Scratch,
+    w: WorkItem,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+) {
+    let n = w.chunk.n_tokens();
+    let result = match store.get_mut(w.chunk.seq) {
+        None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
+        Some(state) => {
+            let (q, k, v) = (w.chunk.q.view(), w.chunk.k.view(), w.chunk.v.view());
+            let mut y = Mat::zeros(v.rows(), v.cols());
+            let res = backend.prefill_into(scratch, state, q, k, v, y.view_mut());
+            res.map(|()| AttendResult {
+                seq: w.chunk.seq,
+                y,
+                seq_len: state.len(),
+                latency: w.enqueued.elapsed(),
+            })
+        }
+    };
+    if let Ok(res) = &result {
+        metrics.record_latency(res.latency);
+        metrics.completed.fetch_add(1, Ordering::Relaxed);
+        metrics.tokens_in.fetch_add(n as u64, Ordering::Relaxed);
+    }
+    inflight.fetch_sub(1, Ordering::Relaxed);
+    let _ = w.reply.send(result);
+}
+
+/// Execute one wave of single-token decode chunks — distinct sequences,
+/// each at its own position — as one fused step (ADR-005): stack the
+/// wave's q/k/v rows into scratch-backed matrices, borrow every state
+/// disjointly ([`SequenceStore::get_many_mut`]), run ONE
+/// [`AttentionBackend::decode_batch_with`] call, and fan the per-item
+/// replies back out. Unknown sequences fail alone before the fused call;
+/// if the fused preconditions don't hold (a width-mismatched wave, a store
+/// too small to co-resident the whole wave), the wave falls back to the
+/// exact per-item path — `decode_batch_with` validates before mutating, so
+/// no token is ever absorbed twice.
+fn process_decode_wave(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    scratch: &mut Scratch,
+    wave: Vec<WorkItem>,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+) {
+    metrics
+        .decode_chunks
+        .fetch_add(wave.len() as u64, Ordering::Relaxed);
+    // Per-item admission: an unknown sequence fails alone, not its wave.
+    let mut items: Vec<WorkItem> = Vec::with_capacity(wave.len());
+    for w in wave {
+        if store.contains(w.chunk.seq) {
+            items.push(w);
+        } else {
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            let _ = w
+                .reply
+                .send(Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)));
+        }
+    }
+    if items.is_empty() {
+        return;
+    }
+    let b = items.len();
+    let d_k = items[0].chunk.q.cols;
+    let d_v = items[0].chunk.v.cols;
+    // Stack the wave's rows into scratch-backed matrices — B×d copies are
+    // noise next to the one feature GEMM they enable.
+    let mut q_buf = scratch.take(b * d_k);
+    let mut k_buf = scratch.take(b * d_k);
+    let mut v_buf = scratch.take(b * d_v);
+    let mut y_buf = scratch.take(b * d_v);
+    for (i, w) in items.iter().enumerate() {
+        q_buf[i * d_k..(i + 1) * d_k].copy_from_slice(w.chunk.q.row(0));
+        k_buf[i * d_k..(i + 1) * d_k].copy_from_slice(w.chunk.k.row(0));
+        v_buf[i * d_v..(i + 1) * d_v].copy_from_slice(w.chunk.v.row(0));
+    }
+    let ids: Vec<SeqId> = items.iter().map(|w| w.chunk.seq).collect();
+    // Pre-call lengths guard the fall-back below: decode_batch_with
+    // implementations validate before mutating, but a length that DID
+    // advance (a contract violation, e.g. a future backend keeping the
+    // partial-on-error provided default) must never be re-run — that would
+    // absorb the same token twice.
+    let pre_lens: Vec<Option<usize>> = ids.iter().map(|&id| store.seq_len(id)).collect();
+    let fused = store.get_many_mut(&ids).and_then(|mut states| {
+        backend.decode_batch_with(
+            scratch,
+            &mut states,
+            MatView::new(&q_buf, b, d_k),
+            MatView::new(&k_buf, b, d_k),
+            MatView::new(&v_buf, b, d_v),
+            MatViewMut::new(&mut y_buf, b, d_v),
+        )
+    });
+    match fused {
+        Ok(()) => {
+            metrics.fused_decode_batches.fetch_add(1, Ordering::Relaxed);
+            metrics.fused_decode_rows.fetch_add(b as u64, Ordering::Relaxed);
+            metrics.max_fused_batch.fetch_max(b as u64, Ordering::Relaxed);
+            for (i, w) in items.into_iter().enumerate() {
+                let y = Mat::from_vec(1, d_v, y_buf[i * d_v..(i + 1) * d_v].to_vec());
+                let result = AttendResult {
                     seq: w.chunk.seq,
                     y,
-                    seq_len: state.len(),
+                    seq_len: store.seq_len(w.chunk.seq).unwrap_or(0),
                     latency: w.enqueued.elapsed(),
-                })
+                };
+                metrics.record_latency(result.latency);
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                metrics.tokens_in.fetch_add(1, Ordering::Relaxed);
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                let _ = w.reply.send(Ok(result));
             }
-        };
-        if let Ok(res) = &result {
-            metrics.record_latency(res.latency);
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
-            metrics
-                .tokens_in
-                .fetch_add(n as u64, Ordering::Relaxed);
         }
-        inflight.fetch_sub(1, Ordering::Relaxed);
-        let _ = w.reply.send(result);
+        Err(e) => {
+            crate::log_warn!("fused decode wave of {b} fell back to per-item: {e}");
+            let msg = e.to_string();
+            for (i, w) in items.into_iter().enumerate() {
+                // re-run only sequences the failed fused call verifiably
+                // did not advance; an advanced one gets an error instead of
+                // a double-absorbed token
+                if store.seq_len(w.chunk.seq) == pre_lens[i] {
+                    process_item(store, backend, scratch, w, metrics, inflight);
+                } else {
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                    let _ = w.reply.send(Err(anyhow::anyhow!(
+                        "fused decode failed after advancing sequence {:?}: {msg}",
+                        w.chunk.seq
+                    )));
+                }
+            }
+        }
     }
+    scratch.put(y_buf);
+    scratch.put(v_buf);
+    scratch.put(k_buf);
+    scratch.put(q_buf);
 }

@@ -273,6 +273,36 @@ pub fn linear_attention_into(
 static ACTIVE_ENGINE_FANOUTS: std::sync::atomic::AtomicUsize =
     std::sync::atomic::AtomicUsize::new(0);
 
+/// RAII registration of one engine-level thread fan-out. Concurrent
+/// fan-outs — per-head forwards, chunked prefills, fused decode blocks —
+/// each register here and divide the [`num_threads`] budget by
+/// [`FanoutGuard::active`] (which counts this registration), so nested or
+/// parallel callers share one thread complement instead of multiplying
+/// into oversubscription.
+pub(crate) struct FanoutGuard {
+    active: usize,
+}
+
+impl FanoutGuard {
+    pub(crate) fn register() -> FanoutGuard {
+        use std::sync::atomic::Ordering;
+        let active = ACTIVE_ENGINE_FANOUTS.fetch_add(1, Ordering::Relaxed) + 1;
+        FanoutGuard { active }
+    }
+
+    /// Fan-outs in flight, including this one.
+    pub(crate) fn active(&self) -> usize {
+        self.active
+    }
+}
+
+impl Drop for FanoutGuard {
+    fn drop(&mut self) {
+        use std::sync::atomic::Ordering;
+        ACTIVE_ENGINE_FANOUTS.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
 /// One block's causal outputs (shared by the sequential loop and the
 /// parallel phase 3): inter-chunk contribution against the block's entry
 /// state `(s, z)`, then the causally-masked intra-chunk `B×B` scores,
@@ -500,15 +530,8 @@ impl StreamingState {
         // count is flops-proportional (PAR_FLOPS per spawn), like every
         // other threaded kernel, and divided across concurrently active
         // fan-outs so nested callers (per-head threads) share one budget.
-        use std::sync::atomic::Ordering;
-        let active = ACTIVE_ENGINE_FANOUTS.fetch_add(1, Ordering::Relaxed) + 1;
-        struct FanoutGuard;
-        impl Drop for FanoutGuard {
-            fn drop(&mut self) {
-                ACTIVE_ENGINE_FANOUTS.fetch_sub(1, Ordering::Relaxed);
-            }
-        }
-        let _guard = FanoutGuard;
+        let guard = FanoutGuard::register();
+        let active = guard.active();
         let flops = l * m * (block + 2 * d_v);
         let nt = (num_threads() / active)
             .max(1)

@@ -31,8 +31,32 @@ pub trait FeatureMap: Send + Sync {
     /// Map each row of `x` (shape `L × input_dim`) into `out`
     /// (`L × dim`, possibly strided), overwriting every element. `pos0` is
     /// the absolute position of row 0 — only position-dependent maps
-    /// (cosformer) read it.
+    /// (cosformer) read it. This is the *contiguous* special case of
+    /// [`FeatureMap::map_rows_into`]: row `r` sits at position `pos0 + r`.
     fn map_into(&self, x: MatView, pos0: usize, out: MatViewMut);
+    /// Whether the map reads token positions (`pos0` / `positions`).
+    /// Position-independent maps (the default) may batch rows from
+    /// different sequences at different positions through one call.
+    fn position_dependent(&self) -> bool {
+        false
+    }
+    /// Map a stacked block of rows where row `r` sits at its *own*
+    /// absolute position `positions[r]` — the fused cross-session decode
+    /// entry (ADR-005): B queued decode tokens from B different sequences
+    /// map as one `B × input_dim` batch. Position-independent maps inherit
+    /// this default (one batched call — the point of the fusion, and
+    /// bit-identical per row because every kernel underneath is
+    /// row-independent); any map that returns `true` from
+    /// [`FeatureMap::position_dependent`] MUST override it with true
+    /// per-row position handling (the default asserts that contract).
+    fn map_rows_into(&self, x: MatView, positions: &[usize], out: MatViewMut) {
+        debug_assert_eq!(x.rows(), positions.len());
+        assert!(
+            !self.position_dependent(),
+            "position-dependent feature maps must override map_rows_into"
+        );
+        self.map_into(x, 0, out);
+    }
     /// Allocating wrapper over [`FeatureMap::map_into`].
     fn map(&self, x: MatView, pos0: usize) -> Mat {
         let mut out = Mat::zeros(x.rows(), self.dim());

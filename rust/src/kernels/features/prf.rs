@@ -192,6 +192,23 @@ impl CosformerMap {
         assert!(horizon > 0);
         CosformerMap { d, horizon }
     }
+
+    /// Map one token row at absolute position `pos` — the single code path
+    /// both the contiguous (`map_into`) and per-row-position
+    /// (`map_rows_into`) entries go through, so a fused cross-session
+    /// decode block is bit-identical to mapping each row on its own.
+    #[inline]
+    fn map_row(&self, row: &[f32], pos: usize, orow: &mut [f32]) {
+        let m = self.horizon as f32;
+        let i = pos.min(self.horizon - 1) as f32;
+        let theta = std::f32::consts::FRAC_PI_2 * i / m;
+        let (sin_t, cos_t) = theta.sin_cos();
+        for c in 0..self.d {
+            let relu = row[c].max(0.0);
+            orow[c] = relu * cos_t;
+            orow[self.d + c] = relu * sin_t;
+        }
+    }
 }
 
 impl FeatureMap for CosformerMap {
@@ -203,19 +220,20 @@ impl FeatureMap for CosformerMap {
         2 * self.d
     }
 
+    fn position_dependent(&self) -> bool {
+        true
+    }
+
     fn map_into(&self, x: MatView, pos0: usize, mut out: MatViewMut) {
-        let m = self.horizon as f32;
         for r in 0..x.rows() {
-            let i = (pos0 + r).min(self.horizon - 1) as f32;
-            let theta = std::f32::consts::FRAC_PI_2 * i / m;
-            let (sin_t, cos_t) = theta.sin_cos();
-            let row = x.row(r);
-            let orow = out.row_mut(r);
-            for c in 0..self.d {
-                let relu = row[c].max(0.0);
-                orow[c] = relu * cos_t;
-                orow[self.d + c] = relu * sin_t;
-            }
+            self.map_row(x.row(r), pos0 + r, out.row_mut(r));
+        }
+    }
+
+    fn map_rows_into(&self, x: MatView, positions: &[usize], mut out: MatViewMut) {
+        debug_assert_eq!(x.rows(), positions.len());
+        for r in 0..x.rows() {
+            self.map_row(x.row(r), positions[r], out.row_mut(r));
         }
     }
 }
@@ -327,6 +345,37 @@ mod tests {
         let x = Mat::from_vec(1, 2, vec![1.0, 1.0]);
         let f_at = |p: usize| m.map(x.view(), p).data.clone();
         assert_eq!(f_at(7), f_at(20)); // positions past M−1 clamp
+    }
+
+    #[test]
+    fn cosformer_map_rows_matches_per_row_positions() {
+        // The fused cross-session entry: each row maps at its OWN absolute
+        // position (different sequences at different lengths), bit-identical
+        // to mapping the rows one at a time.
+        let d = 3;
+        let m = CosformerMap::new(d, 32);
+        let x = Mat::randn(4, d, &mut Rng::new(56));
+        let positions = [7usize, 0, 19, 40]; // scattered; 40 clamps past M−1
+        let mut fused = Mat::zeros(4, m.dim());
+        m.map_rows_into(x.view(), &positions, fused.view_mut());
+        for (r, &p) in positions.iter().enumerate() {
+            let want = m.map(x.view().row_block(r, r + 1), p);
+            assert_eq!(fused.row(r), want.row(0), "row {r} at pos {p}");
+        }
+    }
+
+    #[test]
+    fn position_independent_map_rows_ignores_positions() {
+        // Position-independent maps inherit the batched default: one call,
+        // bit-identical to map_into regardless of the positions vector.
+        let mut rng = Rng::new(57);
+        let prf = Prf::new(16, 8, 0.5, &mut rng);
+        assert!(!prf.position_dependent());
+        let x = Mat::randn(5, 8, &mut Rng::new(58)).normalized_rows();
+        let want = prf.map(x.view(), 0);
+        let mut fused = Mat::zeros(5, prf.dim());
+        prf.map_rows_into(x.view(), &[3, 99, 0, 7, 12], fused.view_mut());
+        assert_eq!(fused.data, want.data);
     }
 
     #[test]

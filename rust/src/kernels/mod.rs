@@ -23,6 +23,13 @@
 //!   warmed-up serving loop performs zero heap allocations
 //!   (`tests/alloc_discipline.rs`); [`AttentionBackend::prefill`] /
 //!   [`AttentionBackend::decode`] are the allocating wrappers.
+//! * [`AttentionBackend::decode_batch_with`] — the fused cross-session
+//!   decode step (ADR-005): B queued decode tokens from B different
+//!   sequences at B different positions advance in one call — linear
+//!   backends map the stacked block's features as one GEMM, quadratic
+//!   backends fan the per-sequence window dots across threads —
+//!   bit-identical to the sequential per-sequence loop (which is the
+//!   provided default every backend starts from).
 //! * [`MultiHeadAttention`] — per-head backends over packed `L × d_model`
 //!   tensors with std-thread fan-out across heads.
 //! * [`AttentionBackend::save_state`] / [`AttentionBackend::load_state`] —
@@ -57,7 +64,7 @@ pub mod features;
 pub mod slay;
 pub mod yat;
 
-use crate::math::linalg::{dot, sq_dist, Mat, MatView, MatViewMut, Scratch};
+use crate::math::linalg::{dot, num_threads, sq_dist, Mat, MatView, MatViewMut, Scratch, PAR_FLOPS};
 use config::Mechanism;
 use engine::StreamingState;
 use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
@@ -151,6 +158,60 @@ pub trait AttentionBackend: Send + Sync {
         out: &mut [f32],
     ) -> anyhow::Result<()> {
         self.decode_with(&mut Scratch::new(), state, q, k, v, out)
+    }
+
+    /// Fused cross-session batched decode step (ADR-005): one call
+    /// advances `B` *different* sequences by one token each — `states[i]`
+    /// absorbs row `i` of the stacked `k`/`v` blocks and answers row `i`
+    /// of `q`, writing its `d_v` outputs into row `i` of `out`. The `&mut`
+    /// borrows make the states mutually distinct by construction (the
+    /// coordinator obtains them through
+    /// [`SequenceStore::get_many_mut`](crate::coordinator::state::SequenceStore::get_many_mut)),
+    /// and each sequence sees exactly the per-token order
+    /// [`AttentionBackend::decode_with`] would have given it, so the fused
+    /// step is bit-identical to the sequential loop — including for the
+    /// signed-feature configs of ADR-003, whose ordering caveat concerns
+    /// summation order *within* one sequence, which fusion never touches.
+    ///
+    /// This provided default IS the sequential loop, so every backend is
+    /// correct out of the box. The linear backend overrides it to map the
+    /// whole stacked block's features in one batched call at per-row
+    /// sequence positions (B matvecs → one GEMM + B cheap state ops);
+    /// the quadratic backend fans the per-sequence window dots across the
+    /// shared engine thread budget. Overriding implementations must
+    /// validate the ENTIRE block before mutating any state — the worker's
+    /// per-item fall-back relies on a rejected block leaving every
+    /// sequence untouched. (The provided default loop stops at the first
+    /// failing row instead; rows before it have already advanced.)
+    fn decode_batch_with(
+        &self,
+        scratch: &mut Scratch,
+        states: &mut [&mut AttnState],
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        mut out: MatViewMut,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            states.len() == q.rows() && k.rows() == q.rows() && v.rows() == q.rows(),
+            "decode_batch: row mismatch states={} q={} k={} v={}",
+            states.len(),
+            q.rows(),
+            k.rows(),
+            v.rows()
+        );
+        anyhow::ensure!(
+            out.rows() == q.rows() && out.cols() == v.cols(),
+            "decode_batch: out is {}x{}, need {}x{}",
+            out.rows(),
+            out.cols(),
+            q.rows(),
+            v.cols()
+        );
+        for (i, state) in states.iter_mut().enumerate() {
+            self.decode_with(scratch, state, q.row(i), k.row(i), v.row(i), out.row_mut(i))?;
+        }
+        Ok(())
     }
 
     /// Full attention forward writing into `out` (`q.rows() × v.cols()`,
@@ -864,6 +925,141 @@ impl AttentionBackend for LinearBackend {
         Ok(())
     }
 
+    fn decode_batch_with(
+        &self,
+        scratch: &mut Scratch,
+        states: &mut [&mut AttnState],
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        mut out: MatViewMut,
+    ) -> anyhow::Result<()> {
+        let b = q.rows();
+        anyhow::ensure!(
+            states.len() == b && k.rows() == b && v.rows() == b,
+            "decode_batch: row mismatch states={} q={} k={} v={}",
+            states.len(),
+            b,
+            k.rows(),
+            v.rows()
+        );
+        anyhow::ensure!(
+            out.rows() == b && out.cols() == v.cols(),
+            "decode_batch: out is {}x{}, need {}x{}",
+            out.rows(),
+            out.cols(),
+            b,
+            v.cols()
+        );
+        let m = self.maps.dim();
+        // Validate every state up front — the feature mapping is shared
+        // across the block, so no state may be mutated until the whole
+        // block is known to be well-formed — and collect each row's own
+        // sequence position while at it.
+        let mut pos = scratch.take_idx(b);
+        for (i, state) in states.iter().enumerate() {
+            match &state.inner {
+                StateInner::Linear(s) => {
+                    anyhow::ensure!(
+                        s.m == m && s.d_v == v.cols(),
+                        "decode_batch: state {i} shape (m={}, d_v={}) vs features m={m}, \
+                         values d_v={}",
+                        s.m,
+                        s.d_v,
+                        v.cols()
+                    );
+                }
+                StateInner::Window(_) => {
+                    anyhow::bail!("state mismatch: windowed state passed to a linear backend")
+                }
+            }
+            pos[i] = state.len();
+        }
+        // One batched feature map over the whole stacked block, row i at
+        // sequence i's own position — the B×d · d×m GEMM that replaces B
+        // separate matvecs — then per-sequence state ops off the shared
+        // feature rows: the rank-1 update S_i += φ(k_i)ᵀv_i and the
+        // φ(q_i)·S_i read. Sequences are disjoint, so block order cannot
+        // perturb any sequence's summation order — the ADR-003
+        // signed-feature caveat (order WITHIN a sequence) is untouched by
+        // fusion — and because every map kernel is row-independent, any
+        // row-chunking of the block is bit-identical to the single-row
+        // maps the sequential path runs.
+        let mut q_buf = scratch.take(b * m);
+        let mut k_buf = scratch.take(b * m);
+        let d_v = v.cols();
+        // Cross-session parallelism (the win the per-item loop can never
+        // have): row-chunks of the block — feature sub-GEMMs plus their
+        // sequences' state ops — fan out across the shared engine thread
+        // budget when the block is worth a spawn.
+        let guard = engine::FanoutGuard::register();
+        let flops = b * m * (2 * q.cols() + 2 * d_v);
+        let nt = (num_threads() / guard.active())
+            .max(1)
+            .min(b)
+            .min((flops / PAR_FLOPS).max(1));
+        if nt == 1 {
+            self.maps
+                .map_q_rows_into(q, &pos, scratch, MatViewMut::new(&mut q_buf, b, m));
+            self.maps
+                .map_k_rows_into(k, &pos, scratch, MatViewMut::new(&mut k_buf, b, m));
+            for (i, state) in states.iter_mut().enumerate() {
+                let st = state.linear_mut().expect("validated above");
+                st.append(&k_buf[i * m..(i + 1) * m], v.row(i));
+                st.query_into(&q_buf[i * m..(i + 1) * m], self.delta, out.row_mut(i));
+            }
+        } else {
+            // Threaded runs allocate O(threads) bookkeeping per fan-out
+            // (spawns + per-thread map intermediates), never per token —
+            // the ADR-003 caveat; the zero-alloc guarantee is stated for
+            // the single-threaded path above.
+            let per = b.div_ceil(nt);
+            let maps = &self.maps;
+            let delta = self.delta;
+            let pos_all: &[usize] = &pos;
+            std::thread::scope(|s| {
+                let mut states_rest: &mut [&mut AttnState] = states;
+                let mut out_rest = out;
+                let mut qb_rest: &mut [f32] = &mut q_buf;
+                let mut kb_rest: &mut [f32] = &mut k_buf;
+                let mut i0 = 0;
+                while i0 < b {
+                    let take = per.min(b - i0);
+                    let (st_chunk, st_tail) = states_rest.split_at_mut(take);
+                    states_rest = st_tail;
+                    let (out_chunk, out_tail) = out_rest.split_rows_at(take);
+                    out_rest = out_tail;
+                    let (qb, qb_tail) = qb_rest.split_at_mut(take * m);
+                    qb_rest = qb_tail;
+                    let (kb, kb_tail) = kb_rest.split_at_mut(take * m);
+                    kb_rest = kb_tail;
+                    let start = i0;
+                    s.spawn(move || {
+                        let mut local = Scratch::new();
+                        let p = &pos_all[start..start + take];
+                        let q_rows = q.row_block(start, start + take);
+                        let k_rows = k.row_block(start, start + take);
+                        let qb_view = MatViewMut::new(&mut *qb, take, m);
+                        maps.map_q_rows_into(q_rows, p, &mut local, qb_view);
+                        let kb_view = MatViewMut::new(&mut *kb, take, m);
+                        maps.map_k_rows_into(k_rows, p, &mut local, kb_view);
+                        let mut out_chunk = out_chunk;
+                        for (j, state) in st_chunk.iter_mut().enumerate() {
+                            let st = state.linear_mut().expect("validated above");
+                            st.append(&kb[j * m..(j + 1) * m], v.row(start + j));
+                            st.query_into(&qb[j * m..(j + 1) * m], delta, out_chunk.row_mut(j));
+                        }
+                    });
+                    i0 += take;
+                }
+            });
+        }
+        scratch.put(k_buf);
+        scratch.put(q_buf);
+        scratch.put_idx(pos);
+        Ok(())
+    }
+
     fn forward_into(
         &self,
         q: MatView,
@@ -1151,6 +1347,116 @@ impl AttentionBackend for QuadraticBackend {
         let mut scores = scratch.take((win.rows + 1).min(win.cap));
         self.step(win, &mut scores, q, k, v, out);
         scratch.put(scores);
+        Ok(())
+    }
+
+    fn decode_batch_with(
+        &self,
+        scratch: &mut Scratch,
+        states: &mut [&mut AttnState],
+        q: MatView,
+        k: MatView,
+        v: MatView,
+        mut out: MatViewMut,
+    ) -> anyhow::Result<()> {
+        let b = q.rows();
+        anyhow::ensure!(
+            states.len() == b && k.rows() == b && v.rows() == b,
+            "decode_batch: row mismatch states={} q={} k={} v={}",
+            states.len(),
+            b,
+            k.rows(),
+            v.rows()
+        );
+        anyhow::ensure!(
+            out.rows() == b && out.cols() == v.cols(),
+            "decode_batch: out is {}x{}, need {}x{}",
+            out.rows(),
+            out.cols(),
+            b,
+            v.cols()
+        );
+        // Validate every window up front (no state mutated until the whole
+        // block is well-formed) and size the widest score buffer any
+        // sequence needs after absorbing its token; tally the dots to
+        // decide whether fanning out is worth a spawn.
+        let mut max_scores = 1usize;
+        let mut flops = 0usize;
+        for (i, state) in states.iter().enumerate() {
+            match &state.inner {
+                StateInner::Window(w) => {
+                    anyhow::ensure!(
+                        w.d_k == q.cols() && w.d_v == v.cols(),
+                        "decode_batch: state {i} shape (d_k={}, d_v={}) vs q={}, v={}",
+                        w.d_k,
+                        w.d_v,
+                        q.cols(),
+                        v.cols()
+                    );
+                    let rows = (w.rows + 1).min(w.cap);
+                    max_scores = max_scores.max(rows);
+                    flops += rows * (w.d_k + w.d_v);
+                }
+                StateInner::Linear(_) => {
+                    anyhow::bail!("state mismatch: linear state passed to a quadratic backend")
+                }
+            }
+        }
+        // Per-sequence window attention is embarrassingly parallel across
+        // the block — disjoint states, disjoint output rows — so the
+        // per-sequence dots fan out across the shared engine thread budget
+        // (concurrent fan-outs split num_threads, like every engine path).
+        let guard = engine::FanoutGuard::register();
+        let nt = (num_threads() / guard.active())
+            .max(1)
+            .min(b)
+            .min((flops / PAR_FLOPS).max(1));
+        if nt == 1 {
+            let mut scores = scratch.take(max_scores);
+            for (i, state) in states.iter_mut().enumerate() {
+                let win = state.window_mut().expect("validated above");
+                self.step(win, &mut scores, q.row(i), k.row(i), v.row(i), out.row_mut(i));
+            }
+            scratch.put(scores);
+            return Ok(());
+        }
+        let per = b.div_ceil(nt);
+        let mut bufs: Vec<Vec<f32>> = (0..nt).map(|_| scratch.take(max_scores)).collect();
+        std::thread::scope(|s| {
+            let mut states_rest: &mut [&mut AttnState] = states;
+            let mut out_rest = out;
+            let mut buf_rest: &mut [Vec<f32>] = &mut bufs;
+            let mut i0 = 0;
+            while i0 < b {
+                let take = per.min(b - i0);
+                let (st_chunk, st_tail) = states_rest.split_at_mut(take);
+                states_rest = st_tail;
+                let (out_chunk, out_tail) = out_rest.split_rows_at(take);
+                out_rest = out_tail;
+                let (scores, buf_tail) =
+                    buf_rest.split_first_mut().expect("one score buffer per thread chunk");
+                buf_rest = buf_tail;
+                let start = i0;
+                s.spawn(move || {
+                    let mut out_chunk = out_chunk;
+                    for (j, state) in st_chunk.iter_mut().enumerate() {
+                        let win = state.window_mut().expect("validated above");
+                        self.step(
+                            win,
+                            scores,
+                            q.row(start + j),
+                            k.row(start + j),
+                            v.row(start + j),
+                            out_chunk.row_mut(j),
+                        );
+                    }
+                });
+                i0 += take;
+            }
+        });
+        for buf in bufs {
+            scratch.put(buf);
+        }
         Ok(())
     }
 
@@ -1733,6 +2039,132 @@ mod tests {
             }
             assert_eq!(s_b.len(), l);
         }
+    }
+
+    #[test]
+    fn fused_decode_threaded_blocks_bit_identical_to_sequential() {
+        // Blocks big enough to cross the fan-out flops threshold must stay
+        // bit-identical to the sequential loop: row-chunked feature maps
+        // are row-independent and per-sequence state ops are disjoint, so
+        // thread count can never show up in the bits.
+        let b = 64;
+        let mut rng = Rng::new(121);
+        let mut scratch = Scratch::new();
+        // linear: SLAY at d_v = 16 → ~1.6M MACs per block, over threshold
+        let op = build(&Mechanism::Slay(SlayConfig::default()), 16, 0).unwrap();
+        let q = Mat::randn(b, 16, &mut rng);
+        let k = Mat::randn(b, 16, &mut rng);
+        let v = Mat::randn(b, 16, &mut rng);
+        let mut seq_states: Vec<AttnState> = (0..b).map(|_| op.new_state(16)).collect();
+        let mut fused_states: Vec<AttnState> = (0..b).map(|_| op.new_state(16)).collect();
+        let mut want = Mat::zeros(b, 16);
+        for i in 0..b {
+            op.decode_with(
+                &mut scratch,
+                &mut seq_states[i],
+                q.row(i),
+                k.row(i),
+                v.row(i),
+                want.row_mut(i),
+            )
+            .unwrap();
+        }
+        let mut got = Mat::zeros(b, 16);
+        let mut refs: Vec<&mut AttnState> = fused_states.iter_mut().collect();
+        op.decode_batch_with(&mut scratch, &mut refs, q.view(), k.view(), v.view(), got.view_mut())
+            .unwrap();
+        assert_eq!(got.data, want.data, "threaded linear block diverged");
+        // quadratic: saturated 256-row windows → ~0.5M dots per block
+        let opq = build_with_window(&Mechanism::Standard, 16, 0, 256).unwrap();
+        let fill = Mat::randn(300, 16, &mut rng);
+        let mut seq_q: Vec<AttnState> = (0..b).map(|_| opq.new_state(16)).collect();
+        let mut fused_q: Vec<AttnState> = (0..b).map(|_| opq.new_state(16)).collect();
+        for i in 0..b {
+            opq.prefill(&mut seq_q[i], fill.view(), fill.view(), fill.view()).unwrap();
+            opq.prefill(&mut fused_q[i], fill.view(), fill.view(), fill.view()).unwrap();
+        }
+        let mut want_q = Mat::zeros(b, 16);
+        for i in 0..b {
+            opq.decode_with(
+                &mut scratch,
+                &mut seq_q[i],
+                q.row(i),
+                k.row(i),
+                v.row(i),
+                want_q.row_mut(i),
+            )
+            .unwrap();
+        }
+        let mut got_q = Mat::zeros(b, 16);
+        let mut refs_q: Vec<&mut AttnState> = fused_q.iter_mut().collect();
+        opq.decode_batch_with(
+            &mut scratch,
+            &mut refs_q,
+            q.view(),
+            k.view(),
+            v.view(),
+            got_q.view_mut(),
+        )
+        .unwrap();
+        assert_eq!(got_q.data, want_q.data, "threaded quadratic block diverged");
+    }
+
+    #[test]
+    fn fused_decode_block_rejects_mismatches_without_mutation() {
+        // decode_batch_with validates the WHOLE block before touching any
+        // state (the worker's fall-back path relies on it: a rejected
+        // block must leave every sequence exactly where it was).
+        let lin = build(&Mechanism::EluLinear, 8, 0).unwrap();
+        let quad = build(&Mechanism::Standard, 8, 16).unwrap();
+        let mut scratch = Scratch::new();
+        let (q, k, v) = qkv(2, 8, 120);
+        let mut s_lin = lin.new_state(8);
+        let mut s_win = quad.new_state(8);
+        {
+            // mixed state kinds in one block → error on both backends
+            let mut refs: Vec<&mut AttnState> = vec![&mut s_lin, &mut s_win];
+            let mut out = Mat::zeros(2, 8);
+            assert!(lin
+                .decode_batch_with(
+                    &mut scratch,
+                    &mut refs,
+                    q.view(),
+                    k.view(),
+                    v.view(),
+                    out.view_mut()
+                )
+                .is_err());
+        }
+        {
+            let mut refs: Vec<&mut AttnState> = vec![&mut s_lin, &mut s_win];
+            let mut out = Mat::zeros(2, 8);
+            assert!(quad
+                .decode_batch_with(
+                    &mut scratch,
+                    &mut refs,
+                    q.view(),
+                    k.view(),
+                    v.view(),
+                    out.view_mut()
+                )
+                .is_err());
+        }
+        assert_eq!(s_lin.len(), 0, "no state mutated by a rejected block");
+        assert_eq!(s_win.len(), 0, "no state mutated by a rejected block");
+        // row-count mismatch (1 state, 2 rows)
+        let mut refs: Vec<&mut AttnState> = vec![&mut s_lin];
+        let mut out = Mat::zeros(2, 8);
+        assert!(lin
+            .decode_batch_with(
+                &mut scratch,
+                &mut refs,
+                q.view(),
+                k.view(),
+                v.view(),
+                out.view_mut()
+            )
+            .is_err());
+        assert_eq!(s_lin.len(), 0);
     }
 
     #[test]

@@ -36,6 +36,41 @@ pub trait QKFeatures: Send + Sync {
     fn map_q_into(&self, x: MatView, pos0: usize, scratch: &mut Scratch, out: MatViewMut);
     /// Key features into `out`.
     fn map_k_into(&self, x: MatView, pos0: usize, scratch: &mut Scratch, out: MatViewMut);
+    /// Query features for a stacked block whose row `r` sits at its *own*
+    /// absolute position `positions[r]` — the fused cross-session decode
+    /// entry (ADR-005). The provided default maps row by row (correct for
+    /// every implementation); implementations whose maps can batch rows at
+    /// heterogeneous positions override it with one fused call.
+    fn map_q_rows_into(
+        &self,
+        x: MatView,
+        positions: &[usize],
+        scratch: &mut Scratch,
+        mut out: MatViewMut,
+    ) {
+        debug_assert_eq!(x.rows(), positions.len());
+        let dim = self.dim();
+        for r in 0..x.rows() {
+            let orow = MatViewMut::new(out.row_mut(r), 1, dim);
+            self.map_q_into(x.row_block(r, r + 1), positions[r], scratch, orow);
+        }
+    }
+    /// Key features at per-row positions (see
+    /// [`QKFeatures::map_q_rows_into`]).
+    fn map_k_rows_into(
+        &self,
+        x: MatView,
+        positions: &[usize],
+        scratch: &mut Scratch,
+        mut out: MatViewMut,
+    ) {
+        debug_assert_eq!(x.rows(), positions.len());
+        let dim = self.dim();
+        for r in 0..x.rows() {
+            let orow = MatViewMut::new(out.row_mut(r), 1, dim);
+            self.map_k_into(x.row_block(r, r + 1), positions[r], scratch, orow);
+        }
+    }
     /// Allocating wrapper over [`QKFeatures::map_q_into`].
     fn map_q(&self, x: MatView, pos0: usize) -> Mat {
         let mut out = Mat::zeros(x.rows(), self.dim());
@@ -69,6 +104,26 @@ impl QKFeatures for SymMap {
 
     fn map_k_into(&self, x: MatView, pos0: usize, _scratch: &mut Scratch, out: MatViewMut) {
         self.inner.map_into(x, pos0, out);
+    }
+
+    fn map_q_rows_into(
+        &self,
+        x: MatView,
+        positions: &[usize],
+        _scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        self.inner.map_rows_into(x, positions, out);
+    }
+
+    fn map_k_rows_into(
+        &self,
+        x: MatView,
+        positions: &[usize],
+        _scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        self.inner.map_rows_into(x, positions, out);
     }
 
     fn positive(&self) -> bool {
@@ -313,6 +368,33 @@ impl QKFeatures for SlayFeatures {
             Fusion::LaplaceOnly => self.map_laplace_into(x, false, scratch, out),
             _ => self.map_shared_into(x, scratch, out),
         }
+    }
+
+    // The SLAY pipeline is position-independent (the spherical constraint
+    // normalizes per row; no positional reweighting), so a stacked block of
+    // rows from different sequences at different positions maps as one
+    // batched call — the fused decode path (ADR-005) gets the
+    // one-GEMM-per-block property for free.
+    fn map_q_rows_into(
+        &self,
+        x: MatView,
+        positions: &[usize],
+        scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        debug_assert_eq!(x.rows(), positions.len());
+        self.map_q_into(x, 0, scratch, out);
+    }
+
+    fn map_k_rows_into(
+        &self,
+        x: MatView,
+        positions: &[usize],
+        scratch: &mut Scratch,
+        out: MatViewMut,
+    ) {
+        debug_assert_eq!(x.rows(), positions.len());
+        self.map_k_into(x, 0, scratch, out);
     }
 
     fn positive(&self) -> bool {

@@ -538,6 +538,9 @@ impl<'a> From<&'a mut Mat> for MatViewMut<'a> {
 #[derive(Default)]
 pub struct Scratch {
     pool: Vec<Vec<f32>>,
+    /// Index buffers (per-row positions of a fused decode block, ADR-005)
+    /// — pooled separately so they never contend with the float pool.
+    idx_pool: Vec<Vec<usize>>,
 }
 
 impl Scratch {
@@ -554,32 +557,52 @@ impl Scratch {
     /// could skip — but that needs `set_len` on uninitialized memory, not
     /// worth the unsafety at current buffer sizes.
     pub fn take(&mut self, len: usize) -> Vec<f32> {
-        let mut pick: Option<usize> = None;
-        for (i, b) in self.pool.iter().enumerate() {
-            if b.capacity() < len {
-                continue;
-            }
-            let better = match pick {
-                None => true,
-                Some(j) => b.capacity() < self.pool[j].capacity(),
-            };
-            if better {
-                pick = Some(i);
-            }
-        }
-        let mut buf = match pick {
-            Some(i) => self.pool.swap_remove(i),
-            None => self.pool.pop().unwrap_or_default(),
-        };
-        buf.clear();
-        buf.resize(len, 0.0);
-        buf
+        best_fit(&mut self.pool, len)
     }
 
     /// Return a buffer to the pool for reuse.
     pub fn put(&mut self, buf: Vec<f32>) {
         self.pool.push(buf);
     }
+
+    /// A zeroed index buffer of `len` elements — [`Scratch::take`]'s
+    /// `usize` sibling (same ownership rules), used for the per-row
+    /// position vectors of fused decode blocks (ADR-005).
+    pub fn take_idx(&mut self, len: usize) -> Vec<usize> {
+        best_fit(&mut self.idx_pool, len)
+    }
+
+    /// Return an index buffer to the pool for reuse.
+    pub fn put_idx(&mut self, buf: Vec<usize>) {
+        self.idx_pool.push(buf);
+    }
+}
+
+/// The arena's selection rule, shared by the `f32` and index pools: the
+/// smallest pooled buffer whose capacity already fits `len` (best-fit),
+/// else grow whatever is at hand. Returns the buffer zero-filled to
+/// exactly `len` elements.
+fn best_fit<T: Clone + Default>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
+    let mut pick: Option<usize> = None;
+    for (i, b) in pool.iter().enumerate() {
+        if b.capacity() < len {
+            continue;
+        }
+        let better = match pick {
+            None => true,
+            Some(j) => b.capacity() < pool[j].capacity(),
+        };
+        if better {
+            pick = Some(i);
+        }
+    }
+    let mut buf = match pick {
+        Some(i) => pool.swap_remove(i),
+        None => pool.pop().unwrap_or_default(),
+    };
+    buf.clear();
+    buf.resize(len, T::default());
+    buf
 }
 
 // ---------------------------------------------------------------------------

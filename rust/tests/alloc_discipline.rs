@@ -2,7 +2,8 @@
 //! (ADR-003): once the per-worker `Scratch` arena and the session state
 //! are warm, a steady-state prefill chunk and a decode step must perform
 //! **zero** heap allocations — for the SLAY linear backend and for the
-//! windowed quadratic baselines alike.
+//! windowed quadratic baselines alike, and for the fused cross-session
+//! `decode_batch_with` block (ADR-005) as much as the per-item path.
 //!
 //! This is a `harness = false` test binary: the libtest harness spawns
 //! helper threads that allocate concurrently and would poison the global
@@ -17,7 +18,8 @@
 
 use slay::kernels::build;
 use slay::kernels::config::{Mechanism, SlayConfig};
-use slay::math::linalg::{Mat, Scratch};
+use slay::kernels::AttnState;
+use slay::math::linalg::{Mat, MatViewMut, Scratch};
 use slay::math::rng::Rng;
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -123,5 +125,80 @@ fn main() {
     );
     assert!(out.iter().all(|x| x.is_finite()));
 
-    println!("alloc_discipline: steady-state prefill + decode are allocation-free");
+    // ---- fused cross-session batched decode (ADR-005) -------------------
+    // One decode_batch_with call advancing B sequences must be
+    // allocation-free once the feature-row / position / output buffers are
+    // warm — for the linear GEMM path and the quadratic window path alike.
+    let bsz = 8;
+    let qb = Mat::randn(bsz, d, &mut rng);
+    let kb = Mat::randn(bsz, d, &mut rng);
+    let vb = Mat::randn(bsz, d_v, &mut rng);
+    let mut yb = vec![0.0f32; bsz * d_v];
+
+    let mut states: Vec<AttnState> = (0..bsz).map(|_| op.new_state(d_v)).collect();
+    let mut refs: Vec<&mut AttnState> = states.iter_mut().collect();
+    for _ in 0..3 {
+        op.decode_batch_with(
+            &mut scratch,
+            &mut refs,
+            qb.view(),
+            kb.view(),
+            vb.view(),
+            MatViewMut::new(&mut yb, bsz, d_v),
+        )
+        .unwrap();
+    }
+    let before_f = allocs();
+    op.decode_batch_with(
+        &mut scratch,
+        &mut refs,
+        qb.view(),
+        kb.view(),
+        vb.view(),
+        MatViewMut::new(&mut yb, bsz, d_v),
+    )
+    .unwrap();
+    let after_f = allocs();
+    assert_eq!(
+        after_f - before_f,
+        0,
+        "steady-state fused SLAY decode block allocated {} times",
+        after_f - before_f
+    );
+    assert!(yb.iter().all(|x| x.is_finite()));
+
+    let mut states_q: Vec<AttnState> = (0..bsz).map(|_| opq.new_state(d_v)).collect();
+    let mut refs_q: Vec<&mut AttnState> = states_q.iter_mut().collect();
+    // warmup past the window capacity (8) so every rolling window is full
+    for _ in 0..10 {
+        opq.decode_batch_with(
+            &mut scratch,
+            &mut refs_q,
+            qb.view(),
+            kb.view(),
+            vb.view(),
+            MatViewMut::new(&mut yb, bsz, d_v),
+        )
+        .unwrap();
+    }
+    let before_fq = allocs();
+    opq.decode_batch_with(
+        &mut scratch,
+        &mut refs_q,
+        qb.view(),
+        kb.view(),
+        vb.view(),
+        MatViewMut::new(&mut yb, bsz, d_v),
+    )
+    .unwrap();
+    let after_fq = allocs();
+    assert_eq!(
+        after_fq - before_fq,
+        0,
+        "steady-state fused quadratic decode block allocated {} times",
+        after_fq - before_fq
+    );
+    assert!(yb.iter().all(|x| x.is_finite()));
+
+    println!("alloc_discipline: per-item and fused steady-state decode are allocation-free");
 }

@@ -535,3 +535,127 @@ fn window_knob_admits_many_quadratic_sequences() {
     }
     coord.shutdown().unwrap();
 }
+
+#[test]
+fn fused_decode_bit_matches_reference_and_counts_fusion_metrics() {
+    // N sessions at staggered positions decode in lockstep rounds through
+    // ONE worker: every served output must be BIT-identical to a
+    // per-session reference backend (the fused path's ADR-005 contract —
+    // decode_batch_with ≡ the sequential decode_with loop), and the
+    // fused-decode counters must show the traffic actually fused.
+    let mut cfg = small_cfg(1);
+    cfg.max_batch = 16;
+    cfg.max_wait = Duration::from_millis(5);
+    let coord = Coordinator::start(cfg).unwrap();
+    let op = build(&Mechanism::Slay(SlayConfig::default()), 16, 4096).unwrap();
+    let n = 6;
+    let mut rng = Rng::new(411);
+    let seqs: Vec<SeqId> = (0..n).map(|_| coord.create_sequence().unwrap()).collect();
+    let mut reference: Vec<_> = (0..n).map(|_| op.new_state(8)).collect();
+    // staggered prefills: session i sits at position i+2 before decoding
+    // (always ≥ 2 rows — a 1-row chunk would classify as decode)
+    for (i, (&seq, st)) in seqs.iter().zip(reference.iter_mut()).enumerate() {
+        let q = Mat::randn(i + 2, 16, &mut rng);
+        let k = Mat::randn(i + 2, 16, &mut rng);
+        let v = Mat::randn(i + 2, 8, &mut rng);
+        op.prefill(st, q.view(), k.view(), v.view()).unwrap();
+        coord.attend(AttendChunk { seq, q, k, v }).unwrap();
+    }
+    let rounds = 10;
+    let mut out = vec![0.0f32; 8];
+    for round in 0..rounds {
+        let toks: Vec<(Mat, Mat, Mat)> = (0..n)
+            .map(|_| {
+                (
+                    Mat::randn(1, 16, &mut rng),
+                    Mat::randn(1, 16, &mut rng),
+                    Mat::randn(1, 8, &mut rng),
+                )
+            })
+            .collect();
+        // submit the whole round before collecting any reply, so the
+        // worker's gather window sees concurrent decode traffic
+        let mut rxs = Vec::new();
+        for (i, (q, k, v)) in toks.iter().enumerate() {
+            let ch = AttendChunk {
+                seq: seqs[i],
+                q: q.clone(),
+                k: k.clone(),
+                v: v.clone(),
+            };
+            rxs.push(coord.submit(ch).unwrap());
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let res = rx.recv().unwrap().unwrap();
+            let (q, k, v) = &toks[i];
+            op.decode(&mut reference[i], q.row(0), k.row(0), v.row(0), &mut out).unwrap();
+            assert_eq!(res.y.data, out, "round {round} session {i}");
+            assert_eq!(res.seq_len, reference[i].len());
+        }
+    }
+    let m = coord.metrics();
+    assert_eq!(m.decode_chunks, (n * rounds) as u64);
+    assert_eq!(
+        m.fused_decode_rows,
+        (n * rounds) as u64,
+        "every decode row should take the fused path (none may fall back)"
+    );
+    assert!(m.fused_decode_batches >= 1);
+    assert!(
+        m.max_fused_batch >= 2,
+        "concurrent sessions never fused (max fused batch {})",
+        m.max_fused_batch
+    );
+    coord.shutdown().unwrap();
+}
+
+#[test]
+fn same_sequence_decodes_in_one_batch_apply_in_arrival_order() {
+    // Three decodes for ONE sequence submitted back-to-back (they land in
+    // the same gather window) must apply in arrival order — the fused path
+    // splits same-sequence repeats into ordered waves — while a second
+    // sequence rides along; outputs stay bit-identical to the sequential
+    // reference.
+    let mut cfg = small_cfg(1);
+    cfg.max_wait = Duration::from_millis(5);
+    let coord = Coordinator::start(cfg).unwrap();
+    let op = build(&Mechanism::Slay(SlayConfig::default()), 16, 4096).unwrap();
+    let seq = coord.create_sequence().unwrap();
+    let other = coord.create_sequence().unwrap();
+    let mut st = op.new_state(8);
+    let mut st_other = op.new_state(8);
+    let mut rng = Rng::new(412);
+    let toks: Vec<(Mat, Mat, Mat)> = (0..3)
+        .map(|_| {
+            (
+                Mat::randn(1, 16, &mut rng),
+                Mat::randn(1, 16, &mut rng),
+                Mat::randn(1, 8, &mut rng),
+            )
+        })
+        .collect();
+    let oq = Mat::randn(1, 16, &mut rng);
+    let okk = Mat::randn(1, 16, &mut rng);
+    let ov = Mat::randn(1, 8, &mut rng);
+    let mut rxs = Vec::new();
+    for (q, k, v) in &toks {
+        let ch = AttendChunk { seq, q: q.clone(), k: k.clone(), v: v.clone() };
+        rxs.push(coord.submit(ch).unwrap());
+    }
+    let ch = AttendChunk { seq: other, q: oq.clone(), k: okk.clone(), v: ov.clone() };
+    rxs.push(coord.submit(ch).unwrap());
+    let mut out = vec![0.0f32; 8];
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let res = rx.recv().unwrap().unwrap();
+        if i < 3 {
+            let (q, k, v) = &toks[i];
+            op.decode(&mut st, q.row(0), k.row(0), v.row(0), &mut out).unwrap();
+        } else {
+            op.decode(&mut st_other, oq.row(0), okk.row(0), ov.row(0), &mut out).unwrap();
+        }
+        assert_eq!(res.y.data, out, "reply {i}");
+    }
+    assert_eq!(coord.sequence_len(seq).unwrap(), Some(3));
+    assert_eq!(coord.sequence_len(other).unwrap(), Some(1));
+    coord.shutdown().unwrap();
+}

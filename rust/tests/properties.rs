@@ -5,7 +5,7 @@
 use slay::kernels::config::{Fusion, Mechanism, PolyMethod, SlayConfig};
 use slay::kernels::engine::{self, StreamingState};
 use slay::kernels::slay::{QKFeatures, SlayFeatures};
-use slay::kernels::{build, yat, MultiHeadAttention};
+use slay::kernels::{build, build_with_window, yat, AttnState, MultiHeadAttention};
 use slay::math::linalg::{Mat, MatView, Scratch};
 use slay::math::rng::Rng;
 use slay::util::quickprop::{check, Shrink};
@@ -592,6 +592,100 @@ fn slay_map_into_strided_bit_identical_to_map_per_fusion() {
             }
         }
     }
+}
+
+#[test]
+fn prop_fused_decode_batch_bit_identical_to_sequential() {
+    // ADR-005's core contract: ONE `decode_batch_with` call over B
+    // sequences — each at its OWN randomized position (the cosformer
+    // per-row-position case; windowed baselines past their wrap point) —
+    // reproduces the sequential `decode_with` loop bit-for-bit, for every
+    // mechanism family including the signed-feature config whose ordering
+    // ADR-003 pins, and keeps doing so across rounds (states stay equal).
+    check(
+        11,
+        24,
+        |rng| (rng.below(7), 1 + rng.below(6), rng.below(10_000)),
+        |&(mech_idx, b, seed)| {
+            let d = 8;
+            let mech = [
+                Mechanism::Slay(SlayConfig::default()),
+                Mechanism::Slay(SlayConfig {
+                    poly: PolyMethod::RandomMaclaurin,
+                    n_poly: 4,
+                    ..Default::default()
+                }),
+                Mechanism::Favor { m_features: 16, seed: 3 },
+                Mechanism::EluLinear,
+                Mechanism::Cosformer,
+                Mechanism::Standard,
+                Mechanism::YatSpherical { eps: 1e-3 },
+            ][mech_idx]
+                .clone();
+            // window 5 < the longest prefill below, so quadratic sessions
+            // exercise wrapped (sliding) windows too
+            let op = build_with_window(&mech, d, 64, 5).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(5000 + seed as u64);
+            let mut seq_states: Vec<AttnState> = (0..b).map(|_| op.new_state(d)).collect();
+            let mut fused_states: Vec<AttnState> = (0..b).map(|_| op.new_state(d)).collect();
+            for i in 0..b {
+                let len = rng.below(8); // staggered positions, some empty
+                if len == 0 {
+                    continue;
+                }
+                let q = Mat::randn(len, d, &mut rng);
+                let k = Mat::randn(len, d, &mut rng);
+                let v = Mat::randn(len, d, &mut rng);
+                op.prefill(&mut seq_states[i], q.view(), k.view(), v.view())
+                    .map_err(|e| e.to_string())?;
+                op.prefill(&mut fused_states[i], q.view(), k.view(), v.view())
+                    .map_err(|e| e.to_string())?;
+            }
+            let mut scratch = Scratch::new();
+            for round in 0..3 {
+                let q = Mat::randn(b, d, &mut rng);
+                let k = Mat::randn(b, d, &mut rng);
+                let v = Mat::randn(b, d, &mut rng);
+                let mut want = Mat::zeros(b, d);
+                for i in 0..b {
+                    op.decode_with(
+                        &mut scratch,
+                        &mut seq_states[i],
+                        q.row(i),
+                        k.row(i),
+                        v.row(i),
+                        want.row_mut(i),
+                    )
+                    .map_err(|e| e.to_string())?;
+                }
+                let mut got = Mat::zeros(b, d);
+                {
+                    let mut refs: Vec<&mut AttnState> = fused_states.iter_mut().collect();
+                    op.decode_batch_with(
+                        &mut scratch,
+                        &mut refs,
+                        q.view(),
+                        k.view(),
+                        v.view(),
+                        got.view_mut(),
+                    )
+                    .map_err(|e| e.to_string())?;
+                }
+                if got.data != want.data {
+                    return Err(format!(
+                        "{} b={b} round {round}: fused != sequential decode",
+                        mech.name()
+                    ));
+                }
+                for (i, (a, f)) in seq_states.iter().zip(fused_states.iter()).enumerate() {
+                    if a.len() != f.len() {
+                        return Err(format!("{} state {i}: length diverged", mech.name()));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
