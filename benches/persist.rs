@@ -148,6 +148,7 @@ fn main() {
         max_sequences: 8,
         memory_budget: per_seq,
         spill_dir: Some(spill_dir.clone()),
+        prefix_cache_budget: 0,
     });
     let mut rng = Rng::new(23);
     let q = Mat::randn(ctx, d, &mut rng);

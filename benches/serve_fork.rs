@@ -1,0 +1,243 @@
+//! Session forking + shared-prefix cache benchmark (ADR-006) — emitted
+//! machine-readably as `results/BENCH_fork.json`.
+//!
+//! Two questions:
+//! * **Fork latency vs session length.** Linear mechanisms clone a
+//!   constant-size `(S, z)` pair, so forking must stay flat no matter how
+//!   many tokens the parent absorbed; windowed-quadratic mechanisms fork
+//!   O(pages) `Arc` refcounts, bounded by the window.
+//! * **Warm vs cold prefix cache.** N sessions opening with a shared
+//!   prefix should pay one prefill for the shared chunks. Measured as
+//!   prefill tokens/s at shared-prefix fractions {0, 0.5, 0.9}, cold
+//!   (cache disabled) vs warm (cache seeded by a prior session).
+//!
+//! This doubles as the ADR-006 acceptance smoke ci.sh runs: warm prefill
+//! at the 0.9 shared fraction must finish in ≤ 25% of the cold time, and
+//! `prefix_hits` must show the cache actually participated.
+//!
+//! Env knobs:
+//! * `SLAY_BENCH_SMOKE=1` — tiny sizes; ci.sh uses this to exercise the
+//!   whole path and the JSON emission on every run.
+
+use slay::coordinator::request::AttendChunk;
+use slay::coordinator::state::StoreConfig;
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::build_with_window;
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::util::benchkit::{fmt_ms, time_budget, write_json, Table};
+use slay::util::json::Json;
+use std::time::{Duration, Instant};
+
+const D: usize = 32;
+const WINDOW: usize = 256;
+
+fn coord_cfg(prefix_budget: usize) -> CoordinatorConfig {
+    CoordinatorConfig {
+        mechanism: Mechanism::Slay(SlayConfig::default()),
+        d_head: D,
+        d_v: D,
+        horizon: 65_536,
+        workers: 1, // one shard, so warm sessions surely see the cache
+        // sequential single-session prefills: don't let the batch-forming
+        // wait pollute the warm/cold ratio with scheduler latency
+        max_batch: 1,
+        max_wait: Duration::from_micros(1),
+        store: StoreConfig {
+            max_sequences: 512,
+            memory_budget: 256 << 20,
+            spill_dir: None,
+            prefix_cache_budget: prefix_budget,
+        },
+        ..CoordinatorConfig::default()
+    }
+}
+
+/// Feed one session `shared` hash-identical chunks then `tail` fresh
+/// random ones; returns the wall time for the whole prefill.
+fn prefill_session(
+    coord: &Coordinator,
+    shared: &[AttendChunk],
+    n_shared: usize,
+    n_tail: usize,
+    chunk_len: usize,
+    rng: &mut Rng,
+) -> Duration {
+    let seq = coord.create_sequence().unwrap();
+    let tails: Vec<(Mat, Mat, Mat)> = (0..n_tail)
+        .map(|_| {
+            (
+                Mat::randn(chunk_len, D, rng),
+                Mat::randn(chunk_len, D, rng),
+                Mat::randn(chunk_len, D, rng),
+            )
+        })
+        .collect();
+    let t0 = Instant::now();
+    for c in shared.iter().take(n_shared) {
+        coord
+            .attend(AttendChunk { seq, q: c.q.clone(), k: c.k.clone(), v: c.v.clone() })
+            .unwrap();
+    }
+    for (q, k, v) in tails {
+        coord.attend(AttendChunk { seq, q, k, v }).unwrap();
+    }
+    t0.elapsed()
+}
+
+fn main() {
+    let smoke = std::env::var("SLAY_BENCH_SMOKE").is_ok();
+    let budget = if smoke {
+        Duration::from_millis(60)
+    } else {
+        Duration::from_millis(400)
+    };
+
+    // ---- fork latency vs session length ------------------------------
+    let lens: &[usize] = if smoke { &[64, 256] } else { &[256, 1024, 4096] };
+    let mut fork_entries: Vec<Json> = Vec::new();
+    let mut fork_table = Table::new(
+        "Fork latency vs session length (ADR-006; linear should stay flat)",
+        &["Mechanism", "Session len", "fork µs", "state KiB"],
+    );
+    for (name, mech) in [
+        ("slay", Mechanism::Slay(SlayConfig::default())),
+        ("standard", Mechanism::Standard),
+    ] {
+        let op = build_with_window(&mech, D, 65_536, WINDOW).unwrap();
+        for &len in lens {
+            let mut rng = Rng::new(31 + len as u64);
+            let mut parent = op.new_state(D);
+            let q = Mat::randn(len, D, &mut rng);
+            let k = Mat::randn(len, D, &mut rng);
+            let v = Mat::randn(len, D, &mut rng);
+            op.prefill(&mut parent, q.view(), k.view(), v.view()).unwrap();
+            let t = time_budget(&format!("{name} fork len={len}"), budget, || {
+                std::hint::black_box(parent.fork());
+            });
+            let us = t.mean_ms * 1e3;
+            fork_table.row(vec![
+                name.into(),
+                len.to_string(),
+                format!("{us:.2}"),
+                format!("{:.1}", parent.capacity_bytes() as f64 / 1024.0),
+            ]);
+            fork_entries.push(Json::obj(vec![
+                ("mechanism", Json::Str(name.to_string())),
+                ("session_len", Json::Num(len as f64)),
+                ("fork_us", Json::Num(us)),
+                ("state_bytes", Json::Num(parent.capacity_bytes() as f64)),
+            ]));
+        }
+    }
+    fork_table.print();
+
+    // ---- warm vs cold prefill at shared-prefix fractions -------------
+    let (n_chunks, chunk_len, reps) =
+        if smoke { (10usize, 128usize, 3usize) } else { (10, 256, 5) };
+    let total_tokens = n_chunks * chunk_len;
+    let mut rng = Rng::new(7177);
+    // one pool of shared chunks; fraction f uses the first f*n of them
+    let shared: Vec<AttendChunk> = (0..n_chunks)
+        .map(|_| AttendChunk {
+            seq: slay::coordinator::request::SeqId(0), // template only
+            q: Mat::randn(chunk_len, D, &mut rng),
+            k: Mat::randn(chunk_len, D, &mut rng),
+            v: Mat::randn(chunk_len, D, &mut rng),
+        })
+        .collect();
+
+    let mut prefill_entries: Vec<Json> = Vec::new();
+    let mut warm_over_cold_at_09 = f64::NAN;
+    let mut table = Table::new(
+        "Prefill throughput, warm vs cold prefix cache (ADR-006)",
+        &["Shared", "cold ms", "warm ms", "warm/cold", "warm tok/s", "hits"],
+    );
+    for &fraction in &[0.0f64, 0.5, 0.9] {
+        let n_shared = (fraction * n_chunks as f64).round() as usize;
+        let n_tail = n_chunks - n_shared;
+
+        // cold: cache disabled — every session computes every chunk
+        let cold = Coordinator::start(coord_cfg(0)).unwrap();
+        let mut cold_ms = 0.0;
+        for _ in 0..reps {
+            cold_ms +=
+                prefill_session(&cold, &shared, n_shared, n_tail, chunk_len, &mut rng).as_secs_f64()
+                    * 1e3;
+        }
+        cold_ms /= reps as f64;
+        assert_eq!(cold.metrics().prefix_hits, 0);
+        cold.shutdown().unwrap();
+
+        // warm: one seeding session populates the cache, then measure
+        let warm = Coordinator::start(coord_cfg(256 << 20)).unwrap();
+        prefill_session(&warm, &shared, n_shared, n_tail, chunk_len, &mut rng);
+        let mut warm_ms = 0.0;
+        for _ in 0..reps {
+            warm_ms +=
+                prefill_session(&warm, &shared, n_shared, n_tail, chunk_len, &mut rng).as_secs_f64()
+                    * 1e3;
+        }
+        warm_ms /= reps as f64;
+        let hits = warm.metrics().prefix_hits;
+        if fraction > 0.0 {
+            assert!(
+                hits >= (reps * n_shared) as u64,
+                "shared fraction {fraction}: cache never participated (hits {hits})"
+            );
+        }
+        warm.shutdown().unwrap();
+
+        let ratio = warm_ms / cold_ms;
+        if fraction == 0.9 {
+            warm_over_cold_at_09 = ratio;
+        }
+        table.row(vec![
+            format!("{fraction:.1}"),
+            fmt_ms(cold_ms),
+            fmt_ms(warm_ms),
+            format!("{ratio:.3}"),
+            format!("{:.0}", total_tokens as f64 / (warm_ms / 1e3)),
+            hits.to_string(),
+        ]);
+        for (mode, ms) in [("cold", cold_ms), ("warm", warm_ms)] {
+            prefill_entries.push(Json::obj(vec![
+                ("shared_fraction", Json::Num(fraction)),
+                ("mode", Json::Str(mode.to_string())),
+                ("mean_ms", Json::Num(ms)),
+                ("tokens_per_s", Json::Num(total_tokens as f64 / (ms / 1e3))),
+                ("prefix_hits", Json::Num(if mode == "warm" { hits as f64 } else { 0.0 })),
+            ]));
+        }
+    }
+    table.print();
+
+    write_json(
+        "BENCH_fork.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("serve_fork".into())),
+            ("smoke", Json::Bool(smoke)),
+            ("d_head", Json::Num(D as f64)),
+            ("window", Json::Num(WINDOW as f64)),
+            ("prefill_tokens", Json::Num(total_tokens as f64)),
+            ("fork_latency", Json::Arr(fork_entries)),
+            ("prefill", Json::Arr(prefill_entries)),
+            ("warm_over_cold_at_0.9", Json::Num(warm_over_cold_at_09)),
+        ]),
+    )
+    .unwrap();
+
+    // ADR-006 acceptance gate: 90% shared prefix ⇒ warm prefill in ≤ 25%
+    // of the cold time (a hash + state fork replaces 9 of 10 chunk
+    // computations).
+    assert!(
+        warm_over_cold_at_09 <= 0.25,
+        "warm prefill at 0.9 shared fraction took {:.1}% of cold (gate: ≤ 25%)",
+        warm_over_cold_at_09 * 100.0
+    );
+    println!(
+        "\nwarm/cold @ 0.9 shared = {:.3} (gate ≤ 0.25) — fork + prefix-cache smoke passed",
+        warm_over_cold_at_09
+    );
+}

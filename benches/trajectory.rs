@@ -1,0 +1,186 @@
+//! Perf-trajectory roller (ROADMAP item 1, committed perf trajectory):
+//! collects the headline throughput numbers out of every
+//! `results/BENCH_*.json` the smoke runs just emitted, appends them as one
+//! entry to the **tracked** `BENCH_TRAJECTORY.json`, and fails when a
+//! number regressed past the tolerance against the previous entry.
+//!
+//! Metric keys are content-addressed (`BENCH_decode.slay_batch8_fused.
+//! tokens_per_s`), built from each entry's identifying fields rather than
+//! its array position, so reordering or extending a bench never
+//! cross-compares unrelated rows — unmatched keys are simply not gated.
+//!
+//! Env knobs:
+//! * `SLAY_RESULTS`         — where to read BENCH_*.json (default `results`)
+//! * `SLAY_TRAJECTORY`      — trajectory file (default `BENCH_TRAJECTORY.json`)
+//! * `SLAY_BENCH_TOLERANCE` — allowed relative drop per metric before the
+//!   gate trips (default 0.5; smoke timings on shared CI boxes are noisy,
+//!   so the default only catches step-function regressions)
+
+use slay::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Numeric leaves worth tracking across PRs — all higher-is-better rates.
+const THROUGHPUT_KEYS: &[&str] = &["tokens_per_s", "toks_per_s", "seqs_per_s", "mb_per_s"];
+
+/// Identifying fields an entry object may carry, in label order.
+const LABEL_STRS: &[&str] = &["mechanism", "engine", "op", "mode"];
+const LABEL_NUMS: &[&str] = &["batch", "l", "session_len", "shared_fraction"];
+
+fn label_of(map: &BTreeMap<String, Json>) -> String {
+    let mut parts = Vec::new();
+    for k in LABEL_STRS {
+        if let Some(Json::Str(s)) = map.get(*k) {
+            parts.push(s.clone());
+        }
+    }
+    for k in LABEL_NUMS {
+        if let Some(Json::Num(n)) = map.get(*k) {
+            parts.push(format!("{k}{n}"));
+        }
+    }
+    parts.join("_")
+}
+
+fn collect(prefix: &str, j: &Json, out: &mut BTreeMap<String, f64>) {
+    match j {
+        Json::Obj(map) => {
+            let label = label_of(map);
+            let scope =
+                if label.is_empty() { prefix.to_string() } else { format!("{prefix}.{label}") };
+            for (k, v) in map {
+                if let Json::Num(x) = v {
+                    if THROUGHPUT_KEYS.contains(&k.as_str()) {
+                        out.insert(format!("{scope}.{k}"), *x);
+                        continue;
+                    }
+                }
+                collect(&scope, v, out);
+            }
+        }
+        Json::Arr(items) => {
+            for v in items {
+                collect(prefix, v, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn main() {
+    let results =
+        PathBuf::from(std::env::var("SLAY_RESULTS").unwrap_or_else(|_| "results".into()));
+    let traj_path = PathBuf::from(
+        std::env::var("SLAY_TRAJECTORY").unwrap_or_else(|_| "BENCH_TRAJECTORY.json".into()),
+    );
+    let tolerance: f64 = std::env::var("SLAY_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.5);
+
+    // ---- harvest the current run's numbers ---------------------------
+    let mut files: Vec<PathBuf> = std::fs::read_dir(&results)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok().map(|e| e.path()))
+                .filter(|p| {
+                    p.file_name()
+                        .and_then(|n| n.to_str())
+                        .map(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                        .unwrap_or(false)
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    files.sort();
+    if files.is_empty() {
+        eprintln!(
+            "trajectory: no BENCH_*.json under {} — run the bench smokes first",
+            results.display()
+        );
+        std::process::exit(1);
+    }
+    let mut metrics: BTreeMap<String, f64> = BTreeMap::new();
+    let mut smoke = false;
+    for path in &files {
+        let text = std::fs::read_to_string(path).unwrap();
+        let j = match Json::parse(&text) {
+            Ok(j) => j,
+            Err(e) => {
+                eprintln!("trajectory: skipping unparseable {}: {e}", path.display());
+                continue;
+            }
+        };
+        if let Some(Json::Bool(true)) = j.get("smoke") {
+            smoke = true;
+        }
+        let stem = path.file_stem().unwrap().to_str().unwrap().to_string();
+        collect(&stem, &j, &mut metrics);
+    }
+
+    // ---- load the committed trajectory and diff vs its last entry ----
+    let mut entries: Vec<Json> = match std::fs::read_to_string(&traj_path) {
+        Ok(text) => match Json::parse(&text) {
+            Ok(Json::Obj(mut top)) => match top.remove("entries") {
+                Some(Json::Arr(v)) => v,
+                _ => Vec::new(),
+            },
+            _ => Vec::new(),
+        },
+        Err(_) => Vec::new(),
+    };
+    let mut regressions: Vec<String> = Vec::new();
+    let mut compared = 0usize;
+    if let Some(Json::Obj(last)) = entries.last() {
+        if let Some(Json::Obj(prev)) = last.get("metrics") {
+            for (k, new_v) in &metrics {
+                let Some(Json::Num(old_v)) = prev.get(k) else { continue };
+                compared += 1;
+                if *old_v > 0.0 && *new_v < *old_v * (1.0 - tolerance) {
+                    regressions.push(format!(
+                        "{k}: {old_v:.1} -> {new_v:.1} ({:.0}% drop > {:.0}% tolerance)",
+                        (1.0 - *new_v / *old_v) * 100.0,
+                        tolerance * 100.0
+                    ));
+                }
+            }
+        }
+    }
+
+    // ---- append this run (recorded even when the gate trips, so the
+    // ---- committed history shows the regression) ---------------------
+    let unix_time = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let metric_obj: BTreeMap<String, Json> =
+        metrics.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect();
+    entries.push(Json::obj(vec![
+        ("run", Json::Num(entries.len() as f64 + 1.0)),
+        ("unix_time", Json::Num(unix_time as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("sources", Json::Num(files.len() as f64)),
+        ("metrics", Json::Obj(metric_obj)),
+    ]));
+    let n_entries = entries.len();
+    std::fs::write(
+        &traj_path,
+        Json::obj(vec![("entries", Json::Arr(entries))]).to_pretty(),
+    )
+    .unwrap();
+    println!(
+        "trajectory: {} metrics from {} files -> {} (entry {}, {} gated against previous)",
+        metrics.len(),
+        files.len(),
+        traj_path.display(),
+        n_entries,
+        compared,
+    );
+
+    if !regressions.is_empty() {
+        eprintln!("trajectory: {} metric(s) regressed past tolerance:", regressions.len());
+        for r in &regressions {
+            eprintln!("  {r}");
+        }
+        std::process::exit(1);
+    }
+}

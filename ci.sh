@@ -23,6 +23,15 @@
 #   * SLAY_BENCH_SMOKE=1 serve_decode  (fused vs per-item cross-session
 #                                       decode smoke of ADR-005; asserts
 #                                       results/BENCH_decode.json lands)
+#   * SLAY_BENCH_SMOKE=1 serve_fork    (COW fork + shared-prefix cache
+#                                       smoke of ADR-006; asserts the
+#                                       warm/cold ≤ 0.25 acceptance gate
+#                                       and results/BENCH_fork.json)
+#   * trajectory                       (rolls the smokes' BENCH_*.json
+#                                       into the tracked
+#                                       BENCH_TRAJECTORY.json and fails
+#                                       on a > SLAY_BENCH_TOLERANCE drop
+#                                       vs the previous entry)
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -57,5 +66,14 @@ echo "== serve_decode smoke (fused vs per-item decode; emits BENCH_decode.json) 
 rm -f "$RESULTS_DIR/BENCH_decode.json"
 SLAY_BENCH_SMOKE=1 cargo bench --bench serve_decode
 test -f "$RESULTS_DIR/BENCH_decode.json" || { echo "BENCH_decode.json missing"; exit 1; }
+
+echo "== serve_fork smoke (COW fork + prefix cache; emits BENCH_fork.json) =="
+rm -f "$RESULTS_DIR/BENCH_fork.json"
+SLAY_BENCH_SMOKE=1 cargo bench --bench serve_fork
+test -f "$RESULTS_DIR/BENCH_fork.json" || { echo "BENCH_fork.json missing"; exit 1; }
+
+echo "== perf trajectory (appends BENCH_TRAJECTORY.json, diffs vs previous entry) =="
+cargo bench --bench trajectory
+test -f "${SLAY_TRAJECTORY:-BENCH_TRAJECTORY.json}" || { echo "BENCH_TRAJECTORY.json missing"; exit 1; }
 
 echo "ci.sh done"

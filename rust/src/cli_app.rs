@@ -61,6 +61,10 @@ fn print_help() {
                                          to write named snapshots under this root\n\
                        --restore dir     resume a coordinator snapshot, with a possibly\n\
                                          different --workers count (resharding)\n\
+                       --max-conns N     shed TCP connections beyond N with a JSON\n\
+                                         error instead of spawning (default 1024)\n\
+                       --prefix-cache-mb N  shared-prefix cache budget in MiB\n\
+                                         (default 64; 0 disables the cache)\n\
          slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
     );
 }
@@ -70,7 +74,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "mechanism", "workers", "max-batch", "max-wait-us", "queue-cap", "d-head", "d-v",
         "seqs", "chunks", "chunk-len", "eps", "r-nodes", "n-poly", "d-prf", "poly",
         "fusion", "seed", "listen", "duration-s", "horizon", "window", "spill-dir",
-        "restore", "snapshot-root",
+        "restore", "snapshot-root", "max-conns", "prefix-cache-mb",
     ])?;
     let mut cfg = config::coordinator_from_args(args)?;
 
@@ -101,8 +105,9 @@ fn serve(args: &Args) -> anyhow::Result<()> {
     // protocol instead of running the synthetic workload.
     if let Some(addr) = args.get("listen") {
         let duration = args.u64_or("duration-s", 0)?;
+        let max_conns = args.usize_or("max-conns", 1024)?;
         let coord = std::sync::Arc::new(start_coord(cfg)?);
-        let server = crate::coordinator::server::Server::start(addr, coord)?;
+        let server = crate::coordinator::server::Server::start(addr, coord, max_conns)?;
         println!("listening on {} (JSON-lines; see coordinator::server docs)", server.addr);
         if duration == 0 {
             loop {

@@ -42,7 +42,7 @@ pub fn mechanism_from_args(args: &Args) -> anyhow::Result<Mechanism> {
 
 /// CoordinatorConfig from flags (`--workers`, `--max-batch`,
 /// `--max-wait-us`, `--queue-cap`, `--d-head`, `--d-v`, `--horizon`,
-/// `--window`, `--spill-dir`).
+/// `--window`, `--spill-dir`, `--prefix-cache-mb`).
 pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     let mut cfg = CoordinatorConfig {
         mechanism: mechanism_from_args(args)?,
@@ -62,6 +62,10 @@ pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     if let Some(dir) = args.get("spill-dir") {
         cfg.store.spill_dir = Some(std::path::PathBuf::from(dir));
     }
+    // Shared-prefix cache byte budget (ADR-006), in MiB for the flag;
+    // `--prefix-cache-mb 0` disables the cache entirely.
+    cfg.store.prefix_cache_budget =
+        args.usize_or("prefix-cache-mb", cfg.store.prefix_cache_budget >> 20)? << 20;
     if let Some(dir) = args.get("snapshot-root") {
         cfg.snapshot_root = Some(std::path::PathBuf::from(dir));
     }
@@ -87,6 +91,7 @@ pub fn coordinator_to_json(cfg: &CoordinatorConfig) -> Json {
                 None => Json::Null,
             },
         ),
+        ("prefix_cache_budget", Json::Num(cfg.store.prefix_cache_budget as f64)),
     ])
 }
 
@@ -162,6 +167,22 @@ mod tests {
         let d = coordinator_from_args(&parse(&["x"])).unwrap();
         assert!(d.store.spill_dir.is_none());
         assert_eq!(coordinator_to_json(&d).get("spill_dir"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn prefix_cache_flag_sets_budget_in_mib_and_zero_disables() {
+        let c = coordinator_from_args(&parse(&["x", "--prefix-cache-mb", "8"])).unwrap();
+        assert_eq!(c.store.prefix_cache_budget, 8 << 20);
+        let off = coordinator_from_args(&parse(&["x", "--prefix-cache-mb", "0"])).unwrap();
+        assert_eq!(off.store.prefix_cache_budget, 0);
+        // default: the store's own default budget survives untouched
+        let d = coordinator_from_args(&parse(&["x"])).unwrap();
+        assert_eq!(
+            d.store.prefix_cache_budget,
+            crate::coordinator::state::StoreConfig::default().prefix_cache_budget
+        );
+        let j = coordinator_to_json(&c);
+        assert_eq!(j.get("prefix_cache_budget").unwrap().as_usize(), Some(8 << 20));
     }
 
     #[test]

@@ -34,6 +34,26 @@ pub struct Metrics {
     pub fused_decode_rows: AtomicU64,
     /// Largest fused decode block seen (high-water mark, `fetch_max`).
     pub max_fused_batch: AtomicU64,
+    /// Session forks completed (ADR-006): live or spilled states cloned
+    /// under a fresh sequence id.
+    pub forks: AtomicU64,
+    /// Prefill chunks answered from the shared-prefix cache (ADR-006):
+    /// the chunk's compute was skipped entirely…
+    pub prefix_hits: AtomicU64,
+    /// …vs prefill chunks that consulted the cache and computed normally
+    /// (hits / (hits + misses) is the cache's participation rate).
+    pub prefix_misses: AtomicU64,
+    /// Q/K/V payload bytes whose prefill compute the prefix cache skipped
+    /// (cumulative — the "N sessions pay one prefill" number).
+    pub prefix_bytes_saved: AtomicU64,
+    /// Bytes currently held by the shard prefix caches (gauge, `store`d
+    /// on every insert/evict rather than accumulated).
+    pub prefix_cache_bytes: AtomicU64,
+    /// TCP connections currently being served (gauge; the `--max-conns`
+    /// shed threshold applies to this).
+    pub active_connections: AtomicU64,
+    /// Connections shed at accept because `--max-conns` was reached.
+    pub shed_connections: AtomicU64,
     /// Latency reservoir (ms) — bounded, replace-random once full.
     latencies: Mutex<Vec<f64>>,
 }
@@ -84,6 +104,13 @@ impl Metrics {
             fused_decode_batches: self.fused_decode_batches.load(Ordering::Relaxed),
             fused_decode_rows: self.fused_decode_rows.load(Ordering::Relaxed),
             max_fused_batch: self.max_fused_batch.load(Ordering::Relaxed),
+            forks: self.forks.load(Ordering::Relaxed),
+            prefix_hits: self.prefix_hits.load(Ordering::Relaxed),
+            prefix_misses: self.prefix_misses.load(Ordering::Relaxed),
+            prefix_bytes_saved: self.prefix_bytes_saved.load(Ordering::Relaxed),
+            prefix_cache_bytes: self.prefix_cache_bytes.load(Ordering::Relaxed),
+            active_connections: self.active_connections.load(Ordering::Relaxed),
+            shed_connections: self.shed_connections.load(Ordering::Relaxed),
             latency_p50_ms: p50,
             latency_p95_ms: p95,
             latency_mean_ms: mean,
@@ -109,6 +136,13 @@ pub struct Snapshot {
     pub fused_decode_batches: u64,
     pub fused_decode_rows: u64,
     pub max_fused_batch: u64,
+    pub forks: u64,
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_bytes_saved: u64,
+    pub prefix_cache_bytes: u64,
+    pub active_connections: u64,
+    pub shed_connections: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_mean_ms: f64,
@@ -154,6 +188,13 @@ impl Snapshot {
             ("fused_decode_rows", Json::Num(self.fused_decode_rows as f64)),
             ("mean_fused_batch_size", Json::Num(self.mean_fused_batch_size())),
             ("max_fused_batch", Json::Num(self.max_fused_batch as f64)),
+            ("forks", Json::Num(self.forks as f64)),
+            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
+            ("prefix_misses", Json::Num(self.prefix_misses as f64)),
+            ("prefix_bytes_saved", Json::Num(self.prefix_bytes_saved as f64)),
+            ("prefix_cache_bytes", Json::Num(self.prefix_cache_bytes as f64)),
+            ("active_connections", Json::Num(self.active_connections as f64)),
+            ("shed_connections", Json::Num(self.shed_connections as f64)),
             ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
             ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
             ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
@@ -211,6 +252,34 @@ mod tests {
         assert_eq!(j.get("fused_decode_rows").unwrap().as_usize(), Some(48));
         assert_eq!(j.get("max_fused_batch").unwrap().as_usize(), Some(16));
         assert_eq!(j.get("mean_fused_batch_size").unwrap().as_usize(), Some(12));
+    }
+
+    #[test]
+    fn fork_and_prefix_cache_counters_snapshot_and_serialize() {
+        let m = Metrics::new();
+        m.forks.fetch_add(2, Ordering::Relaxed);
+        m.prefix_hits.fetch_add(9, Ordering::Relaxed);
+        m.prefix_misses.fetch_add(1, Ordering::Relaxed);
+        m.prefix_bytes_saved.fetch_add(4096, Ordering::Relaxed);
+        m.prefix_cache_bytes.store(2048, Ordering::Relaxed);
+        m.active_connections.fetch_add(3, Ordering::Relaxed);
+        m.shed_connections.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.forks, 2);
+        assert_eq!(s.prefix_hits, 9);
+        assert_eq!(s.prefix_misses, 1);
+        assert_eq!(s.prefix_bytes_saved, 4096);
+        assert_eq!(s.prefix_cache_bytes, 2048);
+        assert_eq!(s.active_connections, 3);
+        assert_eq!(s.shed_connections, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("forks").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("prefix_hits").unwrap().as_usize(), Some(9));
+        assert_eq!(j.get("prefix_misses").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("prefix_bytes_saved").unwrap().as_usize(), Some(4096));
+        assert_eq!(j.get("prefix_cache_bytes").unwrap().as_usize(), Some(2048));
+        assert_eq!(j.get("active_connections").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("shed_connections").unwrap().as_usize(), Some(1));
     }
 
     #[test]

@@ -44,6 +44,7 @@
 
 pub mod metrics;
 pub mod persist;
+pub mod prefix;
 pub mod request;
 pub mod scheduler;
 pub mod server;
@@ -192,6 +193,35 @@ impl Coordinator {
         Ok(id)
     }
 
+    /// Clone a live (or spilled) sequence under a freshly allocated id
+    /// (ADR-006): linear states copy `(S, z)` outright, quadratic states
+    /// fork copy-on-write window pages, spilled parents fork by codec-file
+    /// copy without fault-in. The child id is drawn from the same
+    /// allocator as [`Coordinator::create_sequence`] but constrained to
+    /// the parent's shard — a fork is a shard-local O(pages) operation,
+    /// never a cross-shard state transfer. Ids that hash elsewhere are
+    /// simply skipped (the allocator is monotonic; gaps are harmless), at
+    /// an expected cost of `workers` draws.
+    ///
+    /// Errors when the parent is unknown, the child cannot be admitted,
+    /// or the parent is mid-flight in a forming batch (deterministic
+    /// rejection — never a torn clone; retry after its replies arrive).
+    pub fn fork_sequence(&self, parent: SeqId) -> anyhow::Result<SeqId> {
+        let pshard = self.shard(parent);
+        let child = loop {
+            let id = SeqId(self.next_seq.fetch_add(1, Ordering::Relaxed));
+            if self.shard(id) == pshard {
+                break id;
+            }
+        };
+        let (tx, rx) = mpsc::channel();
+        self.senders[pshard]
+            .send(worker::Msg::Fork(parent, child, tx))
+            .map_err(|_| ServeError::Shutdown)?;
+        rx.recv().map_err(|_| ServeError::Shutdown)??;
+        Ok(child)
+    }
+
     /// Release a finished sequence's state.
     pub fn release_sequence(&self, id: SeqId) -> anyhow::Result<bool> {
         let (tx, rx) = mpsc::channel();
@@ -249,6 +279,12 @@ impl Coordinator {
 
     pub fn metrics(&self) -> Snapshot {
         self.metrics.snapshot()
+    }
+
+    /// Shared metrics sink — the TCP server publishes its connection
+    /// gauges (`active_connections`, `shed_connections`) through it.
+    pub(crate) fn metrics_handle(&self) -> Arc<Metrics> {
+        self.metrics.clone()
     }
 
     pub fn config(&self) -> &CoordinatorConfig {

@@ -1,0 +1,295 @@
+//! Shard-local shared-prefix cache (ADR-006).
+//!
+//! Serving trees — chat forks, parallel sampling, best-of-n — share long
+//! prefill prefixes (system prompts, few-shot preambles). For linear
+//! mechanisms the post-chunk session state is the constant-size `(S, z)`
+//! pair, so memoizing "state after this exact chunk sequence" is cheap;
+//! for quadratic mechanisms the snapshot is a copy-on-write window fork
+//! (O(pages) refcounts, see [`AttnState::fork`]). The cache is keyed by a
+//! **rolling hash chained over every chunk a session has absorbed since
+//! creation**: equal keys mean the same (q, k, v) chunk stream from an
+//! empty state, which makes both the post-chunk state *and* the chunk's
+//! attention output `y` reusable verbatim — a hit skips the chunk's
+//! compute entirely and replays the cached output.
+//!
+//! The hash seed folds in the mechanism spec and geometry
+//! ([`prefix_seed`]), and every entry re-checks the mechanism identity
+//! tag at lookup, so a mechanism/geometry mismatch can never replay a
+//! foreign state. Entries are LRU-evicted against a byte budget that the
+//! owning [`SequenceStore`](crate::coordinator::state::SequenceStore)
+//! charges alongside its resident-session accounting — under memory
+//! pressure cache entries are the first thing to go.
+
+use crate::kernels::AttnState;
+use crate::math::linalg::Mat;
+use std::collections::HashMap;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x100_0000_01b3;
+
+/// Chain an FNV-1a rolling hash over `bytes`.
+fn hash_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+fn hash_u64(h: u64, x: u64) -> u64 {
+    hash_bytes(h, &x.to_le_bytes())
+}
+
+fn hash_f32s(mut h: u64, xs: &[f32]) -> u64 {
+    for &x in xs {
+        h = hash_bytes(h, &x.to_le_bytes());
+    }
+    h
+}
+
+/// Hash seed for a serving shard: folds the mechanism spec and geometry
+/// into the chain's starting value, so two workers serving different
+/// mechanisms (or the same mechanism at different dims) can never produce
+/// colliding prefix keys for the same token stream.
+pub fn prefix_seed(mech_spec: &str, d_head: usize, d_v: usize, window: usize) -> u64 {
+    let mut h = hash_bytes(FNV_OFFSET, mech_spec.as_bytes());
+    h = hash_u64(h, d_head as u64);
+    h = hash_u64(h, d_v as u64);
+    hash_u64(h, window as u64)
+}
+
+/// Extend a session's rolling prefix hash over one attend chunk. Covers
+/// the chunk's shape and its full (q, k, v) contents: keys/values define
+/// the successor state, queries define the cached output rows — both must
+/// match for a replay to be sound.
+pub fn roll_chunk(h: u64, q: &Mat, k: &Mat, v: &Mat) -> u64 {
+    let mut h = hash_u64(h, q.rows as u64);
+    h = hash_u64(h, q.cols as u64);
+    h = hash_u64(h, v.cols as u64);
+    h = hash_f32s(h, &q.data);
+    h = hash_f32s(h, &k.data);
+    hash_f32s(h, &v.data)
+}
+
+/// One memoized chunk boundary: the session state *after* absorbing the
+/// hashed chunk stream, plus the last chunk's attention output.
+struct CacheEntry {
+    /// Post-chunk state snapshot (a COW fork — shared pages until a
+    /// writer diverges).
+    state: AttnState,
+    /// The chunk's attention output, replayed verbatim on a hit.
+    y: Mat,
+    /// Tokens absorbed through this boundary (collision/alignment guard).
+    len: usize,
+    /// Byte charge: state capacity + output buffer.
+    bytes: usize,
+    /// Logical LRU clock value at last touch.
+    touch: u64,
+}
+
+/// Rolling-hash keyed, LRU byte-budgeted prefix cache. One per store
+/// shard; `budget = 0` disables it (every call becomes a no-op/miss).
+pub struct PrefixCache {
+    entries: HashMap<u64, CacheEntry>,
+    budget: usize,
+    bytes: usize,
+    tick: u64,
+}
+
+impl PrefixCache {
+    pub fn new(budget: usize) -> Self {
+        PrefixCache { entries: HashMap::new(), budget, bytes: 0, tick: 0 }
+    }
+
+    /// Bytes currently held (what the store charges against its budget).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+
+    /// Cached chunk boundaries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Look up the post-chunk snapshot for rolling hash `h`. Returns a
+    /// forked state (COW — O(pages)) plus a copy of the cached output, or
+    /// `None` when there is no entry, the entry's mechanism tag differs
+    /// from `mech_tag` (mechanism/geometry mismatch — the entry is
+    /// dropped, it can never serve this shard), or its length differs
+    /// from `expect_len` (rolling-hash collision guard).
+    pub fn lookup(&mut self, h: u64, expect_len: usize, mech_tag: u64) -> Option<(AttnState, Mat)> {
+        let entry = self.entries.get_mut(&h)?;
+        if entry.state.mech_tag() != mech_tag {
+            let dead = self.entries.remove(&h).expect("entry just borrowed");
+            self.bytes -= dead.bytes;
+            return None;
+        }
+        if entry.len != expect_len {
+            return None;
+        }
+        self.tick += 1;
+        entry.touch = self.tick;
+        Some((entry.state.fork(), entry.y.clone()))
+    }
+
+    /// Memoize a chunk boundary: `state` is the post-chunk snapshot
+    /// (callers pass a fork), `y` the chunk's output, `len` the tokens
+    /// absorbed through it. Evicts least-recently-touched entries until
+    /// the budget holds; an entry that alone exceeds the budget is not
+    /// admitted.
+    pub fn insert(&mut self, h: u64, state: AttnState, y: Mat, len: usize) {
+        if self.budget == 0 {
+            return;
+        }
+        let bytes = state.capacity_bytes() + y.data.len() * std::mem::size_of::<f32>();
+        if bytes > self.budget {
+            return;
+        }
+        self.tick += 1;
+        if let Some(old) = self
+            .entries
+            .insert(h, CacheEntry { state, y, len, bytes, touch: self.tick })
+        {
+            self.bytes -= old.bytes;
+        }
+        self.bytes += bytes;
+        while self.bytes > self.budget {
+            if !self.evict_one(Some(h)) {
+                break;
+            }
+        }
+    }
+
+    /// Drop the least-recently-touched entry (optionally sparing `keep`,
+    /// the entry an in-progress insert just admitted). Returns false when
+    /// nothing was evictable.
+    fn evict_one(&mut self, keep: Option<u64>) -> bool {
+        let victim = self
+            .entries
+            .iter()
+            .filter(|(k, _)| Some(**k) != keep)
+            .min_by_key(|(_, e)| e.touch)
+            .map(|(k, _)| *k);
+        match victim {
+            Some(k) => {
+                let dead = self.entries.remove(&k).expect("victim exists");
+                self.bytes -= dead.bytes;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Shed entries until the cache holds at most `max_bytes` — the
+    /// store's memory-pressure valve: cache entries are dropped before
+    /// any live session is evicted or spilled.
+    pub fn shrink_to(&mut self, max_bytes: usize) {
+        while self.bytes > max_bytes {
+            if !self.evict_one(None) {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::config::Mechanism;
+    use crate::kernels::{build, AttentionBackend};
+    use crate::math::rng::Rng;
+
+    fn backend() -> Box<dyn AttentionBackend> {
+        build(&Mechanism::EluLinear, 8, 0).unwrap()
+    }
+
+    fn chunk(seed: u64, n: usize) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (Mat::randn(n, 8, &mut rng), Mat::randn(n, 8, &mut rng), Mat::randn(n, 4, &mut rng))
+    }
+
+    #[test]
+    fn rolling_hash_is_order_and_content_sensitive() {
+        let h0 = prefix_seed("elu", 8, 4, 0);
+        let (qa, ka, va) = chunk(1, 4);
+        let (qb, kb, vb) = chunk(2, 4);
+        let hab = roll_chunk(roll_chunk(h0, &qa, &ka, &va), &qb, &kb, &vb);
+        let hba = roll_chunk(roll_chunk(h0, &qb, &kb, &vb), &qa, &ka, &va);
+        assert_ne!(hab, hba, "chunk order must matter");
+        // same stream, same hash
+        let hab2 = roll_chunk(roll_chunk(h0, &qa, &ka, &va), &qb, &kb, &vb);
+        assert_eq!(hab, hab2);
+        // one perturbed value, different hash
+        let mut va2 = va.clone();
+        va2.data[0] += 1.0;
+        assert_ne!(
+            roll_chunk(h0, &qa, &ka, &va),
+            roll_chunk(h0, &qa, &ka, &va2),
+            "contents must matter"
+        );
+        // seed separates mechanisms and geometry
+        assert_ne!(prefix_seed("elu", 8, 4, 0), prefix_seed("slay", 8, 4, 0));
+        assert_ne!(prefix_seed("elu", 8, 4, 0), prefix_seed("elu", 16, 4, 0));
+    }
+
+    #[test]
+    fn lookup_hits_forks_and_guards() {
+        let b = backend();
+        let mut cache = PrefixCache::new(1 << 20);
+        let mut state = b.new_state(4);
+        let (q, k, v) = chunk(3, 4);
+        let y = b.prefill(&mut state, q.view(), k.view(), v.view()).unwrap();
+        let h = roll_chunk(prefix_seed("elu", 8, 4, 0), &q, &k, &v);
+        let tag = state.mech_tag();
+        cache.insert(h, state.fork(), y.clone(), state.len());
+        assert_eq!(cache.len(), 1);
+        assert!(cache.bytes() > 0);
+        // hit: state and output replay verbatim
+        let (got_state, got_y) = cache.lookup(h, 4, tag).expect("hit");
+        assert_eq!(got_state.len(), 4);
+        assert_eq!(got_y, y);
+        // wrong expected length (collision guard) misses without dropping
+        assert!(cache.lookup(h, 5, tag).is_none());
+        assert_eq!(cache.len(), 1);
+        // wrong mechanism tag invalidates the entry outright
+        assert!(cache.lookup(h, 4, tag ^ 1).is_none());
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0);
+    }
+
+    #[test]
+    fn lru_byte_budget_evicts_oldest_and_zero_budget_disables() {
+        let b = backend();
+        let state = b.new_state(4);
+        let (q, k, v) = chunk(4, 2);
+        let y = Mat::zeros(2, 4);
+        let per_entry =
+            state.capacity_bytes() + y.data.len() * std::mem::size_of::<f32>();
+        let tag = state.mech_tag();
+        // budget fits exactly two entries
+        let mut cache = PrefixCache::new(2 * per_entry);
+        let h0 = roll_chunk(prefix_seed("elu", 8, 4, 0), &q, &k, &v);
+        cache.insert(h0, state.fork(), y.clone(), 0);
+        cache.insert(h0 ^ 1, state.fork(), y.clone(), 0);
+        assert_eq!(cache.len(), 2);
+        // touch h0 so h0^1 is the LRU victim
+        assert!(cache.lookup(h0, 0, tag).is_some());
+        cache.insert(h0 ^ 2, state.fork(), y.clone(), 0);
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(h0, 0, tag).is_some(), "recently-touched entry survives");
+        assert!(cache.lookup(h0 ^ 1, 0, tag).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(h0 ^ 2, 0, tag).is_some());
+        // shrink_to sheds everything
+        cache.shrink_to(0);
+        assert!(cache.is_empty());
+        assert_eq!(cache.bytes(), 0);
+        // zero budget: inserts are no-ops
+        let mut off = PrefixCache::new(0);
+        off.insert(h0, state.fork(), y.clone(), 0);
+        assert!(off.is_empty());
+    }
+}

@@ -7,16 +7,24 @@
 //! {"op":"create"}                         -> {"ok":true,"seq":N}
 //! {"op":"attend","seq":N,
 //!  "q":[...],"k":[...],"v":[...],"n":R}   -> {"ok":true,"y":[...],"seq_len":L}
+//! {"op":"decode","seq":N,
+//!  "q":[...],"k":[...],"v":[...]}         -> same as attend with n=1
+//! {"op":"fork","seq":N}                   -> {"ok":true,"seq":C,"seq_parent":N}
 //! {"op":"release","seq":N}                -> {"ok":true,"released":true}
 //! {"op":"metrics"}                        -> {"ok":true,"metrics":{...}}
 //! {"op":"snapshot","dir":"name"}          -> {"ok":true,"sequences":N,
 //!                                             "state_bytes":B,"dir":"..."}
 //! ```
+//! `fork` clones the parent's attention state copy-on-write under a fresh
+//! sequence id (ADR-006); both ids then evolve independently.
 //! `snapshot` writes under the coordinator's configured `snapshot_root`
 //! (`--snapshot-root`); `dir` is a plain directory *name* below it, never
 //! a path — without a root the op is disabled.
-//! Errors: `{"ok":false,"error":"..."}`. One thread per connection; the
-//! coordinator's own backpressure bounds admitted work.
+//! Errors: `{"ok":false,"error":"..."}`. One thread per connection, up to
+//! `max_conns` concurrent; past the cap the server writes a one-line JSON
+//! error and closes instead of spawning (`shed_connections` counts these,
+//! `active_connections` gauges the live handlers). The coordinator's own
+//! backpressure bounds admitted work.
 
 use crate::coordinator::request::{AttendChunk, SeqId};
 use crate::coordinator::Coordinator;
@@ -36,13 +44,20 @@ pub struct Server {
 
 impl Server {
     /// Bind and start serving on `addr` (e.g. "127.0.0.1:0" for an
-    /// ephemeral test port).
-    pub fn start(addr: &str, coord: Arc<Coordinator>) -> anyhow::Result<Server> {
+    /// ephemeral test port). At most `max_conns` connections are handled
+    /// concurrently; excess accepts are shed with a JSON error reply
+    /// instead of spawning an unbounded thread.
+    pub fn start(
+        addr: &str,
+        coord: Arc<Coordinator>,
+        max_conns: usize,
+    ) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
+        let metrics = coord.metrics_handle();
         let accept_thread = std::thread::Builder::new()
             .name("slay-server-accept".into())
             .spawn(move || {
@@ -53,11 +68,24 @@ impl Server {
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            // Only this thread increments the gauge, so a
+                            // plain load-then-add admission check is
+                            // race-free; handlers merely free slots.
+                            if metrics.active_connections.load(Ordering::Relaxed)
+                                >= max_conns as u64
+                            {
+                                metrics.shed_connections.fetch_add(1, Ordering::Relaxed);
+                                shed(stream, max_conns);
+                                continue;
+                            }
                             let _ = stream
                                 .set_read_timeout(Some(std::time::Duration::from_secs(30)));
+                            metrics.active_connections.fetch_add(1, Ordering::Relaxed);
                             let c = coord.clone();
+                            let m = metrics.clone();
                             std::thread::spawn(move || {
                                 let _ = handle_conn(stream, c);
+                                m.active_connections.fetch_sub(1, Ordering::Relaxed);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -67,7 +95,7 @@ impl Server {
                     }
                 }
             })?;
-        crate::log_info!("tcp server listening on {local}");
+        crate::log_info!("tcp server listening on {local} (max {max_conns} connections)");
         Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
     }
 
@@ -87,6 +115,20 @@ impl Drop for Server {
             let _ = h.join();
         }
     }
+}
+
+/// Refuse a connection over the cap: one JSON error line, then close.
+/// Best-effort — a peer that vanished mid-write is already gone.
+fn shed(mut stream: TcpStream, max_conns: usize) {
+    let reply = Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        (
+            "error",
+            Json::Str(format!("server at connection capacity ({max_conns}); retry later")),
+        ),
+    ]);
+    let _ = stream.write_all(reply.to_string().as_bytes());
+    let _ = stream.write_all(b"\n");
 }
 
 fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> anyhow::Result<()> {
@@ -143,6 +185,15 @@ fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
                 ("seq", Json::Num(seq.0 as f64)),
             ]))
         }
+        "fork" => {
+            let parent = seq_id(&req)?;
+            let child = coord.fork_sequence(parent)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("seq", Json::Num(child.0 as f64)),
+                ("seq_parent", Json::Num(parent.0 as f64)),
+            ]))
+        }
         "release" => {
             let seq = seq_id(&req)?;
             let released = coord.release_sequence(seq)?;
@@ -183,9 +234,17 @@ fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
                 ("dir", Json::Str(dir.display().to_string())),
             ]))
         }
-        "attend" => {
+        "attend" | "decode" => {
             let seq = seq_id(&req)?;
-            let n = req.req("n")?.as_usize().unwrap_or(0);
+            // `decode` is single-token sugar: `n` defaults to 1 and, when
+            // given, must be 1 — it shares the attend reply shape.
+            let n = if op == "decode" {
+                let n = req.get("n").and_then(|v| v.as_usize()).unwrap_or(1);
+                anyhow::ensure!(n == 1, "'decode' is single-token (n=1), got n={n}");
+                n
+            } else {
+                req.req("n")?.as_usize().unwrap_or(0)
+            };
             let d_head = coord.config().d_head;
             let d_v = coord.config().d_v;
             let get = |key: &str, cols: usize| -> anyhow::Result<Mat> {
@@ -236,7 +295,7 @@ mod tests {
             })
             .unwrap(),
         );
-        let server = Server::start("127.0.0.1:0", coord.clone()).unwrap();
+        let server = Server::start("127.0.0.1:0", coord.clone(), 1024).unwrap();
         (server, coord)
     }
 
@@ -405,11 +464,104 @@ mod tests {
             })
             .unwrap(),
         );
-        let server = Server::start("127.0.0.1:0", coord).unwrap();
+        let server = Server::start("127.0.0.1:0", coord, 1024).unwrap();
         let stream = TcpStream::connect(server.addr).unwrap();
         let reply = roundtrip(&stream, r#"{"op":"snapshot","dir":"snap"}"#);
         assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
         assert!(reply.get("error").unwrap().as_str().unwrap().contains("disabled"));
+        server.shutdown();
+    }
+
+    #[test]
+    fn fork_op_clones_a_session_over_the_wire() {
+        let (server, coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+
+        let created = roundtrip(&stream, r#"{"op":"create"}"#);
+        let seq = created.get("seq").unwrap().as_usize().unwrap();
+        let ones = vec!["1.0"; 8].join(",");
+        roundtrip(
+            &stream,
+            &format!(
+                r#"{{"op":"attend","seq":{seq},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#
+            ),
+        );
+
+        let forked = roundtrip(&stream, &format!(r#"{{"op":"fork","seq":{seq}}}"#));
+        assert_eq!(forked.get("ok").unwrap().as_bool(), Some(true), "{forked:?}");
+        assert_eq!(forked.get("seq_parent").unwrap().as_usize(), Some(seq));
+        let child = forked.get("seq").unwrap().as_usize().unwrap();
+        assert_ne!(child, seq, "fork must allocate a fresh sequence id");
+
+        // identical continuations on parent and child stay bit-identical
+        let tok = vec!["0.5"; 4].join(",");
+        let mut replies = Vec::new();
+        for id in [seq, child] {
+            let r = roundtrip(
+                &stream,
+                &format!(r#"{{"op":"decode","seq":{id},"q":[{tok}],"k":[{tok}],"v":[{tok}]}}"#),
+            );
+            assert_eq!(r.get("ok").unwrap().as_bool(), Some(true), "{r:?}");
+            assert_eq!(r.get("seq_len").unwrap().as_usize(), Some(3));
+            replies.push(r.get("y").unwrap().as_f32_vec().unwrap());
+        }
+        assert_eq!(replies[0], replies[1], "fork diverged from its parent");
+        assert_eq!(coord.metrics().forks, 1);
+
+        // multi-token decode and unknown parents are protocol errors
+        let bad = roundtrip(
+            &stream,
+            &format!(r#"{{"op":"decode","seq":{seq},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#),
+        );
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+        let unknown = roundtrip(&stream, r#"{"op":"fork","seq":999000}"#);
+        assert_eq!(unknown.get("ok").unwrap().as_bool(), Some(false));
+        server.shutdown();
+    }
+
+    #[test]
+    fn connection_cap_sheds_with_json_error_and_recovers() {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                d_head: 4,
+                d_v: 4,
+                workers: 1,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let server = Server::start("127.0.0.1:0", coord.clone(), 1).unwrap();
+
+        // first connection occupies the single slot; a completed roundtrip
+        // proves its handler (and the gauge increment) is live
+        let first = TcpStream::connect(server.addr).unwrap();
+        let m = roundtrip(&first, r#"{"op":"metrics"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        assert_eq!(coord.metrics().active_connections, 1);
+
+        // second connection is shed with a one-line JSON error, not queued
+        let second = TcpStream::connect(server.addr).unwrap();
+        let mut line = String::new();
+        BufReader::new(second).read_line(&mut line).unwrap();
+        let reply = Json::parse(line.trim()).unwrap();
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        assert!(
+            reply.get("error").unwrap().as_str().unwrap().contains("capacity"),
+            "shed reply should name the cap: {reply:?}"
+        );
+        assert_eq!(coord.metrics().shed_connections, 1);
+        assert_eq!(coord.metrics().active_connections, 1);
+
+        // closing the first frees the slot for a later client
+        drop(first);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+        while coord.metrics().active_connections != 0 {
+            assert!(std::time::Instant::now() < deadline, "slot never freed");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let third = TcpStream::connect(server.addr).unwrap();
+        let m = roundtrip(&third, r#"{"op":"metrics"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
         server.shutdown();
     }
 }

@@ -29,10 +29,25 @@
 //! Duplicate ids are rejected, every requested state is faulted in before
 //! any borrow is handed out, and room-making evictions never touch the
 //! request's own members.
+//!
+//! # Forking and the shared-prefix cache (ADR-006)
+//!
+//! [`SequenceStore::fork`] clones a live sequence under a fresh id:
+//! linear states copy `(S, z)` outright, quadratic states fork their
+//! window as a copy-on-write page table ([`AttnState::fork`]) — and a
+//! *spilled* parent forks by verifying + copying its codec file, no
+//! fault-in. The store also hosts the shard's
+//! [`PrefixCache`](crate::coordinator::prefix::PrefixCache): memoized
+//! post-chunk snapshots keyed by a rolling hash of the prefill stream.
+//! Cache bytes are charged against the same `memory_budget` as resident
+//! sessions, and under pressure cache entries are always shed *before*
+//! any live session is evicted or spilled.
 
 use crate::coordinator::metrics::Metrics;
+use crate::coordinator::prefix::PrefixCache;
 use crate::coordinator::request::SeqId;
 use crate::kernels::AttnState;
+use crate::math::linalg::Mat;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
@@ -44,6 +59,10 @@ struct Entry {
     /// Admission-time capacity charge (constant for the entry's lifetime).
     cap_bytes: usize,
     last_touch: Instant,
+    /// Rolling prefix-hash cursor: `Some(h)` while the sequence's chunk
+    /// stream is still prefix-cacheable, `None` once it diverged (any
+    /// decode step) or its provenance is unknown (snapshot install).
+    prefix_cursor: Option<u64>,
 }
 
 /// Per-sequence snapshot record: `(id, seq_len, serialized bytes)` — what
@@ -56,6 +75,9 @@ struct SpillEntry {
     path: PathBuf,
     cap_bytes: usize,
     len: usize,
+    /// Carried across the spill round-trip so a faulted-in sequence can
+    /// keep extending its cacheable prefix.
+    prefix_cursor: Option<u64>,
 }
 
 /// Store configuration.
@@ -72,11 +94,20 @@ pub struct StoreConfig {
     /// process are swept at startup (they are cache, and nothing tracks
     /// them anymore) — do not point it at a snapshot directory.
     pub spill_dir: Option<PathBuf>,
+    /// Upper bound on shared-prefix cache bytes (ADR-006). The cache is
+    /// *additionally* charged against `memory_budget` alongside resident
+    /// sessions and shed first under pressure; `0` disables caching.
+    pub prefix_cache_budget: usize,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        StoreConfig { max_sequences: 4096, memory_budget: 256 << 20, spill_dir: None }
+        StoreConfig {
+            max_sequences: 4096,
+            memory_budget: 256 << 20,
+            spill_dir: None,
+            prefix_cache_budget: 64 << 20,
+        }
     }
 }
 
@@ -87,6 +118,11 @@ pub struct SequenceStore {
     spilled: HashMap<SeqId, SpillEntry>,
     bytes: usize,
     metrics: Option<Arc<Metrics>>,
+    /// Shard-local shared-prefix cache (ADR-006).
+    prefix: PrefixCache,
+    /// Cache bytes last published into the shared gauge (the gauge sums
+    /// across shards, so each store moves it only by its own delta).
+    prefix_gauge: u64,
 }
 
 impl SequenceStore {
@@ -116,12 +152,15 @@ impl SequenceStore {
                 }
             }
         }
+        let prefix = PrefixCache::new(cfg.prefix_cache_budget);
         SequenceStore {
             cfg,
             seqs: HashMap::new(),
             spilled: HashMap::new(),
             bytes: 0,
             metrics: None,
+            prefix,
+            prefix_gauge: 0,
         }
     }
 
@@ -160,8 +199,9 @@ impl SequenceStore {
             "sequence {id:?} already exists"
         );
         let cap_bytes = state.capacity_bytes();
+        self.shed_cache_for(cap_bytes);
         if self.seqs.len() >= self.cfg.max_sequences
-            || self.bytes + cap_bytes > self.cfg.memory_budget
+            || self.bytes + self.prefix.bytes() + cap_bytes > self.cfg.memory_budget
         {
             self.evict_idle(1);
         }
@@ -171,11 +211,12 @@ impl SequenceStore {
             self.cfg.max_sequences
         );
         anyhow::ensure!(
-            self.bytes + cap_bytes <= self.cfg.memory_budget,
+            self.bytes + self.prefix.bytes() + cap_bytes <= self.cfg.memory_budget,
             "state memory budget exhausted ({} bytes)",
             self.bytes
         );
-        self.seqs.insert(id, Entry { state, cap_bytes, last_touch: Instant::now() });
+        self.seqs
+            .insert(id, Entry { state, cap_bytes, last_touch: Instant::now(), prefix_cursor: None });
         self.bytes += cap_bytes;
         Ok(())
     }
@@ -332,7 +373,15 @@ impl SequenceStore {
         }
         let e = self.seqs.remove(&id).expect("victim is resident");
         self.bytes -= e.cap_bytes;
-        self.spilled.insert(id, SpillEntry { path, cap_bytes: e.cap_bytes, len: e.state.len() });
+        self.spilled.insert(
+            id,
+            SpillEntry {
+                path,
+                cap_bytes: e.cap_bytes,
+                len: e.state.len(),
+                prefix_cursor: e.prefix_cursor,
+            },
+        );
         if let Some(m) = &self.metrics {
             m.spilled.fetch_add(1, Ordering::Relaxed);
             m.bytes_spilled.fetch_add(buf.len() as u64, Ordering::Relaxed);
@@ -361,16 +410,17 @@ impl SequenceStore {
             Some(e) => e.cap_bytes,
             None => return false,
         };
+        self.shed_cache_for(cap_bytes);
         while !self.seqs.is_empty()
             && (self.seqs.len() >= self.cfg.max_sequences
-                || self.bytes + cap_bytes > self.cfg.memory_budget)
+                || self.bytes + self.prefix.bytes() + cap_bytes > self.cfg.memory_budget)
         {
             if self.evict_idle_skipping(1, keep) == 0 {
                 break;
             }
         }
         if self.seqs.len() >= self.cfg.max_sequences
-            || self.bytes + cap_bytes > self.cfg.memory_budget
+            || self.bytes + self.prefix.bytes() + cap_bytes > self.cfg.memory_budget
         {
             crate::log_warn!("no room to fault sequence {:?} back in; leaving it spilled", id);
             return false;
@@ -389,8 +439,15 @@ impl SequenceStore {
             }
         };
         self.bytes += entry.cap_bytes;
-        self.seqs
-            .insert(id, Entry { state, cap_bytes: entry.cap_bytes, last_touch: Instant::now() });
+        self.seqs.insert(
+            id,
+            Entry {
+                state,
+                cap_bytes: entry.cap_bytes,
+                last_touch: Instant::now(),
+                prefix_cursor: entry.prefix_cursor,
+            },
+        );
         if let Some(m) = &self.metrics {
             m.restored_from_spill.fetch_add(1, Ordering::Relaxed);
         }
@@ -431,6 +488,178 @@ impl SequenceStore {
         }
         Ok(out)
     }
+
+    /// Clone a live (or spilled) sequence under a fresh id (ADR-006).
+    ///
+    /// A resident parent forks in O(1) for linear states (the `(S, z)`
+    /// pair copies outright) and O(pages) for quadratic ones (the COW
+    /// window page table clones by refcount), with admission control as
+    /// in [`SequenceStore::create`] — room-making never victimizes the
+    /// parent. A *spilled* parent forks without fault-in: its codec file
+    /// is checksum-verified and copied under the child's spill path, so
+    /// the child is born paged-out and charges no resident bytes.
+    pub fn fork(&mut self, parent: SeqId, child: SeqId) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.seqs.contains_key(&child) && !self.spilled.contains_key(&child),
+            "sequence {child:?} already exists"
+        );
+        if let Some(pe) = self.seqs.get(&parent) {
+            let state = pe.state.fork();
+            let cap_bytes = pe.cap_bytes;
+            let prefix_cursor = pe.prefix_cursor;
+            self.shed_cache_for(cap_bytes);
+            if self.seqs.len() >= self.cfg.max_sequences
+                || self.bytes + self.prefix.bytes() + cap_bytes > self.cfg.memory_budget
+            {
+                self.evict_idle_skipping(1, &[parent]);
+            }
+            anyhow::ensure!(
+                self.seqs.len() < self.cfg.max_sequences,
+                "sequence cap {} reached",
+                self.cfg.max_sequences
+            );
+            anyhow::ensure!(
+                self.bytes + self.prefix.bytes() + cap_bytes <= self.cfg.memory_budget,
+                "state memory budget exhausted ({} bytes)",
+                self.bytes
+            );
+            self.seqs
+                .insert(child, Entry { state, cap_bytes, last_touch: Instant::now(), prefix_cursor });
+            self.bytes += cap_bytes;
+            if let Some(m) = &self.metrics {
+                m.forks.fetch_add(1, Ordering::Relaxed);
+            }
+            return Ok(());
+        }
+        let (src, cap_bytes, len, prefix_cursor) = match self.spilled.get(&parent) {
+            Some(s) => (s.path.clone(), s.cap_bytes, s.len, s.prefix_cursor),
+            None => anyhow::bail!("unknown sequence {parent:?}"),
+        };
+        // The codec file IS the fork payload: verify its checksum and copy
+        // it under the child's path — the parent never faults in.
+        let dir = self
+            .cfg
+            .spill_dir
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("spilled sequence {parent:?} without a spill dir"))?;
+        let buf = std::fs::read(&src)?;
+        AttnState::verify_encoded(&buf)?;
+        let path = crate::coordinator::persist::state_file(&dir, child);
+        std::fs::write(&path, &buf)?;
+        self.spilled.insert(child, SpillEntry { path, cap_bytes, len, prefix_cursor });
+        if let Some(m) = &self.metrics {
+            m.forks.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Swap a *resident* sequence's state in place (the prefix-cache hit
+    /// path), keeping byte accounting and the LRU clock coherent. Errors
+    /// for spilled or unknown sequences — callers touch the state first,
+    /// which faults it in.
+    pub fn replace_state(&mut self, id: SeqId, state: AttnState) -> anyhow::Result<()> {
+        let cap_bytes = state.capacity_bytes();
+        match self.seqs.get_mut(&id) {
+            Some(e) => {
+                self.bytes = self.bytes + cap_bytes - e.cap_bytes;
+                e.state = state;
+                e.cap_bytes = cap_bytes;
+                e.last_touch = Instant::now();
+                Ok(())
+            }
+            None => anyhow::bail!("sequence {id:?} is not resident"),
+        }
+    }
+
+    /// Rolling prefix-hash cursor of a sequence (resident or spilled):
+    /// `Some(h)` while its chunk stream is still cacheable, `None` once
+    /// it diverged or its provenance is unknown.
+    pub fn prefix_cursor(&self, id: SeqId) -> Option<u64> {
+        self.seqs
+            .get(&id)
+            .map(|e| e.prefix_cursor)
+            .or_else(|| self.spilled.get(&id).map(|s| s.prefix_cursor))
+            .flatten()
+    }
+
+    pub fn set_prefix_cursor(&mut self, id: SeqId, cursor: Option<u64>) {
+        if let Some(e) = self.seqs.get_mut(&id) {
+            e.prefix_cursor = cursor;
+        } else if let Some(s) = self.spilled.get_mut(&id) {
+            s.prefix_cursor = cursor;
+        }
+    }
+
+    /// Shared-prefix cache lookup for a *resident* sequence. On a hit the
+    /// session's state is replaced by a fork of the memoized post-chunk
+    /// snapshot, its cursor advances to `h`, and the cached chunk output
+    /// comes back — the caller skips the chunk's compute entirely and
+    /// replays it. `n` is the incoming chunk's token count: the memoized
+    /// boundary must sit exactly at `current_len + n` (collision guard).
+    pub fn prefix_lookup(&mut self, id: SeqId, h: u64, mech_tag: u64, n: usize) -> Option<Mat> {
+        let cur = match self.seqs.get(&id) {
+            Some(e) => e.state.len(),
+            None => return None,
+        };
+        let hit = self.prefix.lookup(h, cur + n, mech_tag);
+        self.publish_cache_gauge();
+        let (state, y) = hit?;
+        self.replace_state(id, state).ok()?;
+        self.set_prefix_cursor(id, Some(h));
+        Some(y)
+    }
+
+    /// Memoize `id`'s current state as the post-chunk snapshot for rolling
+    /// hash `h`, paired with the chunk output `y`. The snapshot is a COW
+    /// fork; its bytes are charged against `memory_budget` and shed first
+    /// under pressure (never displacing a live session).
+    pub fn prefix_insert(&mut self, id: SeqId, h: u64, y: &Mat) {
+        let (state, len) = match self.seqs.get(&id) {
+            Some(e) => (e.state.fork(), e.state.len()),
+            None => return,
+        };
+        self.prefix.insert(h, state, y.clone(), len);
+        if self.bytes + self.prefix.bytes() > self.cfg.memory_budget {
+            let allow = self.cfg.memory_budget.saturating_sub(self.bytes);
+            self.prefix.shrink_to(allow);
+        }
+        self.publish_cache_gauge();
+    }
+
+    /// Bytes currently held by the shared-prefix cache.
+    pub fn prefix_cache_bytes(&self) -> usize {
+        self.prefix.bytes()
+    }
+
+    /// Chunk boundaries currently memoized in the shared-prefix cache.
+    pub fn prefix_cache_len(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Memory-pressure valve: before any session is evicted or spilled to
+    /// admit `cap_bytes`, shed prefix-cache entries (they are pure cache)
+    /// until the combined charge fits — or the cache is empty.
+    fn shed_cache_for(&mut self, cap_bytes: usize) {
+        if self.bytes + self.prefix.bytes() + cap_bytes > self.cfg.memory_budget {
+            let allow = self.cfg.memory_budget.saturating_sub(self.bytes + cap_bytes);
+            self.prefix.shrink_to(allow);
+            self.publish_cache_gauge();
+        }
+    }
+
+    /// Push this shard's cache size into the shared gauge as a delta (the
+    /// gauge sums across worker shards).
+    fn publish_cache_gauge(&mut self) {
+        let now = self.prefix.bytes() as u64;
+        if let Some(m) = &self.metrics {
+            if now > self.prefix_gauge {
+                m.prefix_cache_bytes.fetch_add(now - self.prefix_gauge, Ordering::Relaxed);
+            } else if now < self.prefix_gauge {
+                m.prefix_cache_bytes.fetch_sub(self.prefix_gauge - now, Ordering::Relaxed);
+            }
+        }
+        self.prefix_gauge = now;
+    }
 }
 
 #[cfg(test)]
@@ -450,6 +679,7 @@ mod tests {
             max_sequences: max,
             memory_budget: 1 << 20,
             spill_dir: None,
+            prefix_cache_budget: 1 << 20,
         })
     }
 
@@ -459,6 +689,7 @@ mod tests {
             max_sequences: max,
             memory_budget: budget,
             spill_dir: Some(dir.to_path_buf()),
+            prefix_cache_budget: 1 << 20,
         })
     }
 
@@ -713,5 +944,140 @@ mod tests {
         assert_eq!(m.restored_from_spill.load(Ordering::Relaxed), 1);
         assert_eq!(m.spilled.load(Ordering::Relaxed), 2);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fork_resident_clones_and_accounts() {
+        let b = backend();
+        let per_seq = b.new_state(4).capacity_bytes();
+        let mut s = store(8);
+        let mut rng = Rng::new(21);
+        let q = Mat::randn(3, 16, &mut rng);
+        let k = Mat::randn(3, 16, &mut rng);
+        let v = Mat::randn(3, 4, &mut rng);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        b.prefill(s.get_mut(SeqId(1)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+        s.fork(SeqId(1), SeqId(9)).unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.bytes(), 2 * per_seq);
+        assert_eq!(s.seq_len(SeqId(9)), Some(3));
+        // the fork resumes bit-identically to its parent
+        let mut out_parent = vec![0.0f32; 4];
+        let mut out_child = vec![0.0f32; 4];
+        b.decode(s.get_mut(SeqId(1)).unwrap(), q.row(0), k.row(0), v.row(0), &mut out_parent)
+            .unwrap();
+        b.decode(s.get_mut(SeqId(9)).unwrap(), q.row(0), k.row(0), v.row(0), &mut out_child)
+            .unwrap();
+        assert_eq!(out_parent, out_child);
+        // duplicate child and unknown parent are rejected
+        assert!(s.fork(SeqId(1), SeqId(9)).is_err());
+        assert!(s.fork(SeqId(42), SeqId(10)).is_err());
+    }
+
+    #[test]
+    fn fork_spilled_parent_without_fault_in() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_fork_spilled");
+        let per_seq = b.new_state(4).capacity_bytes();
+        // budget fits exactly one resident state
+        let mut s = spill_store(8, per_seq, &dir);
+        let m = Arc::new(Metrics::new());
+        s.attach_metrics(m.clone());
+        let mut rng = Rng::new(22);
+        let q = Mat::randn(3, 16, &mut rng);
+        let k = Mat::randn(3, 16, &mut rng);
+        let v = Mat::randn(3, 4, &mut rng);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        b.prefill(s.get_mut(SeqId(1)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // admitting #2 pages #1 out
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        assert_eq!(s.spilled_len(), 1);
+        // forking the spilled parent copies its codec file — no fault-in
+        s.fork(SeqId(1), SeqId(9)).unwrap();
+        assert_eq!(m.restored_from_spill.load(Ordering::Relaxed), 0, "fork must not fault in");
+        assert_eq!(m.forks.load(Ordering::Relaxed), 1);
+        assert_eq!(s.spilled_len(), 2, "the child is born paged-out");
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.seq_len(SeqId(9)), Some(3), "child metadata answers without fault-in");
+        // the child faults in and resumes bit-identically to a reference
+        let mut reference = b.new_state(4);
+        b.prefill(&mut reference, q.view(), k.view(), v.view()).unwrap();
+        let mut out_child = vec![0.0f32; 4];
+        let mut out_ref = vec![0.0f32; 4];
+        b.decode(s.get_mut(SeqId(9)).unwrap(), q.row(0), k.row(0), v.row(0), &mut out_child)
+            .unwrap();
+        b.decode(&mut reference, q.row(0), k.row(0), v.row(0), &mut out_ref).unwrap();
+        assert_eq!(out_child, out_ref);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn prefix_cache_charges_budget_and_sheds_before_sessions() {
+        let b = backend();
+        let per_seq = b.new_state(4).capacity_bytes();
+        // room for three residents plus one slim cache entry (y = 2×4 f32)
+        let mut s = SequenceStore::new(StoreConfig {
+            max_sequences: 8,
+            memory_budget: 3 * per_seq + 64,
+            spill_dir: None,
+            prefix_cache_budget: 1 << 20,
+        });
+        let m = Arc::new(Metrics::new());
+        s.attach_metrics(m.clone());
+        let mut rng = Rng::new(23);
+        let q = Mat::randn(2, 16, &mut rng);
+        let k = Mat::randn(2, 16, &mut rng);
+        let v = Mat::randn(2, 4, &mut rng);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        let y = b.prefill(s.get_mut(SeqId(1)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+        s.prefix_insert(SeqId(1), 0xfeed, &y);
+        assert_eq!(s.prefix_cache_len(), 1);
+        assert_eq!(
+            m.prefix_cache_bytes.load(Ordering::Relaxed) as usize,
+            s.prefix_cache_bytes(),
+            "gauge tracks cache bytes"
+        );
+        // a third session no longer fits alongside the cache entry: the
+        // cache is shed first and every live session survives
+        s.create(SeqId(3), b.new_state(4)).unwrap();
+        assert_eq!(s.prefix_cache_len(), 0, "cache entries go before sessions");
+        assert_eq!(m.prefix_cache_bytes.load(Ordering::Relaxed), 0);
+        assert!(s.contains(SeqId(1)) && s.contains(SeqId(2)) && s.contains(SeqId(3)));
+    }
+
+    #[test]
+    fn prefix_lookup_replays_state_output_and_cursor() {
+        use crate::coordinator::prefix::{prefix_seed, roll_chunk};
+        let b = backend();
+        let mut s = store(8);
+        let mut rng = Rng::new(24);
+        let q = Mat::randn(4, 16, &mut rng);
+        let k = Mat::randn(4, 16, &mut rng);
+        let v = Mat::randn(4, 4, &mut rng);
+        let seed = prefix_seed("elu", 16, 4, 0);
+        let h = roll_chunk(seed, &q, &k, &v);
+        // session 1 computes the chunk and memoizes the boundary
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        s.set_prefix_cursor(SeqId(1), Some(seed));
+        let y = b.prefill(s.get_mut(SeqId(1)).unwrap(), q.view(), k.view(), v.view()).unwrap();
+        s.prefix_insert(SeqId(1), h, &y);
+        // session 2 replays it without computing anything
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        s.set_prefix_cursor(SeqId(2), Some(seed));
+        let tag = s.get_mut(SeqId(2)).unwrap().mech_tag();
+        // wrong expected length misses
+        assert!(s.prefix_lookup(SeqId(2), h, tag, 3).is_none());
+        let replay = s.prefix_lookup(SeqId(2), h, tag, 4).expect("hit");
+        assert_eq!(replay, y, "cached output replays verbatim");
+        assert_eq!(s.seq_len(SeqId(2)), Some(4), "state fast-forwarded past the chunk");
+        assert_eq!(s.prefix_cursor(SeqId(2)), Some(h), "cursor advanced to the boundary");
+        // both sessions decode identically from here
+        let mut out1 = vec![0.0f32; 4];
+        let mut out2 = vec![0.0f32; 4];
+        b.decode(s.get_mut(SeqId(1)).unwrap(), q.row(0), k.row(0), v.row(0), &mut out1).unwrap();
+        b.decode(s.get_mut(SeqId(2)).unwrap(), q.row(0), k.row(0), v.row(0), &mut out2).unwrap();
+        assert_eq!(out1, out2);
     }
 }

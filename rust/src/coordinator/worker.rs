@@ -52,6 +52,11 @@ pub enum Msg {
     /// backend's validating decoder, so a snapshot can never be resumed
     /// under the wrong mechanism or geometry.
     Install(SeqId, std::path::PathBuf, mpsc::Sender<anyhow::Result<()>>),
+    /// Clone a live (or spilled) sequence under a fresh id on this shard
+    /// (ADR-006): `Fork(parent, child, ack)`. Rejected deterministically
+    /// when the parent is mid-flight in the forming batch — never a torn
+    /// clone.
+    Fork(SeqId, SeqId, mpsc::Sender<anyhow::Result<()>>),
     Shutdown,
 }
 
@@ -81,6 +86,16 @@ pub fn run(
         crate::kernels::build_with_window(&cfg.mechanism, cfg.d_head, cfg.horizon, cfg.window)?;
     let mut store = SequenceStore::new(cfg.store.clone());
     store.attach_metrics(metrics.clone());
+    // Shared-prefix cache identity (ADR-006): the hash seed folds in the
+    // mechanism and geometry, the mechanism tag re-guards every lookup.
+    let window = if cfg.window == 0 { cfg.horizon } else { cfg.window };
+    let seed = crate::coordinator::prefix::prefix_seed(
+        cfg.mechanism.name(),
+        cfg.d_head,
+        cfg.d_v,
+        window,
+    );
+    let mech_tag = backend.new_state(cfg.d_v).mech_tag();
     // Per-worker scratch arena (ADR-003): reused feature/projection/score
     // buffers make steady-state prefill and decode allocation-free.
     let mut scratch = Scratch::new();
@@ -93,7 +108,7 @@ pub fn run(
         match msg {
             Msg::Shutdown => return Ok(()),
             Msg::Create(id, ack) => {
-                let _ = ack.send(store.create(id, backend.new_state(cfg.d_v)));
+                let _ = ack.send(create_seq(&mut store, backend.as_ref(), cfg.d_v, seed, id));
             }
             Msg::Release(id, ack) => {
                 let _ = ack.send(store.release(id));
@@ -106,6 +121,9 @@ pub fn run(
             }
             Msg::Install(id, path, ack) => {
                 let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
+            }
+            Msg::Fork(parent, child, ack) => {
+                let _ = ack.send(store.fork(parent, child));
             }
             Msg::Work(first) => {
                 // Continuous batching (§Perf iteration 1): drain whatever is
@@ -166,7 +184,8 @@ pub fn run(
                             }
                         }
                         Msg::Create(id, ack) => {
-                            let _ = ack.send(store.create(id, backend.new_state(cfg.d_v)));
+                            let _ =
+                                ack.send(create_seq(&mut store, backend.as_ref(), cfg.d_v, seed, id));
                         }
                         Msg::Release(id, ack) => {
                             let _ = ack.send(store.release(id));
@@ -181,6 +200,20 @@ pub fn run(
                         Msg::Install(id, path, ack) => {
                             let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
                         }
+                        Msg::Fork(parent, child, ack) => {
+                            // A fork racing chunks already gathered for the
+                            // parent would clone a state the client believes
+                            // includes those chunks — reject deterministically,
+                            // never hand out a torn clone (ADR-006).
+                            if batch.iter().any(|w| w.chunk.seq == parent) {
+                                let _ = ack.send(Err(anyhow::anyhow!(
+                                    "sequence {parent:?} is mid-flight in a forming batch; \
+                                     fork after its replies"
+                                )));
+                            } else {
+                                let _ = ack.send(store.fork(parent, child));
+                            }
+                        }
                         Msg::Shutdown => {
                             shutdown = true;
                             break;
@@ -194,6 +227,7 @@ pub fn run(
                     batch,
                     &metrics,
                     &inflight,
+                    mech_tag,
                 );
                 if let Some((dir, ack)) = deferred_snapshot {
                     let _ = ack.send(store.export_all(&dir));
@@ -206,8 +240,24 @@ pub fn run(
     }
 }
 
+/// Admit a fresh sequence and seed its rolling prefix-hash cursor — a
+/// newborn session's (empty) chunk stream is cacheable by definition.
+fn create_seq(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    d_v: usize,
+    seed: u64,
+    id: SeqId,
+) -> anyhow::Result<()> {
+    store.create(id, backend.new_state(d_v))?;
+    store.set_prefix_cursor(id, Some(seed));
+    Ok(())
+}
+
 /// Load one serialized state through the backend's validating decoder and
 /// admit it under `id` — the restore / shard-migration entry (ADR-004).
+/// The cursor stays `None`: an installed state's chunk provenance is
+/// unknown, so it must neither hit nor poison the prefix cache.
 fn install(
     store: &mut SequenceStore,
     backend: &dyn AttentionBackend,
@@ -227,6 +277,7 @@ fn process_batch(
     mut batch: Vec<WorkItem>,
     metrics: &Metrics,
     inflight: &AtomicU64,
+    mech_tag: u64,
 ) {
     order_batch(&mut batch);
     metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -259,7 +310,7 @@ fn process_batch(
             }
         }
         decode_items = later;
-        process_decode_wave(store, backend, scratch, wave, metrics, inflight);
+        process_decode_wave(store, backend, scratch, wave, metrics, inflight, mech_tag);
     }
 
     // ---- per-chunk prefill streaming through sequence state -------------
@@ -271,7 +322,7 @@ fn process_batch(
     // path — it crosses the reply channel, so the caller owns it.
     for w in batch {
         metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
-        process_item(store, backend, scratch, w, metrics, inflight);
+        process_item(store, backend, scratch, w, metrics, inflight, mech_tag);
     }
 }
 
@@ -285,8 +336,49 @@ fn process_item(
     w: WorkItem,
     metrics: &Metrics,
     inflight: &AtomicU64,
+    mech_tag: u64,
 ) {
     let n = w.chunk.n_tokens();
+    let is_decode = w.chunk.is_decode();
+    // Rolling prefix hash (ADR-006): the cursor chains over prefill chunks
+    // from creation; any decode (or a restore-installed session) sets it
+    // to None, so decode traffic skips this path entirely.
+    let rolled = if is_decode {
+        None
+    } else {
+        store.prefix_cursor(w.chunk.seq).map(|h| {
+            crate::coordinator::prefix::roll_chunk(h, &w.chunk.q, &w.chunk.k, &w.chunk.v)
+        })
+    };
+    if let Some(h) = rolled {
+        // fault the session in first: the hit path swaps the memoized
+        // post-chunk state into the *resident* entry
+        if store.get_mut(w.chunk.seq).is_some() {
+            if let Some(y) = store.prefix_lookup(w.chunk.seq, h, mech_tag, n) {
+                // cache hit: the chunk's compute is skipped and its cached
+                // output replays verbatim
+                metrics.prefix_hits.fetch_add(1, Ordering::Relaxed);
+                let saved = (w.chunk.q.data.len()
+                    + w.chunk.k.data.len()
+                    + w.chunk.v.data.len())
+                    * std::mem::size_of::<f32>();
+                metrics.prefix_bytes_saved.fetch_add(saved as u64, Ordering::Relaxed);
+                let result = AttendResult {
+                    seq: w.chunk.seq,
+                    y,
+                    seq_len: store.seq_len(w.chunk.seq).unwrap_or(0),
+                    latency: w.enqueued.elapsed(),
+                };
+                metrics.record_latency(result.latency);
+                metrics.completed.fetch_add(1, Ordering::Relaxed);
+                metrics.tokens_in.fetch_add(n as u64, Ordering::Relaxed);
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                let _ = w.reply.send(Ok(result));
+                return;
+            }
+            metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
     let result = match store.get_mut(w.chunk.seq) {
         None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
         Some(state) => {
@@ -301,10 +393,24 @@ fn process_item(
             })
         }
     };
-    if let Ok(res) = &result {
-        metrics.record_latency(res.latency);
-        metrics.completed.fetch_add(1, Ordering::Relaxed);
-        metrics.tokens_in.fetch_add(n as u64, Ordering::Relaxed);
+    match &result {
+        Ok(res) => {
+            metrics.record_latency(res.latency);
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.tokens_in.fetch_add(n as u64, Ordering::Relaxed);
+            if is_decode {
+                // divergence: the hash chain no longer covers the stream
+                store.set_prefix_cursor(w.chunk.seq, None);
+            } else if let Some(h) = rolled {
+                // memoize the post-chunk boundary and advance the cursor
+                store.prefix_insert(w.chunk.seq, h, &res.y);
+                store.set_prefix_cursor(w.chunk.seq, Some(h));
+            }
+        }
+        Err(_) => {
+            // unknown whether the state advanced — stop the hash chain
+            store.set_prefix_cursor(w.chunk.seq, None);
+        }
     }
     inflight.fetch_sub(1, Ordering::Relaxed);
     let _ = w.reply.send(result);
@@ -327,6 +433,7 @@ fn process_decode_wave(
     wave: Vec<WorkItem>,
     metrics: &Metrics,
     inflight: &AtomicU64,
+    mech_tag: u64,
 ) {
     metrics
         .decode_chunks
@@ -383,6 +490,8 @@ fn process_decode_wave(
             metrics.fused_decode_rows.fetch_add(b as u64, Ordering::Relaxed);
             metrics.max_fused_batch.fetch_max(b as u64, Ordering::Relaxed);
             for (i, w) in items.into_iter().enumerate() {
+                // a decode diverges the stream from its cacheable prefix
+                store.set_prefix_cursor(w.chunk.seq, None);
                 let y = Mat::from_vec(1, d_v, y_buf[i * d_v..(i + 1) * d_v].to_vec());
                 let result = AttendResult {
                     seq: w.chunk.seq,
@@ -405,7 +514,7 @@ fn process_decode_wave(
                 // did not advance; an advanced one gets an error instead of
                 // a double-absorbed token
                 if store.seq_len(w.chunk.seq) == pre_lens[i] {
-                    process_item(store, backend, scratch, w, metrics, inflight);
+                    process_item(store, backend, scratch, w, metrics, inflight, mech_tag);
                 } else {
                     inflight.fetch_sub(1, Ordering::Relaxed);
                     let _ = w.reply.send(Err(anyhow::anyhow!(
@@ -420,4 +529,96 @@ fn process_decode_wave(
     scratch.put(v_buf);
     scratch.put(k_buf);
     scratch.put(q_buf);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::AttendChunk;
+    use crate::math::rng::Rng;
+    use std::time::Duration;
+
+    fn worker_cfg() -> WorkerConfig {
+        WorkerConfig {
+            mechanism: Mechanism::EluLinear,
+            d_head: 8,
+            d_v: 4,
+            horizon: 64,
+            window: 0,
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(50) },
+            store: StoreConfig::default(),
+        }
+    }
+
+    fn work(
+        seq: SeqId,
+        n: usize,
+        rng: &mut Rng,
+    ) -> (Msg, mpsc::Receiver<anyhow::Result<AttendResult>>) {
+        let (tx, rx) = mpsc::channel();
+        let item = WorkItem {
+            chunk: AttendChunk {
+                seq,
+                q: Mat::randn(n, 8, rng),
+                k: Mat::randn(n, 8, rng),
+                v: Mat::randn(n, 4, rng),
+            },
+            enqueued: Instant::now(),
+            reply: tx,
+        };
+        (Msg::Work(item), rx)
+    }
+
+    #[test]
+    fn fork_of_mid_flight_parent_rejected_deterministically() {
+        // The whole schedule is pre-loaded before the worker runs: the
+        // fork is already queued behind the parent's chunk when the batch
+        // forms, so the gather loop MUST see it while the parent is
+        // mid-flight — no timing involved, the rejection is deterministic.
+        let (tx, rx) = mpsc::channel();
+        let inflight = Arc::new(AtomicU64::new(1));
+        let metrics = Arc::new(Metrics::new());
+        let mut rng = Rng::new(7);
+        let (cack_tx, cack_rx) = mpsc::channel();
+        tx.send(Msg::Create(SeqId(1), cack_tx)).unwrap();
+        let (wmsg, wrx) = work(SeqId(1), 4, &mut rng);
+        tx.send(wmsg).unwrap();
+        let (fack_tx, fack_rx) = mpsc::channel();
+        tx.send(Msg::Fork(SeqId(1), SeqId(2), fack_tx)).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        run(worker_cfg(), rx, metrics.clone(), inflight).unwrap();
+        cack_rx.recv().unwrap().unwrap();
+        let err = fack_rx.recv().unwrap().expect_err("mid-flight fork must be rejected");
+        assert!(err.to_string().contains("mid-flight"), "{err}");
+        wrx.recv().unwrap().unwrap(); // the parent's chunk still completes
+        assert_eq!(metrics.forks.load(Ordering::Relaxed), 0, "no torn clone was made");
+    }
+
+    #[test]
+    fn fork_of_idle_parent_during_gather_succeeds() {
+        // Same pre-loaded-schedule construction, but the fork's parent is
+        // NOT in the forming batch — the gather loop serves it inline.
+        let (tx, rx) = mpsc::channel();
+        let inflight = Arc::new(AtomicU64::new(1));
+        let metrics = Arc::new(Metrics::new());
+        let mut rng = Rng::new(8);
+        let (a_tx, a_rx) = mpsc::channel();
+        tx.send(Msg::Create(SeqId(1), a_tx)).unwrap();
+        let (b_tx, b_rx) = mpsc::channel();
+        tx.send(Msg::Create(SeqId(2), b_tx)).unwrap();
+        let (wmsg, wrx) = work(SeqId(2), 4, &mut rng);
+        tx.send(wmsg).unwrap();
+        let (fack_tx, fack_rx) = mpsc::channel();
+        tx.send(Msg::Fork(SeqId(1), SeqId(3), fack_tx)).unwrap();
+        let (len_tx, len_rx) = mpsc::channel();
+        tx.send(Msg::Len(SeqId(3), len_tx)).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        run(worker_cfg(), rx, metrics.clone(), inflight).unwrap();
+        a_rx.recv().unwrap().unwrap();
+        b_rx.recv().unwrap().unwrap();
+        fack_rx.recv().unwrap().expect("fork of a sequence outside the batch succeeds");
+        assert_eq!(len_rx.recv().unwrap(), Some(0), "the child exists on the shard");
+        wrx.recv().unwrap().unwrap();
+        assert_eq!(metrics.forks.load(Ordering::Relaxed), 1);
+    }
 }

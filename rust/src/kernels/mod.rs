@@ -70,6 +70,7 @@ use engine::StreamingState;
 use features::prf::{CosformerMap, EluPlusOne, FavorRelu};
 use slay::{QKFeatures, SlayFeatures, SymMap};
 use std::io::{Read, Write};
+use std::sync::Arc;
 
 /// Default rolling-window bound for quadratic sessions when the caller did
 /// not provide a horizon (see [`build`]).
@@ -279,6 +280,16 @@ pub trait AttentionBackend: Send + Sync {
         self.validate_state(&state)?;
         Ok(state)
     }
+
+    /// Clone `state` for session branching (ADR-006), after re-checking
+    /// that it belongs to this backend — the fork analog of the
+    /// save/load boundary validation. Linear states copy `(S, z)`
+    /// outright; quadratic windows fork copy-on-write (see
+    /// [`AttnState::fork`]).
+    fn fork_state(&self, state: &AttnState) -> anyhow::Result<AttnState> {
+        self.validate_state(state)?;
+        Ok(state.fork())
+    }
 }
 
 /// Build an operator for head dimension `d`. `horizon` bounds the
@@ -401,6 +412,31 @@ impl AttnState {
         }
     }
 
+    /// Independent copy of this session state for branching (ADR-006).
+    ///
+    /// Linear states copy the constant-size `(S, z)` pair outright —
+    /// O(m·d_v) regardless of how many tokens the session absorbed.
+    /// Quadratic window states share their page table copy-on-write: the
+    /// fork costs O(pages) refcount bumps, and either side's first write
+    /// to a page copies just that page, so siblings can never observe
+    /// each other's mutations. The mechanism identity tag travels with
+    /// the fork; prefer [`AttentionBackend::fork_state`], which re-checks
+    /// it against the serving backend.
+    pub fn fork(&self) -> AttnState {
+        let inner = match &self.inner {
+            StateInner::Linear(s) => StateInner::Linear(s.clone()),
+            StateInner::Window(w) => StateInner::Window(w.fork()),
+        };
+        AttnState { inner, mech_tag: self.mech_tag }
+    }
+
+    /// Mechanism identity tag stamped at creation (FNV-1a of the
+    /// canonical registry spec) — lets cache tiers guard entries against
+    /// mechanism/geometry mismatch without holding a backend.
+    pub fn mech_tag(&self) -> u64 {
+        self.mech_tag
+    }
+
     fn linear_mut(&mut self) -> anyhow::Result<&mut StreamingState> {
         match &mut self.inner {
             StateInner::Linear(s) => Ok(s),
@@ -440,9 +476,18 @@ impl AttnState {
                 put_u32(p, w.aux_dim as u32);
                 put_u32(p, w.rows as u32);
                 put_u64(p, w.len as u64);
-                put_f32s(p, &w.k);
-                put_f32s(p, &w.v);
-                put_f32s(p, &w.aux);
+                // Pages fill in slot order, so streaming each buffer
+                // page-by-page reproduces the contiguous row-major layout
+                // the pre-paging codec wrote — byte-identical on the wire.
+                for pg in &w.pages {
+                    put_f32s(p, &pg.k);
+                }
+                for pg in &w.pages {
+                    put_f32s(p, &pg.v);
+                }
+                for pg in &w.pages {
+                    put_f32s(p, &pg.aux);
+                }
             }
         }
     }
@@ -499,7 +544,7 @@ impl AttnState {
             StateInner::Linear(s) => 28 + 4 * (s.s.len() + s.z.len()),
             // mech_tag 8 + kind 4 + d_k/d_v/cap/aux_dim/rows 4 each +
             // len 8, then K/V/aux
-            StateInner::Window(w) => 40 + 4 * (w.k.len() + w.v.len() + w.aux.len()),
+            StateInner::Window(w) => 40 + 4 * w.rows * (w.d_k + w.d_v + w.aux_dim),
         };
         // magic 8 + version 4 + payload_len 8 + checksum 8
         28 + payload
@@ -590,7 +635,9 @@ impl AttnState {
                 let k = p.f32s(rows * d_k)?;
                 let v = p.f32s(rows * d_v)?;
                 let aux = p.f32s(rows * aux_dim)?;
-                StateInner::Window(KvWindow { d_k, d_v, cap, aux_dim, k, v, aux, rows, len })
+                StateInner::Window(KvWindow::from_flat(
+                    d_k, d_v, cap, aux_dim, &k, &v, &aux, rows, len,
+                ))
             }
             other => anyhow::bail!("unknown state kind {other}"),
         };
@@ -682,10 +729,40 @@ impl<'a> PayloadReader<'a> {
     }
 }
 
+/// Rows per copy-on-write window page (ADR-006). Small enough that the
+/// write-time copy after a fork touches a bounded slab; large enough that
+/// the per-row `j / PAGE_ROWS` indirection is noise next to the d-dim dot
+/// products the window scores perform per row.
+const PAGE_ROWS: usize = 64;
+
+/// One fixed-span slab of window rows: up to [`PAGE_ROWS`] rows of key,
+/// value and aux storage, each contiguous row-major. Pages are shared
+/// between forked sessions behind an [`Arc`]; any mutation goes through
+/// `Arc::make_mut`, which clones the page iff it is shared — classic
+/// copy-on-write, so siblings never observe each other's writes.
+#[derive(Clone)]
+struct WindowPage {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    aux: Vec<f32>,
+}
+
+impl WindowPage {
+    fn empty() -> Self {
+        WindowPage { k: Vec::new(), v: Vec::new(), aux: Vec::new() }
+    }
+}
+
 /// Bounded rolling KV window — the quadratic-session analog of the
 /// streaming `(S, z)` pair. Keeps the most recent `cap` (key, value) rows;
 /// older tokens fall out of the attention span (sliding-window semantics),
 /// which is exactly the memory/fidelity trade the linear state avoids.
+///
+/// Storage is an `Arc`-shared page table ([`WindowPage`], ADR-006): a fork
+/// clones only the `Vec<Arc<..>>` spine — O(pages) refcount bumps — and
+/// pages are copied lazily at first write on either side. The serialized
+/// form (ADR-004) is unchanged: the codec writes rows contiguously, so
+/// paged and pre-paging containers are byte-identical on the wire.
 struct KvWindow {
     d_k: usize,
     d_v: usize,
@@ -695,9 +772,10 @@ struct KvWindow {
     /// ‖k‖² for the raw Yat baseline; 0 for mechanisms that fold their
     /// per-key work into the stored key row itself).
     aux_dim: usize,
-    k: Vec<f32>,
-    v: Vec<f32>,
-    aux: Vec<f32>,
+    /// Page `p` holds rows `p·PAGE_ROWS ..` (the last page may be
+    /// partial); pages fill in slot order, so occupancy per page is
+    /// derivable from `rows` alone.
+    pages: Vec<Arc<WindowPage>>,
     /// Rows currently stored (≤ cap).
     rows: usize,
     /// Tokens absorbed over the session lifetime.
@@ -706,17 +784,71 @@ struct KvWindow {
 
 impl KvWindow {
     fn new(d_k: usize, d_v: usize, cap: usize, aux_dim: usize) -> Self {
-        KvWindow {
-            d_k,
-            d_v,
-            cap: cap.max(1),
-            aux_dim,
-            k: Vec::new(),
-            v: Vec::new(),
-            aux: Vec::new(),
-            rows: 0,
-            len: 0,
+        KvWindow { d_k, d_v, cap: cap.max(1), aux_dim, pages: Vec::new(), rows: 0, len: 0 }
+    }
+
+    /// Rebuild a window from the codec's contiguous row-major buffers,
+    /// chunking them into pages.
+    fn from_flat(
+        d_k: usize,
+        d_v: usize,
+        cap: usize,
+        aux_dim: usize,
+        k: &[f32],
+        v: &[f32],
+        aux: &[f32],
+        rows: usize,
+        len: usize,
+    ) -> Self {
+        let mut pages = Vec::with_capacity(rows.div_ceil(PAGE_ROWS));
+        let mut p0 = 0;
+        while p0 < rows {
+            let p1 = (p0 + PAGE_ROWS).min(rows);
+            pages.push(Arc::new(WindowPage {
+                k: k[p0 * d_k..p1 * d_k].to_vec(),
+                v: v[p0 * d_v..p1 * d_v].to_vec(),
+                aux: aux[p0 * aux_dim..p1 * aux_dim].to_vec(),
+            }));
+            p0 = p1;
         }
+        KvWindow { d_k, d_v, cap: cap.max(1), aux_dim, pages, rows, len }
+    }
+
+    /// Copy-on-write clone: shares every page with `self` (O(pages)
+    /// refcount bumps); the first write on either side copies only the
+    /// page it touches.
+    fn fork(&self) -> Self {
+        KvWindow {
+            d_k: self.d_k,
+            d_v: self.d_v,
+            cap: self.cap,
+            aux_dim: self.aux_dim,
+            pages: self.pages.clone(),
+            rows: self.rows,
+            len: self.len,
+        }
+    }
+
+    /// Do the page buffers agree with the declared shape? (The paged
+    /// analog of the old flat-buffer length check in `validate_state`.)
+    fn stored_shape_ok(&self) -> bool {
+        if self.pages.len() != self.rows.div_ceil(PAGE_ROWS) {
+            return false;
+        }
+        self.pages.iter().enumerate().all(|(i, p)| {
+            let span = (self.rows - i * PAGE_ROWS).min(PAGE_ROWS);
+            p.k.len() == span * self.d_k
+                && p.v.len() == span * self.d_v
+                && p.aux.len() == span * self.aux_dim
+        })
+    }
+
+    /// Pages currently shared with a fork sibling (diagnostic for the COW
+    /// tests: a freshly forked pair shares everything; writes peel pages
+    /// off one by one).
+    #[cfg(test)]
+    fn shared_pages(&self) -> usize {
+        self.pages.iter().filter(|p| Arc::strong_count(p) > 1).count()
     }
 
     /// Append a token; once full, cyclically overwrite the oldest slot
@@ -727,15 +859,24 @@ impl KvWindow {
         debug_assert_eq!(k_row.len(), self.d_k);
         debug_assert_eq!(v_row.len(), self.d_v);
         let slot = if self.rows < self.cap {
-            self.k.extend_from_slice(k_row);
-            self.v.extend_from_slice(v_row);
-            self.aux.resize(self.aux.len() + self.aux_dim, 0.0);
+            let (pi, r) = (self.rows / PAGE_ROWS, self.rows % PAGE_ROWS);
+            if r == 0 {
+                self.pages.push(Arc::new(WindowPage::empty()));
+            }
+            let aux_dim = self.aux_dim;
+            let page = Arc::make_mut(&mut self.pages[pi]);
+            page.k.extend_from_slice(k_row);
+            page.v.extend_from_slice(v_row);
+            page.aux.resize(page.aux.len() + aux_dim, 0.0);
             self.rows += 1;
             self.rows - 1
         } else {
             let slot = self.len % self.cap;
-            self.k[slot * self.d_k..(slot + 1) * self.d_k].copy_from_slice(k_row);
-            self.v[slot * self.d_v..(slot + 1) * self.d_v].copy_from_slice(v_row);
+            let (pi, r) = (slot / PAGE_ROWS, slot % PAGE_ROWS);
+            let (d_k, d_v) = (self.d_k, self.d_v);
+            let page = Arc::make_mut(&mut self.pages[pi]);
+            page.k[r * d_k..(r + 1) * d_k].copy_from_slice(k_row);
+            page.v[r * d_v..(r + 1) * d_v].copy_from_slice(v_row);
             slot
         };
         self.len += 1;
@@ -743,27 +884,36 @@ impl KvWindow {
     }
 
     fn key(&self, j: usize) -> &[f32] {
-        &self.k[j * self.d_k..(j + 1) * self.d_k]
+        let (pi, r) = (j / PAGE_ROWS, j % PAGE_ROWS);
+        &self.pages[pi].k[r * self.d_k..(r + 1) * self.d_k]
     }
 
     fn key_mut(&mut self, j: usize) -> &mut [f32] {
-        &mut self.k[j * self.d_k..(j + 1) * self.d_k]
+        let (pi, r) = (j / PAGE_ROWS, j % PAGE_ROWS);
+        let d_k = self.d_k;
+        let page = Arc::make_mut(&mut self.pages[pi]);
+        &mut page.k[r * d_k..(r + 1) * d_k]
     }
 
     fn val(&self, j: usize) -> &[f32] {
-        &self.v[j * self.d_v..(j + 1) * self.d_v]
+        let (pi, r) = (j / PAGE_ROWS, j % PAGE_ROWS);
+        &self.pages[pi].v[r * self.d_v..(r + 1) * self.d_v]
     }
 
     fn aux(&self, j: usize) -> &[f32] {
-        &self.aux[j * self.aux_dim..(j + 1) * self.aux_dim]
+        let (pi, r) = (j / PAGE_ROWS, j % PAGE_ROWS);
+        &self.pages[pi].aux[r * self.aux_dim..(r + 1) * self.aux_dim]
     }
 
     fn aux_mut(&mut self, j: usize) -> &mut [f32] {
-        &mut self.aux[j * self.aux_dim..(j + 1) * self.aux_dim]
+        let (pi, r) = (j / PAGE_ROWS, j % PAGE_ROWS);
+        let aux_dim = self.aux_dim;
+        let page = Arc::make_mut(&mut self.pages[pi]);
+        &mut page.aux[r * aux_dim..(r + 1) * aux_dim]
     }
 
     fn bytes(&self) -> usize {
-        (self.k.len() + self.v.len() + self.aux.len()) * std::mem::size_of::<f32>()
+        self.rows * (self.d_k + self.d_v + self.aux_dim) * std::mem::size_of::<f32>()
     }
 
     fn capacity_bytes(&self) -> usize {
@@ -1534,10 +1684,8 @@ impl AttentionBackend for QuadraticBackend {
                     self.aux_dim()
                 );
                 anyhow::ensure!(
-                    w.k.len() == w.rows * w.d_k
-                        && w.v.len() == w.rows * w.d_v
-                        && w.aux.len() == w.rows * w.aux_dim,
-                    "window state buffers inconsistent with shape"
+                    w.stored_shape_ok(),
+                    "window state page buffers inconsistent with shape"
                 );
                 Ok(())
             }

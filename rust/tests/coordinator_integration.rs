@@ -24,7 +24,12 @@ fn small_cfg(workers: usize) -> CoordinatorConfig {
         max_batch: 8,
         max_wait: Duration::from_micros(500),
         queue_cap: 64,
-        store: StoreConfig { max_sequences: 128, memory_budget: 64 << 20, spill_dir: None },
+        store: StoreConfig {
+            max_sequences: 128,
+            memory_budget: 64 << 20,
+            spill_dir: None,
+            prefix_cache_budget: 0,
+        },
         ..CoordinatorConfig::default()
     }
 }
@@ -344,6 +349,7 @@ fn spill_roundtrip_case(mechanism: Mechanism) {
                 max_sequences: 1,
                 memory_budget: 64 << 20,
                 spill_dir: Some(dir.clone()),
+                prefix_cache_budget: 0,
             };
         }
         cfg
@@ -493,6 +499,7 @@ fn spill_tier_serves_more_quadratic_sequences_than_the_budget_admits() {
         max_sequences: 256,
         memory_budget: 4 * per_seq,
         spill_dir: Some(dir.clone()),
+        prefix_cache_budget: 0,
     };
     let coord = Coordinator::start(cfg).unwrap();
     let mut rng = Rng::new(2);
@@ -525,7 +532,12 @@ fn window_knob_admits_many_quadratic_sequences() {
     cfg.mechanism = Mechanism::Standard;
     cfg.horizon = 131_072;
     cfg.window = 64;
-    cfg.store = StoreConfig { max_sequences: 128, memory_budget: 1 << 20, spill_dir: None };
+    cfg.store = StoreConfig {
+        max_sequences: 128,
+        memory_budget: 1 << 20,
+        spill_dir: None,
+        prefix_cache_budget: 0,
+    };
     let coord = Coordinator::start(cfg).unwrap();
     let mut rng = Rng::new(9);
     for _ in 0..32 {
@@ -658,4 +670,214 @@ fn same_sequence_decodes_in_one_batch_apply_in_arrival_order() {
     assert_eq!(coord.sequence_len(seq).unwrap(), Some(3));
     assert_eq!(coord.sequence_len(other).unwrap(), Some(1));
     coord.shutdown().unwrap();
+}
+
+#[test]
+fn prefix_cache_skips_repeated_prefills_bit_identically() {
+    // ADR-006 prefix cache: N sessions opening with the SAME prefill chunk
+    // pay for one computation — the rest replay the cached output and
+    // state — and every served byte must equal a cache-disabled
+    // coordinator fed the identical stream.
+    let mk = |budget: usize| {
+        let mut cfg = small_cfg(1);
+        cfg.store.prefix_cache_budget = budget;
+        Coordinator::start(cfg).unwrap()
+    };
+    let cached = mk(16 << 20);
+    let plain = mk(0);
+    let mut rng = Rng::new(606);
+    let shared = chunk(SeqId(0), 8, &mut rng); // shared opening payload
+    let n = 4;
+    for i in 0..n {
+        let c_seq = cached.create_sequence().unwrap();
+        let p_seq = plain.create_sequence().unwrap();
+        let got = cached
+            .attend(AttendChunk {
+                seq: c_seq,
+                q: shared.q.clone(),
+                k: shared.k.clone(),
+                v: shared.v.clone(),
+            })
+            .unwrap();
+        let want = plain
+            .attend(AttendChunk {
+                seq: p_seq,
+                q: shared.q.clone(),
+                k: shared.k.clone(),
+                v: shared.v.clone(),
+            })
+            .unwrap();
+        assert_eq!(got.y.data, want.y.data, "session {i}: cached shared prefill diverged");
+        assert_eq!(got.seq_len, want.seq_len);
+        // a divergent follow-up prefill computes normally on the
+        // fast-forwarded state
+        let follow = chunk(c_seq, 3, &mut rng);
+        let follow_plain = AttendChunk {
+            seq: p_seq,
+            q: follow.q.clone(),
+            k: follow.k.clone(),
+            v: follow.v.clone(),
+        };
+        let got2 = cached.attend(follow).unwrap();
+        let want2 = plain.attend(follow_plain).unwrap();
+        assert_eq!(got2.y.data, want2.y.data, "session {i}: post-hit prefill diverged");
+        assert_eq!(got2.seq_len, 11);
+    }
+    let m = cached.metrics();
+    assert_eq!(
+        m.prefix_hits,
+        (n - 1) as u64,
+        "every session after the first should replay the shared chunk"
+    );
+    assert!(m.prefix_misses >= 1, "the first shared prefill must be a miss");
+    assert!(m.prefix_bytes_saved > 0);
+    assert!(m.prefix_cache_bytes > 0, "cache should report resident bytes");
+    assert_eq!(plain.metrics().prefix_hits, 0, "budget 0 must disable the cache");
+    cached.shutdown().unwrap();
+    plain.shutdown().unwrap();
+}
+
+#[test]
+fn snapshot_with_live_forks_and_cache_restores_across_worker_counts() {
+    // ADR-006 + ADR-004: snapshot a coordinator that holds live forked
+    // children AND populated prefix-cache entries, restore it onto
+    // different worker counts — every sequence (roots and forks alike)
+    // must come back with its exact seq_len and bit-identical next-chunk
+    // outputs. The cache itself is transient shard state and need not
+    // survive; the sessions it fast-forwarded must.
+    let dir = std::env::temp_dir().join("slay_it_snapshot_forks");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = small_cfg(1); // one shard so the shared chunk surely hits
+    cfg.store.prefix_cache_budget = 8 << 20;
+    let coord = Coordinator::start(cfg.clone()).unwrap();
+    let mut rng = Rng::new(4711);
+    let shared = chunk(SeqId(0), 6, &mut rng);
+    let mut ids = Vec::new();
+    let mut lens = Vec::new();
+    for _ in 0..2 {
+        let root = coord.create_sequence().unwrap();
+        coord
+            .attend(AttendChunk {
+                seq: root,
+                q: shared.q.clone(),
+                k: shared.k.clone(),
+                v: shared.v.clone(),
+            })
+            .unwrap();
+        coord.attend(chunk(root, 2, &mut rng)).unwrap(); // per-root divergence
+        let child = coord.fork_sequence(root).unwrap();
+        coord.attend(chunk(child, 1, &mut rng)).unwrap(); // child diverges
+        ids.push(root);
+        lens.push(8);
+        ids.push(child);
+        lens.push(9);
+    }
+    let m = coord.metrics();
+    assert_eq!(m.forks, 2);
+    assert!(m.prefix_hits >= 1, "second root should replay the shared chunk");
+    assert!(m.prefix_cache_bytes > 0, "cache entries must be live at snapshot time");
+
+    let report = coord.snapshot(&dir).unwrap();
+    assert_eq!(report.sequences, ids.len(), "forked children must be snapshotted too");
+    let next: Vec<AttendChunk> = ids.iter().map(|&s| chunk(s, 1, &mut rng)).collect();
+    let mut want = Vec::new();
+    for c in &next {
+        want.push(
+            coord
+                .attend(AttendChunk { seq: c.seq, q: c.q.clone(), k: c.k.clone(), v: c.v.clone() })
+                .unwrap(),
+        );
+    }
+    coord.shutdown().unwrap();
+
+    for workers in [2usize, 5] {
+        let restored =
+            Coordinator::restore(CoordinatorConfig { workers, ..cfg.clone() }, &dir).unwrap();
+        for i in 0..ids.len() {
+            assert_eq!(
+                restored.sequence_len(ids[i]).unwrap(),
+                Some(lens[i]),
+                "workers={workers}: seq_len lost for {:?}",
+                ids[i]
+            );
+            let c = &next[i];
+            let got = restored
+                .attend(AttendChunk { seq: c.seq, q: c.q.clone(), k: c.k.clone(), v: c.v.clone() })
+                .unwrap();
+            assert_eq!(
+                got.y.data, want[i].y.data,
+                "workers={workers}: restored {:?} diverged on the next chunk",
+                ids[i]
+            );
+        }
+        // restored sessions are still forkable
+        let refork = restored.fork_sequence(ids[0]).unwrap();
+        let r = restored.attend(chunk(refork, 1, &mut rng)).unwrap();
+        assert!(r.y.data.iter().all(|x| x.is_finite()));
+        restored.shutdown().unwrap();
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn forked_quadratic_sessions_isolate_cow_windows_end_to_end() {
+    // COW fork through the full serve path with a WRAPPED quadratic
+    // window (window 4 < prefill 6): identical continuations on parent
+    // and child are bit-identical, and after the child diverges hard the
+    // parent must still track a never-forked reference coordinator
+    // bit-for-bit — divergent writes never leak through shared pages.
+    let mk = || {
+        let mut cfg = small_cfg(1);
+        cfg.mechanism = Mechanism::Standard;
+        cfg.horizon = 64;
+        cfg.window = 4;
+        Coordinator::start(cfg).unwrap()
+    };
+    let forked = mk();
+    let reference = mk();
+    let mut rng = Rng::new(909);
+    let f_seq = forked.create_sequence().unwrap();
+    let r_seq = reference.create_sequence().unwrap();
+    let pre = chunk(SeqId(0), 6, &mut rng);
+    forked
+        .attend(AttendChunk { seq: f_seq, q: pre.q.clone(), k: pre.k.clone(), v: pre.v.clone() })
+        .unwrap();
+    reference
+        .attend(AttendChunk { seq: r_seq, q: pre.q.clone(), k: pre.k.clone(), v: pre.v.clone() })
+        .unwrap();
+
+    let child = forked.fork_sequence(f_seq).unwrap();
+    assert_eq!(forked.sequence_len(child).unwrap(), Some(6));
+    let t = chunk(SeqId(0), 1, &mut rng);
+    let a = forked
+        .attend(AttendChunk { seq: f_seq, q: t.q.clone(), k: t.k.clone(), v: t.v.clone() })
+        .unwrap();
+    let b = forked
+        .attend(AttendChunk { seq: child, q: t.q.clone(), k: t.k.clone(), v: t.v.clone() })
+        .unwrap();
+    let r = reference
+        .attend(AttendChunk { seq: r_seq, q: t.q.clone(), k: t.k.clone(), v: t.v.clone() })
+        .unwrap();
+    assert_eq!(a.y.data, b.y.data, "fork diverged from parent on an identical token");
+    assert_eq!(a.y.data, r.y.data, "forked coordinator diverged from the reference");
+
+    for _ in 0..5 {
+        forked.attend(chunk(child, 1, &mut rng)).unwrap();
+    }
+    for step in 0..3 {
+        let t = chunk(SeqId(0), 1, &mut rng);
+        let a = forked
+            .attend(AttendChunk { seq: f_seq, q: t.q.clone(), k: t.k.clone(), v: t.v.clone() })
+            .unwrap();
+        let r = reference
+            .attend(AttendChunk { seq: r_seq, q: t.q.clone(), k: t.k.clone(), v: t.v.clone() })
+            .unwrap();
+        assert_eq!(
+            a.y.data, r.y.data,
+            "step {step}: child's divergent decodes leaked into the parent's window"
+        );
+    }
+    assert_eq!(forked.metrics().forks, 1);
+    forked.shutdown().unwrap();
+    reference.shutdown().unwrap();
 }

@@ -688,6 +688,150 @@ fn prop_fused_decode_batch_bit_identical_to_sequential() {
     );
 }
 
+// ---------------------------------------------------------------------------
+// ADR-006 copy-on-write session forking: a fork must (a) continue
+// bit-identically to its parent under identical continuations, (b) never
+// leak divergent writes back into the parent (COW page isolation), and
+// (c) behave the same whether the parent was live or round-tripped through
+// the ADR-004 wire codec (spill files ARE codec files, so this is the
+// spilled-parent path). All of it per mechanism, including quadratic
+// sessions whose rolling window has already wrapped.
+// ---------------------------------------------------------------------------
+
+fn fork_mechs() -> [Mechanism; 7] {
+    [
+        Mechanism::Standard,
+        Mechanism::Yat { eps: 1e-3 },
+        Mechanism::YatSpherical { eps: 1e-3 },
+        Mechanism::Slay(SlayConfig::default()),
+        Mechanism::Favor { m_features: 16, seed: 3 },
+        Mechanism::EluLinear,
+        Mechanism::Cosformer,
+    ]
+}
+
+#[test]
+fn prop_fork_continues_bit_identically_and_isolates_siblings() {
+    check(
+        13,
+        14,
+        |rng| (rng.below(7), 1 + rng.below(12), rng.below(10_000)),
+        |&(mech_idx, len, seed)| {
+            let d = 8;
+            let mech = fork_mechs()[mech_idx].clone();
+            // window 5 < the longest prefill, so quadratic sessions fork
+            // wrapped (already-sliding) windows too
+            let op = build_with_window(&mech, d, 64, 5).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(9000 + seed as u64);
+            let q = Mat::randn(len, d, &mut rng);
+            let k = Mat::randn(len, d, &mut rng);
+            let v = Mat::randn(len, 4, &mut rng);
+            let mut parent = op.new_state(4);
+            let mut reference = op.new_state(4);
+            op.prefill(&mut parent, q.view(), k.view(), v.view())
+                .map_err(|e| e.to_string())?;
+            op.prefill(&mut reference, q.view(), k.view(), v.view())
+                .map_err(|e| e.to_string())?;
+
+            let mut child = parent.fork();
+            if child.len() != parent.len() || child.mech_tag() != parent.mech_tag() {
+                return Err(format!("{}: fork changed len or mech_tag", mech.name()));
+            }
+
+            // (b) diverge the child FIRST: its COW writes must not leak
+            // into the pages it still shares with the parent...
+            let mut out = vec![0.0f32; 4];
+            for _ in 0..3 {
+                let tq = Mat::randn(1, d, &mut rng);
+                let tk = Mat::randn(1, d, &mut rng);
+                let tv = Mat::randn(1, 4, &mut rng);
+                op.decode(&mut child, tq.row(0), tk.row(0), tv.row(0), &mut out)
+                    .map_err(|e| e.to_string())?;
+            }
+            // ...so the parent must still continue exactly like the never-
+            // forked reference, and (a) a fresh fork of the parent must
+            // track it bit-for-bit on the same tokens.
+            let mut child2 = parent.fork();
+            let mut po = vec![0.0f32; 4];
+            let mut ro = vec![0.0f32; 4];
+            let mut co = vec![0.0f32; 4];
+            for step in 0..4 {
+                let tq = Mat::randn(1, d, &mut rng);
+                let tk = Mat::randn(1, d, &mut rng);
+                let tv = Mat::randn(1, 4, &mut rng);
+                op.decode(&mut parent, tq.row(0), tk.row(0), tv.row(0), &mut po)
+                    .map_err(|e| e.to_string())?;
+                op.decode(&mut reference, tq.row(0), tk.row(0), tv.row(0), &mut ro)
+                    .map_err(|e| e.to_string())?;
+                op.decode(&mut child2, tq.row(0), tk.row(0), tv.row(0), &mut co)
+                    .map_err(|e| e.to_string())?;
+                if po != ro {
+                    return Err(format!(
+                        "{}: step {step}: diverged child leaked into parent",
+                        mech.name()
+                    ));
+                }
+                if po != co {
+                    return Err(format!(
+                        "{}: step {step}: fork drifted from parent",
+                        mech.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fork_of_wire_decoded_state_matches_live_fork() {
+    check(
+        14,
+        10,
+        |rng| (rng.below(7), 1 + rng.below(10), rng.below(10_000)),
+        |&(mech_idx, len, seed)| {
+            let d = 8;
+            let mech = fork_mechs()[mech_idx].clone();
+            let op = build_with_window(&mech, d, 64, 5).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(17_000 + seed as u64);
+            let q = Mat::randn(len, d, &mut rng);
+            let k = Mat::randn(len, d, &mut rng);
+            let v = Mat::randn(len, 4, &mut rng);
+            let mut parent = op.new_state(4);
+            op.prefill(&mut parent, q.view(), k.view(), v.view())
+                .map_err(|e| e.to_string())?;
+
+            let bytes = parent.encode_to_vec();
+            AttnState::verify_encoded(&bytes).map_err(|e| e.to_string())?;
+            let restored =
+                AttnState::decode(&mut bytes.as_slice()).map_err(|e| e.to_string())?;
+            let mut from_spill = restored.fork();
+            let mut from_live = parent.fork();
+            if from_spill.len() != from_live.len() {
+                return Err(format!("{}: codec fork lost length", mech.name()));
+            }
+            let mut a = vec![0.0f32; 4];
+            let mut b = vec![0.0f32; 4];
+            for step in 0..3 {
+                let tq = Mat::randn(1, d, &mut rng);
+                let tk = Mat::randn(1, d, &mut rng);
+                let tv = Mat::randn(1, 4, &mut rng);
+                op.decode(&mut from_spill, tq.row(0), tk.row(0), tv.row(0), &mut a)
+                    .map_err(|e| e.to_string())?;
+                op.decode(&mut from_live, tq.row(0), tk.row(0), tv.row(0), &mut b)
+                    .map_err(|e| e.to_string())?;
+                if a != b {
+                    return Err(format!(
+                        "{}: step {step}: codec fork != live fork",
+                        mech.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 #[test]
 #[should_panic(expected = "col_block")]
 fn view_col_block_past_width_panics() {
