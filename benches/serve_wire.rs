@@ -1,0 +1,258 @@
+//! Wire-protocol front-end benchmark (ADR-007) — emitted machine-readably
+//! as `results/BENCH_wire.json`.
+//!
+//! Measures request→reply latency (p50/p90/p99) and attend throughput
+//! through a real TCP socket, across the full serving matrix:
+//!
+//! * **plane** — JSON lines vs length-prefixed binary frames carrying the
+//!   same tensors. The binary plane skips float formatting/parsing on
+//!   both sides, so it must win p50 at the 4096-float payload; that win
+//!   is this bench's acceptance gate.
+//! * **front end** — thread-per-connection vs the epoll reactor (where
+//!   the build target supports it).
+//! * **payload** — {256, 1024, 4096} floats per tensor (n = floats/64
+//!   rows at d_head = d_v = 64).
+//!
+//! Latencies are sequential roundtrips on one connection: the client
+//! blocks on each reply, so a sample is the full wall path — encode,
+//! socket, parse, coordinator batch, reply encode, socket, decode.
+//!
+//! Env knobs:
+//! * `SLAY_BENCH_SMOKE=1` — tiny rep counts; ci.sh uses this to exercise
+//!   the whole path (both planes, both front ends) and the JSON emission
+//!   on every run.
+
+use slay::coordinator::state::StoreConfig;
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::math::rng::Rng;
+use slay::math::stats::percentile;
+use slay::net::conn::{MsgReader, WireMsg};
+use slay::net::frame::{encode_frame, ReplyChunkWire, TensorChunkWire, WireOp};
+use slay::net::{serve, Frontend, NetOptions};
+use slay::util::benchkit::{write_json, Table};
+use slay::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const D: usize = 64;
+
+fn coord() -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            mechanism: Mechanism::Slay(SlayConfig::default()),
+            d_head: D,
+            d_v: D,
+            horizon: 1 << 20,
+            // Sequential single-connection roundtrips: one worker and no
+            // batch-forming wait, so samples measure the wire, not the
+            // scheduler (serve_fork house style).
+            workers: 1,
+            max_batch: 1,
+            max_wait: Duration::from_micros(1),
+            store: StoreConfig { max_sequences: 64, ..StoreConfig::default() },
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    )
+}
+
+/// One JSON attend roundtrip; returns seconds.
+fn json_roundtrip(
+    w: &mut TcpStream,
+    r: &mut BufReader<TcpStream>,
+    req: &str,
+    line: &mut String,
+) -> f64 {
+    let t0 = Instant::now();
+    w.write_all(req.as_bytes()).unwrap();
+    line.clear();
+    r.read_line(line).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    assert!(line.contains("\"ok\":true"), "attend failed: {line}");
+    dt
+}
+
+/// One binary attend roundtrip; returns seconds.
+fn binary_roundtrip(w: &mut TcpStream, r: &mut FrameClient, frame: &[u8], n: usize) -> f64 {
+    let t0 = Instant::now();
+    w.write_all(frame).unwrap();
+    let f = r.read_frame();
+    let dt = t0.elapsed().as_secs_f64();
+    assert_eq!(f.op, WireOp::Reply, "attend failed on the binary plane");
+    let reply = ReplyChunkWire::decode(&f.payload).unwrap();
+    assert_eq!(reply.n as usize, n);
+    dt
+}
+
+/// Blocking client side of the binary plane.
+struct FrameClient {
+    stream: TcpStream,
+    reader: MsgReader,
+}
+
+impl FrameClient {
+    fn read_frame(&mut self) -> slay::net::frame::Frame {
+        let mut buf = [0u8; 64 * 1024];
+        loop {
+            if let Some(msg) = self.reader.next_msg().unwrap() {
+                match msg {
+                    WireMsg::Frame(f) => return f,
+                    WireMsg::Line(l) => panic!("expected a frame, got line {l:?}"),
+                }
+            }
+            let n = self.stream.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed mid-reply");
+            self.reader.push(&buf[..n]);
+        }
+    }
+}
+
+fn create_session(w: &mut TcpStream, r: &mut BufReader<TcpStream>) -> u64 {
+    w.write_all(b"{\"op\":\"create\"}\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{line}");
+    j.get("seq").and_then(|v| v.as_usize()).unwrap() as u64
+}
+
+fn main() {
+    let smoke = std::env::var("SLAY_BENCH_SMOKE").is_ok();
+    let (warmup, reps) = if smoke { (2usize, 8usize) } else { (10, 100) };
+    let payloads: &[usize] = if smoke { &[256, 4096] } else { &[256, 1024, 4096] };
+
+    let mut frontends = vec![Frontend::Threads];
+    if slay::net::epoll_supported() {
+        frontends.push(Frontend::Epoll);
+    } else {
+        println!("note: epoll front end unsupported on this target — benching threads only");
+    }
+
+    let mut entries: Vec<Json> = Vec::new();
+    let mut table = Table::new(
+        "Attend roundtrip latency over TCP (ADR-007)",
+        &["Front end", "Plane", "Floats", "p50 ms", "p90 ms", "p99 ms", "tok/s"],
+    );
+    // gate bookkeeping: per front end, p50 @ 4096 floats for each plane
+    let mut gate: Vec<(String, f64, f64)> = Vec::new();
+
+    for &frontend in &frontends {
+        let coordinator = coord();
+        let server = serve(frontend, "127.0.0.1:0", &coordinator, NetOptions::default()).unwrap();
+        let name = server.frontend_name().to_string();
+        let mut p50_json_4096 = f64::NAN;
+        let mut p50_bin_4096 = f64::NAN;
+
+        for &floats in payloads {
+            let n = floats / D;
+            let mut rng = Rng::new(42 + floats as u64);
+            let data: Vec<f32> = (0..floats).map(|_| rng.uniform_f32()).collect();
+
+            for mode in ["json", "binary"] {
+                let stream = TcpStream::connect(server.addr()).unwrap();
+                stream.set_nodelay(true).unwrap();
+                let mut w = stream.try_clone().unwrap();
+                let mut ctl = BufReader::new(stream.try_clone().unwrap());
+                let session = create_session(&mut w, &mut ctl);
+
+                let mut samples: Vec<f64> = Vec::with_capacity(reps);
+                if mode == "json" {
+                    let nums =
+                        data.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",");
+                    let req = format!(
+                        "{{\"op\":\"attend\",\"seq\":{session},\"n\":{n},\"q\":[{nums}],\"k\":[{nums}],\"v\":[{nums}]}}\n"
+                    );
+                    let mut line = String::new();
+                    for i in 0..warmup + reps {
+                        let dt = json_roundtrip(&mut w, &mut ctl, &req, &mut line);
+                        if i >= warmup {
+                            samples.push(dt);
+                        }
+                    }
+                } else {
+                    let tc = TensorChunkWire {
+                        session,
+                        n: n as u32,
+                        d_head: D as u32,
+                        d_v: D as u32,
+                        q: data.clone(),
+                        k: data.clone(),
+                        v: data.clone(),
+                    };
+                    let frame = encode_frame(WireOp::Attend, 1, &tc.encode());
+                    let mut fr = FrameClient {
+                        stream: stream.try_clone().unwrap(),
+                        reader: MsgReader::new(NetOptions::default().max_frame_bytes),
+                    };
+                    for i in 0..warmup + reps {
+                        let dt = binary_roundtrip(&mut w, &mut fr, &frame, n);
+                        if i >= warmup {
+                            samples.push(dt);
+                        }
+                    }
+                }
+
+                let ms: Vec<f64> = samples.iter().map(|s| s * 1e3).collect();
+                let (p50, p90, p99) =
+                    (percentile(&ms, 50.0), percentile(&ms, 90.0), percentile(&ms, 99.0));
+                let total: f64 = samples.iter().sum();
+                let toks = (reps * n) as f64 / total;
+                if floats == 4096 {
+                    if mode == "json" {
+                        p50_json_4096 = p50;
+                    } else {
+                        p50_bin_4096 = p50;
+                    }
+                }
+                table.row(vec![
+                    name.clone(),
+                    mode.into(),
+                    floats.to_string(),
+                    format!("{p50:.3}"),
+                    format!("{p90:.3}"),
+                    format!("{p99:.3}"),
+                    format!("{toks:.0}"),
+                ]);
+                entries.push(Json::obj(vec![
+                    ("op", Json::Str(name.clone())),
+                    ("mode", Json::Str(mode.to_string())),
+                    ("l", Json::Num(floats as f64)),
+                    ("p50_ms", Json::Num(p50)),
+                    ("p90_ms", Json::Num(p90)),
+                    ("p99_ms", Json::Num(p99)),
+                    ("tokens_per_s", Json::Num(toks)),
+                ]));
+            }
+        }
+        gate.push((name, p50_bin_4096, p50_json_4096));
+        server.shutdown_drain(Duration::from_secs(2));
+        drop(coordinator); // workers wind down with the last Arc
+    }
+    table.print();
+
+    write_json(
+        "BENCH_wire.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("serve_wire".into())),
+            ("smoke", Json::Bool(smoke)),
+            ("d_head", Json::Num(D as f64)),
+            ("reps", Json::Num(reps as f64)),
+            ("latency", Json::Arr(entries)),
+        ]),
+    )
+    .unwrap();
+
+    // ADR-007 acceptance gate: at the 4096-float payload the binary plane
+    // must beat JSON on p50 — if shaving the float text codec doesn't
+    // show up at 16 KiB tensors, the frame path has regressed.
+    for (name, bin, json) in &gate {
+        assert!(
+            bin < json,
+            "{name}: binary p50 {bin:.3} ms not better than JSON p50 {json:.3} ms at 4096 floats"
+        );
+        println!("{name}: binary p50 {bin:.3} ms < JSON p50 {json:.3} ms @4096 floats — gate passed");
+    }
+}

@@ -27,6 +27,11 @@
 #                                       smoke of ADR-006; asserts the
 #                                       warm/cold ≤ 0.25 acceptance gate
 #                                       and results/BENCH_fork.json)
+#   * SLAY_BENCH_SMOKE=1 serve_wire    (wire protocol + front-end smoke of
+#                                       ADR-007: JSON vs binary plane over
+#                                       threads and epoll; asserts the
+#                                       binary-beats-JSON p50 gate at 4096
+#                                       floats and results/BENCH_wire.json)
 #   * trajectory                       (rolls the smokes' BENCH_*.json
 #                                       into the tracked
 #                                       BENCH_TRAJECTORY.json and fails
@@ -71,6 +76,11 @@ echo "== serve_fork smoke (COW fork + prefix cache; emits BENCH_fork.json) =="
 rm -f "$RESULTS_DIR/BENCH_fork.json"
 SLAY_BENCH_SMOKE=1 cargo bench --bench serve_fork
 test -f "$RESULTS_DIR/BENCH_fork.json" || { echo "BENCH_fork.json missing"; exit 1; }
+
+echo "== serve_wire smoke (JSON vs binary, threads vs epoll; emits BENCH_wire.json) =="
+rm -f "$RESULTS_DIR/BENCH_wire.json"
+SLAY_BENCH_SMOKE=1 cargo bench --bench serve_wire
+test -f "$RESULTS_DIR/BENCH_wire.json" || { echo "BENCH_wire.json missing"; exit 1; }
 
 echo "== perf trajectory (appends BENCH_TRAJECTORY.json, diffs vs previous entry) =="
 cargo bench --bench trajectory

@@ -65,6 +65,17 @@ fn print_help() {
                                          error instead of spawning (default 1024)\n\
                        --prefix-cache-mb N  shared-prefix cache budget in MiB\n\
                                          (default 64; 0 disables the cache)\n\
+                       --frontend F      threads | epoll | auto (default auto:\n\
+                                         epoll reactor on linux x86_64/aarch64,\n\
+                                         thread-per-connection elsewhere)\n\
+                       --max-frame-mb N  cap on one wire message, binary frame\n\
+                                         payload or JSON line (default 64)\n\
+                       --max-pending-mb N   per-connection unflushed reply bytes\n\
+                                         before reads pause (default 8)\n\
+                       --max-pending-reqs N per-connection in-flight requests\n\
+                                         before reads pause (default 64)\n\
+                       --drain-timeout-ms N shutdown waits this long for in-flight\n\
+                                         replies before closing (default 5000)\n\
          slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
     );
 }
@@ -74,7 +85,8 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "mechanism", "workers", "max-batch", "max-wait-us", "queue-cap", "d-head", "d-v",
         "seqs", "chunks", "chunk-len", "eps", "r-nodes", "n-poly", "d-prf", "poly",
         "fusion", "seed", "listen", "duration-s", "horizon", "window", "spill-dir",
-        "restore", "snapshot-root", "max-conns", "prefix-cache-mb",
+        "restore", "snapshot-root", "max-conns", "prefix-cache-mb", "frontend",
+        "max-frame-mb", "max-pending-mb", "max-pending-reqs", "drain-timeout-ms",
     ])?;
     let mut cfg = config::coordinator_from_args(args)?;
 
@@ -101,21 +113,37 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         None => Coordinator::start(cfg),
     };
 
-    // `--listen addr:port` exposes the coordinator over the JSON-lines TCP
-    // protocol instead of running the synthetic workload.
+    // `--listen addr:port` exposes the coordinator over TCP (JSON lines +
+    // binary frames, see docs/PROTOCOL.md) instead of the synthetic workload.
     if let Some(addr) = args.get("listen") {
         let duration = args.u64_or("duration-s", 0)?;
-        let max_conns = args.usize_or("max-conns", 1024)?;
+        let frontend = crate::net::Frontend::parse(&args.get_or("frontend", "auto"))?;
+        let defaults = crate::net::NetOptions::default();
+        let opts = crate::net::NetOptions {
+            max_conns: args.usize_or("max-conns", defaults.max_conns)?,
+            max_frame_bytes: args.usize_or("max-frame-mb", 64)? * 1024 * 1024,
+            max_pending_bytes: args.usize_or("max-pending-mb", 8)? * 1024 * 1024,
+            max_pending_reqs: args.usize_or("max-pending-reqs", defaults.max_pending_reqs)?,
+            drain_timeout: std::time::Duration::from_millis(
+                args.u64_or("drain-timeout-ms", 5000)?,
+            ),
+        };
         let coord = std::sync::Arc::new(start_coord(cfg)?);
-        let server = crate::coordinator::server::Server::start(addr, coord, max_conns)?;
-        println!("listening on {} (JSON-lines; see coordinator::server docs)", server.addr);
+        let server = crate::net::serve(frontend, addr, &coord, opts)?;
+        println!(
+            "listening on {} ({} front end; JSON lines + binary frames, see docs/PROTOCOL.md)",
+            server.addr(),
+            server.frontend_name()
+        );
         if duration == 0 {
             loop {
                 std::thread::sleep(std::time::Duration::from_secs(3600));
             }
         }
         std::thread::sleep(std::time::Duration::from_secs(duration));
-        server.shutdown();
+        server.shutdown_drain(std::time::Duration::from_millis(
+            args.u64_or("drain-timeout-ms", 5000)?,
+        ));
         return Ok(());
     }
     let n_seqs = args.usize_or("seqs", 16)?;

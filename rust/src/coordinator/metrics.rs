@@ -54,6 +54,25 @@ pub struct Metrics {
     pub active_connections: AtomicU64,
     /// Connections shed at accept because `--max-conns` was reached.
     pub shed_connections: AtomicU64,
+    /// Wire bytes read off client sockets (ADR-007; counted at the
+    /// `read(2)` boundary, so framing overhead is included).
+    pub wire_bytes_rx: AtomicU64,
+    /// Wire bytes actually written to client sockets (counted at the
+    /// `write(2)` boundary, after buffering).
+    pub wire_bytes_tx: AtomicU64,
+    /// Complete wire messages parsed off sockets — JSON lines *and*
+    /// binary frames both count (the planes share one framing layer).
+    pub frames_rx: AtomicU64,
+    /// Complete wire messages queued for clients (replies, per-token
+    /// stream frames, stream terminators, protocol errors).
+    pub frames_tx: AtomicU64,
+    /// Requests rejected before reaching the coordinator: framing or
+    /// checksum failures, oversized frames/lines, malformed ops.
+    pub protocol_errors: AtomicU64,
+    /// Times a connection's reads were paused because its pending-request
+    /// or pending-write-byte cap was hit (backpressure pushed to the
+    /// socket instead of buffering unboundedly).
+    pub backpressure_stalls: AtomicU64,
     /// Latency reservoir (ms) — bounded, replace-random once full.
     latencies: Mutex<Vec<f64>>,
 }
@@ -111,6 +130,12 @@ impl Metrics {
             prefix_cache_bytes: self.prefix_cache_bytes.load(Ordering::Relaxed),
             active_connections: self.active_connections.load(Ordering::Relaxed),
             shed_connections: self.shed_connections.load(Ordering::Relaxed),
+            wire_bytes_rx: self.wire_bytes_rx.load(Ordering::Relaxed),
+            wire_bytes_tx: self.wire_bytes_tx.load(Ordering::Relaxed),
+            frames_rx: self.frames_rx.load(Ordering::Relaxed),
+            frames_tx: self.frames_tx.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
             latency_p50_ms: p50,
             latency_p95_ms: p95,
             latency_mean_ms: mean,
@@ -143,6 +168,12 @@ pub struct Snapshot {
     pub prefix_cache_bytes: u64,
     pub active_connections: u64,
     pub shed_connections: u64,
+    pub wire_bytes_rx: u64,
+    pub wire_bytes_tx: u64,
+    pub frames_rx: u64,
+    pub frames_tx: u64,
+    pub protocol_errors: u64,
+    pub backpressure_stalls: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_mean_ms: f64,
@@ -195,6 +226,12 @@ impl Snapshot {
             ("prefix_cache_bytes", Json::Num(self.prefix_cache_bytes as f64)),
             ("active_connections", Json::Num(self.active_connections as f64)),
             ("shed_connections", Json::Num(self.shed_connections as f64)),
+            ("wire_bytes_rx", Json::Num(self.wire_bytes_rx as f64)),
+            ("wire_bytes_tx", Json::Num(self.wire_bytes_tx as f64)),
+            ("frames_rx", Json::Num(self.frames_rx as f64)),
+            ("frames_tx", Json::Num(self.frames_tx as f64)),
+            ("protocol_errors", Json::Num(self.protocol_errors as f64)),
+            ("backpressure_stalls", Json::Num(self.backpressure_stalls as f64)),
             ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
             ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
             ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
@@ -280,6 +317,31 @@ mod tests {
         assert_eq!(j.get("prefix_cache_bytes").unwrap().as_usize(), Some(2048));
         assert_eq!(j.get("active_connections").unwrap().as_usize(), Some(3));
         assert_eq!(j.get("shed_connections").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn wire_counters_snapshot_and_serialize() {
+        let m = Metrics::new();
+        m.wire_bytes_rx.fetch_add(512, Ordering::Relaxed);
+        m.wire_bytes_tx.fetch_add(256, Ordering::Relaxed);
+        m.frames_rx.fetch_add(7, Ordering::Relaxed);
+        m.frames_tx.fetch_add(8, Ordering::Relaxed);
+        m.protocol_errors.fetch_add(2, Ordering::Relaxed);
+        m.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.wire_bytes_rx, 512);
+        assert_eq!(s.wire_bytes_tx, 256);
+        assert_eq!(s.frames_rx, 7);
+        assert_eq!(s.frames_tx, 8);
+        assert_eq!(s.protocol_errors, 2);
+        assert_eq!(s.backpressure_stalls, 1);
+        let j = s.to_json();
+        assert_eq!(j.get("wire_bytes_rx").unwrap().as_usize(), Some(512));
+        assert_eq!(j.get("wire_bytes_tx").unwrap().as_usize(), Some(256));
+        assert_eq!(j.get("frames_rx").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("frames_tx").unwrap().as_usize(), Some(8));
+        assert_eq!(j.get("protocol_errors").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("backpressure_stalls").unwrap().as_usize(), Some(1));
     }
 
     #[test]

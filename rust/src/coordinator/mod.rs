@@ -52,7 +52,7 @@ pub mod state;
 pub mod worker;
 
 use crate::coordinator::metrics::{Metrics, Snapshot};
-use crate::coordinator::request::{AttendChunk, AttendResult, SeqId, ServeError, WorkItem};
+use crate::coordinator::request::{AttendChunk, AttendResult, ReplyTo, SeqId, ServeError, WorkItem};
 use crate::coordinator::scheduler::BatchPolicy;
 use crate::coordinator::state::StoreConfig;
 use crate::kernels::config::Mechanism;
@@ -246,14 +246,23 @@ impl Coordinator {
         &self,
         chunk: AttendChunk,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<AttendResult>>> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with(chunk, ReplyTo::Channel(tx))?;
+        Ok(rx)
+    }
+
+    /// Non-blocking submit with an explicit reply route. The epoll front
+    /// end (ADR-007) uses [`ReplyTo::Completion`] to fan every in-flight
+    /// request into one tagged queue; validation, accounting, and
+    /// backpressure are identical to [`Coordinator::submit`].
+    pub fn submit_with(&self, chunk: AttendChunk, reply: ReplyTo) -> anyhow::Result<()> {
         chunk.validate(self.cfg.d_head)?;
         let shard = self.shard(chunk.seq);
-        let (tx, rx) = mpsc::channel();
-        let item = WorkItem { chunk, enqueued: std::time::Instant::now(), reply: tx };
+        let item = WorkItem { chunk, enqueued: std::time::Instant::now(), reply };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.inflight.fetch_add(1, Ordering::Relaxed);
         match self.senders[shard].try_send(worker::Msg::Work(item)) {
-            Ok(()) => Ok(rx),
+            Ok(()) => Ok(()),
             Err(mpsc::TrySendError::Full(_)) => {
                 self.inflight.fetch_sub(1, Ordering::Relaxed);
                 self.metrics.rejected.fetch_add(1, Ordering::Relaxed);

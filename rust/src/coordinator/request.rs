@@ -63,11 +63,51 @@ pub struct AttendResult {
     pub latency: std::time::Duration,
 }
 
+/// Where a finished [`WorkItem`]'s result is delivered.
+///
+/// `Channel` is the blocking-caller path: [`Coordinator::submit`] hands the
+/// matching receiver back and the caller parks on it (the thread-per-
+/// connection server, `Coordinator::attend`). `Completion` is the reactor
+/// path (ADR-007): a single-threaded epoll front end cannot park on one
+/// receiver per request, so every in-flight request of a front end fans
+/// into one shared completion queue tagged with an opaque id, and `wake`
+/// nudges the consumer out of its `epoll_pwait` so replies flush promptly.
+///
+/// [`Coordinator::submit`]: crate::coordinator::Coordinator::submit
+pub enum ReplyTo {
+    Channel(mpsc::Sender<anyhow::Result<AttendResult>>),
+    Completion {
+        /// Opaque correlation id, echoed with the result.
+        tag: u64,
+        /// Shared completion queue of the submitting front end.
+        queue: mpsc::Sender<(u64, anyhow::Result<AttendResult>)>,
+        /// Nudges the queue's consumer (e.g. writes the reactor's wake
+        /// pipe). Called after every enqueue.
+        wake: std::sync::Arc<dyn Fn() + Send + Sync>,
+    },
+}
+
+impl ReplyTo {
+    /// Deliver the result. A vanished consumer is not actionable for the
+    /// worker, so the error carries no payload — call sites `let _ =` it
+    /// exactly as they did with a bare `mpsc::Sender`.
+    pub fn send(&self, r: anyhow::Result<AttendResult>) -> Result<(), ()> {
+        match self {
+            ReplyTo::Channel(tx) => tx.send(r).map_err(|_| ()),
+            ReplyTo::Completion { tag, queue, wake } => {
+                let sent = queue.send((*tag, r)).map_err(|_| ());
+                (**wake)();
+                sent
+            }
+        }
+    }
+}
+
 /// What the router moves around internally.
 pub struct WorkItem {
     pub chunk: AttendChunk,
     pub enqueued: std::time::Instant,
-    pub reply: mpsc::Sender<anyhow::Result<AttendResult>>,
+    pub reply: ReplyTo,
 }
 
 /// Errors surfaced to clients.

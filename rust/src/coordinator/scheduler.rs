@@ -45,7 +45,7 @@ pub fn order_batch(items: &mut [WorkItem]) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::{AttendChunk, SeqId};
+    use crate::coordinator::request::{AttendChunk, ReplyTo, SeqId};
     use crate::math::linalg::Mat;
     use crate::math::rng::Rng;
     use std::sync::mpsc;
@@ -61,7 +61,7 @@ mod tests {
                 v: Mat::randn(n, 4, &mut rng),
             },
             enqueued: Instant::now() + Duration::from_millis(t_off_ms),
-            reply: tx,
+            reply: ReplyTo::Channel(tx),
         }
     }
 

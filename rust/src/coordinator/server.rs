@@ -1,8 +1,13 @@
-//! TCP front-end: a JSON-lines protocol over `std::net` exposing the
-//! coordinator to external clients (no HTTP framework is vendored
-//! offline; the protocol is deliberately line-oriented so `nc` works).
+//! Thread-per-connection TCP front end: the portable fallback (ADR-007
+//! pairs it with the Linux epoll reactor in [`crate::net::reactor`]).
 //!
-//! Requests (one JSON object per line):
+//! Both front ends speak the same two-plane protocol through the shared
+//! [`crate::net::conn::MsgReader`]: JSON lines for ops (canonical — `nc`
+//! works), length-prefixed binary frames for tensor traffic (see
+//! `docs/PROTOCOL.md`). Negotiation is per message by first byte, so one
+//! connection can mix planes freely.
+//!
+//! JSON requests (one object per line):
 //! ```text
 //! {"op":"create"}                         -> {"ok":true,"seq":N}
 //! {"op":"attend","seq":N,
@@ -24,22 +29,52 @@
 //! `max_conns` concurrent; past the cap the server writes a one-line JSON
 //! error and closes instead of spawning (`shed_connections` counts these,
 //! `active_connections` gauges the live handlers). The coordinator's own
-//! backpressure bounds admitted work.
+//! backpressure bounds admitted work. Attend/decode requests are parsed
+//! with the lazy scanners in [`crate::util::json`] — the hot path never
+//! materializes a `Json` tree around the float arrays.
+//!
+//! Shutdown drains: [`Server::shutdown_drain`] stops accepting, lets each
+//! handler finish the request it is serving (replies are written whole —
+//! never torn — because handlers only check the drain flag *between*
+//! complete requests), and bounds lingering with the drain timeout.
 
-use crate::coordinator::request::{AttendChunk, SeqId};
+use crate::coordinator::request::{AttendChunk, AttendResult, SeqId};
 use crate::coordinator::Coordinator;
 use crate::math::linalg::Mat;
-use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use crate::net::conn::{MsgReader, WireError, WireMsg};
+use crate::net::frame::{Frame, TensorChunkWire, WireOp};
+use crate::net::{
+    check_tensor_dims, end_frame, error_frame, reply_frame, tensor_row_chunk, tensor_to_chunk,
+    token_frame, NetOptions,
+};
+use crate::util::json::{self, Json};
+use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Idle connections are dropped after this long without a byte.
+const IDLE_TIMEOUT: Duration = Duration::from_secs(30);
+/// Read-poll granularity: how often handlers check drain/idle state.
+const POLL_TICK: Duration = Duration::from_millis(100);
 
 /// A running TCP server bound to `addr`.
 pub struct Server {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
+    shared: Arc<ConnShared>,
     accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+/// State every handler thread shares.
+struct ConnShared {
+    coord: Arc<Coordinator>,
+    metrics: Arc<crate::coordinator::metrics::Metrics>,
+    opts: NetOptions,
+    /// Set by `shutdown_drain`: finish the in-flight request, then close.
+    draining: AtomicBool,
+    drain_ms: AtomicU64,
 }
 
 impl Server {
@@ -47,69 +82,99 @@ impl Server {
     /// ephemeral test port). At most `max_conns` connections are handled
     /// concurrently; excess accepts are shed with a JSON error reply
     /// instead of spawning an unbounded thread.
-    pub fn start(
+    pub fn start(addr: &str, coord: Arc<Coordinator>, max_conns: usize) -> anyhow::Result<Server> {
+        Server::start_with(addr, coord, NetOptions { max_conns, ..NetOptions::default() })
+    }
+
+    /// [`Server::start`] with the full serving knob set.
+    pub fn start_with(
         addr: &str,
         coord: Arc<Coordinator>,
-        max_conns: usize,
+        opts: NetOptions,
     ) -> anyhow::Result<Server> {
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let metrics = coord.metrics_handle();
+        let max_conns = opts.max_conns;
+        let shared = Arc::new(ConnShared {
+            metrics: coord.metrics_handle(),
+            coord,
+            drain_ms: AtomicU64::new(opts.drain_timeout.as_millis() as u64),
+            opts,
+            draining: AtomicBool::new(false),
+        });
+        let shared2 = shared.clone();
         let accept_thread = std::thread::Builder::new()
             .name("slay-server-accept".into())
             .spawn(move || {
                 // Connection threads are detached: joining them on shutdown
-                // would deadlock against clients blocked in read_line. Each
-                // handler exits when its client closes or errors; a read
-                // timeout bounds lingering after shutdown.
+                // would deadlock against clients blocked in a read. Each
+                // handler exits when its client closes, errors, idles out,
+                // or the drain flag fires between requests.
                 while !stop2.load(Ordering::Relaxed) {
                     match listener.accept() {
                         Ok((stream, _)) => {
+                            let sh = &shared2;
                             // Only this thread increments the gauge, so a
                             // plain load-then-add admission check is
                             // race-free; handlers merely free slots.
-                            if metrics.active_connections.load(Ordering::Relaxed)
+                            if sh.metrics.active_connections.load(Ordering::Relaxed)
                                 >= max_conns as u64
                             {
-                                metrics.shed_connections.fetch_add(1, Ordering::Relaxed);
+                                sh.metrics.shed_connections.fetch_add(1, Ordering::Relaxed);
                                 shed(stream, max_conns);
                                 continue;
                             }
-                            let _ = stream
-                                .set_read_timeout(Some(std::time::Duration::from_secs(30)));
-                            metrics.active_connections.fetch_add(1, Ordering::Relaxed);
-                            let c = coord.clone();
-                            let m = metrics.clone();
+                            sh.metrics.active_connections.fetch_add(1, Ordering::Relaxed);
+                            let sh = shared2.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, c);
-                                m.active_connections.fetch_sub(1, Ordering::Relaxed);
+                                let _ = handle_conn(stream, &sh);
+                                sh.metrics.active_connections.fetch_sub(1, Ordering::Relaxed);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                            std::thread::sleep(std::time::Duration::from_millis(5));
+                            std::thread::sleep(Duration::from_millis(5));
                         }
                         Err(_) => break,
                     }
                 }
             })?;
         crate::log_info!("tcp server listening on {local} (max {max_conns} connections)");
-        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(Server { addr: local, stop, shared, accept_thread: Some(accept_thread) })
     }
 
-    /// Stop accepting; existing connections finish their current line.
-    pub fn shutdown(mut self) {
+    /// Stop promptly (zero drain window): no new connections; handlers
+    /// notice between requests and close.
+    pub fn shutdown(self) {
+        self.shutdown_drain(Duration::from_millis(0));
+    }
+
+    /// Graceful drain: stop accepting, let every handler finish the
+    /// request it is serving (bounded by `timeout`), wait for the
+    /// connection gauge to reach zero before returning.
+    pub fn shutdown_drain(mut self, timeout: Duration) {
+        self.shared.drain_ms.store(timeout.as_millis() as u64, Ordering::Relaxed);
+        self.shared.draining.store(true, Ordering::Relaxed);
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
+        }
+        // Handlers poll every POLL_TICK; give them the drain window plus
+        // slack, then give up (they are detached and harmless).
+        let deadline = Instant::now() + timeout + POLL_TICK * 5;
+        while self.shared.metrics.active_connections.load(Ordering::Relaxed) > 0
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
         }
     }
 }
 
 impl Drop for Server {
     fn drop(&mut self) {
+        self.shared.draining.store(true, Ordering::Relaxed);
         self.stop.store(true, Ordering::Relaxed);
         if let Some(h) = self.accept_thread.take() {
             let _ = h.join();
@@ -119,40 +184,216 @@ impl Drop for Server {
 
 /// Refuse a connection over the cap: one JSON error line, then close.
 /// Best-effort — a peer that vanished mid-write is already gone.
-fn shed(mut stream: TcpStream, max_conns: usize) {
-    let reply = Json::obj(vec![
-        ("ok", Json::Bool(false)),
-        (
-            "error",
-            Json::Str(format!("server at connection capacity ({max_conns}); retry later")),
-        ),
-    ]);
+pub(crate) fn shed(mut stream: TcpStream, max_conns: usize) {
+    let reply = error_json(&format!("server at connection capacity ({max_conns}); retry later"));
     let _ = stream.write_all(reply.to_string().as_bytes());
     let _ = stream.write_all(b"\n");
 }
 
-fn handle_conn(stream: TcpStream, coord: Arc<Coordinator>) -> anyhow::Result<()> {
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = stream;
-    let mut line = String::new();
+fn handle_conn(mut stream: TcpStream, sh: &ConnShared) -> anyhow::Result<()> {
+    stream.set_read_timeout(Some(POLL_TICK))?;
+    let d_head = sh.coord.config().d_head;
+    let d_v = sh.coord.config().d_v;
+    let mut reader = MsgReader::new(sh.opts.max_frame_bytes);
+    let mut buf = [0u8; 16 * 1024];
+    let mut last_activity = Instant::now();
+    let mut drain_deadline: Option<Instant> = None;
     loop {
-        line.clear();
-        if reader.read_line(&mut line)? == 0 {
-            return Ok(()); // client closed
+        // Serve every complete message already buffered. The drain flag
+        // is only consulted between messages, so a reply is never torn.
+        loop {
+            match reader.next_msg() {
+                Ok(Some(msg)) => {
+                    last_activity = Instant::now();
+                    sh.metrics.frames_rx.fetch_add(1, Ordering::Relaxed);
+                    serve_msg(&mut stream, sh, d_head, d_v, msg)?;
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    // Framing loss is unrecoverable: report on the plane
+                    // that broke, then close.
+                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    match &e {
+                        WireError::Frame(_) => {
+                            send_bytes(&mut stream, sh, &error_frame(0, &e.to_string()))?
+                        }
+                        WireError::LineTooLong { .. } => {
+                            send_line(&mut stream, sh, &error_json(&e.to_string()))?
+                        }
+                    }
+                    return Ok(());
+                }
+            }
         }
-        if line.trim().is_empty() {
-            continue;
+        if sh.draining.load(Ordering::Relaxed) {
+            let deadline = *drain_deadline.get_or_insert_with(|| {
+                Instant::now() + Duration::from_millis(sh.drain_ms.load(Ordering::Relaxed))
+            });
+            // A half-received request gets until the drain deadline to
+            // finish arriving; an idle connection closes immediately.
+            if reader.buffered() == 0 || Instant::now() >= deadline {
+                return Ok(());
+            }
         }
-        let reply = match handle_line(line.trim(), &coord) {
-            Ok(j) => j,
-            Err(e) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::Str(e.to_string())),
-            ]),
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
+        match stream.read(&mut buf) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(n) => {
+                sh.metrics.wire_bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+                reader.push(&buf[..n]);
+                last_activity = Instant::now();
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if last_activity.elapsed() >= IDLE_TIMEOUT {
+                    return Ok(());
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
     }
+}
+
+fn send_bytes(stream: &mut TcpStream, sh: &ConnShared, bytes: &[u8]) -> anyhow::Result<()> {
+    stream.write_all(bytes)?;
+    sh.metrics.wire_bytes_tx.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+    sh.metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+    Ok(())
+}
+
+fn send_line(stream: &mut TcpStream, sh: &ConnShared, j: &Json) -> anyhow::Result<()> {
+    let mut s = j.to_string();
+    s.push('\n');
+    send_bytes(stream, sh, s.as_bytes())
+}
+
+fn serve_msg(
+    stream: &mut TcpStream,
+    sh: &ConnShared,
+    d_head: usize,
+    d_v: usize,
+    msg: WireMsg,
+) -> anyhow::Result<()> {
+    match msg {
+        WireMsg::Line(line) => {
+            let reply = match parse_line(line.trim(), &sh.coord) {
+                Ok(ParsedLine::Done(j)) => j,
+                Ok(ParsedLine::Chunk(chunk)) => match sh.coord.attend(chunk) {
+                    Ok(r) => attend_reply_json(&r),
+                    Err(e) => error_json(&e.to_string()),
+                },
+                Err(e) => {
+                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    error_json(&e.to_string())
+                }
+            };
+            send_line(stream, sh, &reply)
+        }
+        WireMsg::Frame(f) => serve_frame(stream, sh, d_head, d_v, f),
+    }
+}
+
+fn serve_frame(
+    stream: &mut TcpStream,
+    sh: &ConnShared,
+    d_head: usize,
+    d_v: usize,
+    f: Frame,
+) -> anyhow::Result<()> {
+    match f.op {
+        WireOp::Attend => {
+            match TensorChunkWire::decode(&f.payload)
+                .and_then(|tc| tensor_to_chunk(tc, d_head, d_v))
+            {
+                Ok(chunk) => match sh.coord.attend(chunk) {
+                    Ok(r) => send_bytes(stream, sh, &reply_frame(f.seq, &r)),
+                    // Coordinator refusals (backpressure, unknown sequence)
+                    // are not protocol errors; the connection stays open.
+                    Err(e) => send_bytes(stream, sh, &error_frame(f.seq, &e.to_string())),
+                },
+                Err(e) => {
+                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    send_bytes(stream, sh, &error_frame(f.seq, &e.to_string()))
+                }
+            }
+        }
+        WireOp::DecodeStream => {
+            let tc = match TensorChunkWire::decode(&f.payload).and_then(|tc| {
+                check_tensor_dims(&tc, d_head, d_v)?;
+                Ok(tc)
+            }) {
+                Ok(tc) => tc,
+                Err(e) => {
+                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    return send_bytes(stream, sh, &error_frame(f.seq, &e.to_string()));
+                }
+            };
+            // Row-at-a-time blocking decode: each token frame flushes as
+            // its row completes (the reactor path interleaves rows across
+            // sessions; this path keeps the same wire sequence).
+            let mut ok = true;
+            for i in 0..tc.n {
+                match sh.coord.attend(tensor_row_chunk(&tc, i as usize)) {
+                    Ok(r) => send_bytes(stream, sh, &token_frame(f.seq, i, &r))?,
+                    Err(e) => {
+                        ok = false;
+                        send_bytes(stream, sh, &error_frame(f.seq, &e.to_string()))?;
+                        break;
+                    }
+                }
+            }
+            send_bytes(stream, sh, &end_frame(f.seq, tc.session, ok, tc.n))
+        }
+        WireOp::Reply | WireOp::Token | WireOp::StreamEnd | WireOp::Error => {
+            sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            send_bytes(
+                stream,
+                sh,
+                &error_frame(f.seq, &format!("op {:?} is a reply opcode", f.op)),
+            )
+        }
+    }
+}
+
+// ---- shared op dispatch (both front ends) ----------------------------------
+
+/// A parsed JSON-line request: either a tensor chunk for the coordinator
+/// (the caller chooses blocking vs completion-queue submission) or a
+/// control op already executed to its reply.
+pub(crate) enum ParsedLine {
+    Chunk(AttendChunk),
+    Done(Json),
+}
+
+/// One JSON-line request → [`ParsedLine`]. Attend/decode take the lazy
+/// path (no `Json` tree around the float arrays); control ops parse the
+/// whole line — they are small and rare.
+pub(crate) fn parse_line(line: &str, coord: &Coordinator) -> anyhow::Result<ParsedLine> {
+    let op = json::lazy_get(line, "op").and_then(json::lazy_str);
+    match op.as_deref() {
+        Some(op @ ("attend" | "decode")) => {
+            Ok(ParsedLine::Chunk(parse_attend_lazy(line, op, coord)?))
+        }
+        _ => handle_control(line, coord).map(ParsedLine::Done),
+    }
+}
+
+/// The attend reply shape both front ends emit.
+pub(crate) fn attend_reply_json(res: &AttendResult) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("seq_len", Json::Num(res.seq_len as f64)),
+        ("latency_ms", Json::Num(res.latency.as_secs_f64() * 1e3)),
+        ("y", Json::arr_f32(&res.y.data)),
+    ])
+}
+
+pub(crate) fn error_json(msg: &str) -> Json {
+    Json::obj(vec![("ok", Json::Bool(false)), ("error", Json::Str(msg.to_string()))])
 }
 
 /// Parse the required `seq` field as a nonnegative integer sequence id.
@@ -164,6 +405,18 @@ fn seq_id(req: &Json) -> anyhow::Result<SeqId> {
         .req("seq")?
         .as_f64()
         .ok_or_else(|| anyhow::anyhow!("'seq' must be a number"))?;
+    check_seq(v)
+}
+
+/// Lazy-plane twin of [`seq_id`] (same error strings).
+fn lazy_seq_id(line: &str) -> anyhow::Result<SeqId> {
+    let raw = json::lazy_get(line, "seq")
+        .ok_or_else(|| anyhow::anyhow!("missing json field 'seq'"))?;
+    let v = json::lazy_f64(raw).ok_or_else(|| anyhow::anyhow!("'seq' must be a number"))?;
+    check_seq(v)
+}
+
+fn check_seq(v: f64) -> anyhow::Result<SeqId> {
     anyhow::ensure!(
         v >= 0.0 && v.fract() == 0.0 && v <= u64::MAX as f64,
         "'seq' must be a nonnegative integer (got {v})"
@@ -171,7 +424,45 @@ fn seq_id(req: &Json) -> anyhow::Result<SeqId> {
     Ok(SeqId(v as u64))
 }
 
-fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
+/// Attend/decode via the lazy scanners: only `seq`, `n`, `q`, `k`, `v`
+/// are touched, each parsed straight from its raw slice.
+fn parse_attend_lazy(line: &str, op: &str, coord: &Coordinator) -> anyhow::Result<AttendChunk> {
+    let seq = lazy_seq_id(line)?;
+    // `decode` is single-token sugar: `n` defaults to 1 and, when given,
+    // must be 1 — it shares the attend reply shape.
+    let n = if op == "decode" {
+        let n = json::lazy_get(line, "n")
+            .and_then(json::lazy_f64)
+            .map(|v| v as usize)
+            .unwrap_or(1);
+        anyhow::ensure!(n == 1, "'decode' is single-token (n=1), got n={n}");
+        n
+    } else {
+        let raw = json::lazy_get(line, "n")
+            .ok_or_else(|| anyhow::anyhow!("missing json field 'n'"))?;
+        json::lazy_f64(raw).map(|v| v as usize).unwrap_or(0)
+    };
+    let d_head = coord.config().d_head;
+    let d_v = coord.config().d_v;
+    let get = |key: &str, cols: usize| -> anyhow::Result<Mat> {
+        let raw = json::lazy_get(line, key)
+            .ok_or_else(|| anyhow::anyhow!("missing json field '{key}'"))?;
+        let v = json::lazy_f32_array(raw)
+            .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number array"))?;
+        anyhow::ensure!(
+            v.len() == n * cols,
+            "'{key}' has {} values, expected n*{cols}={}",
+            v.len(),
+            n * cols
+        );
+        Ok(Mat::from_vec(n, cols, v))
+    };
+    Ok(AttendChunk { seq, q: get("q", d_head)?, k: get("k", d_head)?, v: get("v", d_v)? })
+}
+
+/// Control ops (everything but attend/decode): full `Json` parse — small
+/// payloads, and the strict parser gives real error messages.
+fn handle_control(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let op = req
         .get("op")
@@ -234,46 +525,6 @@ fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
                 ("dir", Json::Str(dir.display().to_string())),
             ]))
         }
-        "attend" | "decode" => {
-            let seq = seq_id(&req)?;
-            // `decode` is single-token sugar: `n` defaults to 1 and, when
-            // given, must be 1 — it shares the attend reply shape.
-            let n = if op == "decode" {
-                let n = req.get("n").and_then(|v| v.as_usize()).unwrap_or(1);
-                anyhow::ensure!(n == 1, "'decode' is single-token (n=1), got n={n}");
-                n
-            } else {
-                req.req("n")?.as_usize().unwrap_or(0)
-            };
-            let d_head = coord.config().d_head;
-            let d_v = coord.config().d_v;
-            let get = |key: &str, cols: usize| -> anyhow::Result<Mat> {
-                let v = req
-                    .req(key)?
-                    .as_f32_vec()
-                    .ok_or_else(|| anyhow::anyhow!("'{key}' must be a number array"))?;
-                anyhow::ensure!(
-                    v.len() == n * cols,
-                    "'{key}' has {} values, expected n*{cols}={}",
-                    v.len(),
-                    n * cols
-                );
-                Ok(Mat::from_vec(n, cols, v))
-            };
-            let chunk = AttendChunk {
-                seq,
-                q: get("q", d_head)?,
-                k: get("k", d_head)?,
-                v: get("v", d_v)?,
-            };
-            let res = coord.attend(chunk)?;
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("seq_len", Json::Num(res.seq_len as f64)),
-                ("latency_ms", Json::Num(res.latency.as_secs_f64() * 1e3)),
-                ("y", Json::arr_f32(&res.y.data)),
-            ]))
-        }
         other => anyhow::bail!("unknown op '{other}'"),
     }
 }
@@ -282,6 +533,7 @@ fn handle_line(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
 mod tests {
     use super::*;
     use crate::coordinator::CoordinatorConfig;
+    use crate::net::frame::{encode_frame, ReplyChunkWire};
     use std::io::{BufRead, BufReader, Write};
 
     fn start() -> (Server, Arc<Coordinator>) {
@@ -307,6 +559,24 @@ mod tests {
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
         Json::parse(line.trim()).unwrap()
+    }
+
+    /// Read one complete binary frame off the client side of `stream`.
+    fn read_frame(stream: &TcpStream) -> Frame {
+        let mut reader = MsgReader::new(1 << 24);
+        let mut s = stream.try_clone().unwrap();
+        let mut buf = [0u8; 4096];
+        loop {
+            if let Some(msg) = reader.next_msg().unwrap() {
+                match msg {
+                    WireMsg::Frame(f) => return f,
+                    other => panic!("expected a frame, got {other:?}"),
+                }
+            }
+            let n = s.read(&mut buf).unwrap();
+            assert!(n > 0, "server closed mid-frame");
+            reader.push(&buf[..n]);
+        }
     }
 
     #[test]
@@ -563,5 +833,129 @@ mod tests {
         let m = roundtrip(&third, r#"{"op":"metrics"}"#);
         assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
         server.shutdown();
+    }
+
+    #[test]
+    fn binary_attend_frame_roundtrips_and_counts_wire_metrics() {
+        let (server, coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let created = roundtrip(&stream, r#"{"op":"create"}"#);
+        let session = created.get("seq").unwrap().as_usize().unwrap() as u64;
+
+        // Same numbers as the JSON plane would carry: replies must agree.
+        let json_y = {
+            let ones = vec!["1.0"; 8].join(",");
+            let r = roundtrip(
+                &stream,
+                &format!(
+                    r#"{{"op":"attend","seq":{session},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#
+                ),
+            );
+            r.get("y").unwrap().as_f32_vec().unwrap()
+        };
+
+        // A fresh session replays the same empty→attend transition, so the
+        // binary reply must match the JSON one bit for bit.
+        let fresh = roundtrip(&stream, r#"{"op":"create"}"#).get("seq").unwrap().as_usize().unwrap()
+            as u64;
+        let tc = TensorChunkWire {
+            session: fresh,
+            n: 2,
+            d_head: 4,
+            d_v: 4,
+            q: vec![1.0; 8],
+            k: vec![1.0; 8],
+            v: vec![1.0; 8],
+        };
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(&encode_frame(WireOp::Attend, 77, &tc.encode())).unwrap();
+        let f = read_frame(&stream);
+        assert_eq!(f.op, WireOp::Reply);
+        assert_eq!(f.seq, 77, "reply must echo the client's correlation id");
+        let reply = ReplyChunkWire::decode(&f.payload).unwrap();
+        assert_eq!(reply.session, fresh);
+        assert_eq!(reply.seq_len, 2);
+        assert_eq!((reply.n, reply.d_v), (2, 4));
+        assert_eq!(
+            reply.y.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            json_y.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "binary and JSON planes must produce bit-identical outputs"
+        );
+
+        // Bad geometry is a protocol error frame, and the conn survives.
+        let bad = TensorChunkWire { d_head: 8, q: vec![1.0; 16], k: vec![1.0; 16], ..tc.clone() };
+        w.write_all(&encode_frame(WireOp::Attend, 78, &bad.encode())).unwrap();
+        let f = read_frame(&stream);
+        assert_eq!(f.op, WireOp::Error);
+        assert_eq!(f.seq, 78);
+
+        let snap = coord.metrics();
+        assert!(snap.wire_bytes_rx > 0 && snap.wire_bytes_tx > 0);
+        assert!(snap.frames_rx >= 5 && snap.frames_tx >= 5);
+        assert!(snap.protocol_errors >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn oversized_json_line_is_rejected_then_closed() {
+        let coord = Arc::new(
+            Coordinator::start(CoordinatorConfig {
+                d_head: 4,
+                d_v: 4,
+                workers: 1,
+                ..CoordinatorConfig::default()
+            })
+            .unwrap(),
+        );
+        let server = Server::start_with(
+            "127.0.0.1:0",
+            coord.clone(),
+            NetOptions { max_frame_bytes: 256, ..NetOptions::default() },
+        )
+        .unwrap();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let mut w = stream.try_clone().unwrap();
+        // 4 KiB of line with no newline: must be rejected while buffering.
+        w.write_all(&vec![b'x'; 4096]).unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let reply = Json::parse(line.trim()).unwrap();
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(false));
+        assert!(reply.get("error").unwrap().as_str().unwrap().contains("cap"), "{reply:?}");
+        // ...and the connection is closed (EOF), not left half-alive.
+        line.clear();
+        assert_eq!(r.read_line(&mut line).unwrap(), 0);
+        assert_eq!(coord.metrics().protocol_errors, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn drain_waits_for_an_in_flight_request_and_never_tears_the_reply() {
+        let (server, _coord) = start();
+        let addr = server.addr;
+        let stream = TcpStream::connect(addr).unwrap();
+        // Prove the handler is up, then leave half a request in flight.
+        let m = roundtrip(&stream, r#"{"op":"metrics"}"#);
+        assert_eq!(m.get("ok").unwrap().as_bool(), Some(true));
+        let mut w = stream.try_clone().unwrap();
+        w.write_all(br#"{"op":"create"#).unwrap();
+        // Let the handler buffer the partial request before the drain
+        // flag goes up, so `reader.buffered() > 0` holds the connection.
+        std::thread::sleep(Duration::from_millis(150));
+
+        let done = std::thread::spawn(move || server.shutdown_drain(Duration::from_secs(2)));
+        // New connections are refused once the drain begins (accept loop
+        // exits; connects may still succeed in the backlog but get no
+        // handler). Give the drain a moment to start, then finish the
+        // in-flight request inside the drain window.
+        std::thread::sleep(Duration::from_millis(300));
+        w.write_all(b"\"}\n").unwrap();
+        let mut r = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let reply = Json::parse(line.trim()).expect("drained reply must be a whole JSON line");
+        assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply:?}");
+        done.join().unwrap();
     }
 }

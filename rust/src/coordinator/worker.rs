@@ -534,7 +534,7 @@ fn process_decode_wave(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::AttendChunk;
+    use crate::coordinator::request::{AttendChunk, ReplyTo};
     use crate::math::rng::Rng;
     use std::time::Duration;
 
@@ -564,7 +564,7 @@ mod tests {
                 v: Mat::randn(n, 4, rng),
             },
             enqueued: Instant::now(),
-            reply: tx,
+            reply: ReplyTo::Channel(tx),
         };
         (Msg::Work(item), rx)
     }

@@ -665,7 +665,9 @@ fn state_mech_tag(mech: &Mechanism) -> u64 {
 
 /// FNV-1a 64-bit over `bytes` — the codec's dependency-free payload
 /// checksum (guards spill/snapshot files against truncation and bit rot).
-fn fnv1a64(bytes: &[u8]) -> u64 {
+/// `pub(crate)`: the wire frame codec ([`crate::net::frame`]) shares this
+/// primitive so both serialization tiers fail integrity checks identically.
+pub(crate) fn fnv1a64(bytes: &[u8]) -> u64 {
     let mut h = 0xcbf2_9ce4_8422_2325u64;
     for &b in bytes {
         h ^= b as u64;

@@ -22,6 +22,7 @@ pub mod eval;
 pub mod data;
 pub mod runtime;
 pub mod coordinator;
+pub mod net;
 pub mod train;
 
 pub mod cli_app;

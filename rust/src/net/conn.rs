@@ -1,0 +1,296 @@
+//! Per-connection buffering shared by both front ends (ADR-007).
+//!
+//! [`MsgReader`] is the negotiation point between the two wire planes:
+//! each complete message is classified by its first byte — `b'S'` (the
+//! leading magic byte) starts a binary frame, anything else is a JSON
+//! line. Negotiation is per *message*, not per connection, so one client
+//! can do JSON control ops and binary tensor traffic on the same socket,
+//! and `nc` keeps working unchanged. [`Conn`] adds the epoll reactor's
+//! write side: an owned outgoing buffer flushed opportunistically, whose
+//! depth feeds the backpressure caps.
+
+use crate::net::frame::{decode_frame, Frame, FrameError, WIRE_MAGIC};
+use std::collections::VecDeque;
+use std::io::{self, Write};
+use std::net::TcpStream;
+
+/// One complete inbound wire message, either plane.
+#[derive(Debug)]
+pub enum WireMsg {
+    /// A JSON line (without the trailing newline), lossily decoded.
+    Line(String),
+    /// A binary frame.
+    Frame(Frame),
+}
+
+/// Fatal inbound protocol violations: the connection is told why, then
+/// closed (resynchronizing a byte stream after framing loss is guesswork).
+#[derive(Debug, thiserror::Error)]
+pub enum WireError {
+    #[error(transparent)]
+    Frame(#[from] FrameError),
+    #[error("json line exceeds {cap} byte cap")]
+    LineTooLong { cap: usize },
+}
+
+/// Incremental reader turning raw socket bytes into [`WireMsg`]s.
+pub struct MsgReader {
+    buf: VecDeque<u8>,
+    /// Cap on a single message (binary payload or JSON line), bytes.
+    max_frame_bytes: usize,
+}
+
+impl MsgReader {
+    pub fn new(max_frame_bytes: usize) -> MsgReader {
+        MsgReader { buf: VecDeque::new(), max_frame_bytes }
+    }
+
+    /// Feed bytes read off the socket.
+    pub fn push(&mut self, bytes: &[u8]) {
+        self.buf.extend(bytes);
+    }
+
+    /// Bytes buffered but not yet consumed as complete messages.
+    pub fn buffered(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// Pop the next complete message, if one is fully buffered.
+    ///
+    /// `Err` means the stream is unrecoverable (bad framing, oversized
+    /// message); the caller reports and closes. The buffer is contiguous
+    /// after this call's internal `make_contiguous`, so decoding sees
+    /// plain slices.
+    pub fn next_msg(&mut self) -> Result<Option<WireMsg>, WireError> {
+        loop {
+            // Skip inter-message newlines/blank lines (JSON-lines chatter,
+            // `nc` users hitting return).
+            while matches!(self.buf.front(), Some(b'\n') | Some(b'\r')) {
+                self.buf.pop_front();
+            }
+            let Some(&first) = self.buf.front() else {
+                return Ok(None);
+            };
+            let b = self.buf.make_contiguous();
+            if first == WIRE_MAGIC[0] {
+                match decode_frame(b, self.max_frame_bytes)? {
+                    None => return Ok(None),
+                    Some((frame, consumed)) => {
+                        self.buf.drain(..consumed);
+                        return Ok(Some(WireMsg::Frame(frame)));
+                    }
+                }
+            }
+            // JSON line plane: wait for a newline, cap enforced while
+            // waiting so a single giant line can't buffer unboundedly.
+            match b.iter().position(|&c| c == b'\n') {
+                Some(end) => {
+                    let line = String::from_utf8_lossy(&b[..end]).into_owned();
+                    self.buf.drain(..=end);
+                    if line.trim().is_empty() {
+                        continue;
+                    }
+                    if line.len() > self.max_frame_bytes {
+                        return Err(WireError::LineTooLong { cap: self.max_frame_bytes });
+                    }
+                    return Ok(Some(WireMsg::Line(line)));
+                }
+                None => {
+                    if b.len() > self.max_frame_bytes {
+                        return Err(WireError::LineTooLong { cap: self.max_frame_bytes });
+                    }
+                    return Ok(None);
+                }
+            }
+        }
+    }
+}
+
+/// A reactor-side connection: nonblocking stream + reader + write buffer.
+pub struct Conn {
+    pub stream: TcpStream,
+    pub reader: MsgReader,
+    /// Outgoing bytes; `wpos..` is the unwritten tail.
+    wbuf: Vec<u8>,
+    wpos: usize,
+    /// Requests submitted to the coordinator whose replies haven't been
+    /// queued yet (a streaming decode counts once until its end frame).
+    pub pending: u32,
+    /// Reads paused by backpressure (caps exceeded).
+    pub paused: bool,
+    /// Protocol error sent / drain requested: close once flushed.
+    pub closing: bool,
+    /// epoll interest currently registered for this fd.
+    pub interest: u32,
+}
+
+/// Compact the write buffer once the dead prefix crosses this threshold.
+const WBUF_COMPACT: usize = 64 * 1024;
+
+impl Conn {
+    pub fn new(stream: TcpStream, max_frame_bytes: usize) -> Conn {
+        Conn {
+            stream,
+            reader: MsgReader::new(max_frame_bytes),
+            wbuf: Vec::new(),
+            wpos: 0,
+            pending: 0,
+            paused: false,
+            closing: false,
+            interest: 0,
+        }
+    }
+
+    /// Queue bytes for writing (actual socket writes happen in `flush`).
+    pub fn queue(&mut self, bytes: &[u8]) {
+        self.wbuf.extend_from_slice(bytes);
+    }
+
+    /// Unwritten outgoing bytes (the backpressure gauge).
+    pub fn pending_write_bytes(&self) -> usize {
+        self.wbuf.len() - self.wpos
+    }
+
+    pub fn is_flushed(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    /// Write as much of the buffer as the socket accepts right now.
+    /// Returns bytes written this call; `WouldBlock` is not an error.
+    pub fn flush(&mut self) -> io::Result<usize> {
+        let mut written = 0usize;
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => return Err(io::Error::new(io::ErrorKind::WriteZero, "peer gone")),
+                Ok(n) => {
+                    self.wpos += n;
+                    written += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.wpos == self.wbuf.len() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > WBUF_COMPACT && self.wpos * 2 > self.wbuf.len() {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::frame::{encode_frame, WireOp};
+    use crate::util::quickprop;
+
+    #[test]
+    fn interleaved_planes_parse_in_order() {
+        let mut r = MsgReader::new(1 << 20);
+        let mut wire = Vec::new();
+        wire.extend_from_slice(b"{\"op\":\"metrics\"}\n");
+        wire.extend_from_slice(&encode_frame(WireOp::Attend, 3, b"abc"));
+        wire.extend_from_slice(b"\r\n{\"op\":\"create\"}\n");
+        r.push(&wire);
+        match r.next_msg().unwrap().unwrap() {
+            WireMsg::Line(l) => assert_eq!(l, "{\"op\":\"metrics\"}"),
+            other => panic!("{other:?}"),
+        }
+        match r.next_msg().unwrap().unwrap() {
+            WireMsg::Frame(f) => {
+                assert_eq!(f.op, WireOp::Attend);
+                assert_eq!(f.seq, 3);
+                assert_eq!(f.payload, b"abc");
+            }
+            other => panic!("{other:?}"),
+        }
+        match r.next_msg().unwrap().unwrap() {
+            WireMsg::Line(l) => assert_eq!(l, "{\"op\":\"create\"}"),
+            other => panic!("{other:?}"),
+        }
+        assert!(r.next_msg().unwrap().is_none());
+        assert_eq!(r.buffered(), 0);
+    }
+
+    #[test]
+    fn random_chunking_never_changes_the_message_stream() {
+        // Split one multi-message byte stream at random points; the
+        // reassembled message sequence must not depend on the chunking.
+        quickprop::check(
+            0xc0de,
+            64,
+            |rng| {
+                let cuts: Vec<usize> = (0..rng.below(12)).map(|_| rng.below(1 << 16)).collect();
+                (rng.below(1 << 30), cuts)
+            },
+            |(seed, cuts)| {
+                let mut wire = Vec::new();
+                let mut want = Vec::new();
+                for i in 0..5u64 {
+                    let line = format!("{{\"op\":\"len\",\"i\":{i}}}");
+                    wire.extend_from_slice(line.as_bytes());
+                    wire.push(b'\n');
+                    want.push(format!("L:{line}"));
+                    let payload = vec![(seed % 251) as u8; (i as usize) * 7];
+                    wire.extend_from_slice(&encode_frame(WireOp::Reply, i, &payload));
+                    want.push(format!("F:{i}:{}", payload.len()));
+                }
+                let mut r = MsgReader::new(1 << 20);
+                let mut got = Vec::new();
+                let mut pos = 0usize;
+                let mut cut_i = 0usize;
+                while pos < wire.len() {
+                    let step = 1 + cuts.get(cut_i).copied().unwrap_or(wire.len()) % wire.len();
+                    cut_i += 1;
+                    let end = (pos + step).min(wire.len());
+                    r.push(&wire[pos..end]);
+                    pos = end;
+                    loop {
+                        match r.next_msg().map_err(|e| format!("wire error: {e}"))? {
+                            Some(WireMsg::Line(l)) => got.push(format!("L:{l}")),
+                            Some(WireMsg::Frame(f)) => {
+                                got.push(format!("F:{}:{}", f.seq, f.payload.len()))
+                            }
+                            None => break,
+                        }
+                    }
+                }
+                if got != *want {
+                    return Err(format!("got {got:?}, want {want:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn oversized_line_and_frame_rejected() {
+        // A giant line with no newline in sight must fail while buffering,
+        // not after the attacker supplies the newline.
+        let mut r = MsgReader::new(64);
+        r.push(&vec![b'{'; 65]);
+        assert!(matches!(r.next_msg(), Err(WireError::LineTooLong { cap: 64 })));
+        // Oversized binary frame: cap fires from the header.
+        let mut r = MsgReader::new(64);
+        r.push(&encode_frame(WireOp::Attend, 1, &[0u8; 65]));
+        assert!(matches!(r.next_msg(), Err(WireError::Frame(FrameError::Oversize { .. }))));
+    }
+
+    #[test]
+    fn garbage_that_is_not_json_or_magic_waits_for_newline() {
+        // Non-'S' garbage is treated as a (doomed) JSON line — it errors
+        // at parse time, not framing time, keeping `nc` typos survivable.
+        let mut r = MsgReader::new(1 << 10);
+        r.push(b"hello world");
+        assert!(r.next_msg().unwrap().is_none());
+        r.push(b"\n");
+        match r.next_msg().unwrap().unwrap() {
+            WireMsg::Line(l) => assert_eq!(l, "hello world"),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,536 @@
+//! Length-prefixed binary wire frames for the data plane (ADR-007).
+//!
+//! Layout (all integers little-endian, matching the `AttnState` session
+//! codec house style from ADR-004):
+//!
+//! ```text
+//! magic "SLAYWIRE" (8B) | version u32 | op u32 | seq u64 |
+//! payload_len u64 | payload (payload_len B) | fnv1a64(payload) u64
+//! ```
+//!
+//! `seq` is an opaque client correlation id echoed verbatim on every
+//! reply frame belonging to the request. The checksum covers the payload
+//! only — the header is validated structurally (magic byte-for-byte,
+//! exact version match, known op, capped length) *before* the payload is
+//! buffered, so a hostile length field never allocates. Decoding is
+//! incremental: [`decode_frame`] returns `Ok(None)` while bytes are still
+//! in flight and an error as soon as the prefix already read can't be a
+//! valid frame.
+
+use crate::kernels::fnv1a64;
+
+/// Leading byte `b'S'` doubles as the per-message plane discriminator —
+/// JSON lines can't start with it (objects start with `{`).
+pub const WIRE_MAGIC: [u8; 8] = *b"SLAYWIRE";
+pub const WIRE_VERSION: u32 = 1;
+/// Fixed prefix before the payload: magic + version + op + seq + len.
+pub const HEADER_BYTES: usize = 8 + 4 + 4 + 8 + 8;
+/// Checksum after the payload.
+pub const TRAILER_BYTES: usize = 8;
+
+/// Frame opcodes. Requests are < 16, replies ≥ 16.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u32)]
+pub enum WireOp {
+    /// Request: attend a tensor chunk ([`TensorChunkWire`] payload).
+    Attend = 1,
+    /// Request: decode `n` tokens, streaming one [`WireOp::Token`] frame
+    /// per row as waves complete ([`TensorChunkWire`] payload).
+    DecodeStream = 2,
+    /// Reply to [`WireOp::Attend`] ([`ReplyChunkWire`] payload).
+    Reply = 16,
+    /// One streamed decode row ([`TokenReplyWire`] payload).
+    Token = 17,
+    /// Stream terminator ([`StreamEndWire`] payload).
+    StreamEnd = 18,
+    /// Error reply; payload is the raw UTF-8 message.
+    Error = 19,
+}
+
+impl WireOp {
+    pub fn from_u32(v: u32) -> Option<WireOp> {
+        match v {
+            1 => Some(WireOp::Attend),
+            2 => Some(WireOp::DecodeStream),
+            16 => Some(WireOp::Reply),
+            17 => Some(WireOp::Token),
+            18 => Some(WireOp::StreamEnd),
+            19 => Some(WireOp::Error),
+            _ => None,
+        }
+    }
+}
+
+/// A decoded frame (payload still opaque bytes; see the `*Wire` codecs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub op: WireOp,
+    pub seq: u64,
+    pub payload: Vec<u8>,
+}
+
+/// Why a byte prefix can never become a valid frame.
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum FrameError {
+    #[error("bad frame magic (expected \"SLAYWIRE\")")]
+    BadMagic,
+    #[error("unsupported wire version {0} (speaking {WIRE_VERSION})")]
+    Version(u32),
+    #[error("unknown wire op {0}")]
+    UnknownOp(u32),
+    #[error("frame payload of {got} bytes exceeds cap of {cap} bytes")]
+    Oversize { got: u64, cap: u64 },
+    #[error("frame payload checksum mismatch")]
+    Checksum,
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn get_u32(b: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(b[at..at + 4].try_into().unwrap())
+}
+
+fn get_u64(b: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(b[at..at + 8].try_into().unwrap())
+}
+
+/// Serialize one frame.
+pub fn encode_frame(op: WireOp, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(HEADER_BYTES + payload.len() + TRAILER_BYTES);
+    out.extend_from_slice(&WIRE_MAGIC);
+    put_u32(&mut out, WIRE_VERSION);
+    put_u32(&mut out, op as u32);
+    put_u64(&mut out, seq);
+    put_u64(&mut out, payload.len() as u64);
+    out.extend_from_slice(payload);
+    put_u64(&mut out, fnv1a64(payload));
+    out
+}
+
+/// Incremental decode from the front of `buf`.
+///
+/// * `Ok(None)` — prefix is consistent but the frame isn't complete yet;
+/// * `Ok(Some((frame, consumed)))` — one frame decoded, drop `consumed`
+///   bytes from the front;
+/// * `Err(_)` — the prefix can never become a valid frame (close the
+///   connection after reporting).
+///
+/// `max_payload` caps `payload_len` *before* any buffering decision, so
+/// an adversarial header is rejected from its first 32 bytes.
+pub fn decode_frame(buf: &[u8], max_payload: usize) -> Result<Option<(Frame, usize)>, FrameError> {
+    // Magic is checked byte-for-byte on whatever prefix exists: garbage
+    // fails fast instead of stalling a "frame" that never completes.
+    let n_magic = buf.len().min(WIRE_MAGIC.len());
+    if buf[..n_magic] != WIRE_MAGIC[..n_magic] {
+        return Err(FrameError::BadMagic);
+    }
+    if buf.len() < HEADER_BYTES {
+        return Ok(None);
+    }
+    let version = get_u32(buf, 8);
+    if version != WIRE_VERSION {
+        return Err(FrameError::Version(version));
+    }
+    let op_raw = get_u32(buf, 12);
+    let op = WireOp::from_u32(op_raw).ok_or(FrameError::UnknownOp(op_raw))?;
+    let seq = get_u64(buf, 16);
+    let payload_len = get_u64(buf, 24);
+    if payload_len > max_payload as u64 {
+        return Err(FrameError::Oversize { got: payload_len, cap: max_payload as u64 });
+    }
+    let payload_len = payload_len as usize;
+    let total = HEADER_BYTES + payload_len + TRAILER_BYTES;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let payload = &buf[HEADER_BYTES..HEADER_BYTES + payload_len];
+    let stored = get_u64(buf, HEADER_BYTES + payload_len);
+    if fnv1a64(payload) != stored {
+        return Err(FrameError::Checksum);
+    }
+    Ok(Some((Frame { op, seq, payload: payload.to_vec() }, total)))
+}
+
+// ---- payload codecs --------------------------------------------------------
+
+/// Little cursor for payload decoding; all reads are bounds-checked with
+/// readable errors (these surface to clients as protocol errors).
+struct Rd<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        anyhow::ensure!(self.pos + 4 <= self.b.len(), "payload truncated");
+        let v = get_u32(self.b, self.pos);
+        self.pos += 4;
+        Ok(v)
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        anyhow::ensure!(self.pos + 8 <= self.b.len(), "payload truncated");
+        let v = get_u64(self.b, self.pos);
+        self.pos += 8;
+        Ok(v)
+    }
+
+    fn f32s(&mut self, count: usize) -> anyhow::Result<Vec<f32>> {
+        let bytes = count.checked_mul(4).ok_or_else(|| anyhow::anyhow!("length overflow"))?;
+        anyhow::ensure!(self.pos + bytes <= self.b.len(), "payload truncated");
+        let out = self.b[self.pos..self.pos + bytes]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        self.pos += bytes;
+        Ok(out)
+    }
+
+    fn done(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.pos == self.b.len(), "trailing bytes in payload");
+        Ok(())
+    }
+}
+
+fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    out.reserve(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// [`WireOp::Attend`] / [`WireOp::DecodeStream`] request payload:
+/// `session u64 | n u32 | d_head u32 | d_v u32 | q | k | v` (row-major
+/// f32 LE; q,k are `n × d_head`, v is `n × d_v`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorChunkWire {
+    pub session: u64,
+    pub n: u32,
+    pub d_head: u32,
+    pub d_v: u32,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl TensorChunkWire {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(20 + 4 * (self.q.len() + self.k.len() + self.v.len()));
+        put_u64(&mut out, self.session);
+        put_u32(&mut out, self.n);
+        put_u32(&mut out, self.d_head);
+        put_u32(&mut out, self.d_v);
+        put_f32s(&mut out, &self.q);
+        put_f32s(&mut out, &self.k);
+        put_f32s(&mut out, &self.v);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<TensorChunkWire> {
+        let mut rd = Rd { b: payload, pos: 0 };
+        let session = rd.u64()?;
+        let n = rd.u32()?;
+        let d_head = rd.u32()?;
+        let d_v = rd.u32()?;
+        // All size math in u64 so hostile u32 dims can't overflow usize
+        // products on 32-bit targets before the length check fires.
+        let qk = (n as u64).checked_mul(d_head as u64);
+        let vv = (n as u64).checked_mul(d_v as u64);
+        let floats = qk
+            .zip(vv)
+            .and_then(|(qk, vv)| qk.checked_mul(2)?.checked_add(vv))
+            .ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?;
+        let want = 20u64
+            .checked_add(floats.checked_mul(4).ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?)
+            .ok_or_else(|| anyhow::anyhow!("tensor dims overflow"))?;
+        anyhow::ensure!(
+            want == payload.len() as u64,
+            "tensor payload is {} bytes, dims n={n} d_head={d_head} d_v={d_v} require {want}",
+            payload.len()
+        );
+        let per = (n as usize) * (d_head as usize);
+        let q = rd.f32s(per)?;
+        let k = rd.f32s(per)?;
+        let v = rd.f32s((n as usize) * (d_v as usize))?;
+        rd.done()?;
+        Ok(TensorChunkWire { session, n, d_head, d_v, q, k, v })
+    }
+}
+
+/// [`WireOp::Reply`] payload:
+/// `session u64 | seq_len u64 | n u32 | d_v u32 | y` (n × d_v f32 LE).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplyChunkWire {
+    pub session: u64,
+    pub seq_len: u64,
+    pub n: u32,
+    pub d_v: u32,
+    pub y: Vec<f32>,
+}
+
+impl ReplyChunkWire {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + 4 * self.y.len());
+        put_u64(&mut out, self.session);
+        put_u64(&mut out, self.seq_len);
+        put_u32(&mut out, self.n);
+        put_u32(&mut out, self.d_v);
+        put_f32s(&mut out, &self.y);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<ReplyChunkWire> {
+        let mut rd = Rd { b: payload, pos: 0 };
+        let session = rd.u64()?;
+        let seq_len = rd.u64()?;
+        let n = rd.u32()?;
+        let d_v = rd.u32()?;
+        let count = (n as u64)
+            .checked_mul(d_v as u64)
+            .filter(|&c| c <= usize::MAX as u64)
+            .ok_or_else(|| anyhow::anyhow!("reply dims overflow"))?;
+        let y = rd.f32s(count as usize)?;
+        rd.done()?;
+        Ok(ReplyChunkWire { session, seq_len, n, d_v, y })
+    }
+}
+
+/// [`WireOp::Token`] payload — one streamed decode row:
+/// `session u64 | seq_len u64 | index u32 | d_v u32 | y` (d_v f32 LE).
+/// `index` is the 0-based row within the originating request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TokenReplyWire {
+    pub session: u64,
+    pub seq_len: u64,
+    pub index: u32,
+    pub d_v: u32,
+    pub y: Vec<f32>,
+}
+
+impl TokenReplyWire {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(24 + 4 * self.y.len());
+        put_u64(&mut out, self.session);
+        put_u64(&mut out, self.seq_len);
+        put_u32(&mut out, self.index);
+        put_u32(&mut out, self.d_v);
+        put_f32s(&mut out, &self.y);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<TokenReplyWire> {
+        let mut rd = Rd { b: payload, pos: 0 };
+        let session = rd.u64()?;
+        let seq_len = rd.u64()?;
+        let index = rd.u32()?;
+        let d_v = rd.u32()?;
+        let y = rd.f32s(d_v as usize)?;
+        rd.done()?;
+        Ok(TokenReplyWire { session, seq_len, index, d_v, y })
+    }
+}
+
+/// [`WireOp::StreamEnd`] payload: `session u64 | ok u32 | total u32`.
+/// `ok == 1` iff every requested token produced a [`WireOp::Token`]
+/// frame; `total` is the number of tokens originally requested.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamEndWire {
+    pub session: u64,
+    pub ok: bool,
+    pub total: u32,
+}
+
+impl StreamEndWire {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        put_u64(&mut out, self.session);
+        put_u32(&mut out, self.ok as u32);
+        put_u32(&mut out, self.total);
+        out
+    }
+
+    pub fn decode(payload: &[u8]) -> anyhow::Result<StreamEndWire> {
+        let mut rd = Rd { b: payload, pos: 0 };
+        let session = rd.u64()?;
+        let ok = rd.u32()?;
+        let total = rd.u32()?;
+        rd.done()?;
+        Ok(StreamEndWire { session, ok: ok != 0, total })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickprop;
+
+    const CAP: usize = 1 << 20;
+    const OPS: [WireOp; 6] = [
+        WireOp::Attend,
+        WireOp::DecodeStream,
+        WireOp::Reply,
+        WireOp::Token,
+        WireOp::StreamEnd,
+        WireOp::Error,
+    ];
+
+    #[test]
+    fn random_frames_roundtrip() {
+        quickprop::check(
+            0xf2a7,
+            128,
+            |rng| {
+                let op = rng.below(OPS.len());
+                let seq = rng.below(1 << 30);
+                let payload: Vec<usize> =
+                    (0..rng.below(512)).map(|_| rng.below(256)).collect();
+                (op, seq, payload)
+            },
+            |(op_i, seq, payload)| {
+                let payload: Vec<u8> = payload.iter().map(|&b| b as u8).collect();
+                let op = OPS[*op_i % OPS.len()];
+                let bytes = encode_frame(op, *seq as u64, &payload);
+                // Trailing garbage after the frame must not confuse `consumed`.
+                let mut wire = bytes.clone();
+                wire.extend_from_slice(b"SLAYWIRE-next");
+                let (frame, consumed) = decode_frame(&wire, CAP)
+                    .map_err(|e| format!("decode failed: {e}"))?
+                    .ok_or("decode returned incomplete on a full frame")?;
+                if consumed != bytes.len() {
+                    return Err(format!("consumed {consumed} != {}", bytes.len()));
+                }
+                if frame.op != op || frame.seq != *seq as u64 || frame.payload != payload {
+                    return Err("frame fields did not roundtrip".into());
+                }
+                // Every strict prefix is incomplete, never an error.
+                for cut in 0..bytes.len() {
+                    match decode_frame(&bytes[..cut], CAP) {
+                        Ok(None) => {}
+                        other => return Err(format!("prefix {cut}: {other:?}")),
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn corrupt_checksum_rejected() {
+        let mut bytes = encode_frame(WireOp::Attend, 7, b"payload");
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xff;
+        assert_eq!(decode_frame(&bytes, CAP), Err(FrameError::Checksum));
+        // Payload flip breaks the stored checksum too.
+        let mut bytes = encode_frame(WireOp::Attend, 7, b"payload");
+        bytes[HEADER_BYTES] ^= 0x01;
+        assert_eq!(decode_frame(&bytes, CAP), Err(FrameError::Checksum));
+    }
+
+    #[test]
+    fn truncated_header_is_incomplete_but_garbage_fails_fast() {
+        assert_eq!(decode_frame(b"", CAP), Ok(None));
+        assert_eq!(decode_frame(b"SLAY", CAP), Ok(None));
+        assert_eq!(decode_frame(b"SLAYWIRE\x01\x00", CAP), Ok(None));
+        // Wrong bytes anywhere in the magic are rejected immediately,
+        // even from a single byte.
+        assert_eq!(decode_frame(b"X", CAP), Err(FrameError::BadMagic));
+        assert_eq!(decode_frame(b"SLAYWIRX\x01", CAP), Err(FrameError::BadMagic));
+    }
+
+    #[test]
+    fn oversized_length_rejected_from_header_alone() {
+        // Hand-craft a header claiming a huge payload; no payload bytes
+        // follow, but the cap must fire from the 32-byte prefix.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&WIRE_MAGIC);
+        bytes.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(WireOp::Attend as u32).to_le_bytes());
+        bytes.extend_from_slice(&0u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        assert_eq!(
+            decode_frame(&bytes, CAP),
+            Err(FrameError::Oversize { got: u64::MAX, cap: CAP as u64 })
+        );
+        // At exactly the cap the frame is merely incomplete.
+        bytes.truncate(24);
+        bytes.extend_from_slice(&(CAP as u64).to_le_bytes());
+        assert_eq!(decode_frame(&bytes, CAP), Ok(None));
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bytes = encode_frame(WireOp::Reply, 1, b"x");
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        assert_eq!(decode_frame(&bytes, CAP), Err(FrameError::Version(2)));
+    }
+
+    #[test]
+    fn unknown_op_rejected() {
+        let mut bytes = encode_frame(WireOp::Reply, 1, b"x");
+        bytes[12..16].copy_from_slice(&99u32.to_le_bytes());
+        assert_eq!(decode_frame(&bytes, CAP), Err(FrameError::UnknownOp(99)));
+    }
+
+    #[test]
+    fn tensor_chunk_roundtrips() {
+        let tc = TensorChunkWire {
+            session: 42,
+            n: 3,
+            d_head: 4,
+            d_v: 2,
+            q: (0..12).map(|i| i as f32 * 0.5).collect(),
+            k: (0..12).map(|i| -(i as f32)).collect(),
+            v: (0..6).map(|i| i as f32 + 0.25).collect(),
+        };
+        let back = TensorChunkWire::decode(&tc.encode()).unwrap();
+        assert_eq!(back, tc);
+    }
+
+    #[test]
+    fn tensor_chunk_rejects_bad_sizes_without_panicking() {
+        let tc = TensorChunkWire {
+            session: 1,
+            n: 2,
+            d_head: 2,
+            d_v: 2,
+            q: vec![0.0; 4],
+            k: vec![0.0; 4],
+            v: vec![0.0; 4],
+        };
+        let good = tc.encode();
+        // Truncated and extended payloads both fail the exact-size check.
+        assert!(TensorChunkWire::decode(&good[..good.len() - 1]).is_err());
+        let mut long = good.clone();
+        long.push(0);
+        assert!(TensorChunkWire::decode(&long).is_err());
+        // Hostile dims: u32::MAX everywhere must error, not overflow.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(&1u64.to_le_bytes());
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        evil.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(TensorChunkWire::decode(&evil).is_err());
+        assert!(TensorChunkWire::decode(b"short").is_err());
+    }
+
+    #[test]
+    fn reply_token_and_end_payloads_roundtrip() {
+        let r = ReplyChunkWire { session: 9, seq_len: 128, n: 2, d_v: 3, y: vec![1.0; 6] };
+        assert_eq!(ReplyChunkWire::decode(&r.encode()).unwrap(), r);
+        let t = TokenReplyWire { session: 9, seq_len: 129, index: 5, d_v: 3, y: vec![0.5; 3] };
+        assert_eq!(TokenReplyWire::decode(&t.encode()).unwrap(), t);
+        for ok in [true, false] {
+            let e = StreamEndWire { session: 9, ok, total: 17 };
+            assert_eq!(StreamEndWire::decode(&e.encode()).unwrap(), e);
+        }
+        assert!(ReplyChunkWire::decode(b"").is_err());
+        assert!(TokenReplyWire::decode(&[0u8; 23]).is_err());
+        assert!(StreamEndWire::decode(&[0u8; 17]).is_err());
+    }
+}

@@ -1,0 +1,280 @@
+//! Serving front ends (ADR-007): wire framing, per-connection buffering,
+//! and the Linux epoll reactor, in front of the coordinator's batching.
+//!
+//! Two front ends speak the same two-plane protocol (JSON lines for
+//! control ops, length-prefixed binary frames for tensor traffic — see
+//! `docs/PROTOCOL.md`):
+//!
+//! * **threads** ([`crate::coordinator::server::Server`]) — one blocking
+//!   thread per connection; portable, the fallback everywhere.
+//! * **epoll** ([`reactor::EpollServer`]) — one reactor thread
+//!   multiplexing thousands of nonblocking connections; Linux
+//!   x86_64/aarch64 only (raw syscalls, no libc crate — the
+//!   zero-dependency rule).
+//!
+//! Both produce byte-identical replies by construction: they share the
+//! op dispatch ([`crate::coordinator::server::parse_line`]), the message
+//! reader ([`conn::MsgReader`]), and the frame codecs ([`frame`]).
+
+pub mod conn;
+pub mod frame;
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+pub mod reactor;
+
+use crate::coordinator::request::{AttendChunk, AttendResult, SeqId};
+use crate::coordinator::server::Server;
+use crate::coordinator::Coordinator;
+use crate::math::linalg::Mat;
+use crate::net::frame::{
+    encode_frame, ReplyChunkWire, StreamEndWire, TensorChunkWire, TokenReplyWire, WireOp,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Serving knobs shared by both front ends.
+#[derive(Clone, Debug)]
+pub struct NetOptions {
+    /// Admission cap: connections past this are shed with an error.
+    pub max_conns: usize,
+    /// Cap on a single wire message (binary payload or JSON line), bytes.
+    pub max_frame_bytes: usize,
+    /// Per-connection unflushed reply bytes before reads pause.
+    pub max_pending_bytes: usize,
+    /// Per-connection in-flight requests before reads pause.
+    pub max_pending_reqs: usize,
+    /// How long shutdown waits for in-flight replies before closing.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetOptions {
+    fn default() -> NetOptions {
+        NetOptions {
+            max_conns: 1024,
+            max_frame_bytes: 64 * 1024 * 1024,
+            max_pending_bytes: 8 * 1024 * 1024,
+            max_pending_reqs: 64,
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Which front end to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frontend {
+    Threads,
+    Epoll,
+    /// Epoll where supported, threads elsewhere.
+    Auto,
+}
+
+impl Frontend {
+    pub fn parse(s: &str) -> anyhow::Result<Frontend> {
+        match s {
+            "threads" => Ok(Frontend::Threads),
+            "epoll" => Ok(Frontend::Epoll),
+            "auto" => Ok(Frontend::Auto),
+            other => anyhow::bail!("unknown frontend '{other}' (expected threads|epoll|auto)"),
+        }
+    }
+}
+
+/// Whether the epoll reactor can run on this build target.
+pub fn epoll_supported() -> bool {
+    cfg!(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))
+}
+
+/// A running front end of either kind.
+pub enum Listening {
+    Threads(Server),
+    #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+    Epoll(reactor::EpollServer),
+}
+
+impl Listening {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        match self {
+            Listening::Threads(s) => s.addr,
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            Listening::Epoll(s) => s.addr(),
+        }
+    }
+
+    pub fn frontend_name(&self) -> &'static str {
+        match self {
+            Listening::Threads(_) => "threads",
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            Listening::Epoll(_) => "epoll",
+        }
+    }
+
+    /// Stop promptly: no new connections, best-effort flush, close.
+    pub fn shutdown(self) {
+        self.shutdown_drain(Duration::from_millis(0));
+    }
+
+    /// Graceful drain: stop accepting, let in-flight requests finish
+    /// their replies (bounded by `timeout`), then close sockets.
+    pub fn shutdown_drain(self, timeout: Duration) {
+        match self {
+            Listening::Threads(s) => s.shutdown_drain(timeout),
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            Listening::Epoll(mut s) => s.shutdown_drain(timeout),
+        }
+    }
+}
+
+/// Bind and start serving `addr` with the requested front end.
+pub fn serve(
+    frontend: Frontend,
+    addr: &str,
+    coord: &Arc<Coordinator>,
+    opts: NetOptions,
+) -> anyhow::Result<Listening> {
+    match frontend {
+        Frontend::Threads => {
+            Ok(Listening::Threads(Server::start_with(addr, coord.clone(), opts)?))
+        }
+        Frontend::Epoll => start_epoll(addr, coord, opts),
+        Frontend::Auto => {
+            if epoll_supported() {
+                start_epoll(addr, coord, opts)
+            } else {
+                Ok(Listening::Threads(Server::start_with(addr, coord.clone(), opts)?))
+            }
+        }
+    }
+}
+
+// `start_epoll` is cfg-duplicated (one real, one bailing) so `serve`
+// stays free of cfg blocks inside match arms.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn start_epoll(addr: &str, coord: &Arc<Coordinator>, opts: NetOptions) -> anyhow::Result<Listening> {
+    Ok(Listening::Epoll(reactor::EpollServer::start(addr, coord, opts)?))
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn start_epoll(
+    _addr: &str,
+    _coord: &Arc<Coordinator>,
+    _opts: NetOptions,
+) -> anyhow::Result<Listening> {
+    anyhow::bail!("the epoll front end requires linux x86_64/aarch64; use --frontend threads")
+}
+
+// ---- wire ⇄ coordinator bridging (shared by both front ends) ---------------
+
+/// Validate a tensor frame's geometry against the serving config.
+pub(crate) fn check_tensor_dims(
+    tc: &TensorChunkWire,
+    d_head: usize,
+    d_v: usize,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(tc.n >= 1, "tensor frame has n=0 rows");
+    anyhow::ensure!(
+        tc.d_head as usize == d_head,
+        "frame d_head {} != server d_head {d_head}",
+        tc.d_head
+    );
+    anyhow::ensure!(tc.d_v as usize == d_v, "frame d_v {} != server d_v {d_v}", tc.d_v);
+    Ok(())
+}
+
+/// Whole-frame request → one coordinator chunk (the attend path).
+pub(crate) fn tensor_to_chunk(
+    tc: TensorChunkWire,
+    d_head: usize,
+    d_v: usize,
+) -> anyhow::Result<AttendChunk> {
+    check_tensor_dims(&tc, d_head, d_v)?;
+    let n = tc.n as usize;
+    Ok(AttendChunk {
+        seq: SeqId(tc.session),
+        q: Mat::from_vec(n, d_head, tc.q),
+        k: Mat::from_vec(n, d_head, tc.k),
+        v: Mat::from_vec(n, d_v, tc.v),
+    })
+}
+
+/// Row `i` of a tensor frame as a single-token decode chunk (the
+/// streaming path: each row rides the ADR-005 fused decode waves and is
+/// answered with its own token frame).
+pub(crate) fn tensor_row_chunk(tc: &TensorChunkWire, i: usize) -> AttendChunk {
+    let dh = tc.d_head as usize;
+    let dv = tc.d_v as usize;
+    AttendChunk {
+        seq: SeqId(tc.session),
+        q: Mat::from_vec(1, dh, tc.q[i * dh..(i + 1) * dh].to_vec()),
+        k: Mat::from_vec(1, dh, tc.k[i * dh..(i + 1) * dh].to_vec()),
+        v: Mat::from_vec(1, dv, tc.v[i * dv..(i + 1) * dv].to_vec()),
+    }
+}
+
+pub(crate) fn reply_frame(seq: u64, r: &AttendResult) -> Vec<u8> {
+    let payload = ReplyChunkWire {
+        session: r.seq.0,
+        seq_len: r.seq_len as u64,
+        n: r.y.rows as u32,
+        d_v: r.y.cols as u32,
+        y: r.y.data.clone(),
+    }
+    .encode();
+    encode_frame(WireOp::Reply, seq, &payload)
+}
+
+pub(crate) fn token_frame(seq: u64, index: u32, r: &AttendResult) -> Vec<u8> {
+    let payload = TokenReplyWire {
+        session: r.seq.0,
+        seq_len: r.seq_len as u64,
+        index,
+        d_v: r.y.cols as u32,
+        y: r.y.data.clone(),
+    }
+    .encode();
+    encode_frame(WireOp::Token, seq, &payload)
+}
+
+pub(crate) fn end_frame(seq: u64, session: u64, ok: bool, total: u32) -> Vec<u8> {
+    encode_frame(WireOp::StreamEnd, seq, &StreamEndWire { session, ok, total }.encode())
+}
+
+pub(crate) fn error_frame(seq: u64, msg: &str) -> Vec<u8> {
+    encode_frame(WireOp::Error, seq, msg.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontend_parses() {
+        assert_eq!(Frontend::parse("threads").unwrap(), Frontend::Threads);
+        assert_eq!(Frontend::parse("epoll").unwrap(), Frontend::Epoll);
+        assert_eq!(Frontend::parse("auto").unwrap(), Frontend::Auto);
+        assert!(Frontend::parse("uring").is_err());
+    }
+
+    #[test]
+    fn tensor_chunk_dim_validation() {
+        let tc = TensorChunkWire {
+            session: 1,
+            n: 2,
+            d_head: 4,
+            d_v: 3,
+            q: vec![0.0; 8],
+            k: vec![0.0; 8],
+            v: vec![0.0; 6],
+        };
+        assert!(check_tensor_dims(&tc, 4, 3).is_ok());
+        assert!(check_tensor_dims(&tc, 8, 3).is_err());
+        assert!(check_tensor_dims(&tc, 4, 4).is_err());
+        let zero = TensorChunkWire { n: 0, q: vec![], k: vec![], v: vec![], ..tc.clone() };
+        assert!(check_tensor_dims(&zero, 4, 3).is_err());
+        let chunk = tensor_to_chunk(tc.clone(), 4, 3).unwrap();
+        assert_eq!(chunk.q.rows, 2);
+        assert_eq!(chunk.v.cols, 3);
+        let row = tensor_row_chunk(&tc, 1);
+        assert_eq!(row.q.rows, 1);
+        assert_eq!(row.q.cols, 4);
+        assert_eq!(row.v.cols, 3);
+    }
+}

@@ -1,0 +1,815 @@
+//! Linux epoll reactor front end (ADR-007).
+//!
+//! One thread multiplexes every connection through a level-triggered
+//! epoll set: nonblocking reads feed the shared [`MsgReader`], requests
+//! go to the coordinator via [`ReplyTo::Completion`] (tagged results on
+//! one mpsc queue, a pipe write waking the reactor out of `epoll_pwait`),
+//! and replies accumulate in per-connection write buffers flushed as the
+//! socket accepts them. Backpressure is two caps per connection —
+//! in-flight requests and unflushed reply bytes — past either, the
+//! connection's read interest is dropped so TCP pushes back on the
+//! client instead of the server buffering unboundedly.
+//!
+//! The epoll syscalls are raw (`asm!`-based, no libc crate): only
+//! `epoll_create1`/`epoll_ctl`/`epoll_pwait` need wrappers — sockets,
+//! nonblocking mode and the wake pipe all come from `std`.
+//!
+//! Control ops (create/fork/metrics/…) run inline on the reactor thread;
+//! each is a quick worker round-trip, and they are rare next to tensor
+//! traffic. Tensor ops never block the reactor.
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{AttendResult, ReplyTo};
+use crate::coordinator::server::{attend_reply_json, error_json, parse_line, shed, ParsedLine};
+use crate::coordinator::Coordinator;
+use crate::net::conn::{Conn, WireError, WireMsg};
+use crate::net::frame::{Frame, TensorChunkWire, WireOp};
+use crate::net::{
+    check_tensor_dims, end_frame, error_frame, reply_frame, tensor_row_chunk, tensor_to_chunk,
+    token_frame, NetOptions,
+};
+use crate::util::json::Json;
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::TcpListener;
+use std::os::fd::{AsRawFd, FromRawFd, OwnedFd};
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+mod sys {
+    //! Thin raw-syscall wrappers. No libc: the three epoll entry points
+    //! are invoked directly; everything else the reactor touches is fd
+    //! plumbing `std` already exposes.
+
+    use std::io;
+    use std::os::fd::RawFd;
+
+    #[cfg(target_arch = "x86_64")]
+    mod nr {
+        pub const EPOLL_CTL: i64 = 233;
+        pub const EPOLL_PWAIT: i64 = 281;
+        pub const EPOLL_CREATE1: i64 = 291;
+    }
+    #[cfg(target_arch = "aarch64")]
+    mod nr {
+        pub const EPOLL_CREATE1: i64 = 20;
+        pub const EPOLL_CTL: i64 = 21;
+        pub const EPOLL_PWAIT: i64 = 22;
+    }
+
+    /// # Safety
+    /// Caller supplies a valid syscall number and arguments per the
+    /// kernel ABI; pointers must outlive the call.
+    #[cfg(target_arch = "x86_64")]
+    unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64) -> i64 {
+        let ret: i64;
+        std::arch::asm!(
+            "syscall",
+            inlateout("rax") n => ret,
+            in("rdi") a1,
+            in("rsi") a2,
+            in("rdx") a3,
+            in("r10") a4,
+            in("r8") a5,
+            in("r9") a6,
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack),
+        );
+        ret
+    }
+
+    /// # Safety
+    /// See the x86_64 variant.
+    #[cfg(target_arch = "aarch64")]
+    unsafe fn syscall6(n: i64, a1: i64, a2: i64, a3: i64, a4: i64, a5: i64, a6: i64) -> i64 {
+        let ret: i64;
+        std::arch::asm!(
+            "svc 0",
+            in("x8") n,
+            inlateout("x0") a1 => ret,
+            in("x1") a2,
+            in("x2") a3,
+            in("x3") a4,
+            in("x4") a5,
+            in("x5") a6,
+            options(nostack),
+        );
+        ret
+    }
+
+    fn check(ret: i64) -> io::Result<i64> {
+        if ret < 0 {
+            Err(io::Error::from_raw_os_error(-ret as i32))
+        } else {
+            Ok(ret)
+        }
+    }
+
+    const EPOLL_CLOEXEC: i64 = 0o2000000;
+    pub const EPOLL_CTL_ADD: i64 = 1;
+    pub const EPOLL_CTL_DEL: i64 = 2;
+    pub const EPOLL_CTL_MOD: i64 = 3;
+    pub const EPOLLIN: u32 = 0x001;
+    pub const EPOLLOUT: u32 = 0x004;
+    pub const EPOLLERR: u32 = 0x008;
+    pub const EPOLLHUP: u32 = 0x010;
+    pub const EPOLLRDHUP: u32 = 0x2000;
+
+    /// Kernel ABI struct. Packed on x86_64 (the kernel's layout there);
+    /// natural alignment elsewhere. Read fields by value only — never
+    /// take a reference into a packed struct.
+    #[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+    #[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+    #[derive(Clone, Copy)]
+    pub struct EpollEvent {
+        pub events: u32,
+        pub data: u64,
+    }
+
+    pub fn epoll_create1() -> io::Result<RawFd> {
+        let fd = check(unsafe { syscall6(nr::EPOLL_CREATE1, EPOLL_CLOEXEC, 0, 0, 0, 0, 0) })?;
+        Ok(fd as RawFd)
+    }
+
+    pub fn epoll_ctl(epfd: RawFd, op: i64, fd: RawFd, ev: Option<EpollEvent>) -> io::Result<()> {
+        let mut e = ev.unwrap_or(EpollEvent { events: 0, data: 0 });
+        let ptr = if ev.is_some() { &mut e as *mut EpollEvent as i64 } else { 0 };
+        check(unsafe { syscall6(nr::EPOLL_CTL, epfd as i64, op, fd as i64, ptr, 0, 0) })?;
+        Ok(())
+    }
+
+    /// Null sigmask; EINTR retried internally.
+    pub fn epoll_pwait(
+        epfd: RawFd,
+        events: &mut [EpollEvent],
+        timeout_ms: i32,
+    ) -> io::Result<usize> {
+        loop {
+            let ret = unsafe {
+                syscall6(
+                    nr::EPOLL_PWAIT,
+                    epfd as i64,
+                    events.as_mut_ptr() as i64,
+                    events.len() as i64,
+                    timeout_ms as i64,
+                    0,
+                    8,
+                )
+            };
+            if ret == -4 {
+                continue; // EINTR
+            }
+            return check(ret).map(|n| n as usize);
+        }
+    }
+}
+
+/// Self-pipe that kicks the reactor out of `epoll_pwait` when a worker
+/// finishes a request (clones go into [`ReplyTo::Completion`] closures).
+#[derive(Clone)]
+struct Waker(Arc<UnixStream>);
+
+impl Waker {
+    fn wake(&self) {
+        // A full pipe means a wakeup is already pending — success either way.
+        let _ = (&*self.0).write(&[1u8]);
+    }
+}
+
+/// How a completed coordinator result maps back onto the wire.
+enum ReplyMode {
+    /// JSON-line attend/decode: one reply line.
+    Json,
+    /// Binary attend: one Reply frame echoing the client's `seq`.
+    Binary { seq: u64 },
+    /// One row of a streaming decode: a Token frame, plus the End frame
+    /// when the whole stream has drained.
+    Stream { stream: u64, seq: u64, index: u32 },
+}
+
+struct ReplyCtx {
+    conn: u64,
+    mode: ReplyMode,
+}
+
+/// Per-stream accounting for streaming decodes.
+struct StreamProgress {
+    session: u64,
+    /// Rows actually submitted (≤ requested when admission failed midway).
+    expected: u32,
+    done: u32,
+    ok: bool,
+    /// Rows the client asked for (echoed in the End frame).
+    requested: u32,
+}
+
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKER: u64 = 1;
+/// Per-tick read budget per connection — level-triggered epoll re-fires,
+/// so capping a firehose client keeps the tick fair without losing data.
+const READ_BUDGET: usize = 256 * 1024;
+
+struct Reactor {
+    epfd: OwnedFd,
+    listener: Option<TcpListener>,
+    wake_rx: UnixStream,
+    conns: HashMap<u64, Conn>,
+    /// In-flight request tag → reply routing.
+    ctxs: HashMap<u64, ReplyCtx>,
+    streams: HashMap<u64, StreamProgress>,
+    next_token: u64,
+    next_tag: u64,
+    next_stream: u64,
+    coord: Arc<Coordinator>,
+    d_head: usize,
+    d_v: usize,
+    opts: NetOptions,
+    comp_tx: mpsc::Sender<(u64, anyhow::Result<AttendResult>)>,
+    comp_rx: mpsc::Receiver<(u64, anyhow::Result<AttendResult>)>,
+    wake: Arc<dyn Fn() + Send + Sync>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    drain_ms: Arc<AtomicU64>,
+}
+
+impl Reactor {
+    fn run(mut self) {
+        let mut events = [sys::EpollEvent { events: 0, data: 0 }; 256];
+        let mut wait_errors = 0u32;
+        let mut drain_deadline: Option<Instant> = None;
+        loop {
+            if drain_deadline.is_none() && self.stop.load(Ordering::SeqCst) {
+                drain_deadline = Some(self.begin_drain());
+            }
+            if let Some(deadline) = drain_deadline {
+                // Sweep finished connections every tick; events keep the
+                // rest flushing until they finish or the deadline fires.
+                let done: Vec<u64> = self
+                    .conns
+                    .iter()
+                    .filter(|(_, c)| c.pending == 0 && c.is_flushed())
+                    .map(|(&t, _)| t)
+                    .collect();
+                for tok in done {
+                    self.drop_conn(tok);
+                }
+                if self.conns.is_empty() || Instant::now() >= deadline {
+                    let rest: Vec<u64> = self.conns.keys().copied().collect();
+                    for tok in rest {
+                        self.drop_conn(tok);
+                    }
+                    return;
+                }
+            }
+            // Short timeout so the stop flag is polled even when idle.
+            let n = match sys::epoll_pwait(self.epfd.as_raw_fd(), &mut events, 100) {
+                Ok(n) => {
+                    wait_errors = 0;
+                    n
+                }
+                Err(_) => {
+                    wait_errors += 1;
+                    if wait_errors > 64 {
+                        return; // epfd is broken; abandon ship
+                    }
+                    continue;
+                }
+            };
+            for ev in events.iter().take(n) {
+                let token = ev.data; // by-value copies (packed struct)
+                let evs = ev.events;
+                match token {
+                    TOKEN_LISTENER => self.accept_ready(),
+                    TOKEN_WAKER => self.drain_waker(),
+                    tok => self.conn_ready(tok, evs),
+                }
+            }
+            self.drain_completions();
+        }
+    }
+
+    /// Stop accepting and mark every connection closing: no new reads or
+    /// request processing, finish what is in flight. Returns the
+    /// wall-clock deadline after which remaining sockets are cut.
+    fn begin_drain(&mut self) -> Instant {
+        if let Some(l) = self.listener.take() {
+            let _ = sys::epoll_ctl(self.epfd.as_raw_fd(), sys::EPOLL_CTL_DEL, l.as_raw_fd(), None);
+        }
+        let toks: Vec<u64> = self.conns.keys().copied().collect();
+        for tok in toks {
+            if let Some(mut conn) = self.conns.remove(&tok) {
+                conn.closing = true;
+                let dead = self.after_io(tok, &mut conn);
+                if dead {
+                    self.release_conn(conn);
+                } else {
+                    self.conns.insert(tok, conn);
+                }
+            }
+        }
+        Instant::now() + Duration::from_millis(self.drain_ms.load(Ordering::SeqCst))
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let accepted = match &self.listener {
+                Some(l) => l.accept(),
+                None => return,
+            };
+            match accepted {
+                Ok((stream, _)) => {
+                    if self.conns.len() >= self.opts.max_conns {
+                        self.metrics.shed_connections.fetch_add(1, Ordering::Relaxed);
+                        shed(stream, self.opts.max_conns);
+                        continue;
+                    }
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let tok = self.next_token;
+                    self.next_token += 1;
+                    let interest = sys::EPOLLIN | sys::EPOLLRDHUP;
+                    let ev = sys::EpollEvent { events: interest, data: tok };
+                    if sys::epoll_ctl(
+                        self.epfd.as_raw_fd(),
+                        sys::EPOLL_CTL_ADD,
+                        stream.as_raw_fd(),
+                        Some(ev),
+                    )
+                    .is_err()
+                    {
+                        continue;
+                    }
+                    self.metrics.active_connections.fetch_add(1, Ordering::Relaxed);
+                    let mut conn = Conn::new(stream, self.opts.max_frame_bytes);
+                    conn.interest = interest;
+                    self.conns.insert(tok, conn);
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.wake_rx).read(&mut buf) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(_) => return, // WouldBlock = drained
+            }
+        }
+    }
+
+    fn conn_ready(&mut self, tok: u64, evs: u32) {
+        let Some(mut conn) = self.conns.remove(&tok) else { return };
+        let mut dead = evs & (sys::EPOLLERR | sys::EPOLLHUP) != 0;
+        if !dead && evs & sys::EPOLLIN != 0 && !conn.paused && !conn.closing {
+            dead = self.read_socket(&mut conn);
+        }
+        if !dead {
+            dead = self.process_messages(tok, &mut conn);
+        }
+        // Half-close *after* processing, so requests already buffered in
+        // this tick are still served before the connection winds down.
+        if !dead && evs & sys::EPOLLRDHUP != 0 {
+            conn.closing = true;
+        }
+        if !dead {
+            dead = self.after_io(tok, &mut conn);
+        }
+        if dead {
+            self.release_conn(conn);
+        } else {
+            self.conns.insert(tok, conn);
+        }
+    }
+
+    /// Drain the socket into the reader (bounded per tick). `true` = dead.
+    fn read_socket(&mut self, conn: &mut Conn) -> bool {
+        let mut buf = [0u8; 16 * 1024];
+        let mut taken = 0usize;
+        loop {
+            if taken >= READ_BUDGET {
+                return false;
+            }
+            match conn.stream.read(&mut buf) {
+                Ok(0) => {
+                    conn.closing = true; // EOF: serve what's buffered, reply, close
+                    return false;
+                }
+                Ok(n) => {
+                    self.metrics.wire_bytes_rx.fetch_add(n as u64, Ordering::Relaxed);
+                    conn.reader.push(&buf[..n]);
+                    taken += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return false,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return true,
+            }
+        }
+    }
+
+    /// Consume complete messages until the buffer runs dry or a
+    /// backpressure cap pauses the connection. `true` = dead.
+    fn process_messages(&mut self, tok: u64, conn: &mut Conn) -> bool {
+        loop {
+            if conn.closing {
+                return false;
+            }
+            if conn.pending as usize >= self.opts.max_pending_reqs
+                || conn.pending_write_bytes() > self.opts.max_pending_bytes
+            {
+                if !conn.paused {
+                    conn.paused = true;
+                    self.metrics.backpressure_stalls.fetch_add(1, Ordering::Relaxed);
+                }
+                return false;
+            }
+            conn.paused = false;
+            match conn.reader.next_msg() {
+                Ok(Some(msg)) => {
+                    self.metrics.frames_rx.fetch_add(1, Ordering::Relaxed);
+                    self.serve_msg(tok, conn, msg);
+                }
+                Ok(None) => return false,
+                Err(e) => {
+                    // Framing/integrity loss is unrecoverable: report on
+                    // the plane that broke, then close once flushed.
+                    self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    match &e {
+                        WireError::Frame(_) => {
+                            self.queue_frame(conn, &error_frame(0, &e.to_string()))
+                        }
+                        WireError::LineTooLong { .. } => {
+                            self.queue_line(conn, &error_json(&e.to_string()))
+                        }
+                    }
+                    conn.closing = true;
+                    return false;
+                }
+            }
+        }
+    }
+
+    fn queue_line(&self, conn: &mut Conn, j: &Json) {
+        let mut s = j.to_string();
+        s.push('\n');
+        conn.queue(s.as_bytes());
+        self.metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn queue_frame(&self, conn: &mut Conn, bytes: &[u8]) {
+        conn.queue(bytes);
+        self.metrics.frames_tx.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn serve_msg(&mut self, tok: u64, conn: &mut Conn, msg: WireMsg) {
+        match msg {
+            WireMsg::Line(line) => match parse_line(&line, &self.coord) {
+                Ok(ParsedLine::Done(reply)) => self.queue_line(conn, &reply),
+                Ok(ParsedLine::Chunk(chunk)) => {
+                    match self.submit_tagged(tok, chunk, ReplyMode::Json) {
+                        Ok(()) => conn.pending += 1,
+                        // Coordinator-side refusals (backpressure, unknown
+                        // sequence) are not protocol errors: report, stay open.
+                        Err(e) => self.queue_line(conn, &error_json(&e.to_string())),
+                    }
+                }
+                Err(e) => {
+                    self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    self.queue_line(conn, &error_json(&e.to_string()));
+                }
+            },
+            WireMsg::Frame(f) => self.serve_frame(tok, conn, f),
+        }
+    }
+
+    fn serve_frame(&mut self, tok: u64, conn: &mut Conn, f: Frame) {
+        match f.op {
+            WireOp::Attend => {
+                let chunk = match TensorChunkWire::decode(&f.payload)
+                    .and_then(|tc| tensor_to_chunk(tc, self.d_head, self.d_v))
+                {
+                    Ok(c) => c,
+                    Err(e) => {
+                        self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        self.queue_frame(conn, &error_frame(f.seq, &e.to_string()));
+                        return;
+                    }
+                };
+                match self.submit_tagged(tok, chunk, ReplyMode::Binary { seq: f.seq }) {
+                    Ok(()) => conn.pending += 1,
+                    Err(e) => self.queue_frame(conn, &error_frame(f.seq, &e.to_string())),
+                }
+            }
+            WireOp::DecodeStream => {
+                let tc = match TensorChunkWire::decode(&f.payload).and_then(|tc| {
+                    check_tensor_dims(&tc, self.d_head, self.d_v)?;
+                    Ok(tc)
+                }) {
+                    Ok(tc) => tc,
+                    Err(e) => {
+                        self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        self.queue_frame(conn, &error_frame(f.seq, &e.to_string()));
+                        return;
+                    }
+                };
+                let stream = self.next_stream;
+                self.next_stream += 1;
+                let mut submitted = 0u32;
+                for i in 0..tc.n {
+                    let row = tensor_row_chunk(&tc, i as usize);
+                    let mode = ReplyMode::Stream { stream, seq: f.seq, index: i };
+                    match self.submit_tagged(tok, row, mode) {
+                        Ok(()) => submitted += 1,
+                        Err(e) => {
+                            // Stop submitting; already-admitted rows still
+                            // stream out, the End frame reports the loss.
+                            self.queue_frame(conn, &error_frame(f.seq, &e.to_string()));
+                            break;
+                        }
+                    }
+                }
+                if submitted == 0 {
+                    self.queue_frame(conn, &end_frame(f.seq, tc.session, false, tc.n));
+                } else {
+                    self.streams.insert(
+                        stream,
+                        StreamProgress {
+                            session: tc.session,
+                            expected: submitted,
+                            done: 0,
+                            ok: submitted == tc.n,
+                            requested: tc.n,
+                        },
+                    );
+                    conn.pending += 1;
+                }
+            }
+            WireOp::Reply | WireOp::Token | WireOp::StreamEnd | WireOp::Error => {
+                self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                self.queue_frame(
+                    conn,
+                    &error_frame(f.seq, &format!("op {:?} is a reply opcode", f.op)),
+                );
+            }
+        }
+    }
+
+    fn submit_tagged(
+        &mut self,
+        tok: u64,
+        chunk: crate::coordinator::request::AttendChunk,
+        mode: ReplyMode,
+    ) -> anyhow::Result<()> {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        self.ctxs.insert(tag, ReplyCtx { conn: tok, mode });
+        let reply =
+            ReplyTo::Completion { tag, queue: self.comp_tx.clone(), wake: self.wake.clone() };
+        match self.coord.submit_with(chunk, reply) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.ctxs.remove(&tag);
+                Err(e)
+            }
+        }
+    }
+
+    fn drain_completions(&mut self) {
+        while let Ok((tag, result)) = self.comp_rx.try_recv() {
+            let Some(ctx) = self.ctxs.remove(&tag) else { continue };
+            // Build reply bytes before touching the connection (stream
+            // bookkeeping borrows `self.streams`).
+            let mut out: Vec<Vec<u8>> = Vec::with_capacity(2);
+            let mut request_finished = true;
+            match ctx.mode {
+                ReplyMode::Json => {
+                    let line = match &result {
+                        Ok(r) => attend_reply_json(r),
+                        Err(e) => error_json(&e.to_string()),
+                    };
+                    let mut s = line.to_string();
+                    s.push('\n');
+                    out.push(s.into_bytes());
+                }
+                ReplyMode::Binary { seq } => out.push(match &result {
+                    Ok(r) => reply_frame(seq, r),
+                    Err(e) => error_frame(seq, &e.to_string()),
+                }),
+                ReplyMode::Stream { stream, seq, index } => {
+                    let Some(p) = self.streams.get_mut(&stream) else { continue };
+                    p.done += 1;
+                    match &result {
+                        Ok(r) => out.push(token_frame(seq, index, r)),
+                        Err(e) => {
+                            p.ok = false;
+                            out.push(error_frame(seq, &e.to_string()));
+                        }
+                    }
+                    if p.done == p.expected {
+                        let p = self.streams.remove(&stream).expect("stream entry vanished");
+                        out.push(end_frame(seq, p.session, p.ok, p.requested));
+                    } else {
+                        request_finished = false;
+                    }
+                }
+            }
+            let Some(mut conn) = self.conns.remove(&ctx.conn) else {
+                continue; // client vanished mid-request; result discarded
+            };
+            for bytes in &out {
+                self.queue_frame(&mut conn, bytes);
+            }
+            if request_finished {
+                conn.pending = conn.pending.saturating_sub(1);
+            }
+            let dead = self.after_io(ctx.conn, &mut conn);
+            if dead {
+                self.release_conn(conn);
+            } else {
+                self.conns.insert(ctx.conn, conn);
+            }
+        }
+    }
+
+    /// Flush, resume a paused connection if capacity freed up, close if
+    /// a closing connection has fully drained. `true` = dead.
+    fn after_io(&mut self, tok: u64, conn: &mut Conn) -> bool {
+        match conn.flush() {
+            Ok(n) => {
+                if n > 0 {
+                    self.metrics.wire_bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+                }
+            }
+            Err(_) => return true,
+        }
+        if conn.paused
+            && (conn.pending as usize) < self.opts.max_pending_reqs
+            && conn.pending_write_bytes() <= self.opts.max_pending_bytes
+        {
+            conn.paused = false;
+            if self.process_messages(tok, conn) {
+                return true;
+            }
+            match conn.flush() {
+                Ok(n) => {
+                    if n > 0 {
+                        self.metrics.wire_bytes_tx.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                }
+                Err(_) => return true,
+            }
+        }
+        if conn.closing && conn.pending == 0 && conn.is_flushed() {
+            return true;
+        }
+        self.update_interest(tok, conn);
+        false
+    }
+
+    fn update_interest(&mut self, tok: u64, conn: &mut Conn) {
+        let mut want = sys::EPOLLRDHUP;
+        if !conn.paused && !conn.closing {
+            want |= sys::EPOLLIN;
+        }
+        if !conn.is_flushed() {
+            want |= sys::EPOLLOUT;
+        }
+        if want != conn.interest {
+            let ev = sys::EpollEvent { events: want, data: tok };
+            if sys::epoll_ctl(
+                self.epfd.as_raw_fd(),
+                sys::EPOLL_CTL_MOD,
+                conn.stream.as_raw_fd(),
+                Some(ev),
+            )
+            .is_ok()
+            {
+                conn.interest = want;
+            }
+        }
+    }
+
+    /// Deregister and account a connection that is going away. In-flight
+    /// `ctxs`/`streams` entries are left to expire naturally: their
+    /// completions find no connection and are discarded.
+    fn release_conn(&mut self, conn: Conn) {
+        let _ = sys::epoll_ctl(
+            self.epfd.as_raw_fd(),
+            sys::EPOLL_CTL_DEL,
+            conn.stream.as_raw_fd(),
+            None,
+        );
+        self.metrics.active_connections.fetch_sub(1, Ordering::Relaxed);
+        drop(conn);
+    }
+
+    fn drop_conn(&mut self, tok: u64) {
+        if let Some(conn) = self.conns.remove(&tok) {
+            self.release_conn(conn);
+        }
+    }
+}
+
+/// Handle to a running epoll front end.
+pub struct EpollServer {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    drain_ms: Arc<AtomicU64>,
+    waker: Waker,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl EpollServer {
+    pub fn start(
+        addr: &str,
+        coord: &Arc<Coordinator>,
+        opts: NetOptions,
+    ) -> anyhow::Result<EpollServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let epfd = unsafe { OwnedFd::from_raw_fd(sys::epoll_create1()?) };
+        let (wake_tx, wake_rx) = UnixStream::pair()?;
+        wake_tx.set_nonblocking(true)?;
+        wake_rx.set_nonblocking(true)?;
+        sys::epoll_ctl(
+            epfd.as_raw_fd(),
+            sys::EPOLL_CTL_ADD,
+            listener.as_raw_fd(),
+            Some(sys::EpollEvent { events: sys::EPOLLIN, data: TOKEN_LISTENER }),
+        )?;
+        sys::epoll_ctl(
+            epfd.as_raw_fd(),
+            sys::EPOLL_CTL_ADD,
+            wake_rx.as_raw_fd(),
+            Some(sys::EpollEvent { events: sys::EPOLLIN, data: TOKEN_WAKER }),
+        )?;
+        let waker = Waker(Arc::new(wake_tx));
+        let stop = Arc::new(AtomicBool::new(false));
+        let drain_ms = Arc::new(AtomicU64::new(opts.drain_timeout.as_millis() as u64));
+        let (comp_tx, comp_rx) = mpsc::channel();
+        let wake_clone = waker.clone();
+        let wake: Arc<dyn Fn() + Send + Sync> = Arc::new(move || wake_clone.wake());
+        let cfg = coord.config();
+        let reactor = Reactor {
+            epfd,
+            listener: Some(listener),
+            wake_rx,
+            conns: HashMap::new(),
+            ctxs: HashMap::new(),
+            streams: HashMap::new(),
+            next_token: 2,
+            next_tag: 0,
+            next_stream: 0,
+            coord: coord.clone(),
+            d_head: cfg.d_head,
+            d_v: cfg.d_v,
+            opts,
+            comp_tx,
+            comp_rx,
+            wake,
+            metrics: coord.metrics_handle(),
+            stop: stop.clone(),
+            drain_ms: drain_ms.clone(),
+        };
+        let thread =
+            std::thread::Builder::new().name("slay-reactor".into()).spawn(move || reactor.run())?;
+        crate::log_info!("epoll front end listening on {local}");
+        Ok(EpollServer { addr: local, stop, drain_ms, waker, thread: Some(thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Stop promptly (zero drain window).
+    pub fn shutdown(&mut self) {
+        self.shutdown_drain(Duration::from_millis(0));
+    }
+
+    /// Graceful drain: stop accepting, give in-flight replies up to
+    /// `timeout` to finish flushing, then close everything and join.
+    pub fn shutdown_drain(&mut self, timeout: Duration) {
+        self.drain_ms.store(timeout.as_millis() as u64, Ordering::SeqCst);
+        self.stop.store(true, Ordering::SeqCst);
+        self.waker.wake();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for EpollServer {
+    fn drop(&mut self) {
+        let ms = self.drain_ms.load(Ordering::SeqCst);
+        self.shutdown_drain(Duration::from_millis(ms));
+    }
+}

@@ -427,6 +427,168 @@ impl<'a> Parser<'a> {
     }
 }
 
+// ---- lazy path extraction (ADR-007) ----------------------------------------
+//
+// The serving hot path wants one or two fields out of a request line ("op",
+// "seq") without materializing a `Json` tree — for an attend request the
+// tree is dominated by float arrays the caller may never touch (mik-sdk's
+// ADR-002 measured ~33× for partial-field reads over full-tree parsing).
+// These scanners walk the raw bytes, skipping values structurally (strings
+// by escape-aware scan, containers by bracket depth), and hand back the
+// *unparsed* value slice; the caller then pays only for what it extracts
+// via `lazy_str`/`lazy_f64`/`lazy_f32_array`. Malformed input returns
+// `None` — callers fall back to `Json::parse` for a real error message.
+
+fn skip_ws_b(b: &[u8], mut pos: usize) -> usize {
+    while pos < b.len() && matches!(b[pos], b' ' | b'\t' | b'\n' | b'\r') {
+        pos += 1;
+    }
+    pos
+}
+
+/// `pos` at the opening quote → position just past the closing quote.
+fn skip_string_b(b: &[u8], mut pos: usize) -> Option<usize> {
+    if b.get(pos) != Some(&b'"') {
+        return None;
+    }
+    pos += 1;
+    while pos < b.len() {
+        match b[pos] {
+            b'"' => return Some(pos + 1),
+            b'\\' => pos += 2, // any escape is 1 byte except \uXXXX, whose hex can't contain '"'
+            _ => pos += 1,
+        }
+    }
+    None
+}
+
+/// `pos` at the first byte of a value → position just past it.
+fn skip_value_b(b: &[u8], pos: usize) -> Option<usize> {
+    let pos = skip_ws_b(b, pos);
+    match *b.get(pos)? {
+        b'"' => skip_string_b(b, pos),
+        open @ (b'{' | b'[') => {
+            let close = if open == b'{' { b'}' } else { b']' };
+            let mut depth = 0usize;
+            let mut p = pos;
+            while p < b.len() {
+                match b[p] {
+                    b'"' => {
+                        p = skip_string_b(b, p)?;
+                        continue;
+                    }
+                    b'{' | b'[' => depth += 1,
+                    b'}' | b']' => {
+                        depth = depth.checked_sub(1)?;
+                        if depth == 0 {
+                            return if b[p] == close { Some(p + 1) } else { None };
+                        }
+                    }
+                    _ => {}
+                }
+                p += 1;
+            }
+            None
+        }
+        _ => {
+            // number / true / false / null: scan to a structural delimiter
+            let mut p = pos;
+            while p < b.len()
+                && !matches!(b[p], b',' | b'}' | b']' | b' ' | b'\t' | b'\n' | b'\r')
+            {
+                p += 1;
+            }
+            if p == pos {
+                None
+            } else {
+                Some(p)
+            }
+        }
+    }
+}
+
+/// Top-level object field lookup without materializing a tree: returns the
+/// *raw, unparsed* value slice for `key`, or `None` if `text` is not an
+/// object or the key is absent/malformed. Keys are matched byte-for-byte
+/// between the quotes, so a key containing JSON escapes won't match — the
+/// serving protocol's keys are plain ASCII identifiers.
+pub fn lazy_get<'a>(text: &'a str, key: &str) -> Option<&'a str> {
+    let b = text.as_bytes();
+    let mut pos = skip_ws_b(b, 0);
+    if *b.get(pos)? != b'{' {
+        return None;
+    }
+    pos += 1;
+    loop {
+        pos = skip_ws_b(b, pos);
+        if *b.get(pos)? != b'"' {
+            return None; // includes '}': key absent
+        }
+        let kstart = pos + 1;
+        let after_key = skip_string_b(b, pos)?;
+        let kend = after_key - 1;
+        pos = skip_ws_b(b, after_key);
+        if *b.get(pos)? != b':' {
+            return None;
+        }
+        let vstart = skip_ws_b(b, pos + 1);
+        let vend = skip_value_b(b, vstart)?;
+        if &b[kstart..kend] == key.as_bytes() {
+            return text.get(vstart..vend);
+        }
+        pos = skip_ws_b(b, vend);
+        match *b.get(pos)? {
+            b',' => pos += 1,
+            _ => return None, // '}' = key absent; anything else = malformed
+        }
+    }
+}
+
+/// `lazy_get` folded over a key path (each step must be an object).
+pub fn lazy_path<'a>(text: &'a str, path: &[&str]) -> Option<&'a str> {
+    let mut cur = text;
+    for key in path {
+        cur = lazy_get(cur, key)?;
+    }
+    Some(cur)
+}
+
+/// Decode a raw string slice (as returned by [`lazy_get`]) into its
+/// unescaped contents. `None` if the slice isn't a complete JSON string.
+pub fn lazy_str(raw: &str) -> Option<String> {
+    let mut p = Parser { b: raw.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let s = p.string().ok()?;
+    p.skip_ws();
+    if p.pos == p.b.len() {
+        Some(s)
+    } else {
+        None
+    }
+}
+
+/// Parse a raw number slice. Slightly lenient (Rust's `f64` grammar is a
+/// superset of JSON's) — fine for a hot-path getter; strict validation
+/// happens on the `Json::parse` fallback.
+pub fn lazy_f64(raw: &str) -> Option<f64> {
+    raw.trim().parse::<f64>().ok()
+}
+
+/// Parse a raw `[n, n, ...]` slice of numbers straight into `Vec<f32>` —
+/// the tensor hot path: no `Json::Arr` of boxed `Num`s, one allocation.
+/// Flat numeric arrays only (nested arrays return `None`).
+pub fn lazy_f32_array(raw: &str) -> Option<Vec<f32>> {
+    let inner = raw.trim().strip_prefix('[')?.strip_suffix(']')?.trim();
+    if inner.is_empty() {
+        return Some(Vec::new());
+    }
+    let mut out = Vec::with_capacity(inner.len() / 4 + 1);
+    for part in inner.split(',') {
+        out.push(part.trim().parse::<f64>().ok()? as f32);
+    }
+    Some(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -517,5 +679,80 @@ mod tests {
             ("name", Json::Str("slay".into())),
         ]);
         assert_eq!(Json::parse(&v.to_pretty()).unwrap(), v);
+    }
+
+    // ---- lazy path extraction ----------------------------------------------
+
+    #[test]
+    fn lazy_get_extracts_raw_slices() {
+        let text = r#"{"op": "attend", "seq": 7, "q": [1.5, -2, 3e-2], "nested": {"a": [1, 2]}}"#;
+        assert_eq!(lazy_get(text, "op"), Some(r#""attend""#));
+        assert_eq!(lazy_get(text, "seq"), Some("7"));
+        assert_eq!(lazy_get(text, "q"), Some("[1.5, -2, 3e-2]"));
+        assert_eq!(lazy_get(text, "nested"), Some(r#"{"a": [1, 2]}"#));
+        assert_eq!(lazy_get(text, "missing"), None);
+        assert_eq!(lazy_get("{}", "op"), None);
+        assert_eq!(lazy_get("[1,2]", "op"), None);
+        assert_eq!(lazy_get("not json", "op"), None);
+    }
+
+    #[test]
+    fn lazy_get_skips_tricky_values() {
+        // Strings containing braces, brackets, escaped quotes, colons and
+        // commas must not confuse the structural scan.
+        let text = r#"{"a": "}]\",{[", "b": {"x": "[\"", "y": [1, {"z": "}"}]}, "c": 42}"#;
+        assert_eq!(lazy_get(text, "c"), Some("42"));
+        assert_eq!(lazy_str(lazy_get(text, "a").unwrap()).unwrap(), "}]\",{[");
+    }
+
+    #[test]
+    fn lazy_path_walks_nested_objects() {
+        let text = r#"{"outer": {"inner": {"leaf": 3.5}}, "x": 1}"#;
+        assert_eq!(lazy_path(text, &["outer", "inner", "leaf"]), Some("3.5"));
+        assert_eq!(lazy_f64(lazy_path(text, &["outer", "inner", "leaf"]).unwrap()), Some(3.5));
+        assert_eq!(lazy_path(text, &["outer", "nope"]), None);
+        assert_eq!(lazy_path(text, &["x", "deeper"]), None); // leaf is not an object
+    }
+
+    #[test]
+    fn lazy_f32_array_matches_full_parse() {
+        let text = r#"{"q": [1e-3, 2.5, -0.125, 1000000], "empty": []}"#;
+        let lazy = lazy_f32_array(lazy_get(text, "q").unwrap()).unwrap();
+        let full = Json::parse(text).unwrap().get("q").unwrap().as_f32_vec().unwrap();
+        assert_eq!(lazy, full);
+        assert_eq!(lazy_f32_array(lazy_get(text, "empty").unwrap()).unwrap(), Vec::<f32>::new());
+        assert_eq!(lazy_f32_array("[1, [2]]"), None);
+        assert_eq!(lazy_f32_array("[1, oops]"), None);
+        assert_eq!(lazy_f32_array("17"), None);
+    }
+
+    #[test]
+    fn lazy_get_agrees_with_full_parse_on_random_objects() {
+        // Serialize synthetic objects and check lazy slices reparse to the
+        // same values the tree parser extracts.
+        let mut rng = crate::math::rng::Rng::new(0x1a2f);
+        for _ in 0..64 {
+            let n = 1 + rng.below(6);
+            let mut pairs = Vec::new();
+            for i in 0..n {
+                let key = format!("k{i}");
+                let v = match rng.below(4) {
+                    0 => Json::Num(rng.uniform() * 100.0),
+                    1 => Json::Str(format!("s\"{{[,:]}}\\{i}")),
+                    2 => Json::arr_f32(&[rng.uniform() as f32, -1.25, 3.0]),
+                    _ => Json::obj(vec![("inner", Json::Num(i as f64))]),
+                };
+                pairs.push((key, v));
+            }
+            let obj = Json::Obj(pairs.iter().cloned().collect());
+            for style in [obj.to_string(), obj.to_pretty()] {
+                for (key, want) in &pairs {
+                    let raw = lazy_get(&style, key)
+                        .unwrap_or_else(|| panic!("lazy_get missed {key} in {style}"));
+                    assert_eq!(&Json::parse(raw).unwrap(), want, "{key} in {style}");
+                }
+                assert_eq!(lazy_get(&style, "absent"), None);
+            }
+        }
     }
 }

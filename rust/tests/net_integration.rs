@@ -1,0 +1,394 @@
+//! Serving front-end integration (ADR-007): the epoll reactor and the
+//! thread-per-connection server must be byte-interchangeable — hundreds
+//! of concurrent mixed-plane clients get bit-identical replies from both
+//! — plus streaming decode ordering, graceful drain (replies never torn),
+//! oversize rejection, and backpressure accounting.
+
+use slay::coordinator::state::StoreConfig;
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::config::{Mechanism, SlayConfig};
+use slay::math::rng::Rng;
+use slay::net::conn::{MsgReader, WireMsg};
+use slay::net::frame::{
+    encode_frame, Frame, ReplyChunkWire, StreamEndWire, TensorChunkWire, TokenReplyWire, WireOp,
+    HEADER_BYTES, WIRE_VERSION,
+};
+use slay::net::{epoll_supported, serve, Frontend, NetOptions};
+use slay::util::json::Json;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const D_HEAD: usize = 16;
+const D_V: usize = 8;
+const CLIENTS: usize = 256;
+
+fn coord(workers: usize) -> Arc<Coordinator> {
+    Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            mechanism: Mechanism::Slay(SlayConfig::default()),
+            d_head: D_HEAD,
+            d_v: D_V,
+            horizon: 4096,
+            workers,
+            max_batch: 8,
+            max_wait: Duration::from_micros(200),
+            queue_cap: 2048,
+            store: StoreConfig { max_sequences: 512, ..StoreConfig::default() },
+            ..CoordinatorConfig::default()
+        })
+        .unwrap(),
+    )
+}
+
+/// Connect with retries: under a 256-way connect storm the listen backlog
+/// can overflow, and a refused/reset connect is congestion, not failure.
+fn connect(addr: std::net::SocketAddr) -> TcpStream {
+    let deadline = Instant::now() + Duration::from_secs(20);
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return s,
+            Err(e) => {
+                assert!(Instant::now() < deadline, "connect never succeeded: {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
+    }
+}
+
+fn json_roundtrip(w: &mut TcpStream, r: &mut BufReader<TcpStream>, req: &str) -> Json {
+    w.write_all(req.as_bytes()).unwrap();
+    w.write_all(b"\n").unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    assert!(!line.is_empty(), "server closed instead of replying to {req}");
+    Json::parse(line.trim()).unwrap()
+}
+
+/// Read one binary frame off a blocking client socket.
+fn read_frame(stream: &TcpStream, reader: &mut MsgReader) -> Frame {
+    let mut s = stream.try_clone().unwrap();
+    let mut buf = [0u8; 16 * 1024];
+    loop {
+        match reader.next_msg().unwrap() {
+            Some(WireMsg::Frame(f)) => return f,
+            Some(WireMsg::Line(l)) => panic!("expected a frame, got line {l:?}"),
+            None => {}
+        }
+        let n = s.read(&mut buf).unwrap();
+        assert!(n > 0, "server closed mid-frame");
+        reader.push(&buf[..n]);
+    }
+}
+
+/// What one client observed: every reply bit, in request order.
+#[derive(Debug, PartialEq)]
+struct ClientTrace {
+    json_y: Vec<u32>,
+    json_seq_len: usize,
+    bin_y: Vec<u32>,
+    bin_seq_len: u64,
+}
+
+/// One mixed-plane client: JSON create + JSON attend (n=2) + binary
+/// attend (n=1) on the same session. Inputs are derived from the client
+/// index alone, so the same id sends the same bytes to every server.
+fn run_client(addr: std::net::SocketAddr, id: u64) -> ClientTrace {
+    let stream = connect(addr);
+    stream.set_nodelay(true).unwrap();
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+
+    let created = json_roundtrip(&mut w, &mut r, r#"{"op":"create"}"#);
+    assert_eq!(created.get("ok").and_then(|v| v.as_bool()), Some(true), "{created:?}");
+    let session = created.get("seq").unwrap().as_usize().unwrap() as u64;
+
+    let mut rng = Rng::new(0x5eed + id);
+    let fmt = |xs: &[f32]| xs.iter().map(|x| format!("{x}")).collect::<Vec<_>>().join(",");
+    let q: Vec<f32> = (0..2 * D_HEAD).map(|_| rng.uniform_f32() - 0.5).collect();
+    let k: Vec<f32> = (0..2 * D_HEAD).map(|_| rng.uniform_f32() - 0.5).collect();
+    let v: Vec<f32> = (0..2 * D_V).map(|_| rng.uniform_f32() - 0.5).collect();
+    let attend = json_roundtrip(
+        &mut w,
+        &mut r,
+        &format!(
+            r#"{{"op":"attend","seq":{session},"n":2,"q":[{}],"k":[{}],"v":[{}]}}"#,
+            fmt(&q),
+            fmt(&k),
+            fmt(&v)
+        ),
+    );
+    assert_eq!(attend.get("ok").and_then(|x| x.as_bool()), Some(true), "{attend:?}");
+    let json_y: Vec<u32> =
+        attend.get("y").unwrap().as_f32_vec().unwrap().iter().map(|x| x.to_bits()).collect();
+    let json_seq_len = attend.get("seq_len").unwrap().as_usize().unwrap();
+
+    let tc = TensorChunkWire {
+        session,
+        n: 1,
+        d_head: D_HEAD as u32,
+        d_v: D_V as u32,
+        q: (0..D_HEAD).map(|_| rng.uniform_f32() - 0.5).collect(),
+        k: (0..D_HEAD).map(|_| rng.uniform_f32() - 0.5).collect(),
+        v: (0..D_V).map(|_| rng.uniform_f32() - 0.5).collect(),
+    };
+    w.write_all(&encode_frame(WireOp::Attend, id, &tc.encode())).unwrap();
+    let mut reader = MsgReader::new(1 << 24);
+    let f = read_frame(&stream, &mut reader);
+    assert_eq!(f.op, WireOp::Reply, "binary attend failed: {f:?}");
+    assert_eq!(f.seq, id, "reply must echo the request's correlation id");
+    let reply = ReplyChunkWire::decode(&f.payload).unwrap();
+    assert_eq!(reply.session, session);
+
+    ClientTrace {
+        json_y,
+        json_seq_len,
+        bin_y: reply.y.iter().map(|x| x.to_bits()).collect(),
+        bin_seq_len: reply.seq_len,
+    }
+}
+
+/// Run the full CLIENTS-way mixed workload against one front end and
+/// collect every client's trace, indexed by client id.
+fn run_workload(frontend: Frontend) -> Vec<ClientTrace> {
+    let coordinator = coord(4);
+    let server = serve(frontend, "127.0.0.1:0", &coordinator, NetOptions::default()).unwrap();
+    let addr = server.addr();
+    let handles: Vec<_> = (0..CLIENTS as u64)
+        .map(|id| std::thread::spawn(move || run_client(addr, id)))
+        .collect();
+    let traces = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    server.shutdown_drain(Duration::from_secs(5));
+    traces
+}
+
+#[test]
+fn mixed_plane_clients_are_bit_identical_across_front_ends() {
+    // 256 concurrent connections, each mixing JSON and binary requests on
+    // one socket. The epoll reactor must reproduce the threads server's
+    // replies bit for bit on the same request streams.
+    let threads = run_workload(Frontend::Threads);
+    assert_eq!(threads.len(), CLIENTS);
+    for t in &threads {
+        assert_eq!(t.json_seq_len, 2);
+        assert_eq!(t.bin_seq_len, 3);
+        assert_eq!(t.json_y.len(), 2 * D_V);
+        assert_eq!(t.bin_y.len(), D_V);
+    }
+    if !epoll_supported() {
+        eprintln!("epoll unsupported on this target; threads-only coverage");
+        return;
+    }
+    let epoll = run_workload(Frontend::Epoll);
+    for (id, (a, b)) in threads.iter().zip(epoll.iter()).enumerate() {
+        assert_eq!(a, b, "client {id} diverged between front ends");
+    }
+}
+
+#[test]
+fn streaming_decode_emits_ordered_token_frames_then_end() {
+    if !epoll_supported() {
+        return;
+    }
+    let coordinator = coord(2);
+    let server = serve(Frontend::Epoll, "127.0.0.1:0", &coordinator, NetOptions::default())
+        .unwrap();
+    let stream = connect(server.addr());
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let session =
+        json_roundtrip(&mut w, &mut r, r#"{"op":"create"}"#).get("seq").unwrap().as_usize().unwrap()
+            as u64;
+
+    let n = 4u32;
+    let mut rng = Rng::new(99);
+    let tc = TensorChunkWire {
+        session,
+        n,
+        d_head: D_HEAD as u32,
+        d_v: D_V as u32,
+        q: (0..n as usize * D_HEAD).map(|_| rng.uniform_f32()).collect(),
+        k: (0..n as usize * D_HEAD).map(|_| rng.uniform_f32()).collect(),
+        v: (0..n as usize * D_V).map(|_| rng.uniform_f32()).collect(),
+    };
+    w.write_all(&encode_frame(WireOp::DecodeStream, 7, &tc.encode())).unwrap();
+
+    // n token frames arrive in row order (same-session waves are ordered,
+    // ADR-005), each with the session length as of that token.
+    let mut reader = MsgReader::new(1 << 24);
+    for i in 0..n {
+        let f = read_frame(&stream, &mut reader);
+        assert_eq!(f.op, WireOp::Token, "token {i}: {f:?}");
+        assert_eq!(f.seq, 7);
+        let tok = TokenReplyWire::decode(&f.payload).unwrap();
+        assert_eq!(tok.index, i, "tokens must stream in row order");
+        assert_eq!(tok.session, session);
+        assert_eq!(tok.seq_len, (i + 1) as u64);
+        assert_eq!(tok.y.len(), D_V);
+    }
+    let f = read_frame(&stream, &mut reader);
+    assert_eq!(f.op, WireOp::StreamEnd);
+    let end = StreamEndWire::decode(&f.payload).unwrap();
+    assert_eq!((end.session, end.ok, end.total), (session, true, n));
+    server.shutdown_drain(Duration::from_secs(2));
+}
+
+#[test]
+fn epoll_drain_never_tears_an_in_flight_reply() {
+    if !epoll_supported() {
+        return;
+    }
+    let coordinator = coord(1);
+    let server = serve(Frontend::Epoll, "127.0.0.1:0", &coordinator, NetOptions::default())
+        .unwrap();
+    let stream = connect(server.addr());
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let session =
+        json_roundtrip(&mut w, &mut r, r#"{"op":"create"}"#).get("seq").unwrap().as_usize().unwrap()
+            as u64;
+
+    // Fire a bulky attend and start the drain while it is in flight.
+    let n = 64;
+    let ones = |len: usize| vec!["0.25"; len].join(",");
+    w.write_all(
+        format!(
+            r#"{{"op":"attend","seq":{session},"n":{n},"q":[{}],"k":[{}],"v":[{}]}}"#,
+            ones(n * D_HEAD),
+            ones(n * D_HEAD),
+            ones(n * D_V)
+        )
+        .as_bytes(),
+    )
+    .unwrap();
+    w.write_all(b"\n").unwrap();
+    // Let the reactor read and submit the request (drain finishes in-flight
+    // work, but unread bytes at drain time are dropped by design).
+    std::thread::sleep(Duration::from_millis(300));
+    server.shutdown_drain(Duration::from_secs(5));
+
+    // The drained server must have flushed one complete reply line.
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).expect("drained reply must be a whole JSON line");
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+    assert_eq!(reply.get("seq_len").unwrap().as_usize(), Some(n));
+    assert_eq!(reply.get("y").unwrap().as_f32_vec().unwrap().len(), n * D_V);
+    // ...and then closed the connection.
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0, "socket should be closed after drain");
+}
+
+#[test]
+fn oversized_messages_are_rejected_on_both_planes() {
+    if !epoll_supported() {
+        return;
+    }
+    let coordinator = coord(1);
+    let opts = NetOptions { max_frame_bytes: 512, ..NetOptions::default() };
+    let server = serve(Frontend::Epoll, "127.0.0.1:0", &coordinator, opts).unwrap();
+
+    // Binary plane: the cap fires from the header, before the payload
+    // is even transmitted, and the connection closes.
+    let stream = connect(server.addr());
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(&encode_frame(WireOp::Attend, 1, &vec![0u8; 1024])).unwrap();
+    let mut reader = MsgReader::new(1 << 20);
+    let f = read_frame(&stream, &mut reader);
+    assert_eq!(f.op, WireOp::Error);
+    let msg = String::from_utf8_lossy(&f.payload).into_owned();
+    assert!(msg.contains("exceeds cap"), "{msg}");
+    let mut rest = Vec::new();
+    stream.try_clone().unwrap().read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "connection must close after a framing error");
+
+    // JSON plane: a newline-less line blows the same cap while buffering.
+    let stream = connect(server.addr());
+    let mut w = stream.try_clone().unwrap();
+    w.write_all(&vec![b'x'; 2048]).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let reply = Json::parse(line.trim()).unwrap();
+    assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert!(reply.get("error").unwrap().as_str().unwrap().contains("cap"), "{reply:?}");
+    line.clear();
+    assert_eq!(r.read_line(&mut line).unwrap(), 0);
+
+    assert!(coordinator.metrics().protocol_errors >= 2);
+    server.shutdown_drain(Duration::from_secs(2));
+}
+
+#[test]
+fn version_mismatch_is_rejected_and_closes() {
+    if !epoll_supported() {
+        return;
+    }
+    let coordinator = coord(1);
+    let server = serve(Frontend::Epoll, "127.0.0.1:0", &coordinator, NetOptions::default())
+        .unwrap();
+    let stream = connect(server.addr());
+    let mut w = stream.try_clone().unwrap();
+    // Corrupt the version field of an otherwise valid frame (the version
+    // check fires from the header, before the checksum is consulted).
+    let mut bytes = encode_frame(WireOp::Attend, 1, b"xyz");
+    bytes[8..12].copy_from_slice(&(WIRE_VERSION + 1).to_le_bytes());
+    assert!(bytes.len() > HEADER_BYTES);
+    w.write_all(&bytes).unwrap();
+    let mut reader = MsgReader::new(1 << 20);
+    let f = read_frame(&stream, &mut reader);
+    assert_eq!(f.op, WireOp::Error);
+    let msg = String::from_utf8_lossy(&f.payload).into_owned();
+    assert!(msg.contains("unsupported wire version"), "{msg}");
+    let mut rest = Vec::new();
+    stream.try_clone().unwrap().read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty());
+    server.shutdown_drain(Duration::from_secs(2));
+}
+
+#[test]
+fn pipelined_flood_trips_backpressure_and_still_answers_everything() {
+    if !epoll_supported() {
+        return;
+    }
+    let coordinator = coord(1);
+    // Tiny per-connection request cap: a client that pipelines without
+    // reading must push the connection into the paused state.
+    let opts = NetOptions { max_pending_reqs: 2, ..NetOptions::default() };
+    let server = serve(Frontend::Epoll, "127.0.0.1:0", &coordinator, opts).unwrap();
+    let stream = connect(server.addr());
+    let mut w = stream.try_clone().unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let session =
+        json_roundtrip(&mut w, &mut r, r#"{"op":"create"}"#).get("seq").unwrap().as_usize().unwrap()
+            as u64;
+
+    // 16 pipelined decodes in one write, replies read only afterwards.
+    let ones_q = vec!["0.5"; D_HEAD].join(",");
+    let ones_v = vec!["0.5"; D_V].join(",");
+    let req = format!(
+        r#"{{"op":"decode","seq":{session},"q":[{ones_q}],"k":[{ones_q}],"v":[{ones_v}]}}"#
+    );
+    let total = 16usize;
+    let mut burst = String::new();
+    for _ in 0..total {
+        burst.push_str(&req);
+        burst.push('\n');
+    }
+    w.write_all(burst.as_bytes()).unwrap();
+
+    // Every request is answered, in order, despite the pauses.
+    for i in 1..=total {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let reply = Json::parse(line.trim()).unwrap();
+        assert_eq!(reply.get("ok").and_then(|v| v.as_bool()), Some(true), "{reply:?}");
+        assert_eq!(reply.get("seq_len").unwrap().as_usize(), Some(i));
+    }
+    assert!(
+        coordinator.metrics().backpressure_stalls >= 1,
+        "a 16-deep pipeline over a 2-request cap must trip backpressure"
+    );
+    server.shutdown_drain(Duration::from_secs(2));
+}
