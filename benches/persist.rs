@@ -149,6 +149,7 @@ fn main() {
         memory_budget: per_seq,
         spill_dir: Some(spill_dir.clone()),
         prefix_cache_budget: 0,
+        adopt_spills: false,
     });
     let mut rng = Rng::new(23);
     let q = Mat::randn(ctx, d, &mut rng);

@@ -49,6 +49,7 @@ fn coord_cfg(prefix_budget: usize) -> CoordinatorConfig {
             memory_budget: 256 << 20,
             spill_dir: None,
             prefix_cache_budget: prefix_budget,
+            adopt_spills: false,
         },
         ..CoordinatorConfig::default()
     }

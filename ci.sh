@@ -32,11 +32,26 @@
 #                                       threads and epoll; asserts the
 #                                       binary-beats-JSON p50 gate at 4096
 #                                       floats and results/BENCH_wire.json)
+#   * chaos (armed)                    (ADR-008 fault-injection smoke: the
+#                                       fixed-seed SLAY_FAULTS plan below
+#                                       drives mixed traffic through worker
+#                                       kills / compute panics / frame
+#                                       corruption / spill-write failures
+#                                       and gates on the no-hang,
+#                                       bit-identity and
+#                                       every-fault-counted invariants)
+#   * chaos (disarmed)                 (same traffic with the fault layer
+#                                       off — zero fault counters, zero
+#                                       errored sessions: the
+#                                       fault-layer-is-a-no-op gate)
 #   * trajectory                       (rolls the smokes' BENCH_*.json
 #                                       into the tracked
 #                                       BENCH_TRAJECTORY.json and fails
 #                                       on a > SLAY_BENCH_TOLERANCE drop
 #                                       vs the previous entry)
+#
+# The benches run with SLAY_FAULTS scrubbed from the environment so the
+# tracked perf trajectory always measures the fault-free serving path.
 set -euo pipefail
 cd "$(dirname "$0")"
 
@@ -47,7 +62,18 @@ echo "== cargo build --release --benches =="
 cargo build --release --benches
 
 echo "== cargo test -q =="
-cargo test -q
+env -u SLAY_FAULTS cargo test -q
+
+# The fixed-seed chaos plan. Keep in lockstep with DEFAULT_PLAN in
+# rust/tests/chaos.rs (the harness self-arms with the same string when
+# the variable is unset, so this is belt-and-braces reproducibility).
+CHAOS_PLAN="spill_write:io@0.03;decode:panic@0.01;frame_rx:corrupt@0.02;worker_loop:panic@0.004;seed=7"
+
+echo "== chaos smoke, armed (SLAY_FAULTS=$CHAOS_PLAN) =="
+SLAY_FAULTS="$CHAOS_PLAN" cargo test -q --test chaos
+
+echo "== chaos control, disarmed (fault layer must be a no-op) =="
+SLAY_FAULTS=off cargo test -q --test chaos
 
 echo "== cargo clippy --all-targets -- -D warnings =="
 cargo clippy --all-targets -- -D warnings
@@ -59,31 +85,31 @@ RESULTS_DIR="${SLAY_RESULTS:-results}"
 
 echo "== fig2_scaling smoke (emits BENCH_scaling.json) =="
 rm -f "$RESULTS_DIR/BENCH_scaling.json"
-SLAY_BENCH_SMOKE=1 cargo bench --bench fig2_scaling
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench fig2_scaling
 test -f "$RESULTS_DIR/BENCH_scaling.json" || { echo "BENCH_scaling.json missing"; exit 1; }
 
 echo "== persist smoke (snapshot -> restore -> serve; emits BENCH_persist.json) =="
 rm -f "$RESULTS_DIR/BENCH_persist.json"
-SLAY_BENCH_SMOKE=1 cargo bench --bench persist
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench persist
 test -f "$RESULTS_DIR/BENCH_persist.json" || { echo "BENCH_persist.json missing"; exit 1; }
 
 echo "== serve_decode smoke (fused vs per-item decode; emits BENCH_decode.json) =="
 rm -f "$RESULTS_DIR/BENCH_decode.json"
-SLAY_BENCH_SMOKE=1 cargo bench --bench serve_decode
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench serve_decode
 test -f "$RESULTS_DIR/BENCH_decode.json" || { echo "BENCH_decode.json missing"; exit 1; }
 
 echo "== serve_fork smoke (COW fork + prefix cache; emits BENCH_fork.json) =="
 rm -f "$RESULTS_DIR/BENCH_fork.json"
-SLAY_BENCH_SMOKE=1 cargo bench --bench serve_fork
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench serve_fork
 test -f "$RESULTS_DIR/BENCH_fork.json" || { echo "BENCH_fork.json missing"; exit 1; }
 
 echo "== serve_wire smoke (JSON vs binary, threads vs epoll; emits BENCH_wire.json) =="
 rm -f "$RESULTS_DIR/BENCH_wire.json"
-SLAY_BENCH_SMOKE=1 cargo bench --bench serve_wire
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench serve_wire
 test -f "$RESULTS_DIR/BENCH_wire.json" || { echo "BENCH_wire.json missing"; exit 1; }
 
 echo "== perf trajectory (appends BENCH_TRAJECTORY.json, diffs vs previous entry) =="
-cargo bench --bench trajectory
+env -u SLAY_FAULTS cargo bench --bench trajectory
 test -f "${SLAY_TRAJECTORY:-BENCH_TRAJECTORY.json}" || { echo "BENCH_TRAJECTORY.json missing"; exit 1; }
 
 echo "ci.sh done"

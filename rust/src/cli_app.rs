@@ -76,6 +76,9 @@ fn print_help() {
                                          before reads pause (default 64)\n\
                        --drain-timeout-ms N shutdown waits this long for in-flight\n\
                                          replies before closing (default 5000)\n\
+                       --request-timeout-ms N per-request deadline: expired work\n\
+                                         gets a deterministic timeout error\n\
+                                         (default 0 = unbounded)\n\
          slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
     );
 }
@@ -87,6 +90,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "fusion", "seed", "listen", "duration-s", "horizon", "window", "spill-dir",
         "restore", "snapshot-root", "max-conns", "prefix-cache-mb", "frontend",
         "max-frame-mb", "max-pending-mb", "max-pending-reqs", "drain-timeout-ms",
+        "request-timeout-ms",
     ])?;
     let mut cfg = config::coordinator_from_args(args)?;
 

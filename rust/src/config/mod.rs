@@ -42,7 +42,8 @@ pub fn mechanism_from_args(args: &Args) -> anyhow::Result<Mechanism> {
 
 /// CoordinatorConfig from flags (`--workers`, `--max-batch`,
 /// `--max-wait-us`, `--queue-cap`, `--d-head`, `--d-v`, `--horizon`,
-/// `--window`, `--spill-dir`, `--prefix-cache-mb`).
+/// `--window`, `--spill-dir`, `--prefix-cache-mb`,
+/// `--request-timeout-ms`).
 pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     let mut cfg = CoordinatorConfig {
         mechanism: mechanism_from_args(args)?,
@@ -69,6 +70,13 @@ pub fn coordinator_from_args(args: &Args) -> anyhow::Result<CoordinatorConfig> {
     if let Some(dir) = args.get("snapshot-root") {
         cfg.snapshot_root = Some(std::path::PathBuf::from(dir));
     }
+    // Per-request deadline (ADR-008): `--request-timeout-ms 0` means no
+    // deadline (the seed's unbounded behavior).
+    let timeout_ms = args.u64_or(
+        "request-timeout-ms",
+        cfg.request_timeout.map_or(0, |t| t.as_millis() as u64),
+    )?;
+    cfg.request_timeout = (timeout_ms > 0).then(|| Duration::from_millis(timeout_ms));
     Ok(cfg)
 }
 
@@ -92,6 +100,13 @@ pub fn coordinator_to_json(cfg: &CoordinatorConfig) -> Json {
             },
         ),
         ("prefix_cache_budget", Json::Num(cfg.store.prefix_cache_budget as f64)),
+        (
+            "request_timeout_ms",
+            match cfg.request_timeout {
+                Some(t) => Json::Num(t.as_millis() as f64),
+                None => Json::Null,
+            },
+        ),
     ])
 }
 
@@ -183,6 +198,21 @@ mod tests {
         );
         let j = coordinator_to_json(&c);
         assert_eq!(j.get("prefix_cache_budget").unwrap().as_usize(), Some(8 << 20));
+    }
+
+    #[test]
+    fn request_timeout_flag_zero_means_unbounded() {
+        let c = coordinator_from_args(&parse(&["x", "--request-timeout-ms", "250"])).unwrap();
+        assert_eq!(c.request_timeout, Some(Duration::from_millis(250)));
+        let j = coordinator_to_json(&c);
+        assert_eq!(j.get("request_timeout_ms").unwrap().as_usize(), Some(250));
+        // 0 disables the deadline entirely (seed behavior)
+        let off = coordinator_from_args(&parse(&["x", "--request-timeout-ms", "0"])).unwrap();
+        assert_eq!(off.request_timeout, None);
+        assert_eq!(coordinator_to_json(&off).get("request_timeout_ms"), Some(&Json::Null));
+        // default: no deadline
+        let d = coordinator_from_args(&parse(&["x"])).unwrap();
+        assert_eq!(d.request_timeout, None);
     }
 
     #[test]

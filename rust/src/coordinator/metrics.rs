@@ -73,6 +73,28 @@ pub struct Metrics {
     /// or pending-write-byte cap was hit (backpressure pushed to the
     /// socket instead of buffering unboundedly).
     pub backpressure_stalls: AtomicU64,
+    /// Worker panics caught and isolated (ADR-008): per-item
+    /// `catch_unwind` catches plus whole-thread deaths harvested at
+    /// respawn.
+    pub worker_panics: AtomicU64,
+    /// Dead shard worker threads detected and respawned by the
+    /// coordinator (each respawn re-installs the shard's spilled
+    /// sessions).
+    pub worker_restarts: AtomicU64,
+    /// Sessions released because a panic struck while their state was
+    /// borrowed for compute (possibly torn mid-mutation — releasing is
+    /// the only safe disposition; spilled states are left intact).
+    pub sessions_poisoned: AtomicU64,
+    /// Requests answered with the deterministic deadline error
+    /// (`--request-timeout-ms`): worker-side expiry skips plus
+    /// reactor-side completion reaps.
+    pub request_timeouts: AtomicU64,
+    /// Spill-tier writes that failed (real I/O errors or injected
+    /// faults); each degrades to a counted destroy-evict, not a crash.
+    pub spill_write_failures: AtomicU64,
+    /// Replies/acks whose receiving peer had already disconnected — the
+    /// delivery was dropped and counted instead of silently discarded.
+    pub dropped_replies: AtomicU64,
     /// Latency reservoir (ms) — bounded, replace-random once full.
     latencies: Mutex<Vec<f64>>,
 }
@@ -136,6 +158,12 @@ impl Metrics {
             frames_tx: self.frames_tx.load(Ordering::Relaxed),
             protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
             backpressure_stalls: self.backpressure_stalls.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            worker_restarts: self.worker_restarts.load(Ordering::Relaxed),
+            sessions_poisoned: self.sessions_poisoned.load(Ordering::Relaxed),
+            request_timeouts: self.request_timeouts.load(Ordering::Relaxed),
+            spill_write_failures: self.spill_write_failures.load(Ordering::Relaxed),
+            dropped_replies: self.dropped_replies.load(Ordering::Relaxed),
             latency_p50_ms: p50,
             latency_p95_ms: p95,
             latency_mean_ms: mean,
@@ -174,6 +202,12 @@ pub struct Snapshot {
     pub frames_tx: u64,
     pub protocol_errors: u64,
     pub backpressure_stalls: u64,
+    pub worker_panics: u64,
+    pub worker_restarts: u64,
+    pub sessions_poisoned: u64,
+    pub request_timeouts: u64,
+    pub spill_write_failures: u64,
+    pub dropped_replies: u64,
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_mean_ms: f64,
@@ -232,6 +266,12 @@ impl Snapshot {
             ("frames_tx", Json::Num(self.frames_tx as f64)),
             ("protocol_errors", Json::Num(self.protocol_errors as f64)),
             ("backpressure_stalls", Json::Num(self.backpressure_stalls as f64)),
+            ("worker_panics", Json::Num(self.worker_panics as f64)),
+            ("worker_restarts", Json::Num(self.worker_restarts as f64)),
+            ("sessions_poisoned", Json::Num(self.sessions_poisoned as f64)),
+            ("request_timeouts", Json::Num(self.request_timeouts as f64)),
+            ("spill_write_failures", Json::Num(self.spill_write_failures as f64)),
+            ("dropped_replies", Json::Num(self.dropped_replies as f64)),
             ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
             ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
             ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
@@ -342,6 +382,31 @@ mod tests {
         assert_eq!(j.get("frames_tx").unwrap().as_usize(), Some(8));
         assert_eq!(j.get("protocol_errors").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("backpressure_stalls").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn fault_tolerance_counters_snapshot_and_serialize() {
+        let m = Metrics::new();
+        m.worker_panics.fetch_add(2, Ordering::Relaxed);
+        m.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        m.sessions_poisoned.fetch_add(3, Ordering::Relaxed);
+        m.request_timeouts.fetch_add(5, Ordering::Relaxed);
+        m.spill_write_failures.fetch_add(4, Ordering::Relaxed);
+        m.dropped_replies.fetch_add(6, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.worker_panics, 2);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.sessions_poisoned, 3);
+        assert_eq!(s.request_timeouts, 5);
+        assert_eq!(s.spill_write_failures, 4);
+        assert_eq!(s.dropped_replies, 6);
+        let j = s.to_json();
+        assert_eq!(j.get("worker_panics").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("worker_restarts").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("sessions_poisoned").unwrap().as_usize(), Some(3));
+        assert_eq!(j.get("request_timeouts").unwrap().as_usize(), Some(5));
+        assert_eq!(j.get("spill_write_failures").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("dropped_replies").unwrap().as_usize(), Some(6));
     }
 
     #[test]

@@ -85,6 +85,13 @@ pub struct CoordinatorConfig {
     /// [`Coordinator::snapshot`] API is unaffected): a network peer must
     /// never choose arbitrary server-side paths.
     pub snapshot_root: Option<std::path::PathBuf>,
+    /// Per-request deadline (`--request-timeout-ms`, ADR-008): stamped
+    /// into every submitted [`WorkItem`]; workers answer items past it
+    /// with [`ServeError::Timeout`] instead of computing, and both front
+    /// ends bound their waits against it so no client hangs on a dead
+    /// shard. `None` = no deadline (waits still carry a generous
+    /// liveness fallback).
+    pub request_timeout: Option<Duration>,
 }
 
 impl Default for CoordinatorConfig {
@@ -101,6 +108,7 @@ impl Default for CoordinatorConfig {
             queue_cap: 1024,
             store: StoreConfig::default(),
             snapshot_root: None,
+            request_timeout: None,
         }
     }
 }
@@ -114,14 +122,67 @@ pub struct SnapshotReport {
     pub bytes: u64,
 }
 
+/// One shard's channel + thread handle, behind a mutex so the liveness
+/// check and respawn (ADR-008) are race-free across submitting threads.
+struct ShardSlot {
+    tx: mpsc::SyncSender<worker::Msg>,
+    /// `None` only transiently (during shutdown's join, or when a respawn
+    /// attempt itself failed).
+    handle: Option<std::thread::JoinHandle<anyhow::Result<()>>>,
+}
+
+/// How long a control-plane round trip (create/release/len/fork/
+/// snapshot/install acks) may wait before the shard is declared
+/// unavailable — generous, because snapshots of large shards do real I/O.
+const CONTROL_ACK_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Fallback bound on a blocking [`Coordinator::attend`] when no
+/// `request_timeout` is configured: liveness, not latency policy.
+const ATTEND_FALLBACK_TIMEOUT: Duration = Duration::from_secs(120);
+
 /// The running coordinator. Dropping it shuts the workers down.
 pub struct Coordinator {
     cfg: CoordinatorConfig,
-    senders: Vec<mpsc::SyncSender<worker::Msg>>,
-    handles: Vec<std::thread::JoinHandle<anyhow::Result<()>>>,
+    shards: Vec<std::sync::Mutex<ShardSlot>>,
     metrics: Arc<Metrics>,
     inflight: Arc<AtomicU64>,
     next_seq: AtomicU64,
+}
+
+/// Spawn one shard worker thread. `adopt` marks a *respawn* (ADR-008):
+/// the replacement store re-admits every session its dead predecessor had
+/// paged out to the shard's spill subdirectory.
+fn spawn_worker(
+    cfg: &CoordinatorConfig,
+    w: usize,
+    adopt: bool,
+    metrics: &Arc<Metrics>,
+    inflight: &Arc<AtomicU64>,
+) -> anyhow::Result<(mpsc::SyncSender<worker::Msg>, std::thread::JoinHandle<anyhow::Result<()>>)> {
+    let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
+    // Each shard spills into its own subdirectory: shards never contend on
+    // files, and a restore with a different worker count can't collide
+    // with stale spills from the old layout.
+    let mut store_cfg = cfg.store.clone();
+    if let Some(base) = &store_cfg.spill_dir {
+        store_cfg.spill_dir = Some(base.join(format!("shard_{w}")));
+    }
+    store_cfg.adopt_spills = adopt;
+    let wcfg = worker::WorkerConfig {
+        mechanism: cfg.mechanism.clone(),
+        d_head: cfg.d_head,
+        d_v: cfg.d_v,
+        horizon: cfg.horizon,
+        window: cfg.window,
+        policy: BatchPolicy { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
+        store: store_cfg,
+    };
+    let m = metrics.clone();
+    let inf = inflight.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("slay-worker-{w}"))
+        .spawn(move || worker::run(wcfg, rx, m, inf))?;
+    Ok((tx, handle))
 }
 
 impl Coordinator {
@@ -130,34 +191,10 @@ impl Coordinator {
         anyhow::ensure!(cfg.workers > 0, "need at least one worker");
         let metrics = Arc::new(Metrics::new());
         let inflight = Arc::new(AtomicU64::new(0));
-        let mut senders = Vec::new();
-        let mut handles = Vec::new();
+        let mut shards = Vec::new();
         for w in 0..cfg.workers {
-            let (tx, rx) = mpsc::sync_channel(cfg.queue_cap);
-            // Each shard spills into its own subdirectory: shards never
-            // contend on files, and a restore with a different worker
-            // count can't collide with stale spills from the old layout.
-            let mut store_cfg = cfg.store.clone();
-            if let Some(base) = &store_cfg.spill_dir {
-                store_cfg.spill_dir = Some(base.join(format!("shard_{w}")));
-            }
-            let wcfg = worker::WorkerConfig {
-                mechanism: cfg.mechanism.clone(),
-                d_head: cfg.d_head,
-                d_v: cfg.d_v,
-                horizon: cfg.horizon,
-                window: cfg.window,
-                policy: BatchPolicy { max_batch: cfg.max_batch, max_wait: cfg.max_wait },
-                store: store_cfg,
-            };
-            let m = metrics.clone();
-            let inf = inflight.clone();
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("slay-worker-{w}"))
-                    .spawn(move || worker::run(wcfg, rx, m, inf))?,
-            );
-            senders.push(tx);
+            let (tx, handle) = spawn_worker(&cfg, w, false, &metrics, &inflight)?;
+            shards.push(std::sync::Mutex::new(ShardSlot { tx, handle: Some(handle) }));
         }
         crate::log_info!(
             "coordinator up: {} workers, mechanism={}, d_head={}",
@@ -167,8 +204,7 @@ impl Coordinator {
         );
         Ok(Coordinator {
             cfg,
-            senders,
-            handles,
+            shards,
             metrics,
             inflight,
             next_seq: AtomicU64::new(1),
@@ -179,17 +215,75 @@ impl Coordinator {
         // splitmix-style hash for uniform sharding
         let mut z = seq.0.wrapping_mul(0x9E37_79B9_7F4A_7C15);
         z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
-        (z >> 33) as usize % self.senders.len()
+        (z >> 33) as usize % self.shards.len()
+    }
+
+    /// Hand out a live sender for `shard`, respawning the worker first if
+    /// its thread is dead (ADR-008 supervision). The respawned shard
+    /// re-adopts its spilled sessions; resident sessions died with the
+    /// thread and will answer "unknown sequence" — a bounded structured
+    /// error, never a hang.
+    fn shard_sender(&self, shard: usize) -> mpsc::SyncSender<worker::Msg> {
+        let mut slot = self.shards[shard].lock().unwrap_or_else(|e| e.into_inner());
+        if slot.handle.as_ref().is_some_and(|h| h.is_finished()) {
+            if let Some(h) = slot.handle.take() {
+                if h.join().is_err() {
+                    // uncaught panic killed the thread (the per-item
+                    // guards count the caught ones themselves)
+                    self.metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            match spawn_worker(&self.cfg, shard, true, &self.metrics, &self.inflight) {
+                Ok((tx, handle)) => {
+                    self.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    crate::log_warn!(
+                        "worker thread for shard {shard} died; respawned \
+                         (spilled sessions re-adopted)"
+                    );
+                    slot.tx = tx;
+                    slot.handle = Some(handle);
+                }
+                Err(e) => {
+                    // the stale tx below fails fast as Disconnected; the
+                    // next touch retries the spawn
+                    crate::log_error!("failed to respawn worker for shard {shard}: {e}");
+                }
+            }
+        }
+        slot.tx.clone()
+    }
+
+    /// One crash-safe control round trip (ADR-008): fresh ack channel per
+    /// attempt, bounded wait, one retry — the retry's [`shard_sender`]
+    /// sees the dead thread and respawns it. Exhausted attempts surface
+    /// [`ServeError::ShardUnavailable`] instead of hanging forever on an
+    /// ack that will never come.
+    ///
+    /// [`shard_sender`]: Coordinator::shard_sender
+    fn control<T>(
+        &self,
+        shard: usize,
+        mk: impl Fn(mpsc::Sender<T>) -> worker::Msg,
+    ) -> anyhow::Result<T> {
+        for attempt in 0..2 {
+            let (ack, rx) = mpsc::channel();
+            if self.shard_sender(shard).send(mk(ack)).is_err() {
+                continue; // queue closed: the next attempt respawns
+            }
+            match rx.recv_timeout(CONTROL_ACK_TIMEOUT) {
+                Ok(v) => return Ok(v),
+                // worker died holding our ack: retry once on a respawn
+                Err(mpsc::RecvTimeoutError::Disconnected) if attempt == 0 => continue,
+                Err(_) => break,
+            }
+        }
+        Err(ServeError::ShardUnavailable { shard }.into())
     }
 
     /// Admit a new sequence; returns its id.
     pub fn create_sequence(&self) -> anyhow::Result<SeqId> {
         let id = SeqId(self.next_seq.fetch_add(1, Ordering::Relaxed));
-        let (tx, rx) = mpsc::channel();
-        self.senders[self.shard(id)]
-            .send(worker::Msg::Create(id, tx))
-            .map_err(|_| ServeError::Shutdown)?;
-        rx.recv().map_err(|_| ServeError::Shutdown)??;
+        self.control(self.shard(id), |ack| worker::Msg::Create(id, ack))??;
         Ok(id)
     }
 
@@ -214,30 +308,18 @@ impl Coordinator {
                 break id;
             }
         };
-        let (tx, rx) = mpsc::channel();
-        self.senders[pshard]
-            .send(worker::Msg::Fork(parent, child, tx))
-            .map_err(|_| ServeError::Shutdown)?;
-        rx.recv().map_err(|_| ServeError::Shutdown)??;
+        self.control(pshard, |ack| worker::Msg::Fork(parent, child, ack))??;
         Ok(child)
     }
 
     /// Release a finished sequence's state.
     pub fn release_sequence(&self, id: SeqId) -> anyhow::Result<bool> {
-        let (tx, rx) = mpsc::channel();
-        self.senders[self.shard(id)]
-            .send(worker::Msg::Release(id, tx))
-            .map_err(|_| ServeError::Shutdown)?;
-        Ok(rx.recv().map_err(|_| ServeError::Shutdown)?)
+        self.control(self.shard(id), |ack| worker::Msg::Release(id, ack))
     }
 
     /// Tokens a sequence has absorbed.
     pub fn sequence_len(&self, id: SeqId) -> anyhow::Result<Option<usize>> {
-        let (tx, rx) = mpsc::channel();
-        self.senders[self.shard(id)]
-            .send(worker::Msg::Len(id, tx))
-            .map_err(|_| ServeError::Shutdown)?;
-        Ok(rx.recv().map_err(|_| ServeError::Shutdown)?)
+        self.control(self.shard(id), |ack| worker::Msg::Len(id, ack))
     }
 
     /// Non-blocking submit; the returned receiver yields the result.
@@ -258,10 +340,16 @@ impl Coordinator {
     pub fn submit_with(&self, chunk: AttendChunk, reply: ReplyTo) -> anyhow::Result<()> {
         chunk.validate(self.cfg.d_head)?;
         let shard = self.shard(chunk.seq);
-        let item = WorkItem { chunk, enqueued: std::time::Instant::now(), reply };
+        let now = std::time::Instant::now();
+        let item = WorkItem {
+            chunk,
+            enqueued: now,
+            deadline: self.cfg.request_timeout.map(|t| now + t),
+            reply,
+        };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.inflight.fetch_add(1, Ordering::Relaxed);
-        match self.senders[shard].try_send(worker::Msg::Work(item)) {
+        match self.shard_sender(shard).try_send(worker::Msg::Work(item)) {
             Ok(()) => Ok(()),
             Err(mpsc::TrySendError::Full(_)) => {
                 self.inflight.fetch_sub(1, Ordering::Relaxed);
@@ -269,16 +357,35 @@ impl Coordinator {
                 Err(ServeError::Backpressure { depth: self.cfg.queue_cap }.into())
             }
             Err(mpsc::TrySendError::Disconnected(_)) => {
+                // shard_sender just respawned-if-dead, so a closed queue
+                // here means the respawn itself failed
                 self.inflight.fetch_sub(1, Ordering::Relaxed);
-                Err(ServeError::Shutdown.into())
+                Err(ServeError::ShardUnavailable { shard }.into())
             }
         }
     }
 
-    /// Blocking convenience: submit and wait for the result.
+    /// Blocking convenience: submit and wait for the result — bounded
+    /// (ADR-008) by the request deadline plus reply slack, or by a
+    /// generous liveness fallback when no deadline is configured. No
+    /// caller parks forever on a shard that died mid-request.
     pub fn attend(&self, chunk: AttendChunk) -> anyhow::Result<AttendResult> {
+        let shard = self.shard(chunk.seq);
         let rx = self.submit(chunk)?;
-        rx.recv().map_err(|_| ServeError::Shutdown)?
+        let wait = match self.cfg.request_timeout {
+            Some(t) => t + Duration::from_millis(500),
+            None => ATTEND_FALLBACK_TIMEOUT,
+        };
+        match rx.recv_timeout(wait) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                self.metrics.request_timeouts.fetch_add(1, Ordering::Relaxed);
+                Err(ServeError::Timeout.into())
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                Err(ServeError::ShardUnavailable { shard }.into())
+            }
+        }
     }
 
     /// Current in-flight work items (queue depth proxy).
@@ -309,17 +416,21 @@ impl Coordinator {
     /// (mechanism spec, geometry, `next_seq`, sequence roster) last.
     pub fn snapshot(&self, dir: &std::path::Path) -> anyhow::Result<SnapshotReport> {
         std::fs::create_dir_all(dir)?;
-        let mut pending = Vec::with_capacity(self.senders.len());
-        for tx in &self.senders {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for shard in 0..self.shards.len() {
             let (ack, rx) = mpsc::channel();
-            tx.send(worker::Msg::Snapshot(dir.to_path_buf(), ack))
-                .map_err(|_| ServeError::Shutdown)?;
-            pending.push(rx);
+            self.shard_sender(shard)
+                .send(worker::Msg::Snapshot(dir.to_path_buf(), ack))
+                .map_err(|_| ServeError::ShardUnavailable { shard })?;
+            pending.push((shard, rx));
         }
         let mut seqs = Vec::new();
         let mut bytes = 0u64;
-        for rx in pending {
-            for (id, len, b) in rx.recv().map_err(|_| ServeError::Shutdown)?? {
+        for (shard, rx) in pending {
+            let records = rx
+                .recv_timeout(CONTROL_ACK_TIMEOUT)
+                .map_err(|_| ServeError::ShardUnavailable { shard })??;
+            for (id, len, b) in records {
                 seqs.push((id.0, len));
                 bytes += b;
             }
@@ -365,14 +476,17 @@ impl Coordinator {
         let mut pending = Vec::with_capacity(manifest.seqs.len());
         for &(id, _len) in &manifest.seqs {
             let id = SeqId(id);
+            let shard = coord.shard(id);
             let (ack, rx) = mpsc::channel();
-            coord.senders[coord.shard(id)]
+            coord
+                .shard_sender(shard)
                 .send(worker::Msg::Install(id, persist::state_file(dir, id), ack))
-                .map_err(|_| ServeError::Shutdown)?;
-            pending.push(rx);
+                .map_err(|_| ServeError::ShardUnavailable { shard })?;
+            pending.push((shard, rx));
         }
-        for rx in pending {
-            rx.recv().map_err(|_| ServeError::Shutdown)??;
+        for (shard, rx) in pending {
+            rx.recv_timeout(CONTROL_ACK_TIMEOUT)
+                .map_err(|_| ServeError::ShardUnavailable { shard })??;
         }
         // Roster audit: installs go through the normal admission path, so
         // a store too small for the snapshot (and without a spill tier to
@@ -392,18 +506,22 @@ impl Coordinator {
             "restored {} sequences from {} across {} workers",
             manifest.seqs.len(),
             dir.display(),
-            coord.senders.len()
+            coord.shards.len()
         );
         Ok(coord)
     }
 
     /// Graceful shutdown: drain queues, join workers.
-    pub fn shutdown(mut self) -> anyhow::Result<()> {
-        for tx in &self.senders {
-            let _ = tx.send(worker::Msg::Shutdown);
+    pub fn shutdown(self) -> anyhow::Result<()> {
+        for slot in &self.shards {
+            let s = slot.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = s.tx.send(worker::Msg::Shutdown);
         }
-        for h in self.handles.drain(..) {
-            h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+        for slot in &self.shards {
+            let h = slot.lock().unwrap_or_else(|e| e.into_inner()).handle.take();
+            if let Some(h) = h {
+                h.join().map_err(|_| anyhow::anyhow!("worker panicked"))??;
+            }
         }
         Ok(())
     }
@@ -411,11 +529,92 @@ impl Coordinator {
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        for tx in &self.senders {
-            let _ = tx.send(worker::Msg::Shutdown);
+        for slot in &self.shards {
+            let s = slot.lock().unwrap_or_else(|e| e.into_inner());
+            let _ = s.tx.send(worker::Msg::Shutdown);
         }
-        for h in self.handles.drain(..) {
-            let _ = h.join();
+        for slot in &self.shards {
+            let h = slot.lock().unwrap_or_else(|e| e.into_inner()).handle.take();
+            if let Some(h) = h {
+                let _ = h.join();
+            }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::linalg::Mat;
+    use crate::math::rng::Rng;
+
+    fn cfg() -> CoordinatorConfig {
+        CoordinatorConfig {
+            mechanism: Mechanism::EluLinear,
+            d_head: 8,
+            d_v: 8,
+            horizon: 64,
+            window: 0,
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 64,
+            request_timeout: Some(Duration::from_millis(2000)),
+            ..CoordinatorConfig::default()
+        }
+    }
+
+    fn chunk(seq: SeqId, n: usize, rng: &mut Rng) -> AttendChunk {
+        AttendChunk {
+            seq,
+            q: Mat::randn(n, 8, rng),
+            k: Mat::randn(n, 8, rng),
+            v: Mat::randn(n, 8, rng),
+        }
+    }
+
+    #[test]
+    fn dead_worker_is_respawned_and_requests_stay_bounded() {
+        let c = Coordinator::start(cfg()).unwrap();
+        let id = c.create_sequence().unwrap();
+        let shard = c.shard(id);
+        // Kill the sequence's owning shard out from under the coordinator
+        // (standing in for the worker_loop fault site's uncaught panic).
+        {
+            let slot = c.shards[shard].lock().unwrap();
+            slot.tx.send(worker::Msg::Shutdown).unwrap();
+        }
+        let deadline = std::time::Instant::now() + Duration::from_secs(10);
+        loop {
+            let dead = {
+                let slot = c.shards[shard].lock().unwrap();
+                slot.handle.as_ref().is_some_and(|h| h.is_finished())
+            };
+            if dead {
+                break;
+            }
+            assert!(std::time::Instant::now() < deadline, "worker never exited");
+            std::thread::yield_now();
+        }
+        // The session was resident on the dead shard (no spill tier): its
+        // next chunk must get a bounded structured error, not a hang...
+        let mut rng = Rng::new(3);
+        let err = c
+            .attend(chunk(id, 1, &mut rng))
+            .expect_err("lost session must error, not hang");
+        assert!(err.to_string().contains("unknown sequence"), "{err}");
+        assert!(c.metrics().worker_restarts >= 1, "detection must respawn the shard");
+        // ...and the respawned shard admits + serves fresh sessions.
+        let mut revived = None;
+        for _ in 0..64 {
+            let id2 = c.create_sequence().unwrap();
+            if c.shard(id2) == shard {
+                revived = Some(id2);
+                break;
+            }
+        }
+        let id2 = revived.expect("64 draws must land on the respawned shard");
+        let r = c.attend(chunk(id2, 4, &mut rng)).expect("respawned shard serves");
+        assert_eq!(r.seq_len, 4);
     }
 }

@@ -38,6 +38,11 @@ pub fn state_file(dir: &Path, id: SeqId) -> PathBuf {
 /// name — which is what lets repeated snapshots into the same directory
 /// stay restorable at every instant.
 pub fn write_durable(path: &Path, bytes: &[u8]) -> anyhow::Result<()> {
+    // Fault site `snapshot_write` (ADR-008): fails before the temp file is
+    // created, so an injected fault can never leave debris behind.
+    if crate::util::fault::fire("snapshot_write").is_some() {
+        anyhow::bail!("injected snapshot_write fault at {}", path.display());
+    }
     let tmp = path.with_extension("tmp");
     let mut f = std::fs::File::create(&tmp)?;
     f.write_all(bytes)?;

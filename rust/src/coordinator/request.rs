@@ -87,10 +87,26 @@ pub enum ReplyTo {
     },
 }
 
+// Manual impl: `Arc<dyn Fn()>` has no derived Clone path through the
+// enum, and the panic-isolation wrapper (ADR-008) must capture a reply
+// handle *before* moving the item into `catch_unwind`.
+impl Clone for ReplyTo {
+    fn clone(&self) -> ReplyTo {
+        match self {
+            ReplyTo::Channel(tx) => ReplyTo::Channel(tx.clone()),
+            ReplyTo::Completion { tag, queue, wake } => ReplyTo::Completion {
+                tag: *tag,
+                queue: queue.clone(),
+                wake: wake.clone(),
+            },
+        }
+    }
+}
+
 impl ReplyTo {
     /// Deliver the result. A vanished consumer is not actionable for the
-    /// worker, so the error carries no payload — call sites `let _ =` it
-    /// exactly as they did with a bare `mpsc::Sender`.
+    /// worker beyond counting it (`dropped_replies`), so the error
+    /// carries no payload.
     pub fn send(&self, r: anyhow::Result<AttendResult>) -> Result<(), ()> {
         match self {
             ReplyTo::Channel(tx) => tx.send(r).map_err(|_| ()),
@@ -107,10 +123,23 @@ impl ReplyTo {
 pub struct WorkItem {
     pub chunk: AttendChunk,
     pub enqueued: std::time::Instant,
+    /// Absolute deadline stamped at submission from `--request-timeout-ms`
+    /// (ADR-008). Workers skip items already past it with a deterministic
+    /// [`ServeError::Timeout`] instead of computing a reply nobody waits
+    /// for; `None` = no deadline.
+    pub deadline: Option<std::time::Instant>,
     pub reply: ReplyTo,
 }
 
-/// Errors surfaced to clients.
+impl WorkItem {
+    /// True iff the item carries a deadline that has already passed.
+    pub fn expired(&self, now: std::time::Instant) -> bool {
+        self.deadline.is_some_and(|d| now >= d)
+    }
+}
+
+/// Errors surfaced to clients. See `docs/PROTOCOL.md` ("Error taxonomy &
+/// recovery") for how each maps onto the two wire planes.
 #[derive(Debug, thiserror::Error)]
 pub enum ServeError {
     #[error("queue full: {depth} items (backpressure)")]
@@ -119,6 +148,14 @@ pub enum ServeError {
     UnknownSequence(SeqId),
     #[error("coordinator shutting down")]
     Shutdown,
+    /// The request's `--request-timeout-ms` deadline passed before a
+    /// reply was produced (ADR-008).
+    #[error("request deadline exceeded")]
+    Timeout,
+    /// The shard's worker thread is gone or unresponsive; the request got
+    /// a bounded structured error instead of hanging on a dead channel.
+    #[error("shard {shard} unavailable (worker thread dead or unresponsive)")]
+    ShardUnavailable { shard: usize },
 }
 
 #[cfg(test)]

@@ -61,6 +61,7 @@ mod tests {
                 v: Mat::randn(n, 4, &mut rng),
             },
             enqueued: Instant::now() + Duration::from_millis(t_off_ms),
+            deadline: None,
             reply: ReplyTo::Channel(tx),
         }
     }

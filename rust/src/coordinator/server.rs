@@ -25,7 +25,12 @@
 //! `snapshot` writes under the coordinator's configured `snapshot_root`
 //! (`--snapshot-root`); `dir` is a plain directory *name* below it, never
 //! a path — without a root the op is disabled.
-//! Errors: `{"ok":false,"error":"..."}`. One thread per connection, up to
+//! Errors: `{"ok":false,"error":"..."}` — including deterministic
+//! `"request deadline exceeded"` timeouts (`--request-timeout-ms`,
+//! ADR-008) and `"shard N unavailable"` when a worker thread died; see
+//! the error taxonomy in `docs/PROTOCOL.md`. Replies never block
+//! unboundedly: [`Coordinator::attend`] bounds its wait by the request
+//! deadline plus slack. One thread per connection, up to
 //! `max_conns` concurrent; past the cap the server writes a one-line JSON
 //! error and closes instead of spawning (`shed_connections` counts these,
 //! `active_connections` gauges the live handlers). The coordinator's own

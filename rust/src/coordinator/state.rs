@@ -98,6 +98,11 @@ pub struct StoreConfig {
     /// *additionally* charged against `memory_budget` alongside resident
     /// sessions and shed first under pressure; `0` disables caching.
     pub prefix_cache_budget: usize,
+    /// Respawn mode (ADR-008): skip the startup sweep so `seq_*.state`
+    /// files left by a dead predecessor worker survive for the
+    /// coordinator's re-adoption pass ([`SequenceStore::adopt_spilled`])
+    /// instead of being treated as orphans.
+    pub adopt_spills: bool,
 }
 
 impl Default for StoreConfig {
@@ -107,6 +112,7 @@ impl Default for StoreConfig {
             memory_budget: 256 << 20,
             spill_dir: None,
             prefix_cache_budget: 64 << 20,
+            adopt_spills: false,
         }
     }
 }
@@ -129,12 +135,14 @@ impl SequenceStore {
     pub fn new(cfg: StoreConfig) -> Self {
         if let Some(dir) = &cfg.spill_dir {
             match std::fs::create_dir_all(dir) {
-                Ok(()) => {
+                Ok(()) if !cfg.adopt_spills => {
                     // A fresh store tracks no spilled sequences, so any
                     // surviving seq_* files are orphans of a previous
                     // process — unswept they accumulate until the disk
                     // fills and the spill tier degrades to destructive
-                    // eviction.
+                    // eviction. (A respawned worker sets `adopt_spills`
+                    // instead: its predecessor's files are re-adopted, not
+                    // orphaned.)
                     if let Ok(entries) = std::fs::read_dir(dir) {
                         for entry in entries.flatten() {
                             let name = entry.file_name();
@@ -147,6 +155,7 @@ impl SequenceStore {
                         }
                     }
                 }
+                Ok(()) => {}
                 Err(e) => {
                     crate::log_warn!("cannot create spill dir {}: {e}", dir.display());
                 }
@@ -322,6 +331,45 @@ impl SequenceStore {
         }
     }
 
+    /// Poison-release (ADR-008): drop `id` only if it is *resident*. A
+    /// panic caught mid-compute may have left the borrowed state torn
+    /// half-way through a mutation, so releasing it is the only safe
+    /// disposition — while a *spilled* state was not being mutated at all
+    /// and is deliberately left intact (entry and file). Returns true iff
+    /// a resident state was dropped.
+    pub fn release_resident(&mut self, id: SeqId) -> bool {
+        if let Some(e) = self.seqs.remove(&id) {
+            self.bytes -= e.cap_bytes;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Re-adopt a predecessor worker's spill file under `id` (ADR-008
+    /// respawn path): the sequence enters the store *paged-out* — no
+    /// resident bytes are charged, and its first chunk faults it in
+    /// through the normal spill machinery. The caller has already decoded
+    /// and validated the file against the backend; `cap_bytes`/`len` are
+    /// the decoded state's admission metadata. The prefix cursor does not
+    /// survive a worker death (the cache died with the thread), so the
+    /// adopted sequence restarts uncacheable, exactly like a snapshot
+    /// install.
+    pub fn adopt_spilled(
+        &mut self,
+        id: SeqId,
+        path: PathBuf,
+        cap_bytes: usize,
+        len: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            !self.seqs.contains_key(&id) && !self.spilled.contains_key(&id),
+            "sequence {id:?} already exists"
+        );
+        self.spilled.insert(id, SpillEntry { path, cap_bytes, len, prefix_cursor: None });
+        Ok(())
+    }
+
     /// Evict the `n` least-recently-touched resident sequences — spilling
     /// them to disk when a spill dir is configured, destroying them
     /// otherwise (seed behavior).
@@ -367,8 +415,18 @@ impl SequenceStore {
         };
         let buf = entry.state.encode_to_vec();
         let path = crate::coordinator::persist::state_file(&dir, id);
-        if let Err(e) = std::fs::create_dir_all(&dir).and_then(|()| std::fs::write(&path, &buf)) {
+        let wrote = if crate::util::fault::fire("spill_write").is_some() {
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "injected spill_write fault"))
+        } else {
+            std::fs::create_dir_all(&dir).and_then(|()| std::fs::write(&path, &buf))
+        };
+        if let Err(e) = wrote {
+            // Graceful degradation (ADR-008): a failed spill write falls
+            // back to destructive eviction — counted, never a crash.
             crate::log_warn!("spill of sequence {:?} failed ({e}); evicting destructively", id);
+            if let Some(m) = &self.metrics {
+                m.spill_write_failures.fetch_add(1, Ordering::Relaxed);
+            }
             return false;
         }
         let e = self.seqs.remove(&id).expect("victim is resident");
@@ -426,9 +484,13 @@ impl SequenceStore {
             return false;
         }
         let entry = self.spilled.remove(&id).expect("presence checked above");
-        let decoded = std::fs::File::open(&entry.path)
-            .map_err(anyhow::Error::from)
-            .and_then(|f| AttnState::decode(&mut std::io::BufReader::new(f)));
+        let decoded = if crate::util::fault::fire("spill_read").is_some() {
+            Err(anyhow::anyhow!("injected spill_read fault"))
+        } else {
+            std::fs::File::open(&entry.path)
+                .map_err(anyhow::Error::from)
+                .and_then(|f| AttnState::decode(&mut std::io::BufReader::new(f)))
+        };
         let _ = std::fs::remove_file(&entry.path);
         let state = match decoded {
             Ok(s) => s,
@@ -680,6 +742,7 @@ mod tests {
             memory_budget: 1 << 20,
             spill_dir: None,
             prefix_cache_budget: 1 << 20,
+            adopt_spills: false,
         })
     }
 
@@ -690,6 +753,7 @@ mod tests {
             memory_budget: budget,
             spill_dir: Some(dir.to_path_buf()),
             prefix_cache_budget: 1 << 20,
+            adopt_spills: false,
         })
     }
 
@@ -1013,6 +1077,101 @@ mod tests {
     }
 
     #[test]
+    fn failed_spill_write_degrades_to_counted_destroy_evict() {
+        let b = backend();
+        // Point the spill dir UNDER a regular file: create_dir_all fails,
+        // so every spill attempt is a real write failure.
+        let blocker = std::env::temp_dir().join("slay_store_spill_fail_blocker");
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let dir = blocker.join("spill");
+        let per_seq = b.new_state(4).capacity_bytes();
+        let mut s = SequenceStore::new(StoreConfig {
+            max_sequences: 8,
+            memory_budget: per_seq, // exactly one resident
+            spill_dir: Some(dir),
+            prefix_cache_budget: 1 << 20,
+            adopt_spills: false,
+        });
+        let m = Arc::new(Metrics::new());
+        s.attach_metrics(m.clone());
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        // admitting #2 tries to spill #1, fails, and destroys it instead
+        s.create(SeqId(2), b.new_state(4)).unwrap();
+        assert!(!s.contains(SeqId(1)), "failed spill degrades to destructive eviction");
+        assert!(s.contains(SeqId(2)));
+        assert_eq!(s.spilled_len(), 0);
+        assert_eq!(m.spill_write_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(m.spilled.load(Ordering::Relaxed), 0, "a failed spill is not a spill");
+        let _ = std::fs::remove_file(&blocker);
+    }
+
+    #[test]
+    fn release_resident_leaves_spilled_states_intact() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_release_resident");
+        let per_seq = b.new_state(4).capacity_bytes();
+        let mut s = spill_store(8, per_seq, &dir);
+        s.create(SeqId(1), b.new_state(4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        s.create(SeqId(2), b.new_state(4)).unwrap(); // pages #1 out
+        assert_eq!(s.spilled_len(), 1);
+        // the poison path drops the resident…
+        assert!(s.release_resident(SeqId(2)));
+        assert!(!s.contains(SeqId(2)));
+        assert_eq!(s.bytes(), 0);
+        // …but never touches spilled or unknown sequences
+        assert!(!s.release_resident(SeqId(1)));
+        assert!(!s.release_resident(SeqId(99)));
+        assert!(s.contains(SeqId(1)), "spilled state survives the poison path");
+        let f1 = crate::coordinator::persist::state_file(&dir, SeqId(1));
+        assert!(f1.exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adopt_spilled_readmits_a_predecessors_file_bit_identically() {
+        let b = backend();
+        let dir = std::env::temp_dir().join("slay_store_adopt_spilled");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rng = Rng::new(31);
+        let q = Mat::randn(3, 16, &mut rng);
+        let k = Mat::randn(3, 16, &mut rng);
+        let v = Mat::randn(3, 4, &mut rng);
+        // "Predecessor worker": build a state, write its codec file the
+        // way the spill tier would, then drop everything but the file.
+        let mut prior = b.new_state(4);
+        b.prefill(&mut prior, q.view(), k.view(), v.view()).unwrap();
+        let path = crate::coordinator::persist::state_file(&dir, SeqId(5));
+        std::fs::write(&path, prior.encode_to_vec()).unwrap();
+        let (cap, len) = (prior.capacity_bytes(), prior.len());
+        // "Respawned worker": adopt_spills must keep the file through
+        // construction, then the adopted entry serves normally.
+        let mut s = SequenceStore::new(StoreConfig {
+            max_sequences: 8,
+            memory_budget: 1 << 20,
+            spill_dir: Some(dir.clone()),
+            prefix_cache_budget: 1 << 20,
+            adopt_spills: true,
+        });
+        assert!(path.exists(), "adopt_spills must not sweep the predecessor's files");
+        s.adopt_spilled(SeqId(5), path.clone(), cap, len).unwrap();
+        assert!(s.adopt_spilled(SeqId(5), path, cap, len).is_err(), "duplicate rejected");
+        assert_eq!(s.len(), 0, "adopted sequences enter paged-out");
+        assert_eq!(s.spilled_len(), 1);
+        assert_eq!(s.seq_len(SeqId(5)), Some(3));
+        // first touch faults it in; decode must match the uninterrupted state
+        let mut out_adopted = vec![0.0f32; 4];
+        let mut out_ref = vec![0.0f32; 4];
+        let st = s.get_mut(SeqId(5)).expect("fault-in of adopted state");
+        b.decode(st, q.row(0), k.row(0), v.row(0), &mut out_adopted).unwrap();
+        b.decode(&mut prior, q.row(0), k.row(0), v.row(0), &mut out_ref).unwrap();
+        assert_eq!(out_adopted, out_ref, "adoption must resume bit-identically");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn prefix_cache_charges_budget_and_sheds_before_sessions() {
         let b = backend();
         let per_seq = b.new_state(4).capacity_bytes();
@@ -1022,6 +1181,7 @@ mod tests {
             memory_budget: 3 * per_seq + 64,
             spill_dir: None,
             prefix_cache_budget: 1 << 20,
+            adopt_spills: false,
         });
         let m = Arc::new(Metrics::new());
         s.attach_metrics(m.clone());

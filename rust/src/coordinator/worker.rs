@@ -24,7 +24,7 @@
 //! through the same interface over their rolling KV windows.
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{AttendResult, SeqId, WorkItem};
+use crate::coordinator::request::{AttendResult, ReplyTo, SeqId, ServeError, WorkItem};
 use crate::coordinator::scheduler::{order_batch, BatchPolicy};
 use crate::coordinator::state::{SequenceStore, SnapshotRecord, StoreConfig};
 use crate::kernels::config::Mechanism;
@@ -86,6 +86,15 @@ pub fn run(
         crate::kernels::build_with_window(&cfg.mechanism, cfg.d_head, cfg.horizon, cfg.window)?;
     let mut store = SequenceStore::new(cfg.store.clone());
     store.attach_metrics(metrics.clone());
+    // Respawn path (ADR-008): a shard replacing a dead worker re-adopts
+    // every session its predecessor had paged out — those files were not
+    // being mutated when the thread died, so they are exactly as good as
+    // any other spill.
+    if cfg.store.adopt_spills {
+        if let Some(dir) = cfg.store.spill_dir.clone() {
+            adopt_spill_files(&mut store, backend.as_ref(), &dir);
+        }
+    }
     // Shared-prefix cache identity (ADR-006): the hash seed folds in the
     // mechanism and geometry, the mechanism tag re-guards every lookup.
     let window = if cfg.window == 0 { cfg.horizon } else { cfg.window };
@@ -108,24 +117,29 @@ pub fn run(
         match msg {
             Msg::Shutdown => return Ok(()),
             Msg::Create(id, ack) => {
-                let _ = ack.send(create_seq(&mut store, backend.as_ref(), cfg.d_v, seed, id));
+                send_ack(&metrics, &ack, create_seq(&mut store, backend.as_ref(), cfg.d_v, seed, id));
             }
             Msg::Release(id, ack) => {
-                let _ = ack.send(store.release(id));
+                send_ack(&metrics, &ack, store.release(id));
             }
             Msg::Len(id, ack) => {
-                let _ = ack.send(store.seq_len(id));
+                send_ack(&metrics, &ack, store.seq_len(id));
             }
             Msg::Snapshot(dir, ack) => {
-                let _ = ack.send(store.export_all(&dir));
+                send_ack(&metrics, &ack, store.export_all(&dir));
             }
             Msg::Install(id, path, ack) => {
-                let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
+                send_ack(&metrics, &ack, install(&mut store, backend.as_ref(), id, &path));
             }
             Msg::Fork(parent, child, ack) => {
-                let _ = ack.send(store.fork(parent, child));
+                send_ack(&metrics, &ack, store.fork(parent, child));
             }
             Msg::Work(first) => {
+                // Fault site `worker_loop` (ADR-008): a fired draw kills
+                // the whole thread (deliberately OUTSIDE the per-item
+                // guards) — what the coordinator's liveness check and
+                // shard respawn exist to absorb.
+                crate::util::fault::maybe_panic("worker_loop");
                 // Continuous batching (§Perf iteration 1): drain whatever is
                 // already queued — up to max_batch — WITHOUT an artificial
                 // wait. Under concurrent load items accumulate while the
@@ -184,21 +198,24 @@ pub fn run(
                             }
                         }
                         Msg::Create(id, ack) => {
-                            let _ =
-                                ack.send(create_seq(&mut store, backend.as_ref(), cfg.d_v, seed, id));
+                            send_ack(
+                                &metrics,
+                                &ack,
+                                create_seq(&mut store, backend.as_ref(), cfg.d_v, seed, id),
+                            );
                         }
                         Msg::Release(id, ack) => {
-                            let _ = ack.send(store.release(id));
+                            send_ack(&metrics, &ack, store.release(id));
                         }
                         Msg::Len(id, ack) => {
-                            let _ = ack.send(store.seq_len(id));
+                            send_ack(&metrics, &ack, store.seq_len(id));
                         }
                         Msg::Snapshot(dir, ack) => {
                             deferred_snapshot = Some((dir, ack));
                             break;
                         }
                         Msg::Install(id, path, ack) => {
-                            let _ = ack.send(install(&mut store, backend.as_ref(), id, &path));
+                            send_ack(&metrics, &ack, install(&mut store, backend.as_ref(), id, &path));
                         }
                         Msg::Fork(parent, child, ack) => {
                             // A fork racing chunks already gathered for the
@@ -206,12 +223,16 @@ pub fn run(
                             // includes those chunks — reject deterministically,
                             // never hand out a torn clone (ADR-006).
                             if batch.iter().any(|w| w.chunk.seq == parent) {
-                                let _ = ack.send(Err(anyhow::anyhow!(
-                                    "sequence {parent:?} is mid-flight in a forming batch; \
-                                     fork after its replies"
-                                )));
+                                send_ack(
+                                    &metrics,
+                                    &ack,
+                                    Err(anyhow::anyhow!(
+                                        "sequence {parent:?} is mid-flight in a forming batch; \
+                                         fork after its replies"
+                                    )),
+                                );
                             } else {
-                                let _ = ack.send(store.fork(parent, child));
+                                send_ack(&metrics, &ack, store.fork(parent, child));
                             }
                         }
                         Msg::Shutdown => {
@@ -230,7 +251,7 @@ pub fn run(
                     mech_tag,
                 );
                 if let Some((dir, ack)) = deferred_snapshot {
-                    let _ = ack.send(store.export_all(&dir));
+                    send_ack(&metrics, &ack, store.export_all(&dir));
                 }
                 if shutdown {
                     return Ok(());
@@ -268,6 +289,52 @@ fn install(
         .map_err(|e| anyhow::anyhow!("cannot open state file {}: {e}", path.display()))?;
     let state = backend.load_state(&mut std::io::BufReader::new(f))?;
     store.create(id, state)
+}
+
+/// Respawn adoption (ADR-008): scan the shard's spill directory for a dead
+/// predecessor's `seq_<id>.state` files and re-admit each one *paged-out*
+/// ([`SequenceStore::adopt_spilled`]) after validating it through the
+/// backend's decoder. Unreadable files are removed — losing one equals an
+/// eviction, which is the spill tier's durability contract anyway.
+fn adopt_spill_files(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    dir: &std::path::Path,
+) {
+    let Ok(entries) = std::fs::read_dir(dir) else { return };
+    let mut adopted = 0usize;
+    for entry in entries.flatten() {
+        let path = entry.path();
+        let name = entry.file_name();
+        let name = name.to_string_lossy();
+        let Some(id) = name
+            .strip_prefix("seq_")
+            .and_then(|s| s.strip_suffix(".state"))
+            .and_then(|s| s.parse::<u64>().ok())
+        else {
+            continue;
+        };
+        let decoded = std::fs::File::open(&path)
+            .map_err(anyhow::Error::from)
+            .and_then(|f| backend.load_state(&mut std::io::BufReader::new(f)));
+        match decoded {
+            Ok(st) => {
+                if store
+                    .adopt_spilled(SeqId(id), path, st.capacity_bytes(), st.len())
+                    .is_ok()
+                {
+                    adopted += 1;
+                }
+            }
+            Err(e) => {
+                crate::log_warn!("dropping unreadable spill file {}: {e}", path.display());
+                let _ = std::fs::remove_file(&path);
+            }
+        }
+    }
+    if adopted > 0 {
+        crate::log_info!("respawned shard adopted {adopted} spilled session(s)");
+    }
 }
 
 fn process_batch(
@@ -322,7 +389,7 @@ fn process_batch(
     // path — it crosses the reply channel, so the caller owns it.
     for w in batch {
         metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
-        process_item(store, backend, scratch, w, metrics, inflight, mech_tag);
+        process_item_guarded(store, backend, scratch, w, metrics, inflight, mech_tag);
     }
 }
 
@@ -340,6 +407,34 @@ fn process_item(
 ) {
     let n = w.chunk.n_tokens();
     let is_decode = w.chunk.is_decode();
+    // Deadline gate (ADR-008): an item already past `--request-timeout-ms`
+    // gets its deterministic timeout instead of compute nobody waits for.
+    if w.expired(Instant::now()) {
+        metrics.request_timeouts.fetch_add(1, Ordering::Relaxed);
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        send_reply(metrics, &w.reply, Err(ServeError::Timeout.into()));
+        return;
+    }
+    // Fault sites `decode`/`prefill` (ADR-008): `panic` exercises the
+    // per-item poison path; io/corrupt degrade to a per-item error reply —
+    // the state was not touched yet, only the hash chain is stopped
+    // (conservatively, as for any errored chunk).
+    match crate::util::fault::fire(if is_decode { "decode" } else { "prefill" }) {
+        Some(crate::util::fault::FaultKind::Panic) => {
+            panic!("injected fault at site '{}'", if is_decode { "decode" } else { "prefill" })
+        }
+        Some(_) => {
+            store.set_prefix_cursor(w.chunk.seq, None);
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            send_reply(
+                metrics,
+                &w.reply,
+                Err(anyhow::anyhow!("injected compute fault on {:?}", w.chunk.seq)),
+            );
+            return;
+        }
+        None => {}
+    }
     // Rolling prefix hash (ADR-006): the cursor chains over prefill chunks
     // from creation; any decode (or a restore-installed session) sets it
     // to None, so decode traffic skips this path entirely.
@@ -373,7 +468,7 @@ fn process_item(
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 metrics.tokens_in.fetch_add(n as u64, Ordering::Relaxed);
                 inflight.fetch_sub(1, Ordering::Relaxed);
-                let _ = w.reply.send(Ok(result));
+                send_reply(metrics, &w.reply, Ok(result));
                 return;
             }
             metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
@@ -413,7 +508,62 @@ fn process_item(
         }
     }
     inflight.fetch_sub(1, Ordering::Relaxed);
-    let _ = w.reply.send(result);
+    send_reply(metrics, &w.reply, result);
+}
+
+/// Deliver a result, counting a vanished consumer (`dropped_replies`)
+/// instead of silently discarding it (ADR-008).
+fn send_reply(metrics: &Metrics, reply: &ReplyTo, r: anyhow::Result<AttendResult>) {
+    if reply.send(r).is_err() {
+        metrics.dropped_replies.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Control-plane twin of [`send_reply`]: an ack whose coordinator-side
+/// receiver vanished is counted, never unwrapped or silently dropped.
+fn send_ack<T>(metrics: &Metrics, ack: &mpsc::Sender<T>, v: T) {
+    if ack.send(v).is_err() {
+        metrics.dropped_replies.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// [`process_item`] under panic isolation (ADR-008): a panic poisons only
+/// this item — its session is released if resident (a torn mutation can
+/// only live in the resident state; a spilled file was untouched and stays
+/// valid), the client gets a structured error, and the shard keeps
+/// serving.
+fn process_item_guarded(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    scratch: &mut Scratch,
+    w: WorkItem,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+    mech_tag: u64,
+) {
+    let seq = w.chunk.seq;
+    let reply = w.reply.clone();
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        process_item(store, backend, scratch, w, metrics, inflight, mech_tag);
+    }));
+    if outcome.is_err() {
+        metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+        if store.release_resident(seq) {
+            metrics.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+        }
+        // Every panic source inside process_item sits before the item's
+        // own inflight decrement (the injected sites fire first; compute
+        // panics precede the post-compute accounting), so settling here is
+        // never a double count.
+        inflight.fetch_sub(1, Ordering::Relaxed);
+        send_reply(
+            metrics,
+            &reply,
+            Err(anyhow::anyhow!(
+                "internal error serving sequence {seq:?} (request poisoned; session released)"
+            )),
+        );
+    }
 }
 
 /// Execute one wave of single-token decode chunks — distinct sequences,
@@ -438,20 +588,84 @@ fn process_decode_wave(
     metrics
         .decode_chunks
         .fetch_add(wave.len() as u64, Ordering::Relaxed);
-    // Per-item admission: an unknown sequence fails alone, not its wave.
+    // Per-item admission: an expired or unknown sequence fails alone, not
+    // its wave.
+    let now = Instant::now();
     let mut items: Vec<WorkItem> = Vec::with_capacity(wave.len());
     for w in wave {
-        if store.contains(w.chunk.seq) {
+        if w.expired(now) {
+            metrics.request_timeouts.fetch_add(1, Ordering::Relaxed);
+            inflight.fetch_sub(1, Ordering::Relaxed);
+            send_reply(metrics, &w.reply, Err(ServeError::Timeout.into()));
+        } else if store.contains(w.chunk.seq) {
             items.push(w);
         } else {
             inflight.fetch_sub(1, Ordering::Relaxed);
-            let _ = w
-                .reply
-                .send(Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)));
+            send_reply(
+                metrics,
+                &w.reply,
+                Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
+            );
         }
     }
     if items.is_empty() {
         return;
+    }
+    // Panic isolation for the fused path (ADR-008). One backend call
+    // mutates every member state, so a panic mid-wave may have torn ANY
+    // member: the roster — captured before the guarded region — is what
+    // gets poisoned. `settled` counts items whose reply + inflight
+    // accounting already happened inside the guard, so recovery settles
+    // exactly the remainder, exactly once.
+    let roster: Vec<(SeqId, ReplyTo)> =
+        items.iter().map(|w| (w.chunk.seq, w.reply.clone())).collect();
+    let settled = std::cell::Cell::new(0usize);
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        fused_wave_body(store, backend, scratch, items, metrics, inflight, mech_tag, &settled);
+    }));
+    if outcome.is_err() {
+        metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+        let done = settled.get();
+        crate::log_error!(
+            "decode wave of {} panicked after {done} settled item(s); poisoning wave members",
+            roster.len()
+        );
+        for (i, (seq, reply)) in roster.into_iter().enumerate() {
+            if store.release_resident(seq) {
+                metrics.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+            }
+            if i >= done {
+                inflight.fetch_sub(1, Ordering::Relaxed);
+                send_reply(
+                    metrics,
+                    &reply,
+                    Err(anyhow::anyhow!(
+                        "internal error serving sequence {seq:?} (decode wave poisoned; \
+                         session released)"
+                    )),
+                );
+            }
+        }
+    }
+}
+
+/// The fused wave's compute + fan-out, run under the poison guard above.
+#[allow(clippy::too_many_arguments)]
+fn fused_wave_body(
+    store: &mut SequenceStore,
+    backend: &dyn AttentionBackend,
+    scratch: &mut Scratch,
+    items: Vec<WorkItem>,
+    metrics: &Metrics,
+    inflight: &AtomicU64,
+    mech_tag: u64,
+    settled: &std::cell::Cell<usize>,
+) {
+    // Fault site `decode`, fused flavor (ADR-008): the wave has no
+    // per-item error lane of its own, so every kind is a panic here — the
+    // point is to exercise the poison/recovery machinery in the caller.
+    if crate::util::fault::fire("decode").is_some() {
+        panic!("injected fault at site 'decode' (fused wave)");
     }
     let b = items.len();
     let d_k = items[0].chunk.q.cols;
@@ -503,7 +717,8 @@ fn process_decode_wave(
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
                 metrics.tokens_in.fetch_add(1, Ordering::Relaxed);
                 inflight.fetch_sub(1, Ordering::Relaxed);
-                let _ = w.reply.send(Ok(result));
+                send_reply(metrics, &w.reply, Ok(result));
+                settled.set(settled.get() + 1);
             }
         }
         Err(e) => {
@@ -512,16 +727,22 @@ fn process_decode_wave(
             for (i, w) in items.into_iter().enumerate() {
                 // re-run only sequences the failed fused call verifiably
                 // did not advance; an advanced one gets an error instead of
-                // a double-absorbed token
+                // a double-absorbed token. The guarded per-item path keeps
+                // one item's panic from poisoning the rest of the wave.
                 if store.seq_len(w.chunk.seq) == pre_lens[i] {
-                    process_item(store, backend, scratch, w, metrics, inflight, mech_tag);
+                    process_item_guarded(store, backend, scratch, w, metrics, inflight, mech_tag);
                 } else {
                     inflight.fetch_sub(1, Ordering::Relaxed);
-                    let _ = w.reply.send(Err(anyhow::anyhow!(
-                        "fused decode failed after advancing sequence {:?}: {msg}",
-                        w.chunk.seq
-                    )));
+                    send_reply(
+                        metrics,
+                        &w.reply,
+                        Err(anyhow::anyhow!(
+                            "fused decode failed after advancing sequence {:?}: {msg}",
+                            w.chunk.seq
+                        )),
+                    );
                 }
+                settled.set(settled.get() + 1);
             }
         }
     }
@@ -550,23 +771,32 @@ mod tests {
         }
     }
 
+    fn chunk(seq: SeqId, n: usize, rng: &mut Rng) -> AttendChunk {
+        AttendChunk {
+            seq,
+            q: Mat::randn(n, 8, rng),
+            k: Mat::randn(n, 8, rng),
+            v: Mat::randn(n, 4, rng),
+        }
+    }
+
+    fn work_item(c: AttendChunk) -> (Msg, mpsc::Receiver<anyhow::Result<AttendResult>>) {
+        let (tx, rx) = mpsc::channel();
+        let item = WorkItem {
+            chunk: c,
+            enqueued: Instant::now(),
+            deadline: None,
+            reply: ReplyTo::Channel(tx),
+        };
+        (Msg::Work(item), rx)
+    }
+
     fn work(
         seq: SeqId,
         n: usize,
         rng: &mut Rng,
     ) -> (Msg, mpsc::Receiver<anyhow::Result<AttendResult>>) {
-        let (tx, rx) = mpsc::channel();
-        let item = WorkItem {
-            chunk: AttendChunk {
-                seq,
-                q: Mat::randn(n, 8, rng),
-                k: Mat::randn(n, 8, rng),
-                v: Mat::randn(n, 4, rng),
-            },
-            enqueued: Instant::now(),
-            reply: ReplyTo::Channel(tx),
-        };
-        (Msg::Work(item), rx)
+        work_item(chunk(seq, n, rng))
     }
 
     #[test]
@@ -620,5 +850,104 @@ mod tests {
         assert_eq!(len_rx.recv().unwrap(), Some(0), "the child exists on the shard");
         wrx.recv().unwrap().unwrap();
         assert_eq!(metrics.forks.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn expired_items_get_a_deterministic_timeout_not_compute() {
+        // Pre-loaded schedule: one already-expired decode and one live
+        // prefill on the same sequence. The expired item must be answered
+        // with ServeError::Timeout (never computed), the live one served.
+        let (tx, rx) = mpsc::channel();
+        let inflight = Arc::new(AtomicU64::new(2));
+        let metrics = Arc::new(Metrics::new());
+        let mut rng = Rng::new(9);
+        let (c_tx, c_rx) = mpsc::channel();
+        tx.send(Msg::Create(SeqId(1), c_tx)).unwrap();
+        let (d_tx, d_rx) = mpsc::channel();
+        tx.send(Msg::Work(WorkItem {
+            chunk: chunk(SeqId(1), 1, &mut rng),
+            enqueued: Instant::now(),
+            // expired() is `now >= deadline`, so "now" is already too late
+            deadline: Some(Instant::now()),
+            reply: ReplyTo::Channel(d_tx),
+        }))
+        .unwrap();
+        let (wmsg, wrx) = work(SeqId(1), 4, &mut rng);
+        tx.send(wmsg).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        run(worker_cfg(), rx, metrics.clone(), inflight.clone()).unwrap();
+        c_rx.recv().unwrap().unwrap();
+        let err = d_rx.recv().unwrap().expect_err("expired item must not compute");
+        assert!(err.to_string().contains("deadline"), "{err}");
+        wrx.recv().unwrap().expect("live item still served");
+        assert_eq!(metrics.request_timeouts.load(Ordering::Relaxed), 1);
+        assert_eq!(inflight.load(Ordering::Relaxed), 0, "no leaked inflight slots");
+    }
+
+    #[test]
+    fn panic_mid_wave_poisons_only_the_wave_and_worker_survives() {
+        // Satellite 3 (ADR-008): a malformed decode chunk (q narrower than
+        // d_head) panics the fused wave's row stacking mid-batch. The
+        // whole pre-loaded schedule runs through ONE `run()` call:
+        //
+        //   create 1..4
+        //   d1 (good) d2 (malformed) d3 (good)   <- wave 1: panics
+        //   d1 again                              <- wave 2: seq released
+        //   p4 (good prefill)                     <- served after the panic
+        //
+        // Invariants: all three wave members get bounded error replies and
+        // are released (poisoned); the repeat on seq 1 sees "unknown
+        // sequence" (proving release, not a hang); the prefill on seq 4
+        // completes bit-identically to a direct backend call (proving the
+        // worker and untouched state survived); inflight drains to zero.
+        let (tx, rx) = mpsc::channel();
+        let inflight = Arc::new(AtomicU64::new(5));
+        let metrics = Arc::new(Metrics::new());
+        let mut rng = Rng::new(10);
+        let mut acks = Vec::new();
+        for id in 1..=4 {
+            let (a_tx, a_rx) = mpsc::channel();
+            tx.send(Msg::Create(SeqId(id), a_tx)).unwrap();
+            acks.push(a_rx);
+        }
+        let (d1_msg, d1_rx) = work(SeqId(1), 1, &mut rng);
+        tx.send(d1_msg).unwrap();
+        let bad = AttendChunk {
+            seq: SeqId(2),
+            q: Mat::randn(1, 4, &mut rng), // 4 != d_head=8: stacking panics
+            k: Mat::randn(1, 8, &mut rng),
+            v: Mat::randn(1, 4, &mut rng),
+        };
+        let (d2_msg, d2_rx) = work_item(bad);
+        tx.send(d2_msg).unwrap();
+        let (d3_msg, d3_rx) = work(SeqId(3), 1, &mut rng);
+        tx.send(d3_msg).unwrap();
+        let (d1b_msg, d1b_rx) = work(SeqId(1), 1, &mut rng);
+        tx.send(d1b_msg).unwrap();
+        let p4 = chunk(SeqId(4), 4, &mut rng);
+        let (p4_ref_q, p4_ref_k, p4_ref_v) = (p4.q.clone(), p4.k.clone(), p4.v.clone());
+        let (p4_msg, p4_rx) = work_item(p4);
+        tx.send(p4_msg).unwrap();
+        tx.send(Msg::Shutdown).unwrap();
+        run(worker_cfg(), rx, metrics.clone(), inflight.clone()).unwrap();
+        for a in acks {
+            a.recv().unwrap().unwrap();
+        }
+        for (name, rx) in [("d1", d1_rx), ("d2", d2_rx), ("d3", d3_rx)] {
+            let err = rx.recv().unwrap().expect_err("wave member must be poisoned");
+            assert!(err.to_string().contains("poisoned"), "{name}: {err}");
+        }
+        let err = d1b_rx.recv().unwrap().expect_err("poisoned session must be gone");
+        assert!(err.to_string().contains("unknown sequence"), "{err}");
+        let got = p4_rx.recv().unwrap().expect("prefill after the panic still serves");
+        let backend = crate::kernels::build_with_window(&Mechanism::EluLinear, 8, 64, 0).unwrap();
+        let mut reference = backend.new_state(4);
+        let want = backend
+            .prefill(&mut reference, p4_ref_q.view(), p4_ref_k.view(), p4_ref_v.view())
+            .unwrap();
+        assert_eq!(got.y, want, "untouched session must be bit-identical");
+        assert_eq!(metrics.worker_panics.load(Ordering::Relaxed), 1);
+        assert_eq!(metrics.sessions_poisoned.load(Ordering::Relaxed), 3);
+        assert_eq!(inflight.load(Ordering::Relaxed), 0, "no leaked inflight slots");
     }
 }

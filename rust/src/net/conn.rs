@@ -77,6 +77,13 @@ impl MsgReader {
                     None => return Ok(None),
                     Some((frame, consumed)) => {
                         self.buf.drain(..consumed);
+                        // Fault site `frame_rx` (ADR-008): a fired draw
+                        // stands in for a frame whose payload arrived
+                        // mangled — surfaced exactly like a real checksum
+                        // mismatch (connection told why, then closed).
+                        if crate::util::fault::fire("frame_rx").is_some() {
+                            return Err(WireError::Frame(FrameError::Checksum));
+                        }
                         return Ok(Some(WireMsg::Frame(frame)));
                     }
                 }
@@ -143,7 +150,12 @@ impl Conn {
 
     /// Queue bytes for writing (actual socket writes happen in `flush`).
     pub fn queue(&mut self, bytes: &[u8]) {
+        let start = self.wbuf.len();
         self.wbuf.extend_from_slice(bytes);
+        // Fault site `frame_tx` (ADR-008): mangles the tail of what was
+        // just queued, simulating outbound corruption — the *client's*
+        // checksum check is what must catch it.
+        crate::util::fault::corrupt_tail("frame_tx", &mut self.wbuf[start..]);
     }
 
     /// Unwritten outgoing bytes (the backpressure gauge).

@@ -19,7 +19,7 @@
 //! traffic. Tensor ops never block the reactor.
 
 use crate::coordinator::metrics::Metrics;
-use crate::coordinator::request::{AttendResult, ReplyTo};
+use crate::coordinator::request::{AttendResult, ReplyTo, ServeError};
 use crate::coordinator::server::{attend_reply_json, error_json, parse_line, shed, ParsedLine};
 use crate::coordinator::Coordinator;
 use crate::net::conn::{Conn, WireError, WireMsg};
@@ -193,6 +193,11 @@ enum ReplyMode {
 struct ReplyCtx {
     conn: u64,
     mode: ReplyMode,
+    /// Reap-by deadline (ADR-008): request deadline plus reply slack, or
+    /// a liveness fallback when no `--request-timeout-ms` is configured.
+    /// Past it, the reactor answers a structured timeout itself — a
+    /// completion that never arrives (dead worker) can't strand a client.
+    deadline: Instant,
 }
 
 /// Per-stream accounting for streaming decodes.
@@ -226,6 +231,8 @@ struct Reactor {
     coord: Arc<Coordinator>,
     d_head: usize,
     d_v: usize,
+    /// Per-request reap window ([`ReplyCtx::deadline`]).
+    reply_deadline: Duration,
     opts: NetOptions,
     comp_tx: mpsc::Sender<(u64, anyhow::Result<AttendResult>)>,
     comp_rx: mpsc::Receiver<(u64, anyhow::Result<AttendResult>)>,
@@ -288,6 +295,7 @@ impl Reactor {
                 }
             }
             self.drain_completions();
+            self.reap_expired();
         }
     }
 
@@ -570,7 +578,8 @@ impl Reactor {
     ) -> anyhow::Result<()> {
         let tag = self.next_tag;
         self.next_tag += 1;
-        self.ctxs.insert(tag, ReplyCtx { conn: tok, mode });
+        let deadline = Instant::now() + self.reply_deadline;
+        self.ctxs.insert(tag, ReplyCtx { conn: tok, mode, deadline });
         let reply =
             ReplyTo::Completion { tag, queue: self.comp_tx.clone(), wake: self.wake.clone() };
         match self.coord.submit_with(chunk, reply) {
@@ -584,58 +593,87 @@ impl Reactor {
 
     fn drain_completions(&mut self) {
         while let Ok((tag, result)) = self.comp_rx.try_recv() {
-            let Some(ctx) = self.ctxs.remove(&tag) else { continue };
-            // Build reply bytes before touching the connection (stream
-            // bookkeeping borrows `self.streams`).
-            let mut out: Vec<Vec<u8>> = Vec::with_capacity(2);
-            let mut request_finished = true;
-            match ctx.mode {
-                ReplyMode::Json => {
-                    let line = match &result {
-                        Ok(r) => attend_reply_json(r),
-                        Err(e) => error_json(&e.to_string()),
-                    };
-                    let mut s = line.to_string();
-                    s.push('\n');
-                    out.push(s.into_bytes());
-                }
-                ReplyMode::Binary { seq } => out.push(match &result {
-                    Ok(r) => reply_frame(seq, r),
-                    Err(e) => error_frame(seq, &e.to_string()),
-                }),
-                ReplyMode::Stream { stream, seq, index } => {
-                    let Some(p) = self.streams.get_mut(&stream) else { continue };
-                    p.done += 1;
-                    match &result {
-                        Ok(r) => out.push(token_frame(seq, index, r)),
-                        Err(e) => {
-                            p.ok = false;
-                            out.push(error_frame(seq, &e.to_string()));
-                        }
-                    }
-                    if p.done == p.expected {
-                        let p = self.streams.remove(&stream).expect("stream entry vanished");
-                        out.push(end_frame(seq, p.session, p.ok, p.requested));
-                    } else {
-                        request_finished = false;
-                    }
-                }
-            }
-            let Some(mut conn) = self.conns.remove(&ctx.conn) else {
-                continue; // client vanished mid-request; result discarded
+            let Some(ctx) = self.ctxs.remove(&tag) else {
+                continue; // reaped past its deadline; late result discarded
             };
-            for bytes in &out {
-                self.queue_frame(&mut conn, bytes);
+            self.route_completion(ctx, result);
+        }
+    }
+
+    /// Reap in-flight requests past their deadline (ADR-008): the client
+    /// gets a structured timeout now; the real completion, if it ever
+    /// arrives, finds its ctx gone and is discarded above. This is what
+    /// bounds a client's wait when a worker dies holding its request.
+    fn reap_expired(&mut self) {
+        if self.ctxs.is_empty() {
+            return;
+        }
+        let now = Instant::now();
+        let expired: Vec<u64> = self
+            .ctxs
+            .iter()
+            .filter(|(_, c)| now >= c.deadline)
+            .map(|(&t, _)| t)
+            .collect();
+        for tag in expired {
+            let Some(ctx) = self.ctxs.remove(&tag) else { continue };
+            self.metrics.request_timeouts.fetch_add(1, Ordering::Relaxed);
+            self.route_completion(ctx, Err(ServeError::Timeout.into()));
+        }
+    }
+
+    /// Map one finished (or reaped) request back onto its wire plane.
+    fn route_completion(&mut self, ctx: ReplyCtx, result: anyhow::Result<AttendResult>) {
+        // Build reply bytes before touching the connection (stream
+        // bookkeeping borrows `self.streams`).
+        let mut out: Vec<Vec<u8>> = Vec::with_capacity(2);
+        let mut request_finished = true;
+        match ctx.mode {
+            ReplyMode::Json => {
+                let line = match &result {
+                    Ok(r) => attend_reply_json(r),
+                    Err(e) => error_json(&e.to_string()),
+                };
+                let mut s = line.to_string();
+                s.push('\n');
+                out.push(s.into_bytes());
             }
-            if request_finished {
-                conn.pending = conn.pending.saturating_sub(1);
+            ReplyMode::Binary { seq } => out.push(match &result {
+                Ok(r) => reply_frame(seq, r),
+                Err(e) => error_frame(seq, &e.to_string()),
+            }),
+            ReplyMode::Stream { stream, seq, index } => {
+                let Some(p) = self.streams.get_mut(&stream) else { return };
+                p.done += 1;
+                match &result {
+                    Ok(r) => out.push(token_frame(seq, index, r)),
+                    Err(e) => {
+                        p.ok = false;
+                        out.push(error_frame(seq, &e.to_string()));
+                    }
+                }
+                if p.done == p.expected {
+                    let p = self.streams.remove(&stream).expect("stream entry vanished");
+                    out.push(end_frame(seq, p.session, p.ok, p.requested));
+                } else {
+                    request_finished = false;
+                }
             }
-            let dead = self.after_io(ctx.conn, &mut conn);
-            if dead {
-                self.release_conn(conn);
-            } else {
-                self.conns.insert(ctx.conn, conn);
-            }
+        }
+        let Some(mut conn) = self.conns.remove(&ctx.conn) else {
+            return; // client vanished mid-request; result discarded
+        };
+        for bytes in &out {
+            self.queue_frame(&mut conn, bytes);
+        }
+        if request_finished {
+            conn.pending = conn.pending.saturating_sub(1);
+        }
+        let dead = self.after_io(ctx.conn, &mut conn);
+        if dead {
+            self.release_conn(conn);
+        } else {
+            self.conns.insert(ctx.conn, conn);
         }
     }
 
@@ -759,6 +797,10 @@ impl EpollServer {
         let wake_clone = waker.clone();
         let wake: Arc<dyn Fn() + Send + Sync> = Arc::new(move || wake_clone.wake());
         let cfg = coord.config();
+        let reply_deadline = match cfg.request_timeout {
+            Some(t) => t + Duration::from_millis(500),
+            None => Duration::from_secs(120),
+        };
         let reactor = Reactor {
             epfd,
             listener: Some(listener),
@@ -772,6 +814,7 @@ impl EpollServer {
             coord: coord.clone(),
             d_head: cfg.d_head,
             d_v: cfg.d_v,
+            reply_deadline,
             opts,
             comp_tx,
             comp_rx,

@@ -1,0 +1,265 @@
+//! Deterministic fault injection (ADR-008).
+//!
+//! A seeded [`FaultPlan`] is parsed once from the `SLAY_FAULTS` env var
+//! and consulted from named *sites* threaded through the serving stack
+//! (spill read/write, snapshot write, wire rx/tx, worker compute, the
+//! worker loop itself). The spec grammar is
+//!
+//! ```text
+//! SLAY_FAULTS = "spill_write:io@0.02;frame_rx:corrupt@0.01;decode:panic@0.005;seed=7"
+//! ```
+//!
+//! i.e. `;`-separated `site:kind@probability` clauses plus an optional
+//! `seed=N` clause. Three fault kinds exist — `io` (the site reports an
+//! I/O-style error), `corrupt` (the site mangles bytes), `panic` (the
+//! site panics) — and each site documents which kinds it honors.
+//!
+//! **Determinism.** Whether draw number `c` at a site fires is a pure
+//! function of `(seed, site, c)` — a seeded hash compared against the
+//! clause's probability — so the *set* of firing draws is independent of
+//! thread scheduling. Two runs that make the same number of draws at a
+//! site inject exactly the same faults at the same draw indices, which is
+//! what lets the chaos harness (`rust/tests/chaos.rs`) make assertions
+//! about fault counts instead of praying to `rand`.
+//!
+//! **Zero overhead when unset.** The global plan lives in a
+//! `OnceLock<Option<FaultPlan>>`: after the first call, [`fire`] is one
+//! atomic load and a branch on `None`. No site pays for the machinery in
+//! production.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+/// What an armed site should do when its draw fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Fail the operation with an injected I/O-style error.
+    Io,
+    /// Corrupt the bytes the operation produces or consumes.
+    Corrupt,
+    /// Panic at the site.
+    Panic,
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> anyhow::Result<FaultKind> {
+        match s {
+            "io" => Ok(FaultKind::Io),
+            "corrupt" => Ok(FaultKind::Corrupt),
+            "panic" => Ok(FaultKind::Panic),
+            other => anyhow::bail!("unknown fault kind '{other}' (expected io|corrupt|panic)"),
+        }
+    }
+}
+
+/// One armed clause: a site name, what to inject, and how often.
+struct Clause {
+    site: String,
+    kind: FaultKind,
+    prob: f64,
+    /// Draws made at this site so far (the deterministic sampling index).
+    draws: AtomicU64,
+}
+
+/// A parsed, seeded fault schedule. See the module docs for the grammar.
+pub struct FaultPlan {
+    seed: u64,
+    clauses: Vec<Clause>,
+}
+
+impl FaultPlan {
+    /// Parse a `SLAY_FAULTS` spec. Errors on malformed clauses rather
+    /// than guessing — a chaos run with a typo'd plan should fail loudly,
+    /// not run fault-free.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut seed = 0x51A7_D6E8_FEB8_6659_u64;
+        let mut clauses = Vec::new();
+        for tok in spec.split(';').map(str::trim).filter(|t| !t.is_empty()) {
+            if let Some(s) = tok.strip_prefix("seed=") {
+                seed = s.parse::<u64>().map_err(|_| anyhow::anyhow!("bad seed '{s}'"))?;
+                continue;
+            }
+            let (site, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("clause '{tok}' is not site:kind@prob"))?;
+            let (kind, prob) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("clause '{tok}' is not site:kind@prob"))?;
+            let kind = FaultKind::parse(kind)?;
+            let prob = prob
+                .parse::<f64>()
+                .ok()
+                .filter(|p| (0.0..=1.0).contains(p))
+                .ok_or_else(|| anyhow::anyhow!("bad probability '{prob}' in '{tok}'"))?;
+            anyhow::ensure!(!site.is_empty(), "empty site name in '{tok}'");
+            clauses.push(Clause {
+                site: site.to_string(),
+                kind,
+                prob,
+                draws: AtomicU64::new(0),
+            });
+        }
+        anyhow::ensure!(!clauses.is_empty(), "fault spec has no clauses");
+        Ok(FaultPlan { seed, clauses })
+    }
+
+    /// Make one draw at `site`: `Some(kind)` iff this draw fires. Sites
+    /// not named in the plan never fire and cost one linear scan over the
+    /// (handful of) clauses.
+    pub fn fire(&self, site: &str) -> Option<FaultKind> {
+        let c = self.clauses.iter().find(|c| c.site == site)?;
+        let draw = c.draws.fetch_add(1, Ordering::Relaxed);
+        let z = mix(self.seed ^ fnv1a(site), draw);
+        // 53 uniform bits → [0, 1); fires iff below the clause probability.
+        let u = (z >> 11) as f64 / (1u64 << 53) as f64;
+        (u < c.prob).then_some(c.kind)
+    }
+}
+
+/// splitmix64-style finalizer over (stream, index).
+fn mix(stream: u64, index: u64) -> u64 {
+    let mut z = stream ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+static PLAN: OnceLock<Option<FaultPlan>> = OnceLock::new();
+
+fn plan() -> Option<&'static FaultPlan> {
+    PLAN.get_or_init(|| match std::env::var("SLAY_FAULTS") {
+        Ok(spec) if !spec.trim().is_empty() => match FaultPlan::parse(&spec) {
+            Ok(p) => {
+                crate::log_warn!("fault injection ARMED: SLAY_FAULTS={spec}");
+                Some(p)
+            }
+            Err(e) => {
+                crate::log_error!("ignoring malformed SLAY_FAULTS '{spec}': {e}");
+                None
+            }
+        },
+        _ => None,
+    })
+    .as_ref()
+}
+
+/// True iff a fault plan is armed for this process.
+pub fn active() -> bool {
+    plan().is_some()
+}
+
+/// Global draw at `site` against the process plan (never fires when
+/// `SLAY_FAULTS` is unset — the production fast path is one branch).
+pub fn fire(site: &str) -> Option<FaultKind> {
+    plan()?.fire(site)
+}
+
+/// Convenience for panic-only sites: panics iff a draw at `site` fires
+/// (any kind — a site that can only die treats io/corrupt as panic too).
+pub fn maybe_panic(site: &str) {
+    if fire(site).is_some() {
+        panic!("injected fault at site '{site}'");
+    }
+}
+
+/// Convenience for corrupt-capable byte sites: flips the last byte of
+/// `buf` iff a `corrupt` draw at `site` fires. Returns true on injection.
+pub fn corrupt_tail(site: &str, buf: &mut [u8]) -> bool {
+    if fire(site) == Some(FaultKind::Corrupt) {
+        if let Some(last) = buf.last_mut() {
+            *last ^= 0xff;
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // These tests exercise FaultPlan instances directly and never touch
+    // the process-global plan: initializing the OnceLock from a test
+    // would leak injected faults into every other test in the binary.
+
+    #[test]
+    fn spec_parses_clauses_and_seed() {
+        let p = FaultPlan::parse("spill_write:io@0.02;frame_rx:corrupt@0.01;seed=9").unwrap();
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.clauses.len(), 2);
+        assert_eq!(p.clauses[0].site, "spill_write");
+        assert_eq!(p.clauses[0].kind, FaultKind::Io);
+        assert_eq!(p.clauses[1].kind, FaultKind::Corrupt);
+        assert!((p.clauses[1].prob - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn malformed_specs_are_rejected() {
+        for bad in [
+            "",
+            "justasite",
+            "site:io",
+            "site:@0.5",
+            "site:frob@0.5",
+            "site:io@1.5",
+            "site:io@-0.1",
+            "site:io@nan",
+            ":io@0.5",
+            "seed=xyz",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_index() {
+        let spec = "decode:panic@0.2;seed=42";
+        let a = FaultPlan::parse(spec).unwrap();
+        let b = FaultPlan::parse(spec).unwrap();
+        let fires_a: Vec<bool> = (0..4096).map(|_| a.fire("decode").is_some()).collect();
+        let fires_b: Vec<bool> = (0..4096).map(|_| b.fire("decode").is_some()).collect();
+        assert_eq!(fires_a, fires_b, "same (seed, site, index) must fire identically");
+        let n = fires_a.iter().filter(|f| **f).count();
+        // 4096 draws at p=0.2: the seeded hash should land in the right
+        // ballpark (expected 819, very loose bounds).
+        assert!((400..=1300).contains(&n), "fired {n}/4096 at p=0.2");
+    }
+
+    #[test]
+    fn edge_probabilities_and_unknown_sites() {
+        let p = FaultPlan::parse("never:io@0;always:panic@1;seed=3").unwrap();
+        for _ in 0..256 {
+            assert_eq!(p.fire("never"), None);
+            assert_eq!(p.fire("always"), Some(FaultKind::Panic));
+            assert_eq!(p.fire("unlisted_site"), None);
+        }
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let p = FaultPlan::parse("a:io@0.5;b:io@0.5;seed=11").unwrap();
+        let fa: Vec<bool> = (0..512).map(|_| p.fire("a").is_some()).collect();
+        let fb: Vec<bool> = (0..512).map(|_| p.fire("b").is_some()).collect();
+        assert_ne!(fa, fb, "distinct sites must not share a draw stream");
+    }
+
+    #[test]
+    fn corrupt_tail_flips_exactly_on_corrupt() {
+        let p = FaultPlan::parse("tx:corrupt@1;seed=1").unwrap();
+        // Instance-level equivalent of corrupt_tail's logic.
+        let mut buf = [1u8, 2, 3];
+        if p.fire("tx") == Some(FaultKind::Corrupt) {
+            *buf.last_mut().unwrap() ^= 0xff;
+        }
+        assert_eq!(buf, [1, 2, 3 ^ 0xff]);
+    }
+}

@@ -4,6 +4,7 @@
 
 pub mod benchkit;
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod logging;
 pub mod quickprop;

@@ -1,0 +1,585 @@
+//! Deterministic chaos harness (ADR-008).
+//!
+//! Drives mixed prefill / decode / fork traffic from concurrent clients
+//! against a live TCP front end while the `SLAY_FAULTS` plan injects
+//! spill-write I/O errors, inbound frame corruption, compute panics and
+//! whole-worker kills, then checks the three fault-tolerance invariants:
+//!
+//! 1. **No request hangs.** Every client-observed wait stays under the
+//!    request deadline plus slack, faults or not (a read past the client
+//!    timeout fails the test).
+//! 2. **Fault-untouched sessions are bit-identical.** Any session that
+//!    never saw an errored reply must match a fault-free replay of its
+//!    exact chunk stream on a directly-built backend, bit for bit.
+//! 3. **Every injected fault class is visible in metrics.** Bounded
+//!    targeted top-up traffic guarantees each armed site actually fires.
+//!
+//! The plan self-arms with a fixed seed when `SLAY_FAULTS` is unset, so
+//! `cargo test --test chaos` is a chaos run by default. Setting
+//! `SLAY_FAULTS` to an unparseable value (e.g. `off`) disarms the layer,
+//! turning this into the fault-free control run: the same traffic must
+//! then complete with zero errors and zero fault counters — the
+//! fault-layer-is-a-no-op gate ci.sh relies on.
+//!
+//! Replies are read with `decode_frame` directly rather than `MsgReader`:
+//! the reader hosts the *server-side* `frame_rx` fault site, and a client
+//! using it would draw from (and corrupt) the same global plan, wrecking
+//! the draw accounting the determinism argument rests on.
+
+use slay::coordinator::state::StoreConfig;
+use slay::coordinator::{Coordinator, CoordinatorConfig};
+use slay::kernels::build_with_window;
+use slay::kernels::config::Mechanism;
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::net::frame::{
+    decode_frame, encode_frame, Frame, ReplyChunkWire, TensorChunkWire, WireOp,
+};
+use slay::net::{serve, Frontend, NetOptions};
+use slay::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const D_HEAD: usize = 4;
+const D_V: usize = 4;
+const HORIZON: usize = 64;
+const CLIENTS: usize = 6;
+const SESSIONS_PER_CLIENT: usize = 4;
+const DECODE_ROUNDS: usize = 8;
+const REQUEST_TIMEOUT: Duration = Duration::from_millis(2000);
+/// Invariant 1 slack on top of the request deadline (CI-load headroom).
+const SLACK: Duration = Duration::from_secs(5);
+/// A reply later than this is a hang, not congestion: hard test failure.
+const READ_TIMEOUT: Duration = Duration::from_secs(15);
+
+/// The fixed-seed plan used when `SLAY_FAULTS` is unset. ci.sh passes
+/// this same string explicitly so the smoke gate is reproducible.
+const DEFAULT_PLAN: &str =
+    "spill_write:io@0.03;decode:panic@0.01;frame_rx:corrupt@0.02;worker_loop:panic@0.004;seed=7";
+
+// ---- minimal client-side wire plumbing -------------------------------------
+
+/// A blocking client connection with one shared inbound byte buffer, so
+/// JSON lines and binary frames can interleave without losing bytes to a
+/// `BufReader`'s read-ahead. Traffic is strictly request → reply, so the
+/// caller always knows which plane to read next.
+struct Wire {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl Wire {
+    /// Connect with retries (a reconnect storm can overflow the backlog).
+    fn connect(addr: SocketAddr) -> Wire {
+        let deadline = Instant::now() + Duration::from_secs(20);
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => {
+                    s.set_nodelay(true).unwrap();
+                    s.set_read_timeout(Some(READ_TIMEOUT)).unwrap();
+                    return Wire { stream: s, buf: Vec::new() };
+                }
+                Err(e) => {
+                    assert!(Instant::now() < deadline, "connect never succeeded: {e}");
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    fn send(&mut self, bytes: &[u8]) -> Result<(), String> {
+        self.stream.write_all(bytes).map_err(|e| format!("write error: {e}"))
+    }
+
+    fn fill(&mut self) -> Result<(), String> {
+        let mut tmp = [0u8; 16 * 1024];
+        match self.stream.read(&mut tmp) {
+            Ok(0) => Err("server closed the connection".into()),
+            Ok(n) => {
+                self.buf.extend_from_slice(&tmp[..n]);
+                Ok(())
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                // Invariant 1: no client waits unbounded, ever.
+                panic!("request hung: no reply within {READ_TIMEOUT:?}")
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(()),
+            Err(e) => Err(format!("read error: {e}")),
+        }
+    }
+
+    fn next_line(&mut self) -> Result<String, String> {
+        loop {
+            if let Some(i) = self.buf.iter().position(|&b| b == b'\n') {
+                let line = String::from_utf8_lossy(&self.buf[..i]).trim().to_string();
+                self.buf.drain(..=i);
+                if line.is_empty() {
+                    continue;
+                }
+                return Ok(line);
+            }
+            self.fill()?;
+        }
+    }
+
+    fn next_frame(&mut self) -> Result<Frame, String> {
+        loop {
+            match decode_frame(&self.buf, 1 << 24) {
+                Ok(Some((f, used))) => {
+                    self.buf.drain(..used);
+                    return Ok(f);
+                }
+                Ok(None) => self.fill()?,
+                // An outbound (`frame_tx`) corruption lands here: the
+                // client-side checksum is what catches it.
+                Err(e) => return Err(format!("inbound frame undecodable: {e}")),
+            }
+        }
+    }
+}
+
+fn json_op(w: &mut Wire, req: &str) -> Result<Json, String> {
+    w.send(req.as_bytes())?;
+    w.send(b"\n")?;
+    let line = w.next_line()?;
+    Json::parse(&line).map_err(|e| format!("unparseable reply {line:?}: {e}"))
+}
+
+/// One binary attend. Outer `Err` is connection-fatal (framing loss —
+/// reconnect); inner `Err` is a coordinator refusal scoped to the session
+/// (timeout, unknown sequence, injected compute fault, shard down). The
+/// two are told apart by probing the connection with a JSON roundtrip —
+/// refusals leave it open, protocol errors close it — instead of
+/// string-matching error text.
+fn binary_attend(
+    w: &mut Wire,
+    corr: u64,
+    tc: &TensorChunkWire,
+) -> Result<Result<ReplyChunkWire, String>, String> {
+    w.send(&encode_frame(WireOp::Attend, corr, &tc.encode()))?;
+    let f = w.next_frame()?;
+    match f.op {
+        WireOp::Reply => match ReplyChunkWire::decode(&f.payload) {
+            Ok(r) => Ok(Ok(r)),
+            Err(e) => Err(format!("undecodable reply payload: {e}")),
+        },
+        WireOp::Error => {
+            let msg = String::from_utf8_lossy(&f.payload).into_owned();
+            match json_op(w, r#"{"op":"metrics"}"#) {
+                Ok(_) => Ok(Err(msg)),
+                Err(_) => Err(msg),
+            }
+        }
+        other => Err(format!("unexpected reply op {other:?}")),
+    }
+}
+
+// ---- the recorded workload -------------------------------------------------
+
+#[derive(Clone)]
+struct Chunk {
+    n: usize,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+fn make_chunk(rng: &mut Rng, n: usize) -> Chunk {
+    let draw = |rng: &mut Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.uniform_f32() - 0.5).collect()
+    };
+    Chunk {
+        n,
+        q: draw(rng, n * D_HEAD),
+        k: draw(rng, n * D_HEAD),
+        v: draw(rng, n * D_V),
+    }
+}
+
+/// What one logical session saw: every applied chunk with its reply bits.
+/// `affected` is set the moment any of its requests errors (or its
+/// request is lost to a framing fault) — only clean sessions enter the
+/// bit-identity set.
+#[derive(Clone)]
+struct SessionLog {
+    applied: Vec<(Chunk, Vec<u32>)>,
+    affected: bool,
+}
+
+struct Live {
+    server_id: Option<u64>,
+    rng: Rng,
+    expect_len: usize,
+    log: SessionLog,
+}
+
+/// Drive one chunk on a live session, recording the reply or the fault.
+fn step(w: &mut Wire, addr: SocketAddr, s: &mut Live, n: usize, max_ms: &mut u128) {
+    if s.log.affected {
+        return;
+    }
+    let Some(id) = s.server_id else { return };
+    let chunk = make_chunk(&mut s.rng, n);
+    let tc = TensorChunkWire {
+        session: id,
+        n: n as u32,
+        d_head: D_HEAD as u32,
+        d_v: D_V as u32,
+        q: chunk.q.clone(),
+        k: chunk.k.clone(),
+        v: chunk.v.clone(),
+    };
+    let t0 = Instant::now();
+    let r = binary_attend(w, id, &tc);
+    *max_ms = (*max_ms).max(t0.elapsed().as_millis());
+    match r {
+        Ok(Ok(reply)) => {
+            s.expect_len += n;
+            assert_eq!(
+                reply.seq_len as usize, s.expect_len,
+                "session {id} length diverged without any error being reported"
+            );
+            s.log.applied.push((chunk, reply.y.iter().map(|x| x.to_bits()).collect()));
+        }
+        Ok(Err(_)) => s.log.affected = true,
+        Err(_) => {
+            // The corrupted message was this session's own request (serial
+            // traffic): only it is marked; the connection is rebuilt.
+            s.log.affected = true;
+            *w = Wire::connect(addr);
+        }
+    }
+}
+
+struct Traffic {
+    logs: Vec<SessionLog>,
+    max_ms: u128,
+}
+
+/// One client: create 4 sessions, prefill each (n=4), run decode rounds
+/// with a mid-stream fork of session 0, all on one mixed-plane socket.
+fn run_client(addr: SocketAddr, client: u64) -> Traffic {
+    let mut w = Wire::connect(addr);
+    let mut max_ms = 0u128;
+    let mut live: Vec<Live> = (0..SESSIONS_PER_CLIENT as u64)
+        .map(|i| Live {
+            server_id: None,
+            rng: Rng::new(0xC0A5_0000 + client * 64 + i),
+            expect_len: 0,
+            log: SessionLog { applied: Vec::new(), affected: false },
+        })
+        .collect();
+
+    for s in live.iter_mut() {
+        let t0 = Instant::now();
+        let r = json_op(&mut w, r#"{"op":"create"}"#);
+        max_ms = max_ms.max(t0.elapsed().as_millis());
+        match r {
+            Ok(j) if j.get("ok").and_then(|v| v.as_bool()) == Some(true) => {
+                s.server_id = Some(j.get("seq").unwrap().as_usize().unwrap() as u64);
+            }
+            Ok(_) => s.log.affected = true,
+            Err(_) => {
+                s.log.affected = true;
+                w = Wire::connect(addr);
+            }
+        }
+    }
+    for s in live.iter_mut() {
+        step(&mut w, addr, s, 4, &mut max_ms);
+    }
+    for round in 0..DECODE_ROUNDS {
+        if round == 3 {
+            // Fork session 0: the child inherits the parent's applied
+            // history (COW semantics) and decodes independently after.
+            let (pid, p_affected, p_expect, p_applied) = {
+                let p = &live[0];
+                (p.server_id, p.log.affected, p.expect_len, p.log.applied.clone())
+            };
+            if let (Some(pid), false) = (pid, p_affected) {
+                let t0 = Instant::now();
+                let r = json_op(&mut w, &format!(r#"{{"op":"fork","seq":{pid}}}"#));
+                max_ms = max_ms.max(t0.elapsed().as_millis());
+                match r {
+                    Ok(j) if j.get("ok").and_then(|v| v.as_bool()) == Some(true) => {
+                        let child = j.get("seq").unwrap().as_usize().unwrap() as u64;
+                        live.push(Live {
+                            server_id: Some(child),
+                            rng: Rng::new(0xF00D_0000 + client),
+                            expect_len: p_expect,
+                            log: SessionLog { applied: p_applied, affected: false },
+                        });
+                    }
+                    // A refused fork means the parent's state is gone
+                    // (destroyed by an earlier fault): the parent is the
+                    // affected one, and no child exists.
+                    Ok(_) => live[0].log.affected = true,
+                    Err(_) => w = Wire::connect(addr),
+                }
+            }
+        }
+        for s in live.iter_mut() {
+            step(&mut w, addr, s, 1, &mut max_ms);
+        }
+    }
+    Traffic { logs: live.into_iter().map(|l| l.log).collect(), max_ms }
+}
+
+// ---- metric polling + targeted top-ups -------------------------------------
+
+/// Read one coordinator counter over a fresh JSON-only connection (JSON
+/// lines never draw at `frame_rx`, so polling is fault-proof — and the
+/// roundtrip doubles as a server-liveness check after every fault).
+fn metric(addr: SocketAddr, name: &str) -> u64 {
+    let mut w = Wire::connect(addr);
+    let j = json_op(&mut w, r#"{"op":"metrics"}"#)
+        .expect("the metrics op must survive any amount of injected chaos");
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{j:?}");
+    j.get("metrics")
+        .and_then(|m| m.get(name))
+        .and_then(|v| v.as_usize())
+        .unwrap_or_else(|| panic!("metrics JSON is missing counter {name:?}")) as u64
+}
+
+fn sacrificial_create(w: &mut Wire, addr: SocketAddr) -> u64 {
+    for _ in 0..100 {
+        match json_op(w, r#"{"op":"create"}"#) {
+            Ok(j) => {
+                if let Some(id) = j.get("seq").and_then(|v| v.as_usize()) {
+                    return id as u64;
+                }
+            }
+            Err(_) => *w = Wire::connect(addr),
+        }
+    }
+    panic!("could not create a sacrificial session in 100 attempts");
+}
+
+/// One decode on a throwaway session, recreating it (or the connection)
+/// whenever a fault eats it. Every call makes one `frame_rx`, one
+/// `worker_loop` and one `decode` draw — the top-up workhorse.
+fn sacrificial_decode(w: &mut Wire, addr: SocketAddr, sess: &mut u64, rng: &mut Rng) {
+    let c = make_chunk(rng, 1);
+    let tc = TensorChunkWire {
+        session: *sess,
+        n: 1,
+        d_head: D_HEAD as u32,
+        d_v: D_V as u32,
+        q: c.q,
+        k: c.k,
+        v: c.v,
+    };
+    match binary_attend(w, *sess, &tc) {
+        Ok(Ok(_)) => {}
+        Ok(Err(_)) => *sess = sacrificial_create(w, addr),
+        Err(_) => {
+            *w = Wire::connect(addr);
+            *sess = sacrificial_create(w, addr);
+        }
+    }
+}
+
+// ---- the harness -----------------------------------------------------------
+
+#[test]
+fn chaos_faults_stay_bounded_counted_and_bit_exact() {
+    // Arm the fixed-seed plan unless the caller provided one. An
+    // unparseable value (e.g. SLAY_FAULTS=off) disarms the layer and
+    // turns this run into the fault-free control.
+    let unset = match std::env::var("SLAY_FAULTS") {
+        Ok(s) => s.trim().is_empty(),
+        Err(_) => true,
+    };
+    if unset {
+        std::env::set_var("SLAY_FAULTS", DEFAULT_PLAN);
+    }
+    let armed = slay::util::fault::active();
+    let spec = std::env::var("SLAY_FAULTS").unwrap_or_default();
+    let has = |site: &str| armed && spec.contains(site);
+
+    let spill = std::env::temp_dir().join(format!("slay_chaos_spill_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&spill);
+
+    // Tiny memory budget + spill tier: sessions page in and out on nearly
+    // every request, so `spill_write` draws constantly; 2 workers so a
+    // worker kill leaves a surviving shard serving mid-respawn.
+    let coord = Arc::new(
+        Coordinator::start(CoordinatorConfig {
+            mechanism: Mechanism::EluLinear,
+            d_head: D_HEAD,
+            d_v: D_V,
+            horizon: HORIZON,
+            window: 0,
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_micros(300),
+            queue_cap: 256,
+            store: StoreConfig {
+                max_sequences: 4096,
+                memory_budget: 2048,
+                spill_dir: Some(spill.clone()),
+                prefix_cache_budget: 0,
+                adopt_spills: false,
+            },
+            snapshot_root: None,
+            request_timeout: Some(REQUEST_TIMEOUT),
+        })
+        .unwrap(),
+    );
+    let server = serve(Frontend::Threads, "127.0.0.1:0", &coord, NetOptions::default()).unwrap();
+    let addr = server.addr();
+
+    let handles: Vec<_> = (0..CLIENTS as u64)
+        .map(|c| std::thread::spawn(move || run_client(addr, c)))
+        .collect();
+    let mut logs: Vec<SessionLog> = Vec::new();
+    let mut max_ms = 0u128;
+    for h in handles {
+        let t = h.join().expect("a client hit a hang or a client-side invariant breach");
+        logs.extend(t.logs);
+        max_ms = max_ms.max(t.max_ms);
+    }
+
+    // Invariant 3 top-ups: the main workload usually fires every class,
+    // but probabilities are probabilities — drive throwaway traffic at
+    // each still-silent site until its counter moves (bounded, so a
+    // genuinely broken site fails loudly instead of spinning).
+    if has("spill_write") {
+        let mut iters = 0;
+        while metric(addr, "spill_write_failures") == 0 {
+            iters += 1;
+            assert!(iters <= 80, "spill_write faults never surfaced in spill_write_failures");
+            let mut w = Wire::connect(addr);
+            let mut rng = Rng::new(0x5111 + iters);
+            // Every create over the budget evicts an idle session into
+            // the spill tier — one spill_write draw each, minimum.
+            for _ in 0..8 {
+                let mut sess = sacrificial_create(&mut w, addr);
+                sacrificial_decode(&mut w, addr, &mut sess, &mut rng);
+            }
+        }
+    }
+    let decode_topups: [(&str, &str); 4] = [
+        ("worker_restarts", "worker_loop"),
+        ("worker_panics", "worker_loop"),
+        ("worker_panics", "decode:"),
+        ("sessions_poisoned", "decode:"),
+    ];
+    let mut w = Wire::connect(addr);
+    let mut sess = sacrificial_create(&mut w, addr);
+    let mut rng = Rng::new(0xD1CE);
+    for (name, site) in decode_topups {
+        if !has(site) {
+            continue;
+        }
+        let mut iters = 0;
+        while metric(addr, name) == 0 {
+            for _ in 0..16 {
+                sacrificial_decode(&mut w, addr, &mut sess, &mut rng);
+            }
+            iters += 16;
+            assert!(iters <= 4096, "{site} faults never surfaced in {name}");
+        }
+    }
+    if has("frame_rx") {
+        let mut iters = 0;
+        while metric(addr, "protocol_errors") == 0 {
+            for _ in 0..16 {
+                sacrificial_decode(&mut w, addr, &mut sess, &mut rng);
+            }
+            iters += 16;
+            assert!(iters <= 2048, "frame_rx faults never surfaced in protocol_errors");
+        }
+    }
+
+    // Invariant 3: every armed fault class left a metrics footprint, and
+    // the server is still answering after all of it (worker kills
+    // included) — `metric` itself asserts the roundtrip.
+    if has("spill_write") {
+        assert!(metric(addr, "spill_write_failures") >= 1);
+    }
+    if has("worker_loop") {
+        assert!(metric(addr, "worker_restarts") >= 1, "killed workers must be respawned");
+        assert!(metric(addr, "worker_panics") >= 1);
+    }
+    if has("decode:") {
+        assert!(metric(addr, "worker_panics") >= 1);
+        assert!(metric(addr, "sessions_poisoned") >= 1);
+    }
+    if has("frame_rx") {
+        assert!(metric(addr, "protocol_errors") >= 1);
+    }
+    if !armed {
+        // Control run: with no plan armed the fault layer must be a
+        // perfect no-op — zero fault counters, zero errored sessions.
+        for name in [
+            "worker_panics",
+            "worker_restarts",
+            "sessions_poisoned",
+            "spill_write_failures",
+            "dropped_replies",
+            "protocol_errors",
+        ] {
+            assert_eq!(metric(addr, name), 0, "{name} moved on a fault-free run");
+        }
+        assert!(
+            logs.iter().all(|l| !l.affected),
+            "a session errored with the fault layer disarmed"
+        );
+    }
+
+    // Invariant 1: nobody waited past the deadline plus slack.
+    let bound = (REQUEST_TIMEOUT + SLACK).as_millis();
+    assert!(
+        max_ms <= bound,
+        "a client waited {max_ms}ms (bound {bound}ms): replies must be deadline-bounded"
+    );
+
+    // Invariant 2: sessions no fault touched replay bit-identically on a
+    // backend built outside the serving stack (prefill for multi-row
+    // chunks, single-token decode otherwise — mirroring the worker).
+    let survivors: Vec<&SessionLog> =
+        logs.iter().filter(|l| !l.affected && !l.applied.is_empty()).collect();
+    assert!(
+        !survivors.is_empty(),
+        "at least one session must ride out the chaos untouched"
+    );
+    let backend = build_with_window(&Mechanism::EluLinear, D_HEAD, HORIZON, 0).unwrap();
+    for (si, log) in survivors.iter().enumerate() {
+        let mut st = backend.new_state(D_V);
+        for (ci, (chunk, got)) in log.applied.iter().enumerate() {
+            let want: Vec<u32> = if chunk.n == 1 {
+                let mut out = vec![0.0f32; D_V];
+                backend.decode(&mut st, &chunk.q, &chunk.k, &chunk.v, &mut out).unwrap();
+                out.iter().map(|x| x.to_bits()).collect()
+            } else {
+                let q = Mat::from_vec(chunk.n, D_HEAD, chunk.q.clone());
+                let k = Mat::from_vec(chunk.n, D_HEAD, chunk.k.clone());
+                let v = Mat::from_vec(chunk.n, D_V, chunk.v.clone());
+                backend
+                    .prefill(&mut st, q.view(), k.view(), v.view())
+                    .unwrap()
+                    .data
+                    .iter()
+                    .map(|x| x.to_bits())
+                    .collect()
+            };
+            assert_eq!(
+                &want, got,
+                "fault-untouched session {si}, chunk {ci}: not bit-identical to the \
+                 fault-free replay"
+            );
+        }
+    }
+
+    server.shutdown_drain(Duration::from_secs(5));
+    drop(coord);
+    let _ = std::fs::remove_dir_all(&spill);
+}

@@ -29,6 +29,7 @@ fn small_cfg(workers: usize) -> CoordinatorConfig {
             memory_budget: 64 << 20,
             spill_dir: None,
             prefix_cache_budget: 0,
+            adopt_spills: false,
         },
         ..CoordinatorConfig::default()
     }
@@ -350,6 +351,7 @@ fn spill_roundtrip_case(mechanism: Mechanism) {
                 memory_budget: 64 << 20,
                 spill_dir: Some(dir.clone()),
                 prefix_cache_budget: 0,
+                adopt_spills: false,
             };
         }
         cfg
@@ -500,6 +502,7 @@ fn spill_tier_serves_more_quadratic_sequences_than_the_budget_admits() {
         memory_budget: 4 * per_seq,
         spill_dir: Some(dir.clone()),
         prefix_cache_budget: 0,
+        adopt_spills: false,
     };
     let coord = Coordinator::start(cfg).unwrap();
     let mut rng = Rng::new(2);
@@ -537,6 +540,7 @@ fn window_knob_admits_many_quadratic_sequences() {
         memory_budget: 1 << 20,
         spill_dir: None,
         prefix_cache_budget: 0,
+        adopt_spills: false,
     };
     let coord = Coordinator::start(cfg).unwrap();
     let mut rng = Rng::new(9);
