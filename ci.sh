@@ -32,6 +32,11 @@
 #                                       threads and epoll; asserts the
 #                                       binary-beats-JSON p50 gate at 4096
 #                                       floats and results/BENCH_wire.json)
+#   * SLAY_BENCH_SMOKE=1 serve_obs     (observability overhead smoke:
+#                                       decode throughput with per-stage
+#                                       tracing on must stay within 3% of
+#                                       recording off; asserts
+#                                       results/BENCH_obs.json lands)
 #   * chaos (armed)                    (ADR-008 fault-injection smoke: the
 #                                       fixed-seed SLAY_FAULTS plan below
 #                                       drives mixed traffic through worker
@@ -107,6 +112,11 @@ echo "== serve_wire smoke (JSON vs binary, threads vs epoll; emits BENCH_wire.js
 rm -f "$RESULTS_DIR/BENCH_wire.json"
 SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench serve_wire
 test -f "$RESULTS_DIR/BENCH_wire.json" || { echo "BENCH_wire.json missing"; exit 1; }
+
+echo "== serve_obs smoke (tracing overhead <= 3% gate; emits BENCH_obs.json) =="
+rm -f "$RESULTS_DIR/BENCH_obs.json"
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench serve_obs
+test -f "$RESULTS_DIR/BENCH_obs.json" || { echo "BENCH_obs.json missing"; exit 1; }
 
 echo "== perf trajectory (appends BENCH_TRAJECTORY.json, diffs vs previous entry) =="
 env -u SLAY_FAULTS cargo bench --bench trajectory

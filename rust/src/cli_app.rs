@@ -79,6 +79,8 @@ fn print_help() {
                        --request-timeout-ms N per-request deadline: expired work\n\
                                          gets a deterministic timeout error\n\
                                          (default 0 = unbounded)\n\
+                       --metrics-addr addr:port  also serve Prometheus text\n\
+                                         exposition over HTTP GET /metrics\n\
          slay flags:   --eps --r-nodes --n-poly --d-prf --poly --fusion --seed"
     );
 }
@@ -90,7 +92,7 @@ fn serve(args: &Args) -> anyhow::Result<()> {
         "fusion", "seed", "listen", "duration-s", "horizon", "window", "spill-dir",
         "restore", "snapshot-root", "max-conns", "prefix-cache-mb", "frontend",
         "max-frame-mb", "max-pending-mb", "max-pending-reqs", "drain-timeout-ms",
-        "request-timeout-ms",
+        "request-timeout-ms", "metrics-addr",
     ])?;
     let mut cfg = config::coordinator_from_args(args)?;
 
@@ -133,6 +135,17 @@ fn serve(args: &Args) -> anyhow::Result<()> {
             ),
         };
         let coord = std::sync::Arc::new(start_coord(cfg)?);
+        // `--metrics-addr addr:port` serves Prometheus text exposition over
+        // plain HTTP (GET /metrics) alongside the coordinator protocol port.
+        // The handle stops the listener on drop, so it lives with the server.
+        let _metrics_http = match args.get("metrics-addr") {
+            Some(maddr) => {
+                let h = crate::obs::MetricsHttp::start(maddr, coord.metrics_handle())?;
+                println!("metrics on http://{}/metrics (Prometheus text)", h.addr());
+                Some(h)
+            }
+            None => None,
+        };
         let server = crate::net::serve(frontend, addr, &coord, opts)?;
         println!(
             "listening on {} ({} front end; JSON lines + binary frames, see docs/PROTOCOL.md)",

@@ -1,9 +1,19 @@
-//! Coordinator metrics: lock-free counters plus a mutex-guarded latency
-//! reservoir. Cheap enough for the per-chunk hot path; snapshots feed the
-//! CLI, the serving example and the Fig. 2-style throughput series.
+//! Coordinator metrics: lock-free counters plus the `obs` layer (stage
+//! histograms, per-shard stats, event ring). Everything on the per-chunk
+//! hot path is a relaxed atomic — the old mutex-guarded latency reservoir
+//! (whose replacement index raced on the `completed` counter) is gone,
+//! replaced by a lock-free log-linear histogram; the legacy
+//! `latency_p50_ms`/`latency_p95_ms`/`latency_mean_ms` keys still emit,
+//! now computed from that histogram.
+//!
+//! Exposition is single-sourced: [`Snapshot::counter_fields`] and
+//! [`Snapshot::gauge_fields`] feed *both* the JSON output and the
+//! Prometheus renderer (`obs::prom`), and both lists destructure
+//! `Snapshot` exhaustively — adding a field without exporting it is a
+//! compile error, not a silent gap.
 
+use crate::obs::Obs;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
 #[derive(Default)]
@@ -95,40 +105,65 @@ pub struct Metrics {
     /// Replies/acks whose receiving peer had already disconnected — the
     /// delivery was dropped and counted instead of silently discarded.
     pub dropped_replies: AtomicU64,
-    /// Latency reservoir (ms) — bounded, replace-random once full.
-    latencies: Mutex<Vec<f64>>,
+    /// Observability layer: per-class/per-stage latency histograms,
+    /// per-shard stats, structured event ring (see `crate::obs`).
+    pub obs: Obs,
 }
-
-const RESERVOIR: usize = 8192;
 
 impl Metrics {
     pub fn new() -> Self {
         Metrics::default()
     }
 
+    /// Record an end-to-end request latency (enqueue → reply built). Feeds
+    /// the legacy `latency_p50_ms`/`latency_p95_ms`/`latency_mean_ms`
+    /// keys. Lock-free; no-op while the obs layer is disabled.
     pub fn record_latency(&self, d: Duration) {
-        let ms = d.as_secs_f64() * 1e3;
-        let mut r = self.latencies.lock().unwrap();
-        if r.len() < RESERVOIR {
-            r.push(ms);
-        } else {
-            // cheap deterministic replacement
-            let idx = (self.completed.load(Ordering::Relaxed) as usize) % RESERVOIR;
-            r[idx] = ms;
-        }
+        self.obs.record_request(d);
+    }
+
+    // ---- counter + event-ring pairings ---------------------------------
+    // Incidents worth a post-hoc timeline bump their counter *and* land a
+    // structured event, through one helper per kind so call sites can't
+    // drift apart.
+
+    /// Framing/parse/validation failure on the wire (rejected pre-coordinator).
+    pub fn protocol_error(&self, detail: String) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+        self.obs.events.push("protocol_error", detail);
+    }
+
+    /// Connection refused at accept because `--max-conns` was reached.
+    pub fn shed_connection(&self, detail: String) {
+        self.shed_connections.fetch_add(1, Ordering::Relaxed);
+        self.obs.events.push("shed_connection", detail);
+    }
+
+    /// Dead shard worker detected and respawned (ADR-008).
+    pub fn worker_restarted(&self, detail: String) {
+        self.worker_restarts.fetch_add(1, Ordering::Relaxed);
+        self.obs.events.push("worker_restart", detail);
+    }
+
+    /// Session state released after a panic struck mid-borrow (ADR-008).
+    pub fn session_poisoned(&self, detail: String) {
+        self.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+        self.obs.events.push("session_poisoned", detail);
+    }
+
+    /// Spill-tier write failed and degraded to a destroy-evict (ADR-008).
+    pub fn spill_write_failed(&self, detail: String) {
+        self.spill_write_failures.fetch_add(1, Ordering::Relaxed);
+        self.obs.events.push("spill_write_failure", detail);
+    }
+
+    /// Coordinator-level snapshot taken (ADR-004).
+    pub fn snapshot_taken(&self, detail: String) {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
+        self.obs.events.push("snapshot", detail);
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let lat = self.latencies.lock().unwrap().clone();
-        let (p50, p95, mean) = if lat.is_empty() {
-            (0.0, 0.0, 0.0)
-        } else {
-            (
-                crate::math::stats::percentile(&lat, 50.0),
-                crate::math::stats::percentile(&lat, 95.0),
-                crate::math::stats::mean(&lat),
-            )
-        };
         Snapshot {
             submitted: self.submitted.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -164,15 +199,27 @@ impl Metrics {
             request_timeouts: self.request_timeouts.load(Ordering::Relaxed),
             spill_write_failures: self.spill_write_failures.load(Ordering::Relaxed),
             dropped_replies: self.dropped_replies.load(Ordering::Relaxed),
-            latency_p50_ms: p50,
-            latency_p95_ms: p95,
-            latency_mean_ms: mean,
+            latency_p50_ms: self.obs.request.quantile_ms(50.0),
+            latency_p95_ms: self.obs.request.quantile_ms(95.0),
+            latency_mean_ms: self.obs.request.mean_ms(),
         }
+    }
+
+    /// Full metrics JSON: the flat snapshot plus the nested per-class,
+    /// per-stage latency object (`"stages"`). This is what
+    /// `{"op":"metrics"}` returns.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut j = self.snapshot().to_json();
+        if let Json::Obj(map) = &mut j {
+            map.insert("stages".to_string(), self.obs.stages_json());
+        }
+        j
     }
 }
 
 /// Point-in-time metric values.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Snapshot {
     pub submitted: u64,
     pub completed: u64,
@@ -234,48 +281,117 @@ impl Snapshot {
         }
     }
 
+    /// The single source of truth for exposition: every field, partitioned
+    /// into monotone counters and point-in-time gauges (plus the derived
+    /// means). The exhaustive destructure (no `..`) makes "added a field,
+    /// forgot to export it" a compile error; JSON and Prometheus both
+    /// render from these lists.
+    fn field_lists(&self) -> (Vec<(&'static str, u64)>, Vec<(&'static str, f64)>) {
+        let Snapshot {
+            submitted,
+            completed,
+            rejected,
+            tokens_in,
+            decode_chunks,
+            prefill_chunks,
+            batches,
+            batched_items,
+            spilled,
+            restored_from_spill,
+            bytes_spilled,
+            snapshots,
+            fused_decode_batches,
+            fused_decode_rows,
+            max_fused_batch,
+            forks,
+            prefix_hits,
+            prefix_misses,
+            prefix_bytes_saved,
+            prefix_cache_bytes,
+            active_connections,
+            shed_connections,
+            wire_bytes_rx,
+            wire_bytes_tx,
+            frames_rx,
+            frames_tx,
+            protocol_errors,
+            backpressure_stalls,
+            worker_panics,
+            worker_restarts,
+            sessions_poisoned,
+            request_timeouts,
+            spill_write_failures,
+            dropped_replies,
+            latency_p50_ms,
+            latency_p95_ms,
+            latency_mean_ms,
+        } = *self;
+        let counters = vec![
+            ("submitted", submitted),
+            ("completed", completed),
+            ("rejected", rejected),
+            ("tokens_in", tokens_in),
+            ("decode_chunks", decode_chunks),
+            ("prefill_chunks", prefill_chunks),
+            ("batches", batches),
+            ("batched_items", batched_items),
+            ("spilled", spilled),
+            ("restored_from_spill", restored_from_spill),
+            ("bytes_spilled", bytes_spilled),
+            ("snapshots", snapshots),
+            ("fused_decode_batches", fused_decode_batches),
+            ("fused_decode_rows", fused_decode_rows),
+            ("forks", forks),
+            ("prefix_hits", prefix_hits),
+            ("prefix_misses", prefix_misses),
+            ("prefix_bytes_saved", prefix_bytes_saved),
+            ("shed_connections", shed_connections),
+            ("wire_bytes_rx", wire_bytes_rx),
+            ("wire_bytes_tx", wire_bytes_tx),
+            ("frames_rx", frames_rx),
+            ("frames_tx", frames_tx),
+            ("protocol_errors", protocol_errors),
+            ("backpressure_stalls", backpressure_stalls),
+            ("worker_panics", worker_panics),
+            ("worker_restarts", worker_restarts),
+            ("sessions_poisoned", sessions_poisoned),
+            ("request_timeouts", request_timeouts),
+            ("spill_write_failures", spill_write_failures),
+            ("dropped_replies", dropped_replies),
+        ];
+        let gauges = vec![
+            ("prefix_cache_bytes", prefix_cache_bytes as f64),
+            ("active_connections", active_connections as f64),
+            ("max_fused_batch", max_fused_batch as f64),
+            ("mean_batch_size", self.mean_batch_size()),
+            ("mean_fused_batch_size", self.mean_fused_batch_size()),
+            ("latency_p50_ms", latency_p50_ms),
+            ("latency_p95_ms", latency_p95_ms),
+            ("latency_mean_ms", latency_mean_ms),
+        ];
+        (counters, gauges)
+    }
+
+    /// Monotone counters, for `slay_<name>_total` Prometheus rendering.
+    pub fn counter_fields(&self) -> Vec<(&'static str, u64)> {
+        self.field_lists().0
+    }
+
+    /// Point-in-time gauges (plus derived means/quantiles), for
+    /// `slay_<name>` Prometheus rendering.
+    pub fn gauge_fields(&self) -> Vec<(&'static str, f64)> {
+        self.field_lists().1
+    }
+
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
-        Json::obj(vec![
-            ("submitted", Json::Num(self.submitted as f64)),
-            ("completed", Json::Num(self.completed as f64)),
-            ("rejected", Json::Num(self.rejected as f64)),
-            ("tokens_in", Json::Num(self.tokens_in as f64)),
-            ("decode_chunks", Json::Num(self.decode_chunks as f64)),
-            ("prefill_chunks", Json::Num(self.prefill_chunks as f64)),
-            ("batches", Json::Num(self.batches as f64)),
-            ("mean_batch_size", Json::Num(self.mean_batch_size())),
-            ("spilled", Json::Num(self.spilled as f64)),
-            ("restored_from_spill", Json::Num(self.restored_from_spill as f64)),
-            ("bytes_spilled", Json::Num(self.bytes_spilled as f64)),
-            ("snapshots", Json::Num(self.snapshots as f64)),
-            ("fused_decode_batches", Json::Num(self.fused_decode_batches as f64)),
-            ("fused_decode_rows", Json::Num(self.fused_decode_rows as f64)),
-            ("mean_fused_batch_size", Json::Num(self.mean_fused_batch_size())),
-            ("max_fused_batch", Json::Num(self.max_fused_batch as f64)),
-            ("forks", Json::Num(self.forks as f64)),
-            ("prefix_hits", Json::Num(self.prefix_hits as f64)),
-            ("prefix_misses", Json::Num(self.prefix_misses as f64)),
-            ("prefix_bytes_saved", Json::Num(self.prefix_bytes_saved as f64)),
-            ("prefix_cache_bytes", Json::Num(self.prefix_cache_bytes as f64)),
-            ("active_connections", Json::Num(self.active_connections as f64)),
-            ("shed_connections", Json::Num(self.shed_connections as f64)),
-            ("wire_bytes_rx", Json::Num(self.wire_bytes_rx as f64)),
-            ("wire_bytes_tx", Json::Num(self.wire_bytes_tx as f64)),
-            ("frames_rx", Json::Num(self.frames_rx as f64)),
-            ("frames_tx", Json::Num(self.frames_tx as f64)),
-            ("protocol_errors", Json::Num(self.protocol_errors as f64)),
-            ("backpressure_stalls", Json::Num(self.backpressure_stalls as f64)),
-            ("worker_panics", Json::Num(self.worker_panics as f64)),
-            ("worker_restarts", Json::Num(self.worker_restarts as f64)),
-            ("sessions_poisoned", Json::Num(self.sessions_poisoned as f64)),
-            ("request_timeouts", Json::Num(self.request_timeouts as f64)),
-            ("spill_write_failures", Json::Num(self.spill_write_failures as f64)),
-            ("dropped_replies", Json::Num(self.dropped_replies as f64)),
-            ("latency_p50_ms", Json::Num(self.latency_p50_ms)),
-            ("latency_p95_ms", Json::Num(self.latency_p95_ms)),
-            ("latency_mean_ms", Json::Num(self.latency_mean_ms)),
-        ])
+        let (counters, gauges) = self.field_lists();
+        let mut fields: Vec<(&str, Json)> = counters
+            .into_iter()
+            .map(|(k, v)| (k, Json::Num(v as f64)))
+            .collect();
+        fields.extend(gauges.into_iter().map(|(k, v)| (k, Json::Num(v))));
+        Json::obj(fields)
     }
 }
 
@@ -293,8 +409,47 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.submitted, 3);
         assert_eq!(s.completed, 2);
-        assert!(s.latency_p50_ms >= 10.0 && s.latency_p50_ms <= 20.0);
-        assert!(s.latency_mean_ms > 0.0);
+        // histogram quantiles report bucket midpoints: within one bucket's
+        // relative error (≤ 25%) of the exact order statistics
+        assert!(
+            s.latency_p50_ms >= 7.5 && s.latency_p50_ms <= 20.0,
+            "p50={}",
+            s.latency_p50_ms
+        );
+        assert!(
+            s.latency_p95_ms >= 15.0 && s.latency_p95_ms <= 25.0,
+            "p95={}",
+            s.latency_p95_ms
+        );
+        assert!(
+            (s.latency_mean_ms - 15.0).abs() < 0.5,
+            "mean={}",
+            s.latency_mean_ms
+        );
+    }
+
+    #[test]
+    fn concurrent_latency_records_are_lossless() {
+        // the old reservoir's replacement index raced on `completed`;
+        // the histogram must count every sample exactly once
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::new());
+        let threads: u64 = 8;
+        let per: u64 = 2000;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        m.record_latency(Duration::from_micros(100 + (t * per + i) % 5000));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.obs.request.count(), threads * per);
     }
 
     #[test]
@@ -310,6 +465,115 @@ mod tests {
         let m = Metrics::new();
         let j = m.snapshot().to_json();
         assert!(j.get("completed").is_some());
+    }
+
+    /// Every `Snapshot` field appears in BOTH the JSON and the Prometheus
+    /// output. The exhaustive destructure below fails to compile when a
+    /// field is added to `Snapshot`, forcing this test (and
+    /// `field_lists`) to be revisited — no silently unexported metric,
+    /// now or in future PRs.
+    #[test]
+    fn every_snapshot_field_is_exported_in_both_formats() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(1, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(5));
+        let snap = m.snapshot();
+
+        let Snapshot {
+            submitted: _,
+            completed: _,
+            rejected: _,
+            tokens_in: _,
+            decode_chunks: _,
+            prefill_chunks: _,
+            batches: _,
+            batched_items: _,
+            spilled: _,
+            restored_from_spill: _,
+            bytes_spilled: _,
+            snapshots: _,
+            fused_decode_batches: _,
+            fused_decode_rows: _,
+            max_fused_batch: _,
+            forks: _,
+            prefix_hits: _,
+            prefix_misses: _,
+            prefix_bytes_saved: _,
+            prefix_cache_bytes: _,
+            active_connections: _,
+            shed_connections: _,
+            wire_bytes_rx: _,
+            wire_bytes_tx: _,
+            frames_rx: _,
+            frames_tx: _,
+            protocol_errors: _,
+            backpressure_stalls: _,
+            worker_panics: _,
+            worker_restarts: _,
+            sessions_poisoned: _,
+            request_timeouts: _,
+            spill_write_failures: _,
+            dropped_replies: _,
+            latency_p50_ms: _,
+            latency_p95_ms: _,
+            latency_mean_ms: _,
+        } = snap;
+
+        // 37 struct fields render as 31 counters + 8 gauges (the two
+        // derived means are gauge-only extras).
+        let counters = snap.counter_fields();
+        let gauges = snap.gauge_fields();
+        assert_eq!(counters.len(), 31);
+        assert_eq!(gauges.len(), 8);
+
+        let json = m.to_json();
+        let prom = crate::obs::prom::render(&m);
+        for (name, _) in &counters {
+            assert!(json.get(name).is_some(), "JSON missing counter {name}");
+            assert!(
+                prom.contains(&format!("slay_{name}_total ")),
+                "Prometheus missing counter {name}"
+            );
+        }
+        for (name, _) in &gauges {
+            assert!(json.get(name).is_some(), "JSON missing gauge {name}");
+            assert!(
+                prom.contains(&format!("slay_{name} ")),
+                "Prometheus missing gauge {name}"
+            );
+        }
+        // and the nested stage object rides along in the full JSON
+        assert!(json.get("stages").is_some());
+    }
+
+    #[test]
+    fn event_helpers_bump_counter_and_ring_together() {
+        let m = Metrics::new();
+        m.protocol_error("bad frame".into());
+        m.shed_connection("at cap 4".into());
+        m.worker_restarted("shard 1".into());
+        m.session_poisoned("seq 9".into());
+        m.spill_write_failed("seq 9: io".into());
+        m.snapshot_taken("to /tmp/x".into());
+        let s = m.snapshot();
+        assert_eq!(s.protocol_errors, 1);
+        assert_eq!(s.shed_connections, 1);
+        assert_eq!(s.worker_restarts, 1);
+        assert_eq!(s.sessions_poisoned, 1);
+        assert_eq!(s.spill_write_failures, 1);
+        assert_eq!(s.snapshots, 1);
+        let kinds: Vec<&str> = m.obs.events.tail(10).iter().map(|e| e.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "protocol_error",
+                "shed_connection",
+                "worker_restart",
+                "session_poisoned",
+                "spill_write_failure",
+                "snapshot"
+            ]
+        );
     }
 
     #[test]

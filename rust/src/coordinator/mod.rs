@@ -169,6 +169,7 @@ fn spawn_worker(
     }
     store_cfg.adopt_spills = adopt;
     let wcfg = worker::WorkerConfig {
+        shard: w,
         mechanism: cfg.mechanism.clone(),
         d_head: cfg.d_head,
         d_v: cfg.d_v,
@@ -190,6 +191,7 @@ impl Coordinator {
     pub fn start(cfg: CoordinatorConfig) -> anyhow::Result<Coordinator> {
         anyhow::ensure!(cfg.workers > 0, "need at least one worker");
         let metrics = Arc::new(Metrics::new());
+        metrics.obs.init_shards(cfg.workers);
         let inflight = Arc::new(AtomicU64::new(0));
         let mut shards = Vec::new();
         for w in 0..cfg.workers {
@@ -235,7 +237,9 @@ impl Coordinator {
             }
             match spawn_worker(&self.cfg, shard, true, &self.metrics, &self.inflight) {
                 Ok((tx, handle)) => {
-                    self.metrics.worker_restarts.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.worker_restarted(format!(
+                        "shard {shard} worker died; respawned, spilled sessions re-adopted"
+                    ));
                     crate::log_warn!(
                         "worker thread for shard {shard} died; respawned \
                          (spilled sessions re-adopted)"
@@ -338,29 +342,43 @@ impl Coordinator {
     /// request into one tagged queue; validation, accounting, and
     /// backpressure are identical to [`Coordinator::submit`].
     pub fn submit_with(&self, chunk: AttendChunk, reply: ReplyTo) -> anyhow::Result<()> {
+        let submitted = std::time::Instant::now(); // tick 0
         chunk.validate(self.cfg.d_head)?;
         let shard = self.shard(chunk.seq);
-        let now = std::time::Instant::now();
+        let now = std::time::Instant::now(); // tick 1: shard enqueue
         let item = WorkItem {
             chunk,
+            submitted,
             enqueued: now,
             deadline: self.cfg.request_timeout.map(|t| now + t),
             reply,
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         self.inflight.fetch_add(1, Ordering::Relaxed);
+        // Queue-depth gauge: incremented *before* the send (and rolled
+        // back on failure) so the worker's decrement-at-dequeue can never
+        // observe the item before the increment landed.
+        if let Some(ss) = self.metrics.obs.shard(shard) {
+            ss.queue_depth.fetch_add(1, Ordering::Relaxed);
+        }
         match self.shard_sender(shard).try_send(worker::Msg::Work(item)) {
             Ok(()) => Ok(()),
-            Err(mpsc::TrySendError::Full(_)) => {
+            Err(e) => {
                 self.inflight.fetch_sub(1, Ordering::Relaxed);
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err(ServeError::Backpressure { depth: self.cfg.queue_cap }.into())
-            }
-            Err(mpsc::TrySendError::Disconnected(_)) => {
-                // shard_sender just respawned-if-dead, so a closed queue
-                // here means the respawn itself failed
-                self.inflight.fetch_sub(1, Ordering::Relaxed);
-                Err(ServeError::ShardUnavailable { shard }.into())
+                if let Some(ss) = self.metrics.obs.shard(shard) {
+                    ss.queue_depth.fetch_sub(1, Ordering::Relaxed);
+                }
+                match e {
+                    mpsc::TrySendError::Full(_) => {
+                        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        Err(ServeError::Backpressure { depth: self.cfg.queue_cap }.into())
+                    }
+                    mpsc::TrySendError::Disconnected(_) => {
+                        // shard_sender just respawned-if-dead, so a closed
+                        // queue here means the respawn itself failed
+                        Err(ServeError::ShardUnavailable { shard }.into())
+                    }
+                }
             }
         }
     }
@@ -398,8 +416,10 @@ impl Coordinator {
     }
 
     /// Shared metrics sink — the TCP server publishes its connection
-    /// gauges (`active_connections`, `shed_connections`) through it.
-    pub(crate) fn metrics_handle(&self) -> Arc<Metrics> {
+    /// gauges (`active_connections`, `shed_connections`) through it, the
+    /// `--metrics-addr` scrape listener renders it, and benches toggle
+    /// `metrics_handle().obs` for a no-record baseline.
+    pub fn metrics_handle(&self) -> Arc<Metrics> {
         self.metrics.clone()
     }
 
@@ -442,7 +462,11 @@ impl Coordinator {
             seqs,
         );
         manifest.save(dir)?;
-        self.metrics.snapshots.fetch_add(1, Ordering::Relaxed);
+        self.metrics.snapshot_taken(format!(
+            "{} sequences, {bytes} bytes -> {}",
+            manifest.seqs.len(),
+            dir.display()
+        ));
         crate::log_info!(
             "snapshot: {} sequences, {bytes} state bytes -> {}",
             manifest.seqs.len(),

@@ -61,6 +61,11 @@ pub struct AttendResult {
     pub seq_len: usize,
     /// Queue + compute latency.
     pub latency: std::time::Duration,
+    /// Observability ticks stamped by the worker, consumed by the front
+    /// end that flushes the reply (reply_flush / total stages). Purely
+    /// in-memory: no wire encoder reads it, so replies stay byte-identical
+    /// whether observability is enabled or not.
+    pub trace: Option<crate::obs::ObsTicks>,
 }
 
 /// Where a finished [`WorkItem`]'s result is delivered.
@@ -122,6 +127,11 @@ impl ReplyTo {
 /// What the router moves around internally.
 pub struct WorkItem {
     pub chunk: AttendChunk,
+    /// Tick 0: the request entered `submit_with` (before validation and
+    /// shard routing). `total` latency is measured from here.
+    pub submitted: std::time::Instant,
+    /// Tick 1: the item was handed to the shard queue. `queue_wait` is
+    /// measured from here to batch formation.
     pub enqueued: std::time::Instant,
     /// Absolute deadline stamped at submission from `--request-timeout-ms`
     /// (ADR-008). Workers skip items already past it with a deterministic

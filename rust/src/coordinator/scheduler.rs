@@ -60,6 +60,7 @@ mod tests {
                 k: Mat::randn(n, 4, &mut rng),
                 v: Mat::randn(n, 4, &mut rng),
             },
+            submitted: Instant::now(),
             enqueued: Instant::now() + Duration::from_millis(t_off_ms),
             deadline: None,
             reply: ReplyTo::Channel(tx),

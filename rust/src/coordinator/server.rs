@@ -128,7 +128,9 @@ impl Server {
                             if sh.metrics.active_connections.load(Ordering::Relaxed)
                                 >= max_conns as u64
                             {
-                                sh.metrics.shed_connections.fetch_add(1, Ordering::Relaxed);
+                                sh.metrics.shed_connection(format!(
+                                    "thread front end at capacity ({max_conns})"
+                                ));
                                 shed(stream, max_conns);
                                 continue;
                             }
@@ -217,7 +219,7 @@ fn handle_conn(mut stream: TcpStream, sh: &ConnShared) -> anyhow::Result<()> {
                 Err(e) => {
                     // Framing loss is unrecoverable: report on the plane
                     // that broke, then close.
-                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    sh.metrics.protocol_error(e.to_string());
                     match &e {
                         WireError::Frame(_) => {
                             send_bytes(&mut stream, sh, &error_frame(0, &e.to_string()))?
@@ -284,20 +286,22 @@ fn serve_msg(
     msg: WireMsg,
 ) -> anyhow::Result<()> {
     match msg {
-        WireMsg::Line(line) => {
-            let reply = match parse_line(line.trim(), &sh.coord) {
-                Ok(ParsedLine::Done(j)) => j,
-                Ok(ParsedLine::Chunk(chunk)) => match sh.coord.attend(chunk) {
-                    Ok(r) => attend_reply_json(&r),
-                    Err(e) => error_json(&e.to_string()),
-                },
-                Err(e) => {
-                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
-                    error_json(&e.to_string())
+        WireMsg::Line(line) => match parse_line(line.trim(), &sh.coord) {
+            Ok(ParsedLine::Done(j)) => send_line(stream, sh, &j),
+            Ok(ParsedLine::Chunk(chunk)) => match sh.coord.attend(chunk) {
+                Ok(r) => {
+                    send_line(stream, sh, &attend_reply_json(&r))?;
+                    // Tick 5: the reply bytes left the socket.
+                    sh.metrics.obs.record_reply_flushed(r.trace.as_ref());
+                    Ok(())
                 }
-            };
-            send_line(stream, sh, &reply)
-        }
+                Err(e) => send_line(stream, sh, &error_json(&e.to_string())),
+            },
+            Err(e) => {
+                sh.metrics.protocol_error(e.to_string());
+                send_line(stream, sh, &error_json(&e.to_string()))
+            }
+        },
         WireMsg::Frame(f) => serve_frame(stream, sh, d_head, d_v, f),
     }
 }
@@ -315,13 +319,17 @@ fn serve_frame(
                 .and_then(|tc| tensor_to_chunk(tc, d_head, d_v))
             {
                 Ok(chunk) => match sh.coord.attend(chunk) {
-                    Ok(r) => send_bytes(stream, sh, &reply_frame(f.seq, &r)),
+                    Ok(r) => {
+                        send_bytes(stream, sh, &reply_frame(f.seq, &r))?;
+                        sh.metrics.obs.record_reply_flushed(r.trace.as_ref());
+                        Ok(())
+                    }
                     // Coordinator refusals (backpressure, unknown sequence)
                     // are not protocol errors; the connection stays open.
                     Err(e) => send_bytes(stream, sh, &error_frame(f.seq, &e.to_string())),
                 },
                 Err(e) => {
-                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    sh.metrics.protocol_error(e.to_string());
                     send_bytes(stream, sh, &error_frame(f.seq, &e.to_string()))
                 }
             }
@@ -333,7 +341,7 @@ fn serve_frame(
             }) {
                 Ok(tc) => tc,
                 Err(e) => {
-                    sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    sh.metrics.protocol_error(e.to_string());
                     return send_bytes(stream, sh, &error_frame(f.seq, &e.to_string()));
                 }
             };
@@ -343,7 +351,10 @@ fn serve_frame(
             let mut ok = true;
             for i in 0..tc.n {
                 match sh.coord.attend(tensor_row_chunk(&tc, i as usize)) {
-                    Ok(r) => send_bytes(stream, sh, &token_frame(f.seq, i, &r))?,
+                    Ok(r) => {
+                        send_bytes(stream, sh, &token_frame(f.seq, i, &r))?;
+                        sh.metrics.obs.record_reply_flushed(r.trace.as_ref());
+                    }
                     Err(e) => {
                         ok = false;
                         send_bytes(stream, sh, &error_frame(f.seq, &e.to_string()))?;
@@ -354,7 +365,7 @@ fn serve_frame(
             send_bytes(stream, sh, &end_frame(f.seq, tc.session, ok, tc.n))
         }
         WireOp::Reply | WireOp::Token | WireOp::StreamEnd | WireOp::Error => {
-            sh.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+            sh.metrics.protocol_error(format!("op {:?} is a reply opcode", f.op));
             send_bytes(
                 stream,
                 sh,
@@ -466,8 +477,25 @@ fn parse_attend_lazy(line: &str, op: &str, coord: &Coordinator) -> anyhow::Resul
 }
 
 /// Control ops (everything but attend/decode): full `Json` parse — small
-/// payloads, and the strict parser gives real error messages.
+/// payloads, and the strict parser gives real error messages. Timed whole
+/// (`Stage::Total`): control ops have no worker lifecycle, so only the
+/// end-to-end cell of the class×stage grid is meaningful. `fork` gets its
+/// own class (ADR-006 traffic); everything else lands in `control`.
 fn handle_control(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
+    let t0 = Instant::now();
+    let res = control_op(line, coord);
+    let class = match json::lazy_get(line, "op").and_then(json::lazy_str).as_deref() {
+        Some("fork") => crate::obs::Class::Fork,
+        _ => crate::obs::Class::Control,
+    };
+    coord
+        .metrics_handle()
+        .obs
+        .record_stage(class, crate::obs::Stage::Total, t0.elapsed());
+    res
+}
+
+fn control_op(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
     let req = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let op = req
         .get("op")
@@ -498,10 +526,43 @@ fn handle_control(line: &str, coord: &Coordinator) -> anyhow::Result<Json> {
                 ("released", Json::Bool(released)),
             ]))
         }
-        "metrics" => Ok(Json::obj(vec![
-            ("ok", Json::Bool(true)),
-            ("metrics", coord.metrics().to_json()),
-        ])),
+        "metrics" => {
+            let m = coord.metrics_handle();
+            if let Some(fmt) = req.get("format").and_then(|v| v.as_str()) {
+                anyhow::ensure!(
+                    fmt == "prometheus",
+                    "unknown metrics format '{fmt}' (supported: \"prometheus\")"
+                );
+                return Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("format", Json::Str("prometheus".to_string())),
+                    ("text", Json::Str(crate::obs::prom::render(&m))),
+                ]));
+            }
+            let mut body = m.to_json();
+            if req.get("detail").and_then(|v| v.as_str()) == Some("shards") {
+                if let Json::Obj(map) = &mut body {
+                    map.insert("shards".to_string(), m.obs.shards_json());
+                }
+            }
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("metrics", body)]))
+        }
+        "events" => {
+            // Newest-K tail of the structured event ring (default 64).
+            let n = match req.get("n") {
+                None => 64,
+                Some(v) => v
+                    .as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("'n' must be a nonnegative integer"))?,
+            };
+            let m = coord.metrics_handle();
+            let evs = m.obs.events.tail(n);
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("total", Json::Num(m.obs.events.total() as f64)),
+                ("events", Json::Arr(evs.iter().map(|e| e.to_json()).collect())),
+            ]))
+        }
         "snapshot" => {
             let name = req
                 .req("dir")?
@@ -962,5 +1023,128 @@ mod tests {
         let reply = Json::parse(line.trim()).expect("drained reply must be a whole JSON line");
         assert_eq!(reply.get("ok").unwrap().as_bool(), Some(true), "{reply:?}");
         done.join().unwrap();
+    }
+
+    #[test]
+    fn metrics_op_reports_stages_shards_prometheus_and_events() {
+        let (server, _coord) = start();
+        let stream = TcpStream::connect(server.addr).unwrap();
+        let created = roundtrip(&stream, r#"{"op":"create"}"#);
+        let seq = created.get("seq").unwrap().as_usize().unwrap();
+        let ones = vec!["1.0"; 8].join(",");
+        roundtrip(
+            &stream,
+            &format!(
+                r#"{{"op":"attend","seq":{seq},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#
+            ),
+        );
+        let tok = vec!["0.5"; 4].join(",");
+        roundtrip(
+            &stream,
+            &format!(r#"{{"op":"decode","seq":{seq},"q":[{tok}],"k":[{tok}],"v":[{tok}]}}"#),
+        );
+        // two malformed lines feed the event ring a known kind
+        roundtrip(&stream, "not json at all");
+        roundtrip(&stream, "still not json");
+
+        // ---- per-class per-stage latencies over the default metrics op --
+        let m = roundtrip(&stream, r#"{"op":"metrics"}"#);
+        let stages = m.get("metrics").unwrap().get("stages").expect("stages key");
+        let prefill = stages.get("prefill").expect("prefill class present");
+        for stage in ["queue_wait", "batch_form", "compute", "reply_flush", "total"] {
+            let cell = prefill.get(stage).unwrap_or_else(|| panic!("missing prefill/{stage}"));
+            assert!(cell.get("count").unwrap().as_usize().unwrap() >= 1, "{stage}");
+            for q in ["p50_ms", "p90_ms", "p99_ms", "p999_ms", "mean_ms"] {
+                assert!(cell.get(q).unwrap().as_f64().unwrap() >= 0.0, "{stage}/{q}");
+            }
+        }
+        // a lone wire decode is a wave of one — it lands in fused_wave
+        assert!(stages.get("fused_wave").is_some(), "fused_wave class present");
+        // control ops (create/metrics) land in the control class
+        assert!(stages.get("control").is_some(), "control class present");
+
+        // ---- per-shard detail ------------------------------------------
+        let ms = roundtrip(&stream, r#"{"op":"metrics","detail":"shards"}"#);
+        let shards = ms.get("metrics").unwrap().get("shards").expect("shards key");
+        let Json::Arr(shards) = shards else { panic!("shards must be an array") };
+        assert_eq!(shards.len(), 1, "one worker, one shard block");
+        assert!(shards[0].get("items").unwrap().as_usize().unwrap() >= 2);
+        assert!(shards[0].get("batches").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(shards[0].get("resident_seqs").unwrap().as_usize(), Some(1));
+        assert_eq!(shards[0].get("queue_depth").unwrap().as_usize(), Some(0));
+
+        // ---- Prometheus over the JSON plane ----------------------------
+        let p = roundtrip(&stream, r#"{"op":"metrics","format":"prometheus"}"#);
+        assert_eq!(p.get("format").unwrap().as_str(), Some("prometheus"));
+        let text = p.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains("# TYPE slay_completed_total counter"), "{text}");
+        assert!(text.contains("# TYPE slay_stage_latency_seconds histogram"));
+        assert!(
+            text.contains(r#"slay_stage_latency_seconds_count{class="prefill",stage="compute"}"#)
+        );
+        assert!(text.contains(r#"slay_shard_items_total{shard="0"}"#));
+        let bad = roundtrip(&stream, r#"{"op":"metrics","format":"xml"}"#);
+        assert_eq!(bad.get("ok").unwrap().as_bool(), Some(false));
+
+        // ---- event ring ------------------------------------------------
+        let ev = roundtrip(&stream, r#"{"op":"events"}"#);
+        assert_eq!(ev.get("ok").unwrap().as_bool(), Some(true));
+        assert!(ev.get("total").unwrap().as_usize().unwrap() >= 2);
+        let Json::Arr(events) = ev.get("events").unwrap() else { panic!("events array") };
+        assert!(
+            events.iter().any(|e| e.get("kind").unwrap().as_str() == Some("protocol_error")),
+            "{events:?}"
+        );
+        let ev1 = roundtrip(&stream, r#"{"op":"events","n":1}"#);
+        let Json::Arr(tail) = ev1.get("events").unwrap() else { panic!("events array") };
+        assert_eq!(tail.len(), 1, "n caps the tail");
+        server.shutdown();
+    }
+
+    #[test]
+    fn replies_are_bit_identical_with_observability_disabled() {
+        // The same workload against two fresh coordinators — one recording,
+        // one with the obs layer disabled — must produce bit-identical
+        // tensor outputs: observability is a pure side channel.
+        let run = |enabled: bool| -> Vec<Vec<f32>> {
+            let (server, coord) = start();
+            coord.metrics_handle().obs.set_enabled(enabled);
+            let stream = TcpStream::connect(server.addr).unwrap();
+            let created = roundtrip(&stream, r#"{"op":"create"}"#);
+            let seq = created.get("seq").unwrap().as_usize().unwrap();
+            let ones = vec!["1.0"; 8].join(",");
+            let tok = vec!["0.5"; 4].join(",");
+            let a = roundtrip(
+                &stream,
+                &format!(
+                    r#"{{"op":"attend","seq":{seq},"n":2,"q":[{ones}],"k":[{ones}],"v":[{ones}]}}"#
+                ),
+            );
+            let d = roundtrip(
+                &stream,
+                &format!(r#"{{"op":"decode","seq":{seq},"q":[{tok}],"k":[{tok}],"v":[{tok}]}}"#),
+            );
+            let ys = vec![
+                a.get("y").unwrap().as_f32_vec().unwrap(),
+                d.get("y").unwrap().as_f32_vec().unwrap(),
+            ];
+            if !enabled {
+                // the disabled side really did record nothing
+                let m = roundtrip(&stream, r#"{"op":"metrics"}"#);
+                let stages = m.get("metrics").unwrap().get("stages").unwrap();
+                assert!(stages.get("prefill").is_none(), "disabled obs must not record");
+            }
+            server.shutdown();
+            ys
+        };
+        let on = run(true);
+        let off = run(false);
+        for (a, b) in on.iter().zip(off.iter()) {
+            assert_eq!(
+                a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "observability must never perturb outputs"
+            );
+        }
     }
 }

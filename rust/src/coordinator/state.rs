@@ -425,7 +425,7 @@ impl SequenceStore {
             // back to destructive eviction — counted, never a crash.
             crate::log_warn!("spill of sequence {:?} failed ({e}); evicting destructively", id);
             if let Some(m) = &self.metrics {
-                m.spill_write_failures.fetch_add(1, Ordering::Relaxed);
+                m.spill_write_failed(format!("sequence {id:?}: {e}; evicted destructively"));
             }
             return false;
         }

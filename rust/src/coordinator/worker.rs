@@ -30,9 +30,10 @@ use crate::coordinator::state::{SequenceStore, SnapshotRecord, StoreConfig};
 use crate::kernels::config::Mechanism;
 use crate::kernels::AttentionBackend;
 use crate::math::linalg::{Mat, MatView, MatViewMut, Scratch};
+use crate::obs::{Class, ObsTicks, Stage};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Control/work messages a worker consumes.
 pub enum Msg {
@@ -61,6 +62,9 @@ pub enum Msg {
 }
 
 pub struct WorkerConfig {
+    /// This worker's shard index — keys its [`crate::obs::ShardStats`]
+    /// slot (queue-depth gauge, per-shard items/batches counters).
+    pub shard: usize,
     pub mechanism: Mechanism,
     pub d_head: usize,
     pub d_v: usize,
@@ -140,6 +144,7 @@ pub fn run(
                 // guards) — what the coordinator's liveness check and
                 // shard respawn exist to absorb.
                 crate::util::fault::maybe_panic("worker_loop");
+                note_dequeue(&metrics, cfg.shard);
                 // Continuous batching (§Perf iteration 1): drain whatever is
                 // already queued — up to max_batch — WITHOUT an artificial
                 // wait. Under concurrent load items accumulate while the
@@ -192,6 +197,7 @@ pub fn run(
                     };
                     match msg {
                         Msg::Work(w) => {
+                            note_dequeue(&metrics, cfg.shard);
                             batch.push(w);
                             if batch.len() >= cfg.policy.max_batch {
                                 break;
@@ -241,15 +247,26 @@ pub fn run(
                         }
                     }
                 }
+                // Tick 2: the batch is formed — everything gathered above
+                // was queue wait, everything until compute starts is
+                // batch-form overhead (ordering, wave splitting, stacking).
+                let batch_formed = Instant::now();
                 process_batch(
                     &mut store,
                     backend.as_ref(),
                     &mut scratch,
                     batch,
+                    batch_formed,
                     &metrics,
                     &inflight,
                     mech_tag,
                 );
+                if let Some(ss) = metrics.obs.shard(cfg.shard) {
+                    ss.batches.fetch_add(1, Ordering::Relaxed);
+                    ss.resident_seqs.store(store.len() as u64, Ordering::Relaxed);
+                    ss.resident_bytes.store(store.bytes() as u64, Ordering::Relaxed);
+                    ss.spilled_seqs.store(store.spilled_len() as u64, Ordering::Relaxed);
+                }
                 if let Some((dir, ack)) = deferred_snapshot {
                     send_ack(&metrics, &ack, store.export_all(&dir));
                 }
@@ -337,11 +354,24 @@ fn adopt_spill_files(
     }
 }
 
+/// One work item left the shard queue: settle the queue-depth gauge
+/// (incremented by `submit_with` before `try_send`) and count it against
+/// this shard. A no-op when shard stats were never initialized (direct
+/// `run()` callers in tests).
+fn note_dequeue(metrics: &Metrics, shard: usize) {
+    if let Some(ss) = metrics.obs.shard(shard) {
+        ss.queue_depth.fetch_sub(1, Ordering::Relaxed);
+        ss.items.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn process_batch(
     store: &mut SequenceStore,
     backend: &dyn AttentionBackend,
     scratch: &mut Scratch,
     mut batch: Vec<WorkItem>,
+    batch_formed: Instant,
     metrics: &Metrics,
     inflight: &AtomicU64,
     mech_tag: u64,
@@ -377,7 +407,16 @@ fn process_batch(
             }
         }
         decode_items = later;
-        process_decode_wave(store, backend, scratch, wave, metrics, inflight, mech_tag);
+        process_decode_wave(
+            store,
+            backend,
+            scratch,
+            wave,
+            batch_formed,
+            metrics,
+            inflight,
+            mech_tag,
+        );
     }
 
     // ---- per-chunk prefill streaming through sequence state -------------
@@ -389,18 +428,20 @@ fn process_batch(
     // path — it crosses the reply channel, so the caller owns it.
     for w in batch {
         metrics.prefill_chunks.fetch_add(1, Ordering::Relaxed);
-        process_item_guarded(store, backend, scratch, w, metrics, inflight, mech_tag);
+        process_item_guarded(store, backend, scratch, w, batch_formed, metrics, inflight, mech_tag);
     }
 }
 
 /// Stream one work item's chunk through its sequence state — the per-item
 /// path: every prefill chunk, plus any decode wave that fell back out of
 /// the fused path.
+#[allow(clippy::too_many_arguments)]
 fn process_item(
     store: &mut SequenceStore,
     backend: &dyn AttentionBackend,
     scratch: &mut Scratch,
     w: WorkItem,
+    batch_formed: Instant,
     metrics: &Metrics,
     inflight: &AtomicU64,
     mech_tag: u64,
@@ -458,11 +499,31 @@ fn process_item(
                     + w.chunk.v.data.len())
                     * std::mem::size_of::<f32>();
                 metrics.prefix_bytes_saved.fetch_add(saved as u64, Ordering::Relaxed);
+                // Ticks 3/4 collapse: a cache hit IS the compute, so the
+                // compute stage records zero and the batch stage absorbs
+                // the lookup cost. Hits only exist on the prefill chain.
+                let t_done = Instant::now();
+                metrics.obs.record_stage(
+                    Class::Prefill,
+                    Stage::Queue,
+                    batch_formed.saturating_duration_since(w.enqueued),
+                );
+                metrics.obs.record_stage(
+                    Class::Prefill,
+                    Stage::Batch,
+                    t_done.saturating_duration_since(batch_formed),
+                );
+                metrics.obs.record_stage(Class::Prefill, Stage::Compute, Duration::ZERO);
                 let result = AttendResult {
                     seq: w.chunk.seq,
                     y,
                     seq_len: store.seq_len(w.chunk.seq).unwrap_or(0),
                     latency: w.enqueued.elapsed(),
+                    trace: Some(ObsTicks {
+                        class: Class::Prefill,
+                        submit: w.submitted,
+                        compute_end: t_done,
+                    }),
                 };
                 metrics.record_latency(result.latency);
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -474,7 +535,9 @@ fn process_item(
             metrics.prefix_misses.fetch_add(1, Ordering::Relaxed);
         }
     }
-    let result = match store.get_mut(w.chunk.seq) {
+    let class = if is_decode { Class::Decode } else { Class::Prefill };
+    let t_compute = Instant::now(); // tick 3
+    let mut result = match store.get_mut(w.chunk.seq) {
         None => Err(anyhow::anyhow!("unknown sequence {:?}", w.chunk.seq)),
         Some(state) => {
             let (q, k, v) = (w.chunk.q.view(), w.chunk.k.view(), w.chunk.v.view());
@@ -485,11 +548,30 @@ fn process_item(
                 y,
                 seq_len: state.len(),
                 latency: w.enqueued.elapsed(),
+                trace: None,
             })
         }
     };
-    match &result {
+    let t_done = Instant::now(); // tick 4
+    match &mut result {
         Ok(res) => {
+            metrics.obs.record_stage(
+                class,
+                Stage::Queue,
+                batch_formed.saturating_duration_since(w.enqueued),
+            );
+            metrics.obs.record_stage(
+                class,
+                Stage::Batch,
+                t_compute.saturating_duration_since(batch_formed),
+            );
+            metrics.obs.record_stage(
+                class,
+                Stage::Compute,
+                t_done.saturating_duration_since(t_compute),
+            );
+            res.trace =
+                Some(ObsTicks { class, submit: w.submitted, compute_end: t_done });
             metrics.record_latency(res.latency);
             metrics.completed.fetch_add(1, Ordering::Relaxed);
             metrics.tokens_in.fetch_add(n as u64, Ordering::Relaxed);
@@ -532,11 +614,13 @@ fn send_ack<T>(metrics: &Metrics, ack: &mpsc::Sender<T>, v: T) {
 /// only live in the resident state; a spilled file was untouched and stays
 /// valid), the client gets a structured error, and the shard keeps
 /// serving.
+#[allow(clippy::too_many_arguments)]
 fn process_item_guarded(
     store: &mut SequenceStore,
     backend: &dyn AttentionBackend,
     scratch: &mut Scratch,
     w: WorkItem,
+    batch_formed: Instant,
     metrics: &Metrics,
     inflight: &AtomicU64,
     mech_tag: u64,
@@ -544,12 +628,14 @@ fn process_item_guarded(
     let seq = w.chunk.seq;
     let reply = w.reply.clone();
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        process_item(store, backend, scratch, w, metrics, inflight, mech_tag);
+        process_item(store, backend, scratch, w, batch_formed, metrics, inflight, mech_tag);
     }));
     if outcome.is_err() {
         metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
         if store.release_resident(seq) {
-            metrics.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+            metrics.session_poisoned(format!(
+                "sequence {seq:?} released after a per-item panic"
+            ));
         }
         // Every panic source inside process_item sits before the item's
         // own inflight decrement (the injected sites fire first; compute
@@ -576,11 +662,13 @@ fn process_item_guarded(
 /// too small to co-resident the whole wave), the wave falls back to the
 /// exact per-item path — `decode_batch_with` validates before mutating, so
 /// no token is ever absorbed twice.
+#[allow(clippy::too_many_arguments)]
 fn process_decode_wave(
     store: &mut SequenceStore,
     backend: &dyn AttentionBackend,
     scratch: &mut Scratch,
     wave: Vec<WorkItem>,
+    batch_formed: Instant,
     metrics: &Metrics,
     inflight: &AtomicU64,
     mech_tag: u64,
@@ -621,7 +709,17 @@ fn process_decode_wave(
         items.iter().map(|w| (w.chunk.seq, w.reply.clone())).collect();
     let settled = std::cell::Cell::new(0usize);
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        fused_wave_body(store, backend, scratch, items, metrics, inflight, mech_tag, &settled);
+        fused_wave_body(
+            store,
+            backend,
+            scratch,
+            items,
+            batch_formed,
+            metrics,
+            inflight,
+            mech_tag,
+            &settled,
+        );
     }));
     if outcome.is_err() {
         metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
@@ -632,7 +730,9 @@ fn process_decode_wave(
         );
         for (i, (seq, reply)) in roster.into_iter().enumerate() {
             if store.release_resident(seq) {
-                metrics.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+                metrics.session_poisoned(format!(
+                    "sequence {seq:?} released after a fused decode-wave panic"
+                ));
             }
             if i >= done {
                 inflight.fetch_sub(1, Ordering::Relaxed);
@@ -656,6 +756,7 @@ fn fused_wave_body(
     backend: &dyn AttentionBackend,
     scratch: &mut Scratch,
     items: Vec<WorkItem>,
+    batch_formed: Instant,
     metrics: &Metrics,
     inflight: &AtomicU64,
     mech_tag: u64,
@@ -688,6 +789,7 @@ fn fused_wave_body(
     // partial-on-error provided default) must never be re-run — that would
     // absorb the same token twice.
     let pre_lens: Vec<Option<usize>> = ids.iter().map(|&id| store.seq_len(id)).collect();
+    let t_compute = Instant::now(); // tick 3 (shared by the whole wave)
     let fused = store.get_many_mut(&ids).and_then(|mut states| {
         backend.decode_batch_with(
             scratch,
@@ -698,6 +800,7 @@ fn fused_wave_body(
             MatViewMut::new(&mut y_buf, b, d_v),
         )
     });
+    let t_done = Instant::now(); // tick 4 (ditto)
     match fused {
         Ok(()) => {
             metrics.fused_decode_batches.fetch_add(1, Ordering::Relaxed);
@@ -707,11 +810,33 @@ fn fused_wave_body(
                 // a decode diverges the stream from its cacheable prefix
                 store.set_prefix_cursor(w.chunk.seq, None);
                 let y = Mat::from_vec(1, d_v, y_buf[i * d_v..(i + 1) * d_v].to_vec());
+                // The wave's members share one fused backend call, so they
+                // share ticks 3/4 — each still gets its own queue wait.
+                metrics.obs.record_stage(
+                    Class::FusedWave,
+                    Stage::Queue,
+                    batch_formed.saturating_duration_since(w.enqueued),
+                );
+                metrics.obs.record_stage(
+                    Class::FusedWave,
+                    Stage::Batch,
+                    t_compute.saturating_duration_since(batch_formed),
+                );
+                metrics.obs.record_stage(
+                    Class::FusedWave,
+                    Stage::Compute,
+                    t_done.saturating_duration_since(t_compute),
+                );
                 let result = AttendResult {
                     seq: w.chunk.seq,
                     y,
                     seq_len: store.seq_len(w.chunk.seq).unwrap_or(0),
                     latency: w.enqueued.elapsed(),
+                    trace: Some(ObsTicks {
+                        class: Class::FusedWave,
+                        submit: w.submitted,
+                        compute_end: t_done,
+                    }),
                 };
                 metrics.record_latency(result.latency);
                 metrics.completed.fetch_add(1, Ordering::Relaxed);
@@ -730,7 +855,9 @@ fn fused_wave_body(
                 // a double-absorbed token. The guarded per-item path keeps
                 // one item's panic from poisoning the rest of the wave.
                 if store.seq_len(w.chunk.seq) == pre_lens[i] {
-                    process_item_guarded(store, backend, scratch, w, metrics, inflight, mech_tag);
+                    process_item_guarded(
+                        store, backend, scratch, w, batch_formed, metrics, inflight, mech_tag,
+                    );
                 } else {
                     inflight.fetch_sub(1, Ordering::Relaxed);
                     send_reply(
@@ -761,6 +888,7 @@ mod tests {
 
     fn worker_cfg() -> WorkerConfig {
         WorkerConfig {
+            shard: 0,
             mechanism: Mechanism::EluLinear,
             d_head: 8,
             d_v: 4,
@@ -784,6 +912,7 @@ mod tests {
         let (tx, rx) = mpsc::channel();
         let item = WorkItem {
             chunk: c,
+            submitted: Instant::now(),
             enqueued: Instant::now(),
             deadline: None,
             reply: ReplyTo::Channel(tx),
@@ -866,6 +995,7 @@ mod tests {
         let (d_tx, d_rx) = mpsc::channel();
         tx.send(Msg::Work(WorkItem {
             chunk: chunk(SeqId(1), 1, &mut rng),
+            submitted: Instant::now(),
             enqueued: Instant::now(),
             // expired() is `now >= deadline`, so "now" is already too late
             deadline: Some(Instant::now()),

@@ -23,6 +23,7 @@ pub mod data;
 pub mod runtime;
 pub mod coordinator;
 pub mod net;
+pub mod obs;
 pub mod train;
 
 pub mod cli_app;

@@ -330,7 +330,10 @@ impl Reactor {
             match accepted {
                 Ok((stream, _)) => {
                     if self.conns.len() >= self.opts.max_conns {
-                        self.metrics.shed_connections.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.shed_connection(format!(
+                            "epoll front end at capacity ({})",
+                            self.opts.max_conns
+                        ));
                         shed(stream, self.opts.max_conns);
                         continue;
                     }
@@ -449,7 +452,7 @@ impl Reactor {
                 Err(e) => {
                     // Framing/integrity loss is unrecoverable: report on
                     // the plane that broke, then close once flushed.
-                    self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.protocol_error(e.to_string());
                     match &e {
                         WireError::Frame(_) => {
                             self.queue_frame(conn, &error_frame(0, &e.to_string()))
@@ -490,7 +493,7 @@ impl Reactor {
                     }
                 }
                 Err(e) => {
-                    self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    self.metrics.protocol_error(e.to_string());
                     self.queue_line(conn, &error_json(&e.to_string()));
                 }
             },
@@ -506,7 +509,7 @@ impl Reactor {
                 {
                     Ok(c) => c,
                     Err(e) => {
-                        self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.protocol_error(e.to_string());
                         self.queue_frame(conn, &error_frame(f.seq, &e.to_string()));
                         return;
                     }
@@ -523,7 +526,7 @@ impl Reactor {
                 }) {
                     Ok(tc) => tc,
                     Err(e) => {
-                        self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                        self.metrics.protocol_error(e.to_string());
                         self.queue_frame(conn, &error_frame(f.seq, &e.to_string()));
                         return;
                     }
@@ -561,7 +564,7 @@ impl Reactor {
                 }
             }
             WireOp::Reply | WireOp::Token | WireOp::StreamEnd | WireOp::Error => {
-                self.metrics.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                self.metrics.protocol_error(format!("op {:?} is a reply opcode", f.op));
                 self.queue_frame(
                     conn,
                     &error_frame(f.seq, &format!("op {:?} is a reply opcode", f.op)),
@@ -624,6 +627,13 @@ impl Reactor {
 
     /// Map one finished (or reaped) request back onto its wire plane.
     fn route_completion(&mut self, ctx: ReplyCtx, result: anyhow::Result<AttendResult>) {
+        // Tick 5 source: on the reactor the reply is flushed right after
+        // queueing (inside `after_io` below), so the worker's trace ticks
+        // are recorded once the write attempt completes.
+        let trace = match &result {
+            Ok(r) => r.trace,
+            Err(_) => None,
+        };
         // Build reply bytes before touching the connection (stream
         // bookkeeping borrows `self.streams`).
         let mut out: Vec<Vec<u8>> = Vec::with_capacity(2);
@@ -670,6 +680,7 @@ impl Reactor {
             conn.pending = conn.pending.saturating_sub(1);
         }
         let dead = self.after_io(ctx.conn, &mut conn);
+        self.metrics.obs.record_reply_flushed(trace.as_ref());
         if dead {
             self.release_conn(conn);
         } else {

@@ -1,0 +1,157 @@
+//! Bounded in-memory ring of structured serving events.
+//!
+//! The fault layer (ADR-008) surfaces incidents only as counters; the ring
+//! keeps the *last K* incidents with timestamps and context so "what just
+//! happened" is answerable post-hoc over `{"op":"events"}` without log
+//! scraping. Pushes are rare (restarts, poisons, sheds, protocol errors —
+//! never the per-chunk path), so a short mutexed `VecDeque` is fine; the
+//! hot path never touches it.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+/// Default ring capacity (events retained).
+pub const RING_CAP: usize = 512;
+
+/// One structured event. `seq` is a monotonically increasing id that keeps
+/// counting after old events are evicted, so a consumer can detect gaps.
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub seq: u64,
+    /// Milliseconds since the ring (i.e. the coordinator) was created.
+    pub t_ms: f64,
+    /// Wall-clock milliseconds since the Unix epoch (scraper-friendly).
+    pub unix_ms: u64,
+    /// Stable machine-readable kind, e.g. `worker_restart`.
+    pub kind: &'static str,
+    /// Human-readable context (shard id, seq id, error text …).
+    pub detail: String,
+}
+
+impl Event {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("seq", Json::Num(self.seq as f64)),
+            ("t_ms", Json::Num(self.t_ms)),
+            ("unix_ms", Json::Num(self.unix_ms as f64)),
+            ("kind", Json::Str(self.kind.to_string())),
+            ("detail", Json::Str(self.detail.clone())),
+        ])
+    }
+}
+
+/// Fixed-capacity event ring; oldest events are dropped on overflow.
+pub struct EventRing {
+    cap: usize,
+    next_seq: AtomicU64,
+    start: Instant,
+    inner: Mutex<VecDeque<Event>>,
+}
+
+impl Default for EventRing {
+    fn default() -> Self {
+        EventRing::new(RING_CAP)
+    }
+}
+
+impl EventRing {
+    pub fn new(cap: usize) -> Self {
+        EventRing {
+            cap: cap.max(1),
+            next_seq: AtomicU64::new(0),
+            start: Instant::now(),
+            inner: Mutex::new(VecDeque::with_capacity(cap.max(1).min(64))),
+        }
+    }
+
+    /// Append an event, evicting the oldest if the ring is full.
+    pub fn push(&self, kind: &'static str, detail: String) {
+        let seq = self.next_seq.fetch_add(1, Ordering::Relaxed);
+        let ev = Event {
+            seq,
+            t_ms: self.start.elapsed().as_secs_f64() * 1e3,
+            unix_ms: SystemTime::now()
+                .duration_since(UNIX_EPOCH)
+                .map(|d| d.as_millis() as u64)
+                .unwrap_or(0),
+            kind,
+            detail,
+        };
+        let mut q = self.inner.lock().unwrap();
+        if q.len() == self.cap {
+            q.pop_front();
+        }
+        q.push_back(ev);
+    }
+
+    /// Last `n` events, oldest first.
+    pub fn tail(&self, n: usize) -> Vec<Event> {
+        let q = self.inner.lock().unwrap();
+        let skip = q.len().saturating_sub(n);
+        q.iter().skip(skip).cloned().collect()
+    }
+
+    /// Events currently retained (≤ capacity).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total events ever pushed (retained + evicted).
+    pub fn total(&self) -> u64 {
+        self.next_seq.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_stays_bounded_and_keeps_newest() {
+        let r = EventRing::new(8);
+        for i in 0..80 {
+            r.push("test", format!("ev{i}"));
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.total(), 80);
+        let tail = r.tail(100);
+        assert_eq!(tail.len(), 8);
+        // newest retained, seq ids contiguous and increasing
+        assert_eq!(tail.first().unwrap().seq, 72);
+        assert_eq!(tail.last().unwrap().seq, 79);
+        assert_eq!(tail.last().unwrap().detail, "ev79");
+    }
+
+    #[test]
+    fn tail_respects_n() {
+        let r = EventRing::new(16);
+        for i in 0..10 {
+            r.push("k", format!("{i}"));
+        }
+        let t = r.tail(3);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0].detail, "7");
+        assert_eq!(t[2].detail, "9");
+    }
+
+    #[test]
+    fn event_serializes() {
+        let r = EventRing::new(4);
+        r.push("worker_restart", "shard 3".to_string());
+        let j = r.tail(1)[0].to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("worker_restart"));
+        assert_eq!(j.get("detail").unwrap().as_str(), Some("shard 3"));
+        assert!(j.get("t_ms").is_some() && j.get("unix_ms").is_some());
+    }
+}

@@ -1,0 +1,287 @@
+//! Lock-free log-linear latency histogram.
+//!
+//! Replaces the coordinator's mutex-guarded latency reservoir (whose
+//! replacement index raced on the `completed` counter) with a fixed array
+//! of `AtomicU64` buckets: `record` is two relaxed `fetch_add`s and an
+//! integer log — zero allocation, zero locks, safe on every hot path.
+//!
+//! Layout: integer log-linear over **microseconds** with 4 sub-buckets per
+//! octave (`SUB_BITS = 2`), so every bucket's width is ≤ 25% of its lower
+//! bound (≈ 2 significant figures, per the paper-serving issue). 128
+//! buckets cover 1 µs up to ~2 hours before the final clamp bucket —
+//! double the issue's "~64 buckets" sketch, because 64 log-linear buckets
+//! at 25% resolution only span ~4 decades and decode latencies here range
+//! from single-digit µs (prefix-cache hits) to multi-second chaos-test
+//! stalls. The deviation is deliberate: 1 KiB per histogram is still
+//! nothing, and resolution is kept.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of buckets (see module docs for why 128, not 64).
+pub const BUCKETS: usize = 128;
+/// log2 of the sub-buckets per octave (4 ⇒ ≤ 25% relative bucket width).
+const SUB_BITS: u32 = 2;
+const SUB: u64 = 1 << SUB_BITS;
+
+/// Bucket index for a latency of `us` microseconds.
+///
+/// Values `< 4` get exact unit buckets; above that, bucket `i` covers
+/// `[2^k + s·2^(k-2), 2^k + (s+1)·2^(k-2))` for octave `k` and sub-bucket
+/// `s ∈ {0..3}`. Everything past the table clamps into the last bucket.
+#[inline]
+pub fn bucket_index(us: u64) -> usize {
+    let idx = if us < SUB {
+        us as usize
+    } else {
+        let k = 63 - us.leading_zeros(); // floor(log2), ≥ SUB_BITS
+        let sub = ((us >> (k - SUB_BITS)) & (SUB - 1)) as usize;
+        SUB as usize + (k - SUB_BITS) as usize * SUB as usize + sub
+    };
+    idx.min(BUCKETS - 1)
+}
+
+/// `[lo, hi)` bounds in microseconds of bucket `idx` (inverse of
+/// [`bucket_index`]). The final clamp bucket's `hi` is `u64::MAX`.
+pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+    assert!(idx < BUCKETS);
+    let i = idx as u64;
+    if i < SUB {
+        return (i, i + 1);
+    }
+    let k = (i - SUB) / SUB + SUB_BITS as u64;
+    let sub = (i - SUB) % SUB;
+    let step = 1u64 << (k - SUB_BITS as u64);
+    let lo = (1u64 << k) + sub * step;
+    if idx == BUCKETS - 1 {
+        (lo, u64::MAX)
+    } else {
+        (lo, lo + step)
+    }
+}
+
+/// Fixed-bucket lock-free histogram. All fields are relaxed atomics; a
+/// snapshot read concurrent with writers may be off by in-flight records,
+/// which is fine for monitoring.
+pub struct Histo {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Default for Histo {
+    fn default() -> Self {
+        Histo::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Self {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a duration. Two relaxed `fetch_add`s — no locks, no allocs.
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record a raw microsecond value.
+    #[inline]
+    pub fn record_us(&self, us: u64) {
+        self.buckets[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us() as f64 / n as f64 / 1e3
+        }
+    }
+
+    /// Quantile estimate in milliseconds, `q ∈ [0, 100]`.
+    ///
+    /// Walks the cumulative counts to the target rank `⌈q/100·n⌉` and
+    /// returns the midpoint of the bucket holding that rank — within one
+    /// bucket's relative error (≤ 25%, usually ≤ 12.5%) of the exact
+    /// order statistic.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                let (lo, hi) = bucket_bounds(i);
+                // The clamp bucket has no meaningful upper bound; report
+                // its lower edge instead of a bogus midpoint.
+                let hi = if i == BUCKETS - 1 { lo } else { hi };
+                return (lo + hi) as f64 / 2.0 / 1e3;
+            }
+        }
+        0.0 // unreachable while writers are quiescent
+    }
+
+    /// Per-bucket counts (for Prometheus cumulative-bucket rendering).
+    pub fn bucket_counts(&self) -> Vec<u64> {
+        self.buckets
+            .iter()
+            .map(|b| b.load(Ordering::Relaxed))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::math::rng::Rng;
+
+    #[test]
+    fn bounds_invert_index_across_the_whole_table() {
+        for idx in 0..BUCKETS {
+            let (lo, hi) = bucket_bounds(idx);
+            assert_eq!(bucket_index(lo), idx, "lo of bucket {idx}");
+            if idx < BUCKETS - 1 {
+                assert_eq!(bucket_index(hi - 1), idx, "hi-1 of bucket {idx}");
+                assert_eq!(bucket_index(hi), idx + 1, "hi of bucket {idx}");
+            }
+        }
+    }
+
+    /// Property: every recorded value lands in a bucket whose bounds
+    /// contain it.
+    #[test]
+    fn recorded_value_falls_inside_its_bucket_bounds() {
+        let mut rng = Rng::new(41);
+        for _ in 0..10_000 {
+            // log-uniform over the full span, plus the small-integer edge
+            let us = match rng.below(4) {
+                0 => rng.below(8) as u64,
+                1 => rng.below(4096) as u64,
+                2 => rng.next_u64() % 10_000_000,        // ≤ 10 s
+                _ => rng.next_u64() % (1u64 << 40),      // into the clamp
+            };
+            let idx = bucket_index(us);
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(
+                lo <= us && us < hi,
+                "us={us} idx={idx} bounds=[{lo},{hi})"
+            );
+        }
+    }
+
+    /// Property: bucket widths stay ≤ 25% of their lower bound (the
+    /// "~2 significant figures" promise), for all non-degenerate buckets.
+    #[test]
+    fn relative_bucket_width_is_bounded() {
+        for idx in SUB as usize..BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds(idx);
+            assert!(
+                (hi - lo) as f64 <= 0.25 * lo as f64 + 1.0,
+                "bucket {idx}: [{lo},{hi})"
+            );
+        }
+    }
+
+    /// Property: the quantile estimate's bucket contains the exact target
+    /// order statistic, and on a smooth distribution the estimate is
+    /// within one bucket's relative error of `math::stats::percentile`.
+    #[test]
+    fn quantiles_track_exact_percentiles_within_bucket_error() {
+        let mut rng = Rng::new(42);
+        let h = Histo::new();
+        let n = 4096usize;
+        let mut vals: Vec<u64> = (0..n)
+            .map(|_| {
+                // log-uniform in [16 µs, ~1 s): smooth, spans many octaves
+                let e = rng.range(4.0, 20.0);
+                2f64.powf(e) as u64
+            })
+            .collect();
+        for &v in &vals {
+            h.record_us(v);
+        }
+        vals.sort_unstable();
+        let ms: Vec<f64> = vals.iter().map(|&v| v as f64 / 1e3).collect();
+        for q in [50.0, 90.0, 99.0, 99.9] {
+            let est = h.quantile_ms(q);
+            // (a) exact-by-construction: the estimate's bucket holds the
+            // target-rank sample.
+            let target = ((q / 100.0) * n as f64).ceil().max(1.0) as usize;
+            let rank_val = vals[target - 1];
+            let (lo, hi) = bucket_bounds(bucket_index((est * 1e3) as u64));
+            assert!(
+                lo <= rank_val && rank_val < hi,
+                "q={q}: rank val {rank_val} outside est bucket [{lo},{hi})"
+            );
+            // (b) cross-check against the interpolating exact percentile:
+            // within one bucket's relative width (25%) plus interpolation
+            // slack on a 4096-sample smooth distribution.
+            let exact = crate::math::stats::percentile(&ms, q);
+            let rel = (est - exact).abs() / exact.max(1e-9);
+            assert!(rel <= 0.25, "q={q}: est={est}ms exact={exact}ms rel={rel}");
+        }
+    }
+
+    /// Property: concurrent recording is lossless — total count and the
+    /// bucket-sum both equal the number of records issued.
+    #[test]
+    fn concurrent_records_are_all_counted() {
+        use std::sync::Arc;
+        let h = Arc::new(Histo::new());
+        let threads = 8;
+        let per = 5_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                let h = Arc::clone(&h);
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(100 + t);
+                    for _ in 0..per {
+                        h.record_us(rng.next_u64() % 1_000_000);
+                    }
+                })
+            })
+            .collect();
+        for jh in handles {
+            jh.join().unwrap();
+        }
+        let expect = threads * per;
+        assert_eq!(h.count(), expect);
+        assert_eq!(h.bucket_counts().iter().sum::<u64>(), expect);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zeros() {
+        let h = Histo::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile_ms(50.0), 0.0);
+        assert_eq!(h.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn mean_matches_recorded_sum() {
+        let h = Histo::new();
+        h.record(Duration::from_millis(10));
+        h.record(Duration::from_millis(30));
+        assert!((h.mean_ms() - 20.0).abs() < 0.01, "mean={}", h.mean_ms());
+    }
+}

@@ -1,0 +1,141 @@
+//! Minimal `GET /metrics` HTTP listener for off-the-shelf Prometheus
+//! scrapers (`--metrics-addr`). One polling thread, blocking per-request
+//! I/O with short timeouts — a scrape endpoint, not a web server. The
+//! serving planes (JSON lines / SLAYWIRE) are untouched; this is a side
+//! door onto the same `Metrics`.
+
+use crate::coordinator::Metrics;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Handle to a running metrics listener; dropping it stops the thread.
+pub struct MetricsHttp {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsHttp {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and serve
+    /// `GET /metrics` as Prometheus text exposition.
+    pub fn start(addr: &str, metrics: Arc<Metrics>) -> anyhow::Result<MetricsHttp> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("slay-metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // Errors on a scrape socket are the scraper's
+                            // problem; never take the listener down.
+                            let _ = serve_one(stream, &metrics);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            })?;
+        crate::log_info!("metrics listener on http://{local}/metrics");
+        Ok(MetricsHttp {
+            addr: local,
+            stop,
+            handle: Some(handle),
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsHttp {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_one(mut stream: TcpStream, metrics: &Metrics) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500)))?;
+    stream.set_write_timeout(Some(Duration::from_secs(2)))?;
+    // Read enough for the request line; drain headers best-effort.
+    let mut buf = [0u8; 2048];
+    let mut used = 0usize;
+    loop {
+        if used == buf.len() || buf[..used].windows(2).any(|w| w == b"\r\n") {
+            break;
+        }
+        match stream.read(&mut buf[used..]) {
+            Ok(0) => break,
+            Ok(n) => used += n,
+            Err(_) => break,
+        }
+    }
+    let req = String::from_utf8_lossy(&buf[..used]);
+    let line = req.lines().next().unwrap_or("");
+    let mut parts = line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+    let (status, ctype, body) = if method == "GET" && (path == "/metrics" || path == "/") {
+        (
+            "200 OK",
+            "text/plain; version=0.0.4; charset=utf-8",
+            crate::obs::prom::render(metrics),
+        )
+    } else {
+        ("404 Not Found", "text/plain", "not found\n".to_string())
+    };
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(addr: SocketAddr, path: &str) -> String {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn serves_prometheus_on_get_metrics() {
+        let m = Arc::new(Metrics::new());
+        m.submitted
+            .fetch_add(7, std::sync::atomic::Ordering::Relaxed);
+        let http = MetricsHttp::start("127.0.0.1:0", Arc::clone(&m)).unwrap();
+        let resp = get(http.addr(), "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("slay_submitted_total 7"));
+    }
+
+    #[test]
+    fn unknown_path_is_404_and_listener_survives() {
+        let m = Arc::new(Metrics::new());
+        let http = MetricsHttp::start("127.0.0.1:0", Arc::clone(&m)).unwrap();
+        let resp = get(http.addr(), "/nope");
+        assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+        // still serving after a bad request
+        let resp = get(http.addr(), "/metrics");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    }
+}

@@ -1,0 +1,361 @@
+//! Serving observability layer: lock-free stage histograms, per-shard
+//! gauges, a structured event ring, Prometheus text exposition and an
+//! optional scrape listener.
+//!
+//! The request lifecycle is stamped at six monotonic ticks:
+//!
+//! ```text
+//! submit ── shard-enqueue ── batch-formed ── compute-start ── compute-end ── reply-flushed
+//!    └── queue_wait ──┘└─ batch_form ─┘└── compute ──┘└── reply_flush ──┘
+//!    └───────────────────────────── total ─────────────────────────────┘
+//! ```
+//!
+//! (queue_wait spans enqueue→batch-formed; the submit→enqueue gap is
+//! sub-microsecond validation and is folded into `total` only.) Each gap
+//! feeds one [`Histo`] per request [`Class`] × [`Stage`], so `{"op":
+//! "metrics"}` can attribute a millisecond to queueing vs batching vs
+//! compute vs socket flush, per traffic class, at p50/p90/p99/p99.9.
+//!
+//! Everything here is a pure side channel: replies are byte-identical with
+//! the layer enabled or disabled (`set_enabled(false)` is the no-record
+//! baseline the `serve_obs` bench gates against).
+
+pub mod events;
+pub mod hist;
+pub mod http;
+pub mod prom;
+
+pub use events::{Event, EventRing, RING_CAP};
+pub use hist::{bucket_bounds, bucket_index, Histo, BUCKETS};
+pub use http::MetricsHttp;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+/// Request class — which kind of traffic a sample belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Class {
+    /// Multi-token prefill chunks (including prefix-cache hits).
+    Prefill,
+    /// Single-token decode chunks served individually.
+    Decode,
+    /// Decode rows advanced inside a fused cross-session wave (ADR-005).
+    FusedWave,
+    /// Session fork operations (ADR-006).
+    Fork,
+    /// Control-plane ops (create / release / metrics / snapshot / …).
+    Control,
+}
+
+impl Class {
+    pub const ALL: [Class; 5] = [
+        Class::Prefill,
+        Class::Decode,
+        Class::FusedWave,
+        Class::Fork,
+        Class::Control,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Class::Prefill => "prefill",
+            Class::Decode => "decode",
+            Class::FusedWave => "fused_wave",
+            Class::Fork => "fork",
+            Class::Control => "control",
+        }
+    }
+}
+
+/// Lifecycle stage — which gap between ticks a sample measures.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Stage {
+    /// shard-enqueue → batch-formed (time parked in the shard queue).
+    Queue,
+    /// batch-formed → compute-start (scheduling/ordering inside a batch).
+    Batch,
+    /// compute-start → compute-end (backend kernel time).
+    Compute,
+    /// compute-end → reply-flushed (completion routing + socket write).
+    Flush,
+    /// submit → reply-flushed (end-to-end).
+    Total,
+}
+
+impl Stage {
+    pub const ALL: [Stage; 5] = [
+        Stage::Queue,
+        Stage::Batch,
+        Stage::Compute,
+        Stage::Flush,
+        Stage::Total,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Queue => "queue_wait",
+            Stage::Batch => "batch_form",
+            Stage::Compute => "compute",
+            Stage::Flush => "reply_flush",
+            Stage::Total => "total",
+        }
+    }
+}
+
+/// In-memory trace ticks carried on a completed `AttendResult` from the
+/// worker to the front end that flushes the reply. Never serialized — the
+/// wire encoders don't read it, which is what keeps replies byte-identical
+/// with observability on or off.
+#[derive(Clone, Copy, Debug)]
+pub struct ObsTicks {
+    pub class: Class,
+    /// Tick 0: request entered `submit_with`.
+    pub submit: Instant,
+    /// Tick 4: backend compute finished (= tick 3 for compute-skipped
+    /// prefix-cache hits).
+    pub compute_end: Instant,
+}
+
+/// Per-shard (per-worker) live gauges and counters. Gauges are `store`d by
+/// their single writer (queue depth excepted — it is inc'd at submit and
+/// dec'd at dequeue); counters accumulate.
+#[derive(Default)]
+pub struct ShardStats {
+    /// Items currently sitting in the shard's bounded queue.
+    pub queue_depth: AtomicU64,
+    /// Sessions resident in the shard's store (gauge).
+    pub resident_seqs: AtomicU64,
+    /// Bytes held by resident session state (gauge).
+    pub resident_bytes: AtomicU64,
+    /// Sessions paged out to the spill tier (gauge).
+    pub spilled_seqs: AtomicU64,
+    /// Work items this shard has processed (counter).
+    pub items: AtomicU64,
+    /// Batches this shard has formed (counter).
+    pub batches: AtomicU64,
+}
+
+impl ShardStats {
+    pub fn to_json(&self, shard: usize) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let n = |a: &AtomicU64| Json::Num(a.load(Ordering::Relaxed) as f64);
+        Json::obj(vec![
+            ("shard", Json::Num(shard as f64)),
+            ("queue_depth", n(&self.queue_depth)),
+            ("resident_seqs", n(&self.resident_seqs)),
+            ("resident_bytes", n(&self.resident_bytes)),
+            ("spilled_seqs", n(&self.spilled_seqs)),
+            ("items", n(&self.items)),
+            ("batches", n(&self.batches)),
+        ])
+    }
+}
+
+const N_CLASSES: usize = Class::ALL.len();
+const N_STAGES: usize = Stage::ALL.len();
+
+/// The observability state owned by `coordinator::Metrics`: one histogram
+/// per class × stage, the legacy end-to-end request histogram, per-shard
+/// stats and the event ring.
+pub struct Obs {
+    stages: [Histo; N_CLASSES * N_STAGES],
+    /// End-to-end enqueue→reply histogram feeding the legacy
+    /// `latency_p50_ms` / `latency_p95_ms` / `latency_mean_ms` keys.
+    pub request: Histo,
+    pub events: EventRing,
+    shards: OnceLock<Vec<ShardStats>>,
+    enabled: AtomicBool,
+}
+
+impl Default for Obs {
+    fn default() -> Self {
+        Obs::new()
+    }
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        Obs {
+            stages: std::array::from_fn(|_| Histo::new()),
+            request: Histo::new(),
+            events: EventRing::default(),
+            shards: OnceLock::new(),
+            enabled: AtomicBool::new(true),
+        }
+    }
+
+    /// Latency recording on/off. Events stay on (they are rare and carry
+    /// incident context); only the per-chunk histogram path is gated, so
+    /// the `serve_obs` bench can measure a true no-record baseline.
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn stage(&self, c: Class, s: Stage) -> &Histo {
+        &self.stages[c as usize * N_STAGES + s as usize]
+    }
+
+    /// Record one stage sample (no-op when disabled).
+    #[inline]
+    pub fn record_stage(&self, c: Class, s: Stage, d: Duration) {
+        if self.enabled() {
+            self.stage(c, s).record(d);
+        }
+    }
+
+    /// Record the legacy end-to-end request latency (no-op when disabled).
+    #[inline]
+    pub fn record_request(&self, d: Duration) {
+        if self.enabled() {
+            self.request.record(d);
+        }
+    }
+
+    /// Ticks 5: the reply left the front end's socket. Records the
+    /// `reply_flush` and `total` stages from the ticks a worker stamped on
+    /// the result; a `None` trace (error replies) records nothing.
+    #[inline]
+    pub fn record_reply_flushed(&self, trace: Option<&ObsTicks>) {
+        let Some(t) = trace else { return };
+        if !self.enabled() {
+            return;
+        }
+        let now = Instant::now();
+        self.record_stage(t.class, Stage::Flush, now.saturating_duration_since(t.compute_end));
+        self.record_stage(t.class, Stage::Total, now.saturating_duration_since(t.submit));
+    }
+
+    /// Install the per-shard stat blocks (called once by
+    /// `Coordinator::start` with the worker count; later calls are no-ops).
+    pub fn init_shards(&self, n: usize) {
+        let _ = self
+            .shards
+            .set((0..n).map(|_| ShardStats::default()).collect());
+    }
+
+    pub fn shard(&self, i: usize) -> Option<&ShardStats> {
+        self.shards.get().and_then(|v| v.get(i))
+    }
+
+    pub fn shards(&self) -> &[ShardStats] {
+        self.shards.get().map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Nested `{class: {stage: {count,p50_ms,p90_ms,p99_ms,p999_ms,
+    /// mean_ms}}}` JSON for `{"op":"metrics"}`; classes/stages with no
+    /// samples are omitted.
+    pub fn stages_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut classes = Vec::new();
+        for c in Class::ALL {
+            let mut stages = Vec::new();
+            for s in Stage::ALL {
+                let h = self.stage(c, s);
+                if h.count() == 0 {
+                    continue;
+                }
+                stages.push((
+                    s.name(),
+                    Json::obj(vec![
+                        ("count", Json::Num(h.count() as f64)),
+                        ("p50_ms", Json::Num(h.quantile_ms(50.0))),
+                        ("p90_ms", Json::Num(h.quantile_ms(90.0))),
+                        ("p99_ms", Json::Num(h.quantile_ms(99.0))),
+                        ("p999_ms", Json::Num(h.quantile_ms(99.9))),
+                        ("mean_ms", Json::Num(h.mean_ms())),
+                    ]),
+                ));
+            }
+            if !stages.is_empty() {
+                classes.push((c.name(), Json::obj(stages)));
+            }
+        }
+        Json::obj(classes)
+    }
+
+    /// `[{shard, queue_depth, …}, …]` JSON for `detail:"shards"`.
+    pub fn shards_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::Arr(
+            self.shards()
+                .iter()
+                .enumerate()
+                .map(|(i, s)| s.to_json(i))
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_indexing_is_bijective() {
+        // every (class, stage) pair maps to a distinct histogram
+        let o = Obs::new();
+        for c in Class::ALL {
+            for s in Stage::ALL {
+                o.record_stage(c, s, Duration::from_micros(7));
+            }
+        }
+        for c in Class::ALL {
+            for s in Stage::ALL {
+                assert_eq!(o.stage(c, s).count(), 1, "{}/{}", c.name(), s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn disabled_obs_records_nothing() {
+        let o = Obs::new();
+        o.set_enabled(false);
+        o.record_stage(Class::Decode, Stage::Compute, Duration::from_millis(1));
+        o.record_request(Duration::from_millis(1));
+        assert_eq!(o.stage(Class::Decode, Stage::Compute).count(), 0);
+        assert_eq!(o.request.count(), 0);
+        o.set_enabled(true);
+        o.record_request(Duration::from_millis(1));
+        assert_eq!(o.request.count(), 1);
+    }
+
+    #[test]
+    fn stages_json_omits_empty_cells() {
+        let o = Obs::new();
+        o.record_stage(Class::Decode, Stage::Compute, Duration::from_millis(2));
+        let j = o.stages_json();
+        assert!(j.get("decode").is_some());
+        assert!(j.get("prefill").is_none());
+        let d = j.get("decode").unwrap();
+        assert!(d.get("compute").is_some());
+        assert!(d.get("queue_wait").is_none());
+        let c = d.get("compute").unwrap();
+        for k in ["count", "p50_ms", "p90_ms", "p99_ms", "p999_ms", "mean_ms"] {
+            assert!(c.get(k).is_some(), "missing {k}");
+        }
+    }
+
+    #[test]
+    fn shard_stats_init_and_serialize() {
+        let o = Obs::new();
+        assert!(o.shards().is_empty());
+        o.init_shards(3);
+        o.init_shards(9); // later init is a no-op
+        assert_eq!(o.shards().len(), 3);
+        o.shard(1).unwrap().queue_depth.store(4, Ordering::Relaxed);
+        o.shard(1).unwrap().items.fetch_add(10, Ordering::Relaxed);
+        let j = o.shards_json();
+        if let crate::util::json::Json::Arr(a) = &j {
+            assert_eq!(a.len(), 3);
+            assert_eq!(a[1].get("queue_depth").unwrap().as_usize(), Some(4));
+            assert_eq!(a[1].get("items").unwrap().as_usize(), Some(10));
+            assert_eq!(a[1].get("shard").unwrap().as_usize(), Some(1));
+        } else {
+            panic!("shards_json not an array");
+        }
+    }
+}

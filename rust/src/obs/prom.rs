@@ -1,0 +1,253 @@
+//! Prometheus text exposition (format 0.0.4), hand-rolled like the rest of
+//! the stack — zero dependencies.
+//!
+//! Rendering pulls counters and gauges from the *same*
+//! `Snapshot::counter_fields()` / `Snapshot::gauge_fields()` lists that
+//! feed the JSON output, so a field added to `Snapshot` appears in both
+//! formats or in neither — the exposition-completeness test in
+//! `coordinator::metrics` pins that invariant.
+//!
+//! Metric naming: counters are `slay_<field>_total`, gauges `slay_<field>`,
+//! stage latencies one histogram family
+//! `slay_stage_latency_seconds{class=…,stage=…}`, per-shard stats gauges/
+//! counters labelled `{shard=…}`.
+
+use crate::coordinator::Metrics;
+use crate::obs::{bucket_bounds, Class, Stage};
+use std::fmt::Write as _;
+
+/// Render the full metrics state as Prometheus text exposition.
+pub fn render(m: &Metrics) -> String {
+    let snap = m.snapshot();
+    let mut out = String::with_capacity(8192);
+
+    for (name, v) in snap.counter_fields() {
+        let _ = writeln!(out, "# TYPE slay_{name}_total counter");
+        let _ = writeln!(out, "slay_{name}_total {v}");
+    }
+    for (name, v) in snap.gauge_fields() {
+        let _ = writeln!(out, "# TYPE slay_{name} gauge");
+        let _ = writeln!(out, "slay_{name} {}", fmt_f64(v));
+    }
+
+    // Stage latency histograms: one family, labelled by class and stage.
+    // Only non-empty series are emitted; within a series only buckets that
+    // advance the cumulative count appear (plus the mandatory +Inf).
+    let mut wrote_type = false;
+    for c in Class::ALL {
+        for s in Stage::ALL {
+            let h = m.obs.stage(c, s);
+            let total = h.count();
+            if total == 0 {
+                continue;
+            }
+            if !wrote_type {
+                let _ = writeln!(out, "# TYPE slay_stage_latency_seconds histogram");
+                wrote_type = true;
+            }
+            let labels = format!("class=\"{}\",stage=\"{}\"", c.name(), s.name());
+            let mut cum = 0u64;
+            for (i, n) in h.bucket_counts().into_iter().enumerate() {
+                if n == 0 {
+                    continue;
+                }
+                cum += n;
+                let (_, hi) = bucket_bounds(i);
+                let _ = writeln!(
+                    out,
+                    "slay_stage_latency_seconds_bucket{{{labels},le=\"{}\"}} {cum}",
+                    fmt_f64(hi as f64 / 1e6)
+                );
+            }
+            let _ = writeln!(
+                out,
+                "slay_stage_latency_seconds_bucket{{{labels},le=\"+Inf\"}} {total}"
+            );
+            let _ = writeln!(
+                out,
+                "slay_stage_latency_seconds_sum{{{labels}}} {}",
+                fmt_f64(h.sum_us() as f64 / 1e6)
+            );
+            let _ = writeln!(out, "slay_stage_latency_seconds_count{{{labels}}} {total}");
+        }
+    }
+
+    // Per-shard stats (absent until the coordinator installs them).
+    let shards = m.obs.shards();
+    if !shards.is_empty() {
+        use std::sync::atomic::Ordering;
+        let gauges: [(&str, fn(&crate::obs::ShardStats) -> u64); 4] = [
+            ("shard_queue_depth", |s| s.queue_depth.load(Ordering::Relaxed)),
+            ("shard_resident_seqs", |s| s.resident_seqs.load(Ordering::Relaxed)),
+            ("shard_resident_bytes", |s| s.resident_bytes.load(Ordering::Relaxed)),
+            ("shard_spilled_seqs", |s| s.spilled_seqs.load(Ordering::Relaxed)),
+        ];
+        for (name, get) in gauges {
+            let _ = writeln!(out, "# TYPE slay_{name} gauge");
+            for (i, s) in shards.iter().enumerate() {
+                let _ = writeln!(out, "slay_{name}{{shard=\"{i}\"}} {}", get(s));
+            }
+        }
+        let counters: [(&str, fn(&crate::obs::ShardStats) -> u64); 2] = [
+            ("shard_items", |s| s.items.load(Ordering::Relaxed)),
+            ("shard_batches", |s| s.batches.load(Ordering::Relaxed)),
+        ];
+        for (name, get) in counters {
+            let _ = writeln!(out, "# TYPE slay_{name}_total counter");
+            for (i, s) in shards.iter().enumerate() {
+                let _ = writeln!(out, "slay_{name}_total{{shard=\"{i}\"}} {}", get(s));
+            }
+        }
+    }
+
+    // Event-ring depth: retained vs ever-pushed (gap = evicted).
+    let _ = writeln!(out, "# TYPE slay_events_retained gauge");
+    let _ = writeln!(out, "slay_events_retained {}", m.obs.events.len());
+    let _ = writeln!(out, "# TYPE slay_events_total counter");
+    let _ = writeln!(out, "slay_events_total {}", m.obs.events.total());
+
+    out
+}
+
+/// Prometheus float formatting: plain decimal, no exponent surprises for
+/// the magnitudes we emit; integers render without a trailing `.0`.
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    fn populated_metrics() -> Metrics {
+        use std::sync::atomic::Ordering;
+        use std::time::Duration;
+        let m = Metrics::new();
+        m.submitted.fetch_add(5, Ordering::Relaxed);
+        m.completed.fetch_add(4, Ordering::Relaxed);
+        m.active_connections.store(2, Ordering::Relaxed);
+        m.record_latency(Duration::from_millis(3));
+        m.obs.init_shards(2);
+        m.obs
+            .shard(0)
+            .unwrap()
+            .queue_depth
+            .store(1, Ordering::Relaxed);
+        for (c, s, us) in [
+            (Class::Decode, Stage::Queue, 120),
+            (Class::Decode, Stage::Compute, 900),
+            (Class::Decode, Stage::Compute, 90_000),
+            (Class::Prefill, Stage::Total, 2_500),
+        ] {
+            m.obs.stage(c, s).record_us(us);
+        }
+        m.obs.events.push("snapshot", "test".into());
+        m
+    }
+
+    /// Structural validity: every sample line parses, every sample name
+    /// has a preceding `# TYPE`, histogram buckets are cumulative
+    /// monotone and every histogram series carries `+Inf`, `_sum`,
+    /// `_count` with `+Inf == _count`.
+    #[test]
+    fn output_is_valid_text_exposition() {
+        let m = populated_metrics();
+        let text = render(&m);
+        let mut typed: HashMap<String, String> = HashMap::new();
+        // per-series histogram bookkeeping
+        let mut last_bucket: HashMap<String, (f64, u64)> = HashMap::new();
+        let mut inf: HashMap<String, u64> = HashMap::new();
+        let mut count: HashMap<String, u64> = HashMap::new();
+        for line in text.lines() {
+            assert!(!line.trim().is_empty(), "blank line in exposition");
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let name = it.next().unwrap().to_string();
+                let kind = it.next().unwrap().to_string();
+                assert!(
+                    ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                    "bad TYPE kind: {line}"
+                );
+                typed.insert(name, kind);
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unexpected comment: {line}");
+            // sample line: name{labels}? value
+            let (name_labels, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("no value: {line}"));
+            value
+                .parse::<f64>()
+                .unwrap_or_else(|_| panic!("bad value in: {line}"));
+            let (name, labels) = match name_labels.split_once('{') {
+                Some((n, l)) => {
+                    assert!(l.ends_with('}'), "unclosed labels: {line}");
+                    (n.to_string(), l.trim_end_matches('}').to_string())
+                }
+                None => (name_labels.to_string(), String::new()),
+            };
+            // the sample's family must have been TYPEd (histograms via
+            // their base name)
+            let base = name
+                .strip_suffix("_bucket")
+                .or_else(|| name.strip_suffix("_sum"))
+                .or_else(|| name.strip_suffix("_count"))
+                .filter(|b| typed.get(*b).map(String::as_str) == Some("histogram"))
+                .unwrap_or(&name);
+            assert!(typed.contains_key(base), "sample before TYPE: {line}");
+            if typed.get(base).map(String::as_str) == Some("histogram") {
+                let series: String = labels
+                    .split(',')
+                    .filter(|kv| !kv.starts_with("le="))
+                    .collect::<Vec<_>>()
+                    .join(",");
+                let key = format!("{base}{{{series}}}");
+                if name.ends_with("_bucket") {
+                    let le = labels
+                        .split(',')
+                        .find_map(|kv| kv.strip_prefix("le="))
+                        .unwrap_or_else(|| panic!("bucket without le: {line}"))
+                        .trim_matches('"');
+                    let v: u64 = value.parse().unwrap();
+                    if le == "+Inf" {
+                        inf.insert(key, v);
+                    } else {
+                        let le: f64 = le.parse().unwrap();
+                        if let Some((ple, pv)) = last_bucket.get(&key) {
+                            assert!(le > *ple, "le not increasing: {line}");
+                            assert!(v >= *pv, "bucket not cumulative: {line}");
+                        }
+                        last_bucket.insert(key, (le, v));
+                    }
+                } else if name.ends_with("_count") {
+                    count.insert(key, value.parse().unwrap());
+                }
+            }
+        }
+        assert!(!typed.is_empty() && !inf.is_empty());
+        for (k, c) in &count {
+            assert_eq!(inf.get(k), Some(c), "+Inf != _count for {k}");
+        }
+        for (k, (_, v)) in &last_bucket {
+            assert!(inf[k] >= *v, "+Inf below last bucket for {k}");
+        }
+    }
+
+    #[test]
+    fn stage_series_and_shard_series_present() {
+        let m = populated_metrics();
+        let text = render(&m);
+        assert!(text.contains(
+            "slay_stage_latency_seconds_count{class=\"decode\",stage=\"compute\"} 2"
+        ));
+        assert!(text.contains("slay_shard_queue_depth{shard=\"0\"} 1"));
+        assert!(text.contains("slay_shard_queue_depth{shard=\"1\"} 0"));
+        assert!(text.contains("slay_events_retained 1"));
+        assert!(text.contains("slay_submitted_total 5"));
+        assert!(text.contains("slay_active_connections 2"));
+    }
+}

@@ -22,9 +22,19 @@ fn max_level() -> Level {
     *L.get_or_init(|| match std::env::var("SLAY_LOG").as_deref() {
         Ok("error") => Level::Error,
         Ok("warn") => Level::Warn,
+        Ok("info") => Level::Info,
         Ok("debug") => Level::Debug,
         Ok("trace") => Level::Trace,
-        _ => Level::Info,
+        Ok(other) => {
+            // Loud once (ADR-008: misconfiguration never fails silently):
+            // a typo'd SLAY_LOG would otherwise just quietly mean "info".
+            eprintln!(
+                "SLAY_LOG={other:?} is not a log level \
+                 (expected error|warn|info|debug|trace); defaulting to info"
+            );
+            Level::Info
+        }
+        Err(_) => Level::Info,
     })
 }
 
@@ -82,6 +92,13 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::emit($crate::util::logging::Level::Trace, module_path!(), format_args!($($arg)*))
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -99,6 +116,7 @@ mod tests {
     fn macros_compile_and_run() {
         log_info!("hello {}", 42);
         log_debug!("debug {}", "msg");
+        log_trace!("trace {}", 0.5);
         log_warn!("warn");
         log_error!("err");
     }

@@ -11,8 +11,10 @@
 //! 2. **Fault-untouched sessions are bit-identical.** Any session that
 //!    never saw an errored reply must match a fault-free replay of its
 //!    exact chunk stream on a directly-built backend, bit for bit.
-//! 3. **Every injected fault class is visible in metrics.** Bounded
-//!    targeted top-up traffic guarantees each armed site actually fires.
+//! 3. **Every injected fault class is visible in metrics AND in the
+//!    structured event ring.** Bounded targeted top-up traffic guarantees
+//!    each armed site actually fires; the ring must stay within its
+//!    512-entry bound and respect the `n` tail cap throughout.
 //!
 //! The plan self-arms with a fixed seed when `SLAY_FAULTS` is unset, so
 //! `cargo test --test chaos` is a chaos run by default. Setting
@@ -348,6 +350,30 @@ fn metric(addr: SocketAddr, name: &str) -> u64 {
         .unwrap_or_else(|| panic!("metrics JSON is missing counter {name:?}")) as u64
 }
 
+/// Fetch the newest `n` entries of the structured event ring over a fresh
+/// JSON-only connection. Returns (total events ever pushed, kinds of the
+/// returned tail).
+fn events(addr: SocketAddr, n: usize) -> (u64, Vec<String>) {
+    let mut w = Wire::connect(addr);
+    let j = json_op(&mut w, &format!(r#"{{"op":"events","n":{n}}}"#))
+        .expect("the events op must survive any amount of injected chaos");
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true), "{j:?}");
+    let total = j.get("total").and_then(|v| v.as_usize()).expect("events reply missing total");
+    let Some(Json::Arr(items)) = j.get("events") else {
+        panic!("events reply missing the events array: {j:?}")
+    };
+    let kinds = items
+        .iter()
+        .map(|e| {
+            e.get("kind")
+                .and_then(|k| k.as_str())
+                .expect("event entry missing kind")
+                .to_string()
+        })
+        .collect();
+    (total as u64, kinds)
+}
+
 fn sacrificial_create(w: &mut Wire, addr: SocketAddr) -> u64 {
     for _ in 0..100 {
         match json_op(w, r#"{"op":"create"}"#) {
@@ -516,6 +542,37 @@ fn chaos_faults_stay_bounded_counted_and_bit_exact() {
     if has("frame_rx") {
         assert!(metric(addr, "protocol_errors") >= 1);
     }
+
+    // Invariant 3, event-ring edition: every armed fault class must also
+    // land as a structured event, the ring must stay bounded, and the
+    // `n` request field must cap the tail.
+    let (ev_total, ev_kinds) = events(addr, 600);
+    assert!(
+        ev_kinds.len() <= 512,
+        "event ring exceeded its 512-entry bound: {} entries returned",
+        ev_kinds.len()
+    );
+    assert!(
+        ev_total >= ev_kinds.len() as u64,
+        "total ({ev_total}) below retained tail ({})",
+        ev_kinds.len()
+    );
+    let has_kind = |k: &str| ev_kinds.iter().any(|x| x == k);
+    if has("spill_write") {
+        assert!(has_kind("spill_write_failure"), "no spill_write_failure event: {ev_kinds:?}");
+    }
+    if has("worker_loop") {
+        assert!(has_kind("worker_restart"), "no worker_restart event: {ev_kinds:?}");
+    }
+    if has("decode:") {
+        assert!(has_kind("session_poisoned"), "no session_poisoned event: {ev_kinds:?}");
+    }
+    if has("frame_rx") {
+        assert!(has_kind("protocol_error"), "no protocol_error event: {ev_kinds:?}");
+    }
+    let (_, capped) = events(addr, 3);
+    assert!(capped.len() <= 3, "events op ignored n=3: {} entries returned", capped.len());
+
     if !armed {
         // Control run: with no plan armed the fault layer must be a
         // perfect no-op — zero fault counters, zero errored sessions.
@@ -533,6 +590,18 @@ fn chaos_faults_stay_bounded_counted_and_bit_exact() {
             logs.iter().all(|l| !l.affected),
             "a session errored with the fault layer disarmed"
         );
+        for kind in [
+            "worker_restart",
+            "session_poisoned",
+            "spill_write_failure",
+            "protocol_error",
+            "shed_connection",
+        ] {
+            assert!(
+                !has_kind(kind),
+                "a {kind} event was recorded on a fault-free run: {ev_kinds:?}"
+            );
+        }
     }
 
     // Invariant 1: nobody waited past the deadline plus slack.
