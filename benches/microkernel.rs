@@ -1,0 +1,265 @@
+//! SIMD microkernel speedup gate (ADR-010) — emitted machine-readably as
+//! `results/BENCH_simd.json`.
+//!
+//! Times the dispatched kernel table against the forced-scalar table, in
+//! one process via `kernels_for`, on the two GEMM shapes the serving hot
+//! path actually runs:
+//!
+//! * `gemm_nn` 4096×384 · 384×32 — the Fig. 2 prefill feature GEMM at
+//!   L = 4096 (`Ψ(K)ᵀ`-side stripe shape);
+//! * `gemm_nt` 128×64 · (384×64)ᵀ — the B = 128 fused cross-session
+//!   decode feature GEMM (ADR-005).
+//!
+//! Gate: with the AVX2 backend resolved the dispatched path must be
+//! ≥ 4× the scalar path on both shapes (best-of-interleaved-trials, with
+//! up to 3 doubled-budget retries against scheduler noise, same policy as
+//! `serve_obs`); on hosts without AVX2 the gate degrades to
+//! no-regression (≥ 0.9×, i.e. dispatch overhead must be invisible).
+//! Primitive rows (dot/axpy/exp_affine/softmax_row) are informational
+//! and ungated.
+//!
+//! Env knobs:
+//! * `SLAY_BENCH_SMOKE=1` — small time budget; ci.sh uses this to
+//!   exercise the path and assert the JSON lands on every run.
+//! * `SLAY_SIMD` — as everywhere, forces the dispatched backend.
+
+use slay::math::linalg::Mat;
+use slay::math::rng::Rng;
+use slay::math::simd::{kernels, kernels_for, Backend, Kernels};
+use slay::util::benchkit::{time_budget, write_json, Table, Timing};
+use slay::util::json::Json;
+use std::time::Duration;
+
+struct GateShape {
+    op: &'static str,
+    /// Trajectory label dimension (`"l"` or `"batch"`) and its value.
+    label: (&'static str, usize),
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+const GATES: &[GateShape] = &[
+    GateShape { op: "gemm_nn", label: ("l", 4096), m: 4096, k: 384, n: 32 },
+    GateShape { op: "gemm_nt", label: ("batch", 128), m: 128, k: 64, n: 384 },
+];
+
+fn time_gemm(bk: &'static Kernels, s: &GateShape, budget: Duration) -> Timing {
+    let mut rng = Rng::new(77);
+    let a = Mat::randn(s.m, s.k, &mut rng);
+    // nn contracts over B rows (k×n); nt over B columns (n rows of length k).
+    let b = if s.op == "gemm_nn" {
+        Mat::randn(s.k, s.n, &mut rng)
+    } else {
+        Mat::randn(s.n, s.k, &mut rng)
+    };
+    let mut out = Mat::zeros(s.m, s.n);
+    let name = format!("{} {} {}x{}x{}", s.op, bk.name, s.m, s.k, s.n);
+    if s.op == "gemm_nn" {
+        time_budget(&name, budget, || {
+            (bk.gemm_nn)(a.view(), b.view(), out.view_mut());
+            std::hint::black_box(out.data[0]);
+        })
+    } else {
+        time_budget(&name, budget, || {
+            (bk.gemm_nt)(a.view(), b.view(), out.view_mut());
+            std::hint::black_box(out.data[0]);
+        })
+    }
+}
+
+/// Informational primitive timing: `reps` kernel calls per sample on
+/// `n`-float rows. `ops` is the nominal per-call op count backing the
+/// throughput figure (2n flops for dot/axpy, n map-elements for the rest).
+fn time_prim(
+    bk: &'static Kernels,
+    op: &str,
+    n: usize,
+    reps: usize,
+    budget: Duration,
+) -> (Timing, f64) {
+    let mut rng = Rng::new(99);
+    let x = rng.uniform_vec(n, -3.0, 3.0);
+    let y0 = rng.uniform_vec(n, 0.1, 1.0);
+    let mut buf = y0.clone();
+    let name = format!("{op} {} n={n}", bk.name);
+    let (t, ops) = match op {
+        "dot" => (
+            time_budget(&name, budget, || {
+                let mut acc = 0.0f32;
+                for _ in 0..reps {
+                    acc += (bk.dot)(std::hint::black_box(&x), &y0);
+                }
+                std::hint::black_box(acc);
+            }),
+            2.0 * n as f64,
+        ),
+        "axpy" => (
+            time_budget(&name, budget, || {
+                for _ in 0..reps {
+                    (bk.axpy)(1e-4, &x, &mut buf);
+                }
+                std::hint::black_box(buf[0]);
+            }),
+            2.0 * n as f64,
+        ),
+        "exp_affine" => (
+            time_budget(&name, budget, || {
+                // a·x + b stays ≤ −0.2 for x ∈ (0, 1.1], so repeated
+                // application is a stable fixed-point-ish iteration.
+                for _ in 0..reps {
+                    (bk.exp_affine_scale)(&mut buf, 0.1, -0.5, 1.0);
+                }
+                std::hint::black_box(buf[0]);
+            }),
+            n as f64,
+        ),
+        "softmax_row" => (
+            time_budget(&name, budget, || {
+                for _ in 0..reps {
+                    buf.copy_from_slice(&y0);
+                    (bk.softmax_row)(&mut buf);
+                }
+                std::hint::black_box(buf[0]);
+            }),
+            n as f64,
+        ),
+        other => unreachable!("unknown primitive {other}"),
+    };
+    (t, ops * reps as f64)
+}
+
+fn main() {
+    let smoke = std::env::var("SLAY_BENCH_SMOKE").is_ok();
+    let base_budget = if smoke {
+        Duration::from_millis(40)
+    } else {
+        Duration::from_millis(400)
+    };
+
+    let disp = kernels();
+    let scal = kernels_for(Backend::Scalar).expect("scalar table always exists");
+    let needed = if disp.name == "avx2" { 4.0 } else { 0.9 };
+
+    let mut table = Table::new(
+        &format!("SIMD microkernels: dispatched ({}) vs scalar", disp.name),
+        &["Op", "Shape", "scalar ms", "simd ms", "GFLOP/s", "speedup", "gate"],
+    );
+    let mut entries: Vec<Json> = Vec::new();
+    let mut failures: Vec<String> = Vec::new();
+
+    for s in GATES {
+        let flops = 2.0 * s.m as f64 * s.k as f64 * s.n as f64;
+        let mut attempts = 0usize;
+        let mut speedup = 0.0;
+        let (mut simd_ms, mut scal_ms) = (f64::INFINITY, f64::INFINITY);
+        while attempts < 3 {
+            let budget = base_budget * (1 << attempts);
+            // Interleave A/B/B/A and gate on per-mode best, like serve_obs.
+            let s0 = time_gemm(scal, s, budget);
+            let v0 = time_gemm(disp, s, budget);
+            let v1 = time_gemm(disp, s, budget);
+            let s1 = time_gemm(scal, s, budget);
+            scal_ms = scal_ms.min(s0.min_ms).min(s1.min_ms);
+            simd_ms = simd_ms.min(v0.min_ms).min(v1.min_ms);
+            speedup = scal_ms / simd_ms;
+            attempts += 1;
+            if speedup >= needed {
+                break;
+            }
+            eprintln!(
+                "microkernel: {} attempt {attempts}: speedup {speedup:.2}x < {needed:.1}x — \
+                 retrying with doubled budget",
+                s.op
+            );
+        }
+        let gflops_simd = flops / (simd_ms / 1e3) / 1e9;
+        let gflops_scal = flops / (scal_ms / 1e3) / 1e9;
+        let pass = speedup >= needed;
+        if !pass {
+            failures.push(format!(
+                "{}: {speedup:.2}x < {needed:.1}x (scalar {scal_ms:.3} ms, {} {simd_ms:.3} ms)",
+                s.op, disp.name
+            ));
+        }
+        table.row(vec![
+            s.op.to_string(),
+            format!("{}x{}x{}", s.m, s.k, s.n),
+            format!("{scal_ms:.3}"),
+            format!("{simd_ms:.3}"),
+            format!("{gflops_simd:.2}"),
+            format!("{speedup:.2}x"),
+            if pass { "pass".into() } else { "FAIL".into() },
+        ]);
+        let (lk, lv) = s.label;
+        for (mode, ms, gflops) in
+            [("simd", simd_ms, gflops_simd), ("scalar", scal_ms, gflops_scal)]
+        {
+            entries.push(Json::obj(vec![
+                ("op", Json::Str(s.op.to_string())),
+                ("mode", Json::Str(mode.to_string())),
+                (lk, Json::Num(lv as f64)),
+                ("min_ms", Json::Num(ms)),
+                ("gflops_per_s", Json::Num(gflops)),
+                ("speedup", Json::Num(speedup)),
+            ]));
+        }
+    }
+
+    // Ungated primitive rows (dispatched and scalar, for the record).
+    let prim_budget = base_budget / 4;
+    for (op, n, reps) in [
+        ("dot", 384, 2000),
+        ("axpy", 384, 2000),
+        ("exp_affine", 16384, 20),
+        ("softmax_row", 16384, 20),
+    ] {
+        let mut row_ms = Vec::new();
+        for (mode, bk) in [("simd", disp), ("scalar", scal)] {
+            let (t, ops) = time_prim(bk, op, n, reps, prim_budget);
+            let gflops = ops / (t.min_ms / 1e3) / 1e9;
+            row_ms.push(t.min_ms);
+            entries.push(Json::obj(vec![
+                ("op", Json::Str(op.to_string())),
+                ("mode", Json::Str(mode.to_string())),
+                ("l", Json::Num(n as f64)),
+                ("min_ms", Json::Num(t.min_ms)),
+                ("gflops_per_s", Json::Num(gflops)),
+            ]));
+        }
+        table.row(vec![
+            op.to_string(),
+            format!("n={n}"),
+            format!("{:.4}", row_ms[1]),
+            format!("{:.4}", row_ms[0]),
+            "—".into(),
+            format!("{:.2}x", row_ms[1] / row_ms[0]),
+            "info".into(),
+        ]);
+    }
+    table.print();
+
+    write_json(
+        "BENCH_simd.json",
+        &Json::obj(vec![
+            ("bench", Json::Str("microkernel".into())),
+            ("smoke", Json::Bool(smoke)),
+            ("backend", Json::Str(disp.name.to_string())),
+            ("gate_min_speedup", Json::Num(needed)),
+            ("gate_passed", Json::Bool(failures.is_empty())),
+            ("entries", Json::Arr(entries)),
+        ]),
+    )
+    .unwrap();
+
+    assert!(
+        failures.is_empty(),
+        "microkernel speedup gate failed on backend {}:\n  {}",
+        disp.name,
+        failures.join("\n  ")
+    );
+    println!(
+        "microkernel: backend {} >= {needed:.1}x scalar on all gated shapes — gate passed",
+        disp.name
+    );
+}

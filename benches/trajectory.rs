@@ -21,7 +21,8 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 /// Numeric leaves worth tracking across PRs — all higher-is-better rates.
-const THROUGHPUT_KEYS: &[&str] = &["tokens_per_s", "toks_per_s", "seqs_per_s", "mb_per_s"];
+const THROUGHPUT_KEYS: &[&str] =
+    &["tokens_per_s", "toks_per_s", "seqs_per_s", "mb_per_s", "gflops_per_s"];
 
 /// Identifying fields an entry object may carry, in label order.
 const LABEL_STRS: &[&str] = &["mechanism", "engine", "op", "mode"];

@@ -9,7 +9,16 @@
 #                                       test`'s reach)
 #   * cargo test -q                    (tier-1 bar; includes the
 #                                       counting-allocator guard in
-#                                       rust/tests/alloc_discipline.rs)
+#                                       rust/tests/alloc_discipline.rs and
+#                                       the SIMD-vs-scalar microkernel
+#                                       properties in
+#                                       rust/tests/simd_kernels.rs)
+#   * SLAY_SIMD=scalar cargo test -q   (x86_64 only: the whole suite again
+#                                       with dispatch forced to the scalar
+#                                       backend — every bit-identity /
+#                                       chaos / alloc invariant must hold
+#                                       under both resolved tables,
+#                                       ADR-010)
 #   * cargo clippy --all-targets -- -D warnings
 #   * cargo fmt --check                (hard gate since ADR-004)
 #   * SLAY_BENCH_SMOKE=1 fig2_scaling  (smoke-runs the scaling bench at
@@ -37,6 +46,12 @@
 #                                       tracing on must stay within 3% of
 #                                       recording off; asserts
 #                                       results/BENCH_obs.json lands)
+#   * SLAY_BENCH_SMOKE=1 microkernel   (SIMD dispatch speedup smoke,
+#                                       ADR-010: dispatched GEMMs must be
+#                                       >= 4x forced-scalar with AVX2
+#                                       resolved, no-regression elsewhere;
+#                                       asserts results/BENCH_simd.json
+#                                       lands)
 #   * chaos (armed)                    (ADR-008 fault-injection smoke: the
 #                                       fixed-seed SLAY_FAULTS plan below
 #                                       drives mixed traffic through worker
@@ -68,6 +83,15 @@ cargo build --release --benches
 
 echo "== cargo test -q =="
 env -u SLAY_FAULTS cargo test -q
+
+# ADR-010: on x86_64 the auto-resolved backend is AVX2 wherever the CPU
+# has it, so forcing scalar re-proves every invariant against the other
+# table. (aarch64 runs NEON above; scalar coverage there comes from the
+# in-process cross-backend property tests.)
+if [ "$(uname -m)" = "x86_64" ]; then
+  echo "== cargo test -q (SLAY_SIMD=scalar) =="
+  SLAY_SIMD=scalar env -u SLAY_FAULTS cargo test -q
+fi
 
 # The fixed-seed chaos plan. Keep in lockstep with DEFAULT_PLAN in
 # rust/tests/chaos.rs (the harness self-arms with the same string when
@@ -117,6 +141,11 @@ echo "== serve_obs smoke (tracing overhead <= 3% gate; emits BENCH_obs.json) =="
 rm -f "$RESULTS_DIR/BENCH_obs.json"
 SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench serve_obs
 test -f "$RESULTS_DIR/BENCH_obs.json" || { echo "BENCH_obs.json missing"; exit 1; }
+
+echo "== microkernel smoke (SIMD >= 4x scalar gate on AVX2; emits BENCH_simd.json) =="
+rm -f "$RESULTS_DIR/BENCH_simd.json"
+SLAY_BENCH_SMOKE=1 env -u SLAY_FAULTS cargo bench --bench microkernel
+test -f "$RESULTS_DIR/BENCH_simd.json" || { echo "BENCH_simd.json missing"; exit 1; }
 
 echo "== perf trajectory (appends BENCH_TRAJECTORY.json, diffs vs previous entry) =="
 env -u SLAY_FAULTS cargo bench --bench trajectory

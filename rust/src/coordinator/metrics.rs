@@ -202,6 +202,7 @@ impl Metrics {
             latency_p50_ms: self.obs.request.quantile_ms(50.0),
             latency_p95_ms: self.obs.request.quantile_ms(95.0),
             latency_mean_ms: self.obs.request.mean_ms(),
+            simd_backend: crate::math::simd::backend_name(),
         }
     }
 
@@ -258,6 +259,10 @@ pub struct Snapshot {
     pub latency_p50_ms: f64,
     pub latency_p95_ms: f64,
     pub latency_mean_ms: f64,
+    /// Resolved SIMD dispatch backend (`"scalar"|"avx2"|"neon"`, ADR-010) —
+    /// a label, not a number; exported as a JSON string and as a
+    /// Prometheus info-style gauge.
+    pub simd_backend: &'static str,
 }
 
 impl Snapshot {
@@ -325,6 +330,10 @@ impl Snapshot {
             latency_p50_ms,
             latency_p95_ms,
             latency_mean_ms,
+            // A string label, not a numeric series — exported by
+            // `to_json`/`prom::render` directly (the completeness test
+            // checks both).
+            simd_backend: _,
         } = *self;
         let counters = vec![
             ("submitted", submitted),
@@ -391,6 +400,7 @@ impl Snapshot {
             .map(|(k, v)| (k, Json::Num(v as f64)))
             .collect();
         fields.extend(gauges.into_iter().map(|(k, v)| (k, Json::Num(v))));
+        fields.push(("simd_backend", Json::Str(self.simd_backend.to_string())));
         Json::obj(fields)
     }
 }
@@ -517,10 +527,12 @@ mod tests {
             latency_p50_ms: _,
             latency_p95_ms: _,
             latency_mean_ms: _,
+            simd_backend: _,
         } = snap;
 
-        // 37 struct fields render as 31 counters + 8 gauges (the two
-        // derived means are gauge-only extras).
+        // 38 struct fields render as 31 counters + 8 gauges (the two
+        // derived means are gauge-only extras) plus the simd_backend
+        // string label, asserted in both formats below.
         let counters = snap.counter_fields();
         let gauges = snap.gauge_fields();
         assert_eq!(counters.len(), 31);
@@ -542,6 +554,18 @@ mod tests {
                 "Prometheus missing gauge {name}"
             );
         }
+        // the string-valued backend label appears in both formats too
+        assert_eq!(
+            json.get("simd_backend").and_then(|j| j.as_str()),
+            Some(snap.simd_backend)
+        );
+        assert!(
+            prom.contains(&format!(
+                "slay_simd_backend_info{{backend=\"{}\"}} 1",
+                snap.simd_backend
+            )),
+            "Prometheus missing simd_backend info metric"
+        );
         // and the nested stage object rides along in the full JSON
         assert!(json.get("stages").is_some());
     }

@@ -41,10 +41,9 @@ use crate::math::linalg::{
 pub fn colsum_into<'a>(m: impl Into<MatView<'a>>, r0: usize, r1: usize, z: &mut [f32]) {
     let m = m.into();
     debug_assert!(r1 <= m.rows() && z.len() == m.cols());
+    let add = crate::math::simd::kernels().add_assign;
     for r in r0..r1 {
-        for (zi, &x) in z.iter_mut().zip(m.row(r)) {
-            *zi += x;
-        }
+        add(m.row(r), z);
     }
 }
 

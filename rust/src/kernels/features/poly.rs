@@ -109,10 +109,9 @@ impl FeatureMap for Anchor {
 
     fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
         matmul_a_bt_into(x, self.anchors.view(), out.reborrow()); // L × P of xᵀaᵢ
+        let square = crate::math::simd::kernels().square_scale;
         for r in 0..out.rows() {
-            for v in out.row_mut(r).iter_mut() {
-                *v = *v * *v * self.scale;
-            }
+            square(out.row_mut(r), self.scale);
         }
     }
 }

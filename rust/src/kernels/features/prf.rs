@@ -13,6 +13,7 @@
 use super::FeatureMap;
 use crate::math::linalg::{matmul_a_bt_into, Mat, MatView, MatViewMut};
 use crate::math::rng::Rng;
+use crate::math::simd;
 
 /// Positive random features for the spherical exponential kernel at scale
 /// `s` (Eq. 9). **Unbiased only for unit-norm inputs** (Prop. 2) — the SLAY
@@ -50,10 +51,9 @@ impl FeatureMap for Prf {
         let sqrt2s = (2.0 * self.s).sqrt() as f32;
         let s = self.s as f32;
         matmul_a_bt_into(x, self.omega.view(), out.reborrow()); // L × D of ωᵢᵀu
+        let exp = simd::kernels().exp_affine_scale;
         for r in 0..out.rows() {
-            for v in out.row_mut(r).iter_mut() {
-                *v = (sqrt2s * *v - s).exp() * self.scale;
-            }
+            exp(out.row_mut(r), sqrt2s, -s, self.scale);
         }
     }
 }
@@ -92,11 +92,10 @@ impl FeatureMap for FavorSoftmax {
         // correction uses ‖u/d^{1/4}‖² = ‖u‖²/√d straight off the raw row.
         let inv_sqrt_d = 1.0 / (x.cols() as f32).sqrt();
         matmul_a_bt_into(x, self.omega.view(), out.reborrow());
+        let exp = simd::kernels().exp_affine_scale;
         for r in 0..out.rows() {
             let n2: f32 = x.row(r).iter().map(|v| v * v).sum::<f32>() * inv_sqrt_d;
-            for v in out.row_mut(r).iter_mut() {
-                *v = (*v - 0.5 * n2).exp() * self.scale;
-            }
+            exp(out.row_mut(r), 1.0, -0.5 * n2, self.scale);
         }
     }
 }
@@ -129,10 +128,9 @@ impl FeatureMap for FavorRelu {
 
     fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
         matmul_a_bt_into(x, self.omega.view(), out.reborrow());
+        let relu = simd::kernels().relu_scale;
         for r in 0..out.rows() {
-            for v in out.row_mut(r).iter_mut() {
-                *v = v.max(0.0) * self.scale;
-            }
+            relu(out.row_mut(r), self.scale);
         }
     }
 }
@@ -149,15 +147,6 @@ impl EluPlusOne {
     }
 }
 
-#[inline]
-fn elu_plus_one(x: f32) -> f32 {
-    if x > 0.0 {
-        x + 1.0
-    } else {
-        x.exp() // exp(x) − 1 + 1
-    }
-}
-
 impl FeatureMap for EluPlusOne {
     fn input_dim(&self) -> usize {
         self.d
@@ -168,10 +157,10 @@ impl FeatureMap for EluPlusOne {
     }
 
     fn map_into(&self, x: MatView, _pos0: usize, mut out: MatViewMut) {
+        // out[i] = elu(x[i]) + 1, i.e. x+1 for x>0 and exp(x) below.
+        let elu = simd::kernels().elu_plus_one;
         for r in 0..x.rows() {
-            for (o, &v) in out.row_mut(r).iter_mut().zip(x.row(r)) {
-                *o = elu_plus_one(v);
-            }
+            elu(x.row(r), out.row_mut(r));
         }
     }
 }
@@ -313,7 +302,8 @@ mod tests {
         assert!((f.get(0, 1) - 1.0).abs() < 1e-6); // elu(0)+1 = 1
         assert!((f.get(0, 2) - 6.0).abs() < 1e-6); // x+1 for x>0
         // continuity at 0
-        assert!((elu_plus_one(1e-6) - elu_plus_one(-1e-6)).abs() < 1e-5);
+        let eps = m.map(Mat::from_vec(1, 3, vec![1e-6, -1e-6, 0.0]).view(), 0);
+        assert!((eps.get(0, 0) - eps.get(0, 1)).abs() < 1e-5);
     }
 
     #[test]

@@ -1352,9 +1352,7 @@ impl QuadraticBackend {
                 // stored keys are pre-scaled by 1/√d, so the dot IS the logit
                 scores.extend((0..win.rows).map(|j| dot(q, win.key(j))));
                 let mx = scores.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-                for x in scores.iter_mut() {
-                    *x = (*x - mx).exp();
-                }
+                (crate::math::simd::kernels().exp_affine_scale)(scores, 1.0, -mx, 1.0);
             }
             Mechanism::Yat { eps } => {
                 let eps = *eps as f32;

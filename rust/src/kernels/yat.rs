@@ -73,12 +73,11 @@ pub fn softmax_scores<'a, 'b>(q: impl Into<MatView<'a>>, k: impl Into<MatView<'b
     let scale = 1.0 / (q.cols() as f32).sqrt();
     let mut s = crate::math::linalg::matmul_a_bt(q, k);
     // stabilized per-row: subtract row max before exp (cancels in the ratio)
+    let exp = crate::math::simd::kernels().exp_affine_scale;
     for i in 0..s.rows {
         let row = s.row_mut(i);
         let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max) * scale;
-        for x in row.iter_mut() {
-            *x = (*x * scale - mx).exp();
-        }
+        exp(row, scale, -mx, 1.0);
     }
     s
 }
@@ -97,13 +96,12 @@ pub fn softmax_scores_causal<'a, 'b>(
     let q = q.into();
     let scale = 1.0 / (q.cols() as f32).sqrt();
     let mut s = crate::math::linalg::matmul_a_bt(q, k);
+    let exp = crate::math::simd::kernels().exp_affine_scale;
     for i in 0..s.rows {
         let row = s.row_mut(i);
         let lim = (i + 1).min(row.len());
         let mx = row[..lim].iter().copied().fold(f32::NEG_INFINITY, f32::max) * scale;
-        for x in row.iter_mut() {
-            *x = (*x * scale - mx).exp();
-        }
+        exp(row, scale, -mx, 1.0);
     }
     s
 }

@@ -33,6 +33,8 @@
 
 use std::marker::PhantomData;
 
+use crate::math::simd;
+
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
@@ -252,6 +254,14 @@ impl<'a> MatView<'a> {
         self.row_stride == self.cols
     }
 
+    /// Base pointer for the SIMD kernels (row `r`, col `c` lives at
+    /// `ptr + r*row_stride + c`). Provenance covers the whole backing
+    /// buffer, so kernels may address any in-bounds element from it.
+    #[inline]
+    pub(crate) fn base_ptr(&self) -> *const f32 {
+        self.ptr
+    }
+
     /// Row `r` as a slice. The returned borrow lives as long as the
     /// underlying buffer, not just this view value.
     #[inline]
@@ -420,6 +430,14 @@ impl<'a> MatViewMut<'a> {
     #[inline]
     pub fn row_stride(&self) -> usize {
         self.row_stride
+    }
+
+    /// Mutable base pointer for the SIMD kernels (same addressing rule as
+    /// [`MatView::base_ptr`]; rows are element-disjoint since
+    /// `row_stride ≥ cols`).
+    #[inline]
+    pub(crate) fn base_ptr_mut(&mut self) -> *mut f32 {
+        self.ptr
     }
 
     /// Mutable row `r`. Borrows `self` exclusively, so only one row slice
@@ -609,48 +627,24 @@ fn best_fit<T: Clone + Default>(pool: &mut Vec<Vec<T>>, len: usize) -> Vec<T> {
 // Kernels
 // ---------------------------------------------------------------------------
 
-/// Dot product of two slices (f32 accumulate, unrolled by the compiler).
+/// Dot product of two slices — dispatched to the resolved SIMD backend
+/// (ADR-010).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc0 += a[j] * b[j];
-        acc1 += a[j + 1] * b[j + 1];
-        acc2 += a[j + 2] * b[j + 2];
-        acc3 += a[j + 3] * b[j + 3];
-    }
-    let mut acc = acc0 + acc1 + acc2 + acc3;
-    for j in chunks * 4..a.len() {
-        acc += a[j] * b[j];
-    }
-    acc
+    (simd::kernels().dot)(a, b)
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x` — dispatched to the resolved SIMD backend.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * xi;
-    }
+    (simd::kernels().axpy)(alpha, x, y)
 }
 
-/// Squared L2 distance between two slices.
+/// Squared L2 distance between two slices — dispatched to the resolved
+/// SIMD backend.
 #[inline]
 pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0.0f32;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        acc += d * d;
-    }
-    acc
+    (simd::kernels().sq_dist)(a, b)
 }
 
 /// Problem-size floor (in multiply-accumulate flops) below which the
@@ -741,23 +735,10 @@ pub fn matmul_serial_into(a: MatView, b: MatView, out: MatViewMut) {
     matmul_stripe(a, b, out);
 }
 
-/// One row stripe of `A·B` into `out` (same row count as `a`).
-fn matmul_stripe(a: MatView, b: MatView, mut out: MatViewMut) {
-    let k_dim = a.cols();
-    const KB: usize = 64; // k-blocking keeps the B panel in L1/L2
-    out.fill_zero();
-    for kb in (0..k_dim).step_by(KB) {
-        let k_end = (kb + KB).min(k_dim);
-        for i in 0..a.rows() {
-            let a_row = a.row(i);
-            let c_row = out.row_mut(i);
-            for (k, &aik) in a_row.iter().enumerate().take(k_end).skip(kb) {
-                if aik != 0.0 {
-                    axpy(aik, b.row(k), c_row);
-                }
-            }
-        }
-    }
+/// One row stripe of `A·B` into `out` (same row count as `a`) —
+/// dispatched to the resolved backend's register-blocked packed GEMM.
+fn matmul_stripe(a: MatView, b: MatView, out: MatViewMut) {
+    (simd::kernels().gemm_nn)(a, b, out)
 }
 
 /// `C = Aᵀ · B` without materializing the transpose (A: k×m, B: k×n → m×n),
@@ -817,17 +798,11 @@ pub fn matmul_at_b_acc_serial(a: MatView, b: MatView, out: MatViewMut) {
     at_b_acc_stripe(a, b, 0, out);
 }
 
-/// Accumulate output rows `[c0, c0 + out.rows())` of `AᵀB` into `out`.
-fn at_b_acc_stripe(a: MatView, b: MatView, c0: usize, mut out: MatViewMut) {
-    for k in 0..a.rows() {
-        let a_row = &a.row(k)[c0..c0 + out.rows()];
-        let b_row = b.row(k);
-        for (i, &aik) in a_row.iter().enumerate() {
-            if aik != 0.0 {
-                axpy(aik, b_row, out.row_mut(i));
-            }
-        }
-    }
+/// Accumulate output rows `[c0, c0 + out.rows())` of `AᵀB` into `out` —
+/// dispatched; per-element accumulation chains root at the existing
+/// output values and walk k sequentially, so striping stays invisible.
+fn at_b_acc_stripe(a: MatView, b: MatView, c0: usize, out: MatViewMut) {
+    (simd::kernels().gemm_tn_acc)(a, b, c0, out)
 }
 
 /// `C = A · Bᵀ` (A: m×k, B: n×k → m×n) — rows of both operands are
@@ -884,46 +859,28 @@ pub fn matmul_a_bt_serial_into(a: MatView, b: MatView, out: MatViewMut) {
     a_bt_stripe(a, b, out);
 }
 
-fn a_bt_stripe(a: MatView, b: MatView, mut out: MatViewMut) {
-    for i in 0..a.rows() {
-        let ar = a.row(i);
-        let orow = out.row_mut(i);
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o = dot(ar, b.row(j));
-        }
-    }
+fn a_bt_stripe(a: MatView, b: MatView, out: MatViewMut) {
+    (simd::kernels().gemm_nt)(a, b, out)
 }
 
 /// Row-wise softmax in place (numerically stabilized). Accepts `&mut Mat`
-/// or any strided mutable view.
+/// or any strided mutable view. Per-row dispatched kernel (vectorized
+/// max/exp/sum on SIMD backends), so row order never matters.
 pub fn softmax_rows<'a>(m: impl Into<MatViewMut<'a>>) {
     let mut m = m.into();
+    let k = simd::kernels();
     for r in 0..m.rows() {
-        let row = m.row_mut(r);
-        let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0f32;
-        for x in row.iter_mut() {
-            *x = (*x - mx).exp();
-            sum += *x;
-        }
-        let inv = 1.0 / sum;
-        for x in row.iter_mut() {
-            *x *= inv;
-        }
+        (k.softmax_row)(m.row_mut(r));
     }
 }
 
 /// Row-wise normalization by row sums with stabilizer δ (kernel
-/// normalization of Eq. 11 — *not* a softmax).
+/// normalization of Eq. 11 — *not* a softmax). Per-row dispatched kernel.
 pub fn normalize_rows_by_sum<'a>(m: impl Into<MatViewMut<'a>>, delta: f32) {
     let mut m = m.into();
+    let k = simd::kernels();
     for r in 0..m.rows() {
-        let row = m.row_mut(r);
-        let sum: f32 = row.iter().sum();
-        let inv = 1.0 / (sum + delta);
-        for x in row.iter_mut() {
-            *x *= inv;
-        }
+        (k.normalize_row_sum)(m.row_mut(r), delta);
     }
 }
 

@@ -7,4 +7,5 @@ pub mod fft;
 pub mod linalg;
 pub mod quadrature;
 pub mod rng;
+pub mod simd;
 pub mod stats;

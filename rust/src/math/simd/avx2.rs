@@ -1,0 +1,734 @@
+//! AVX2+FMA backend (ADR-010).
+//!
+//! Safety model: every intrinsic-bearing function carries
+//! `#[target_feature(enable = "avx2", enable = "fma")]` and is
+//! module-private; the safe wrapper functions below are the only entry
+//! points and are installed into the dispatch table exclusively after
+//! `is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")`
+//! (see `kernels_for` in `mod.rs`), so the CPU contract holds whenever
+//! they can be reached.
+//!
+//! Determinism rules (the bit-identity contract, ADR-010):
+//! * every output element is one accumulator chain, sequential over k,
+//!   rooted at `0.0` (`gemm_nn`/`gemm_nt`/`dot`) or at the initial output
+//!   value (`gemm_tn_acc`/`axpy`) — independent of row striping, i/j
+//!   tiling and view alignment (all loads are unaligned `loadu`);
+//! * fused multiply-add everywhere: vector lanes use `fmadd`, scalar
+//!   remainders use `f32::mul_add`, which is the same IEEE operation per
+//!   element — so remainder lanes and vector lanes of different kernel
+//!   widths agree bit-for-bit;
+//! * `gemm_nt` produces each element through exactly the chain [`dot`]
+//!   walks, so mapping a batch of feature rows (fused decode) and mapping
+//!   one row at a time (sequential decode) are bit-identical;
+//! * the vector `exp` lanes mirror [`super::expf::exp_ps`] operation for
+//!   operation (tested exactly in `rust/tests/simd_kernels.rs`).
+
+#![allow(clippy::needless_range_loop)]
+
+use core::arch::x86_64::*;
+
+use super::expf::{self, exp_ps};
+use super::with_pack;
+use crate::math::linalg::{MatView, MatViewMut};
+
+/// Rows per packed A micro-panel (the classic 6×16 f32 AVX2 microkernel:
+/// 12 accumulator registers + 2 B lanes + 1 broadcast = 15 of 16 ymm).
+const MR: usize = 6;
+
+// ---------------------------------------------------------------------------
+// Safe wrappers — the dispatch-table entries.
+// ---------------------------------------------------------------------------
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: only reachable when avx2+fma were detected (module contract).
+    unsafe { dot_impl(a.as_ptr(), b.as_ptr(), a.len()) }
+}
+
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { axpy_impl(alpha, x.as_ptr(), y.as_mut_ptr(), x.len()) }
+}
+
+pub fn add_assign(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { add_assign_impl(x.as_ptr(), y.as_mut_ptr(), x.len()) }
+}
+
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: as above.
+    unsafe { sq_dist_impl(a.as_ptr(), b.as_ptr(), a.len()) }
+}
+
+pub fn gemm_nn(a: MatView, b: MatView, mut out: MatViewMut) {
+    if a.cols() == 0 {
+        out.fill_zero();
+        return;
+    }
+    if out.rows() == 0 || out.cols() == 0 {
+        return;
+    }
+    // SAFETY: as above; shapes pre-checked by the linalg entry points.
+    with_pack(MR * a.cols(), |pack| unsafe { gemm_nn_impl(&a, &b, pack, &mut out) })
+}
+
+pub fn gemm_tn_acc(a: MatView, b: MatView, c0: usize, mut out: MatViewMut) {
+    if a.rows() == 0 || out.rows() == 0 || out.cols() == 0 {
+        return;
+    }
+    // SAFETY: as above.
+    with_pack(MR * a.rows(), |pack| unsafe { gemm_tn_impl(&a, &b, c0, pack, &mut out) })
+}
+
+pub fn gemm_nt(a: MatView, b: MatView, mut out: MatViewMut) {
+    if out.rows() == 0 || out.cols() == 0 {
+        return;
+    }
+    // SAFETY: as above.
+    unsafe { gemm_nt_impl(&a, &b, &mut out) }
+}
+
+pub fn softmax_row(row: &mut [f32]) {
+    // SAFETY: as above.
+    unsafe { softmax_row_impl(row) }
+}
+
+pub fn normalize_row_sum(row: &mut [f32], delta: f32) {
+    // SAFETY: as above.
+    unsafe { normalize_row_sum_impl(row, delta) }
+}
+
+pub fn exp_affine_scale(xs: &mut [f32], a: f32, b: f32, scale: f32) {
+    // SAFETY: as above.
+    unsafe { exp_affine_scale_impl(xs, a, b, scale) }
+}
+
+pub fn relu_scale(xs: &mut [f32], scale: f32) {
+    // SAFETY: as above.
+    unsafe { relu_scale_impl(xs, scale) }
+}
+
+pub fn square_scale(xs: &mut [f32], scale: f32) {
+    // SAFETY: as above.
+    unsafe { square_scale_impl(xs, scale) }
+}
+
+pub fn elu_plus_one(xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    // SAFETY: as above.
+    unsafe { elu_plus_one_impl(xs, out) }
+}
+
+// ---------------------------------------------------------------------------
+// Reductions
+// ---------------------------------------------------------------------------
+
+/// Fixed-order horizontal sum: (lo+hi) 4-wide, fold halves, fold pair.
+/// Every kernel that reduces a ymm register uses this exact tree so equal
+/// lane contents always reduce to the identical scalar.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[inline]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+#[inline]
+unsafe fn hmax8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps::<1>(v);
+    let s = _mm_max_ps(lo, hi);
+    let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_max_ss(s, _mm_shuffle_ps::<0b01>(s, s));
+    _mm_cvtss_f32(s)
+}
+
+// ---------------------------------------------------------------------------
+// Vector kernels
+// ---------------------------------------------------------------------------
+
+/// Canonical dot chain: two lane accumulators over 16-element steps, one
+/// 8-wide cleanup step, fixed-order horizontal sum, `mul_add` scalar tail.
+/// `gemm_nt` replicates this chain per output element — keep in lockstep.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot_impl(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut k = 0usize;
+    while k + 16 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc0);
+        acc1 = _mm256_fmadd_ps(
+            _mm256_loadu_ps(a.add(k + 8)),
+            _mm256_loadu_ps(b.add(k + 8)),
+            acc1,
+        );
+        k += 16;
+    }
+    if k + 8 <= n {
+        acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)), acc0);
+        k += 8;
+    }
+    let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+    while k < n {
+        s = (*a.add(k)).mul_add(*b.add(k), s);
+        k += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn axpy_impl(alpha: f32, x: *const f32, y: *mut f32, n: usize) {
+    let av = _mm256_set1_ps(alpha);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let yv = _mm256_fmadd_ps(av, _mm256_loadu_ps(x.add(k)), _mm256_loadu_ps(y.add(k)));
+        _mm256_storeu_ps(y.add(k), yv);
+        k += 8;
+    }
+    while k < n {
+        *y.add(k) = alpha.mul_add(*x.add(k), *y.add(k));
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn add_assign_impl(x: *const f32, y: *mut f32, n: usize) {
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let yv = _mm256_add_ps(_mm256_loadu_ps(y.add(k)), _mm256_loadu_ps(x.add(k)));
+        _mm256_storeu_ps(y.add(k), yv);
+        k += 8;
+    }
+    while k < n {
+        *y.add(k) += *x.add(k);
+        k += 1;
+    }
+}
+
+/// Mirrors the [`dot_impl`] chain with `d = a − b`, `acc += d·d`.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn sq_dist_impl(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = _mm256_setzero_ps();
+    let mut acc1 = _mm256_setzero_ps();
+    let mut k = 0usize;
+    while k + 16 <= n {
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)));
+        let d1 = _mm256_sub_ps(_mm256_loadu_ps(a.add(k + 8)), _mm256_loadu_ps(b.add(k + 8)));
+        acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+        acc1 = _mm256_fmadd_ps(d1, d1, acc1);
+        k += 16;
+    }
+    if k + 8 <= n {
+        let d0 = _mm256_sub_ps(_mm256_loadu_ps(a.add(k)), _mm256_loadu_ps(b.add(k)));
+        acc0 = _mm256_fmadd_ps(d0, d0, acc0);
+        k += 8;
+    }
+    let mut s = hsum8(_mm256_add_ps(acc0, acc1));
+    while k < n {
+        let d = *a.add(k) - *b.add(k);
+        s = d.mul_add(d, s);
+        k += 1;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Packed GEMM (nn and tn share the microkernels; `LOAD_C` selects whether
+// the accumulator chain roots at 0 — `C = A·B` — or at the existing output
+// — `C += AᵀB`).
+// ---------------------------------------------------------------------------
+
+/// 6×16 register-blocked microkernel over a k-major packed A panel
+/// (`pack[kk*MR + r]`) and 16 consecutive B columns at `bp`.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk6x16<const LOAD_C: bool>(
+    kc: usize,
+    pack: *const f32,
+    bp: *const f32,
+    bs: usize,
+    c: &[*mut f32; MR],
+) {
+    let mut acc = [[_mm256_setzero_ps(); 2]; MR];
+    if LOAD_C {
+        for r in 0..MR {
+            acc[r][0] = _mm256_loadu_ps(c[r]);
+            acc[r][1] = _mm256_loadu_ps(c[r].add(8));
+        }
+    }
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_ps(bp.add(kk * bs));
+        let b1 = _mm256_loadu_ps(bp.add(kk * bs + 8));
+        let pk = pack.add(kk * MR);
+        for r in 0..MR {
+            let av = _mm256_broadcast_ss(&*pk.add(r));
+            acc[r][0] = _mm256_fmadd_ps(av, b0, acc[r][0]);
+            acc[r][1] = _mm256_fmadd_ps(av, b1, acc[r][1]);
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_ps(c[r], acc[r][0]);
+        _mm256_storeu_ps(c[r].add(8), acc[r][1]);
+    }
+}
+
+/// 6×8 column-tail variant of [`mk6x16`].
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn mk6x8<const LOAD_C: bool>(
+    kc: usize,
+    pack: *const f32,
+    bp: *const f32,
+    bs: usize,
+    c: &[*mut f32; MR],
+) {
+    let mut acc = [_mm256_setzero_ps(); MR];
+    if LOAD_C {
+        for r in 0..MR {
+            acc[r] = _mm256_loadu_ps(c[r]);
+        }
+    }
+    for kk in 0..kc {
+        let b0 = _mm256_loadu_ps(bp.add(kk * bs));
+        let pk = pack.add(kk * MR);
+        for r in 0..MR {
+            acc[r] = _mm256_fmadd_ps(_mm256_broadcast_ss(&*pk.add(r)), b0, acc[r]);
+        }
+    }
+    for r in 0..MR {
+        _mm256_storeu_ps(c[r], acc[r]);
+    }
+}
+
+/// Full j-sweep (16-wide, 8-wide, scalar-`mul_add` tail) for one packed
+/// panel of `MR` A rows. `c` holds the six output-row base pointers.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn panel6<const LOAD_C: bool>(
+    kc: usize,
+    pack: *const f32,
+    bp: *const f32,
+    bs: usize,
+    c: &[*mut f32; MR],
+    n: usize,
+) {
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let cj = [
+            c[0].add(j),
+            c[1].add(j),
+            c[2].add(j),
+            c[3].add(j),
+            c[4].add(j),
+            c[5].add(j),
+        ];
+        mk6x16::<LOAD_C>(kc, pack, bp.add(j), bs, &cj);
+        j += 16;
+    }
+    if j + 8 <= n {
+        let cj = [
+            c[0].add(j),
+            c[1].add(j),
+            c[2].add(j),
+            c[3].add(j),
+            c[4].add(j),
+            c[5].add(j),
+        ];
+        mk6x8::<LOAD_C>(kc, pack, bp.add(j), bs, &cj);
+        j += 8;
+    }
+    while j < n {
+        for r in 0..MR {
+            let mut s = if LOAD_C { *c[r].add(j) } else { 0.0 };
+            for kk in 0..kc {
+                s = (*pack.add(kk * MR + r)).mul_add(*bp.add(kk * bs + j), s);
+            }
+            *c[r].add(j) = s;
+        }
+        j += 1;
+    }
+}
+
+/// Single-row kernel (`1×16`, `1×8`, scalar tail) for the `rows % MR`
+/// remainder; `ar` is a contiguous k-vector (an A row, or a packed A
+/// column for the tn case). Per-element chains match [`panel6`] exactly.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn panel1<const LOAD_C: bool>(
+    kc: usize,
+    ar: *const f32,
+    bp: *const f32,
+    bs: usize,
+    co: *mut f32,
+    n: usize,
+) {
+    let mut j = 0usize;
+    while j + 16 <= n {
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        if LOAD_C {
+            acc0 = _mm256_loadu_ps(co.add(j));
+            acc1 = _mm256_loadu_ps(co.add(j + 8));
+        }
+        for kk in 0..kc {
+            let av = _mm256_broadcast_ss(&*ar.add(kk));
+            acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(bp.add(kk * bs + j)), acc0);
+            acc1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(bp.add(kk * bs + j + 8)), acc1);
+        }
+        _mm256_storeu_ps(co.add(j), acc0);
+        _mm256_storeu_ps(co.add(j + 8), acc1);
+        j += 16;
+    }
+    if j + 8 <= n {
+        let mut acc0 = _mm256_setzero_ps();
+        if LOAD_C {
+            acc0 = _mm256_loadu_ps(co.add(j));
+        }
+        for kk in 0..kc {
+            let av = _mm256_broadcast_ss(&*ar.add(kk));
+            acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(bp.add(kk * bs + j)), acc0);
+        }
+        _mm256_storeu_ps(co.add(j), acc0);
+        j += 8;
+    }
+    while j < n {
+        let mut s = if LOAD_C { *co.add(j) } else { 0.0 };
+        for kk in 0..kc {
+            s = (*ar.add(kk)).mul_add(*bp.add(kk * bs + j), s);
+        }
+        *co.add(j) = s;
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gemm_nn_impl(a: &MatView, b: &MatView, pack: &mut [f32], out: &mut MatViewMut) {
+    let (m, kd, n) = (a.rows(), a.cols(), b.cols());
+    let (ap, astride) = (a.base_ptr(), a.row_stride());
+    let (bp, bs) = (b.base_ptr(), b.row_stride());
+    let ostride = out.row_stride();
+    let op = out.base_ptr_mut();
+    let pp = pack.as_mut_ptr();
+    let mut i = 0usize;
+    while i + MR <= m {
+        // Pack MR rows of A k-major: pack[kk*MR + r] = a[i+r][kk].
+        for r in 0..MR {
+            let arow = ap.add((i + r) * astride);
+            for kk in 0..kd {
+                *pp.add(kk * MR + r) = *arow.add(kk);
+            }
+        }
+        let c = [
+            op.add(i * ostride),
+            op.add((i + 1) * ostride),
+            op.add((i + 2) * ostride),
+            op.add((i + 3) * ostride),
+            op.add((i + 4) * ostride),
+            op.add((i + 5) * ostride),
+        ];
+        panel6::<false>(kd, pp, bp, bs, &c, n);
+        i += MR;
+    }
+    while i < m {
+        panel1::<false>(kd, ap.add(i * astride), bp, bs, op.add(i * ostride), n);
+        i += 1;
+    }
+}
+
+/// Accumulate output rows `[c0, c0 + out.rows())` of `AᵀB` into `out`.
+/// A is k×(m_total); output row `i` is A column `c0+i`, packed k-major
+/// into the same panel layout `gemm_nn` uses.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gemm_tn_impl(
+    a: &MatView,
+    b: &MatView,
+    c0: usize,
+    pack: &mut [f32],
+    out: &mut MatViewMut,
+) {
+    let (kd, m, n) = (a.rows(), out.rows(), out.cols());
+    let (ap, astride) = (a.base_ptr(), a.row_stride());
+    let (bp, bs) = (b.base_ptr(), b.row_stride());
+    let ostride = out.row_stride();
+    let op = out.base_ptr_mut();
+    let pp = pack.as_mut_ptr();
+    let mut i = 0usize;
+    while i + MR <= m {
+        // Transpose-pack MR columns of A: pack[kk*MR + r] = a[kk][c0+i+r]
+        // (contiguous 6-float reads per k row, contiguous panel writes).
+        for kk in 0..kd {
+            let src = ap.add(kk * astride + c0 + i);
+            let dst = pp.add(kk * MR);
+            for r in 0..MR {
+                *dst.add(r) = *src.add(r);
+            }
+        }
+        let c = [
+            op.add(i * ostride),
+            op.add((i + 1) * ostride),
+            op.add((i + 2) * ostride),
+            op.add((i + 3) * ostride),
+            op.add((i + 4) * ostride),
+            op.add((i + 5) * ostride),
+        ];
+        panel6::<true>(kd, pp, bp, bs, &c, n);
+        i += MR;
+    }
+    while i < m {
+        // Pack the single A column c0+i into a contiguous k-vector.
+        for kk in 0..kd {
+            *pp.add(kk) = *ap.add(kk * astride + c0 + i);
+        }
+        panel1::<true>(kd, pp, bp, bs, op.add(i * ostride), n);
+        i += 1;
+    }
+}
+
+/// `C = A·Bᵀ`: each element is the [`dot_impl`] chain of an A row with a
+/// B row; a 4-wide j-block shares the A loads, replicating that chain per
+/// j so blocked and single-element paths agree bit-for-bit.
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn gemm_nt_impl(a: &MatView, b: &MatView, out: &mut MatViewMut) {
+    let (m, kd, nj) = (a.rows(), a.cols(), b.rows());
+    let (ap, astride) = (a.base_ptr(), a.row_stride());
+    let (bp, bs) = (b.base_ptr(), b.row_stride());
+    let ostride = out.row_stride();
+    let op = out.base_ptr_mut();
+    for i in 0..m {
+        let ar = ap.add(i * astride);
+        let orow = op.add(i * ostride);
+        let mut j = 0usize;
+        while j + 4 <= nj {
+            dot4(
+                ar,
+                [
+                    bp.add(j * bs),
+                    bp.add((j + 1) * bs),
+                    bp.add((j + 2) * bs),
+                    bp.add((j + 3) * bs),
+                ],
+                kd,
+                orow.add(j),
+            );
+            j += 4;
+        }
+        while j < nj {
+            *orow.add(j) = dot_impl(ar, bp.add(j * bs), kd);
+            j += 1;
+        }
+    }
+}
+
+/// Four [`dot_impl`] chains sharing the A loads (2 accumulators each →
+/// 8 live ymm registers plus 2 A lanes).
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot4(a: *const f32, b: [*const f32; 4], n: usize, out: *mut f32) {
+    let mut acc0 = [_mm256_setzero_ps(); 4];
+    let mut acc1 = [_mm256_setzero_ps(); 4];
+    let mut k = 0usize;
+    while k + 16 <= n {
+        let a0 = _mm256_loadu_ps(a.add(k));
+        let a1 = _mm256_loadu_ps(a.add(k + 8));
+        for l in 0..4 {
+            acc0[l] = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b[l].add(k)), acc0[l]);
+            acc1[l] = _mm256_fmadd_ps(a1, _mm256_loadu_ps(b[l].add(k + 8)), acc1[l]);
+        }
+        k += 16;
+    }
+    if k + 8 <= n {
+        let a0 = _mm256_loadu_ps(a.add(k));
+        for l in 0..4 {
+            acc0[l] = _mm256_fmadd_ps(a0, _mm256_loadu_ps(b[l].add(k)), acc0[l]);
+        }
+        k += 8;
+    }
+    for l in 0..4 {
+        let mut s = hsum8(_mm256_add_ps(acc0[l], acc1[l]));
+        let mut kk = k;
+        while kk < n {
+            s = (*a.add(kk)).mul_add(*b[l].add(kk), s);
+            kk += 1;
+        }
+        *out.add(l) = s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row ops (feature maps, softmax, normalization)
+// ---------------------------------------------------------------------------
+
+/// Vector mirror of [`exp_ps`] — operation-for-operation identical per
+/// lane (see the bit-identity test in `rust/tests/simd_kernels.rs`).
+#[target_feature(enable = "avx2", enable = "fma")]
+#[inline]
+unsafe fn exp256(x: __m256) -> __m256 {
+    let nan_mask = _mm256_cmp_ps::<_CMP_UNORD_Q>(x, x);
+    let zero_mask = _mm256_cmp_ps::<_CMP_LT_OQ>(x, _mm256_set1_ps(expf::EXP_LO));
+    let xc = _mm256_min_ps(x, _mm256_set1_ps(expf::EXP_HI));
+    // n = floor(xc·log2e + 0.5) — plain mul+add, matching the scalar mirror.
+    let n = _mm256_floor_ps(_mm256_add_ps(
+        _mm256_mul_ps(xc, _mm256_set1_ps(expf::LOG2EF)),
+        _mm256_set1_ps(0.5),
+    ));
+    // r = xc − n·ln2_hi − n·ln2_lo (fnmadd ≡ (−n).mul_add(c, ·) per IEEE).
+    let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(expf::LN2_HI), xc);
+    let r = _mm256_fnmadd_ps(n, _mm256_set1_ps(expf::LN2_LO), r);
+    let mut p = _mm256_set1_ps(expf::POLY[0]);
+    for &c in &expf::POLY[1..] {
+        p = _mm256_fmadd_ps(p, r, _mm256_set1_ps(c));
+    }
+    let y = _mm256_fmadd_ps(p, _mm256_mul_ps(r, r), _mm256_add_ps(r, _mm256_set1_ps(1.0)));
+    // 2^n through the exponent field (n ∈ [−126, 127] inside the clamp;
+    // lanes outside are discarded by the masks below).
+    let pow2 = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_add_epi32(
+        _mm256_cvtps_epi32(n),
+        _mm256_set1_epi32(127),
+    )));
+    let res = _mm256_mul_ps(y, pow2);
+    let res = _mm256_andnot_ps(zero_mask, res);
+    _mm256_blendv_ps(res, x, nan_mask)
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn exp_affine_scale_impl(xs: &mut [f32], a: f32, b: f32, scale: f32) {
+    let (p, n) = (xs.as_mut_ptr(), xs.len());
+    let av = _mm256_set1_ps(a);
+    let bv = _mm256_set1_ps(b);
+    let sv = _mm256_set1_ps(scale);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let t = _mm256_fmadd_ps(av, _mm256_loadu_ps(p.add(k)), bv);
+        _mm256_storeu_ps(p.add(k), _mm256_mul_ps(exp256(t), sv));
+        k += 8;
+    }
+    while k < n {
+        *p.add(k) = exp_ps(a.mul_add(*p.add(k), b)) * scale;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn softmax_row_impl(row: &mut [f32]) {
+    let (p, n) = (row.as_mut_ptr(), row.len());
+    let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        mv = _mm256_max_ps(mv, _mm256_loadu_ps(p.add(k)));
+        k += 8;
+    }
+    let mut mx = hmax8(mv);
+    while k < n {
+        mx = mx.max(*p.add(k));
+        k += 1;
+    }
+    let mxv = _mm256_set1_ps(mx);
+    let mut sumv = _mm256_setzero_ps();
+    k = 0;
+    while k + 8 <= n {
+        let e = exp256(_mm256_sub_ps(_mm256_loadu_ps(p.add(k)), mxv));
+        _mm256_storeu_ps(p.add(k), e);
+        sumv = _mm256_add_ps(sumv, e);
+        k += 8;
+    }
+    let mut sum = hsum8(sumv);
+    while k < n {
+        let e = exp_ps(*p.add(k) - mx);
+        *p.add(k) = e;
+        sum += e;
+        k += 1;
+    }
+    scale_in_place(p, n, 1.0 / sum);
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn normalize_row_sum_impl(row: &mut [f32], delta: f32) {
+    let (p, n) = (row.as_mut_ptr(), row.len());
+    let mut sumv = _mm256_setzero_ps();
+    let mut k = 0usize;
+    while k + 8 <= n {
+        sumv = _mm256_add_ps(sumv, _mm256_loadu_ps(p.add(k)));
+        k += 8;
+    }
+    let mut sum = hsum8(sumv);
+    while k < n {
+        sum += *p.add(k);
+        k += 1;
+    }
+    scale_in_place(p, n, 1.0 / (sum + delta));
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+#[inline]
+unsafe fn scale_in_place(p: *mut f32, n: usize, inv: f32) {
+    let iv = _mm256_set1_ps(inv);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        _mm256_storeu_ps(p.add(k), _mm256_mul_ps(_mm256_loadu_ps(p.add(k)), iv));
+        k += 8;
+    }
+    while k < n {
+        *p.add(k) *= inv;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn relu_scale_impl(xs: &mut [f32], scale: f32) {
+    let (p, n) = (xs.as_mut_ptr(), xs.len());
+    let zv = _mm256_setzero_ps();
+    let sv = _mm256_set1_ps(scale);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        // max_ps(x, 0) returns 0 for NaN lanes, matching f32::max.
+        let v = _mm256_mul_ps(_mm256_max_ps(_mm256_loadu_ps(p.add(k)), zv), sv);
+        _mm256_storeu_ps(p.add(k), v);
+        k += 8;
+    }
+    while k < n {
+        *p.add(k) = (*p.add(k)).max(0.0) * scale;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn square_scale_impl(xs: &mut [f32], scale: f32) {
+    let (p, n) = (xs.as_mut_ptr(), xs.len());
+    let sv = _mm256_set1_ps(scale);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let x = _mm256_loadu_ps(p.add(k));
+        _mm256_storeu_ps(p.add(k), _mm256_mul_ps(_mm256_mul_ps(x, x), sv));
+        k += 8;
+    }
+    while k < n {
+        let x = *p.add(k);
+        *p.add(k) = x * x * scale;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn elu_plus_one_impl(xs: &[f32], out: &mut [f32]) {
+    let (xp, n) = (xs.as_ptr(), xs.len());
+    let op = out.as_mut_ptr();
+    let zv = _mm256_setzero_ps();
+    let ov = _mm256_set1_ps(1.0);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let x = _mm256_loadu_ps(xp.add(k));
+        let pos_mask = _mm256_cmp_ps::<_CMP_GT_OQ>(x, zv);
+        let pos = _mm256_add_ps(x, ov);
+        let neg = exp256(x);
+        _mm256_storeu_ps(op.add(k), _mm256_blendv_ps(neg, pos, pos_mask));
+        k += 8;
+    }
+    while k < n {
+        let x = *xp.add(k);
+        *op.add(k) = if x > 0.0 { x + 1.0 } else { exp_ps(x) };
+        k += 1;
+    }
+}

@@ -1,0 +1,115 @@
+//! Polynomial `expf` for the vectorized feature maps (ADR-010).
+//!
+//! Degree-5 minimax polynomial on the reduced interval (Cephes `expf`
+//! coefficients), range reduction `x = n·ln2 + r` with a two-constant
+//! (hi/lo) split of ln2, reconstruction by exponent-field bit twiddling.
+//! Every step is expressible as lane-wise `mul_add`, so the scalar mirror
+//! here ([`exp_ps`]) is bit-identical per element to the AVX2/NEON lane
+//! implementations — the vector backends are tested against it exactly.
+//!
+//! Accuracy contract (tested below): ≤ 4 ulp vs `f64` exp over the whole
+//! admissible range. Saturation: inputs ≥ [`EXP_HI`] clamp to
+//! `exp(EXP_HI) ≈ 1.65e38` (never `inf`); inputs < [`EXP_LO`] flush to
+//! `+0.0` (the true result would be below the f32 normal range anyway);
+//! NaN propagates. `exp(0) == 1.0` exactly.
+//!
+//! This kernel is used by the AVX2/NEON backends only — the scalar
+//! backend keeps libm `f32::exp` (no reason to give up its accuracy when
+//! no lanes are in play).
+
+/// Saturation threshold: largest input that reconstructs with an exponent
+/// field ≤ 254 through the `floor(x·log2e + 0.5)` reduction.
+pub const EXP_HI: f32 = 88.02;
+/// Underflow threshold: below this the result would need a subnormal
+/// scale factor; we flush to +0.0 instead (documented in ADR-010).
+pub const EXP_LO: f32 = -87.33654;
+
+pub const LOG2EF: f32 = 1.442695;
+/// hi/lo split of ln 2: `LN2_HI` is exact in f32 (`0.693359375`), `LN2_LO`
+/// carries the residual, so `r = x − n·LN2_HI − n·LN2_LO` stays accurate
+/// for |n|≤128.
+pub const LN2_HI: f32 = 0.6933594;
+pub const LN2_LO: f32 = -2.1219444e-4;
+
+/// Cephes expf minimax coefficients, highest degree first.
+pub const POLY: [f32; 6] = [
+    1.9875691e-4,
+    1.3981999e-3,
+    8.333452e-3,
+    4.1665796e-2,
+    1.6666666e-1,
+    0.5,
+];
+
+/// Scalar mirror of the vector exp lanes: identical operation sequence
+/// (`mul_add` everywhere the vector code uses fused multiply-add), so a
+/// vector lane and this function agree bit-for-bit on every input.
+#[inline]
+pub fn exp_ps(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    if x < EXP_LO {
+        return 0.0;
+    }
+    let xc = x.min(EXP_HI);
+    let n = (xc * LOG2EF + 0.5).floor();
+    let r = (-n).mul_add(LN2_HI, xc);
+    let r = (-n).mul_add(LN2_LO, r);
+    let mut p = POLY[0];
+    for &c in &POLY[1..] {
+        p = p.mul_add(r, c);
+    }
+    let y = p.mul_add(r * r, r + 1.0);
+    // 2^n via the exponent field: n ∈ [−126, 127] inside the clamp range.
+    let pow2 = f32::from_bits((((n as i32) + 127) as u32) << 23);
+    y * pow2
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ulp_diff(a: f32, b: f64) -> u32 {
+        // exp is strictly positive, so the bit patterns are directly
+        // comparable as integers (monotonic over positive floats).
+        let bf = b as f32;
+        (a.to_bits() as i64 - bf.to_bits() as i64).unsigned_abs() as u32
+    }
+
+    #[test]
+    fn exp_ps_within_4_ulp_of_f64_exp() {
+        let mut worst = 0u32;
+        // Dense sweep over the admissible range plus a fine grid near 0.
+        let mut x = EXP_LO + 1e-3;
+        while x < EXP_HI {
+            let d = ulp_diff(exp_ps(x), (x as f64).exp());
+            worst = worst.max(d);
+            x += 0.037;
+        }
+        let mut x = -2.0f32;
+        while x < 2.0 {
+            let d = ulp_diff(exp_ps(x), (x as f64).exp());
+            worst = worst.max(d);
+            x += 1.7e-4;
+        }
+        assert!(worst <= 4, "worst ulp error {worst} > 4");
+    }
+
+    #[test]
+    fn exp_ps_edge_cases() {
+        assert_eq!(exp_ps(0.0), 1.0);
+        assert_eq!(exp_ps(-0.0), 1.0);
+        assert!(exp_ps(f32::NAN).is_nan());
+        // Saturates finite, never inf.
+        assert!(exp_ps(1e9).is_finite());
+        assert!(exp_ps(f32::INFINITY).is_finite());
+        assert!(exp_ps(1e9) > 1e38);
+        // Deep negative flushes to +0.0 (true value is subnormal).
+        assert_eq!(exp_ps(-200.0), 0.0);
+        assert_eq!(exp_ps(f32::NEG_INFINITY), 0.0);
+        assert!(exp_ps(-200.0).is_sign_positive());
+        // Denormal inputs behave like 0.
+        assert_eq!(exp_ps(1e-42), 1.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Runtime-dispatched SIMD microkernel layer (ADR-010).
+//!
+//! The hot numeric paths — the GEMM family behind `math::linalg`, the
+//! dot/axpy/sq_dist primitives, and the exp-heavy feature-map/softmax
+//! inner loops — bottom out in one [`Kernels`] table of plain function
+//! pointers. The table is resolved **once per process** (first use), from
+//! `is_x86_feature_detected!` on x86_64 (AVX2+FMA), NEON on aarch64, and
+//! an always-compiled safe scalar fallback everywhere; `SLAY_SIMD=auto|`
+//! `scalar|avx2|neon` overrides detection (unrecognized values warn
+//! loudly on stderr and fall back to `auto`, matching `SLAY_LOG`).
+//!
+//! Determinism policy (ADR-010): because every call site in a process
+//! goes through the same resolved table, all bit-identity properties the
+//! test suite pins (chunked==per-token, fused==sequential, fork/COW,
+//! codec round-trips, chaos replay, threaded==serial, strided==owned)
+//! compare paths through the *same* kernels and keep holding under any
+//! backend. Cross-ISA (and cross-`SLAY_SIMD`) bit-identity is explicitly
+//! **not** claimed — AVX2/NEON accumulate with fused multiply-add and
+//! a polynomial `expf` ([`expf::exp_ps`]), the scalar backend with
+//! separate mul+add and libm exp.
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+use crate::math::linalg::{MatView, MatViewMut, Scratch};
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+pub mod expf;
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+pub(crate) mod scalar;
+
+/// One resolved microkernel backend. All entries share the layer's
+/// determinism contract: per output element a single accumulator chain,
+/// sequential over the contraction dimension, independent of striping,
+/// striding, and alignment (see the backend modules for the per-ISA
+/// details).
+pub struct Kernels {
+    pub name: &'static str,
+    /// Dot product of two equal-length slices.
+    pub dot: fn(&[f32], &[f32]) -> f32,
+    /// `y += alpha · x`.
+    pub axpy: fn(f32, &[f32], &mut [f32]),
+    /// `y += x`.
+    pub add_assign: fn(&[f32], &mut [f32]),
+    /// Squared L2 distance.
+    pub sq_dist: fn(&[f32], &[f32]) -> f32,
+    /// One row stripe of `C = A·B` (overwrites `out`).
+    pub gemm_nn: fn(MatView, MatView, MatViewMut),
+    /// Accumulate output rows `[c0, c0+out.rows())` of `AᵀB` into `out`.
+    pub gemm_tn_acc: fn(MatView, MatView, usize, MatViewMut),
+    /// One row stripe of `C = A·Bᵀ`; element `(i,j)` is bit-identical to
+    /// `dot(a.row(i), b.row(j))` — the fused-decode invariant.
+    pub gemm_nt: fn(MatView, MatView, MatViewMut),
+    /// In-place stabilized softmax over one row.
+    pub softmax_row: fn(&mut [f32]),
+    /// `row *= 1/(Σrow + delta)`.
+    pub normalize_row_sum: fn(&mut [f32], f32),
+    /// `x = exp(a·x + b)·scale` element-wise (PRF/FAVOR+/score exps).
+    pub exp_affine_scale: fn(&mut [f32], f32, f32, f32),
+    /// `x = max(x,0)·scale` element-wise.
+    pub relu_scale: fn(&mut [f32], f32),
+    /// `x = x²·scale` element-wise.
+    pub square_scale: fn(&mut [f32], f32),
+    /// `out = elu(x)+1` element-wise.
+    pub elu_plus_one: fn(&[f32], &mut [f32]),
+}
+
+static SCALAR: Kernels = Kernels {
+    name: "scalar",
+    dot: scalar::dot,
+    axpy: scalar::axpy,
+    add_assign: scalar::add_assign,
+    sq_dist: scalar::sq_dist,
+    gemm_nn: scalar::gemm_nn,
+    gemm_tn_acc: scalar::gemm_tn_acc,
+    gemm_nt: scalar::gemm_nt,
+    softmax_row: scalar::softmax_row,
+    normalize_row_sum: scalar::normalize_row_sum,
+    exp_affine_scale: scalar::exp_affine_scale,
+    relu_scale: scalar::relu_scale,
+    square_scale: scalar::square_scale,
+    elu_plus_one: scalar::elu_plus_one,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernels = Kernels {
+    name: "avx2",
+    dot: avx2::dot,
+    axpy: avx2::axpy,
+    add_assign: avx2::add_assign,
+    sq_dist: avx2::sq_dist,
+    gemm_nn: avx2::gemm_nn,
+    gemm_tn_acc: avx2::gemm_tn_acc,
+    gemm_nt: avx2::gemm_nt,
+    softmax_row: avx2::softmax_row,
+    normalize_row_sum: avx2::normalize_row_sum,
+    exp_affine_scale: avx2::exp_affine_scale,
+    relu_scale: avx2::relu_scale,
+    square_scale: avx2::square_scale,
+    elu_plus_one: avx2::elu_plus_one,
+};
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernels = Kernels {
+    name: "neon",
+    dot: neon::dot,
+    axpy: neon::axpy,
+    add_assign: neon::add_assign,
+    sq_dist: neon::sq_dist,
+    gemm_nn: neon::gemm_nn,
+    gemm_tn_acc: neon::gemm_tn_acc,
+    gemm_nt: neon::gemm_nt,
+    softmax_row: neon::softmax_row,
+    normalize_row_sum: neon::normalize_row_sum,
+    exp_affine_scale: neon::exp_affine_scale,
+    relu_scale: neon::relu_scale,
+    square_scale: neon::square_scale,
+    elu_plus_one: neon::elu_plus_one,
+};
+
+/// Selectable backends. `Avx2`/`Neon` resolve only on their ISA with the
+/// features present; see [`kernels_for`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Scalar,
+    Avx2,
+    Neon,
+}
+
+/// Hardware auto-detection (the `SLAY_SIMD=auto` path).
+fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Backend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is baseline on every aarch64 target this crate builds for.
+        return Backend::Neon;
+    }
+    #[allow(unreachable_code)]
+    Backend::Scalar
+}
+
+/// The kernel table for `b`, or `None` when this host can't run it
+/// (wrong ISA or missing CPU features). Safe to call from tests/benches
+/// to compare backends in-process.
+pub fn kernels_for(b: Backend) -> Option<&'static Kernels> {
+    match b {
+        Backend::Scalar => Some(&SCALAR),
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            {
+                if std::arch::is_x86_feature_detected!("avx2")
+                    && std::arch::is_x86_feature_detected!("fma")
+                {
+                    return Some(&AVX2);
+                }
+            }
+            None
+        }
+        Backend::Neon => {
+            #[cfg(target_arch = "aarch64")]
+            {
+                return Some(&NEON);
+            }
+            #[allow(unreachable_code)]
+            None
+        }
+    }
+}
+
+fn select() -> &'static Kernels {
+    let forced = match std::env::var("SLAY_SIMD").as_deref() {
+        Ok("auto") | Err(_) => None,
+        Ok("scalar") => Some(Backend::Scalar),
+        Ok("avx2") => Some(Backend::Avx2),
+        Ok("neon") => Some(Backend::Neon),
+        Ok(other) => {
+            // Loud once (ADR-008: misconfiguration never fails silently) —
+            // a typo'd SLAY_SIMD would otherwise just quietly mean "auto".
+            eprintln!(
+                "SLAY_SIMD={other:?} is not a SIMD backend \
+                 (expected auto|scalar|avx2|neon); defaulting to auto"
+            );
+            None
+        }
+    };
+    let table = match forced {
+        Some(b) => kernels_for(b).unwrap_or_else(|| {
+            eprintln!(
+                "SLAY_SIMD={b:?} requested but this host cannot run it \
+                 (wrong ISA or missing CPU features); using auto-detection"
+            );
+            kernels_for(detect()).unwrap_or(&SCALAR)
+        }),
+        None => kernels_for(detect()).unwrap_or(&SCALAR),
+    };
+    crate::log_trace!("SIMD dispatch resolved: backend={}", table.name);
+    table
+}
+
+/// The process-wide resolved kernel table. First call reads `SLAY_SIMD`
+/// and probes the CPU; every later call is an atomic load. All linalg
+/// entry points and feature-map inner loops route through this, so one
+/// process always computes through one backend (the per-host determinism
+/// policy of ADR-010).
+#[inline]
+pub fn kernels() -> &'static Kernels {
+    static K: OnceLock<&'static Kernels> = OnceLock::new();
+    K.get_or_init(select)
+}
+
+/// Name of the resolved backend (`"scalar"|"avx2"|"neon"`) — exposed as
+/// a label in the metrics snapshot and the bench records.
+pub fn backend_name() -> &'static str {
+    kernels().name
+}
+
+thread_local! {
+    /// Per-thread arena for the packed-GEMM micro-panels. Thread-local
+    /// (rather than caller-passed) because the linalg entry points take no
+    /// scratch argument; steady-state calls on a warm thread are
+    /// allocation-free (pinned by `rust/tests/alloc_discipline.rs`).
+    /// Scoped worker threads of the threaded matmul fan-outs start cold —
+    /// that one-buffer-per-spawned-thread cost sits inside the O(threads)
+    /// spawn allowance ADR-003 already grants the fan-out path.
+    static PACK: RefCell<Scratch> = RefCell::new(Scratch::new());
+}
+
+/// Run `f` with a zeroed pack buffer of `len` floats from the per-thread
+/// arena (returned to the pool afterwards).
+pub(crate) fn with_pack<R>(len: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|s| {
+        let mut s = s.borrow_mut();
+        let mut buf = s.take(len);
+        let r = f(&mut buf);
+        s.put(buf);
+        r
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_table_always_available() {
+        let k = kernels_for(Backend::Scalar).expect("scalar table must exist");
+        assert_eq!(k.name, "scalar");
+        assert_eq!((k.dot)(&[1.0, 2.0], &[3.0, 4.0]), 11.0);
+    }
+
+    #[test]
+    fn resolved_table_reports_a_known_name() {
+        let name = backend_name();
+        assert!(
+            name == "scalar" || name == "avx2" || name == "neon",
+            "unexpected backend {name:?}"
+        );
+    }
+
+    #[test]
+    fn forced_tables_match_their_names() {
+        for (b, want) in [
+            (Backend::Scalar, "scalar"),
+            (Backend::Avx2, "avx2"),
+            (Backend::Neon, "neon"),
+        ] {
+            if let Some(k) = kernels_for(b) {
+                assert_eq!(k.name, want);
+            }
+        }
+    }
+
+    #[test]
+    fn with_pack_hands_out_zeroed_reusable_buffers() {
+        with_pack(64, |buf| {
+            assert_eq!(buf.len(), 64);
+            assert!(buf.iter().all(|&x| x == 0.0));
+            buf.fill(7.0);
+        });
+        // Re-taken buffer comes back zeroed despite the previous fill.
+        with_pack(32, |buf| {
+            assert_eq!(buf.len(), 32);
+            assert!(buf.iter().all(|&x| x == 0.0));
+        });
+    }
+}

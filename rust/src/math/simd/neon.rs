@@ -1,0 +1,675 @@
+//! NEON backend for aarch64 (ADR-010) — the 4-lane mirror of `avx2.rs`.
+//!
+//! NEON is baseline on aarch64 Linux targets, so the dispatch table can
+//! install this backend unconditionally there; the `target_feature`
+//! annotations keep the compiler honest about instruction selection.
+//! The determinism rules are the same as the AVX2 backend's: one
+//! accumulator chain per output element, sequential over k, fused
+//! multiply-add in lanes and `f32::mul_add` in scalar tails, `gemm_nt`
+//! element chains identical to [`dot`], and exp lanes mirroring
+//! [`super::expf::exp_ps`] operation for operation.
+
+#![allow(clippy::needless_range_loop)]
+
+use core::arch::aarch64::*;
+
+use super::expf::{self, exp_ps};
+use super::with_pack;
+use crate::math::linalg::{MatView, MatViewMut};
+
+/// Rows per packed A micro-panel (6×8: 12 accumulator q-registers).
+const MR: usize = 6;
+
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: NEON is baseline on every aarch64 target we build for.
+    unsafe { dot_impl(a.as_ptr(), b.as_ptr(), a.len()) }
+}
+
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { axpy_impl(alpha, x.as_ptr(), y.as_mut_ptr(), x.len()) }
+}
+
+pub fn add_assign(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    // SAFETY: as above.
+    unsafe { add_assign_impl(x.as_ptr(), y.as_mut_ptr(), x.len()) }
+}
+
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // SAFETY: as above.
+    unsafe { sq_dist_impl(a.as_ptr(), b.as_ptr(), a.len()) }
+}
+
+pub fn gemm_nn(a: MatView, b: MatView, mut out: MatViewMut) {
+    if a.cols() == 0 {
+        out.fill_zero();
+        return;
+    }
+    if out.rows() == 0 || out.cols() == 0 {
+        return;
+    }
+    // SAFETY: as above; shapes pre-checked by the linalg entry points.
+    with_pack(MR * a.cols(), |pack| unsafe { gemm_nn_impl(&a, &b, pack, &mut out) })
+}
+
+pub fn gemm_tn_acc(a: MatView, b: MatView, c0: usize, mut out: MatViewMut) {
+    if a.rows() == 0 || out.rows() == 0 || out.cols() == 0 {
+        return;
+    }
+    // SAFETY: as above.
+    with_pack(MR * a.rows(), |pack| unsafe { gemm_tn_impl(&a, &b, c0, pack, &mut out) })
+}
+
+pub fn gemm_nt(a: MatView, b: MatView, mut out: MatViewMut) {
+    if out.rows() == 0 || out.cols() == 0 {
+        return;
+    }
+    // SAFETY: as above.
+    unsafe { gemm_nt_impl(&a, &b, &mut out) }
+}
+
+pub fn softmax_row(row: &mut [f32]) {
+    // SAFETY: as above.
+    unsafe { softmax_row_impl(row) }
+}
+
+pub fn normalize_row_sum(row: &mut [f32], delta: f32) {
+    // SAFETY: as above.
+    unsafe { normalize_row_sum_impl(row, delta) }
+}
+
+pub fn exp_affine_scale(xs: &mut [f32], a: f32, b: f32, scale: f32) {
+    // SAFETY: as above.
+    unsafe { exp_affine_scale_impl(xs, a, b, scale) }
+}
+
+pub fn relu_scale(xs: &mut [f32], scale: f32) {
+    // SAFETY: as above.
+    unsafe { relu_scale_impl(xs, scale) }
+}
+
+pub fn square_scale(xs: &mut [f32], scale: f32) {
+    // SAFETY: as above.
+    unsafe { square_scale_impl(xs, scale) }
+}
+
+pub fn elu_plus_one(xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    // SAFETY: as above.
+    unsafe { elu_plus_one_impl(xs, out) }
+}
+
+// ---------------------------------------------------------------------------
+// Reductions
+// ---------------------------------------------------------------------------
+
+/// Fixed-order horizontal sum: fold halves, then the remaining pair.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn hsum4(v: float32x4_t) -> f32 {
+    let s = vadd_f32(vget_low_f32(v), vget_high_f32(v));
+    vget_lane_f32::<0>(s) + vget_lane_f32::<1>(s)
+}
+
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn hmax4(v: float32x4_t) -> f32 {
+    let m = vpmax_f32(vget_low_f32(v), vget_high_f32(v));
+    let m = vpmax_f32(m, m);
+    vget_lane_f32::<0>(m)
+}
+
+// ---------------------------------------------------------------------------
+// Vector kernels
+// ---------------------------------------------------------------------------
+
+/// Canonical dot chain (two lane accumulators over 8-element steps, one
+/// 4-wide cleanup, fixed-order reduction, `mul_add` tail) — `gemm_nt`
+/// replicates this per element.
+#[target_feature(enable = "neon")]
+unsafe fn dot_impl(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
+        acc1 = vfmaq_f32(acc1, vld1q_f32(a.add(k + 4)), vld1q_f32(b.add(k + 4)));
+        k += 8;
+    }
+    if k + 4 <= n {
+        acc0 = vfmaq_f32(acc0, vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
+        k += 4;
+    }
+    let mut s = hsum4(vaddq_f32(acc0, acc1));
+    while k < n {
+        s = (*a.add(k)).mul_add(*b.add(k), s);
+        k += 1;
+    }
+    s
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn axpy_impl(alpha: f32, x: *const f32, y: *mut f32, n: usize) {
+    let av = vdupq_n_f32(alpha);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        vst1q_f32(y.add(k), vfmaq_f32(vld1q_f32(y.add(k)), av, vld1q_f32(x.add(k))));
+        k += 4;
+    }
+    while k < n {
+        *y.add(k) = alpha.mul_add(*x.add(k), *y.add(k));
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn add_assign_impl(x: *const f32, y: *mut f32, n: usize) {
+    let mut k = 0usize;
+    while k + 4 <= n {
+        vst1q_f32(y.add(k), vaddq_f32(vld1q_f32(y.add(k)), vld1q_f32(x.add(k))));
+        k += 4;
+    }
+    while k < n {
+        *y.add(k) += *x.add(k);
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn sq_dist_impl(a: *const f32, b: *const f32, n: usize) -> f32 {
+    let mut acc0 = vdupq_n_f32(0.0);
+    let mut acc1 = vdupq_n_f32(0.0);
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let d0 = vsubq_f32(vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
+        let d1 = vsubq_f32(vld1q_f32(a.add(k + 4)), vld1q_f32(b.add(k + 4)));
+        acc0 = vfmaq_f32(acc0, d0, d0);
+        acc1 = vfmaq_f32(acc1, d1, d1);
+        k += 8;
+    }
+    if k + 4 <= n {
+        let d0 = vsubq_f32(vld1q_f32(a.add(k)), vld1q_f32(b.add(k)));
+        acc0 = vfmaq_f32(acc0, d0, d0);
+        k += 4;
+    }
+    let mut s = hsum4(vaddq_f32(acc0, acc1));
+    while k < n {
+        let d = *a.add(k) - *b.add(k);
+        s = d.mul_add(d, s);
+        k += 1;
+    }
+    s
+}
+
+// ---------------------------------------------------------------------------
+// Packed GEMM
+// ---------------------------------------------------------------------------
+
+/// 6×8 microkernel over a k-major packed A panel and 8 consecutive B
+/// columns; `LOAD_C` selects chain root (0 for nn, existing C for tn).
+#[target_feature(enable = "neon")]
+unsafe fn mk6x8<const LOAD_C: bool>(
+    kc: usize,
+    pack: *const f32,
+    bp: *const f32,
+    bs: usize,
+    c: &[*mut f32; MR],
+) {
+    let mut acc = [[vdupq_n_f32(0.0); 2]; MR];
+    if LOAD_C {
+        for r in 0..MR {
+            acc[r][0] = vld1q_f32(c[r]);
+            acc[r][1] = vld1q_f32(c[r].add(4));
+        }
+    }
+    for kk in 0..kc {
+        let b0 = vld1q_f32(bp.add(kk * bs));
+        let b1 = vld1q_f32(bp.add(kk * bs + 4));
+        let pk = pack.add(kk * MR);
+        for r in 0..MR {
+            let av = vdupq_n_f32(*pk.add(r));
+            acc[r][0] = vfmaq_f32(acc[r][0], av, b0);
+            acc[r][1] = vfmaq_f32(acc[r][1], av, b1);
+        }
+    }
+    for r in 0..MR {
+        vst1q_f32(c[r], acc[r][0]);
+        vst1q_f32(c[r].add(4), acc[r][1]);
+    }
+}
+
+/// 6×4 column-tail variant of [`mk6x8`].
+#[target_feature(enable = "neon")]
+unsafe fn mk6x4<const LOAD_C: bool>(
+    kc: usize,
+    pack: *const f32,
+    bp: *const f32,
+    bs: usize,
+    c: &[*mut f32; MR],
+) {
+    let mut acc = [vdupq_n_f32(0.0); MR];
+    if LOAD_C {
+        for r in 0..MR {
+            acc[r] = vld1q_f32(c[r]);
+        }
+    }
+    for kk in 0..kc {
+        let b0 = vld1q_f32(bp.add(kk * bs));
+        let pk = pack.add(kk * MR);
+        for r in 0..MR {
+            acc[r] = vfmaq_f32(acc[r], vdupq_n_f32(*pk.add(r)), b0);
+        }
+    }
+    for r in 0..MR {
+        vst1q_f32(c[r], acc[r]);
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn panel6<const LOAD_C: bool>(
+    kc: usize,
+    pack: *const f32,
+    bp: *const f32,
+    bs: usize,
+    c: &[*mut f32; MR],
+    n: usize,
+) {
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let cj = [
+            c[0].add(j),
+            c[1].add(j),
+            c[2].add(j),
+            c[3].add(j),
+            c[4].add(j),
+            c[5].add(j),
+        ];
+        mk6x8::<LOAD_C>(kc, pack, bp.add(j), bs, &cj);
+        j += 8;
+    }
+    if j + 4 <= n {
+        let cj = [
+            c[0].add(j),
+            c[1].add(j),
+            c[2].add(j),
+            c[3].add(j),
+            c[4].add(j),
+            c[5].add(j),
+        ];
+        mk6x4::<LOAD_C>(kc, pack, bp.add(j), bs, &cj);
+        j += 4;
+    }
+    while j < n {
+        for r in 0..MR {
+            let mut s = if LOAD_C { *c[r].add(j) } else { 0.0 };
+            for kk in 0..kc {
+                s = (*pack.add(kk * MR + r)).mul_add(*bp.add(kk * bs + j), s);
+            }
+            *c[r].add(j) = s;
+        }
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn panel1<const LOAD_C: bool>(
+    kc: usize,
+    ar: *const f32,
+    bp: *const f32,
+    bs: usize,
+    co: *mut f32,
+    n: usize,
+) {
+    let mut j = 0usize;
+    while j + 8 <= n {
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        if LOAD_C {
+            acc0 = vld1q_f32(co.add(j));
+            acc1 = vld1q_f32(co.add(j + 4));
+        }
+        for kk in 0..kc {
+            let av = vdupq_n_f32(*ar.add(kk));
+            acc0 = vfmaq_f32(acc0, av, vld1q_f32(bp.add(kk * bs + j)));
+            acc1 = vfmaq_f32(acc1, av, vld1q_f32(bp.add(kk * bs + j + 4)));
+        }
+        vst1q_f32(co.add(j), acc0);
+        vst1q_f32(co.add(j + 4), acc1);
+        j += 8;
+    }
+    if j + 4 <= n {
+        let mut acc0 = vdupq_n_f32(0.0);
+        if LOAD_C {
+            acc0 = vld1q_f32(co.add(j));
+        }
+        for kk in 0..kc {
+            acc0 = vfmaq_f32(acc0, vdupq_n_f32(*ar.add(kk)), vld1q_f32(bp.add(kk * bs + j)));
+        }
+        vst1q_f32(co.add(j), acc0);
+        j += 4;
+    }
+    while j < n {
+        let mut s = if LOAD_C { *co.add(j) } else { 0.0 };
+        for kk in 0..kc {
+            s = (*ar.add(kk)).mul_add(*bp.add(kk * bs + j), s);
+        }
+        *co.add(j) = s;
+        j += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_nn_impl(a: &MatView, b: &MatView, pack: &mut [f32], out: &mut MatViewMut) {
+    let (m, kd, n) = (a.rows(), a.cols(), b.cols());
+    let (ap, astride) = (a.base_ptr(), a.row_stride());
+    let (bp, bs) = (b.base_ptr(), b.row_stride());
+    let ostride = out.row_stride();
+    let op = out.base_ptr_mut();
+    let pp = pack.as_mut_ptr();
+    let mut i = 0usize;
+    while i + MR <= m {
+        for r in 0..MR {
+            let arow = ap.add((i + r) * astride);
+            for kk in 0..kd {
+                *pp.add(kk * MR + r) = *arow.add(kk);
+            }
+        }
+        let c = [
+            op.add(i * ostride),
+            op.add((i + 1) * ostride),
+            op.add((i + 2) * ostride),
+            op.add((i + 3) * ostride),
+            op.add((i + 4) * ostride),
+            op.add((i + 5) * ostride),
+        ];
+        panel6::<false>(kd, pp, bp, bs, &c, n);
+        i += MR;
+    }
+    while i < m {
+        panel1::<false>(kd, ap.add(i * astride), bp, bs, op.add(i * ostride), n);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_tn_impl(
+    a: &MatView,
+    b: &MatView,
+    c0: usize,
+    pack: &mut [f32],
+    out: &mut MatViewMut,
+) {
+    let (kd, m, n) = (a.rows(), out.rows(), out.cols());
+    let (ap, astride) = (a.base_ptr(), a.row_stride());
+    let (bp, bs) = (b.base_ptr(), b.row_stride());
+    let ostride = out.row_stride();
+    let op = out.base_ptr_mut();
+    let pp = pack.as_mut_ptr();
+    let mut i = 0usize;
+    while i + MR <= m {
+        for kk in 0..kd {
+            let src = ap.add(kk * astride + c0 + i);
+            let dst = pp.add(kk * MR);
+            for r in 0..MR {
+                *dst.add(r) = *src.add(r);
+            }
+        }
+        let c = [
+            op.add(i * ostride),
+            op.add((i + 1) * ostride),
+            op.add((i + 2) * ostride),
+            op.add((i + 3) * ostride),
+            op.add((i + 4) * ostride),
+            op.add((i + 5) * ostride),
+        ];
+        panel6::<true>(kd, pp, bp, bs, &c, n);
+        i += MR;
+    }
+    while i < m {
+        for kk in 0..kd {
+            *pp.add(kk) = *ap.add(kk * astride + c0 + i);
+        }
+        panel1::<true>(kd, pp, bp, bs, op.add(i * ostride), n);
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn gemm_nt_impl(a: &MatView, b: &MatView, out: &mut MatViewMut) {
+    let (m, kd, nj) = (a.rows(), a.cols(), b.rows());
+    let (ap, astride) = (a.base_ptr(), a.row_stride());
+    let (bp, bs) = (b.base_ptr(), b.row_stride());
+    let ostride = out.row_stride();
+    let op = out.base_ptr_mut();
+    for i in 0..m {
+        let ar = ap.add(i * astride);
+        let orow = op.add(i * ostride);
+        let mut j = 0usize;
+        while j + 4 <= nj {
+            dot4(
+                ar,
+                [
+                    bp.add(j * bs),
+                    bp.add((j + 1) * bs),
+                    bp.add((j + 2) * bs),
+                    bp.add((j + 3) * bs),
+                ],
+                kd,
+                orow.add(j),
+            );
+            j += 4;
+        }
+        while j < nj {
+            *orow.add(j) = dot_impl(ar, bp.add(j * bs), kd);
+            j += 1;
+        }
+    }
+}
+
+/// Four [`dot_impl`] chains sharing the A loads.
+#[target_feature(enable = "neon")]
+unsafe fn dot4(a: *const f32, b: [*const f32; 4], n: usize, out: *mut f32) {
+    let mut acc0 = [vdupq_n_f32(0.0); 4];
+    let mut acc1 = [vdupq_n_f32(0.0); 4];
+    let mut k = 0usize;
+    while k + 8 <= n {
+        let a0 = vld1q_f32(a.add(k));
+        let a1 = vld1q_f32(a.add(k + 4));
+        for l in 0..4 {
+            acc0[l] = vfmaq_f32(acc0[l], a0, vld1q_f32(b[l].add(k)));
+            acc1[l] = vfmaq_f32(acc1[l], a1, vld1q_f32(b[l].add(k + 4)));
+        }
+        k += 8;
+    }
+    if k + 4 <= n {
+        let a0 = vld1q_f32(a.add(k));
+        for l in 0..4 {
+            acc0[l] = vfmaq_f32(acc0[l], a0, vld1q_f32(b[l].add(k)));
+        }
+        k += 4;
+    }
+    for l in 0..4 {
+        let mut s = hsum4(vaddq_f32(acc0[l], acc1[l]));
+        let mut kk = k;
+        while kk < n {
+            s = (*a.add(kk)).mul_add(*b[l].add(kk), s);
+            kk += 1;
+        }
+        *out.add(l) = s;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Row ops
+// ---------------------------------------------------------------------------
+
+/// Lane mirror of [`exp_ps`] — operation-for-operation identical.
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn exp128(x: float32x4_t) -> float32x4_t {
+    let ord_mask = vceqq_f32(x, x); // 0 on NaN lanes
+    let zero_mask = vcltq_f32(x, vdupq_n_f32(expf::EXP_LO));
+    let xc = vminq_f32(x, vdupq_n_f32(expf::EXP_HI));
+    let n = vrndmq_f32(vaddq_f32(vmulq_f32(xc, vdupq_n_f32(expf::LOG2EF)), vdupq_n_f32(0.5)));
+    // r = xc − n·ln2_hi − n·ln2_lo (vfmsq ≡ (−n).mul_add(c, ·) per IEEE).
+    let r = vfmsq_f32(xc, n, vdupq_n_f32(expf::LN2_HI));
+    let r = vfmsq_f32(r, n, vdupq_n_f32(expf::LN2_LO));
+    let mut p = vdupq_n_f32(expf::POLY[0]);
+    for &c in &expf::POLY[1..] {
+        p = vfmaq_f32(vdupq_n_f32(c), p, r);
+    }
+    let y = vfmaq_f32(vaddq_f32(r, vdupq_n_f32(1.0)), p, vmulq_f32(r, r));
+    // n is integral after vrndmq, so the truncating convert is exact;
+    // out-of-range lanes saturate and are discarded by the masks below.
+    let pow2 = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(
+        vcvtq_s32_f32(n),
+        vdupq_n_s32(127),
+    )));
+    let res = vmulq_f32(y, pow2);
+    let res = vbslq_f32(zero_mask, vdupq_n_f32(0.0), res);
+    vbslq_f32(ord_mask, res, x)
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn exp_affine_scale_impl(xs: &mut [f32], a: f32, b: f32, scale: f32) {
+    let (p, n) = (xs.as_mut_ptr(), xs.len());
+    let av = vdupq_n_f32(a);
+    let bv = vdupq_n_f32(b);
+    let sv = vdupq_n_f32(scale);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        let t = vfmaq_f32(bv, av, vld1q_f32(p.add(k)));
+        vst1q_f32(p.add(k), vmulq_f32(exp128(t), sv));
+        k += 4;
+    }
+    while k < n {
+        *p.add(k) = exp_ps(a.mul_add(*p.add(k), b)) * scale;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn softmax_row_impl(row: &mut [f32]) {
+    let (p, n) = (row.as_mut_ptr(), row.len());
+    let mut mv = vdupq_n_f32(f32::NEG_INFINITY);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        mv = vmaxq_f32(mv, vld1q_f32(p.add(k)));
+        k += 4;
+    }
+    let mut mx = hmax4(mv);
+    while k < n {
+        mx = mx.max(*p.add(k));
+        k += 1;
+    }
+    let mxv = vdupq_n_f32(mx);
+    let mut sumv = vdupq_n_f32(0.0);
+    k = 0;
+    while k + 4 <= n {
+        let e = exp128(vsubq_f32(vld1q_f32(p.add(k)), mxv));
+        vst1q_f32(p.add(k), e);
+        sumv = vaddq_f32(sumv, e);
+        k += 4;
+    }
+    let mut sum = hsum4(sumv);
+    while k < n {
+        let e = exp_ps(*p.add(k) - mx);
+        *p.add(k) = e;
+        sum += e;
+        k += 1;
+    }
+    scale_in_place(p, n, 1.0 / sum);
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn normalize_row_sum_impl(row: &mut [f32], delta: f32) {
+    let (p, n) = (row.as_mut_ptr(), row.len());
+    let mut sumv = vdupq_n_f32(0.0);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        sumv = vaddq_f32(sumv, vld1q_f32(p.add(k)));
+        k += 4;
+    }
+    let mut sum = hsum4(sumv);
+    while k < n {
+        sum += *p.add(k);
+        k += 1;
+    }
+    scale_in_place(p, n, 1.0 / (sum + delta));
+}
+
+#[target_feature(enable = "neon")]
+#[inline]
+unsafe fn scale_in_place(p: *mut f32, n: usize, inv: f32) {
+    let iv = vdupq_n_f32(inv);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        vst1q_f32(p.add(k), vmulq_f32(vld1q_f32(p.add(k)), iv));
+        k += 4;
+    }
+    while k < n {
+        *p.add(k) *= inv;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn relu_scale_impl(xs: &mut [f32], scale: f32) {
+    let (p, n) = (xs.as_mut_ptr(), xs.len());
+    let zv = vdupq_n_f32(0.0);
+    let sv = vdupq_n_f32(scale);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        let x = vld1q_f32(p.add(k));
+        // vbsl on the x>0 mask (NaN compares false) matches f32::max's
+        // NaN-to-0 behavior, unlike vmaxq which propagates NaN.
+        let m = vcgtq_f32(x, zv);
+        vst1q_f32(p.add(k), vmulq_f32(vbslq_f32(m, x, zv), sv));
+        k += 4;
+    }
+    while k < n {
+        *p.add(k) = (*p.add(k)).max(0.0) * scale;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn square_scale_impl(xs: &mut [f32], scale: f32) {
+    let (p, n) = (xs.as_mut_ptr(), xs.len());
+    let sv = vdupq_n_f32(scale);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        let x = vld1q_f32(p.add(k));
+        vst1q_f32(p.add(k), vmulq_f32(vmulq_f32(x, x), sv));
+        k += 4;
+    }
+    while k < n {
+        let x = *p.add(k);
+        *p.add(k) = x * x * scale;
+        k += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+unsafe fn elu_plus_one_impl(xs: &[f32], out: &mut [f32]) {
+    let (xp, n) = (xs.as_ptr(), xs.len());
+    let op = out.as_mut_ptr();
+    let zv = vdupq_n_f32(0.0);
+    let ov = vdupq_n_f32(1.0);
+    let mut k = 0usize;
+    while k + 4 <= n {
+        let x = vld1q_f32(xp.add(k));
+        let pos_mask = vcgtq_f32(x, zv);
+        vst1q_f32(op.add(k), vbslq_f32(pos_mask, vaddq_f32(x, ov), exp128(x)));
+        k += 4;
+    }
+    while k < n {
+        let x = *xp.add(k);
+        *op.add(k) = if x > 0.0 { x + 1.0 } else { exp_ps(x) };
+        k += 1;
+    }
+}

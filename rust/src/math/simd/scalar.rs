@@ -1,0 +1,169 @@
+//! Always-compiled safe scalar backend (ADR-010).
+//!
+//! This is both the portable fallback and the reference the SIMD backends
+//! are property-tested against. It is deliberately written with wide
+//! independent accumulators and no per-element branches so that rustc's
+//! autovectorizer produces respectable code even here — the "scalar"
+//! label means "no explicit intrinsics", not "naive".
+//!
+//! Determinism contract: every output element is produced by a single
+//! accumulator chain walked sequentially over the contraction dimension,
+//! independent of row striping, view striding, and slice alignment. That
+//! is the invariant the bit-identity tests (threaded==serial,
+//! strided==owned, fused==sequential) lean on — see ADR-010.
+
+use crate::math::linalg::{MatView, MatViewMut};
+
+/// 8-accumulator dot product (the autovectorizer turns this into two
+/// 4-wide SSE chains on baseline x86_64).
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        for (l, s) in acc.iter_mut().enumerate() {
+            *s += a[j + l] * b[j + l];
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for j in chunks * 8..a.len() {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `y += x` (the column-sum inner loop of `z += Ψ(K)ᵀ1`).
+pub fn add_assign(x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += xi;
+    }
+}
+
+/// 8-accumulator squared L2 distance.
+pub fn sq_dist(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 8];
+    let chunks = a.len() / 8;
+    for i in 0..chunks {
+        let j = i * 8;
+        for (l, s) in acc.iter_mut().enumerate() {
+            let d = a[j + l] - b[j + l];
+            *s += d * d;
+        }
+    }
+    let mut s = ((acc[0] + acc[4]) + (acc[1] + acc[5])) + ((acc[2] + acc[6]) + (acc[3] + acc[7]));
+    for j in chunks * 8..a.len() {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// One row stripe of `C = A·B` (i-k-j, axpy inner loop over contiguous
+/// rows of B, k-blocked so the B panel stays cache-resident). Branch-free:
+/// the old `if aik != 0.0` skip mispredicted on dense serving data and the
+/// sparsity it exploited never occurs on the hot path.
+pub fn gemm_nn(a: MatView, b: MatView, mut out: MatViewMut) {
+    let k_dim = a.cols();
+    const KB: usize = 64;
+    out.fill_zero();
+    for kb in (0..k_dim).step_by(KB) {
+        let k_end = (kb + KB).min(k_dim);
+        for i in 0..a.rows() {
+            let a_row = a.row(i);
+            let c_row = out.row_mut(i);
+            for (k, &aik) in a_row.iter().enumerate().take(k_end).skip(kb) {
+                axpy(aik, b.row(k), c_row);
+            }
+        }
+    }
+}
+
+/// Accumulate output rows `[c0, c0 + out.rows())` of `AᵀB` into `out`
+/// (k-outer so per-element accumulation order is stripe-independent).
+pub fn gemm_tn_acc(a: MatView, b: MatView, c0: usize, mut out: MatViewMut) {
+    for k in 0..a.rows() {
+        let a_row = &a.row(k)[c0..c0 + out.rows()];
+        let b_row = b.row(k);
+        for (i, &aik) in a_row.iter().enumerate() {
+            axpy(aik, b_row, out.row_mut(i));
+        }
+    }
+}
+
+/// One row stripe of `C = A·Bᵀ` — per-element [`dot`], so a 1-row call is
+/// bit-identical to the batched call (fused decode maps a batch of rows
+/// through the same chain a sequential decode walks one at a time).
+pub fn gemm_nt(a: MatView, b: MatView, mut out: MatViewMut) {
+    for i in 0..a.rows() {
+        let ar = a.row(i);
+        let orow = out.row_mut(i);
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o = dot(ar, b.row(j));
+        }
+    }
+}
+
+/// In-place numerically-stabilized softmax over one row.
+pub fn softmax_row(row: &mut [f32]) {
+    let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// `row *= 1 / (Σrow + delta)` — kernel normalization of Eq. 11.
+pub fn normalize_row_sum(row: &mut [f32], delta: f32) {
+    let sum: f32 = row.iter().sum();
+    let inv = 1.0 / (sum + delta);
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// `x = exp(a·x + b) · scale` — the shared inner loop of the PRF map
+/// (`a=√(2s), b=−s`), FAVOR+ softmax features (`a=1, b=−‖u‖²/2`) and the
+/// stabilized score exponentials (`a=scale, b=−max`).
+pub fn exp_affine_scale(xs: &mut [f32], a: f32, b: f32, scale: f32) {
+    for x in xs.iter_mut() {
+        *x = (a * *x + b).exp() * scale;
+    }
+}
+
+/// `x = max(x, 0) · scale` (FAVOR+ ReLU features).
+pub fn relu_scale(xs: &mut [f32], scale: f32) {
+    for x in xs.iter_mut() {
+        *x = x.max(0.0) * scale;
+    }
+}
+
+/// `x = x² · scale` (anchored quadratic features).
+pub fn square_scale(xs: &mut [f32], scale: f32) {
+    for x in xs.iter_mut() {
+        *x = *x * *x * scale;
+    }
+}
+
+/// `out[i] = elu(x[i]) + 1` (cosFormer/linear-transformer feature map).
+pub fn elu_plus_one(xs: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), out.len());
+    for (o, &x) in out.iter_mut().zip(xs.iter()) {
+        *o = if x > 0.0 { x + 1.0 } else { x.exp() };
+    }
+}

@@ -30,6 +30,15 @@ pub fn render(m: &Metrics) -> String {
         let _ = writeln!(out, "slay_{name} {}", fmt_f64(v));
     }
 
+    // Info-style metric: the constant 1 carries the resolved SIMD backend
+    // as a label (ADR-010), the conventional way to expose a string.
+    let _ = writeln!(out, "# TYPE slay_simd_backend_info gauge");
+    let _ = writeln!(
+        out,
+        "slay_simd_backend_info{{backend=\"{}\"}} 1",
+        snap.simd_backend
+    );
+
     // Stage latency histograms: one family, labelled by class and stage.
     // Only non-empty series are emitted; within a series only buckets that
     // advance the cumulative count appear (plus the mandatory +Inf).

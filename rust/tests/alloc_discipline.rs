@@ -200,5 +200,35 @@ fn main() {
     );
     assert!(yb.iter().all(|x| x.is_finite()));
 
+    // ---- packed GEMM microkernels (ADR-010) -----------------------------
+    // The SIMD layer packs A micro-panels into a thread-local arena; once
+    // that arena is warm, the serial matmul family must be allocation-free
+    // whatever backend the dispatcher resolved. Shapes hit the 6-row panel
+    // remainder and both column-tail kernels.
+    let (gm, gk, gn) = (37, 33, 29);
+    let ga = Mat::randn(gm, gk, &mut rng);
+    let gb = Mat::randn(gk, gn, &mut rng);
+    let gat = Mat::randn(gk, gm, &mut rng);
+    let gbt = Mat::randn(gn, gk, &mut rng);
+    let mut gc = Mat::zeros(gm, gn);
+    for _ in 0..2 {
+        slay::math::linalg::matmul_serial_into(ga.view(), gb.view(), gc.view_mut());
+        slay::math::linalg::matmul_at_b_acc_serial(gat.view(), gb.view(), gc.view_mut());
+        slay::math::linalg::matmul_a_bt_serial_into(ga.view(), gbt.view(), gc.view_mut());
+    }
+    let before_g = allocs();
+    slay::math::linalg::matmul_serial_into(ga.view(), gb.view(), gc.view_mut());
+    slay::math::linalg::matmul_at_b_acc_serial(gat.view(), gb.view(), gc.view_mut());
+    slay::math::linalg::matmul_a_bt_serial_into(ga.view(), gbt.view(), gc.view_mut());
+    let after_g = allocs();
+    assert_eq!(
+        after_g - before_g,
+        0,
+        "warm packed-GEMM calls allocated {} times (backend {})",
+        after_g - before_g,
+        slay::math::simd::backend_name()
+    );
+    assert!(gc.data.iter().all(|x| x.is_finite()));
+
     println!("alloc_discipline: per-item and fused steady-state decode are allocation-free");
 }

@@ -1,0 +1,514 @@
+//! SIMD-vs-scalar property tests for the runtime-dispatched microkernel
+//! layer (ADR-010).
+//!
+//! Every entry of the [`Kernels`] table is exercised on every backend this
+//! host can run (`kernels_for`), compared against the scalar reference
+//! and/or an f64 ground truth over random shapes, strided + unaligned
+//! views, and denormal/extreme inputs. The bit-identity contract —
+//! per-element results independent of striping, striding, and alignment,
+//! `gemm_nt` element ≡ `dot`, vector exp lanes ≡ [`expf::exp_ps`] — is
+//! pinned exactly (ulp distance 0); cross-backend numeric agreement is
+//! pinned within tight analytic tolerances.
+
+use slay::math::linalg::{Mat, MatView, MatViewMut};
+use slay::math::rng::Rng;
+use slay::math::simd::{backend_name, expf, kernels, kernels_for, Backend, Kernels};
+use slay::util::quickprop::check;
+
+/// Every backend this host can run; scalar is always first.
+fn backends() -> Vec<&'static Kernels> {
+    [Backend::Scalar, Backend::Avx2, Backend::Neon]
+        .into_iter()
+        .filter_map(kernels_for)
+        .collect()
+}
+
+fn scalar() -> &'static Kernels {
+    kernels_for(Backend::Scalar).expect("scalar backend always exists")
+}
+
+/// ULP distance between two f32s: 0 for `a == b` (covers ±0) and for
+/// NaN-vs-NaN; `u64::MAX` when exactly one side is NaN.
+fn ulps(a: f32, b: f32) -> u64 {
+    if a == b || (a.is_nan() && b.is_nan()) {
+        return 0;
+    }
+    if a.is_nan() || b.is_nan() {
+        return u64::MAX;
+    }
+    let ord = |x: f32| {
+        let i = i64::from(x.to_bits() as i32);
+        if i >= 0 {
+            i
+        } else {
+            i64::from(i32::MIN) - i
+        }
+    };
+    (ord(a) - ord(b)).unsigned_abs()
+}
+
+fn to_f32(xs: &[f64]) -> Vec<f32> {
+    xs.iter().map(|&x| x as f32).collect()
+}
+
+/// Copy `m` into a padded buffer (row stride `cols+3`, base offset 1 so
+/// the first element is misaligned for 32-byte vectors). View it with
+/// `MatView::strided(&buf[1..], rows, cols, cols + 3)`.
+fn strided_copy(m: &Mat) -> Vec<f32> {
+    let stride = m.cols + 3;
+    let mut buf = vec![0.25f32; 1 + m.rows * stride];
+    for r in 0..m.rows {
+        buf[1 + r * stride..1 + r * stride + m.cols].copy_from_slice(m.row(r));
+    }
+    buf
+}
+
+/// f64 reference `C = A·B` plus the `Σ|a||b|` magnitude envelope that
+/// bounds the f32 accumulation error per element.
+fn ref_nn(a: &Mat, b: &Mat) -> (Vec<f64>, Vec<f64>) {
+    let (m, kd, n) = (a.rows, a.cols, b.cols);
+    let mut val = vec![0.0f64; m * n];
+    let mut mag = vec![0.0f64; m * n];
+    for i in 0..m {
+        for k in 0..kd {
+            let aik = f64::from(a.get(i, k));
+            for j in 0..n {
+                let p = aik * f64::from(b.get(k, j));
+                val[i * n + j] += p;
+                mag[i * n + j] += p.abs();
+            }
+        }
+    }
+    (val, mag)
+}
+
+#[test]
+fn dispatched_table_is_an_available_backend() {
+    let k = kernels();
+    assert!(
+        backends().iter().any(|b| std::ptr::eq(*b, k)),
+        "dispatched table {:?} not in the available set",
+        k.name
+    );
+    assert_eq!(backend_name(), k.name);
+}
+
+#[test]
+fn prop_vector_primitives_match_f64_reference() {
+    check(
+        101,
+        200,
+        |rng| {
+            let n = rng.below(70);
+            let a: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            (a, b)
+        },
+        |(a64, b64)| {
+            let n = a64.len().min(b64.len());
+            let a = to_f32(&a64[..n]);
+            let b = to_f32(&b64[..n]);
+            let (mut dref, mut dmag, mut sref, mut smag) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+            for (&x, &y) in a.iter().zip(&b) {
+                let p = f64::from(x) * f64::from(y);
+                dref += p;
+                dmag += p.abs();
+                let d = f64::from(x) - f64::from(y);
+                sref += d * d;
+                smag += d * d;
+            }
+            let alpha = 0.77f32;
+            for bk in backends() {
+                let d = f64::from((bk.dot)(&a, &b));
+                if (d - dref).abs() > 1e-5 * (dmag + 1.0) {
+                    return Err(format!("{}: dot {d} want {dref} (n={n})", bk.name));
+                }
+                let s = f64::from((bk.sq_dist)(&a, &b));
+                if (s - sref).abs() > 1e-5 * (smag + 1.0) {
+                    return Err(format!("{}: sq_dist {s} want {sref} (n={n})", bk.name));
+                }
+                // axpy per element: FMA vs mul+add differ by one rounding.
+                let mut y = b.clone();
+                (bk.axpy)(alpha, &a, &mut y);
+                for i in 0..n {
+                    let want = f64::from(alpha) * f64::from(a[i]) + f64::from(b[i]);
+                    let tol = 1e-6 * (want.abs() + f64::from(b[i]).abs() + 1.0);
+                    if (f64::from(y[i]) - want).abs() > tol {
+                        return Err(format!("{}: axpy[{i}] {} want {want}", bk.name, y[i]));
+                    }
+                }
+                // add_assign is the same per-element op on every backend.
+                let mut ys = b.clone();
+                (scalar().add_assign)(&a, &mut ys);
+                let mut yv = b.clone();
+                (bk.add_assign)(&a, &mut yv);
+                if ys.iter().zip(&yv).any(|(p, q)| ulps(*p, *q) != 0) {
+                    return Err(format!("{}: add_assign not bit-identical to scalar", bk.name));
+                }
+                // Alignment bit-identity: same data one float off the base.
+                let mut abuf = vec![0.5f32; n + 1];
+                abuf[1..].copy_from_slice(&a);
+                let mut bbuf = vec![0.5f32; n + 1];
+                bbuf[1..].copy_from_slice(&b);
+                if (bk.dot)(&a, &b).to_bits() != (bk.dot)(&abuf[1..], &bbuf[1..]).to_bits() {
+                    return Err(format!("{}: dot depends on alignment", bk.name));
+                }
+                if (bk.sq_dist)(&a, &b).to_bits()
+                    != (bk.sq_dist)(&abuf[1..], &bbuf[1..]).to_bits()
+                {
+                    return Err(format!("{}: sq_dist depends on alignment", bk.name));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_nn_matches_reference_and_is_layout_invariant() {
+    check(
+        102,
+        60,
+        |rng| (rng.below(15), rng.below(40), rng.below(40)),
+        |&(m, kd, n)| {
+            let mut rng = Rng::new((m * 1_000_003 + kd * 1009 + n) as u64);
+            let a = Mat::randn(m, kd, &mut rng);
+            let b = Mat::randn(kd, n, &mut rng);
+            let (val, mag) = ref_nn(&a, &b);
+            for bk in backends() {
+                let mut out = Mat::zeros(m, n);
+                (bk.gemm_nn)(a.view(), b.view(), out.view_mut());
+                for i in 0..m {
+                    for j in 0..n {
+                        let got = f64::from(out.get(i, j));
+                        let (want, tol) = (val[i * n + j], 1e-5 * (mag[i * n + j] + 1.0));
+                        if (got - want).abs() > tol {
+                            return Err(format!(
+                                "{}: nn[{i}][{j}] {got} want {want} (m={m} k={kd} n={n})",
+                                bk.name
+                            ));
+                        }
+                    }
+                }
+                // Strided + unaligned inputs and output: bit-identical, and
+                // nothing outside the output view is touched.
+                let abuf = strided_copy(&a);
+                let bbuf = strided_copy(&b);
+                let ostride = n + 3;
+                let mut obuf = vec![0.25f32; 1 + m * ostride];
+                (bk.gemm_nn)(
+                    MatView::strided(&abuf[1..], m, kd, kd + 3),
+                    MatView::strided(&bbuf[1..], kd, n, n + 3),
+                    MatViewMut::strided(&mut obuf[1..], m, n, ostride),
+                );
+                for (idx, &v) in obuf.iter().enumerate() {
+                    let (r, c) = if idx == 0 {
+                        (m, n) // sentinel: the offset float is padding
+                    } else {
+                        ((idx - 1) / ostride, (idx - 1) % ostride)
+                    };
+                    if r < m && c < n {
+                        if ulps(v, out.get(r, c)) != 0 {
+                            return Err(format!("{}: nn strided[{r}][{c}] differs", bk.name));
+                        }
+                    } else if v.to_bits() != 0.25f32.to_bits() {
+                        return Err(format!("{}: nn wrote outside its view", bk.name));
+                    }
+                }
+                // Stripe independence: two row stripes ≡ one full call.
+                if m >= 2 {
+                    let sp = m / 2;
+                    let mut out2 = Mat::zeros(m, n);
+                    let (top, bot) = out2.view_mut().split_rows_at(sp);
+                    (bk.gemm_nn)(a.view().row_block(0, sp), b.view(), top);
+                    (bk.gemm_nn)(a.view().row_block(sp, m), b.view(), bot);
+                    if out.data.iter().zip(&out2.data).any(|(p, q)| ulps(*p, *q) != 0) {
+                        return Err(format!("{}: nn stripes not bit-identical", bk.name));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_tn_acc_matches_reference_and_stripe_offsets() {
+    check(
+        103,
+        60,
+        |rng| (rng.below(30), rng.below(12), rng.below(24)),
+        |&(kd, mt0, n)| {
+            let mt = mt0 + 1;
+            let (c0, rows) = (mt / 3, mt - mt / 3);
+            let mut rng = Rng::new((kd * 999_983 + mt * 131 + n) as u64);
+            let a = Mat::randn(kd, mt, &mut rng);
+            let b = Mat::randn(kd, n, &mut rng);
+            let init = Mat::randn(rows, n, &mut rng);
+            for bk in backends() {
+                let mut out = init.clone();
+                (bk.gemm_tn_acc)(a.view(), b.view(), c0, out.view_mut());
+                for i in 0..rows {
+                    for j in 0..n {
+                        let mut want = f64::from(init.get(i, j));
+                        let mut mag = want.abs();
+                        for k in 0..kd {
+                            let p = f64::from(a.get(k, c0 + i)) * f64::from(b.get(k, j));
+                            want += p;
+                            mag += p.abs();
+                        }
+                        let got = f64::from(out.get(i, j));
+                        if (got - want).abs() > 1e-5 * (mag + 1.0) {
+                            return Err(format!(
+                                "{}: tn[{i}][{j}] {got} want {want} (k={kd} mt={mt} n={n} c0={c0})",
+                                bk.name
+                            ));
+                        }
+                    }
+                }
+                // Stripe-offset independence: full AᵀB ≡ two stripes at
+                // different c0 into split output views, bit for bit.
+                let full_init = Mat::randn(mt, n, &mut rng.fork(7));
+                let mut full = full_init.clone();
+                (bk.gemm_tn_acc)(a.view(), b.view(), 0, full.view_mut());
+                let mut split = full_init.clone();
+                let sp = mt / 2;
+                if sp > 0 {
+                    let (top, bot) = split.view_mut().split_rows_at(sp);
+                    (bk.gemm_tn_acc)(a.view(), b.view(), 0, top);
+                    (bk.gemm_tn_acc)(a.view(), b.view(), sp, bot);
+                    if full.data.iter().zip(&split.data).any(|(p, q)| ulps(*p, *q) != 0) {
+                        return Err(format!("{}: tn stripes not bit-identical", bk.name));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_nt_elements_are_exactly_dot() {
+    check(
+        104,
+        60,
+        |rng| (rng.below(10), rng.below(70), rng.below(12)),
+        |&(m, kd, nj)| {
+            let mut rng = Rng::new((m * 7919 + kd * 104_729 + nj) as u64);
+            let a = Mat::randn(m, kd, &mut rng);
+            let b = Mat::randn(nj, kd, &mut rng);
+            for bk in backends() {
+                let mut out = Mat::zeros(m, nj);
+                (bk.gemm_nt)(a.view(), b.view(), out.view_mut());
+                for i in 0..m {
+                    for j in 0..nj {
+                        // The fused-decode invariant: batched element ≡ the
+                        // single-vector dot chain, bit for bit.
+                        let want = (bk.dot)(a.row(i), b.row(j));
+                        if ulps(out.get(i, j), want) != 0 {
+                            return Err(format!(
+                                "{}: nt[{i}][{j}] {} != dot {want} (m={m} k={kd} nj={nj})",
+                                bk.name,
+                                out.get(i, j)
+                            ));
+                        }
+                    }
+                }
+                // Strided + unaligned layouts change nothing.
+                let abuf = strided_copy(&a);
+                let bbuf = strided_copy(&b);
+                let ostride = nj + 3;
+                let mut obuf = vec![0.25f32; 1 + m * ostride];
+                (bk.gemm_nt)(
+                    MatView::strided(&abuf[1..], m, kd, kd + 3),
+                    MatView::strided(&bbuf[1..], nj, kd, kd + 3),
+                    MatViewMut::strided(&mut obuf[1..], m, nj, ostride),
+                );
+                for i in 0..m {
+                    for j in 0..nj {
+                        if ulps(obuf[1 + i * ostride + j], out.get(i, j)) != 0 {
+                            return Err(format!("{}: nt strided[{i}][{j}] differs", bk.name));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_row_ops_match_scalar() {
+    check(
+        105,
+        150,
+        |rng| (0..rng.below(60)).map(|_| rng.normal()).collect::<Vec<f64>>(),
+        |xs| {
+            let x = to_f32(xs);
+            let sc = scalar();
+            for bk in backends() {
+                // exp(a·x + b)·scale: poly-vs-libm exp plus one FMA rounding
+                // on the argument; absolute slack covers denormal underflow.
+                for &(a, b, s) in &[(1.0f32, 0.0f32, 1.0f32), (0.7, -1.3, 0.5), (-1.1, 0.4, 2.0)]
+                {
+                    let mut v = x.clone();
+                    (bk.exp_affine_scale)(&mut v, a, b, s);
+                    let mut w = x.clone();
+                    (sc.exp_affine_scale)(&mut w, a, b, s);
+                    for (i, (&p, &q)) in v.iter().zip(&w).enumerate() {
+                        if (f64::from(p) - f64::from(q)).abs()
+                            > 3e-5 * f64::from(q).abs() + 1.5e-38
+                        {
+                            return Err(format!("{}: exp_affine[{i}] {p} vs {q}", bk.name));
+                        }
+                    }
+                }
+                // relu and square are the same ops per element → bit-exact.
+                for &s in &[1.0f32, 0.35] {
+                    let mut v = x.clone();
+                    (bk.relu_scale)(&mut v, s);
+                    let mut w = x.clone();
+                    (sc.relu_scale)(&mut w, s);
+                    if v.iter().zip(&w).any(|(p, q)| ulps(*p, *q) != 0) {
+                        return Err(format!("{}: relu_scale not bit-identical", bk.name));
+                    }
+                    let mut v = x.clone();
+                    (bk.square_scale)(&mut v, s);
+                    let mut w = x.clone();
+                    (sc.square_scale)(&mut w, s);
+                    if v.iter().zip(&w).any(|(p, q)| ulps(*p, *q) != 0) {
+                        return Err(format!("{}: square_scale not bit-identical", bk.name));
+                    }
+                }
+                // elu+1: positive branch is exact; negative branch is exp.
+                let mut v = vec![0.0f32; x.len()];
+                (bk.elu_plus_one)(&x, &mut v);
+                let mut w = vec![0.0f32; x.len()];
+                (sc.elu_plus_one)(&x, &mut w);
+                for (i, (&p, &q)) in v.iter().zip(&w).enumerate() {
+                    let ok = if x[i] > 0.0 {
+                        ulps(p, q) == 0
+                    } else {
+                        (f64::from(p) - f64::from(q)).abs() <= 1e-5 * f64::from(q).abs() + 1.5e-38
+                    };
+                    if !ok {
+                        return Err(format!("{}: elu_plus_one[{i}] {p} vs {q}", bk.name));
+                    }
+                }
+                // softmax: outputs live in [0,1]; exp + summation-order
+                // differences bound the absolute gap.
+                let mut v = x.clone();
+                (bk.softmax_row)(&mut v);
+                let mut w = x.clone();
+                (sc.softmax_row)(&mut w);
+                for (i, (&p, &q)) in v.iter().zip(&w).enumerate() {
+                    if (p - q).abs() > 5e-5 {
+                        return Err(format!("{}: softmax[{i}] {p} vs {q}", bk.name));
+                    }
+                }
+                if !x.is_empty() {
+                    let total: f32 = v.iter().sum();
+                    if (total - 1.0).abs() > 1e-4 {
+                        return Err(format!("{}: softmax sums to {total}", bk.name));
+                    }
+                }
+                // normalize_row_sum on nonnegative rows (its hot-path shape:
+                // kernel scores are ≥ 0, so each output is in [0, 1]).
+                let xa: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+                let mut v = xa.clone();
+                (bk.normalize_row_sum)(&mut v, 1e-3);
+                let mut w = xa;
+                (sc.normalize_row_sum)(&mut w, 1e-3);
+                for (i, (&p, &q)) in v.iter().zip(&w).enumerate() {
+                    if (p - q).abs() > 5e-5 {
+                        return Err(format!("{}: normalize[{i}] {p} vs {q}", bk.name));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simd_exp_lanes_match_exp_ps_bitwise() {
+    // The vector exp in each SIMD backend must mirror `expf::exp_ps`
+    // operation for operation. Routing `exp_affine_scale(x, 1, 0, 1)`
+    // through the table evaluates the vector lanes on the first ⌊n/8⌋·8
+    // (resp. /4) elements and the scalar mirror on the tail — identical
+    // bits everywhere proves lanes ≡ mirror. Scalar backend is exempt by
+    // design (it keeps libm exp).
+    let mut xs: Vec<f32> = Vec::new();
+    let mut t = -100.0f32;
+    while t <= 95.0 {
+        xs.push(t);
+        t += 0.173;
+    }
+    xs.extend([
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        f32::NAN,
+        f32::INFINITY,
+        f32::NEG_INFINITY,
+        1e-45,
+        -1e-45,
+        expf::EXP_LO,
+        expf::EXP_HI,
+        88.7,
+        -88.7,
+    ]);
+    for bk in backends() {
+        if bk.name == "scalar" {
+            continue;
+        }
+        let mut v = xs.clone();
+        (bk.exp_affine_scale)(&mut v, 1.0, 0.0, 1.0);
+        for (i, (&x, &y)) in xs.iter().zip(&v).enumerate() {
+            let want = expf::exp_ps(x);
+            assert_eq!(
+                ulps(y, want),
+                0,
+                "{}: lane {i} exp({x}) = {y:?} but exp_ps gives {want:?}",
+                bk.name
+            );
+        }
+    }
+}
+
+#[test]
+fn special_values_agree_across_backends() {
+    let big = 1e30f32;
+    let tiny = 1e-42f32; // denormal
+    let a = vec![big, -big, tiny, -tiny, 0.0, 1.0, -1.0, 3.0e38, tiny, big, -0.5, 2.0];
+    let b = vec![-big, big, tiny, tiny, 1.0, 0.0, -1.0, 3.0e38, big, tiny, 0.5, -2.0];
+    let sc = scalar();
+    for bk in backends() {
+        // Same-magnitude products overflow/underflow identically in every
+        // chain ordering: all backends must classify alike.
+        let d = (bk.dot)(&a, &a);
+        assert!(d.is_infinite() && d > 0.0, "{}: dot(big) = {d}", bk.name);
+        assert_eq!((bk.dot)(&[tiny; 16], &[tiny; 16]), 0.0, "{}", bk.name);
+        let s = (bk.sq_dist)(&a, &b);
+        assert!(s.is_infinite(), "{}: sq_dist = {s}", bk.name);
+        // NaN/±inf/denormal element-wise semantics match the scalar rules.
+        let spec = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, -0.0, tiny, -tiny];
+        let mut v = spec.clone();
+        (bk.relu_scale)(&mut v, 1.0);
+        let mut w = spec.clone();
+        (sc.relu_scale)(&mut w, 1.0);
+        for (i, (&p, &q)) in v.iter().zip(&w).enumerate() {
+            assert_eq!(ulps(p, q), 0, "{}: relu special[{i}] {p:?} vs {q:?}", bk.name);
+        }
+        let mut v = vec![0.0f32; spec.len()];
+        (bk.elu_plus_one)(&spec, &mut v);
+        assert!(v[0].is_nan(), "{}: elu(NaN) = {}", bk.name, v[0]);
+        assert_eq!(v[1], f32::INFINITY, "{}", bk.name);
+        assert_eq!(v[2], 0.0, "{}: elu(-inf)+1 should be exp(-inf) = 0", bk.name);
+        // exp of a denormal is exactly 1 on every backend.
+        let mut v = vec![tiny, -tiny];
+        (bk.exp_affine_scale)(&mut v, 1.0, 0.0, 1.0);
+        assert_eq!(v, vec![1.0, 1.0], "{}", bk.name);
+    }
+}
